@@ -1,0 +1,108 @@
+"""AOT pipeline: lower every L2 graph x row-bucket to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``: jax>=0.5
+emits protos with 64-bit instruction ids that the Rust side's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, under ``--out-dir`` (default ``artifacts/``):
+
+  <graph>_r<rows>.hlo.txt     one HLO module per (graph, row bucket)
+  manifest.json               machine-readable index consumed by the Rust
+                              runtime: graph names, buckets, arg shapes,
+                              dtypes, constants (M, K, HALO_PAD)
+
+Python runs ONCE at build time (``make artifacts``); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.spmv_ell import K
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_entry(s: jax.ShapeDtypeStruct) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def build(out_dir: str, buckets: list[int], dtype_name: str,
+          quiet: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "dtype": dtype_name,
+        "m": model.M,
+        "k": K,
+        "halo_pad": model.HALO_PAD,
+        "row_buckets": buckets,
+        "graphs": {},
+    }
+    dt = jnp.dtype(dtype_name)
+    for name, (fn, argspec) in model.GRAPHS.items():
+        entries = {}
+        for rows in buckets:
+            lowered = model.lower_graph(name, rows, dtype_name)
+            text = to_hlo_text(lowered)
+            fname = f"{name}_r{rows}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            entries[str(rows)] = {
+                "file": fname,
+                "args": [_shape_entry(s) for s in argspec(rows, dt)],
+                "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+                "bytes": len(text),
+            }
+            if not quiet:
+                print(f"  {fname}: {len(text)} chars", file=sys.stderr)
+        manifest["graphs"][name] = entries
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # Flat TSV twin for the (dependency-free) Rust loader.
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write(f"dtype\t{dtype_name}\n")
+        f.write(f"m\t{model.M}\n")
+        f.write(f"k\t{K}\n")
+        f.write(f"halo_pad\t{model.HALO_PAD}\n")
+        f.write("buckets\t" + " ".join(str(b) for b in buckets) + "\n")
+        for name, entries in manifest["graphs"].items():
+            for rows_s, e in entries.items():
+                f.write(f"graph\t{name}\t{rows_s}\t{e['file']}\n")
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--buckets", type=int, nargs="*", default=model.ROW_BUCKETS)
+    p.add_argument("--dtype", default="float64")
+    p.add_argument("--quiet", action="store_true")
+    args = p.parse_args()
+    manifest = build(args.out_dir, args.buckets, args.dtype, args.quiet)
+    n = sum(len(v) for v in manifest["graphs"].values())
+    print(f"wrote {n} HLO modules + manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""L1 Pallas kernels for the FT-GMRES hot path (build-time only).
+
+Import the submodules (``spmv_ell``, ``fused``, ``ref``) directly; the package
+namespace deliberately does not re-export functions, to avoid shadowing the
+``spmv_ell`` module with the ``spmv_ell`` function.
+"""
+
+from compile.kernels import fused, ref, spmv_ell  # noqa: F401
+from compile.kernels.spmv_ell import K  # noqa: F401
+
+__all__ = ["K", "fused", "ref", "spmv_ell"]

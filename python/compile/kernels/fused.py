@@ -1,0 +1,125 @@
+"""L1 Pallas kernels: fused Arnoldi vector operations.
+
+GMRES spends its non-SpMV time in BLAS-1/BLAS-2 style operations over the
+Krylov basis ``V`` (stored row-major as ``(M, R)``: M basis vectors of R local
+rows).  Distributed dot products split into a *local partial* (these kernels)
+followed by an allreduce performed by the Rust coordinator, then a local
+update.  Three kernels:
+
+* ``dot_partials``  -- h_part[i] = mask[i] * <V[i, :], w>        (CGS step 1)
+* ``update_w``      -- w' = w - V^T h ; nsq_part = <w', w'>      (CGS step 2,
+  fused with the norm partial so the hot path is one kernel launch)
+* ``update_x``      -- x' = x + V^T y                            (solution
+  update at the end of a restart cycle)
+
+All are tiled over the row dimension R; reduction outputs are accumulated
+across grid steps by revisiting the output block (``index_map -> 0``).
+``interpret=True`` everywhere -- see spmv_ell.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 2048
+
+
+def _dot_partials_kernel(v_ref, w_ref, mask_ref, h_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    # (M, TILE) @ (TILE,) -> (M,), masked so untouched basis slots stay zero.
+    h_ref[...] += (v_ref[...] @ w_ref[...]) * mask_ref[...]
+
+
+def dot_partials(v: jax.Array, w: jax.Array, mask: jax.Array, *,
+                 tile: int = DEFAULT_TILE) -> jax.Array:
+    """Local partials of the masked dots ``h[i] = mask[i] * <V[i], w>``."""
+    m, r = v.shape
+    assert w.shape == (r,) and mask.shape == (m,)
+    t = min(tile, r)
+    assert r % t == 0
+    return pl.pallas_call(
+        _dot_partials_kernel,
+        grid=(r // t,),
+        in_specs=[
+            pl.BlockSpec((m, t), lambda i: (0, i)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((m,), v.dtype),
+        interpret=True,
+    )(v, w, mask)
+
+
+def _update_w_kernel(v_ref, w_ref, h_ref, out_ref, nsq_ref):
+    i = pl.program_id(0)
+    wn = w_ref[...] - v_ref[...].T @ h_ref[...]
+    out_ref[...] = wn
+
+    @pl.when(i == 0)
+    def _init():
+        nsq_ref[...] = jnp.zeros_like(nsq_ref)
+
+    nsq_ref[0] += jnp.sum(wn * wn)
+
+
+def update_w(v: jax.Array, w: jax.Array, h: jax.Array, *,
+             tile: int = DEFAULT_TILE):
+    """Fused orthogonalization update: ``w' = w - V^T h`` plus local ``<w',w'>``.
+
+    Returns ``(w_new, nsq_partial)`` with ``nsq_partial`` shaped ``(1,)``.
+    """
+    m, r = v.shape
+    assert w.shape == (r,) and h.shape == (m,)
+    t = min(tile, r)
+    assert r % t == 0
+    return pl.pallas_call(
+        _update_w_kernel,
+        grid=(r // t,),
+        in_specs=[
+            pl.BlockSpec((m, t), lambda i: (0, i)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r,), v.dtype),
+            jax.ShapeDtypeStruct((1,), v.dtype),
+        ],
+        interpret=True,
+    )(v, w, h)
+
+
+def _update_x_kernel(v_ref, y_ref, x_ref, out_ref):
+    out_ref[...] = x_ref[...] + v_ref[...].T @ y_ref[...]
+
+
+def update_x(v: jax.Array, y: jax.Array, x: jax.Array, *,
+             tile: int = DEFAULT_TILE) -> jax.Array:
+    """Solution update ``x' = x + V^T y`` at the end of a restart cycle."""
+    m, r = v.shape
+    assert y.shape == (m,) and x.shape == (r,)
+    t = min(tile, r)
+    assert r % t == 0
+    return pl.pallas_call(
+        _update_x_kernel,
+        grid=(r // t,),
+        in_specs=[
+            pl.BlockSpec((m, t), lambda i: (0, i)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((t,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r,), v.dtype),
+        interpret=True,
+    )(v, y, x)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for every L1 Pallas kernel.
+
+These are the correctness ground truth: pytest (and the hypothesis sweeps in
+python/tests/) assert ``assert_allclose(kernel(...), ref(...))`` across shapes
+and dtypes.  Keep these dead simple -- no tiling, no pallas, no cleverness.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spmv_ell(vals, cols, x):
+    """y[r] = sum_k vals[r, k] * x[cols[r, k]]."""
+    return jnp.sum(vals * x[cols], axis=1)
+
+
+def dot_partials(v, w, mask):
+    """h[i] = mask[i] * <V[i, :], w>."""
+    return (v @ w) * mask
+
+
+def update_w(v, w, h):
+    """w' = w - V^T h ; nsq = <w', w'> (shape (1,))."""
+    wn = w - v.T @ h
+    return wn, jnp.sum(wn * wn)[None]
+
+
+def update_x(v, y, x):
+    """x' = x + V^T y."""
+    return x + v.T @ y
+
+
+def arnoldi_cgs_step(vals, cols, v, j, x_halo):
+    """Reference composition of one classical-Gram-Schmidt Arnoldi step on a
+    single process (no distribution): used to validate model.py wiring.
+
+    Returns (h, beta, v_next) where h are the projection coefficients, beta
+    the norm of the orthogonalized vector.
+    """
+    m, r = v.shape
+    w = spmv_ell(vals, cols, x_halo)
+    mask = (jnp.arange(m) <= j).astype(v.dtype)
+    h = dot_partials(v, w, mask)
+    wn, nsq = update_w(v, w, h)
+    beta = jnp.sqrt(nsq[0])
+    return h, beta, wn / beta

@@ -1,0 +1,129 @@
+"""L2: JAX graphs for the *local* (per-rank) FT-GMRES solver steps.
+
+The distributed FT-GMRES solver lives in the Rust coordinator (L3); global
+reductions (dot products, norms) are allreduces performed there.  What gets
+AOT-lowered here are the five fixed-shape local step graphs each rank executes
+between communications, all calling the L1 Pallas kernels:
+
+  spmv          (vals[R,K], cols[R,K], x_halo[RH])       -> y[R]
+  dot_partials  (V[M,R],   w[R],      mask[M])           -> h_part[M]
+  update_w      (V[M,R],   w[R],      h[M])              -> (w'[R], nsq[1])
+  update_x      (V[M,R],   y[M],      x[R])              -> x'[R]
+  scale         (w[R],     alpha[1])                     -> w*alpha[R]
+
+Shapes are bucketed: HLO is fixed-shape but local row counts vary with the
+process count P and with shrink-recovery redistribution, so ``aot.py`` lowers
+every graph once per row bucket (powers of two) and the Rust runtime pads the
+local block up to the next bucket.  Padding rows carry zero matrix values and
+zero vector entries, so every graph is padding-invariant (verified in
+python/tests/test_model.py::test_padding_invariance).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import fused, spmv_ell
+from compile.kernels.spmv_ell import K
+
+# Krylov basis slots: inner restart length m=25 (the paper checkpoints after
+# each inner solve of 25 iterations) plus one for the new direction.
+M = 26
+
+# Row buckets the runtime may request.  48^3 at P=512 gives 216 rows/rank
+# (bucket 256); a 4-rank quickstart of 48^3 gives 27648 (bucket 32768).
+ROW_BUCKETS = [256, 512, 1024, 2048, 4096, 8192, 16384, 32768]
+
+# Halo padding: a block-row of a 7-point stencil needs at most two planes of
+# nx*ny ghost rows; 8192 covers grids up to 64x64 planes (nx*ny <= 4096).
+HALO_PAD = 8192
+
+DEFAULT_DTYPE = jnp.float64
+
+
+def halo_rows(r: int) -> int:
+    """Halo-extended length of the SpMV source vector for row bucket ``r``."""
+    return r + HALO_PAD
+
+
+def spmv(vals, cols, x_halo):
+    """Local block SpMV (L1 Pallas kernel)."""
+    return (spmv_ell.spmv_ell(vals, cols, x_halo),)
+
+
+def dot_partials(v, w, mask):
+    """Local partials of masked basis dots; allreduced by L3."""
+    return (fused.dot_partials(v, w, mask),)
+
+
+def update_w(v, w, h):
+    """Fused CGS update + local norm partial; ``h`` is the allreduced dots."""
+    wn, nsq = fused.update_w(v, w, h)
+    return (wn, nsq)
+
+
+def update_x(v, y, x):
+    """Solution update at the end of a restart cycle."""
+    return (fused.update_x(v, y, x),)
+
+
+def scale(w, alpha):
+    """w * alpha (alpha shaped (1,)): basis normalization after allreduce."""
+    return (w * alpha[0],)
+
+
+# graph name -> (fn, example-arg builder given (rows, dtype))
+GRAPHS: dict[str, tuple[Callable, Callable]] = {
+    "spmv": (
+        spmv,
+        lambda r, dt: (
+            jax.ShapeDtypeStruct((r, K), dt),
+            jax.ShapeDtypeStruct((r, K), jnp.int32),
+            jax.ShapeDtypeStruct((halo_rows(r),), dt),
+        ),
+    ),
+    "dot_partials": (
+        dot_partials,
+        lambda r, dt: (
+            jax.ShapeDtypeStruct((M, r), dt),
+            jax.ShapeDtypeStruct((r,), dt),
+            jax.ShapeDtypeStruct((M,), dt),
+        ),
+    ),
+    "update_w": (
+        update_w,
+        lambda r, dt: (
+            jax.ShapeDtypeStruct((M, r), dt),
+            jax.ShapeDtypeStruct((r,), dt),
+            jax.ShapeDtypeStruct((M,), dt),
+        ),
+    ),
+    "update_x": (
+        update_x,
+        lambda r, dt: (
+            jax.ShapeDtypeStruct((M, r), dt),
+            jax.ShapeDtypeStruct((M,), dt),
+            jax.ShapeDtypeStruct((r,), dt),
+        ),
+    ),
+    "scale": (
+        scale,
+        lambda r, dt: (
+            jax.ShapeDtypeStruct((r,), dt),
+            jax.ShapeDtypeStruct((1,), dt),
+        ),
+    ),
+}
+
+
+@functools.cache
+def lower_graph(name: str, rows: int, dtype_name: str = "float64"):
+    """Lower one graph at one row bucket; returns the jax Lowered object."""
+    fn, argspec = GRAPHS[name]
+    dt = jnp.dtype(dtype_name)
+    args = argspec(rows, dt)
+    return jax.jit(fn).lower(*args)

@@ -1,0 +1,5 @@
+import jax
+
+# The solver runs in f64 (GMRES orthogonalization is sensitive); enable x64
+# before any kernel module traces anything.
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,137 @@
+"""Kernel-vs-ref allclose: the CORE correctness signal for L1.
+
+Every Pallas kernel is checked against the pure-jnp oracle in
+``compile.kernels.ref`` on fixed cases here, and across a hypothesis sweep of
+shapes/dtypes in ``test_kernel_property.py``.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile.kernels import fused, ref
+from compile.kernels.spmv_ell import K, spmv_ell
+from compile.model import M
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def make_ell(r, rh, dtype, seed=0, pad_rows=0):
+    """Random ELL block; the last ``pad_rows`` rows are zero padding that
+    must not contribute to the product."""
+    g = rng(seed)
+    vals = g.standard_normal((r, K)).astype(dtype)
+    cols = g.integers(0, rh, (r, K)).astype(np.int32)
+    if pad_rows:
+        vals[r - pad_rows:] = 0.0
+        cols[r - pad_rows:] = 0
+    x = g.standard_normal(rh).astype(dtype)
+    return jnp.array(vals), jnp.array(cols), jnp.array(x)
+
+
+TOL = {np.float32: dict(rtol=1e-5, atol=1e-5),
+       np.float64: dict(rtol=1e-12, atol=1e-12)}
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+@pytest.mark.parametrize("r,tile", [(256, 256), (512, 128), (2048, 1024)])
+class TestSpmv:
+    def test_matches_ref(self, dtype, r, tile):
+        vals, cols, x = make_ell(r, r + 64, dtype)
+        got = spmv_ell(vals, cols, x, tile=tile)
+        np.testing.assert_allclose(got, ref.spmv_ell(vals, cols, x),
+                                   **TOL[dtype])
+
+    def test_padding_rows_are_zero(self, dtype, r, tile):
+        vals, cols, x = make_ell(r, r + 64, dtype, pad_rows=r // 4)
+        got = np.asarray(spmv_ell(vals, cols, x, tile=tile))
+        assert np.all(got[r - r // 4:] == 0.0)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+@pytest.mark.parametrize("r,tile", [(256, 256), (512, 128), (4096, 2048)])
+class TestFused:
+    def _vw(self, dtype, r, seed=1):
+        g = rng(seed)
+        v = jnp.array(g.standard_normal((M, r)).astype(dtype))
+        w = jnp.array(g.standard_normal(r).astype(dtype))
+        return v, w
+
+    def test_dot_partials(self, dtype, r, tile):
+        v, w = self._vw(dtype, r)
+        mask = (jnp.arange(M) <= 7).astype(v.dtype)
+        got = fused.dot_partials(v, w, mask, tile=tile)
+        np.testing.assert_allclose(got, ref.dot_partials(v, w, mask),
+                                   **TOL[dtype])
+
+    def test_dot_partials_mask_zeroes_unused(self, dtype, r, tile):
+        v, w = self._vw(dtype, r)
+        mask = (jnp.arange(M) <= 3).astype(v.dtype)
+        got = np.asarray(fused.dot_partials(v, w, mask, tile=tile))
+        assert np.all(got[4:] == 0.0)
+
+    def test_update_w(self, dtype, r, tile):
+        v, w = self._vw(dtype, r)
+        h = jnp.array(rng(2).standard_normal(M).astype(dtype))
+        wn, nsq = fused.update_w(v, w, h, tile=tile)
+        wn_r, nsq_r = ref.update_w(v, w, h)
+        np.testing.assert_allclose(wn, wn_r, **TOL[dtype])
+        np.testing.assert_allclose(nsq, nsq_r, **TOL[dtype])
+
+    def test_update_w_norm_consistent(self, dtype, r, tile):
+        """The fused norm partial must equal the norm of the fused output."""
+        v, w = self._vw(dtype, r)
+        h = jnp.array(rng(3).standard_normal(M).astype(dtype))
+        wn, nsq = fused.update_w(v, w, h, tile=tile)
+        np.testing.assert_allclose(float(nsq[0]),
+                                   float(jnp.sum(wn * wn)), **TOL[dtype])
+
+    def test_update_x(self, dtype, r, tile):
+        v, x = self._vw(dtype, r)
+        y = jnp.array(rng(4).standard_normal(M).astype(dtype))
+        got = fused.update_x(v, y, x, tile=tile)
+        np.testing.assert_allclose(got, ref.update_x(v, y, x), **TOL[dtype])
+
+
+def test_spmv_identity_matrix():
+    """ELL encoding of I must reproduce x exactly."""
+    r = 256
+    vals = np.zeros((r, K)); vals[:, 0] = 1.0
+    cols = np.zeros((r, K), dtype=np.int32)
+    cols[:, 0] = np.arange(r)
+    x = rng(5).standard_normal(r + 16)
+    got = spmv_ell(jnp.array(vals), jnp.array(cols), jnp.array(x))
+    np.testing.assert_array_equal(np.asarray(got), x[:r])
+
+
+def test_spmv_laplacian_row_sums():
+    """1D Laplacian (2 on diag, -1 off) times ones: interior rows -> 0."""
+    r = 512
+    vals = np.zeros((r, K)); cols = np.zeros((r, K), dtype=np.int32)
+    for i in range(r):
+        vals[i, 0], cols[i, 0] = 2.0, i
+        if i > 0:
+            vals[i, 1], cols[i, 1] = -1.0, i - 1
+        if i < r - 1:
+            vals[i, 2], cols[i, 2] = -1.0, i + 1
+    y = np.asarray(spmv_ell(jnp.array(vals), jnp.array(cols),
+                            jnp.array(np.ones(r))))
+    np.testing.assert_allclose(y[1:-1], 0.0, atol=1e-14)
+    np.testing.assert_allclose([y[0], y[-1]], [1.0, 1.0], atol=1e-14)
+
+
+def test_arnoldi_composition_orthogonal_step():
+    """ref.arnoldi_cgs_step produces a unit vector orthogonal to the basis."""
+    r = 256
+    g = rng(6)
+    vals, cols, x = make_ell(r, r, np.float64, seed=6)
+    v = np.zeros((M, r))
+    q0 = g.standard_normal(r); q0 /= np.linalg.norm(q0)
+    v[0] = q0
+    h, beta, vnext = ref.arnoldi_cgs_step(
+        jnp.array(vals), jnp.array(cols), jnp.array(v), 0, jnp.array(x))
+    vnext = np.asarray(vnext)
+    np.testing.assert_allclose(np.linalg.norm(vnext), 1.0, rtol=1e-12)
+    assert abs(np.dot(vnext, q0)) < 1e-10

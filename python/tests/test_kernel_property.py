@@ -1,0 +1,86 @@
+"""Hypothesis sweeps: Pallas kernels vs the jnp oracle over random
+shapes/dtypes/tiles.  These are the property-based layer of the L1 signal."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused, ref
+from compile.kernels.spmv_ell import K, spmv_ell
+from compile.model import M
+
+DTYPES = st.sampled_from([np.float32, np.float64])
+# Power-of-two row counts (the runtime only ever requests bucket shapes) and
+# tiles that divide them.
+POW2_ROWS = st.sampled_from([128, 256, 512, 1024, 2048])
+TILES = st.sampled_from([64, 128, 256, 512])
+SEEDS = st.integers(0, 2**31 - 1)
+
+
+def tol(dtype):
+    return dict(rtol=2e-4, atol=2e-4) if dtype == np.float32 \
+        else dict(rtol=1e-11, atol=1e-11)
+
+
+@settings(max_examples=25, deadline=None)
+@given(r=POW2_ROWS, tile=TILES, dtype=DTYPES, seed=SEEDS,
+       halo=st.integers(0, 300))
+def test_spmv_matches_ref(r, tile, dtype, seed, halo):
+    g = np.random.default_rng(seed)
+    rh = r + halo
+    vals = jnp.array(g.standard_normal((r, K)).astype(dtype))
+    cols = jnp.array(g.integers(0, rh, (r, K)).astype(np.int32))
+    x = jnp.array(g.standard_normal(rh).astype(dtype))
+    got = spmv_ell(vals, cols, x, tile=min(tile, r))
+    np.testing.assert_allclose(got, ref.spmv_ell(vals, cols, x), **tol(dtype))
+
+
+@settings(max_examples=25, deadline=None)
+@given(r=POW2_ROWS, tile=TILES, dtype=DTYPES, seed=SEEDS,
+       j=st.integers(0, M - 1))
+def test_dot_partials_matches_ref(r, tile, dtype, seed, j):
+    g = np.random.default_rng(seed)
+    v = jnp.array(g.standard_normal((M, r)).astype(dtype))
+    w = jnp.array(g.standard_normal(r).astype(dtype))
+    mask = (jnp.arange(M) <= j).astype(v.dtype)
+    got = fused.dot_partials(v, w, mask, tile=min(tile, r))
+    np.testing.assert_allclose(got, ref.dot_partials(v, w, mask), **tol(dtype))
+
+
+@settings(max_examples=25, deadline=None)
+@given(r=POW2_ROWS, tile=TILES, dtype=DTYPES, seed=SEEDS)
+def test_update_w_matches_ref(r, tile, dtype, seed):
+    g = np.random.default_rng(seed)
+    v = jnp.array(g.standard_normal((M, r)).astype(dtype))
+    w = jnp.array(g.standard_normal(r).astype(dtype))
+    h = jnp.array(g.standard_normal(M).astype(dtype))
+    wn, nsq = fused.update_w(v, w, h, tile=min(tile, r))
+    wn_r, nsq_r = ref.update_w(v, w, h)
+    np.testing.assert_allclose(wn, wn_r, **tol(dtype))
+    np.testing.assert_allclose(nsq, nsq_r, **tol(dtype))
+
+
+@settings(max_examples=25, deadline=None)
+@given(r=POW2_ROWS, tile=TILES, dtype=DTYPES, seed=SEEDS)
+def test_update_x_matches_ref(r, tile, dtype, seed):
+    g = np.random.default_rng(seed)
+    v = jnp.array(g.standard_normal((M, r)).astype(dtype))
+    y = jnp.array(g.standard_normal(M).astype(dtype))
+    x = jnp.array(g.standard_normal(r).astype(dtype))
+    got = fused.update_x(v, y, x, tile=min(tile, r))
+    np.testing.assert_allclose(got, ref.update_x(v, y, x), **tol(dtype))
+
+
+@settings(max_examples=15, deadline=None)
+@given(r=st.sampled_from([128, 256, 512]), seed=SEEDS)
+def test_spmv_linearity(r, seed):
+    """A(ax + by) == a*Ax + b*Ay — linearity must hold exactly in structure."""
+    g = np.random.default_rng(seed)
+    vals = jnp.array(g.standard_normal((r, K)))
+    cols = jnp.array(g.integers(0, r, (r, K)).astype(np.int32))
+    x = jnp.array(g.standard_normal(r))
+    y = jnp.array(g.standard_normal(r))
+    a, b = 2.5, -1.25
+    lhs = spmv_ell(vals, cols, a * x + b * y)
+    rhs = a * spmv_ell(vals, cols, x) + b * spmv_ell(vals, cols, y)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-10, atol=1e-10)

@@ -1,0 +1,125 @@
+//! Ablation benches for the design choices DESIGN.md §6 calls out:
+//!
+//! A1. buddy count k = 1 vs 2 (redundancy vs checkpoint cost)
+//! A2. rank-ring vs node-crossing buddy placement
+//! A3. checkpoint interval (inner-solve length) — measured waste vs the
+//!     Young-formula global-C/R baseline (paper §III)
+//! A4. worst-case vs best-case failure position for shrink (paper Fig. 3)
+//! A5. in-situ recovery vs the analytic global-restart baseline
+//!
+//! `cargo bench --bench ablations`
+
+mod bench_common;
+
+use ulfm_ftgmres::config::RunConfig;
+use ulfm_ftgmres::coordinator;
+use ulfm_ftgmres::problem::Grid3D;
+use ulfm_ftgmres::recovery::global_restart::GlobalCrModel;
+use ulfm_ftgmres::recovery::Strategy;
+
+fn base_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.grid = Grid3D { nx: 16, ny: 16, nz: 96 };
+    cfg.p = 32;
+    cfg.solver.tol = 1e-10;
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = base_cfg();
+
+    // --- A1: buddy count ---
+    println!("# A1: buddy count (k) — shrink, 2 failures");
+    println!("{:>3} {:>10} {:>12} {:>12}", "k", "tts[s]", "ckpt[s]", "recovery[s]");
+    for k in [1usize, 2] {
+        let mut c = cfg.clone();
+        c.strategy = Strategy::Shrink;
+        c.failures = 2;
+        c.solver.ckpt_buddies = k;
+        let rep = coordinator::run(&c)?;
+        assert!(rep.converged);
+        println!(
+            "{k:>3} {:>10.4} {:>12.4} {:>12.4}",
+            rep.time_to_solution, rep.max_phases.checkpoint, rep.max_phases.recovery
+        );
+    }
+
+    // --- A2: buddy placement ---
+    println!("\n# A2: buddy placement — substitute, 2 failures");
+    println!("{:<12} {:>10} {:>12}", "placement", "tts[s]", "ckpt[s]");
+    for (label, stride) in [("rank-ring", false), ("node-cross", true)] {
+        let mut c = cfg.clone();
+        c.strategy = Strategy::Substitute;
+        c.failures = 2;
+        c.net.ckpt_node_stride = stride;
+        let rep = coordinator::run(&c)?;
+        assert!(rep.converged);
+        println!(
+            "{label:<12} {:>10.4} {:>12.4}",
+            rep.time_to_solution, rep.max_phases.checkpoint
+        );
+    }
+
+    // --- A3: checkpoint interval vs Young ---
+    println!("\n# A3: checkpoint interval (inner-solve length m) — shrink, 1 failure");
+    println!("{:>3} {:>10} {:>12} {:>12}", "m", "tts[s]", "ckpt[s]", "recompute[s]");
+    for m in [10usize, 25, 50] {
+        let mut c = cfg.clone();
+        c.strategy = Strategy::Shrink;
+        c.failures = 1;
+        c.solver.m_inner = m;
+        let rep = coordinator::run(&c)?;
+        assert!(rep.converged);
+        println!(
+            "{m:>3} {:>10.4} {:>12.4} {:>12.4}",
+            rep.time_to_solution, rep.max_phases.checkpoint, rep.max_phases.recompute
+        );
+    }
+
+    // --- A4: failure position (paper Fig. 3 worst case) ---
+    println!("\n# A4: shrink failure position — recovery traffic asymmetry");
+    {
+        use ulfm_ftgmres::problem::Partition;
+        use ulfm_ftgmres::recovery::plan::transfer_segments;
+        let n = cfg.grid.n();
+        let p = 32;
+        let old = Partition::balanced(n, p);
+        let new = Partition::balanced(n, p - 1);
+        println!("{:<12} {:>16}", "failed rank", "rows moved");
+        for dead in [0usize, p / 2, p - 1] {
+            let old_members: Vec<usize> = (0..p).collect();
+            let new_members: Vec<usize> = (0..p).filter(|&r| r != dead).collect();
+            let alive = move |r: usize| r != dead;
+            let moved: usize =
+                transfer_segments(&old, &old_members, &new, &new_members, &alive, 1, 1)
+                    .iter()
+                    .filter(|s| s.server_wr != s.dest_wr)
+                    .map(|s| s.rows.len())
+                    .sum();
+            println!("{dead:<12} {moved:>16}");
+        }
+    }
+
+    // --- A5: in-situ vs global restart (analytic baseline, paper §III) ---
+    println!("\n# A5: in-situ recovery vs global C/R baseline (per failure)");
+    {
+        let mut c = cfg.clone();
+        c.strategy = Strategy::Shrink;
+        c.failures = 1;
+        let rep = coordinator::run(&c)?;
+        let insitu = rep.max_phases.recovery
+            + rep.max_phases.reconfig
+            + rep.max_phases.recompute;
+        // Global state: matrix + vectors across all ranks (scaled bytes).
+        let bytes = (cfg.grid.n() * (7 * 12 + 3 * 8)) as f64 * c.net.data_scale;
+        let gcr = GlobalCrModel::default();
+        let waste = gcr.waste_per_failure(bytes as usize);
+        println!("in-situ (recovery+reconfig+recompute): {insitu:>10.3}s");
+        println!("global C/R expected waste:             {waste:>10.3}s");
+        println!("advantage: {:.1}x", waste / insitu);
+        assert!(waste > insitu, "in-situ must beat stop-and-restart");
+    }
+
+    println!("\nablations OK");
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Shared bench harness (offline environment: no criterion; this is a
+//! deterministic-workload timer with the same role).
+//!
+//! Benches run a REDUCED paper campaign by default so `cargo bench`
+//! completes in minutes; set `BENCH_FULL=1` for the full P in {32..512}
+//! grid (the EXPERIMENTS.md numbers).
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+use ulfm_ftgmres::config::RunConfig;
+use ulfm_ftgmres::figures::{Campaign, CampaignCfg};
+
+pub fn full() -> bool {
+    std::env::var("BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// The campaign grid benches run: paper-shaped, reduced by default.
+pub fn bench_campaign() -> anyhow::Result<Campaign> {
+    let base = RunConfig::default();
+    let mut cfg = CampaignCfg::paper(base);
+    if !full() {
+        cfg.procs = vec![32, 64];
+        cfg.max_failures = 2;
+    }
+    eprintln!(
+        "campaign: procs={:?} failures<=#{} (BENCH_FULL=1 for the paper grid)",
+        cfg.procs, cfg.max_failures
+    );
+    Campaign::run(cfg, true)
+}
+
+/// Time a closure, printing a bench-style line.
+pub fn timed<T>(label: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    eprintln!("bench {label}: {:.2}s wall", t0.elapsed().as_secs_f64());
+    out
+}
+
+/// Micro-bench: run `f` repeatedly ~`target_secs`, report ns/iter.
+pub fn micro(label: &str, target_secs: f64, mut f: impl FnMut()) {
+    // Warmup.
+    for _ in 0..3 {
+        f();
+    }
+    let t0 = Instant::now();
+    let mut iters = 0u64;
+    while t0.elapsed().as_secs_f64() < target_secs {
+        f();
+        iters += 1;
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("{label:<44} {ns:>14.0} ns/iter   ({iters} iters)");
+}

@@ -1,0 +1,39 @@
+//! Bench: regenerate the paper's **Figure 4** — time-to-solution of shrink
+//! and substitute (0..4 failures) normalized to the no-protection baseline,
+//! across process counts.
+//!
+//! `cargo bench --bench fig4_slowdown` (reduced grid) or `BENCH_FULL=1
+//! cargo bench --bench fig4_slowdown` (full paper grid, ~10 min).
+
+mod bench_common;
+
+fn main() -> anyhow::Result<()> {
+    let campaign = bench_common::timed("fig4 campaign", bench_common::bench_campaign)?;
+    let table = campaign.figure4();
+    println!("{}", table.to_text());
+    table.write_csv(std::path::Path::new("../out/bench_fig4.csv"))?;
+
+    // Paper-shape assertions (soft reproduction criteria from DESIGN.md §4).
+    for &p in &campaign.cfg.procs {
+        let base = campaign
+            .get(p, ulfm_ftgmres::recovery::Strategy::NoProtection, 0)
+            .time_to_solution;
+        for s in [
+            ulfm_ftgmres::recovery::Strategy::Shrink,
+            ulfm_ftgmres::recovery::Strategy::Substitute,
+        ] {
+            let mut prev = 0.0;
+            for f in 0..=campaign.cfg.max_failures {
+                let v = campaign.get(p, s, f).time_to_solution / base;
+                assert!(v >= 0.95, "slowdown sane: p={p} {s:?} f={f}: {v}");
+                assert!(
+                    v >= prev - 0.08,
+                    "overheads roughly additive in failures: p={p} {s:?} f={f}: {v} < {prev}"
+                );
+                prev = v;
+            }
+        }
+    }
+    println!("fig4 shape checks passed");
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! Bench: regenerate the paper's **Figure 5** — checkpoint time normalized
+//! to the 0-failure case, plus checkpoint overhead as % of total time.
+//!
+//! `cargo bench --bench fig5_checkpoint` / `BENCH_FULL=1 ...`
+
+mod bench_common;
+
+use ulfm_ftgmres::recovery::Strategy;
+
+fn main() -> anyhow::Result<()> {
+    let campaign = bench_common::timed("fig5 campaign", bench_common::bench_campaign)?;
+    let table = campaign.figure5();
+    println!("{}", table.to_text());
+    table.write_csv(std::path::Path::new("../out/bench_fig5.csv"))?;
+
+    for &p in &campaign.cfg.procs {
+        // Shrink checkpoint time grows with failures (workload per survivor
+        // grows + rollback repeats checkpoints): monotone-ish.
+        let s0 = campaign.get(p, Strategy::Shrink, 0).max_phases.checkpoint;
+        let sm = campaign
+            .get(p, Strategy::Shrink, campaign.cfg.max_failures)
+            .max_phases
+            .checkpoint;
+        assert!(sm >= s0 * 0.98, "shrink ckpt non-decreasing: p={p} {sm} vs {s0}");
+        // Checkpoint stays a minority share of total (paper: 28% worst).
+        for s in [Strategy::Shrink, Strategy::Substitute] {
+            for f in 0..=campaign.cfg.max_failures {
+                let rep = campaign.get(p, s, f);
+                let pct = rep.max_phases.checkpoint / rep.time_to_solution;
+                assert!(pct < 0.35, "ckpt share sane: p={p} {s:?} f={f}: {pct}");
+            }
+        }
+    }
+    println!("fig5 shape checks passed");
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Bench: regenerate the paper's **Figure 6** — recovery and
+//! reconfiguration time normalized to the single-failure case.
+//!
+//! `cargo bench --bench fig6_recovery` / `BENCH_FULL=1 ...`
+
+mod bench_common;
+
+use ulfm_ftgmres::recovery::Strategy;
+
+fn main() -> anyhow::Result<()> {
+    let campaign = bench_common::timed("fig6 campaign", bench_common::bench_campaign)?;
+    let table = campaign.figure6();
+    println!("{}", table.to_text());
+    table.write_csv(std::path::Path::new("../out/bench_fig6.csv"))?;
+
+    for &p in &campaign.cfg.procs {
+        for s in [Strategy::Shrink, Strategy::Substitute] {
+            let r1 = campaign.get(p, s, 1).max_phases.recovery;
+            for f in 1..=campaign.cfg.max_failures {
+                let rep = campaign.get(p, s, f);
+                let norm = rep.max_phases.recovery / r1;
+                // Paper: k failures cost ~k x one failure (additive).
+                assert!(
+                    norm > 0.6 * f as f64 && norm < 2.0 * f as f64,
+                    "recovery ~additive: p={p} {s:?} f={f}: {norm}"
+                );
+                // Reconfiguration is orders below recovery and total.
+                let rcf_pct = rep.max_phases.reconfig / rep.time_to_solution;
+                assert!(rcf_pct < 0.02, "reconfig negligible: p={p} {s:?} f={f}: {rcf_pct}");
+            }
+        }
+    }
+    println!("fig6 shape checks passed");
+    Ok(())
+}

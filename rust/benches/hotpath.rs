@@ -1,0 +1,126 @@
+//! Hot-path micro-benches (the §Perf working set): native kernel ops, PJRT
+//! artifact execution, message layer, and collectives.  These are the
+//! numbers the EXPERIMENTS.md §Perf before/after table tracks.
+//!
+//! `cargo bench --bench hotpath`
+
+mod bench_common;
+
+use bench_common::micro;
+use ulfm_ftgmres::backend::native::NativeBackend;
+use ulfm_ftgmres::backend::{Backend, DenseBasis};
+use ulfm_ftgmres::netsim::ComputeModel;
+use ulfm_ftgmres::problem::{EllBlock, Grid3D, MatrixRows, Partition};
+use ulfm_ftgmres::runtime::PjrtEngine;
+
+fn block(rows_target: usize) -> EllBlock {
+    // Slab grid sized to hit roughly rows_target local rows on rank 0 of 2.
+    let nz = (2 * rows_target) / (16 * 16);
+    let g = Grid3D { nx: 16, ny: 16, nz: nz.max(2) };
+    let part = Partition::balanced(g.n(), 2);
+    let range = part.range(0);
+    let mat = MatrixRows::generate(&g, range.start, range.len());
+    EllBlock::build(&mat, &part, 0)
+}
+
+fn main() {
+    println!("# hotpath micro-benches (1 iteration of each op)");
+    let native = NativeBackend::default();
+
+    for rows in [2048usize, 16384] {
+        let blk = block(rows);
+        let r = blk.rows;
+        let xh: Vec<f64> = (0..blk.x_halo_len()).map(|i| (i as f64 * 0.1).sin()).collect();
+        let mut y = vec![0.0; r];
+        micro(&format!("native/spmv r={r}"), 0.3, || {
+            native.spmv(&blk, &xh, &mut y);
+        });
+
+        let mut v = DenseBasis::zeros(26, r);
+        for j in 0..26 {
+            for i in 0..r {
+                v.row_mut(j)[i] = ((j * r + i) as f64 * 0.01).sin();
+            }
+        }
+        let w: Vec<f64> = (0..r).map(|i| (i as f64 * 0.2).cos()).collect();
+        let mut h = vec![0.0; 26];
+        micro(&format!("native/dot_partials m=13 r={r}"), 0.3, || {
+            native.dot_partials(&v, 13, &w, &mut h);
+        });
+        let mut w2 = w.clone();
+        micro(&format!("native/update_w m=13 r={r}"), 0.3, || {
+            let _ = native.update_w(&v, 13, &mut w2, &h);
+        });
+    }
+
+    // PJRT path (requires artifacts).
+    let art = ["../artifacts", "artifacts"]
+        .iter()
+        .map(std::path::Path::new)
+        .find(|p| p.join("manifest.tsv").exists());
+    match art {
+        None => println!("pjrt: skipped (run `make artifacts`)"),
+        Some(dir) => {
+            let eng = PjrtEngine::load(dir, ComputeModel::default(), true).expect("load");
+            let blk = block(2048);
+            let r = blk.rows;
+            let xh: Vec<f64> = (0..blk.x_halo_len()).map(|i| (i as f64 * 0.1).sin()).collect();
+            let mut y = vec![0.0; r];
+            micro(&format!("pjrt/spmv r={r} (incl. transfer)"), 1.0, || {
+                eng.spmv(&blk, &xh, &mut y);
+            });
+            let mut v = DenseBasis::zeros(26, r);
+            for j in 0..26 {
+                for i in 0..r {
+                    v.row_mut(j)[i] = ((j * r + i) as f64 * 0.01).sin();
+                }
+            }
+            let w: Vec<f64> = (0..r).map(|i| (i as f64 * 0.2).cos()).collect();
+            let mut h = vec![0.0; 26];
+            micro(&format!("pjrt/dot_partials m=13 r={r}"), 1.0, || {
+                eng.dot_partials(&v, 13, &w, &mut h);
+            });
+            let mut w2 = w.clone();
+            micro(&format!("pjrt/update_w m=13 r={r}"), 1.0, || {
+                let _ = eng.update_w(&v, 13, &mut w2, &h);
+            });
+        }
+    }
+
+    // Message layer: p2p round trips and allreduce wall cost.
+    println!("\n# simmpi wall-cost micro-benches");
+    for n in [8usize, 64] {
+        let t0 = std::time::Instant::now();
+        let rounds = 2000;
+        let results = bench_rank_loop(n, rounds);
+        let per = t0.elapsed().as_nanos() as f64 / (rounds as f64);
+        println!(
+            "allreduce n={n:<3} {per:>12.0} ns/op (wall, {rounds} rounds, sum={results})"
+        );
+    }
+}
+
+fn bench_rank_loop(n: usize, rounds: usize) -> f64 {
+    use std::sync::Arc;
+    use ulfm_ftgmres::failure::{InjectionPlan, Injector};
+    use ulfm_ftgmres::netsim::NetParams;
+    use ulfm_ftgmres::simmpi::{Comm, Ctx, World};
+    let (w, rxs) = World::new(n, 0, NetParams::default(), Injector::new(InjectionPlan::none()));
+    let handles: Vec<_> = rxs
+        .into_iter()
+        .enumerate()
+        .map(|(rank, rx)| {
+            let w: Arc<World> = w.clone();
+            std::thread::spawn(move || {
+                let mut ctx = Ctx::new(w, rank, rx);
+                let mut comm = Comm::world(n, rank);
+                let mut v = [rank as f64];
+                for _ in 0..rounds {
+                    comm.allreduce_sum(&mut ctx, &mut v).unwrap();
+                }
+                v[0]
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).sum()
+}

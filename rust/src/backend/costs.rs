@@ -1,0 +1,30 @@
+//! Shared virtual-cost formulas for the five solver ops, used by the native
+//! backend and by the PJRT backend in modeled-clock mode (so both charge
+//! identical virtual time for identical work).
+
+use crate::netsim::ComputeModel;
+use crate::problem::laplacian::K;
+
+pub fn spmv(m: &ComputeModel, rows: usize, x_halo_len: usize) -> f64 {
+    let bytes = (12 * rows * K + 8 * x_halo_len + 8 * rows) as f64;
+    m.cost((2 * rows * K) as f64, bytes)
+}
+
+pub fn dot_partials(m: &ComputeModel, m_used: usize, r: usize) -> f64 {
+    let work = (m_used * r) as f64;
+    m.cost(2.0 * work, 8.0 * (work + r as f64))
+}
+
+pub fn update_w(m: &ComputeModel, m_used: usize, r: usize) -> f64 {
+    let work = (m_used * r) as f64;
+    m.cost(2.0 * work + 2.0 * r as f64, 8.0 * (work + 3.0 * r as f64))
+}
+
+pub fn update_x(m: &ComputeModel, m_used: usize, r: usize) -> f64 {
+    let work = (m_used * r) as f64;
+    m.cost(2.0 * work, 8.0 * (work + 2.0 * r as f64))
+}
+
+pub fn scale(m: &ComputeModel, r: usize) -> f64 {
+    m.cost(r as f64, 16.0 * r as f64)
+}

@@ -1,0 +1,92 @@
+//! Compute backends for the per-rank solver step graphs.
+//!
+//! Two implementations of the same five-op surface as the AOT artifacts:
+//!
+//! * [`native::NativeBackend`] — pure Rust, used by the deterministic
+//!   figure campaigns (virtual compute cost from [`ComputeModel`]);
+//! * [`crate::runtime::PjrtEngine`] — loads `artifacts/*.hlo.txt` and runs
+//!   them on the PJRT CPU client (the production path; Python is never
+//!   involved at runtime).
+//!
+//! Each op returns the *virtual seconds* to charge the calling rank's clock.
+//! tests/backend_equivalence.rs asserts both backends produce identical
+//! numerics.
+
+pub mod costs;
+pub mod native;
+
+use crate::problem::EllBlock;
+
+/// Row-major (m x r) Krylov basis storage.
+///
+/// `id`/`gen` form the device-buffer cache key used by the PJRT runtime:
+/// `id` is unique per allocation, `gen` bumps on every mutation, so the
+/// runtime can keep the (large) basis resident on the device across the
+/// several ops of one solver step that read it unchanged.
+#[derive(Debug)]
+pub struct DenseBasis {
+    pub m: usize,
+    pub r: usize,
+    pub data: Vec<f64>,
+    id: u64,
+    gen: u64,
+}
+
+fn next_basis_id() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+impl Clone for DenseBasis {
+    fn clone(&self) -> Self {
+        // A clone is a distinct mutable object: fresh cache identity.
+        DenseBasis { m: self.m, r: self.r, data: self.data.clone(), id: next_basis_id(), gen: 0 }
+    }
+}
+
+impl DenseBasis {
+    pub fn zeros(m: usize, r: usize) -> Self {
+        DenseBasis { m, r, data: vec![0.0; m * r], id: next_basis_id(), gen: 0 }
+    }
+
+    pub fn row(&self, j: usize) -> &[f64] {
+        &self.data[j * self.r..(j + 1) * self.r]
+    }
+
+    pub fn row_mut(&mut self, j: usize) -> &mut [f64] {
+        self.gen += 1;
+        &mut self.data[j * self.r..(j + 1) * self.r]
+    }
+
+    pub fn reset(&mut self) {
+        self.gen += 1;
+        self.data.fill(0.0);
+    }
+
+    /// Device-cache key (id, generation).
+    pub fn cache_key(&self) -> (u64, u64) {
+        (self.id, self.gen)
+    }
+}
+
+/// The five solver step ops (mirror of `python/compile/model.py::GRAPHS`).
+/// `m_used` is the number of live basis vectors (the mask in the HLO graphs).
+pub trait Backend: Send + Sync {
+    /// y = A_local * x_halo.  Returns virtual seconds.
+    fn spmv(&self, blk: &EllBlock, x_halo: &[f64], y: &mut [f64]) -> f64;
+
+    /// out[0..m_used] = V[0..m_used] . w (local partials); rest zeroed.
+    fn dot_partials(&self, v: &DenseBasis, m_used: usize, w: &[f64], out: &mut [f64]) -> f64;
+
+    /// w -= V[0..m_used]^T h[0..m_used]; returns (local <w,w>, seconds).
+    fn update_w(&self, v: &DenseBasis, m_used: usize, w: &mut [f64], h: &[f64]) -> (f64, f64);
+
+    /// x += V[0..m_used]^T y[0..m_used].
+    fn update_x(&self, v: &DenseBasis, m_used: usize, y: &[f64], x: &mut [f64]) -> f64;
+
+    /// w *= alpha.
+    fn scale(&self, w: &mut [f64], alpha: f64) -> f64;
+
+    fn name(&self) -> &'static str;
+}

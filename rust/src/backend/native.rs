@@ -1,0 +1,159 @@
+//! Pure-Rust backend with modeled virtual compute cost.
+//!
+//! Numerically identical to the AOT graphs (same operation order up to
+//! floating-point associativity in reductions — both reduce row-major over
+//! K then rows, so results match bit-for-bit for these sizes; verified in
+//! tests/backend_equivalence.rs).  Cost comes from the roofline
+//! [`ComputeModel`], which makes figure campaigns deterministic on any host.
+
+use crate::backend::{Backend, DenseBasis};
+use crate::netsim::ComputeModel;
+use crate::problem::laplacian::K;
+use crate::problem::EllBlock;
+
+#[derive(Debug, Clone)]
+pub struct NativeBackend {
+    pub model: ComputeModel,
+}
+
+impl NativeBackend {
+    pub fn new(model: ComputeModel) -> Self {
+        NativeBackend { model }
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        NativeBackend::new(ComputeModel::default())
+    }
+}
+
+impl Backend for NativeBackend {
+    fn spmv(&self, blk: &EllBlock, x_halo: &[f64], y: &mut [f64]) -> f64 {
+        let r = blk.rows;
+        debug_assert!(y.len() >= r && x_halo.len() >= blk.x_halo_len());
+        for i in 0..r {
+            let base = i * K;
+            let mut acc = 0.0;
+            for k in 0..K {
+                acc += blk.vals[base + k] * x_halo[blk.cols[base + k] as usize];
+            }
+            y[i] = acc;
+        }
+        crate::backend::costs::spmv(&self.model, r, blk.x_halo_len())
+    }
+
+    fn dot_partials(&self, v: &DenseBasis, m_used: usize, w: &[f64], out: &mut [f64]) -> f64 {
+        out.fill(0.0);
+        for j in 0..m_used {
+            let row = v.row(j);
+            let mut acc = 0.0;
+            for i in 0..v.r {
+                acc += row[i] * w[i];
+            }
+            out[j] = acc;
+        }
+        crate::backend::costs::dot_partials(&self.model, m_used, v.r)
+    }
+
+    fn update_w(&self, v: &DenseBasis, m_used: usize, w: &mut [f64], h: &[f64]) -> (f64, f64) {
+        for j in 0..m_used {
+            let hj = h[j];
+            if hj == 0.0 {
+                continue;
+            }
+            let row = v.row(j);
+            for i in 0..v.r {
+                w[i] -= hj * row[i];
+            }
+        }
+        let mut nsq = 0.0;
+        for &wi in w.iter().take(v.r) {
+            nsq += wi * wi;
+        }
+        (nsq, crate::backend::costs::update_w(&self.model, m_used, v.r))
+    }
+
+    fn update_x(&self, v: &DenseBasis, m_used: usize, y: &[f64], x: &mut [f64]) -> f64 {
+        for j in 0..m_used {
+            let yj = y[j];
+            if yj == 0.0 {
+                continue;
+            }
+            let row = v.row(j);
+            for i in 0..v.r {
+                x[i] += yj * row[i];
+            }
+        }
+        crate::backend::costs::update_x(&self.model, m_used, v.r)
+    }
+
+    fn scale(&self, w: &mut [f64], alpha: f64) -> f64 {
+        for wi in w.iter_mut() {
+            *wi *= alpha;
+        }
+        crate::backend::costs::scale(&self.model, w.len())
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::{Grid3D, MatrixRows, Partition};
+
+    fn blk() -> EllBlock {
+        let g = Grid3D::cube(4);
+        let part = Partition::balanced(g.n(), 1);
+        let m = MatrixRows::generate(&g, 0, g.n());
+        EllBlock::build(&m, &part, 0)
+    }
+
+    #[test]
+    fn spmv_constant_vector() {
+        let b = blk();
+        let be = NativeBackend::default();
+        let xh = vec![1.0; b.x_halo_len()];
+        let mut y = vec![0.0; b.rows];
+        let secs = be.spmv(&b, &xh, &mut y);
+        assert!(secs > 0.0);
+        // Laplacian * ones = 6 - (#neighbors); corner rows -> 3.
+        assert_eq!(y[0], 3.0);
+    }
+
+    #[test]
+    fn dots_and_update_w_consistency() {
+        let be = NativeBackend::default();
+        let r = 100;
+        let mut v = DenseBasis::zeros(4, r);
+        for j in 0..4 {
+            for i in 0..r {
+                v.row_mut(j)[i] = ((j * r + i) as f64 * 0.1).sin();
+            }
+        }
+        let w0: Vec<f64> = (0..r).map(|i| (i as f64 * 0.2).cos()).collect();
+        let mut h = vec![0.0; 5];
+        be.dot_partials(&v, 3, &w0, &mut h);
+        assert_eq!(h[3], 0.0, "masked slots stay zero");
+        let mut w = w0.clone();
+        let (nsq, _) = be.update_w(&v, 3, &mut w, &h);
+        let manual: f64 = w.iter().map(|x| x * x).sum();
+        assert!((nsq - manual).abs() < 1e-12);
+    }
+
+    #[test]
+    fn update_x_and_scale() {
+        let be = NativeBackend::default();
+        let mut v = DenseBasis::zeros(2, 4);
+        v.row_mut(0).copy_from_slice(&[1.0, 0.0, 0.0, 0.0]);
+        v.row_mut(1).copy_from_slice(&[0.0, 1.0, 0.0, 0.0]);
+        let mut x = vec![0.0; 4];
+        be.update_x(&v, 2, &[2.0, 3.0], &mut x);
+        assert_eq!(x, vec![2.0, 3.0, 0.0, 0.0]);
+        be.scale(&mut x, 0.5);
+        assert_eq!(x, vec![1.0, 1.5, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,309 @@
+//! Application-driven in-memory buddy checkpointing (paper §III-IV).
+//!
+//! Each rank keeps its checkpointed objects in local memory and ships a
+//! redundant copy to `k` buddy ranks (comm-rank successors on the ring) via
+//! point-to-point messages — the paper's "checkpoints are stored in the
+//! memory of neighboring nodes".  Static objects (matrix block, rhs) are
+//! replicated once at startup and re-established after every recovery;
+//! dynamic objects (solution vector, iteration scalars) are checkpointed at
+//! user-defined intervals (after each inner solve).
+//!
+//! A checkpoint version is *committed* only after the fault-aware agreement
+//! at the end of [`checkpoint`] succeeds, so recovery always restores a
+//! globally consistent version: survivors agree on `min(committed)`.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::metrics::Phase;
+use crate::simmpi::{tags, Blob, Comm, Ctx, MpiResult, WorldRank};
+
+pub type ObjId = u32;
+pub type Version = i64;
+
+/// Well-known object ids used by the FT-GMRES application.
+pub mod obj {
+    use super::ObjId;
+    /// Dynamic: solution vector block.
+    pub const X: ObjId = 1;
+    /// Static: local matrix rows (ELL values + global columns).
+    pub const MAT: ObjId = 2;
+    /// Static: right-hand-side block.
+    pub const RHS: ObjId = 3;
+    /// Dynamic: iteration scalars + replicated least-squares state.
+    pub const ITER: ObjId = 4;
+    /// Dynamic: outer Krylov bases V and Z (live rows of the cycle).
+    pub const BASIS: ObjId = 5;
+}
+
+/// How many predecessor/successor buddies hold a copy of each object.
+pub const DEFAULT_BUDDIES: usize = 1;
+
+/// In-memory checkpoint store of one rank.
+#[derive(Debug, Default)]
+pub struct CkptStore {
+    /// Last version whose global commit succeeded.
+    committed: Version,
+    /// My own objects: obj -> version -> blob.
+    local: HashMap<ObjId, BTreeMap<Version, Blob>>,
+    /// Buddy copies held for other ranks: (owner world rank, obj) -> ...
+    remote: HashMap<(WorldRank, ObjId), BTreeMap<Version, Blob>>,
+}
+
+impl CkptStore {
+    pub fn new() -> Self {
+        CkptStore::default()
+    }
+
+    pub fn committed(&self) -> Version {
+        self.committed
+    }
+
+    pub fn put_local(&mut self, id: ObjId, version: Version, blob: Blob) {
+        self.local.entry(id).or_default().insert(version, blob);
+    }
+
+    pub fn put_remote(&mut self, owner: WorldRank, id: ObjId, version: Version, blob: Blob) {
+        self.remote.entry((owner, id)).or_default().insert(version, blob);
+    }
+
+    pub fn get_local(&self, id: ObjId, version: Version) -> Option<&Blob> {
+        self.local.get(&id)?.get(&version)
+    }
+
+    /// Latest local version of `id` at or below `version`.
+    pub fn get_local_at_most(&self, id: ObjId, version: Version) -> Option<(Version, &Blob)> {
+        let (v, b) = self.local.get(&id)?.range(..=version).next_back()?;
+        Some((*v, b))
+    }
+
+    pub fn get_remote(&self, owner: WorldRank, id: ObjId, version: Version) -> Option<&Blob> {
+        self.remote.get(&(owner, id))?.get(&version)
+    }
+
+    pub fn get_remote_at_most(
+        &self,
+        owner: WorldRank,
+        id: ObjId,
+        version: Version,
+    ) -> Option<(Version, &Blob)> {
+        let (v, b) = self.remote.get(&(owner, id))?.range(..=version).next_back()?;
+        Some((*v, b))
+    }
+
+    /// Drop remote copies held for `owner` (after its data was re-homed).
+    pub fn drop_owner(&mut self, owner: WorldRank) {
+        self.remote.retain(|(o, _), _| *o != owner);
+    }
+
+    /// Garbage-collect: keep only the newest `keep` versions of everything.
+    pub fn gc(&mut self, keep: usize) {
+        let trim = |m: &mut BTreeMap<Version, Blob>| {
+            while m.len() > keep {
+                let oldest = *m.keys().next().unwrap();
+                m.remove(&oldest);
+            }
+        };
+        self.local.values_mut().for_each(trim);
+        self.remote.values_mut().for_each(trim);
+    }
+
+    fn commit(&mut self, version: Version) {
+        self.committed = version;
+    }
+
+    /// Total resident bytes (local + buddy copies) — memory-overhead metric.
+    pub fn resident_bytes(&self) -> usize {
+        let l: usize = self.local.values().flat_map(|m| m.values()).map(Blob::bytes).sum();
+        let r: usize = self.remote.values().flat_map(|m| m.values()).map(Blob::bytes).sum();
+        l + r
+    }
+}
+
+/// Buddy ring stride.  The paper's Figure 2 shows backups shifted by one
+/// *rank* (A's copy lives on B): with ranks packed 24 to a node most buddy
+/// pairs are intra-node and cheap, and the node-boundary pairs plus any
+/// substituted spare (whose neighbors become inter-node) set the pace of
+/// the coordinated checkpoint — the Figure 5 placement effect.  A stride of
+/// `ranks_per_node` instead makes every pair cross nodes (tolerates whole-
+/// node loss at higher cost); the ablation bench compares both.
+pub fn buddy_stride(_ranks_per_node: usize, _n: usize) -> usize {
+    1
+}
+
+/// Stride as configured: rank ring by default, node-crossing when
+/// `NetParams::ckpt_node_stride` is set.
+pub fn effective_stride(params: &crate::netsim::NetParams, n: usize) -> usize {
+    if params.ckpt_node_stride {
+        node_buddy_stride(params.ranks_per_node, n)
+    } else {
+        1
+    }
+}
+
+/// Node-crossing stride variant (whole-node-loss tolerance; ablation).
+pub fn node_buddy_stride(ranks_per_node: usize, n: usize) -> usize {
+    let s = ranks_per_node % n;
+    if s == 0 {
+        1
+    } else {
+        s
+    }
+}
+
+/// The `d`-th buddy of comm rank `r` in a communicator of `n` with the given
+/// node stride.
+pub fn buddy_of_stride(r: usize, d: usize, n: usize, stride: usize) -> usize {
+    (r + d * stride) % n
+}
+
+/// The rank whose `d`-th buddy is `r` (its `d`-th predecessor).
+pub fn ward_of_stride(r: usize, d: usize, n: usize, stride: usize) -> usize {
+    (r + n - (d * stride) % n) % n
+}
+
+/// Coordinated checkpoint of `objs` at `version` with `k` buddies.
+///
+/// Called at a quiescent point by every member of `comm` (the paper
+/// checkpoints after each completed inner solve, when no solver messages are
+/// in flight).  Commits the version only after a fault-aware agreement, so a
+/// failure mid-checkpoint leaves the previous committed version intact.
+pub fn checkpoint(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    store: &mut CkptStore,
+    objs: &[(ObjId, Blob)],
+    version: Version,
+    k: usize,
+) -> MpiResult<()> {
+    // Post-recovery re-establishment is charged to Recovery (the paper
+    // counts "updating all the in-memory checkpoints" as recovery cost);
+    // steady-state checkpoints get their own bucket.
+    let prev = if ctx.phase == Phase::Recovery {
+        Phase::Recovery
+    } else {
+        ctx.set_phase(Phase::Checkpoint)
+    };
+    let result = checkpoint_inner(ctx, comm, store, objs, version, k);
+    ctx.set_phase(prev);
+    result
+}
+
+fn checkpoint_inner(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    store: &mut CkptStore,
+    objs: &[(ObjId, Blob)],
+    version: Version,
+    k: usize,
+) -> MpiResult<()> {
+    let n = comm.size();
+    let me = comm.rank;
+    let k = k.min(n.saturating_sub(1));
+    let stride = effective_stride(&ctx.world.net.params, n);
+    for (id, blob) in objs {
+        store.put_local(*id, version, blob.clone());
+    }
+    // Ship to all buddies first (unbounded channels: no deadlock), then
+    // receive the copies this rank holds for its wards.
+    for d in 1..=k {
+        let buddy = buddy_of_stride(me, d, n, stride);
+        for (id, blob) in objs {
+            comm.send(ctx, buddy, ckpt_tag(*id, d), blob.clone())?;
+        }
+    }
+    for d in 1..=k {
+        let ward = ward_of_stride(me, d, n, stride);
+        let owner_wr = comm.world_of(ward);
+        for (id, _) in objs {
+            let blob = comm.recv(ctx, ward, ckpt_tag(*id, d))?;
+            store.put_remote(owner_wr, *id, version, blob);
+        }
+    }
+    // Global commit: everyone stored everything.
+    comm.agree(ctx, u64::MAX)?;
+    store.commit(version);
+    store.gc(2);
+    Ok(())
+}
+
+fn ckpt_tag(id: ObjId, d: usize) -> u32 {
+    tags::CKPT_BASE + id * 16 + d as u32
+}
+
+/// Agree on the restore version: the newest version every survivor has
+/// committed.  Called by all members of the (post-recovery) communicator.
+pub fn agree_restore_version(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    store: &CkptStore,
+) -> MpiResult<Version> {
+    let mut v = [store.committed()];
+    comm.allreduce_min_i64(ctx, &mut v)?;
+    Ok(v[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buddy_ring_roundtrip() {
+        for n in [2usize, 3, 5, 8, 48] {
+            for stride in [1usize, 3, 24] {
+                let stride = if stride % n == 0 { 1 } else { stride % n };
+                for r in 0..n {
+                    for d in 1..n.min(3) {
+                        assert_eq!(
+                            ward_of_stride(buddy_of_stride(r, d, n, stride), d, n, stride),
+                            r
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn buddy_strides() {
+        // Default: rank ring (paper Fig. 2).
+        assert_eq!(buddy_stride(24, 48), 1);
+        // Node-crossing variant for the ablation.
+        assert_eq!(node_buddy_stride(24, 48), 24);
+        assert_eq!(buddy_of_stride(0, 1, 48, 24), 24);
+        assert_eq!(node_buddy_stride(24, 8), 1);
+        assert_eq!(node_buddy_stride(24, 24), 1);
+    }
+
+    #[test]
+    fn store_versions_and_gc() {
+        let mut s = CkptStore::new();
+        for v in 0..5 {
+            s.put_local(obj::X, v, Blob::scalar(v as f64));
+        }
+        s.gc(2);
+        assert!(s.get_local(obj::X, 2).is_none());
+        assert_eq!(s.get_local(obj::X, 4).unwrap().f, vec![4.0]);
+        let (v, b) = s.get_local_at_most(obj::X, 100).unwrap();
+        assert_eq!(v, 4);
+        assert_eq!(b.f, vec![4.0]);
+    }
+
+    #[test]
+    fn remote_ownership_and_drop() {
+        let mut s = CkptStore::new();
+        s.put_remote(7, obj::X, 1, Blob::scalar(7.0));
+        s.put_remote(8, obj::X, 1, Blob::scalar(8.0));
+        assert!(s.get_remote(7, obj::X, 1).is_some());
+        s.drop_owner(7);
+        assert!(s.get_remote(7, obj::X, 1).is_none());
+        assert!(s.get_remote(8, obj::X, 1).is_some());
+    }
+
+    #[test]
+    fn resident_bytes_counts_both_sides() {
+        let mut s = CkptStore::new();
+        s.put_local(obj::X, 1, Blob::from_f64s(vec![0.0; 10]));
+        s.put_remote(3, obj::X, 1, Blob::from_f64s(vec![0.0; 5]));
+        assert_eq!(s.resident_bytes(), 120);
+    }
+}

@@ -1,0 +1,231 @@
+//! Run configuration: one struct describing a full campaign leg, parsable
+//! from simple `key = value` config files / CLI overrides (the environment
+//! is offline, so no external TOML/serde crates — the format is a flat TOML
+//! subset).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::failure::InjectionPlan;
+use crate::netsim::{ComputeModel, NetParams};
+use crate::problem::Grid3D;
+use crate::recovery::Strategy;
+use crate::solver::FtGmresCfg;
+
+/// Which compute backend executes the solver step graphs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust kernels, modeled cost (deterministic figures).
+    Native,
+    /// AOT HLO artifacts on the PJRT CPU client (the production path).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "native" => Some(BackendKind::Native),
+            "pjrt" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub grid: Grid3D,
+    /// Application process count.
+    pub p: usize,
+    pub strategy: Strategy,
+    /// Failures to inject (0 = failure-free; ignored for NoProtection).
+    pub failures: usize,
+    pub solver: FtGmresCfg,
+    pub net: NetParams,
+    pub compute: ComputeModel,
+    pub backend: BackendKind,
+    /// PJRT backend: charge measured wall time instead of modeled cost.
+    pub pjrt_measured: bool,
+    /// Directory with AOT artifacts (PJRT backend).
+    pub artifacts_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            grid: Grid3D::cube(24),
+            p: 8,
+            strategy: Strategy::Shrink,
+            failures: 0,
+            solver: FtGmresCfg::default(),
+            net: NetParams::default(),
+            compute: ComputeModel::default(),
+            backend: BackendKind::Native,
+            pjrt_measured: false,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Warm spares to allocate (paper: "assume the presence of an adequate
+    /// number of spares").
+    pub fn spares(&self) -> usize {
+        match self.strategy {
+            Strategy::Substitute | Strategy::SubstituteCold => self.failures,
+            _ => 0,
+        }
+    }
+
+    /// The paper's reproducible injection campaign for this leg.
+    pub fn injection_plan(&self) -> InjectionPlan {
+        if self.strategy == Strategy::NoProtection || self.failures == 0 {
+            InjectionPlan::none()
+        } else {
+            InjectionPlan::paper_campaign(
+                self.p,
+                self.failures,
+                self.solver.m_inner as u64,
+                self.strategy == Strategy::Shrink,
+            )
+        }
+    }
+
+    /// Whether checkpointing runs at all.
+    pub fn ckpt_enabled(&self) -> bool {
+        self.strategy != Strategy::NoProtection
+    }
+
+    /// Apply one `key = value` override.  Returns false on unknown key.
+    pub fn set(&mut self, key: &str, value: &str) -> anyhow::Result<bool> {
+        let v = value.trim();
+        match key.trim() {
+            "grid" => {
+                // "nx x ny x nz" or a single cube edge.
+                let dims: Vec<usize> = v
+                    .split(['x', 'X'])
+                    .map(|d| d.trim().parse())
+                    .collect::<Result<_, _>>()?;
+                self.grid = match dims.as_slice() {
+                    [c] => Grid3D::cube(*c),
+                    [nx, ny, nz] => Grid3D { nx: *nx, ny: *ny, nz: *nz },
+                    _ => anyhow::bail!("grid must be 'c' or 'nx x ny x nz'"),
+                };
+            }
+            "p" | "procs" => self.p = v.parse()?,
+            "strategy" => {
+                self.strategy = Strategy::parse(v)
+                    .ok_or_else(|| anyhow::anyhow!("unknown strategy {v}"))?
+            }
+            "failures" => self.failures = v.parse()?,
+            "m_inner" => self.solver.m_inner = v.parse()?,
+            "m_outer" => self.solver.m_outer = v.parse()?,
+            "tol" => self.solver.tol = v.parse()?,
+            "max_cycles" => self.solver.max_cycles = v.parse()?,
+            "reorth" => self.solver.reorth = v.parse()?,
+            "ckpt_buddies" => self.solver.ckpt_buddies = v.parse()?,
+            "inner_tol" => self.solver.inner_tol = v.parse()?,
+            "backend" => {
+                self.backend = BackendKind::parse(v)
+                    .ok_or_else(|| anyhow::anyhow!("unknown backend {v}"))?
+            }
+            "pjrt_measured" => self.pjrt_measured = v.parse()?,
+            "artifacts_dir" => self.artifacts_dir = v.to_string(),
+            "ranks_per_node" => self.net.ranks_per_node = v.parse()?,
+            "inter_bandwidth" => self.net.inter_bandwidth = v.parse()?,
+            "inter_latency" => self.net.inter_latency = v.parse()?,
+            "intra_bandwidth" => self.net.intra_bandwidth = v.parse()?,
+            "intra_latency" => self.net.intra_latency = v.parse()?,
+            "detect_latency" => self.net.detect_latency = v.parse()?,
+            "nic_contention" => self.net.nic_contention = v.parse()?,
+            "data_scale" => self.net.data_scale = v.parse()?,
+            "ckpt_node_stride" => self.net.ckpt_node_stride = v.parse()?,
+            "cold_spawn_latency" => self.net.cold_spawn_latency = v.parse()?,
+            "hop_latency_factor" => self.net.hop_latency_factor = v.parse()?,
+            "hop_bw_taper" => self.net.hop_bw_taper = v.parse()?,
+            "flops_per_sec" => self.compute.flops_per_sec = v.parse()?,
+            "mem_bytes_per_sec" => self.compute.mem_bytes_per_sec = v.parse()?,
+            _ => return Ok(false),
+        }
+        Ok(true)
+    }
+
+    /// Load overrides from a flat `key = value` file ('#' comments).
+    pub fn load_file(&mut self, path: &Path) -> anyhow::Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("{}:{}: expected key = value", path.display(), lineno + 1))?;
+            if !self.set(k, v)? {
+                anyhow::bail!("{}:{}: unknown key '{}'", path.display(), lineno + 1, k.trim());
+            }
+        }
+        Ok(())
+    }
+
+    /// Summary map for report headers.
+    pub fn summary(&self) -> BTreeMap<&'static str, String> {
+        let mut m = BTreeMap::new();
+        m.insert("grid", format!("{}x{}x{}", self.grid.nx, self.grid.ny, self.grid.nz));
+        m.insert("rows", self.grid.n().to_string());
+        m.insert("p", self.p.to_string());
+        m.insert("strategy", self.strategy.name().to_string());
+        m.insert("failures", self.failures.to_string());
+        m.insert("m_inner", self.solver.m_inner.to_string());
+        m.insert("tol", format!("{:e}", self.solver.tol));
+        m.insert(
+            "backend",
+            match self.backend {
+                BackendKind::Native => "native".to_string(),
+                BackendKind::Pjrt => "pjrt".to_string(),
+            },
+        );
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_known_keys() {
+        let mut c = RunConfig::default();
+        assert!(c.set("p", "64").unwrap());
+        assert!(c.set("grid", "48").unwrap());
+        assert!(c.set("grid", "8 x 16 x 4").unwrap());
+        assert!(c.set("strategy", "substitute").unwrap());
+        assert!(c.set("failures", "3").unwrap());
+        assert_eq!(c.p, 64);
+        assert_eq!(c.grid, Grid3D { nx: 8, ny: 16, nz: 4 });
+        assert_eq!(c.strategy, Strategy::Substitute);
+        assert_eq!(c.spares(), 3);
+        assert!(!c.set("bogus", "1").unwrap());
+    }
+
+    #[test]
+    fn no_protection_never_injects() {
+        let mut c = RunConfig::default();
+        c.strategy = Strategy::NoProtection;
+        c.failures = 4;
+        assert_eq!(c.injection_plan().n_failures(), 0);
+        assert!(!c.ckpt_enabled());
+        assert_eq!(c.spares(), 0);
+    }
+
+    #[test]
+    fn load_file_roundtrip() {
+        let dir = std::env::temp_dir().join("ulfm_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("run.cfg");
+        std::fs::write(&p, "p = 16\nstrategy = shrink # comment\nfailures = 2\n").unwrap();
+        let mut c = RunConfig::default();
+        c.load_file(&p).unwrap();
+        assert_eq!(c.p, 16);
+        assert_eq!(c.failures, 2);
+    }
+}

@@ -1,0 +1,239 @@
+//! The leader: builds the simulated machine, launches one thread per world
+//! rank (application ranks + warm spares), runs the solve-with-recovery loop
+//! on each, and aggregates the per-rank timelines into a [`RunReport`].
+//!
+//! This is the L3 entrypoint both the CLI and the benches drive.
+
+use std::sync::Arc;
+use std::thread;
+
+use crate::backend::native::NativeBackend;
+use crate::backend::Backend;
+use crate::checkpoint::CkptStore;
+use crate::config::{BackendKind, RunConfig};
+use crate::failure::Injector;
+use crate::metrics::{Phase, RankReport, RunReport};
+use crate::recovery::{self, Strategy};
+use crate::simmpi::{ulfm, Comm, Ctl, Ctx, Msg, MpiError, MpiResult, Payload, World};
+use crate::solver::{FtGmres, Outcome, SolverState};
+
+/// Per-rank thread result.
+struct RankResult {
+    report: RankReport,
+    outcome: Option<Outcome>,
+}
+
+/// Build the backend for a run.  PJRT backends are created once and shared
+/// by all rank threads (executions are internally serialized).
+pub fn make_backend(cfg: &RunConfig) -> anyhow::Result<Arc<dyn Backend>> {
+    Ok(match cfg.backend {
+        BackendKind::Native => Arc::new(NativeBackend::new(cfg.compute.clone())),
+        BackendKind::Pjrt => Arc::new(crate::runtime::PjrtEngine::load(
+            std::path::Path::new(&cfg.artifacts_dir),
+            cfg.compute.clone(),
+            cfg.pjrt_measured,
+        )?),
+    })
+}
+
+/// Run one campaign leg to completion and return the aggregated report.
+pub fn run(cfg: &RunConfig) -> anyhow::Result<RunReport> {
+    let backend = make_backend(cfg)?;
+    run_with_backend(cfg, backend)
+}
+
+pub fn run_with_backend(cfg: &RunConfig, backend: Arc<dyn Backend>) -> anyhow::Result<RunReport> {
+    run_custom(cfg, backend, cfg.injection_plan())
+}
+
+/// Run with an explicit injection plan (e.g., simultaneous kills, positions
+/// outside the paper's fixed campaign layout).
+pub fn run_custom(
+    cfg: &RunConfig,
+    backend: Arc<dyn Backend>,
+    plan: crate::failure::InjectionPlan,
+) -> anyhow::Result<RunReport> {
+    anyhow::ensure!(cfg.p >= 2, "need at least 2 ranks");
+    anyhow::ensure!(cfg.grid.n() >= cfg.p * 4, "grid too small for p={} ranks", cfg.p);
+    let n_spares = cfg.spares();
+    let (world, receivers) = World::new(cfg.p, n_spares, cfg.net.clone(), Injector::new(plan));
+
+    let mut cfg = cfg.clone();
+    // The no-protection baseline runs without any checkpointing.
+    cfg.solver.ckpt_enabled &= cfg.ckpt_enabled();
+    let cfg = Arc::new(cfg);
+    let mut app_handles = Vec::new();
+    let mut spare_handles = Vec::new();
+    for (rank, rx) in receivers.into_iter().enumerate() {
+        let world = world.clone();
+        let tcfg = cfg.clone();
+        let backend = backend.clone();
+        let h = thread::Builder::new()
+            .name(format!("rank-{rank}"))
+            .stack_size(2 << 20)
+            .spawn(move || {
+                let ctx = Ctx::new(world, rank, rx);
+                if rank < tcfg.p {
+                    app_rank(ctx, &tcfg, backend.as_ref())
+                } else {
+                    spare_rank(ctx, &tcfg, backend.as_ref())
+                }
+            })
+            .expect("spawn rank thread");
+        if rank < cfg.p {
+            app_handles.push(h);
+        } else {
+            spare_handles.push(h);
+        }
+    }
+
+    // Join application ranks first; then release any still-waiting spares.
+    let mut results: Vec<RankResult> = Vec::with_capacity(world.size);
+    for h in app_handles {
+        results.push(h.join().expect("rank thread panicked"));
+    }
+    for s in cfg.p..world.size {
+        world.push(
+            s,
+            Msg { src: 0, epoch: 0, tag: 0, arrival: 0.0, payload: Payload::Ctl(Ctl::Shutdown) },
+        );
+    }
+    for h in spare_handles {
+        results.push(h.join().expect("spare thread panicked"));
+    }
+
+    let outcome = results
+        .iter()
+        .filter(|r| !r.report.killed)
+        .find_map(|r| r.outcome.clone());
+    let failures = world.dead_set().len();
+    let (relres, converged) =
+        outcome.as_ref().map(|o| (o.relres, o.converged)).unwrap_or((f64::NAN, false));
+    let reports: Vec<RankReport> = results.into_iter().map(|r| r.report).collect();
+    Ok(RunReport::from_ranks(reports, relres, converged, failures))
+}
+
+/// Solve-with-recovery loop shared by application ranks and adopted spares.
+fn solve_loop(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    state: &mut SolverState,
+    store: &mut CkptStore,
+    cfg: &RunConfig,
+    backend: &dyn Backend,
+) -> MpiResult<Outcome> {
+    let solver = FtGmres::new(&cfg.solver, backend, cfg.compute.clone());
+    loop {
+        match solver.solve(ctx, comm, state, store) {
+            Ok(outcome) => return Ok(outcome),
+            Err(MpiError::Killed) => {
+                // Ensure the death is marked + broadcast even when it was
+                // discovered in the receive path (idempotent).
+                let _ = ctx.die();
+                return Err(MpiError::Killed);
+            }
+            Err(_failure) => {
+                // A co-scheduled simultaneous kill may have marked THIS rank
+                // dead before its own injector tick fired; it must die, not
+                // recover (survivors have already excluded it).
+                if !ctx.world.is_alive(ctx.rank) {
+                    return Err(ctx.die());
+                }
+                ctx.recompute = false;
+                recovery::handle_failure(
+                    ctx,
+                    comm,
+                    state,
+                    store,
+                    cfg.strategy,
+                    cfg.solver.ckpt_buddies,
+                    &cfg.compute,
+                )?;
+                ctx.set_phase(Phase::Compute);
+            }
+        }
+    }
+}
+
+fn finish(ctx: Ctx, outcome: Option<Outcome>, killed: bool, was_spare: bool) -> RankResult {
+    RankResult {
+        report: RankReport {
+            world_rank: ctx.rank,
+            finish_time: ctx.clock,
+            phases: ctx.timers.clone(),
+            iterations: ctx.iterations,
+            killed,
+            was_spare,
+        },
+        outcome,
+    }
+}
+
+fn app_rank(mut ctx: Ctx, cfg: &RunConfig, backend: &dyn Backend) -> RankResult {
+    let mut comm = Comm::world(cfg.p, ctx.rank);
+    let mut store = CkptStore::new();
+    let result = (|| -> MpiResult<Outcome> {
+        let mut state = SolverState::setup(
+            &mut ctx,
+            &mut comm,
+            &mut store,
+            cfg.grid,
+            &cfg.compute,
+            cfg.solver.m_outer,
+            cfg.solver.ckpt_buddies,
+            cfg.ckpt_enabled(),
+        )?;
+        solve_loop(&mut ctx, &mut comm, &mut state, &mut store, cfg, backend)
+    })();
+    match result {
+        Ok(o) => finish(ctx, Some(o), false, false),
+        Err(MpiError::Killed) => finish(ctx, None, true, false),
+        Err(e) => panic!("rank {}: unrecoverable failure: {e}", ctx.rank),
+    }
+}
+
+fn spare_rank(mut ctx: Ctx, cfg: &RunConfig, backend: &dyn Backend) -> RankResult {
+    ctx.set_phase(Phase::Idle);
+    let (epoch, members, as_rank) = match ctx.wait_join() {
+        // Never used: allocated-but-idle (the paper's "non-utilization of
+        // resources in the failure-free case").
+        None => return finish(ctx, None, false, true),
+        Some(j) => j,
+    };
+    let result = (|| -> MpiResult<Outcome> {
+        if cfg.strategy == Strategy::SubstituteCold {
+            // The process only starts now: job-launcher spawn, binary load,
+            // runtime init (paper: "spawning processes at runtime has more
+            // overhead").  Charged to reconfiguration.
+            ctx.set_phase(Phase::Reconfig);
+            ctx.advance(cfg.net.cold_spawn_latency);
+        }
+        let mut comm = ulfm::join_as_spare(&mut ctx, epoch, members, as_rank)?;
+        let mut store = CkptStore::new();
+        let mut state = recovery::substitute::recover_spare(
+            &mut ctx,
+            &mut comm,
+            cfg.grid,
+            cfg.solver.m_outer,
+            &mut store,
+            cfg.solver.ckpt_buddies,
+            &cfg.compute,
+        )?;
+        ctx.set_phase(Phase::Compute);
+        solve_loop(&mut ctx, &mut comm, &mut state, &mut store, cfg, backend)
+    })();
+    match result {
+        Ok(o) => finish(ctx, Some(o), false, true),
+        Err(MpiError::Killed) => finish(ctx, None, true, true),
+        Err(e) => panic!("spare {}: unrecoverable failure: {e}", ctx.rank),
+    }
+}
+
+/// Convenience: run the no-protection baseline matching `cfg` (same grid,
+/// p, backend; no checkpointing, no failures).
+pub fn run_baseline(cfg: &RunConfig) -> anyhow::Result<RunReport> {
+    let mut base = cfg.clone();
+    base.strategy = Strategy::NoProtection;
+    base.failures = 0;
+    run(&base)
+}

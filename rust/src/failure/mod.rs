@@ -1,0 +1,152 @@
+//! Controlled process-failure injection (paper §VI).
+//!
+//! The paper injects failures at *fixed rank positions* and *fixed time
+//! windows* to make campaigns reproducible: high ranks for shrink (worst-case
+//! redistribution traffic), ranks on different nodes from the spares for
+//! substitute (worst-case placement).  Our injector triggers at inner-
+//! iteration boundaries — the simulation analogue of their fixed windows —
+//! and the rank "SIGKILLs" itself via [`crate::simmpi::Ctx::die`].
+
+
+
+use crate::simmpi::WorldRank;
+
+/// One scheduled kill.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Kill {
+    pub world_rank: WorldRank,
+    /// Global inner-iteration count at which the rank dies.
+    pub at_inner_iter: u64,
+}
+
+/// A reproducible failure campaign.
+#[derive(Debug, Clone, Default)]
+pub struct InjectionPlan {
+    pub kills: Vec<Kill>,
+}
+
+impl InjectionPlan {
+    pub fn none() -> Self {
+        InjectionPlan::default()
+    }
+
+    /// The paper's campaign layout: `n_failures` independent kills at fixed
+    /// per-strategy worst-case positions, spaced so each lands mid-window
+    /// between two checkpoints (`ckpt_interval` inner iterations apart).
+    ///
+    /// Positions (paper §VI): for *shrink*, "towards higher ranks" (maximum
+    /// redistribution traffic, Fig. 3); for *substitute*, ranks "on a
+    /// different physical node from the node on which the spare processes
+    /// reside" — mid-machine ranks, so the end-of-machine spare is far from
+    /// the failed slot's neighbors.
+    ///
+    /// Failure i fires at iteration `ckpt_interval * 5/2 + i * 3/2 *
+    /// ckpt_interval`: after two completed checkpoints, 1.5 windows apart,
+    /// half a window past the last checkpoint (bounded recomputation).
+    pub fn paper_campaign(
+        p: usize,
+        n_failures: usize,
+        ckpt_interval: u64,
+        high_ranks: bool,
+    ) -> Self {
+        let kills = (0..n_failures)
+            .map(|i| Kill {
+                world_rank: if high_ranks { p - 1 - i } else { p / 2 - i },
+                at_inner_iter: ckpt_interval * 2 + ckpt_interval / 2
+                    + (i as u64 * 3 * ckpt_interval) / 2,
+            })
+            .collect();
+        InjectionPlan { kills }
+    }
+
+    pub fn n_failures(&self) -> usize {
+        self.kills.len()
+    }
+}
+
+/// Thread-safe injector consulted by every rank at iteration boundaries.
+#[derive(Debug)]
+pub struct Injector {
+    plan: InjectionPlan,
+}
+
+impl Injector {
+    pub fn new(plan: InjectionPlan) -> Self {
+        Injector { plan }
+    }
+
+    pub fn plan(&self) -> &InjectionPlan {
+        &self.plan
+    }
+
+    /// Should `rank` die now, given it is about to execute inner iteration
+    /// `next_iter`?  (Fires when the schedule's iteration is reached or
+    /// passed — recovery rollback can never un-kill a rank because the
+    /// registry death is permanent.)
+    pub fn should_die(&self, rank: WorldRank, next_iter: u64) -> bool {
+        self.plan
+            .kills
+            .iter()
+            .any(|k| k.world_rank == rank && next_iter >= k.at_inner_iter)
+    }
+
+    /// Ranks scheduled to die at the same instant as `rank`'s triggering
+    /// kill.  Simultaneous deaths must appear atomically in the liveness
+    /// registry, or survivors could build inconsistent shrink memberships
+    /// from snapshots taken between the two (see `Ctx::die`).
+    pub fn co_scheduled(&self, rank: WorldRank, next_iter: u64) -> Vec<WorldRank> {
+        let Some(kill) = self
+            .plan
+            .kills
+            .iter()
+            .filter(|k| k.world_rank == rank && next_iter >= k.at_inner_iter)
+            .max_by_key(|k| k.at_inner_iter)
+        else {
+            return Vec::new();
+        };
+        self.plan
+            .kills
+            .iter()
+            .filter(|k| k.at_inner_iter == kill.at_inner_iter && k.world_rank != rank)
+            .map(|k| k.world_rank)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_campaign_positions_and_windows() {
+        let plan = InjectionPlan::paper_campaign(32, 4, 25, true);
+        assert_eq!(plan.kills.len(), 4);
+        // Highest ranks first (shrink worst case).
+        assert_eq!(plan.kills[0].world_rank, 31);
+        assert_eq!(plan.kills[3].world_rank, 28);
+        // Substitute worst case: mid-machine, away from trailing spares.
+        let sub = InjectionPlan::paper_campaign(32, 4, 25, false);
+        assert_eq!(sub.kills[0].world_rank, 16);
+        assert_eq!(sub.kills[3].world_rank, 13);
+        // Mid-window spacing: 62, 99, 137, 174.
+        assert_eq!(plan.kills[0].at_inner_iter, 62);
+        assert_eq!(plan.kills[1].at_inner_iter, 99);
+        assert_eq!(plan.kills[2].at_inner_iter, 137);
+        assert_eq!(plan.kills[3].at_inner_iter, 174);
+    }
+
+    #[test]
+    fn injector_fires_at_or_after_schedule() {
+        let inj = Injector::new(InjectionPlan::paper_campaign(8, 1, 25, true));
+        assert!(!inj.should_die(7, 61));
+        assert!(inj.should_die(7, 62));
+        assert!(inj.should_die(7, 100));
+        assert!(!inj.should_die(6, 1000));
+    }
+
+    #[test]
+    fn none_never_fires() {
+        let inj = Injector::new(InjectionPlan::none());
+        assert!(!inj.should_die(0, u64::MAX));
+    }
+}

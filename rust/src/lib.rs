@@ -1,0 +1,33 @@
+//! # ulfm-ftgmres
+//!
+//! A full reimplementation of *"Shrink or Substitute: Handling Process
+//! Failures in HPC Systems using In-situ Recovery"* (Ashraf, Hukerikar,
+//! Engelmann — ORNL, 2018) as a three-layer Rust + JAX + Pallas system.
+//!
+//! * **L3 (this crate)** — a simulated-cluster message-passing runtime with
+//!   ULFM semantics ([`simmpi`]), in-memory buddy checkpointing
+//!   ([`checkpoint`]), the *shrink* and *substitute* in-situ recovery
+//!   strategies ([`recovery`]), and a distributed FT-GMRES solver
+//!   ([`solver`]) over a 3D-Laplacian test problem ([`problem`]).
+//! * **L2/L1 (build time)** — the solver's local step graphs and the ELL
+//!   SpMV Pallas kernel, AOT-lowered to `artifacts/*.hlo.txt` by
+//!   `python/compile/aot.py` and executed via the PJRT CPU client
+//!   ([`runtime`]).  Python never runs on the request path.
+//!
+//! See DESIGN.md for the system inventory and the experiment index mapping
+//! every paper figure to a bench target, and EXPERIMENTS.md for measured
+//! results.
+
+pub mod backend;
+pub mod checkpoint;
+pub mod config;
+pub mod coordinator;
+pub mod failure;
+pub mod figures;
+pub mod metrics;
+pub mod netsim;
+pub mod problem;
+pub mod recovery;
+pub mod runtime;
+pub mod simmpi;
+pub mod solver;

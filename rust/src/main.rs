@@ -1,0 +1,156 @@
+//! `ftgmres` — CLI for the shrink-or-substitute reproduction.
+//!
+//! Subcommands (offline environment: argument parsing is hand-rolled):
+//!
+//! ```text
+//! ftgmres run       [--config FILE] [key=value ...]   one leg, print report
+//! ftgmres figure4   [--quick] [key=value ...]         regenerate Fig. 4
+//! ftgmres figure5   [--quick] [key=value ...]         regenerate Fig. 5
+//! ftgmres figure6   [--quick] [key=value ...]         regenerate Fig. 6
+//! ftgmres figures   [--quick] [key=value ...]         all three from one campaign
+//! ftgmres report    [--config FILE] [key=value ...]   leg + per-phase breakdown
+//! ```
+//!
+//! `key=value` pairs are the same keys as config files (see config.rs), e.g.
+//! `p=64 strategy=shrink failures=2 grid=48 backend=pjrt`.
+
+use std::path::{Path, PathBuf};
+
+use ulfm_ftgmres::config::RunConfig;
+use ulfm_ftgmres::coordinator;
+use ulfm_ftgmres::figures::{Campaign, CampaignCfg};
+use ulfm_ftgmres::metrics::RunReport;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: ftgmres <run|report|figure4|figure5|figure6|figures> \
+         [--config FILE] [--quick] [--out DIR] [key=value ...]"
+    );
+    std::process::exit(2);
+}
+
+struct Args {
+    cmd: String,
+    quick: bool,
+    out: PathBuf,
+    cfg: RunConfig,
+}
+
+fn parse_args() -> anyhow::Result<Args> {
+    let mut argv = std::env::args().skip(1);
+    let cmd = argv.next().unwrap_or_else(|| usage());
+    let mut cfg = RunConfig::default();
+    let mut quick = false;
+    let mut out = PathBuf::from("out");
+    let mut rest: Vec<String> = argv.collect();
+    let mut i = 0;
+    while i < rest.len() {
+        match rest[i].as_str() {
+            "--quick" => {
+                quick = true;
+                rest.remove(i);
+            }
+            "--config" => {
+                anyhow::ensure!(i + 1 < rest.len(), "--config needs a path");
+                cfg.load_file(Path::new(&rest[i + 1]))?;
+                rest.drain(i..=i + 1);
+            }
+            "--out" => {
+                anyhow::ensure!(i + 1 < rest.len(), "--out needs a path");
+                out = PathBuf::from(&rest[i + 1]);
+                rest.drain(i..=i + 1);
+            }
+            _ => i += 1,
+        }
+    }
+    for kv in rest {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("expected key=value, got '{kv}'"))?;
+        anyhow::ensure!(cfg.set(k, v)?, "unknown config key '{k}'");
+    }
+    Ok(Args { cmd, quick, out, cfg })
+}
+
+fn print_report(cfg: &RunConfig, rep: &RunReport) {
+    println!("== run: {:?}", cfg.summary());
+    println!(
+        "time_to_solution = {:.4}s  converged = {}  relres = {:.3e}  iterations = {}  failures = {}",
+        rep.time_to_solution, rep.converged, rep.final_relres, rep.iterations, rep.failures
+    );
+    let m = &rep.max_phases;
+    println!(
+        "max phases [s]: compute={:.4} comm={:.4} checkpoint={:.4} recovery={:.4} \
+         reconfig={:.6} recompute={:.4}",
+        m.compute, m.comm, m.checkpoint, m.recovery, m.reconfig, m.recompute
+    );
+    let pct = |v: f64| 100.0 * v / rep.time_to_solution;
+    println!(
+        "as % of tts:   compute={:.1}% comm={:.1}% checkpoint={:.2}% recovery={:.2}% \
+         reconfig={:.4}% recompute={:.2}%",
+        pct(m.compute),
+        pct(m.comm),
+        pct(m.checkpoint),
+        pct(m.recovery),
+        pct(m.reconfig),
+        pct(m.recompute)
+    );
+}
+
+fn campaign(args: &Args) -> anyhow::Result<Campaign> {
+    let ccfg = if args.quick {
+        CampaignCfg::quick(args.cfg.clone())
+    } else {
+        CampaignCfg::paper(args.cfg.clone())
+    };
+    eprintln!(
+        "running campaign: procs={:?} max_failures={} grid={}x{}x{}",
+        ccfg.procs, ccfg.max_failures, ccfg.base.grid.nx, ccfg.base.grid.ny, ccfg.base.grid.nz
+    );
+    Campaign::run(ccfg, true)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = parse_args()?;
+    match args.cmd.as_str() {
+        "run" => {
+            let rep = coordinator::run(&args.cfg)?;
+            print_report(&args.cfg, &rep);
+        }
+        "report" => {
+            let rep = coordinator::run(&args.cfg)?;
+            print_report(&args.cfg, &rep);
+            println!("\nper-rank phases:");
+            for r in &rep.ranks {
+                let p = &r.phases;
+                println!(
+                    "  rank {:4}  t={:9.4}s  iters={:5}  cmp={:.4} com={:.4} ckp={:.4} rec={:.4} cfg={:.4} rcp={:.4}  killed={} spare={}",
+                    r.world_rank, r.finish_time, r.iterations,
+                    p.compute, p.comm, p.checkpoint, p.recovery, p.reconfig, p.recompute,
+                    r.killed, r.was_spare
+                );
+            }
+        }
+        "figure4" | "figure5" | "figure6" | "figures" => {
+            let c = campaign(&args)?;
+            let tables = match args.cmd.as_str() {
+                "figure4" => vec![("fig4.csv", c.figure4())],
+                "figure5" => vec![("fig5.csv", c.figure5())],
+                "figure6" => vec![("fig6.csv", c.figure6())],
+                _ => vec![
+                    ("fig4.csv", c.figure4()),
+                    ("fig5.csv", c.figure5()),
+                    ("fig6.csv", c.figure6()),
+                ],
+            };
+            for (file, t) in tables {
+                println!("{}", t.to_text());
+                let path = args.out.join(file);
+                t.write_csv(&path)?;
+                eprintln!("wrote {}", path.display());
+            }
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

@@ -1,0 +1,222 @@
+//! Per-rank phase accounting in virtual time.
+//!
+//! The paper's figures are all ratios of phase times (checkpoint, recovery,
+//! reconfiguration, recomputation) to total time-to-solution.  Every virtual
+//! second a rank spends is charged to exactly one [`Phase`]; the campaign
+//! report aggregates per-rank timelines into the numbers Figures 4-6 plot.
+
+
+
+/// What a rank is doing while virtual time advances.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Local numerical work (SpMV, orthogonalization, updates).
+    Compute,
+    /// Ordinary solver communication (halo exchange, allreduce).
+    Comm,
+    /// Creating / shipping in-memory checkpoints to buddies.
+    Checkpoint,
+    /// State recovery after a failure (redistribution, restore, buddy
+    /// re-establishment) — the paper's "recovery" overhead.
+    Recovery,
+    /// ULFM communicator repair: revoke, agreement, shrink, spare stitching —
+    /// the paper's "reconfiguration" overhead.
+    Reconfig,
+    /// Re-executing iterations that were already done before a failure
+    /// rolled the solver back to the last checkpoint.
+    Recompute,
+    /// Waiting for spares to be used (spare ranks only).
+    Idle,
+}
+
+pub const ALL_PHASES: [Phase; 7] = [
+    Phase::Compute,
+    Phase::Comm,
+    Phase::Checkpoint,
+    Phase::Recovery,
+    Phase::Reconfig,
+    Phase::Recompute,
+    Phase::Idle,
+];
+
+/// Accumulated virtual seconds per phase for one rank.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseTimers {
+    pub compute: f64,
+    pub comm: f64,
+    pub checkpoint: f64,
+    pub recovery: f64,
+    pub reconfig: f64,
+    pub recompute: f64,
+    pub idle: f64,
+}
+
+impl PhaseTimers {
+    pub fn charge(&mut self, phase: Phase, dt: f64) {
+        debug_assert!(dt >= 0.0, "negative phase charge {dt}");
+        match phase {
+            Phase::Compute => self.compute += dt,
+            Phase::Comm => self.comm += dt,
+            Phase::Checkpoint => self.checkpoint += dt,
+            Phase::Recovery => self.recovery += dt,
+            Phase::Reconfig => self.reconfig += dt,
+            Phase::Recompute => self.recompute += dt,
+            Phase::Idle => self.idle += dt,
+        }
+    }
+
+    pub fn get(&self, phase: Phase) -> f64 {
+        match phase {
+            Phase::Compute => self.compute,
+            Phase::Comm => self.comm,
+            Phase::Checkpoint => self.checkpoint,
+            Phase::Recovery => self.recovery,
+            Phase::Reconfig => self.reconfig,
+            Phase::Recompute => self.recompute,
+            Phase::Idle => self.idle,
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        ALL_PHASES.iter().map(|&p| self.get(p)).sum()
+    }
+
+    /// Element-wise max — campaign reports use the max over ranks because
+    /// time-to-solution is set by the slowest process.
+    pub fn max_with(&mut self, other: &PhaseTimers) {
+        for p in ALL_PHASES {
+            let m = self.get(p).max(other.get(p));
+            self.set(p, m);
+        }
+    }
+
+    fn set(&mut self, phase: Phase, v: f64) {
+        match phase {
+            Phase::Compute => self.compute = v,
+            Phase::Comm => self.comm = v,
+            Phase::Checkpoint => self.checkpoint = v,
+            Phase::Recovery => self.recovery = v,
+            Phase::Reconfig => self.reconfig = v,
+            Phase::Recompute => self.recompute = v,
+            Phase::Idle => self.idle = v,
+        }
+    }
+}
+
+/// Final report for one rank of one run.
+#[derive(Debug, Clone)]
+pub struct RankReport {
+    pub world_rank: usize,
+    /// Final virtual clock (seconds since run start).
+    pub finish_time: f64,
+    pub phases: PhaseTimers,
+    /// Total inner iterations this rank executed (incl. recomputation).
+    pub iterations: u64,
+    /// Whether this rank was killed by the injector.
+    pub killed: bool,
+    /// Whether this rank started as a spare.
+    pub was_spare: bool,
+}
+
+/// Aggregated result of one solver run (one configuration, one campaign leg).
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Virtual time-to-solution: max finish time over surviving ranks.
+    pub time_to_solution: f64,
+    /// Per-phase maxima over surviving ranks.
+    pub max_phases: PhaseTimers,
+    /// Per-phase means over surviving ranks.
+    pub mean_phases: PhaseTimers,
+    pub ranks: Vec<RankReport>,
+    /// Final relative residual reached by the solver.
+    pub final_relres: f64,
+    /// Total inner iterations of the surviving solve (max over ranks).
+    pub iterations: u64,
+    pub converged: bool,
+    /// Number of failures actually injected.
+    pub failures: usize,
+}
+
+impl RunReport {
+    pub fn from_ranks(ranks: Vec<RankReport>, final_relres: f64, converged: bool, failures: usize) -> Self {
+        let survivors: Vec<&RankReport> =
+            ranks.iter().filter(|r| !r.killed && !r.was_spare_unused()).collect();
+        let n = survivors.len().max(1) as f64;
+        let mut max_phases = PhaseTimers::default();
+        let mut mean_phases = PhaseTimers::default();
+        let mut tts = 0.0f64;
+        let mut iters = 0u64;
+        for r in &survivors {
+            max_phases.max_with(&r.phases);
+            for p in ALL_PHASES {
+                let cur = mean_phases.get(p);
+                mean_phases.set(p, cur + r.phases.get(p) / n);
+            }
+            tts = tts.max(r.finish_time);
+            iters = iters.max(r.iterations);
+        }
+        RunReport {
+            time_to_solution: tts,
+            max_phases,
+            mean_phases,
+            ranks,
+            final_relres,
+            iterations: iters,
+            converged,
+            failures,
+        }
+    }
+}
+
+impl RankReport {
+    /// A spare that never did an iteration stayed idle; exclude it from
+    /// time-to-solution (the paper measures application ranks).
+    fn was_spare_unused(&self) -> bool {
+        self.was_spare && self.iterations == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_and_total() {
+        let mut t = PhaseTimers::default();
+        t.charge(Phase::Compute, 1.5);
+        t.charge(Phase::Comm, 0.5);
+        t.charge(Phase::Compute, 0.5);
+        assert_eq!(t.compute, 2.0);
+        assert!((t.total() - 2.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn max_with_elementwise() {
+        let mut a = PhaseTimers { compute: 1.0, comm: 5.0, ..Default::default() };
+        let b = PhaseTimers { compute: 2.0, comm: 1.0, ..Default::default() };
+        a.max_with(&b);
+        assert_eq!(a.compute, 2.0);
+        assert_eq!(a.comm, 5.0);
+    }
+
+    #[test]
+    fn run_report_excludes_killed_and_unused_spares() {
+        let mk = |wr, fin, killed, spare, iters| RankReport {
+            world_rank: wr,
+            finish_time: fin,
+            phases: PhaseTimers::default(),
+            iterations: iters,
+            killed,
+            was_spare: spare,
+        };
+        let ranks = vec![
+            mk(0, 10.0, false, false, 100),
+            mk(1, 50.0, true, false, 40),   // killed: excluded
+            mk(2, 99.0, false, true, 0),    // unused spare: excluded
+            mk(3, 12.0, false, true, 60),   // used spare: included
+        ];
+        let rep = RunReport::from_ranks(ranks, 1e-9, true, 1);
+        assert!((rep.time_to_solution - 12.0).abs() < 1e-12);
+        assert_eq!(rep.iterations, 100);
+    }
+}

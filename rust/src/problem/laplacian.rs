@@ -1,0 +1,238 @@
+//! 3D 7-point Laplacian generator — the paper's test problem ("a regular 3D
+//! mesh discretized in Trilinos", §VI) in ELLPACK-friendly row form.
+//!
+//! Rows are generated in natural ordering `g = x + nx*(y + ny*z)`; every row
+//! has the stencil (6 on the diagonal, -1 towards each existing neighbor),
+//! which makes the matrix symmetric positive definite (discrete Dirichlet
+//! Laplacian).  Unused ELL slots carry `val = 0`, `col = row` (a safe
+//! self-reference, so padded slots never index out of the halo).
+
+
+
+use crate::simmpi::Blob;
+
+/// Nonzeros per row (7-point stencil) — must match the L1 kernel's `K`.
+pub const K: usize = 7;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Grid3D {
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+}
+
+impl Grid3D {
+    pub fn cube(n: usize) -> Self {
+        Grid3D { nx: n, ny: n, nz: n }
+    }
+
+    /// Total rows.
+    pub fn n(&self) -> usize {
+        self.nx * self.ny * self.nz
+    }
+
+    /// Plane size — the maximum halo reach of a contiguous block row.
+    pub fn plane(&self) -> usize {
+        self.nx * self.ny
+    }
+
+    pub fn coords(&self, g: usize) -> (usize, usize, usize) {
+        let x = g % self.nx;
+        let y = (g / self.nx) % self.ny;
+        let z = g / (self.nx * self.ny);
+        (x, y, z)
+    }
+
+    /// Fill one row's ELL slots; returns the nonzero count.
+    pub fn row(&self, g: usize, vals: &mut [f64; K], cols: &mut [i64; K]) -> usize {
+        let (x, y, z) = self.coords(g);
+        // Safe padding defaults.
+        vals.fill(0.0);
+        cols.fill(g as i64);
+        vals[0] = 6.0;
+        cols[0] = g as i64;
+        let mut k = 1;
+        let mut push = |c: usize| {
+            vals[k] = -1.0;
+            cols[k] = c as i64;
+            k += 1;
+        };
+        if x > 0 {
+            push(g - 1);
+        }
+        if x + 1 < self.nx {
+            push(g + 1);
+        }
+        if y > 0 {
+            push(g - self.nx);
+        }
+        if y + 1 < self.ny {
+            push(g + self.nx);
+        }
+        if z > 0 {
+            push(g - self.plane());
+        }
+        if z + 1 < self.nz {
+            push(g + self.plane());
+        }
+        k
+    }
+
+    /// Global nonzero count (for cost models / reports).
+    pub fn nnz(&self) -> usize {
+        let mut vals = [0.0; K];
+        let mut cols = [0i64; K];
+        // Exact closed form would do; this is only called once per run.
+        (0..self.n()).map(|g| self.row(g, &mut vals, &mut cols)).sum()
+    }
+}
+
+/// A contiguous block of matrix rows in global-column ELL form — the unit of
+/// ownership, checkpointing and redistribution (the paper's "static object").
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatrixRows {
+    /// First global row.
+    pub start: usize,
+    /// Number of rows.
+    pub rows: usize,
+    /// `rows * K` values, K-strided.
+    pub vals: Vec<f64>,
+    /// `rows * K` global column indices, K-strided.
+    pub gcols: Vec<i64>,
+}
+
+impl MatrixRows {
+    /// Generate rows `[start, start+rows)` of the grid Laplacian.
+    pub fn generate(grid: &Grid3D, start: usize, rows: usize) -> Self {
+        let mut vals = vec![0.0; rows * K];
+        let mut gcols = vec![0i64; rows * K];
+        let mut v = [0.0; K];
+        let mut c = [0i64; K];
+        for r in 0..rows {
+            grid.row(start + r, &mut v, &mut c);
+            vals[r * K..(r + 1) * K].copy_from_slice(&v);
+            gcols[r * K..(r + 1) * K].copy_from_slice(&c);
+        }
+        MatrixRows { start, rows, vals, gcols }
+    }
+
+    /// Empty block (spares before adoption).
+    pub fn empty() -> Self {
+        MatrixRows { start: 0, rows: 0, vals: Vec::new(), gcols: Vec::new() }
+    }
+
+    /// Extract the sub-block for global rows `[from, to)` (must be owned).
+    pub fn slice(&self, from: usize, to: usize) -> MatrixRows {
+        assert!(from >= self.start && to <= self.start + self.rows && from <= to);
+        let a = (from - self.start) * K;
+        let b = (to - self.start) * K;
+        MatrixRows {
+            start: from,
+            rows: to - from,
+            vals: self.vals[a..b].to_vec(),
+            gcols: self.gcols[a..b].to_vec(),
+        }
+    }
+
+    /// Serialize for checkpoint shipping / redistribution messages.
+    pub fn to_blob(&self) -> Blob {
+        let mut i = Vec::with_capacity(2 + self.gcols.len());
+        i.push(self.start as i64);
+        i.push(self.rows as i64);
+        i.extend_from_slice(&self.gcols);
+        Blob { f: self.vals.clone(), i, wire: None }
+    }
+
+    pub fn from_blob(b: &Blob) -> Self {
+        let start = b.i[0] as usize;
+        let rows = b.i[1] as usize;
+        assert_eq!(b.f.len(), rows * K, "corrupt MatrixRows blob");
+        MatrixRows { start, rows, vals: b.f.clone(), gcols: b.i[2..].to_vec() }
+    }
+
+    /// Concatenate adjacent blocks (must be contiguous, ascending).
+    pub fn concat(blocks: Vec<MatrixRows>) -> MatrixRows {
+        assert!(!blocks.is_empty());
+        let mut it = blocks.into_iter();
+        let mut acc = it.next().unwrap();
+        for b in it {
+            assert_eq!(b.start, acc.start + acc.rows, "non-contiguous concat");
+            acc.rows += b.rows;
+            acc.vals.extend_from_slice(&b.vals);
+            acc.gcols.extend_from_slice(&b.gcols);
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interior_row_has_full_stencil() {
+        let g = Grid3D::cube(4);
+        let mut v = [0.0; K];
+        let mut c = [0i64; K];
+        let center = 1 + g.nx * (1 + g.ny); // (1,1,1): interior for 4^3
+        let (x, y, z) = g.coords(center);
+        assert!(x > 0 && x < 3 && y > 0 && y < 3 && z > 0 && z < 3);
+        let k = g.row(center, &mut v, &mut c);
+        assert_eq!(k, 7);
+        assert_eq!(v[0], 6.0);
+        assert_eq!(v[1..].iter().sum::<f64>(), -6.0);
+    }
+
+    #[test]
+    fn corner_row_has_three_neighbors() {
+        let g = Grid3D::cube(4);
+        let mut v = [0.0; K];
+        let mut c = [0i64; K];
+        let k = g.row(0, &mut v, &mut c);
+        assert_eq!(k, 4); // diag + 3 neighbors
+        // Padding is a safe self-reference.
+        for s in k..K {
+            assert_eq!(v[s], 0.0);
+            assert_eq!(c[s], 0);
+        }
+    }
+
+    #[test]
+    fn coords_roundtrip() {
+        let g = Grid3D { nx: 3, ny: 4, nz: 5 };
+        for i in 0..g.n() {
+            let (x, y, z) = g.coords(i);
+            assert_eq!(x + g.nx * (y + g.ny * z), i);
+        }
+    }
+
+    #[test]
+    fn matrix_rows_blob_roundtrip() {
+        let g = Grid3D::cube(5);
+        let m = MatrixRows::generate(&g, 10, 20);
+        let b = m.to_blob();
+        assert_eq!(MatrixRows::from_blob(&b), m);
+        assert_eq!(b.bytes(), 8 * (20 * K) + 8 * (2 + 20 * K));
+    }
+
+    #[test]
+    fn slice_and_concat_roundtrip() {
+        let g = Grid3D::cube(4);
+        let m = MatrixRows::generate(&g, 8, 24);
+        let a = m.slice(8, 16);
+        let b = m.slice(16, 32);
+        assert_eq!(MatrixRows::concat(vec![a, b]), m);
+    }
+
+    #[test]
+    fn nnz_matches_formula() {
+        let g = Grid3D::cube(4);
+        // 7n - 2*(boundary faces): each dimension loses 2*plane_of_that_dim.
+        let n = g.n();
+        let expect = 7 * n
+            - 2 * (g.ny * g.nz)  // x faces
+            - 2 * (g.nx * g.nz)
+            - 2 * (g.nx * g.ny);
+        assert_eq!(g.nnz(), expect);
+    }
+}

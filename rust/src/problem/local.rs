@@ -1,0 +1,310 @@
+//! Localized ELL block + halo exchange plan.
+//!
+//! Converts a rank's [`MatrixRows`] (global columns) into the layout the L1
+//! SpMV kernel consumes: local column indices into an `x_halo` vector laid
+//! out as `[owned rows | ghost rows (sorted by global id)]`.  The halo plan
+//! is computed *locally* using the stencil symmetry of the Laplacian
+//! (row i references col j  <=>  row j references col i), so no setup
+//! communication is needed — see DESIGN.md §6.
+
+use std::collections::BTreeSet;
+
+use crate::problem::laplacian::{MatrixRows, K};
+use crate::problem::partition::Partition;
+use crate::simmpi::{tags, Blob, Comm, Ctx, MpiResult};
+
+/// Per-neighbor halo exchange lists.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Neighbor {
+    /// Peer comm rank.
+    pub cr: usize,
+    /// My local row indices the peer needs (ascending global order).
+    pub send_rows: Vec<u32>,
+    /// Where the peer's values land in the ghost region: ghost indices
+    /// `[recv_start, recv_start + recv_count)` (ghosts sorted by gid keep
+    /// each owner's contribution contiguous).
+    pub recv_start: usize,
+    pub recv_count: usize,
+}
+
+/// A rank's localized matrix block plus its communication plan.
+#[derive(Debug, Clone)]
+pub struct EllBlock {
+    /// Device-cache identity (fresh per build; excluded from equality).
+    pub uid: u64,
+    /// First owned global row.
+    pub start: usize,
+    /// Owned row count.
+    pub rows: usize,
+    /// `rows * K` values (K-strided).
+    pub vals: Vec<f64>,
+    /// `rows * K` local columns into `x_halo` (i32, matching the kernel).
+    pub cols: Vec<i32>,
+    /// Ghost global ids, sorted ascending.
+    pub ghost_gids: Vec<usize>,
+    pub neighbors: Vec<Neighbor>,
+}
+
+impl EllBlock {
+    /// Localize `mat` under `part`, where this rank is comm rank `me`.
+    pub fn build(mat: &MatrixRows, part: &Partition, me: usize) -> EllBlock {
+        let range = part.range(me);
+        assert_eq!(mat.start, range.start);
+        assert_eq!(mat.rows, range.len());
+
+        // 1. Ghosts: referenced columns outside my range.
+        let mut ghosts: BTreeSet<usize> = BTreeSet::new();
+        for &g in &mat.gcols {
+            let g = g as usize;
+            if !range.contains(&g) {
+                ghosts.insert(g);
+            }
+        }
+        let ghost_gids: Vec<usize> = ghosts.into_iter().collect();
+
+        // 2. Localize columns.
+        let ghost_index = |g: usize| -> usize {
+            mat.rows + ghost_gids.binary_search(&g).expect("ghost must be collected")
+        };
+        let cols: Vec<i32> = mat
+            .gcols
+            .iter()
+            .map(|&g| {
+                let g = g as usize;
+                if range.contains(&g) {
+                    (g - range.start) as i32
+                } else {
+                    ghost_index(g) as i32
+                }
+            })
+            .collect();
+
+        // 3. Receive side: group ghosts by owner (contiguous in sorted order
+        //    because ownership ranges are contiguous ascending).
+        let mut neighbors: Vec<Neighbor> = Vec::new();
+        let mut i = 0;
+        while i < ghost_gids.len() {
+            let owner = part.owner(ghost_gids[i]);
+            let begin = i;
+            while i < ghost_gids.len() && part.owner(ghost_gids[i]) == owner {
+                i += 1;
+            }
+            neighbors.push(Neighbor {
+                cr: owner,
+                send_rows: Vec::new(),
+                recv_start: begin,
+                recv_count: i - begin,
+            });
+        }
+
+        // 4. Send side via stencil symmetry: peer q needs my row i iff row i
+        //    references a column in q's range.
+        for r in 0..mat.rows {
+            for k in 0..K {
+                let g = mat.gcols[r * K + k] as usize;
+                if !range.contains(&g) {
+                    let q = part.owner(g);
+                    let nb = match neighbors.iter_mut().find(|n| n.cr == q) {
+                        Some(nb) => nb,
+                        None => {
+                            neighbors.push(Neighbor {
+                                cr: q,
+                                send_rows: Vec::new(),
+                                recv_start: 0,
+                                recv_count: 0,
+                            });
+                            neighbors.last_mut().unwrap()
+                        }
+                    };
+                    if nb.send_rows.last() != Some(&(r as u32)) {
+                        nb.send_rows.push(r as u32);
+                    }
+                }
+            }
+        }
+        // Deduplicate (a row can reference a peer through several columns,
+        // encountered non-consecutively).
+        for nb in &mut neighbors {
+            nb.send_rows.sort_unstable();
+            nb.send_rows.dedup();
+        }
+        neighbors.sort_by_key(|n| n.cr);
+
+        EllBlock {
+            uid: crate::problem::local::next_block_uid(),
+            start: range.start,
+            rows: mat.rows,
+            vals: mat.vals.clone(),
+            cols,
+            ghost_gids,
+            neighbors,
+        }
+    }
+
+    pub fn n_ghost(&self) -> usize {
+        self.ghost_gids.len()
+    }
+
+    /// Length of the halo-extended x vector the SpMV kernel reads.
+    pub fn x_halo_len(&self) -> usize {
+        self.rows + self.n_ghost()
+    }
+
+    /// Local nonzero count (excludes zero padding slots).
+    pub fn nnz(&self) -> usize {
+        self.vals.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Bytes of halo traffic this rank sends per exchange.
+    pub fn halo_send_bytes(&self) -> usize {
+        8 * self.neighbors.iter().map(|n| n.send_rows.len()).sum::<usize>()
+    }
+}
+
+pub(crate) fn next_block_uid() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+impl PartialEq for EllBlock {
+    fn eq(&self, other: &Self) -> bool {
+        self.start == other.start
+            && self.rows == other.rows
+            && self.vals == other.vals
+            && self.cols == other.cols
+            && self.ghost_gids == other.ghost_gids
+            && self.neighbors == other.neighbors
+    }
+}
+
+/// One halo exchange: fill `x_halo[rows..]` with ghost values from the
+/// neighbors.  `x_halo[..rows]` must already hold the owned values.
+///
+/// All sends are posted before any receive (unbounded channels), matching
+/// the nonblocking-exchange pattern of the reference implementation.
+pub fn exchange_halo(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    blk: &EllBlock,
+    x_halo: &mut [f64],
+) -> MpiResult<()> {
+    debug_assert!(x_halo.len() >= blk.x_halo_len());
+    for nb in &blk.neighbors {
+        if nb.send_rows.is_empty() {
+            continue;
+        }
+        let payload: Vec<f64> = nb.send_rows.iter().map(|&r| x_halo[r as usize]).collect();
+        let blob = Blob::from_f64s(payload).scaled(ctx.world.net.params.data_scale);
+        comm.send(ctx, nb.cr, tags::HALO_BASE, blob)?;
+    }
+    for nb in &blk.neighbors {
+        if nb.recv_count == 0 {
+            continue;
+        }
+        let blob = comm.recv(ctx, nb.cr, tags::HALO_BASE)?;
+        assert_eq!(blob.f.len(), nb.recv_count, "halo size mismatch from {}", nb.cr);
+        let off = blk.rows + nb.recv_start;
+        x_halo[off..off + nb.recv_count].copy_from_slice(&blob.f);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::laplacian::Grid3D;
+
+    fn block(grid: &Grid3D, part: &Partition, r: usize) -> EllBlock {
+        let range = part.range(r);
+        let m = MatrixRows::generate(grid, range.start, range.len());
+        EllBlock::build(&m, part, r)
+    }
+
+    #[test]
+    fn ghosts_bounded_by_two_planes() {
+        let g = Grid3D::cube(8);
+        let part = Partition::balanced(g.n(), 4);
+        for r in 0..4 {
+            let b = block(&g, &part, r);
+            assert!(b.n_ghost() <= 2 * g.plane(), "rank {r}: {} ghosts", b.n_ghost());
+        }
+    }
+
+    #[test]
+    fn send_recv_lists_are_symmetric() {
+        // What rank a sends to rank b must equal (in size and global ids)
+        // what rank b expects from rank a.
+        let g = Grid3D { nx: 5, ny: 4, nz: 6 };
+        let part = Partition::balanced(g.n(), 5);
+        let blocks: Vec<EllBlock> = (0..5).map(|r| block(&g, &part, r)).collect();
+        for (a, ba) in blocks.iter().enumerate() {
+            for nb in &ba.neighbors {
+                let bb = &blocks[nb.cr];
+                let back = bb.neighbors.iter().find(|n| n.cr == a).expect("symmetric neighbor");
+                // a sends exactly what b receives from a.
+                assert_eq!(nb.send_rows.len(), back.recv_count, "{a}->{}", nb.cr);
+                // Global ids must line up with b's ghost slice for owner a.
+                let send_gids: Vec<usize> =
+                    nb.send_rows.iter().map(|&r| ba.start + r as usize).collect();
+                let recv_gids: Vec<usize> = bb.ghost_gids
+                    [back.recv_start..back.recv_start + back.recv_count]
+                    .to_vec();
+                assert_eq!(send_gids, recv_gids, "{a}->{}", nb.cr);
+            }
+        }
+    }
+
+    #[test]
+    fn local_cols_in_bounds() {
+        let g = Grid3D::cube(6);
+        let part = Partition::balanced(g.n(), 3);
+        for r in 0..3 {
+            let b = block(&g, &part, r);
+            let lim = b.x_halo_len() as i32;
+            assert!(b.cols.iter().all(|&c| c >= 0 && c < lim));
+        }
+    }
+
+    #[test]
+    fn localized_spmv_matches_global() {
+        // Serial check: assemble x globally, localize, SpMV per rank
+        // (ghosts filled directly), compare against a dense global SpMV.
+        let g = Grid3D { nx: 4, ny: 3, nz: 5 };
+        let n = g.n();
+        let part = Partition::balanced(n, 4);
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+
+        // Global reference.
+        let mut y_ref = vec![0.0; n];
+        let mut v = [0.0; K];
+        let mut c = [0i64; K];
+        for i in 0..n {
+            g.row(i, &mut v, &mut c);
+            y_ref[i] = (0..K).map(|k| v[k] * x[c[k] as usize]).sum();
+        }
+
+        for r in 0..4 {
+            let b = block(&g, &part, r);
+            let mut xh = vec![0.0; b.x_halo_len()];
+            xh[..b.rows].copy_from_slice(&x[b.start..b.start + b.rows]);
+            for (gi, &gid) in b.ghost_gids.iter().enumerate() {
+                xh[b.rows + gi] = x[gid];
+            }
+            for i in 0..b.rows {
+                let y: f64 =
+                    (0..K).map(|k| b.vals[i * K + k] * xh[b.cols[i * K + k] as usize]).sum();
+                assert!((y - y_ref[b.start + i]).abs() < 1e-12, "row {}", b.start + i);
+            }
+        }
+    }
+
+    #[test]
+    fn interior_block_has_two_neighbors() {
+        let g = Grid3D::cube(8);
+        let part = Partition::balanced(g.n(), 8);
+        let b = block(&g, &part, 4);
+        let crs: Vec<usize> = b.neighbors.iter().map(|n| n.cr).collect();
+        assert_eq!(crs, vec![3, 5]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Test-problem substrate: the paper's 3D-mesh sparse system, block-row
+//! partitioning, and per-rank localization (ELL + halo plan).
+
+pub mod laplacian;
+pub mod local;
+pub mod partition;
+
+pub use laplacian::{Grid3D, MatrixRows, K};
+pub use local::{exchange_halo, EllBlock, Neighbor};
+pub use partition::{destinations, sources, Partition, Source};

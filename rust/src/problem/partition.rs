@@ -1,0 +1,162 @@
+//! Block-row partitioning and redistribution planning.
+//!
+//! The paper distributes the matrix/vectors in contiguous block rows
+//! (Tpetra's default map).  Shrink recovery re-balances the same global row
+//! space over P-1 ranks; [`sources`] computes, for a new range, which old
+//! owners hold each piece — the plan both the data redistribution and its
+//! worst-case communication asymmetry (paper Fig. 3) fall out of.
+
+use std::ops::Range;
+
+
+
+/// Contiguous block-row partition of `n` rows over `p` ranks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    /// `p + 1` offsets; rank r owns `[offsets[r], offsets[r+1])`.
+    pub offsets: Vec<usize>,
+}
+
+impl Partition {
+    /// Balanced partition: first `n % p` ranks get one extra row.
+    pub fn balanced(n: usize, p: usize) -> Self {
+        assert!(p > 0 && n >= p, "need at least one row per rank (n={n}, p={p})");
+        let base = n / p;
+        let extra = n % p;
+        let mut offsets = Vec::with_capacity(p + 1);
+        let mut acc = 0;
+        offsets.push(0);
+        for r in 0..p {
+            acc += base + usize::from(r < extra);
+            offsets.push(acc);
+        }
+        Partition { offsets }
+    }
+
+    pub fn p(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn n(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    pub fn range(&self, r: usize) -> Range<usize> {
+        self.offsets[r]..self.offsets[r + 1]
+    }
+
+    pub fn rows(&self, r: usize) -> usize {
+        self.offsets[r + 1] - self.offsets[r]
+    }
+
+    /// Owner of a global row (binary search).
+    pub fn owner(&self, row: usize) -> usize {
+        debug_assert!(row < self.n());
+        match self.offsets.binary_search(&row) {
+            Ok(i) if i == self.p() => i - 1,
+            Ok(i) => i,
+            Err(i) => i - 1,
+        }
+    }
+}
+
+/// One piece of a redistribution plan: fetch global rows `rows` from old
+/// owner `owner`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Source {
+    pub owner: usize,
+    pub rows: Range<usize>,
+}
+
+/// For a needed new range, the old owners covering it (ascending, disjoint,
+/// exactly covering `need`).
+pub fn sources(old: &Partition, need: Range<usize>) -> Vec<Source> {
+    let mut out = Vec::new();
+    if need.is_empty() {
+        return out;
+    }
+    let mut row = need.start;
+    while row < need.end {
+        let owner = old.owner(row);
+        let or = old.range(owner);
+        let end = or.end.min(need.end);
+        out.push(Source { owner, rows: row..end });
+        row = end;
+    }
+    out
+}
+
+/// The inverse view: for my old range, which new owners need pieces of it.
+pub fn destinations(new: &Partition, have: Range<usize>) -> Vec<Source> {
+    sources(new, have)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_covers_exactly() {
+        let p = Partition::balanced(103, 8);
+        assert_eq!(p.p(), 8);
+        assert_eq!(p.n(), 103);
+        let sizes: Vec<usize> = (0..8).map(|r| p.rows(r)).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 103);
+        assert!(sizes.iter().all(|&s| s == 12 || s == 13));
+        // Monotone.
+        assert!(p.offsets.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn owner_is_consistent_with_range() {
+        let p = Partition::balanced(100, 7);
+        for r in 0..7 {
+            for row in p.range(r) {
+                assert_eq!(p.owner(row), r, "row {row}");
+            }
+        }
+    }
+
+    #[test]
+    fn sources_cover_need_exactly() {
+        let old = Partition::balanced(100, 5); // 20 each
+        let srcs = sources(&old, 15..63);
+        assert_eq!(
+            srcs,
+            vec![
+                Source { owner: 0, rows: 15..20 },
+                Source { owner: 1, rows: 20..40 },
+                Source { owner: 2, rows: 40..60 },
+                Source { owner: 3, rows: 60..63 },
+            ]
+        );
+        // Exact cover.
+        let total: usize = srcs.iter().map(|s| s.rows.len()).sum();
+        assert_eq!(total, 48);
+    }
+
+    #[test]
+    fn shrink_repartition_high_rank_failure_moves_less_for_high_survivors() {
+        // Paper Fig. 3: when a high rank fails, low ranks must shift data
+        // from neighbors while the surviving high ranks reuse local data.
+        let n = 1000;
+        let old = Partition::balanced(n, 10);
+        let new = Partition::balanced(n, 9);
+        // Low new rank: needs data crossing old boundaries.
+        let low = sources(&old, new.range(1));
+        assert!(low.len() >= 2, "low rank pulls from multiple old owners");
+        // For failure of the LAST rank, every new range starts within one
+        // old range of its position; survivors own a prefix of what they
+        // need (non-zero locality).
+        for r in 0..9 {
+            let srcs = sources(&old, new.range(r));
+            assert!(srcs.iter().any(|s| s.owner == r), "rank {r} keeps some local rows");
+        }
+    }
+
+    #[test]
+    fn empty_need_is_empty_plan() {
+        let old = Partition::balanced(10, 2);
+        assert!(sources(&old, 3..3).is_empty());
+    }
+}

@@ -1,0 +1,83 @@
+//! Analytic baseline: classic global checkpoint/restart through the parallel
+//! file system (paper §I/§III's "increasingly inefficient strategy").
+//!
+//! The paper motivates in-situ recovery by contrast with global C/R; this
+//! module provides the cost model used by the ablation bench to quantify
+//! that contrast on the same workloads: Young's optimal interval, the
+//! per-checkpoint PFS write time (aggregate bandwidth shared by all ranks),
+//! and the expected waste per failure (restart latency + state re-read +
+//! half-interval recomputation).
+
+/// Parameters of the global C/R baseline.
+#[derive(Debug, Clone)]
+pub struct GlobalCrModel {
+    /// Aggregate parallel-file-system bandwidth shared by the job (B/s).
+    pub pfs_bandwidth: f64,
+    /// Fixed job tear-down + reschedule + relaunch latency (s).
+    pub restart_latency: f64,
+    /// System MTTF assumed when choosing the checkpoint interval (s).
+    pub mttf: f64,
+}
+
+impl Default for GlobalCrModel {
+    fn default() -> Self {
+        GlobalCrModel {
+            // Shared PFS of the paper era: ~1 GB/s aggregate for a job slice.
+            pfs_bandwidth: 1.0e9,
+            restart_latency: 30.0,
+            mttf: 24.0 * 3600.0,
+        }
+    }
+}
+
+impl GlobalCrModel {
+    /// Seconds to write one global checkpoint of `bytes` total state.
+    pub fn checkpoint_cost(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.pfs_bandwidth
+    }
+
+    /// Young's optimal checkpoint interval: sqrt(2 * C * MTTF).
+    pub fn young_interval(&self, bytes: usize) -> f64 {
+        (2.0 * self.checkpoint_cost(bytes) * self.mttf).sqrt()
+    }
+
+    /// Expected waste per failure: relaunch + re-read + half an interval of
+    /// recomputation (uniform failure position assumption).
+    pub fn waste_per_failure(&self, bytes: usize) -> f64 {
+        self.restart_latency + self.checkpoint_cost(bytes) + 0.5 * self.young_interval(bytes)
+    }
+
+    /// Steady-state overhead fraction of global C/R during failure-free
+    /// operation (checkpoint time per interval).
+    pub fn steady_overhead_fraction(&self, bytes: usize) -> f64 {
+        let c = self.checkpoint_cost(bytes);
+        c / (c + self.young_interval(bytes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn young_interval_matches_formula() {
+        let m = GlobalCrModel { pfs_bandwidth: 1e9, restart_latency: 10.0, mttf: 3600.0 };
+        let bytes = 2_000_000_000; // 2 GB -> C = 2 s
+        let c = m.checkpoint_cost(bytes);
+        assert!((c - 2.0).abs() < 1e-12);
+        assert!((m.young_interval(bytes) - (2.0 * 2.0 * 3600.0f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn waste_grows_with_state_size() {
+        let m = GlobalCrModel::default();
+        assert!(m.waste_per_failure(10_000_000_000) > m.waste_per_failure(1_000_000_000));
+    }
+
+    #[test]
+    fn steady_overhead_below_one() {
+        let m = GlobalCrModel::default();
+        let f = m.steady_overhead_fraction(100_000_000_000);
+        assert!(f > 0.0 && f < 1.0);
+    }
+}

@@ -1,0 +1,89 @@
+//! In-situ recovery strategies (the paper's contribution): *shrink* and
+//! *substitute*, plus the recovery driver that turns a ULFM failure
+//! notification into a repaired communicator and restored state.
+
+pub mod global_restart;
+pub mod plan;
+pub mod shrink;
+pub mod substitute;
+
+use crate::checkpoint::CkptStore;
+use crate::metrics::Phase;
+use crate::netsim::ComputeModel;
+use crate::simmpi::{ulfm, Comm, Ctx, MpiResult};
+use crate::solver::state::SolverState;
+
+/// Which failure-handling strategy a run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Baseline: no checkpointing, no recovery (and no failures injected) —
+    /// the paper's "no protection" normalization.
+    NoProtection,
+    /// Continue with the survivors; redistribute the workload (§IV-B).
+    Shrink,
+    /// Restore the original configuration with warm spares (§IV-A).
+    Substitute,
+    /// Substitute with *cold* spares: processes spawned at failure time
+    /// (§IV-A: "processes spawned at runtime are referred to as cold
+    /// spares... spawning processes at runtime has more overhead").  Same
+    /// recovery protocol as warm substitution plus the spawn latency.
+    SubstituteCold,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Option<Strategy> {
+        match s {
+            "none" | "no-protection" => Some(Strategy::NoProtection),
+            "shrink" => Some(Strategy::Shrink),
+            "substitute" | "spare" => Some(Strategy::Substitute),
+            "substitute-cold" | "cold" => Some(Strategy::SubstituteCold),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::NoProtection => "no-protection",
+            Strategy::Shrink => "shrink",
+            Strategy::Substitute => "substitute",
+            Strategy::SubstituteCold => "substitute-cold",
+        }
+    }
+}
+
+/// Survivor-side failure handling: revoke, shrink, then strategy-specific
+/// state recovery.  On success `comm` is the repaired communicator and
+/// `state`/`store` are consistent at the last committed checkpoint.
+pub fn handle_failure(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    state: &mut SolverState,
+    store: &mut CkptStore,
+    strategy: Strategy,
+    buddy_k: usize,
+    host: &ComputeModel,
+) -> MpiResult<()> {
+    // ULFM repair sequence (paper §IV): propagate the error so every
+    // survivor unblocks, then build a pristine communicator.
+    let prev = ctx.set_phase(Phase::Reconfig);
+    ulfm::revoke(ctx, comm);
+    let shrunk = ulfm::shrink(ctx, comm)?;
+    ctx.set_phase(prev);
+
+    let old = comm.clone();
+    match strategy {
+        Strategy::Shrink => {
+            let mut new_comm = shrunk;
+            shrink::recover(ctx, &old, &mut new_comm, state, store, buddy_k, host)?;
+            *comm = new_comm;
+        }
+        Strategy::Substitute | Strategy::SubstituteCold => {
+            *comm =
+                substitute::recover_survivor(ctx, &old, shrunk, state, store, buddy_k, host)?;
+        }
+        Strategy::NoProtection => {
+            unreachable!("no-protection runs never inject failures")
+        }
+    }
+    Ok(())
+}

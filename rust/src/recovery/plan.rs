@@ -1,0 +1,207 @@
+//! Redistribution planning: who ships which global rows to whom after a
+//! failure, and who serves data on behalf of dead ranks (their buddies).
+//!
+//! Every rank derives the *same* deterministic segment list locally (old and
+//! new partitions, communicator membership, the registry's dead set and the
+//! buddy ring are all globally known), so no negotiation round is needed —
+//! only the data transfers themselves, which is what the paper measures as
+//! state-recovery cost.
+
+use std::ops::Range;
+
+use crate::checkpoint::buddy_of_stride;
+use crate::problem::{sources, Partition};
+use crate::simmpi::WorldRank;
+
+/// One planned transfer of global rows.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Segment {
+    /// Stable index (tags derive from it).
+    pub idx: usize,
+    /// Global row range.
+    pub rows: Range<usize>,
+    /// Original owner (keys the remote checkpoint store).
+    pub owner_wr: WorldRank,
+    /// Who serves the bytes: the owner if alive, else its first live buddy.
+    pub server_wr: WorldRank,
+    /// New owner (destination).
+    pub dest_wr: WorldRank,
+}
+
+/// Pick the serving rank for data of old comm rank `owner_cr`: the owner if
+/// alive, otherwise the first alive buddy on the ring (the paper's redundant
+/// in-memory copies).
+pub fn server_for(
+    owner_cr: usize,
+    old_members: &[WorldRank],
+    alive: &dyn Fn(WorldRank) -> bool,
+    buddy_k: usize,
+    stride: usize,
+) -> Option<WorldRank> {
+    let n = old_members.len();
+    let owner_wr = old_members[owner_cr];
+    if alive(owner_wr) {
+        return Some(owner_wr);
+    }
+    (1..=buddy_k.min(n - 1))
+        .map(|d| old_members[buddy_of_stride(owner_cr, d, n, stride)])
+        .find(|&wr| alive(wr))
+}
+
+/// Full deterministic segment list for a repartition
+/// `old_part`/`old_members` -> `new_part`/`new_members`.
+pub fn transfer_segments(
+    old_part: &Partition,
+    old_members: &[WorldRank],
+    new_part: &Partition,
+    new_members: &[WorldRank],
+    alive: &dyn Fn(WorldRank) -> bool,
+    buddy_k: usize,
+    stride: usize,
+) -> Vec<Segment> {
+    assert_eq!(old_part.n(), new_part.n(), "row space must be preserved");
+    let mut segs = Vec::new();
+    let mut idx = 0;
+    for (new_cr, &dest_wr) in new_members.iter().enumerate() {
+        for src in sources(old_part, new_part.range(new_cr)) {
+            let server_wr = server_for(src.owner, old_members, alive, buddy_k, stride)
+                .expect("no live holder of a required segment — unrecoverable");
+            segs.push(Segment {
+                idx,
+                rows: src.rows,
+                owner_wr: old_members[src.owner],
+                server_wr,
+                dest_wr,
+            });
+            idx += 1;
+        }
+    }
+    segs
+}
+
+/// This rank's view of a segment list.
+#[derive(Debug, Default)]
+pub struct MyTransfers {
+    /// Segments I must send (server == me, dest != me).
+    pub outgoing: Vec<Segment>,
+    /// Segments I will receive (dest == me, server != me).
+    pub incoming: Vec<Segment>,
+    /// Segments I satisfy locally (dest == me, server == me).
+    pub local: Vec<Segment>,
+}
+
+pub fn my_transfers(segs: &[Segment], me: WorldRank) -> MyTransfers {
+    let mut t = MyTransfers::default();
+    for s in segs {
+        if s.dest_wr == me && s.server_wr == me {
+            t.local.push(s.clone());
+        } else if s.dest_wr == me {
+            t.incoming.push(s.clone());
+        } else if s.server_wr == me {
+            t.outgoing.push(s.clone());
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn alive_except(dead: Vec<WorldRank>) -> impl Fn(WorldRank) -> bool {
+        move |r| !dead.contains(&r)
+    }
+
+    #[test]
+    fn server_prefers_owner_then_buddy() {
+        let members = vec![10, 11, 12, 13];
+        let alive = alive_except(vec![12]);
+        assert_eq!(server_for(1, &members, &alive, 1, 1), Some(11));
+        assert_eq!(server_for(2, &members, &alive, 1, 1), Some(13)); // buddy of 2 is 3
+    }
+
+    #[test]
+    fn server_none_when_owner_and_buddies_dead() {
+        let members = vec![10, 11, 12, 13];
+        let alive = alive_except(vec![12, 13]);
+        assert_eq!(server_for(2, &members, &alive, 1, 1), None);
+        // With two buddies the next one steps in.
+        assert_eq!(server_for(2, &members, &alive, 2, 1), Some(10));
+    }
+
+    #[test]
+    fn segments_cover_new_partition_exactly() {
+        let n = 100;
+        let old = Partition::balanced(n, 5);
+        let new = Partition::balanced(n, 4);
+        let old_members: Vec<usize> = (0..5).collect();
+        let new_members = vec![0, 1, 2, 3];
+        let alive = alive_except(vec![4]);
+        let segs = transfer_segments(&old, &old_members, &new, &new_members, &alive, 1, 1);
+        // Coverage: every global row exactly once.
+        let mut seen = vec![false; n];
+        for s in &segs {
+            for r in s.rows.clone() {
+                assert!(!seen[r], "row {r} covered twice");
+                seen[r] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+        // Dead rank 4's rows are served by its buddy (old cr 0 — ring wrap).
+        for s in segs.iter().filter(|s| s.owner_wr == 4) {
+            assert_eq!(s.server_wr, 0);
+        }
+    }
+
+    #[test]
+    fn high_rank_failure_causes_more_transfers_than_low_rank() {
+        // Paper Fig. 3 worst case: redistribution traffic (bytes moved
+        // between distinct ranks) is larger when a high rank fails.
+        let n = 10_000;
+        let old = Partition::balanced(n, 10);
+        let moved = |dead: usize| -> usize {
+            let old_members: Vec<usize> = (0..10).collect();
+            let new_members: Vec<usize> = (0..10).filter(|&r| r != dead).collect();
+            let new = Partition::balanced(n, 9);
+            let alive = move |r: usize| r != dead;
+            transfer_segments(&old, &old_members, &new, &new_members, &alive, 1, 1)
+                .iter()
+                .filter(|s| s.server_wr != s.dest_wr)
+                .map(|s| s.rows.len())
+                .sum()
+        };
+        assert!(
+            moved(9) > moved(0),
+            "high-rank failure should move more rows: {} vs {}",
+            moved(9),
+            moved(0)
+        );
+    }
+
+    #[test]
+    fn my_transfers_partitions_segments() {
+        let n = 100;
+        let old = Partition::balanced(n, 4);
+        let new = Partition::balanced(n, 3);
+        let old_members = vec![0, 1, 2, 3];
+        let new_members = vec![0, 1, 2];
+        let alive = alive_except(vec![3]);
+        let segs = transfer_segments(&old, &old_members, &new, &new_members, &alive, 1, 1);
+        let total: usize = (0..4)
+            .map(|me| {
+                let t = my_transfers(&segs, me);
+                t.incoming.len() + t.local.len()
+            })
+            .sum();
+        assert_eq!(total, segs.len());
+    }
+
+    #[test]
+    fn identity_repartition_is_all_local() {
+        let old = Partition::balanced(64, 4);
+        let members = vec![0, 1, 2, 3];
+        let alive = |_r: usize| true;
+        let segs = transfer_segments(&old, &members, &old, &members, &alive, 1, 1);
+        assert!(segs.iter().all(|s| s.server_wr == s.dest_wr));
+    }
+}

@@ -1,0 +1,230 @@
+//! Shrink recovery: graceful degradation with survivors (paper §IV-B).
+//!
+//! After `MPI_Comm_shrink`, the global row space is re-balanced over the
+//! P-1 survivors; matrix rows, rhs and the checkpointed solution vector are
+//! redistributed using local data, survivor checkpoints and buddy copies of
+//! the failed rank's blocks; finally every in-memory checkpoint is
+//! re-established under the new layout ("this adds on to the cost of state
+//! recovery").
+
+use crate::checkpoint::{agree_restore_version, obj, CkptStore, ObjId, Version};
+use crate::metrics::Phase;
+use crate::netsim::ComputeModel;
+use crate::problem::{MatrixRows, Partition, K};
+use crate::recovery::plan::{my_transfers, transfer_segments, Segment};
+use crate::simmpi::{tags, Blob, Comm, Ctx, MpiResult, WorldRank};
+use crate::solver::state::SolverState;
+
+/// Objects that move during redistribution (BASIS rows are matrix-shaped:
+/// several distributed vectors concatenated).
+const REDIST_OBJS: [ObjId; 4] = [obj::MAT, obj::RHS, obj::X, obj::BASIS];
+
+/// Serve one segment of `id` from this rank's store (its own data or a buddy
+/// copy of the owner's), at the newest version <= `v`.
+fn slice_for(
+    store: &CkptStore,
+    me: WorldRank,
+    seg: &Segment,
+    id: ObjId,
+    v: Version,
+    old_part: &Partition,
+    owner_cr: usize,
+) -> Blob {
+    let blob = if seg.owner_wr == me {
+        store.get_local_at_most(id, v).expect("own checkpoint missing").1
+    } else {
+        store
+            .get_remote_at_most(seg.owner_wr, id, v)
+            .expect("buddy checkpoint missing")
+            .1
+    };
+    let owner_range = old_part.range(owner_cr);
+    let a = seg.rows.start - owner_range.start;
+    let b = seg.rows.end - owner_range.start;
+    match id {
+        obj::MAT => MatrixRows::from_blob(blob).slice(seg.rows.start, seg.rows.end).to_blob(),
+        obj::BASIS => {
+            // [n_vectors x owner_rows] row-major; slice every vector.
+            let nvec = (blob.i[0] + blob.i[1]) as usize;
+            let or = owner_range.len();
+            debug_assert_eq!(blob.f.len(), nvec * or);
+            let mut f = Vec::with_capacity(nvec * (b - a));
+            for j in 0..nvec {
+                f.extend_from_slice(&blob.f[j * or + a..j * or + b]);
+            }
+            Blob { f, i: blob.i.clone(), wire: None }
+        }
+        _ => Blob::from_f64s(blob.f[a..b].to_vec()),
+    }
+}
+
+fn xfer_tag(id: ObjId, seg_idx: usize) -> u32 {
+    tags::RECOVER_BASE + id * 16384 + seg_idx as u32
+}
+
+/// Execute shrink recovery.  `old_comm` is the communicator the failure
+/// happened in; `new_comm` the shrunken one.  On return, `state` is rolled
+/// back to the last globally-committed checkpoint, redistributed over the
+/// survivors, and all checkpoints are re-established.
+pub fn recover(
+    ctx: &mut Ctx,
+    old_comm: &Comm,
+    new_comm: &mut Comm,
+    state: &mut SolverState,
+    store: &mut CkptStore,
+    buddy_k: usize,
+    host: &ComputeModel,
+) -> MpiResult<()> {
+    let prev = ctx.set_phase(Phase::Recovery);
+    let result = recover_inner(ctx, old_comm, new_comm, state, store, buddy_k, host);
+    ctx.set_phase(prev);
+    result
+}
+
+fn recover_inner(
+    ctx: &mut Ctx,
+    old_comm: &Comm,
+    new_comm: &mut Comm,
+    state: &mut SolverState,
+    store: &mut CkptStore,
+    buddy_k: usize,
+    host: &ComputeModel,
+) -> MpiResult<()> {
+    let me = ctx.rank;
+    // 1. Agree on the restore version (newest globally committed).
+    let v = agree_restore_version(ctx, new_comm, store)?;
+
+    // 2. Roll back iteration + least-squares state from my own checkpoint.
+    let iter_blob = store
+        .get_local_at_most(obj::ITER, v)
+        .expect("ITER checkpoint missing")
+        .1
+        .clone();
+    state.restore_iter(&iter_blob);
+
+    // 3. Plan the repartition over survivors.
+    let old_part = state.part.clone();
+    let new_part = Partition::balanced(state.grid.n(), new_comm.size());
+    let world = ctx.world.clone();
+    let alive = move |r: WorldRank| world.is_alive(r);
+    let segs = transfer_segments(
+        &old_part,
+        &old_comm.members,
+        &new_part,
+        &new_comm.members,
+        &alive,
+        buddy_k,
+        crate::checkpoint::effective_stride(&ctx.world.net.params, old_comm.size()),
+    );
+    let mine = my_transfers(&segs, me);
+
+    // Map world rank -> old comm rank for owner lookup.
+    let owner_cr = |wr: WorldRank| {
+        old_comm
+            .rank_of_world(wr)
+            .expect("owner must be an old member")
+    };
+
+    // 4. Ship my outgoing segments (all objects), then receive incoming.
+    for id in REDIST_OBJS {
+        for seg in &mine.outgoing {
+            let blob = slice_for(store, me, seg, id, v, &old_part, owner_cr(seg.owner_wr))
+                .scaled(ctx.world.net.params.data_scale);
+            let dest_cr = new_comm
+                .rank_of_world(seg.dest_wr)
+                .expect("destination must be a survivor");
+            new_comm.send(ctx, dest_cr, xfer_tag(id, seg.idx), blob)?;
+        }
+    }
+
+    // Assemble per object: (global start, blob) pieces sorted by row start.
+    let my_range = new_part.range(new_comm.rank);
+    let mut pieces: Vec<(ObjId, usize, Blob)> = Vec::new();
+    for id in REDIST_OBJS {
+        for seg in &mine.local {
+            pieces.push((
+                id,
+                seg.rows.start,
+                slice_for(store, me, seg, id, v, &old_part, owner_cr(seg.owner_wr)),
+            ));
+        }
+        for seg in &mine.incoming {
+            let src_cr = new_comm
+                .rank_of_world(seg.server_wr)
+                .expect("server must be a survivor");
+            let blob = new_comm.recv(ctx, src_cr, xfer_tag(id, seg.idx))?;
+            pieces.push((id, seg.rows.start, blob));
+        }
+    }
+
+    // 5. Rebuild state under the new partition.
+    let assemble_f64 = |id: ObjId, pieces: &[(ObjId, usize, Blob)]| -> Vec<f64> {
+        let mut parts: Vec<(usize, &Blob)> = pieces
+            .iter()
+            .filter(|(pid, _, _)| *pid == id)
+            .map(|(_, s, b)| (*s, b))
+            .collect();
+        parts.sort_by_key(|(s, _)| *s);
+        let mut out = Vec::with_capacity(my_range.len());
+        for (_, b) in parts {
+            out.extend_from_slice(&b.f);
+        }
+        assert_eq!(out.len(), my_range.len(), "obj {id} coverage mismatch");
+        out
+    };
+    let mut mats: Vec<(usize, MatrixRows)> = pieces
+        .iter()
+        .filter(|(pid, _, _)| *pid == obj::MAT)
+        .map(|(_, s, b)| (*s, MatrixRows::from_blob(b)))
+        .collect();
+    mats.sort_by_key(|(s, _)| *s);
+    let mat = MatrixRows::concat(mats.into_iter().map(|(_, m)| m).collect());
+    assert_eq!(mat.start, my_range.start);
+    assert_eq!(mat.rows, my_range.len());
+
+    state.b = assemble_f64(obj::RHS, &pieces);
+    state.x = assemble_f64(obj::X, &pieces);
+    state.mat = mat;
+    state.part = new_part;
+    state.relocalize(new_comm.rank);
+
+    // Reassemble the Krylov bases under the new distribution: each basis
+    // vector is a distributed vector, redistributed like x.
+    {
+        let mut parts: Vec<(usize, &Blob)> = pieces
+            .iter()
+            .filter(|(pid, _, _)| *pid == obj::BASIS)
+            .map(|(_, s, b)| (*s, b))
+            .collect();
+        parts.sort_by_key(|(s, _)| *s);
+        let nv = parts.first().map(|(_, b)| b.i.clone()).unwrap_or(vec![0, 0]);
+        let nvec = (nv[0] + nv[1]) as usize;
+        let rnew = my_range.len();
+        let mut f = vec![0.0; nvec * rnew];
+        let mut col = 0usize;
+        for (_, b) in &parts {
+            debug_assert_eq!(b.i, nv, "inconsistent basis shape across segments");
+            let seg_len = if nvec == 0 { 0 } else { b.f.len() / nvec };
+            for j in 0..nvec {
+                f[j * rnew + col..j * rnew + col + seg_len]
+                    .copy_from_slice(&b.f[j * seg_len..(j + 1) * seg_len]);
+            }
+            col += seg_len;
+        }
+        debug_assert!(nvec == 0 || col == rnew, "basis coverage mismatch");
+        state.restore_basis(&Blob { f, i: nv, wire: None });
+    }
+
+    // Redistribution/localization CPU cost: touch every local slot once.
+    ctx.advance(host.cost((state.rows() * K) as f64, (24 * state.rows() * K) as f64));
+
+    // 6. Forget the dead; re-establish every checkpoint under the new layout
+    //    (charged to Recovery — see checkpoint()).
+    for &wr in &old_comm.members {
+        if !ctx.world.is_alive(wr) {
+            store.drop_owner(wr);
+        }
+    }
+    state.establish_checkpoints(ctx, new_comm, store, v + 1, buddy_k)?;
+    Ok(())
+}

@@ -1,0 +1,216 @@
+//! Substitute recovery: restore the original configuration with warm spares
+//! (paper §IV-A).
+//!
+//! Survivors keep their data distribution and restore the solution vector
+//! from *local* checkpoint copies; the spare is stitched into the failed
+//! rank's comm-rank slot (Figure 1), fetches the failed rank's static and
+//! dynamic state from the failed rank's buddy, and synchronizes its local
+//! scalars from a survivor.  Checkpointing then continues over the restored
+//! configuration — with the spare on a distant node, which is exactly where
+//! the paper's post-substitution checkpoint overhead comes from (Figure 2).
+
+use crate::checkpoint::{agree_restore_version, buddy_of_stride, effective_stride, obj, CkptStore, Version};
+use crate::metrics::Phase;
+use crate::netsim::ComputeModel;
+use crate::problem::{Grid3D, MatrixRows, Partition, K};
+use crate::simmpi::{tags, ulfm, Blob, Comm, Ctx, MpiError, MpiResult, WorldRank};
+use crate::solver::state::{IterScalars, SolverState};
+use crate::backend::DenseBasis;
+
+/// Tag namespace for spare state transfer.
+fn spare_tag(id: u32) -> u32 {
+    tags::RECOVER_BASE + (1 << 18) + id
+}
+
+/// Deterministic spare assignment: failed old-comm slots (ascending) get the
+/// lowest-world-rank alive spares not already serving in `old_comm`.
+pub fn assign_spares(
+    ctx: &Ctx,
+    old_comm: &Comm,
+) -> MpiResult<Vec<(usize, WorldRank)>> {
+    let world = &ctx.world;
+    let failed: Vec<usize> = (0..old_comm.size())
+        .filter(|&cr| !world.is_alive(old_comm.members[cr]))
+        .collect();
+    let in_use: Vec<WorldRank> = old_comm.members.clone();
+    let mut avail = (world.n_app..world.size)
+        .filter(|wr| world.is_alive(*wr) && !in_use.contains(wr));
+    let mut out = Vec::with_capacity(failed.len());
+    for cr in failed {
+        match avail.next() {
+            Some(wr) => out.push((cr, wr)),
+            None => return Err(MpiError::ProcFailed(vec![old_comm.members[cr]])),
+        }
+    }
+    Ok(out)
+}
+
+/// Survivor side.  `shrunk` is the post-shrink communicator; returns the
+/// stitched full-size communicator with `state` restored and all
+/// checkpoints re-established.
+pub fn recover_survivor(
+    ctx: &mut Ctx,
+    old_comm: &Comm,
+    mut shrunk: Comm,
+    state: &mut SolverState,
+    store: &mut CkptStore,
+    buddy_k: usize,
+    host: &ComputeModel,
+) -> MpiResult<Comm> {
+    // --- Reconfiguration: agree on the restore version over the survivors,
+    // then stitch the spares in (paper: "the spare process can be stitched
+    // in" once pristine communicators exist).
+    let v = {
+        let prev = ctx.set_phase(Phase::Recovery);
+        let v = agree_restore_version(ctx, &mut shrunk, store)?;
+        ctx.set_phase(prev);
+        v
+    };
+    let assignment = assign_spares(ctx, old_comm)?;
+    let prev = ctx.set_phase(Phase::Reconfig);
+    let mut stitched = ulfm::stitch_spares(ctx, old_comm, &shrunk, &assignment)?;
+    ctx.set_phase(prev);
+
+    let prev = ctx.set_phase(Phase::Recovery);
+    let result = survivor_state_recovery(
+        ctx, old_comm, &mut stitched, &assignment, state, store, v, buddy_k, host,
+    );
+    ctx.set_phase(prev);
+    result?;
+    Ok(stitched)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn survivor_state_recovery(
+    ctx: &mut Ctx,
+    old_comm: &Comm,
+    stitched: &mut Comm,
+    assignment: &[(usize, WorldRank)],
+    state: &mut SolverState,
+    store: &mut CkptStore,
+    v: Version,
+    buddy_k: usize,
+    host: &ComputeModel,
+) -> MpiResult<()> {
+    let n = old_comm.size();
+    let stride = effective_stride(&ctx.world.net.params, n);
+    // 1. Survivors restore dynamic state from their LOCAL copies (Fig. 1).
+    let iter_blob = store
+        .get_local_at_most(obj::ITER, v)
+        .expect("ITER checkpoint missing")
+        .1
+        .clone();
+    state.restore_iter(&iter_blob);
+    let x_blob = store.get_local_at_most(obj::X, v).expect("X checkpoint missing").1.clone();
+    state.x = x_blob.f;
+    let basis_blob =
+        store.get_local_at_most(obj::BASIS, v).expect("BASIS checkpoint missing").1.clone();
+    state.restore_basis(&basis_blob);
+    ctx.advance(host.cost(state.rows() as f64, 16.0 * state.rows() as f64));
+
+    // 2. If I am the buddy of a failed rank, serve its state to the spare.
+    for &(failed_cr, spare_wr) in assignment {
+        for d in 1..=buddy_k.min(n - 1) {
+            if buddy_of_stride(failed_cr, d, n, stride) == old_comm.rank {
+                let owner_wr = old_comm.members[failed_cr];
+                let spare_cr = stitched
+                    .rank_of_world(spare_wr)
+                    .expect("spare must be stitched");
+                for id in [obj::MAT, obj::RHS, obj::X, obj::BASIS, obj::ITER] {
+                    let blob = store
+                        .get_remote_at_most(owner_wr, id, v)
+                        .unwrap_or_else(|| panic!("buddy copy of obj {id} missing"))
+                        .1
+                        .clone();
+                    // Stored blobs already carry their scaled wire size.
+                    stitched.send(ctx, spare_cr, spare_tag(id), blob)?;
+                }
+                // Control blob: restore version + recompute high-water mark
+                // ("use any surviving process to populate the local state").
+                let ctl = Blob::from_i64s(vec![v, state.hwm_iters as i64]);
+                stitched.send(ctx, spare_cr, spare_tag(99), ctl)?;
+                break;
+            }
+        }
+    }
+
+    // 3. Forget the dead; re-establish checkpoints over the restored
+    //    configuration (spare included — its distant node makes this and all
+    //    future checkpoints costlier, the paper's Figure 2/5 effect).
+    for &(failed_cr, _) in assignment {
+        store.drop_owner(old_comm.members[failed_cr]);
+    }
+    state.establish_checkpoints(ctx, stitched, store, v + 1, buddy_k)?;
+    Ok(())
+}
+
+/// Spare side: called after `ulfm::join_as_spare` produced `comm` (this
+/// rank already holds comm rank = the failed slot).  Builds the full solver
+/// state from the buddy's copies and joins checkpoint re-establishment.
+pub fn recover_spare(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    grid: Grid3D,
+    m_outer: usize,
+    store: &mut CkptStore,
+    buddy_k: usize,
+    host: &ComputeModel,
+) -> MpiResult<SolverState> {
+    let prev = ctx.set_phase(Phase::Recovery);
+    let result = recover_spare_inner(ctx, comm, grid, m_outer, store, buddy_k, host);
+    ctx.set_phase(prev);
+    result
+}
+
+fn recover_spare_inner(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    grid: Grid3D,
+    m_outer: usize,
+    store: &mut CkptStore,
+    buddy_k: usize,
+    host: &ComputeModel,
+) -> MpiResult<SolverState> {
+    let n = comm.size();
+    let me = comm.rank;
+    // The serving buddy occupies the failed rank's first buddy slot.
+    let server_cr = buddy_of_stride(me, 1, n, effective_stride(&ctx.world.net.params, n));
+    let mat_blob = comm.recv(ctx, server_cr, spare_tag(obj::MAT))?;
+    let rhs_blob = comm.recv(ctx, server_cr, spare_tag(obj::RHS))?;
+    let x_blob = comm.recv(ctx, server_cr, spare_tag(obj::X))?;
+    let basis_blob = comm.recv(ctx, server_cr, spare_tag(obj::BASIS))?;
+    let iter_blob = comm.recv(ctx, server_cr, spare_tag(obj::ITER))?;
+    let ctl = comm.recv(ctx, server_cr, spare_tag(99))?;
+    let v = ctl.i[0];
+    let hwm = ctl.i[1] as u64;
+
+    let part = Partition::balanced(grid.n(), n);
+    let mat = MatrixRows::from_blob(&mat_blob);
+    let range = part.range(me);
+    assert_eq!(mat.start, range.start, "spare adopted wrong block");
+    assert_eq!(mat.rows, range.len());
+
+    let rows = mat.rows;
+    let blk = crate::problem::EllBlock::build(&mat, &part, me);
+    let mut state = SolverState {
+        grid,
+        part,
+        mat,
+        blk,
+        x: x_blob.f.clone(),
+        b: rhs_blob.f.clone(),
+        v_out: DenseBasis::zeros(m_outer + 1, rows),
+        z_out: DenseBasis::zeros(m_outer, rows),
+        cycle: None,
+        scalars: IterScalars { inner_iters_done: 0, next_version: 0, bnorm: 0.0 },
+        hwm_iters: hwm,
+    };
+    state.restore_iter(&iter_blob);
+    state.restore_basis(&basis_blob);
+    state.hwm_iters = hwm;
+    ctx.advance(host.cost((state.rows() * K) as f64, (24 * state.rows() * K) as f64));
+
+    // Join the collective checkpoint re-establishment at v + 1.
+    state.establish_checkpoints(ctx, comm, store, v + 1, buddy_k)?;
+    Ok(state)
+}

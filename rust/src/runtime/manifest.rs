@@ -1,0 +1,167 @@
+//! Parser for `artifacts/manifest.tsv` — the flat twin of `manifest.json`
+//! emitted by `python/compile/aot.py` (this environment is offline, so no
+//! JSON crate; the TSV carries exactly what the loader needs).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// The five graph kinds (mirror of `python/compile/model.py::GRAPHS`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Graph {
+    Spmv,
+    DotPartials,
+    UpdateW,
+    UpdateX,
+    Scale,
+}
+
+impl Graph {
+    pub fn parse(s: &str) -> Option<Graph> {
+        match s {
+            "spmv" => Some(Graph::Spmv),
+            "dot_partials" => Some(Graph::DotPartials),
+            "update_w" => Some(Graph::UpdateW),
+            "update_x" => Some(Graph::UpdateX),
+            "scale" => Some(Graph::Scale),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [Graph; 5] =
+        [Graph::Spmv, Graph::DotPartials, Graph::UpdateW, Graph::UpdateX, Graph::Scale];
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dtype: String,
+    /// Krylov basis slots in the fixed-shape graphs (M = m + 1 = 26).
+    pub m: usize,
+    /// ELL nonzeros per row.
+    pub k: usize,
+    /// Halo padding of the SpMV x input.
+    pub halo_pad: usize,
+    /// Available row buckets, ascending.
+    pub buckets: Vec<usize>,
+    /// (graph, bucket) -> HLO text file.
+    pub files: HashMap<(Graph, usize), PathBuf>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("{}: {e} (run `make artifacts`)", path.display()))?;
+        let mut m = Manifest {
+            dtype: String::new(),
+            m: 0,
+            k: 0,
+            halo_pad: 0,
+            buckets: Vec::new(),
+            files: HashMap::new(),
+            dir: dir.to_path_buf(),
+        };
+        for (no, line) in text.lines().enumerate() {
+            let fields: Vec<&str> = line.split('\t').collect();
+            let bad = || anyhow::anyhow!("{}:{}: malformed line", path.display(), no + 1);
+            match fields.as_slice() {
+                ["dtype", v] => m.dtype = v.to_string(),
+                ["m", v] => m.m = v.parse()?,
+                ["k", v] => m.k = v.parse()?,
+                ["halo_pad", v] => m.halo_pad = v.parse()?,
+                ["buckets", v] => {
+                    m.buckets = v
+                        .split_whitespace()
+                        .map(|b| b.parse())
+                        .collect::<Result<_, _>>()?;
+                }
+                ["graph", name, rows, file] => {
+                    let g = Graph::parse(name).ok_or_else(bad)?;
+                    m.files.insert((g, rows.parse()?), dir.join(file));
+                }
+                _ => return Err(bad()),
+            }
+        }
+        anyhow::ensure!(m.dtype == "float64", "expected f64 artifacts, got {}", m.dtype);
+        anyhow::ensure!(!m.buckets.is_empty(), "no buckets in manifest");
+        let mut sorted = m.buckets.clone();
+        sorted.sort_unstable();
+        anyhow::ensure!(sorted == m.buckets, "buckets must be ascending");
+        for g in Graph::ALL {
+            for &b in &m.buckets {
+                anyhow::ensure!(
+                    m.files.contains_key(&(g, b)),
+                    "manifest missing graph {g:?} at bucket {b}"
+                );
+            }
+        }
+        Ok(m)
+    }
+
+    /// Smallest bucket that fits `rows` live rows.
+    pub fn bucket_for(&self, rows: usize) -> anyhow::Result<usize> {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= rows)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no bucket fits {rows} rows (max {}); regenerate artifacts with larger buckets",
+                    self.buckets.last().unwrap()
+                )
+            })
+    }
+
+    pub fn file(&self, g: Graph, bucket: usize) -> &Path {
+        &self.files[&(g, bucket)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.tsv"), body).unwrap();
+    }
+
+    fn full_body() -> String {
+        let mut s = String::from("dtype\tfloat64\nm\t26\nk\t7\nhalo_pad\t8192\nbuckets\t256 512\n");
+        for g in ["spmv", "dot_partials", "update_w", "update_x", "scale"] {
+            for b in [256, 512] {
+                s.push_str(&format!("graph\t{g}\t{b}\t{g}_r{b}.hlo.txt\n"));
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn parses_full_manifest() {
+        let dir = std::env::temp_dir().join("ulfm_manifest_ok");
+        write_manifest(&dir, &full_body());
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.m, 26);
+        assert_eq!(m.k, 7);
+        assert_eq!(m.buckets, vec![256, 512]);
+        assert_eq!(m.bucket_for(200).unwrap(), 256);
+        assert_eq!(m.bucket_for(256).unwrap(), 256);
+        assert_eq!(m.bucket_for(257).unwrap(), 512);
+        assert!(m.bucket_for(513).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_graph() {
+        let dir = std::env::temp_dir().join("ulfm_manifest_missing");
+        let body = full_body().lines().filter(|l| !l.contains("scale\t256")).collect::<Vec<_>>().join("\n");
+        write_manifest(&dir, &body);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_f32() {
+        let dir = std::env::temp_dir().join("ulfm_manifest_f32");
+        write_manifest(&dir, &full_body().replace("float64", "float32"));
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

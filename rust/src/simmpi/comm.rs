@@ -1,0 +1,339 @@
+//! Communicator: rank translation plus point-to-point and collective
+//! operations, all built over `Ctx::send_raw`/`recv_match` so the network
+//! cost model sees every constituent message.
+//!
+//! Collectives use binomial trees (reduce/bcast) — the same asymptotics as
+//! the paper's Open MPI 1.7.1.  Each collective call consumes one sequence
+//! slot in the collective tag window so that back-to-back collectives with
+//! equal shapes cannot mix messages.
+
+use crate::simmpi::msg::{tags, Blob, Payload, Tag};
+use crate::simmpi::world::WorldRank;
+use crate::simmpi::Ctx;
+use crate::simmpi::MpiResult;
+
+/// A communicator as seen by one rank.
+#[derive(Debug, Clone)]
+pub struct Comm {
+    /// Epoch: unique per communicator generation; bumped by shrink/stitch.
+    pub epoch: u64,
+    /// Comm rank -> world rank.
+    pub members: Vec<WorldRank>,
+    /// This rank's comm rank.
+    pub rank: usize,
+    /// Rolling collective sequence (kept in lockstep by identical program
+    /// order across members).
+    coll_seq: u32,
+}
+
+impl Comm {
+    pub fn new(epoch: u64, members: Vec<WorldRank>, rank: usize) -> Self {
+        debug_assert!(rank < members.len());
+        Comm { epoch, members, rank, coll_seq: 0 }
+    }
+
+    /// World communicator over ranks `0..n`.
+    pub fn world(n: usize, my_world_rank: WorldRank) -> Self {
+        Comm::new(crate::simmpi::ctx::FIRST_EPOCH, (0..n).collect(), my_world_rank)
+    }
+
+    pub fn size(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn world_of(&self, cr: usize) -> WorldRank {
+        self.members[cr]
+    }
+
+    pub fn rank_of_world(&self, wr: WorldRank) -> Option<usize> {
+        self.members.iter().position(|&m| m == wr)
+    }
+
+    // ------------------------------------------------------------------
+    // Point-to-point
+    // ------------------------------------------------------------------
+
+    pub fn send(&self, ctx: &mut Ctx, dst: usize, tag: Tag, blob: Blob) -> MpiResult<()> {
+        ctx.send_raw(self.members[dst], self.epoch, tag, Payload::Data(blob))
+    }
+
+    pub fn recv(&self, ctx: &mut Ctx, src: usize, tag: Tag) -> MpiResult<Blob> {
+        Ok(ctx.recv_match(self.members[src], self.epoch, tag)?.data())
+    }
+
+    /// Exchange with a peer: send then receive (channels are unbounded, so
+    /// symmetric send-first cannot deadlock).
+    pub fn sendrecv(
+        &self,
+        ctx: &mut Ctx,
+        peer: usize,
+        tag: Tag,
+        blob: Blob,
+    ) -> MpiResult<Blob> {
+        self.send(ctx, peer, tag, blob)?;
+        self.recv(ctx, peer, tag)
+    }
+
+    // ------------------------------------------------------------------
+    // Collectives
+    // ------------------------------------------------------------------
+
+    fn next_coll_tags(&mut self) -> Tag {
+        let seq = self.coll_seq;
+        self.coll_seq = (self.coll_seq + 1) % tags::COLL_SEQS;
+        tags::COLL_BASE + seq * tags::COLL_WINDOW
+    }
+
+    /// Binomial-tree barrier (gather-to-0 then broadcast).
+    pub fn barrier(&mut self, ctx: &mut Ctx) -> MpiResult<()> {
+        let base = self.next_coll_tags();
+        self.reduce_tree(ctx, base, Blob::empty(), |_, _| Blob::empty())?;
+        self.bcast_tree(ctx, base + 1, Blob::empty())?;
+        Ok(())
+    }
+
+    /// Broadcast from comm rank 0.  `blob` is the payload at the root and
+    /// ignored elsewhere; every rank returns the broadcast value.
+    pub fn bcast(&mut self, ctx: &mut Ctx, blob: Blob) -> MpiResult<Blob> {
+        let base = self.next_coll_tags();
+        self.bcast_tree(ctx, base, blob)
+    }
+
+    /// Allreduce(sum) over an f64 slice, in place.
+    pub fn allreduce_sum(&mut self, ctx: &mut Ctx, data: &mut [f64]) -> MpiResult<()> {
+        let out = self.allreduce_rd(ctx, Blob::from_f64s(data.to_vec()), |mut a, b| {
+            for (x, y) in a.f.iter_mut().zip(&b.f) {
+                *x += *y;
+            }
+            a
+        })?;
+        data.copy_from_slice(&out.f);
+        Ok(())
+    }
+
+    /// Allreduce(min) over an i64 slice, in place (used to agree on the
+    /// newest mutually-committed checkpoint version).
+    pub fn allreduce_min_i64(&mut self, ctx: &mut Ctx, data: &mut [i64]) -> MpiResult<()> {
+        let out = self.allreduce_rd(ctx, Blob::from_i64s(data.to_vec()), |mut a, b| {
+            for (x, y) in a.i.iter_mut().zip(&b.i) {
+                *x = (*x).min(*y);
+            }
+            a
+        })?;
+        data.copy_from_slice(&out.i);
+        Ok(())
+    }
+
+    /// Recursive-doubling allreduce — the algorithm MPI implementations use
+    /// for small payloads.  Process counts that are not a power of two pay
+    /// an extra pre-reduction/post-broadcast exchange, which is exactly the
+    /// post-shrink collective degradation the paper discusses (citing Fang
+    /// et al.: "MPI implementations commonly optimize process counts in
+    /// terms of powers of two").
+    ///
+    /// `combine` must be commutative bit-for-bit (sum/min are), so every
+    /// rank converges to an identical result.
+    fn allreduce_rd<F>(&mut self, ctx: &mut Ctx, mine: Blob, combine: F) -> MpiResult<Blob>
+    where
+        F: Fn(Blob, Blob) -> Blob,
+    {
+        let n = self.size();
+        if n == 1 {
+            return Ok(mine);
+        }
+        let base = self.next_coll_tags();
+        let me = self.rank;
+        let pow2 = 1usize << (usize::BITS - 1 - n.leading_zeros());
+        let rem = n - pow2;
+        let mut acc = mine;
+
+        // Pre-phase: the first 2*rem ranks fold pairwise; evens drop out.
+        let active_id = if me < 2 * rem {
+            if me % 2 == 0 {
+                self.send(ctx, me + 1, base, acc)?;
+                // Wait for the final result from the partner (post-phase).
+                return self.recv(ctx, me + 1, base + 15);
+            }
+            let other = self.recv(ctx, me - 1, base)?;
+            acc = combine(acc, other);
+            me / 2
+        } else {
+            me - rem
+        };
+
+        // Recursive doubling among the pow2 active ranks.
+        let unmap = |id: usize| if id < rem { 2 * id + 1 } else { id + rem };
+        let mut round = 0u32;
+        let mut dist = 1usize;
+        while dist < pow2 {
+            let partner = unmap(active_id ^ dist);
+            self.send(ctx, partner, base + 1 + round, acc.clone())?;
+            let other = self.recv(ctx, partner, base + 1 + round)?;
+            acc = combine(acc, other);
+            dist <<= 1;
+            round += 1;
+        }
+
+        // Post-phase: odds hand the result back to their dropped partner.
+        if me < 2 * rem {
+            self.send(ctx, me - 1, base + 15, acc.clone())?;
+        }
+        Ok(acc)
+    }
+
+    /// Allgather of one blob per rank; returns blobs indexed by comm rank.
+    /// (Gather to 0 + bcast of the concatenation; sizes may differ.)
+    pub fn allgather(&mut self, ctx: &mut Ctx, mine: Blob) -> MpiResult<Vec<Blob>> {
+        let base = self.next_coll_tags();
+        let n = self.size();
+        let me = self.rank;
+        // Gather to root as individual messages (simple linear gather: the
+        // call sites are rare, recovery-path only).
+        let mut all: Vec<Blob> = Vec::new();
+        if me == 0 {
+            all = vec![Blob::empty(); n];
+            all[0] = mine;
+            for src in 1..n {
+                all[src] = self.recv(ctx, src, base + 2)?;
+            }
+        } else {
+            self.send(ctx, 0, base + 2, mine)?;
+        }
+        // Broadcast concatenation with a size prefix.
+        let packed = if me == 0 { pack_blobs(&all) } else { Blob::empty() };
+        let packed = self.bcast_tree(ctx, base + 3, packed)?;
+        Ok(unpack_blobs(&packed))
+    }
+
+    /// ULFM-style agreement on a u64 (bitwise AND), also functioning as a
+    /// fault-aware barrier.  Cost-equivalent to allreduce.
+    pub fn agree(&mut self, ctx: &mut Ctx, flag: u64) -> MpiResult<u64> {
+        let base = self.next_coll_tags();
+        let reduced =
+            self.reduce_tree(ctx, base, Blob::from_i64s(vec![flag as i64]), |mut a, b| {
+                a.i[0] &= b.i[0];
+                a
+            })?;
+        let out = self.bcast_tree(ctx, base + 1, reduced)?;
+        Ok(out.i[0] as u64)
+    }
+
+    // ------------------------------------------------------------------
+    // Tree primitives
+    // ------------------------------------------------------------------
+
+    /// Binomial reduce to comm rank 0.  Returns the reduction at rank 0 and
+    /// the local contribution elsewhere.
+    fn reduce_tree<F>(
+        &self,
+        ctx: &mut Ctx,
+        tag: Tag,
+        mine: Blob,
+        combine: F,
+    ) -> MpiResult<Blob>
+    where
+        F: Fn(Blob, Blob) -> Blob,
+    {
+        let n = self.size();
+        let me = self.rank;
+        let mut acc = mine;
+        let mut dist = 1;
+        while dist < n {
+            if me % (2 * dist) == 0 {
+                let src = me + dist;
+                if src < n {
+                    let other = self.recv(ctx, src, tag)?;
+                    acc = combine(acc, other);
+                }
+            } else {
+                let dst = me - dist;
+                self.send(ctx, dst, tag, acc)?;
+                return Ok(Blob::empty());
+            }
+            dist *= 2;
+        }
+        Ok(acc)
+    }
+
+    /// Binomial broadcast from comm rank 0.
+    fn bcast_tree(&self, ctx: &mut Ctx, tag: Tag, mine: Blob) -> MpiResult<Blob> {
+        let n = self.size();
+        let me = self.rank;
+        // Highest power of two <= n.
+        let mut top = 1;
+        while top * 2 < n {
+            top *= 2;
+        }
+        let val = if me == 0 {
+            mine
+        } else {
+            // Receive from parent: clear lowest set bit.
+            let parent = me & (me - 1);
+            self.recv(ctx, parent, tag)?
+        };
+        // Forward to children at me + lowestbit(me)/2, me + lowestbit/4, ...
+        // (rank 0 starts at `top`).
+        let mut d = if me == 0 { top } else { (me & me.wrapping_neg()) / 2 };
+        while d >= 1 {
+            let child = me + d;
+            if child < n {
+                self.send(ctx, child, tag, val.clone())?;
+            }
+            d /= 2;
+        }
+        Ok(val)
+    }
+}
+
+/// Pack variable-size blobs into one blob with a length prefix table.
+fn pack_blobs(blobs: &[Blob]) -> Blob {
+    let mut out = Blob::empty();
+    out.i.push(blobs.len() as i64);
+    for b in blobs {
+        out.i.push(b.f.len() as i64);
+        out.i.push(b.i.len() as i64);
+    }
+    for b in blobs {
+        out.f.extend_from_slice(&b.f);
+        out.i.extend_from_slice(&b.i);
+    }
+    out
+}
+
+fn unpack_blobs(packed: &Blob) -> Vec<Blob> {
+    let n = packed.i[0] as usize;
+    let mut blobs = Vec::with_capacity(n);
+    let mut fo = 0usize;
+    let mut io = 1 + 2 * n;
+    for k in 0..n {
+        let nf = packed.i[1 + 2 * k] as usize;
+        let ni = packed.i[2 + 2 * k] as usize;
+        blobs.push(Blob {
+            f: packed.f[fo..fo + nf].to_vec(),
+            i: packed.i[io..io + ni].to_vec(),
+            wire: None,
+        });
+        fo += nf;
+        io += ni;
+    }
+    blobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let blobs = vec![
+            Blob { f: vec![1.0, 2.0], i: vec![7], wire: None },
+            Blob::empty(),
+            Blob { f: vec![], i: vec![1, 2, 3], wire: None },
+        ];
+        let packed = pack_blobs(&blobs);
+        assert_eq!(unpack_blobs(&packed), blobs);
+    }
+
+    // Multi-rank collective behaviour is exercised in tests/simmpi_collectives.rs
+    // with real rank threads.
+}

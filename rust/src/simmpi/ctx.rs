@@ -1,0 +1,405 @@
+//! Per-rank execution context: virtual clock, phase accounting, mailbox
+//! matching, and ULFM-style failure surfacing.
+
+use std::collections::{BTreeSet, VecDeque};
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::Arc;
+
+use crate::metrics::{Phase, PhaseTimers};
+use crate::simmpi::msg::{Ctl, Msg, Payload, Tag};
+use crate::simmpi::world::{World, WorldRank};
+use crate::simmpi::{MpiError, MpiResult};
+
+/// Epoch used by system (non-communicator) messages.
+pub const SYS_EPOCH: u64 = 0;
+/// First epoch usable by communicators.
+pub const FIRST_EPOCH: u64 = 1;
+
+pub struct Ctx {
+    pub world: Arc<World>,
+    pub rank: WorldRank,
+    /// Virtual clock, seconds since run start.
+    pub clock: f64,
+    /// Phase that subsequent time advances are charged to.
+    pub phase: Phase,
+    /// When replaying work already done before a rollback, Compute/Comm time
+    /// is re-routed to [`Phase::Recompute`] (the paper's recomputation
+    /// overhead).  Managed by the solver's iteration tick.
+    pub recompute: bool,
+    pub timers: PhaseTimers,
+    /// Inner iterations executed (for reports and the injector).
+    pub iterations: u64,
+    rx: Receiver<Msg>,
+    /// Out-of-order buffer (matched by (epoch, src, tag)).
+    pending: VecDeque<Msg>,
+    /// Ranks this context has learned are dead.
+    pub known_dead: BTreeSet<WorldRank>,
+    /// Dead ranks whose detection latency has already been charged.
+    detected: BTreeSet<WorldRank>,
+    /// Communicator epochs known to be revoked.
+    revoked: BTreeSet<u64>,
+    /// Pending Join invitations (spares).
+    joins: VecDeque<(u64, Vec<WorldRank>, usize)>,
+    /// Shutdown received.
+    shutdown: bool,
+}
+
+impl Ctx {
+    pub fn new(world: Arc<World>, rank: WorldRank, rx: Receiver<Msg>) -> Self {
+        Ctx {
+            world,
+            rank,
+            clock: 0.0,
+            phase: Phase::Compute,
+            recompute: false,
+            timers: PhaseTimers::default(),
+            iterations: 0,
+            rx,
+            pending: VecDeque::new(),
+            known_dead: BTreeSet::new(),
+            detected: BTreeSet::new(),
+            revoked: BTreeSet::new(),
+            joins: VecDeque::new(),
+            shutdown: false,
+        }
+    }
+
+    /// Phase that time is actually charged to (recompute re-routing).
+    fn effective_phase(&self) -> Phase {
+        if self.recompute && matches!(self.phase, Phase::Compute | Phase::Comm) {
+            Phase::Recompute
+        } else {
+            self.phase
+        }
+    }
+
+    /// Advance the virtual clock by `dt`, charging the current phase.
+    pub fn advance(&mut self, dt: f64) {
+        debug_assert!(dt >= 0.0, "negative advance {dt}");
+        self.clock += dt;
+        self.timers.charge(self.effective_phase(), dt);
+    }
+
+    /// Advance the clock to absolute virtual time `t` (no-op if in the past).
+    pub fn advance_to(&mut self, t: f64) {
+        if t > self.clock {
+            let dt = t - self.clock;
+            self.clock = t;
+            self.timers.charge(self.effective_phase(), dt);
+        }
+    }
+
+    /// Switch accounting phase, returning the previous one.
+    pub fn set_phase(&mut self, p: Phase) -> Phase {
+        std::mem::replace(&mut self.phase, p)
+    }
+
+    pub fn is_revoked(&self, epoch: u64) -> bool {
+        self.revoked.contains(&epoch)
+    }
+
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown
+    }
+
+    // ------------------------------------------------------------------
+    // Send path
+    // ------------------------------------------------------------------
+
+    /// Point-to-point send to a world rank within `epoch`.
+    ///
+    /// Surfaces `ProcFailed` if the destination is already known dead (ULFM
+    /// reports the error on the first operation that cannot complete).
+    pub fn send_raw(
+        &mut self,
+        dst: WorldRank,
+        epoch: u64,
+        tag: Tag,
+        payload: Payload,
+    ) -> MpiResult<()> {
+        if !self.world.is_alive(dst) {
+            self.note_death(dst);
+            return Err(MpiError::ProcFailed(vec![dst]));
+        }
+        let bytes = match &payload {
+            Payload::Data(b) => b.bytes(),
+            Payload::Ctl(_) => 16,
+        };
+        let t = self.world.transit(self.rank, dst, bytes, self.clock);
+        self.world.push(
+            dst,
+            Msg { src: self.rank, epoch, tag, arrival: t.arrival, payload },
+        );
+        self.advance(t.sender_busy);
+        Ok(())
+    }
+
+    /// Fire-and-forget control message (used by revoke / death broadcast /
+    /// join).  Never fails; dead destinations just drop it.
+    pub fn send_ctl(&mut self, dst: WorldRank, ctl: Ctl) {
+        let t = self.world.transit(self.rank, dst, 16, self.clock);
+        self.world.push(
+            dst,
+            Msg {
+                src: self.rank,
+                epoch: SYS_EPOCH,
+                tag: 0,
+                arrival: t.arrival,
+                payload: Payload::Ctl(ctl),
+            },
+        );
+        self.advance(self.world.net.params.send_overhead);
+    }
+
+    // ------------------------------------------------------------------
+    // Receive path
+    // ------------------------------------------------------------------
+
+    /// Blocking receive of a data message matching (src, epoch, tag).
+    ///
+    /// Errors with `ProcFailed` once `src` is known dead and no matching
+    /// message was buffered, or `Revoked` if `epoch` gets revoked while
+    /// waiting (this is what unblocks ranks stuck in a collective when a
+    /// peer dies elsewhere — the recovery driver revokes the communicator).
+    pub fn recv_match(&mut self, src: WorldRank, epoch: u64, tag: Tag) -> MpiResult<Msg> {
+        loop {
+            // 0. Did a co-scheduled simultaneous kill claim THIS rank?  The
+            //    survivors have already excluded it; it must stop
+            //    communicating and exit (the caller turns Killed into a
+            //    clean death).
+            if !self.world.is_alive(self.rank) {
+                return Err(MpiError::Killed);
+            }
+            // 1. Buffered?
+            if let Some(pos) = self
+                .pending
+                .iter()
+                .position(|m| m.src == src && m.epoch == epoch && m.tag == tag)
+            {
+                let msg = self.pending.remove(pos).unwrap();
+                self.deliver(&msg);
+                return Ok(msg);
+            }
+            // 2. Revoked while waiting?
+            if self.revoked.contains(&epoch) {
+                return Err(MpiError::Revoked);
+            }
+            // 3. Drain without blocking.
+            let mut got_any = false;
+            loop {
+                match self.rx.try_recv() {
+                    Ok(m) => {
+                        got_any = true;
+                        self.absorb(m);
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        unreachable!("world holds all senders");
+                    }
+                }
+            }
+            if got_any {
+                continue;
+            }
+            // 4. Nothing buffered: is the peer dead?
+            if self.known_dead.contains(&src) || !self.world.is_alive(src) {
+                self.note_death(src);
+                return Err(MpiError::ProcFailed(vec![src]));
+            }
+            // 5. Block. A Died/Revoke broadcast will wake us if needed.
+            let m = self.rx.recv().expect("world holds all senders");
+            self.absorb(m);
+        }
+    }
+
+    /// Classify an incoming message: control messages mutate local knowledge,
+    /// data messages go to the pending buffer.
+    fn absorb(&mut self, m: Msg) {
+        match &m.payload {
+            Payload::Ctl(Ctl::Died { rank, .. }) => {
+                self.known_dead.insert(*rank);
+            }
+            Payload::Ctl(Ctl::Revoke { epoch }) => {
+                self.revoked.insert(*epoch);
+            }
+            Payload::Ctl(Ctl::Join { epoch, members, as_rank }) => {
+                self.joins.push_back((*epoch, members.clone(), *as_rank));
+            }
+            Payload::Ctl(Ctl::Shutdown) => {
+                self.shutdown = true;
+            }
+            Payload::Data(_) => self.pending.push_back(m),
+        }
+    }
+
+    /// Clock bookkeeping for a delivered message.
+    fn deliver(&mut self, m: &Msg) {
+        self.advance_to(m.arrival);
+        self.advance(self.world.net.params.recv_overhead);
+    }
+
+    /// Charge failure-detection latency once per dead peer.
+    fn note_death(&mut self, r: WorldRank) {
+        self.known_dead.insert(r);
+        if self.detected.insert(r) {
+            let base = self.world.death_time(r).unwrap_or(self.clock);
+            self.advance_to(base + self.world.net.params.detect_latency);
+        }
+    }
+
+    /// This rank dies: mark the registry, notify every mailbox (simulated
+    /// failure-detector propagation), and return the error the caller
+    /// propagates out of the rank body.
+    ///
+    /// Kills co-scheduled at the same instant are marked atomically with
+    /// this one so that no survivor can observe a half-dead group (they are
+    /// *simultaneous* by definition; the co-scheduled ranks still exit at
+    /// their own tick, with idempotent registry marking).
+    pub fn die(&mut self) -> MpiError {
+        for co in self.world.injector.co_scheduled(self.rank, u64::MAX) {
+            self.world.mark_dead(co, self.clock);
+        }
+        self.world.mark_dead(self.rank, self.clock);
+        // Broadcast to EVERY mailbox, including registry-dead ranks: a
+        // co-scheduled rank that has not reached its own kill tick yet may
+        // be blocked in a receive and needs a wake-up to discover its own
+        // death (see `recv_match`).
+        for dst in 0..self.world.size {
+            if dst != self.rank {
+                self.send_ctl(dst, Ctl::Died { rank: self.rank, at: self.clock });
+            }
+        }
+        MpiError::Killed
+    }
+
+    /// Spare-side: block until a Join invitation (or Shutdown) arrives.
+    /// Returns `None` on shutdown.
+    pub fn wait_join(&mut self) -> Option<(u64, Vec<WorldRank>, usize)> {
+        loop {
+            if let Some(j) = self.joins.pop_front() {
+                return Some(j);
+            }
+            if self.shutdown {
+                return None;
+            }
+            let m = self.rx.recv().expect("world holds all senders");
+            self.absorb(m);
+        }
+    }
+
+    /// Drop buffered data messages from epochs older than `epoch` (stale
+    /// traffic from before a recovery).
+    pub fn purge_epochs_below(&mut self, epoch: u64) {
+        self.pending.retain(|m| m.epoch >= epoch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simmpi::Blob;
+    use crate::failure::{InjectionPlan, Injector};
+    use crate::netsim::NetParams;
+
+    fn two_rank_world() -> (Arc<World>, Vec<Receiver<Msg>>) {
+        World::new(2, 0, NetParams::default(), Injector::new(InjectionPlan::none()))
+    }
+
+    #[test]
+    fn send_recv_advances_clocks() {
+        let (w, mut rxs) = two_rank_world();
+        let rx1 = rxs.pop().unwrap();
+        let rx0 = rxs.pop().unwrap();
+        let mut c0 = Ctx::new(w.clone(), 0, rx0);
+        let mut c1 = Ctx::new(w, 1, rx1);
+        c0.send_raw(1, 1, 7, Payload::Data(Blob::scalar(42.0))).unwrap();
+        assert!(c0.clock > 0.0, "sender charged");
+        let m = c1.recv_match(0, 1, 7).unwrap();
+        assert_eq!(m.data().f, vec![42.0]);
+        assert!(c1.clock >= c0.clock * 0.0, "receiver clock advanced to arrival");
+        assert!(c1.clock > 0.0);
+    }
+
+    #[test]
+    fn recv_out_of_order_by_tag() {
+        let (w, mut rxs) = two_rank_world();
+        let rx1 = rxs.pop().unwrap();
+        let rx0 = rxs.pop().unwrap();
+        let mut c0 = Ctx::new(w.clone(), 0, rx0);
+        let mut c1 = Ctx::new(w, 1, rx1);
+        c0.send_raw(1, 1, 1, Payload::Data(Blob::scalar(1.0))).unwrap();
+        c0.send_raw(1, 1, 2, Payload::Data(Blob::scalar(2.0))).unwrap();
+        // Receive tag 2 first, then tag 1 (buffered).
+        assert_eq!(c1.recv_match(0, 1, 2).unwrap().data().f, vec![2.0]);
+        assert_eq!(c1.recv_match(0, 1, 1).unwrap().data().f, vec![1.0]);
+    }
+
+    #[test]
+    fn send_to_dead_rank_fails() {
+        let (w, mut rxs) = two_rank_world();
+        let _rx1 = rxs.pop().unwrap();
+        let rx0 = rxs.pop().unwrap();
+        let mut c0 = Ctx::new(w.clone(), 0, rx0);
+        w.mark_dead(1, 0.5);
+        match c0.send_raw(1, 1, 0, Payload::Data(Blob::empty())) {
+            Err(MpiError::ProcFailed(v)) => assert_eq!(v, vec![1]),
+            other => panic!("expected ProcFailed, got {other:?}"),
+        }
+        // Detection latency charged.
+        assert!(c0.clock >= 0.5 + w.net.params.detect_latency);
+    }
+
+    #[test]
+    fn recv_from_dead_rank_fails_but_drains_buffered() {
+        let (w, mut rxs) = two_rank_world();
+        let rx1 = rxs.pop().unwrap();
+        let rx0 = rxs.pop().unwrap();
+        let mut c0 = Ctx::new(w.clone(), 0, rx0);
+        let mut c1 = Ctx::new(w.clone(), 1, rx1);
+        // Rank 0 sends one message, then dies.
+        c0.send_raw(1, 1, 9, Payload::Data(Blob::scalar(3.0))).unwrap();
+        let _ = c0.die();
+        // The pre-death message is still delivered...
+        assert_eq!(c1.recv_match(0, 1, 9).unwrap().data().f, vec![3.0]);
+        // ...the next receive errors.
+        match c1.recv_match(0, 1, 10) {
+            Err(MpiError::ProcFailed(v)) => assert_eq!(v, vec![0]),
+            other => panic!("expected ProcFailed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn revoke_unblocks_matching_epoch() {
+        let (w, mut rxs) = two_rank_world();
+        let rx1 = rxs.pop().unwrap();
+        let rx0 = rxs.pop().unwrap();
+        let mut c0 = Ctx::new(w.clone(), 0, rx0);
+        let mut c1 = Ctx::new(w, 1, rx1);
+        c0.send_ctl(1, Ctl::Revoke { epoch: 3 });
+        match c1.recv_match(0, 3, 0) {
+            Err(MpiError::Revoked) => {}
+            other => panic!("expected Revoked, got {other:?}"),
+        }
+        // Other epochs unaffected.
+        c0.send_raw(1, 4, 0, Payload::Data(Blob::scalar(8.0))).unwrap();
+        assert_eq!(c1.recv_match(0, 4, 0).unwrap().data().f, vec![8.0]);
+    }
+
+    #[test]
+    fn purge_drops_stale_epochs() {
+        let (w, mut rxs) = two_rank_world();
+        let rx1 = rxs.pop().unwrap();
+        let rx0 = rxs.pop().unwrap();
+        let mut c0 = Ctx::new(w.clone(), 0, rx0);
+        let mut c1 = Ctx::new(w, 1, rx1);
+        c0.send_raw(1, 1, 0, Payload::Data(Blob::scalar(1.0))).unwrap();
+        c0.send_raw(1, 2, 0, Payload::Data(Blob::scalar(2.0))).unwrap();
+        // Force both into pending.
+        assert_eq!(c1.recv_match(0, 2, 0).unwrap().data().f, vec![2.0]);
+        c1.purge_epochs_below(2);
+        // Epoch-1 message is gone; epoch-2 message with another tag arrives.
+        c0.send_raw(1, 2, 5, Payload::Data(Blob::scalar(5.0))).unwrap();
+        assert_eq!(c1.recv_match(0, 2, 5).unwrap().data().f, vec![5.0]);
+        assert!(c1.pending.is_empty());
+    }
+}

@@ -1,0 +1,44 @@
+//! Simulated MPI runtime with ULFM fault-tolerance semantics.
+//!
+//! Substitutes for the paper's Open MPI 1.7.1 + ULFM 1.1 stack (DESIGN.md
+//! §1): ranks are OS threads, links are channels, and every message is
+//! priced by the virtual-clock network model in [`crate::netsim`].  The ULFM
+//! surface (`ProcFailed` errors, revoke, shrink, agree) matches what the
+//! paper's recovery strategies are built on.
+
+pub mod comm;
+pub mod ctx;
+pub mod msg;
+pub mod ulfm;
+pub mod world;
+
+pub use comm::Comm;
+pub use ctx::Ctx;
+pub use msg::{tags, Blob, Ctl, Msg, Payload, Tag};
+pub use world::{World, WorldRank};
+
+/// ULFM-visible error classes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MpiError {
+    /// `MPI_ERR_PROC_FAILED`: the listed world ranks are dead.
+    ProcFailed(Vec<WorldRank>),
+    /// `MPI_ERR_REVOKED`: the communicator was revoked by a peer.
+    Revoked,
+    /// The failure injector killed *this* rank (propagates out of the rank
+    /// body; never observed by peers as anything but a dead process).
+    Killed,
+}
+
+impl std::fmt::Display for MpiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MpiError::ProcFailed(r) => write!(f, "process failure detected: ranks {r:?}"),
+            MpiError::Revoked => write!(f, "communicator revoked"),
+            MpiError::Killed => write!(f, "killed by failure injector"),
+        }
+    }
+}
+
+impl std::error::Error for MpiError {}
+
+pub type MpiResult<T> = Result<T, MpiError>;

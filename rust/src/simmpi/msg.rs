@@ -1,0 +1,136 @@
+//! Message types for the simulated MPI runtime.
+
+use crate::simmpi::WorldRank;
+
+/// Message tag. Tags below [`Tag::COLL_BASE`] are free for point-to-point
+/// application use; collectives allocate from a rolling window above it.
+pub type Tag = u32;
+
+/// Reserved tag namespaces.
+pub mod tags {
+    use super::Tag;
+    /// Base of the collective-operation tag window.
+    pub const COLL_BASE: Tag = 1 << 24;
+    /// Width of one collective's tag window (steps within one collective;
+    /// recursive doubling needs log2(P) + pre/post rounds).
+    pub const COLL_WINDOW: Tag = 16;
+    /// Number of in-flight collective sequence slots before wraparound.
+    pub const COLL_SEQS: Tag = 1 << 16;
+    /// Halo exchange tags: HALO_BASE + peer rank.
+    pub const HALO_BASE: Tag = 1 << 22;
+    /// Checkpoint shipping tags: CKPT_BASE + object id.
+    pub const CKPT_BASE: Tag = 1 << 21;
+    /// Recovery / redistribution transfers.
+    pub const RECOVER_BASE: Tag = 1 << 20;
+}
+
+/// Typed payload container: every application message is some mix of f64 and
+/// i64 words (vector blocks, matrix rows, counters).  Byte size feeds the
+/// network cost model.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Blob {
+    pub f: Vec<f64>,
+    pub i: Vec<i64>,
+    /// Wire-size override for workload scaling (see `NetParams::data_scale`):
+    /// campaigns simulate the paper's full problem size by scaling the
+    /// *charged* bytes of rows-proportional payloads while computing on the
+    /// 1/36-scale arrays.  `None` = physical size.
+    pub wire: Option<usize>,
+}
+
+impl Blob {
+    pub fn empty() -> Self {
+        Blob::default()
+    }
+
+    pub fn from_f64s(f: Vec<f64>) -> Self {
+        Blob { f, i: Vec::new(), wire: None }
+    }
+
+    pub fn from_i64s(i: Vec<i64>) -> Self {
+        Blob { f: Vec::new(), i, wire: None }
+    }
+
+    /// Scale the charged wire size (rows-proportional payloads only).
+    pub fn scaled(mut self, factor: f64) -> Self {
+        if factor != 1.0 {
+            let base = 8 * (self.f.len() + self.i.len());
+            self.wire = Some((base as f64 * factor) as usize);
+        }
+        self
+    }
+
+    pub fn scalar(v: f64) -> Self {
+        Blob::from_f64s(vec![v])
+    }
+
+    /// Payload size as charged on the wire.
+    pub fn bytes(&self) -> usize {
+        self.wire.unwrap_or(8 * (self.f.len() + self.i.len()))
+    }
+}
+
+/// System-level control messages (outside any communicator epoch).
+#[derive(Debug, Clone)]
+pub enum Ctl {
+    /// `rank` died at virtual time `at` — the simulated failure detector's
+    /// notification, broadcast by the dying rank to every mailbox.
+    Died { rank: WorldRank, at: f64 },
+    /// ULFM `MPI_Comm_revoke` on communicator `epoch`.
+    Revoke { epoch: u64 },
+    /// Substitute recovery: spare adopts communicator `epoch` with comm rank
+    /// `as_rank` over `members`.
+    Join { epoch: u64, members: Vec<WorldRank>, as_rank: usize },
+    /// Run is over; unused spares exit their wait loop.
+    Shutdown,
+}
+
+#[derive(Debug, Clone)]
+pub enum Payload {
+    Data(Blob),
+    Ctl(Ctl),
+}
+
+/// One in-flight message.
+#[derive(Debug, Clone)]
+pub struct Msg {
+    pub src: WorldRank,
+    /// Communicator epoch the message belongs to (0 = system).
+    pub epoch: u64,
+    pub tag: Tag,
+    /// Virtual time at which the message is fully received.
+    pub arrival: f64,
+    pub payload: Payload,
+}
+
+impl Msg {
+    pub fn data(self) -> Blob {
+        match self.payload {
+            Payload::Data(b) => b,
+            Payload::Ctl(c) => panic!("expected data message, got ctl {c:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blob_bytes() {
+        let b = Blob { f: vec![0.0; 10], i: vec![0; 3], wire: None };
+        assert_eq!(b.bytes(), 104);
+        assert_eq!(Blob::empty().bytes(), 0);
+        assert_eq!(Blob::scalar(1.0).bytes(), 8);
+        assert_eq!(b.scaled(36.0).bytes(), 104 * 36);
+        assert_eq!(Blob::scalar(1.0).scaled(1.0).bytes(), 8);
+    }
+
+    #[test]
+    fn tag_namespaces_disjoint() {
+        use tags::*;
+        assert!(HALO_BASE + 100_000 < COLL_BASE);
+        assert!(CKPT_BASE + 10_000 < HALO_BASE);
+        assert!(RECOVER_BASE + 10_000 < CKPT_BASE);
+    }
+}

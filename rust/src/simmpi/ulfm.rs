@@ -1,0 +1,166 @@
+//! ULFM (user-level failure mitigation) extension surface.
+//!
+//! Mirrors the MPI-ULFM primitives the paper relies on:
+//!
+//! * failure *notification* — ops return `MPI_ERR_PROC_FAILED`
+//!   ([`MpiError::ProcFailed`], raised by `Ctx` send/recv);
+//! * [`revoke`] — `MPI_Comm_revoke`: poison a communicator so every member's
+//!   pending/future operations return `Revoked` (this is how ranks that did
+//!   not observe the failure directly are pulled into recovery);
+//! * [`shrink`] — `MPI_Comm_shrink`: build a pristine communicator from the
+//!   survivors, densely renumbered;
+//! * [`Comm::agree`] — `MPI_Comm_agree` (in comm.rs).
+//!
+//! On a real machine shrink runs a consensus protocol among survivors; here
+//! membership comes from the registry (the detector's eventual ground truth)
+//! and the consensus *cost* is charged as two fault-aware rounds over the new
+//! communicator plus a fixed per-round agreement overhead.  The paper
+//! measures reconfiguration at 0.01%-0.05% of total time; the calibration
+//! test in tests/ulfm_semantics.rs keeps us in that regime.
+
+use crate::simmpi::msg::Ctl;
+use crate::simmpi::{Comm, Ctx, MpiResult, WorldRank};
+
+/// Per-round CPU overhead of the agreement protocol (consensus bookkeeping,
+/// in addition to the tree messages actually sent).
+pub const AGREEMENT_OVERHEAD: f64 = 150e-6;
+
+/// `MPI_Comm_revoke`: notify every member that `comm`'s epoch is dead.
+/// Best-effort, idempotent, skips dead peers, never errors.
+pub fn revoke(ctx: &mut Ctx, comm: &Comm) {
+    for &wr in &comm.members {
+        if wr != ctx.rank && ctx.world.is_alive(wr) {
+            ctx.send_ctl(wr, Ctl::Revoke { epoch: comm.epoch });
+        }
+    }
+}
+
+/// Survivor membership of `comm` according to the failure detector.
+pub fn survivors(ctx: &Ctx, comm: &Comm) -> Vec<WorldRank> {
+    comm.members
+        .iter()
+        .copied()
+        .filter(|&wr| ctx.world.is_alive(wr))
+        .collect()
+}
+
+/// Failed members of `comm`.
+pub fn failed(ctx: &Ctx, comm: &Comm) -> Vec<WorldRank> {
+    comm.members
+        .iter()
+        .copied()
+        .filter(|&wr| !ctx.world.is_alive(wr))
+        .collect()
+}
+
+/// `MPI_Comm_shrink`: all survivors of `comm` call this; each returns the
+/// same pristine communicator (epoch + 1 relative to the *caller's* comm,
+/// survivors densely renumbered in old comm-rank order).
+///
+/// Must be called with the caller's phase set to `Reconfig` so the consensus
+/// cost lands in the right bucket.
+pub fn shrink(ctx: &mut Ctx, comm: &Comm) -> MpiResult<Comm> {
+    let members = survivors(ctx, comm);
+    let my_new = members
+        .iter()
+        .position(|&wr| wr == ctx.rank)
+        .expect("shrink caller must be a survivor");
+    let mut new_comm = Comm::new(comm.epoch + 1, members, my_new);
+    // Drop any stale traffic from the revoked epoch.
+    ctx.purge_epochs_below(new_comm.epoch);
+    // Consensus cost: two agreement rounds over the survivor set.
+    for _ in 0..2 {
+        ctx.advance(AGREEMENT_OVERHEAD);
+        new_comm.agree(ctx, u64::MAX)?;
+    }
+    Ok(new_comm)
+}
+
+/// Substitute recovery, survivor side: extend `shrunk` with spare world
+/// ranks standing in at the comm-rank positions the failed ranks held in
+/// `old_comm`.  Comm rank 0 of the shrunken comm (the recovery leader)
+/// invites each spare; everyone returns the stitched communicator.
+///
+/// `spare_assignment` maps (failed old comm rank) -> (spare world rank) and
+/// must be identical at every caller (it is derived deterministically from
+/// the registry by the recovery driver).
+pub fn stitch_spares(
+    ctx: &mut Ctx,
+    old_comm: &Comm,
+    shrunk: &Comm,
+    spare_assignment: &[(usize, WorldRank)],
+) -> MpiResult<Comm> {
+    // Rebuild the original size: survivors keep their old comm ranks, spares
+    // take the failed slots — the paper's Figure 1 rank layout.
+    let mut members = vec![usize::MAX; old_comm.size()];
+    for (old_cr, &wr) in old_comm.members.iter().enumerate() {
+        if ctx.world.is_alive(wr) {
+            members[old_cr] = wr;
+        }
+    }
+    for &(failed_cr, spare_wr) in spare_assignment {
+        debug_assert_eq!(members[failed_cr], usize::MAX, "slot not failed");
+        members[failed_cr] = spare_wr;
+    }
+    debug_assert!(members.iter().all(|&m| m != usize::MAX), "unfilled slot");
+
+    let epoch = shrunk.epoch + 1;
+    let my_new = members
+        .iter()
+        .position(|&wr| wr == ctx.rank)
+        .expect("stitch caller must be a member");
+    let mut stitched = Comm::new(epoch, members.clone(), my_new);
+
+    // The leader invites the spares (they are blocked in `wait_join`).
+    if shrunk.rank == 0 {
+        for &(failed_cr, spare_wr) in spare_assignment {
+            ctx.send_ctl(
+                spare_wr,
+                Ctl::Join { epoch, members: members.clone(), as_rank: failed_cr },
+            );
+        }
+    }
+    ctx.purge_epochs_below(epoch);
+    // One agreement round over the stitched comm synchronizes everyone
+    // (including the spares, which enter via `join_as_spare`).
+    ctx.advance(AGREEMENT_OVERHEAD);
+    stitched.agree(ctx, u64::MAX)?;
+    Ok(stitched)
+}
+
+/// Substitute recovery, spare side: accept a Join invitation and synchronize
+/// with the stitched communicator.
+pub fn join_as_spare(
+    ctx: &mut Ctx,
+    epoch: u64,
+    members: Vec<WorldRank>,
+    as_rank: usize,
+) -> MpiResult<Comm> {
+    let mut comm = Comm::new(epoch, members, as_rank);
+    ctx.purge_epochs_below(epoch);
+    ctx.advance(AGREEMENT_OVERHEAD);
+    comm.agree(ctx, u64::MAX)?;
+    Ok(comm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::failure::{InjectionPlan, Injector};
+    use crate::netsim::NetParams;
+    use crate::simmpi::World;
+
+    #[test]
+    fn survivors_and_failed_partition_members() {
+        let (w, mut rxs) = World::new(4, 0, NetParams::default(), Injector::new(InjectionPlan::none()));
+        let rx0 = rxs.remove(0);
+        let ctx = Ctx::new(w.clone(), 0, rx0);
+        let comm = Comm::world(4, 0);
+        w.mark_dead(2, 1.0);
+        assert_eq!(survivors(&ctx, &comm), vec![0, 1, 3]);
+        assert_eq!(failed(&ctx, &comm), vec![2]);
+    }
+
+    // Full shrink/stitch protocols need live rank threads; covered in
+    // tests/ulfm_semantics.rs.
+}

@@ -1,0 +1,164 @@
+//! The simulated machine: one mailbox per rank, a liveness registry, the
+//! network model, and the failure injector.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::failure::Injector;
+use crate::netsim::{NetParams, Network, NodeId};
+use crate::simmpi::msg::Msg;
+
+pub type WorldRank = usize;
+
+/// Shared, thread-safe state of the simulated machine.
+pub struct World {
+    pub size: usize,
+    /// Application ranks; world ranks >= n_app are warm spares.
+    pub n_app: usize,
+    senders: Vec<Sender<Msg>>,
+    alive: Vec<AtomicBool>,
+    death_time: Vec<Mutex<Option<f64>>>,
+    /// Physical node of each world rank.  Application ranks are packed
+    /// `ranks_per_node` to a node; spares start on their own fresh node(s) —
+    /// the paper's "spares are mapped to the later nodes" placement.
+    node_map: Vec<NodeId>,
+    pub net: Network,
+    pub injector: Injector,
+}
+
+impl World {
+    /// Build a world with `n_app` application ranks plus `n_spares` warm
+    /// spares, returning per-rank receivers to hand to the rank threads.
+    pub fn new(
+        n_app: usize,
+        n_spares: usize,
+        params: NetParams,
+        injector: Injector,
+    ) -> (Arc<World>, Vec<Receiver<Msg>>) {
+        let size = n_app + n_spares;
+        let mut senders = Vec::with_capacity(size);
+        let mut receivers = Vec::with_capacity(size);
+        for _ in 0..size {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        let rpn = params.ranks_per_node;
+        let app_nodes = n_app.div_ceil(rpn);
+        let mut node_map: Vec<NodeId> = (0..n_app).map(|r| r / rpn).collect();
+        // Spares one per fresh node after all application nodes — the
+        // paper's "spare processes are mapped to the later nodes".
+        node_map.extend((0..n_spares).map(|s| app_nodes + s));
+        // Network sized by node count: create with enough "world" for both.
+        let net = Network::new(params, (app_nodes + n_spares.max(1)) * rpn);
+        let world = World {
+            size,
+            n_app,
+            senders,
+            alive: (0..size).map(|_| AtomicBool::new(true)).collect(),
+            death_time: (0..size).map(|_| Mutex::new(None)).collect(),
+            node_map,
+            net,
+            injector,
+        };
+        (Arc::new(world), receivers)
+    }
+
+    pub fn node_of(&self, r: WorldRank) -> NodeId {
+        self.node_map[r]
+    }
+
+    pub fn same_node(&self, a: WorldRank, b: WorldRank) -> bool {
+        self.node_map[a] == self.node_map[b]
+    }
+
+    pub fn is_alive(&self, r: WorldRank) -> bool {
+        self.alive[r].load(Ordering::Acquire)
+    }
+
+    /// Idempotent: the first writer's timestamp wins (simultaneous deaths
+    /// are pre-marked by whichever co-scheduled rank dies first).
+    pub fn mark_dead(&self, r: WorldRank, at: f64) {
+        let mut t = self.death_time[r].lock().unwrap();
+        if t.is_none() {
+            *t = Some(at);
+        }
+        drop(t);
+        self.alive[r].store(false, Ordering::Release);
+    }
+
+    pub fn death_time(&self, r: WorldRank) -> Option<f64> {
+        *self.death_time[r].lock().unwrap()
+    }
+
+    /// Ground-truth dead set (the simulated failure detector's eventual
+    /// knowledge; ULFM's consensus cost is charged separately by `shrink`).
+    pub fn dead_set(&self) -> Vec<WorldRank> {
+        (0..self.size).filter(|&r| !self.is_alive(r)).collect()
+    }
+
+    /// Raw mailbox push; does NOT check liveness (callers in `Ctx` do).
+    pub(crate) fn push(&self, dst: WorldRank, msg: Msg) {
+        // Receiver can only be dropped after its rank died; losing the
+        // message is then equivalent to the network dropping it.
+        let _ = self.senders[dst].send(msg);
+    }
+
+    /// Transit through the network model using the world's node mapping
+    /// (application ranks packed, spares on trailing nodes).
+    pub fn transit(&self, src: WorldRank, dst: WorldRank, bytes: usize, depart: f64) -> crate::netsim::Transit {
+        self.net.transit_nodes(self.node_map[src], self.node_map[dst], bytes, depart)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::failure::InjectionPlan;
+
+    fn world(n_app: usize, n_spares: usize) -> (Arc<World>, Vec<Receiver<Msg>>) {
+        World::new(
+            n_app,
+            n_spares,
+            NetParams { ranks_per_node: 4, ..NetParams::default() },
+            Injector::new(InjectionPlan::none()),
+        )
+    }
+
+    #[test]
+    fn spares_live_on_fresh_nodes() {
+        let (w, _rx) = world(10, 3);
+        // 10 app ranks on nodes 0..=2 (4 per node), spares on nodes 3,4,5.
+        assert_eq!(w.node_of(0), 0);
+        assert_eq!(w.node_of(9), 2);
+        assert_eq!(w.node_of(10), 3);
+        assert_eq!(w.node_of(11), 4);
+        assert_eq!(w.node_of(12), 5);
+        for app in 0..10 {
+            for sp in 10..13 {
+                assert!(!w.same_node(app, sp), "spare shares node with app rank");
+            }
+        }
+    }
+
+    #[test]
+    fn liveness_registry() {
+        let (w, _rx) = world(4, 0);
+        assert!(w.is_alive(2));
+        assert!(w.dead_set().is_empty());
+        w.mark_dead(2, 1.5);
+        assert!(!w.is_alive(2));
+        assert_eq!(w.dead_set(), vec![2]);
+        assert_eq!(w.death_time(2), Some(1.5));
+    }
+
+    #[test]
+    fn inter_node_transit_slower_than_intra() {
+        let (w, _rx) = world(10, 2);
+        let intra = w.transit(0, 1, 1 << 20, 0.0);
+        w.net.reset();
+        let inter = w.transit(0, 10, 1 << 20, 0.0); // app -> spare node
+        assert!(inter.arrival > intra.arrival);
+    }
+}

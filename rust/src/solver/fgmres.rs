@@ -1,0 +1,330 @@
+//! FT-GMRES: flexible outer GMRES preconditioned by an inner GMRES solve
+//! (Hoemmen & Heroux's inner-outer partitioning, as used by the paper).
+//!
+//! The outer iteration builds a flexible Krylov basis (V, Z); each outer
+//! step j runs one *inner solve* of `m_inner` unrestarted GMRES iterations
+//! (the paper's "every 25 iterations"), then checkpoints the dynamic state
+//! — cycle-start solution x0, the bases built so far, and the replicated
+//! least-squares state — so recovery resumes the cycle exactly where it
+//! stopped and recomputes at most one inner solve.  Orthogonalization is
+//! CGS with optional re-orthogonalization (CGS2), matching Trilinos' ICGS.
+//!
+//! Process failures surface as `MpiError` out of any communication call and
+//! propagate out of [`FtGmres::solve`]; the recovery driver in
+//! [`crate::recovery`] repairs the communicator and state, then re-enters
+//! `solve` — the Rust rendering of the paper's "C++ exception handling to
+//! jump to the beginning of the iterative block".
+
+use crate::backend::{Backend, DenseBasis};
+use crate::checkpoint::CkptStore;
+use crate::metrics::Phase;
+use crate::netsim::ComputeModel;
+use crate::simmpi::{Comm, Ctx, MpiResult};
+use crate::solver::givens::GivensLs;
+use crate::solver::parops::{allreduce, charge_host, matvec, norm2_sq, Scratch};
+use crate::solver::state::{CycleCtl, SolverState};
+
+/// Numerical breakdown threshold for Arnoldi (relative to the cycle norm).
+const BREAKDOWN: f64 = 1e-13;
+
+#[derive(Debug, Clone)]
+pub struct FtGmresCfg {
+    /// Outer (flexible) basis size per restart cycle.
+    pub m_outer: usize,
+    /// Inner GMRES iterations per outer step (the paper's 25).
+    pub m_inner: usize,
+    /// Outer relative-residual convergence tolerance.
+    pub tol: f64,
+    /// Maximum outer restart cycles before giving up.
+    pub max_cycles: usize,
+    /// CGS2 re-orthogonalization (Trilinos ICGS-style).
+    pub reorth: bool,
+    /// Buddy copies per checkpointed object.
+    pub ckpt_buddies: usize,
+    /// Checkpointing on/off (off for the no-protection baseline).
+    pub ckpt_enabled: bool,
+    /// Early-exit tolerance for the inner solve (0 = fixed m_inner iters,
+    /// the paper's configuration).
+    pub inner_tol: f64,
+}
+
+impl Default for FtGmresCfg {
+    fn default() -> Self {
+        FtGmresCfg {
+            m_outer: 25,
+            m_inner: 25,
+            tol: 1e-8,
+            max_cycles: 8,
+            reorth: true,
+            ckpt_buddies: 1,
+            ckpt_enabled: true,
+            inner_tol: 0.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    pub converged: bool,
+    /// Final *true* relative residual ||b - Ax|| / ||b||.
+    pub relres: f64,
+    /// Outer restart cycles used.
+    pub cycles: usize,
+}
+
+/// Per-solve workspace (inner basis is not checkpointed: losing it costs at
+/// most one inner solve of recomputation).
+struct Workspace {
+    v_in: DenseBasis,
+    h: Vec<f64>,
+    scratch: Scratch,
+}
+
+pub struct FtGmres<'a> {
+    pub cfg: &'a FtGmresCfg,
+    pub backend: &'a dyn Backend,
+    pub host: ComputeModel,
+}
+
+impl<'a> FtGmres<'a> {
+    pub fn new(cfg: &'a FtGmresCfg, backend: &'a dyn Backend, host: ComputeModel) -> Self {
+        FtGmres { cfg, backend, host }
+    }
+
+    /// Run (or resume, after recovery) the solve.  On process failure the
+    /// error propagates out with `state`/`store` in a recoverable condition:
+    /// the last committed checkpoint plus consistent scalars.
+    pub fn solve(
+        &self,
+        ctx: &mut Ctx,
+        comm: &mut Comm,
+        state: &mut SolverState,
+        store: &mut CkptStore,
+    ) -> MpiResult<Outcome> {
+        let cfg = self.cfg;
+        let r = state.rows();
+        debug_assert_eq!(state.v_out.m, cfg.m_outer + 1, "basis sized by setup");
+        let mut ws = Workspace {
+            v_in: DenseBasis::zeros(cfg.m_inner + 1, r),
+            h: vec![0.0; cfg.m_outer.max(cfg.m_inner) + 1],
+            scratch: Scratch::default(),
+        };
+        let mut resid = vec![0.0; r];
+
+        for cycle in 0..cfg.max_cycles {
+            // --- start of the iterative block (recovery re-entry point) ---
+            let (mut ls, j_start) = match state.cycle.take() {
+                Some(c) => {
+                    // Resuming a checkpointed cycle: V, Z, ls are restored.
+                    let j = c.j_done;
+                    state.cycle = Some(c.clone());
+                    (c.ls, j + 1)
+                }
+                None => {
+                    // Fresh cycle: r0 = b - A x0.
+                    matvec(ctx, comm, self.backend, &state.blk, &state.x, &mut resid, &mut ws.scratch)?;
+                    for i in 0..r {
+                        resid[i] = state.b[i] - resid[i];
+                    }
+                    charge_host(ctx, &self.host, r as f64, 24.0 * r as f64);
+                    let beta = norm2_sq(ctx, comm, &self.host, &resid)?.sqrt();
+                    if beta / state.scalars.bnorm < cfg.tol {
+                        return Ok(Outcome {
+                            converged: true,
+                            relres: beta / state.scalars.bnorm,
+                            cycles: cycle,
+                        });
+                    }
+                    state.v_out.row_mut(0).copy_from_slice(&resid);
+                    let prev = ctx.set_phase(Phase::Compute);
+                    let secs = self.backend.scale(state.v_out.row_mut(0), 1.0 / beta);
+                    ctx.advance(secs);
+                    ctx.set_phase(prev);
+                    (GivensLs::new(cfg.m_outer, beta), 0)
+                }
+            };
+
+            let mut done = false;
+            for j in j_start..cfg.m_outer {
+                // Inner solve: z_j ~= A^{-1} v_j  (m_inner iterations).
+                let vj = state.v_out.row(j).to_vec();
+                let zj = self.inner_solve(ctx, comm, state, &mut ws, &vj)?;
+                state.z_out.row_mut(j).copy_from_slice(&zj);
+
+                // w = A z_j.
+                let mut w = vec![0.0; r];
+                matvec(ctx, comm, self.backend, &state.blk, &zj, &mut w, &mut ws.scratch)?;
+
+                // Orthogonalize against V[0..=j].
+                let hnext =
+                    self.orthogonalize(ctx, comm, &state.v_out, j + 1, &mut w, &mut ws.h)?;
+
+                let mut col = ws.h[..j + 1].to_vec();
+                col.push(hnext);
+                let est = ls.push_col(&col);
+                charge_host(ctx, &self.host, ls.push_flops(), 8.0 * ls.push_flops());
+                let relres_est = est / state.scalars.bnorm;
+
+                let breakdown = hnext <= BREAKDOWN * ls.residual().max(state.scalars.bnorm);
+                if relres_est < cfg.tol || breakdown || j + 1 == cfg.m_outer {
+                    // Cycle over: fold the correction into x (x = x0 + Z y).
+                    let y = ls.solve_y();
+                    charge_host(ctx, &self.host, ls.solve_flops(), 8.0 * ls.solve_flops());
+                    let mut y_full = vec![0.0; state.z_out.m];
+                    y_full[..y.len()].copy_from_slice(&y);
+                    let mut x_new = state.x.clone();
+                    let prev = ctx.set_phase(Phase::Compute);
+                    let secs =
+                        self.backend.update_x(&state.z_out, y.len(), &y_full, &mut x_new);
+                    ctx.advance(secs);
+                    ctx.set_phase(prev);
+                    state.x = x_new;
+                    state.cycle = None;
+                    done = relres_est < cfg.tol;
+                    break;
+                }
+
+                // Extend the basis and checkpoint the completed step
+                // (dynamic state after each inner solve — paper §VI).
+                state.v_out.row_mut(j + 1).copy_from_slice(&w);
+                let prev = ctx.set_phase(Phase::Compute);
+                let secs = self.backend.scale(state.v_out.row_mut(j + 1), 1.0 / hnext);
+                ctx.advance(secs);
+                ctx.set_phase(prev);
+
+                state.cycle = Some(CycleCtl { j_done: j, ls: ls.clone() });
+                if cfg.ckpt_enabled {
+                    state.checkpoint_dynamic(ctx, comm, store, cfg.ckpt_buddies)?;
+                }
+            }
+            let _ = done; // true residual verified at the next loop top
+        }
+
+        // Out of cycles: report the true residual.
+        matvec(ctx, comm, self.backend, &state.blk, &state.x, &mut resid, &mut ws.scratch)?;
+        for i in 0..r {
+            resid[i] = state.b[i] - resid[i];
+        }
+        let beta = norm2_sq(ctx, comm, &self.host, &resid)?.sqrt();
+        let relres = beta / state.scalars.bnorm;
+        Ok(Outcome { converged: relres < cfg.tol, relres, cycles: cfg.max_cycles })
+    }
+
+    /// One inner solve: z ~= A^{-1} rhs via `m_inner` unrestarted GMRES
+    /// iterations with zero initial guess.  Returns z.
+    fn inner_solve(
+        &self,
+        ctx: &mut Ctx,
+        comm: &mut Comm,
+        state: &mut SolverState,
+        ws: &mut Workspace,
+        rhs: &[f64],
+    ) -> MpiResult<Vec<f64>> {
+        let cfg = self.cfg;
+        let r = state.rows();
+        let beta = norm2_sq(ctx, comm, &self.host, rhs)?.sqrt();
+        let mut z = vec![0.0; r];
+        if beta == 0.0 {
+            return Ok(z);
+        }
+
+        ws.v_in.row_mut(0).copy_from_slice(rhs);
+        let prev = ctx.set_phase(Phase::Compute);
+        let secs = self.backend.scale(ws.v_in.row_mut(0), 1.0 / beta);
+        ctx.advance(secs);
+        ctx.set_phase(prev);
+
+        let mut ls = GivensLs::new(cfg.m_inner, beta);
+        let mut k_used = 0;
+        for i in 0..cfg.m_inner {
+            self.tick_iteration(ctx, state)?;
+
+            let vi = ws.v_in.row(i).to_vec();
+            let mut w = vec![0.0; r];
+            matvec(ctx, comm, self.backend, &state.blk, &vi, &mut w, &mut ws.scratch)?;
+            let hnext = self.orthogonalize(ctx, comm, &ws.v_in, i + 1, &mut w, &mut ws.h)?;
+
+            let mut col = ws.h[..i + 1].to_vec();
+            col.push(hnext);
+            let est = ls.push_col(&col);
+            charge_host(ctx, &self.host, ls.push_flops(), 8.0 * ls.push_flops());
+            k_used = i + 1;
+
+            if hnext <= BREAKDOWN * beta {
+                break;
+            }
+            ws.v_in.row_mut(i + 1).copy_from_slice(&w);
+            let prev = ctx.set_phase(Phase::Compute);
+            let secs = self.backend.scale(ws.v_in.row_mut(i + 1), 1.0 / hnext);
+            ctx.advance(secs);
+            ctx.set_phase(prev);
+
+            if cfg.inner_tol > 0.0 && est / beta < cfg.inner_tol {
+                break;
+            }
+        }
+
+        let y = ls.solve_y();
+        charge_host(ctx, &self.host, ls.solve_flops(), 8.0 * ls.solve_flops());
+        let mut y_full = vec![0.0; ws.v_in.m];
+        y_full[..y.len()].copy_from_slice(&y);
+        let prev = ctx.set_phase(Phase::Compute);
+        let secs = self.backend.update_x(&ws.v_in, k_used, &y_full, &mut z);
+        ctx.advance(secs);
+        ctx.set_phase(prev);
+        Ok(z)
+    }
+
+    /// CGS(2) orthogonalization of `w` against `v[0..m_used]`.
+    /// On return `h_out[0..m_used]` holds the (accumulated) projection
+    /// coefficients and the result is the *global* norm of the new w.
+    fn orthogonalize(
+        &self,
+        ctx: &mut Ctx,
+        comm: &mut Comm,
+        v: &DenseBasis,
+        m_used: usize,
+        w: &mut [f64],
+        h_out: &mut [f64],
+    ) -> MpiResult<f64> {
+        let passes = if self.cfg.reorth { 2 } else { 1 };
+        let mut h_acc = vec![0.0; m_used];
+        let mut nsq_local = 0.0;
+        for _ in 0..passes {
+            let mut h = vec![0.0; v.m];
+            let prev = ctx.set_phase(Phase::Compute);
+            let secs = self.backend.dot_partials(v, m_used, w, &mut h);
+            ctx.advance(secs);
+            ctx.set_phase(prev);
+            allreduce(ctx, comm, &mut h[..m_used])?;
+            let prev = ctx.set_phase(Phase::Compute);
+            let (nsq, secs) = self.backend.update_w(v, m_used, w, &h);
+            ctx.advance(secs);
+            ctx.set_phase(prev);
+            nsq_local = nsq;
+            for i in 0..m_used {
+                h_acc[i] += h[i];
+            }
+        }
+        let mut buf = [nsq_local];
+        allreduce(ctx, comm, &mut buf)?;
+        h_out[..m_used].copy_from_slice(&h_acc);
+        Ok(buf[0].sqrt())
+    }
+
+    /// Per-inner-iteration bookkeeping: failure injection, progress counter,
+    /// recompute-phase routing.
+    fn tick_iteration(&self, ctx: &mut Ctx, state: &mut SolverState) -> MpiResult<()> {
+        let next = state.scalars.inner_iters_done + 1;
+        // A rank already marked dead in the registry (co-scheduled
+        // simultaneous kill claimed by a peer) must also terminate.
+        if ctx.world.injector.should_die(ctx.rank, next) || !ctx.world.is_alive(ctx.rank) {
+            return Err(ctx.die());
+        }
+        ctx.recompute = next <= state.hwm_iters;
+        state.scalars.inner_iters_done = next;
+        state.hwm_iters = state.hwm_iters.max(next);
+        ctx.iterations += 1;
+        Ok(())
+    }
+}

@@ -1,0 +1,16 @@
+//! Distributed FT-GMRES solver (paper §V-§VI).
+//!
+//! * [`fgmres`] — the flexible inner-outer iteration with checkpointing
+//!   after every inner solve;
+//! * [`givens`] — host-side Hessenberg least-squares;
+//! * [`parops`] — halo-exchanged SpMV and global reductions;
+//! * [`state`] — the distributed objects the paper checkpoints and the
+//!   per-rank localized structures.
+
+pub mod fgmres;
+pub mod givens;
+pub mod parops;
+pub mod state;
+
+pub use fgmres::{FtGmres, FtGmresCfg, Outcome};
+pub use state::{IterScalars, SolverState};

@@ -1,0 +1,73 @@
+//! Distributed vector primitives: halo-exchanged SpMV and global reductions,
+//! with phase accounting (Compute for local kernels, Comm for messages).
+
+use crate::backend::Backend;
+use crate::metrics::Phase;
+use crate::netsim::ComputeModel;
+use crate::problem::{exchange_halo, EllBlock};
+use crate::simmpi::{Comm, Ctx, MpiResult};
+
+/// Shared scratch for the halo-extended source vector.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    pub x_halo: Vec<f64>,
+}
+
+impl Scratch {
+    pub fn ensure(&mut self, len: usize) {
+        if self.x_halo.len() < len {
+            self.x_halo.resize(len, 0.0);
+        }
+    }
+}
+
+/// y = A_local x  (halo exchange + local SpMV).
+pub fn matvec(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    backend: &dyn Backend,
+    blk: &EllBlock,
+    x: &[f64],
+    y: &mut [f64],
+    scratch: &mut Scratch,
+) -> MpiResult<()> {
+    scratch.ensure(blk.x_halo_len());
+    scratch.x_halo[..blk.rows].copy_from_slice(&x[..blk.rows]);
+    let prev = ctx.set_phase(Phase::Comm);
+    let res = exchange_halo(ctx, comm, blk, &mut scratch.x_halo);
+    ctx.set_phase(prev);
+    res?;
+    let prev = ctx.set_phase(Phase::Compute);
+    let secs = backend.spmv(blk, &scratch.x_halo, y);
+    ctx.advance(secs);
+    ctx.set_phase(prev);
+    Ok(())
+}
+
+/// Global squared 2-norm of a distributed vector.
+pub fn norm2_sq(ctx: &mut Ctx, comm: &mut Comm, host: &ComputeModel, v: &[f64]) -> MpiResult<f64> {
+    let prev = ctx.set_phase(Phase::Compute);
+    let local: f64 = v.iter().map(|x| x * x).sum();
+    ctx.advance(host.cost(2.0 * v.len() as f64, 8.0 * v.len() as f64));
+    ctx.set_phase(Phase::Comm);
+    let mut buf = [local];
+    let res = comm.allreduce_sum(ctx, &mut buf);
+    ctx.set_phase(prev);
+    res?;
+    Ok(buf[0])
+}
+
+/// Allreduce a small coefficient slice (phase = Comm).
+pub fn allreduce(ctx: &mut Ctx, comm: &mut Comm, data: &mut [f64]) -> MpiResult<()> {
+    let prev = ctx.set_phase(Phase::Comm);
+    let res = comm.allreduce_sum(ctx, data);
+    ctx.set_phase(prev);
+    res
+}
+
+/// Charge a host-side vector op (copy/axpy-style) to Compute.
+pub fn charge_host(ctx: &mut Ctx, host: &ComputeModel, flops: f64, bytes: f64) {
+    let prev = ctx.set_phase(Phase::Compute);
+    ctx.advance(host.cost(flops, bytes));
+    ctx.set_phase(prev);
+}

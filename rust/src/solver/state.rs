@@ -1,0 +1,365 @@
+//! Per-rank solver state: the distributed objects the paper checkpoints
+//! (static matrix block + rhs; dynamic solution vector, Krylov basis and
+//! iteration state) plus the localized compute structures rebuilt after
+//! every recovery.
+//!
+//! The dynamic checkpoint taken after each inner solve contains everything
+//! needed to resume the outer FGMRES cycle exactly where it stopped:
+//! the cycle-start solution x0, the flexible bases V and Z built so far,
+//! and the (replicated) rotated-Hessenberg least-squares state.  Recovery
+//! therefore recomputes at most one inner solve — the paper's "upper bound
+//! on the amount of re-computation".
+
+use crate::backend::DenseBasis;
+use crate::checkpoint::{obj, CkptStore, Version};
+use crate::metrics::Phase;
+use crate::netsim::ComputeModel;
+use crate::problem::{EllBlock, Grid3D, MatrixRows, Partition};
+use crate::simmpi::{Blob, Comm, Ctx, MpiResult};
+use crate::solver::givens::GivensLs;
+
+/// The synthetic truth vector: analytic, so RHS generation and solution
+/// verification need no communication.
+pub fn x_true(g: usize) -> f64 {
+    (g as f64 * 0.017).sin() + 0.5 * (g as f64 * 0.003).cos()
+}
+
+/// Iteration scalars kept consistent across ranks (the paper's "local state
+/// which is supposed to be consistent across processes").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IterScalars {
+    /// Global inner-iteration progress counter.
+    pub inner_iters_done: u64,
+    /// Next checkpoint version to write.
+    pub next_version: Version,
+    /// Global ||b||.
+    pub bnorm: f64,
+}
+
+/// Mid-cycle outer-iteration state (replicated small data).
+#[derive(Debug, Clone)]
+pub struct CycleCtl {
+    /// Index of the last fully completed outer step.
+    pub j_done: usize,
+    /// Rotated Hessenberg least-squares state for the cycle.
+    pub ls: GivensLs,
+}
+
+/// Full per-rank solver state.
+#[derive(Debug)]
+pub struct SolverState {
+    pub grid: Grid3D,
+    /// Current block-row partition (over the current communicator size).
+    pub part: Partition,
+    /// My matrix rows (global columns) — the redistribution currency.
+    pub mat: MatrixRows,
+    /// Localized ELL block + halo plan.
+    pub blk: EllBlock,
+    /// Cycle-start solution block x0 (live rows).  Only updated at cycle
+    /// boundaries; mid-cycle progress lives in (V, Z, ls).
+    pub x: Vec<f64>,
+    /// RHS block.
+    pub b: Vec<f64>,
+    /// Outer flexible basis V (m_outer + 1 slots).
+    pub v_out: DenseBasis,
+    /// Outer preconditioned basis Z (m_outer slots).
+    pub z_out: DenseBasis,
+    /// Mid-cycle control (None between cycles).
+    pub cycle: Option<CycleCtl>,
+    pub scalars: IterScalars,
+    /// Iteration high-water mark: work below this is recomputation.
+    pub hwm_iters: u64,
+}
+
+impl SolverState {
+    /// Initial setup at comm rank `me` of `comm`: generate my rows (the
+    /// paper's initial data distribution), build the halo plan, compute the
+    /// analytic RHS, agree on ||b||, and seed the checkpoint store with the
+    /// static objects and the initial dynamic state (version 0).
+    #[allow(clippy::too_many_arguments)]
+    pub fn setup(
+        ctx: &mut Ctx,
+        comm: &mut Comm,
+        store: &mut CkptStore,
+        grid: Grid3D,
+        host: &ComputeModel,
+        m_outer: usize,
+        ckpt_buddies: usize,
+        ckpt_enabled: bool,
+    ) -> MpiResult<SolverState> {
+        let me = comm.rank;
+        let part = Partition::balanced(grid.n(), comm.size());
+        let range = part.range(me);
+        let mat = MatrixRows::generate(&grid, range.start, range.len());
+        // Generation cost: touch every slot once.
+        ctx.advance(host.cost(
+            (mat.rows * crate::problem::K) as f64,
+            (12 * mat.rows * crate::problem::K) as f64,
+        ));
+        let blk = EllBlock::build(&mat, &part, me);
+
+        // b = A * x_true, computable locally (x_true analytic).
+        let mut b = vec![0.0; mat.rows];
+        for r in 0..mat.rows {
+            let mut acc = 0.0;
+            for k in 0..crate::problem::K {
+                let idx = r * crate::problem::K + k;
+                acc += mat.vals[idx] * x_true(mat.gcols[idx] as usize);
+            }
+            b[r] = acc;
+        }
+        ctx.advance(host.cost(
+            (2 * mat.rows * crate::problem::K) as f64,
+            (16 * mat.rows * crate::problem::K) as f64,
+        ));
+
+        let prev = ctx.set_phase(Phase::Comm);
+        let mut nsq = [b.iter().map(|v| v * v).sum::<f64>()];
+        comm.allreduce_sum(ctx, &mut nsq)?;
+        ctx.set_phase(prev);
+        let bnorm = nsq[0].sqrt();
+
+        let rows = mat.rows;
+        let mut state = SolverState {
+            grid,
+            part,
+            mat,
+            blk,
+            x: vec![0.0; rows],
+            b,
+            v_out: DenseBasis::zeros(m_outer + 1, rows),
+            z_out: DenseBasis::zeros(m_outer, rows),
+            cycle: None,
+            scalars: IterScalars { inner_iters_done: 0, next_version: 1, bnorm },
+            hwm_iters: 0,
+        };
+        // Initial full checkpoint (static + dynamic) at version 0.
+        if ckpt_enabled {
+            state.establish_checkpoints(ctx, comm, store, 0, ckpt_buddies)?;
+        }
+        Ok(state)
+    }
+
+    /// My live row count.
+    pub fn rows(&self) -> usize {
+        self.mat.rows
+    }
+
+    // ------------------------------------------------------------------
+    // Checkpoint object (de)serialization
+    // ------------------------------------------------------------------
+
+    /// Dynamic basis payload: live V rows (j_done + 2) and Z rows
+    /// (j_done + 1) concatenated; empty between cycles.
+    pub fn basis_blob(&self) -> Blob {
+        match &self.cycle {
+            None => Blob::from_i64s(vec![0, 0]),
+            Some(c) => {
+                let nv = c.j_done + 2;
+                let nz = c.j_done + 1;
+                let r = self.rows();
+                let mut f = Vec::with_capacity((nv + nz) * r);
+                for j in 0..nv {
+                    f.extend_from_slice(self.v_out.row(j));
+                }
+                for j in 0..nz {
+                    f.extend_from_slice(self.z_out.row(j));
+                }
+                Blob { f, i: vec![nv as i64, nz as i64], wire: None }
+            }
+        }
+    }
+
+    /// Iteration scalars + replicated least-squares state.
+    pub fn iter_blob(&self) -> Blob {
+        let (j, ls_flat) = match &self.cycle {
+            None => (-1i64, Vec::new()),
+            Some(c) => (c.j_done as i64, c.ls.to_flat()),
+        };
+        let mut f = vec![self.scalars.bnorm];
+        f.extend_from_slice(&ls_flat);
+        Blob {
+            f,
+            i: vec![self.scalars.inner_iters_done as i64, self.scalars.next_version, j],
+            wire: None,
+        }
+    }
+
+    /// Restore scalars + cycle control from an ITER blob.
+    pub fn restore_iter(&mut self, blob: &Blob) {
+        self.scalars = IterScalars {
+            inner_iters_done: blob.i[0] as u64,
+            next_version: blob.i[1],
+            bnorm: blob.f[0],
+        };
+        let j = blob.i[2];
+        self.cycle = if j < 0 {
+            None
+        } else {
+            Some(CycleCtl { j_done: j as usize, ls: GivensLs::from_flat(&blob.f[1..]) })
+        };
+    }
+
+    /// Restore V/Z from a BASIS blob (already sliced to my current rows).
+    pub fn restore_basis(&mut self, blob: &Blob) {
+        let r = self.rows();
+        self.v_out = DenseBasis::zeros(self.v_out.m, r);
+        self.z_out = DenseBasis::zeros(self.z_out.m, r);
+        let nv = blob.i[0] as usize;
+        let nz = blob.i[1] as usize;
+        debug_assert_eq!(blob.f.len(), (nv + nz) * r, "basis blob shape mismatch");
+        for j in 0..nv {
+            self.v_out.row_mut(j).copy_from_slice(&blob.f[j * r..(j + 1) * r]);
+        }
+        for j in 0..nz {
+            let off = (nv + j) * r;
+            self.z_out.row_mut(j).copy_from_slice(&blob.f[off..off + r]);
+        }
+    }
+
+    /// Bundle every checkpointed object at `version` and ship to buddies.
+    /// Used for the initial distribution and for post-recovery
+    /// re-establishment (the paper's "update all the in-memory checkpoints").
+    pub fn establish_checkpoints(
+        &mut self,
+        ctx: &mut Ctx,
+        comm: &mut Comm,
+        store: &mut CkptStore,
+        version: Version,
+        k: usize,
+    ) -> MpiResult<()> {
+        let ds = ctx.world.net.params.data_scale;
+        let objs = vec![
+            (obj::MAT, self.mat.to_blob().scaled(ds)),
+            (obj::RHS, Blob::from_f64s(self.b.clone()).scaled(ds)),
+            (obj::X, Blob::from_f64s(self.x.clone()).scaled(ds)),
+            (obj::BASIS, self.basis_blob().scaled(ds)),
+            (obj::ITER, self.iter_blob()),
+        ];
+        crate::checkpoint::checkpoint(ctx, comm, store, &objs, version, k)?;
+        self.scalars.next_version = version + 1;
+        Ok(())
+    }
+
+    /// Periodic dynamic-state checkpoint (x0 + basis + iteration state) —
+    /// taken after each completed inner solve, per the paper.
+    pub fn checkpoint_dynamic(
+        &mut self,
+        ctx: &mut Ctx,
+        comm: &mut Comm,
+        store: &mut CkptStore,
+        k: usize,
+    ) -> MpiResult<()> {
+        let version = self.scalars.next_version;
+        let ds = ctx.world.net.params.data_scale;
+        let objs = vec![
+            (obj::X, Blob::from_f64s(self.x.clone()).scaled(ds)),
+            (obj::BASIS, self.basis_blob().scaled(ds)),
+            (obj::ITER, self.iter_blob()),
+        ];
+        crate::checkpoint::checkpoint(ctx, comm, store, &objs, version, k)?;
+        self.scalars.next_version = version + 1;
+        Ok(())
+    }
+
+    /// Rebuild localized structures after `mat`/`part` changed (recovery).
+    pub fn relocalize(&mut self, me: usize) {
+        self.blk = EllBlock::build(&self.mat, &self.part, me);
+    }
+
+    /// Verification: max |x - x_true| over local rows (examples/tests).
+    pub fn local_error(&self) -> f64 {
+        self.x
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (v - x_true(self.mat.start + i)).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_state() -> SolverState {
+        let grid = Grid3D::cube(4);
+        let part = Partition::balanced(grid.n(), 1);
+        let mat = MatrixRows::generate(&grid, 0, grid.n());
+        let blk = EllBlock::build(&mat, &part, 0);
+        let rows = mat.rows;
+        SolverState {
+            grid,
+            part,
+            mat,
+            blk,
+            x: vec![1.0; rows],
+            b: vec![0.0; rows],
+            v_out: DenseBasis::zeros(5, rows),
+            z_out: DenseBasis::zeros(4, rows),
+            cycle: None,
+            scalars: IterScalars { inner_iters_done: 42, next_version: 3, bnorm: 2.5 },
+            hwm_iters: 42,
+        }
+    }
+
+    #[test]
+    fn iter_blob_roundtrip_no_cycle() {
+        let mut s = mini_state();
+        let blob = s.iter_blob();
+        s.scalars.bnorm = 0.0;
+        s.restore_iter(&blob);
+        assert_eq!(s.scalars.bnorm, 2.5);
+        assert_eq!(s.scalars.inner_iters_done, 42);
+        assert!(s.cycle.is_none());
+    }
+
+    #[test]
+    fn iter_blob_roundtrip_mid_cycle() {
+        let mut s = mini_state();
+        let mut ls = GivensLs::new(4, 2.0);
+        ls.push_col(&[1.0, 0.5]);
+        s.cycle = Some(CycleCtl { j_done: 0, ls });
+        let blob = s.iter_blob();
+        s.cycle = None;
+        s.restore_iter(&blob);
+        let c = s.cycle.as_ref().unwrap();
+        assert_eq!(c.j_done, 0);
+        assert_eq!(c.ls.k(), 1);
+    }
+
+    #[test]
+    fn basis_blob_roundtrip() {
+        let mut s = mini_state();
+        for i in 0..s.rows() {
+            s.v_out.row_mut(0)[i] = i as f64;
+            s.v_out.row_mut(1)[i] = 2.0 * i as f64;
+            s.z_out.row_mut(0)[i] = 3.0 * i as f64;
+        }
+        let mut ls = GivensLs::new(4, 1.0);
+        ls.push_col(&[1.0, 0.0]);
+        s.cycle = Some(CycleCtl { j_done: 0, ls });
+        let blob = s.basis_blob();
+        assert_eq!(blob.i, vec![2, 1]);
+        let v0: Vec<f64> = s.v_out.row(0).to_vec();
+        s.v_out.reset();
+        s.z_out.reset();
+        s.restore_basis(&blob);
+        assert_eq!(s.v_out.row(0), &v0[..]);
+        assert_eq!(s.z_out.row(0)[2], 6.0);
+    }
+
+    #[test]
+    fn basis_blob_empty_between_cycles() {
+        let s = mini_state();
+        let blob = s.basis_blob();
+        assert_eq!(blob.i, vec![0, 0]);
+        assert!(blob.f.is_empty());
+    }
+
+    #[test]
+    fn x_true_is_bounded() {
+        for g in 0..10_000 {
+            assert!(x_true(g).abs() < 1.6);
+        }
+    }
+}

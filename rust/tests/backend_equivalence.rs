@@ -1,0 +1,155 @@
+//! Native-vs-PJRT backend equivalence: the AOT HLO artifacts must produce
+//! the same numerics as the pure-Rust kernels, op by op and end-to-end.
+//!
+//! Requires `artifacts/` (run `make artifacts`); tests are skipped with a
+//! message if the manifest is missing (e.g., a cargo-only environment).
+
+mod common;
+
+use std::path::Path;
+use std::sync::Arc;
+
+use common::{quick_config, Rng};
+use ulfm_ftgmres::backend::native::NativeBackend;
+use ulfm_ftgmres::backend::{Backend, DenseBasis};
+use ulfm_ftgmres::config::BackendKind;
+use ulfm_ftgmres::coordinator;
+use ulfm_ftgmres::netsim::ComputeModel;
+use ulfm_ftgmres::problem::{EllBlock, Grid3D, MatrixRows, Partition};
+use ulfm_ftgmres::recovery::Strategy;
+use ulfm_ftgmres::runtime::PjrtEngine;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    // Tests run from the crate root (rust/); artifacts live one level up.
+    for p in ["../artifacts", "artifacts"] {
+        let path = Path::new(p);
+        if path.join("manifest.tsv").exists() {
+            return Some(Box::leak(path.to_path_buf().into_boxed_path()));
+        }
+    }
+    None
+}
+
+fn engine() -> Option<PjrtEngine> {
+    let dir = artifacts_dir()?;
+    Some(PjrtEngine::load(dir, ComputeModel::default(), false).expect("load artifacts"))
+}
+
+fn close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn ops_match_native_exactly() {
+    let Some(eng) = engine() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let native = NativeBackend::default();
+    let mut rng = Rng::new(11);
+
+    // A real localized block (not just random data): 6^3 grid, 2 ranks.
+    let g = Grid3D::cube(6);
+    let part = Partition::balanced(g.n(), 2);
+    let range = part.range(0);
+    let mat = MatrixRows::generate(&g, range.start, range.len());
+    let blk = EllBlock::build(&mat, &part, 0);
+
+    let xh: Vec<f64> = (0..blk.x_halo_len()).map(|_| rng.f64()).collect();
+    let mut y_n = vec![0.0; blk.rows];
+    let mut y_p = vec![0.0; blk.rows];
+    native.spmv(&blk, &xh, &mut y_n);
+    eng.spmv(&blk, &xh, &mut y_p);
+    close(&y_n, &y_p, 1e-13, "spmv");
+
+    // Basis ops at the artifact's M = 26.
+    let r = blk.rows;
+    let mut v = DenseBasis::zeros(26, r);
+    for j in 0..26 {
+        for i in 0..r {
+            v.row_mut(j)[i] = rng.f64();
+        }
+    }
+    let w: Vec<f64> = (0..r).map(|_| rng.f64()).collect();
+    for m_used in [1usize, 5, 26] {
+        let mut h_n = vec![0.0; 26];
+        let mut h_p = vec![0.0; 26];
+        native.dot_partials(&v, m_used, &w, &mut h_n);
+        eng.dot_partials(&v, m_used, &w, &mut h_p);
+        close(&h_n, &h_p, 1e-12, "dot_partials");
+
+        let mut wn = w.clone();
+        let mut wp = w.clone();
+        let (nsq_n, _) = native.update_w(&v, m_used, &mut wn, &h_n);
+        let (nsq_p, _) = eng.update_w(&v, m_used, &mut wp, &h_p);
+        close(&wn, &wp, 1e-12, "update_w");
+        assert!((nsq_n - nsq_p).abs() < 1e-10 * (1.0 + nsq_n));
+
+        let mut xn = w.clone();
+        let mut xp = w.clone();
+        native.update_x(&v, m_used, &h_n, &mut xn);
+        eng.update_x(&v, m_used, &h_p, &mut xp);
+        close(&xn, &xp, 1e-12, "update_x");
+    }
+
+    let mut sn = w.clone();
+    let mut sp = w.clone();
+    native.scale(&mut sn, 0.37);
+    eng.scale(&mut sp, 0.37);
+    close(&sn, &sp, 1e-15, "scale");
+}
+
+#[test]
+fn full_solve_matches_native_backend() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    // PJRT artifacts are fixed at M=26, so use the default m=25 solver
+    // shape on a small grid.
+    let mut cfg = quick_config(2, Strategy::NoProtection, 0);
+    cfg.grid = Grid3D::cube(8);
+    cfg.solver.m_inner = 25;
+    cfg.solver.m_outer = 25;
+    cfg.solver.max_cycles = 8;
+    let native_rep = coordinator::run(&cfg).unwrap();
+
+    let mut pcfg = cfg.clone();
+    pcfg.backend = BackendKind::Pjrt;
+    pcfg.artifacts_dir = dir.to_string_lossy().into_owned();
+    let eng = coordinator::make_backend(&pcfg).unwrap();
+    let pjrt_rep = coordinator::run_with_backend(&pcfg, Arc::clone(&eng)).unwrap();
+
+    assert!(native_rep.converged && pjrt_rep.converged);
+    assert_eq!(native_rep.iterations, pjrt_rep.iterations, "same iteration path");
+    let rel_diff = (native_rep.final_relres - pjrt_rep.final_relres).abs()
+        / native_rep.final_relres.max(1e-300);
+    assert!(rel_diff < 1e-3, "residuals close: {} vs {}",
+        native_rep.final_relres, pjrt_rep.final_relres);
+}
+
+#[test]
+fn pjrt_solve_with_failure_recovers() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let mut cfg = quick_config(4, Strategy::Shrink, 1);
+    cfg.grid = Grid3D::cube(12);
+    cfg.solver.m_inner = 25;
+    cfg.solver.m_outer = 25;
+    cfg.solver.tol = 1e-10;
+    cfg.backend = BackendKind::Pjrt;
+    cfg.artifacts_dir = dir.to_string_lossy().into_owned();
+    // Kill schedule for m_inner=25 fires at iteration 62; the 12^3 problem
+    // at 1e-10 runs ~75+ iterations, so the kill lands.
+    let rep = coordinator::run(&cfg).unwrap();
+    assert!(rep.converged);
+    assert_eq!(rep.failures, 1, "kill fired on the PJRT path");
+}

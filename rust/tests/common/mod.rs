@@ -1,0 +1,97 @@
+//! Shared helpers for the integration tests: tiny-world builders, quick run
+//! configs, and a dependency-free PRNG for the property-based tests.
+
+#![allow(dead_code)]
+
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+use ulfm_ftgmres::config::RunConfig;
+use ulfm_ftgmres::failure::{InjectionPlan, Injector};
+use ulfm_ftgmres::netsim::NetParams;
+use ulfm_ftgmres::problem::Grid3D;
+use ulfm_ftgmres::recovery::Strategy;
+use ulfm_ftgmres::simmpi::{Ctx, Msg, World};
+
+/// SplitMix64 — deterministic, seedable, no dependencies.
+pub struct Rng(pub u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_add(0x9E3779B97F4A7C15))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform f64 in [-1, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 52) as f64 * 2.0 - 1.0
+    }
+}
+
+/// Spin until `rank` is registered dead (tests that kill a rank and then
+/// immediately act on membership must synchronize with the registry write,
+/// as the production path does via failure detection).
+pub fn wait_dead(world: &World, rank: usize) {
+    while world.is_alive(rank) {
+        std::thread::yield_now();
+    }
+}
+
+/// Build a world of `n` app ranks (no spares) with per-rank contexts.
+pub fn tiny_world(n: usize) -> (Arc<World>, Vec<(usize, Receiver<Msg>)>) {
+    let (w, rxs) = World::new(
+        n,
+        0,
+        NetParams::default(),
+        Injector::new(InjectionPlan::none()),
+    );
+    (w, rxs.into_iter().enumerate().collect())
+}
+
+/// Run `f` on `n` rank threads, each given its `Ctx`; returns per-rank
+/// results in rank order.
+pub fn run_ranks<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send + 'static,
+    F: Fn(Ctx) -> T + Send + Sync + 'static,
+{
+    let (w, rxs) = tiny_world(n);
+    let f = Arc::new(f);
+    let handles: Vec<_> = rxs
+        .into_iter()
+        .map(|(rank, rx)| {
+            let w = w.clone();
+            let f = f.clone();
+            std::thread::spawn(move || f(Ctx::new(w, rank, rx)))
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect()
+}
+
+/// A seconds-scale solver config for integration tests.
+pub fn quick_config(p: usize, strategy: Strategy, failures: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.grid = Grid3D::cube(12);
+    cfg.p = p;
+    cfg.strategy = strategy;
+    cfg.failures = failures;
+    cfg.solver.tol = 1e-10;
+    // A short inner solve compresses the kill schedule (kills at iterations
+    // 25, 40, 55, 70) so multi-failure campaigns fit small problems.
+    cfg.solver.m_inner = 10;
+    cfg.solver.m_outer = 20;
+    cfg.solver.max_cycles = 20;
+    cfg
+}

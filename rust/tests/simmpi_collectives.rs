@@ -1,0 +1,173 @@
+//! Multi-rank integration tests of the simulated MPI collectives: values,
+//! clock behaviour, tag isolation, and the non-power-of-two allreduce path.
+
+mod common;
+
+use common::run_ranks;
+use ulfm_ftgmres::simmpi::{Blob, Comm};
+
+#[test]
+fn allreduce_sum_all_sizes() {
+    // Cover pow2 and non-pow2 sizes (the recursive-doubling pre/post path).
+    for n in [2usize, 3, 4, 5, 7, 8, 12, 16, 21] {
+        let results = run_ranks(n, move |mut ctx| {
+            let mut comm = Comm::world(n, ctx.rank);
+            let mut data = [ctx.rank as f64 + 1.0, 1.0];
+            comm.allreduce_sum(&mut ctx, &mut data).unwrap();
+            data
+        });
+        let expect = (n * (n + 1) / 2) as f64;
+        for (r, d) in results.iter().enumerate() {
+            assert_eq!(d[0], expect, "n={n} rank={r}");
+            assert_eq!(d[1], n as f64);
+        }
+    }
+}
+
+#[test]
+fn allreduce_results_bitwise_identical_across_ranks() {
+    let n = 13;
+    let results = run_ranks(n, move |mut ctx| {
+        let mut comm = Comm::world(n, ctx.rank);
+        // Values chosen so naive per-rank orderings would differ in rounding.
+        let mut data = [0.1 * (ctx.rank as f64 + 1.0), 1e-17 + ctx.rank as f64];
+        comm.allreduce_sum(&mut ctx, &mut data).unwrap();
+        data
+    });
+    for d in &results[1..] {
+        assert_eq!(d[0].to_bits(), results[0][0].to_bits());
+        assert_eq!(d[1].to_bits(), results[0][1].to_bits());
+    }
+}
+
+#[test]
+fn allreduce_min_i64() {
+    let n = 6;
+    let results = run_ranks(n, move |mut ctx| {
+        let mut comm = Comm::world(n, ctx.rank);
+        let mut v = [ctx.rank as i64 + 10, -(ctx.rank as i64)];
+        comm.allreduce_min_i64(&mut ctx, &mut v).unwrap();
+        v
+    });
+    for v in results {
+        assert_eq!(v, [10, -(n as i64 - 1)]);
+    }
+}
+
+#[test]
+fn bcast_from_root() {
+    let n = 9;
+    let results = run_ranks(n, move |mut ctx| {
+        let mut comm = Comm::world(n, ctx.rank);
+        let mine = if ctx.rank == 0 {
+            Blob::from_f64s(vec![3.5, 4.5])
+        } else {
+            Blob::empty()
+        };
+        comm.bcast(&mut ctx, mine).unwrap().f
+    });
+    for r in results {
+        assert_eq!(r, vec![3.5, 4.5]);
+    }
+}
+
+#[test]
+fn barrier_synchronizes_clocks() {
+    let n = 8;
+    let clocks = run_ranks(n, move |mut ctx| {
+        let mut comm = Comm::world(n, ctx.rank);
+        // Skew the clocks, then barrier.
+        ctx.advance(ctx.rank as f64 * 1e-3);
+        comm.barrier(&mut ctx).unwrap();
+        ctx.clock
+    });
+    let max = clocks.iter().cloned().fold(0.0, f64::max);
+    // After the barrier no clock may be before the slowest pre-barrier rank.
+    for c in clocks {
+        assert!(c >= 7e-3 && c <= max + 1e-2, "clock {c}");
+    }
+}
+
+#[test]
+fn allgather_variable_sizes() {
+    let n = 5;
+    let results = run_ranks(n, move |mut ctx| {
+        let mut comm = Comm::world(n, ctx.rank);
+        let mine = Blob::from_f64s(vec![ctx.rank as f64; ctx.rank + 1]);
+        comm.allgather(&mut ctx, mine).unwrap()
+    });
+    for blobs in results {
+        assert_eq!(blobs.len(), n);
+        for (r, b) in blobs.iter().enumerate() {
+            assert_eq!(b.f, vec![r as f64; r + 1]);
+        }
+    }
+}
+
+#[test]
+fn agree_bitwise_and() {
+    let n = 7;
+    let results = run_ranks(n, move |mut ctx| {
+        let mut comm = Comm::world(n, ctx.rank);
+        let flag = if ctx.rank == 3 { 0b101 } else { 0b111 };
+        comm.agree(&mut ctx, flag).unwrap()
+    });
+    for r in results {
+        assert_eq!(r, 0b101);
+    }
+}
+
+#[test]
+fn back_to_back_collectives_do_not_mix() {
+    let n = 4;
+    let results = run_ranks(n, move |mut ctx| {
+        let mut comm = Comm::world(n, ctx.rank);
+        let mut out = Vec::new();
+        for round in 0..20 {
+            let mut v = [ctx.rank as f64 + round as f64];
+            comm.allreduce_sum(&mut ctx, &mut v).unwrap();
+            out.push(v[0]);
+        }
+        out
+    });
+    for r in results {
+        for (round, v) in r.iter().enumerate() {
+            assert_eq!(*v, 6.0 + 4.0 * round as f64);
+        }
+    }
+}
+
+#[test]
+fn sendrecv_pairs() {
+    let n = 6;
+    let results = run_ranks(n, move |mut ctx| {
+        let mut comm = Comm::world(n, ctx.rank);
+        let peer = ctx.rank ^ 1;
+        let payload = Blob::scalar(ctx.rank as f64);
+        let got = comm.sendrecv(&mut ctx, peer, 42, payload).unwrap();
+        let _ = &mut comm;
+        got.f[0]
+    });
+    for (r, v) in results.iter().enumerate() {
+        assert_eq!(*v, (r ^ 1) as f64);
+    }
+}
+
+#[test]
+fn clock_monotone_through_collectives() {
+    let n = 5;
+    let ok = run_ranks(n, move |mut ctx| {
+        let mut comm = Comm::world(n, ctx.rank);
+        let mut prev = ctx.clock;
+        for _ in 0..10 {
+            let mut v = [1.0];
+            comm.allreduce_sum(&mut ctx, &mut v).unwrap();
+            if ctx.clock < prev {
+                return false;
+            }
+            prev = ctx.clock;
+        }
+        true
+    });
+    assert!(ok.into_iter().all(|b| b));
+}

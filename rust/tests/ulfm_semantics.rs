@@ -1,0 +1,217 @@
+//! ULFM semantics under real rank threads: failure notification, revoke
+//! unblocking, shrink renumbering, and spare stitching.
+
+mod common;
+
+use common::{run_ranks, wait_dead};
+use ulfm_ftgmres::simmpi::{ulfm, Blob, Comm, Ctl, MpiError};
+
+#[test]
+fn collective_fails_or_revokes_when_rank_dies() {
+    // Rank 2 dies before the collective; everyone else must get ProcFailed
+    // or Revoked (after the first detector revokes) rather than hanging.
+    let n = 6;
+    let results = run_ranks(n, move |mut ctx| {
+        let mut comm = Comm::world(n, ctx.rank);
+        if ctx.rank == 2 {
+            let _ = ctx.die();
+            return "died".to_string();
+        }
+        let mut v = [1.0];
+        match comm.allreduce_sum(&mut ctx, &mut v) {
+            Err(e @ (MpiError::ProcFailed(_) | MpiError::Revoked)) => {
+                // Propagate so blocked peers unblock, like the recovery
+                // driver does.
+                ulfm::revoke(&mut ctx, &comm);
+                format!("err:{}", matches!(e, MpiError::Revoked))
+            }
+            Ok(_) => "ok".to_string(),
+            Err(e) => format!("unexpected:{e}"),
+        }
+    });
+    assert_eq!(results[2], "died");
+    for (r, s) in results.iter().enumerate() {
+        if r != 2 {
+            assert!(s.starts_with("err:") || s == "ok", "rank {r}: {s}");
+        }
+    }
+    // At least the ranks that talk to 2 directly must error.
+    assert!(results.iter().filter(|s| s.starts_with("err:")).count() >= 1);
+}
+
+#[test]
+fn shrink_renumbers_survivors_densely() {
+    let n = 7;
+    let results = run_ranks(n, move |mut ctx| {
+        let comm = Comm::world(n, ctx.rank);
+        if ctx.rank == 3 {
+            let _ = ctx.die();
+            return None;
+        }
+        // Synchronize with the registry (production reaches shrink only
+        // after failure detection).
+        wait_dead(&ctx.world, 3);
+        ulfm::revoke(&mut ctx, &comm);
+        let new_comm = ulfm::shrink(&mut ctx, &comm).unwrap();
+        Some((new_comm.epoch, new_comm.members.clone(), new_comm.rank))
+    });
+    let survivors: Vec<usize> = vec![0, 1, 2, 4, 5, 6];
+    for (r, res) in results.iter().enumerate() {
+        if r == 3 {
+            assert!(res.is_none());
+            continue;
+        }
+        let (epoch, members, my) = res.clone().unwrap();
+        assert_eq!(epoch, 2);
+        assert_eq!(members, survivors);
+        assert_eq!(members[my], r, "dense renumbering preserves order");
+    }
+}
+
+#[test]
+fn shrink_supports_collectives_afterwards() {
+    let n = 5;
+    let results = run_ranks(n, move |mut ctx| {
+        let comm = Comm::world(n, ctx.rank);
+        if ctx.rank == 4 {
+            let _ = ctx.die();
+            return -1.0;
+        }
+        wait_dead(&ctx.world, 4);
+        ulfm::revoke(&mut ctx, &comm);
+        let mut new_comm = ulfm::shrink(&mut ctx, &comm).unwrap();
+        let mut v = [comm.rank as f64];
+        new_comm.allreduce_sum(&mut ctx, &mut v).unwrap();
+        v[0]
+    });
+    for (r, v) in results.iter().enumerate() {
+        if r != 4 {
+            assert_eq!(*v, 6.0, "0+1+2+3 over survivors");
+        }
+    }
+}
+
+#[test]
+fn revoke_unblocks_pending_recv() {
+    // Rank 1 blocks receiving from rank 0 (which never sends); rank 2
+    // revokes the epoch; rank 1 must return Revoked.
+    let n = 3;
+    let results = run_ranks(n, move |mut ctx| {
+        let comm = Comm::world(n, ctx.rank);
+        match ctx.rank {
+            1 => match comm.recv(&mut ctx, 0, 7) {
+                Err(MpiError::Revoked) => "revoked".into(),
+                other => format!("{other:?}"),
+            },
+            2 => {
+                ulfm::revoke(&mut ctx, &comm);
+                "sent".into()
+            }
+            _ => {
+                // Rank 0 must outlive the test without sending tag 7.
+                "idle".to_string()
+            }
+        }
+    });
+    assert_eq!(results[1], "revoked");
+}
+
+#[test]
+fn stitch_spare_restores_original_size() {
+    // 4 app ranks + 1 spare; rank 2 dies; the spare (world 4) takes slot 2.
+    let n_app = 4;
+    let (w, rxs) = ulfm_ftgmres::simmpi::World::new(
+        n_app,
+        1,
+        ulfm_ftgmres::netsim::NetParams::default(),
+        ulfm_ftgmres::failure::Injector::new(ulfm_ftgmres::failure::InjectionPlan::none()),
+    );
+    let handles: Vec<_> = rxs
+        .into_iter()
+        .enumerate()
+        .map(|(rank, rx)| {
+            let w = w.clone();
+            std::thread::spawn(move || {
+                let mut ctx = ulfm_ftgmres::simmpi::Ctx::new(w, rank, rx);
+                if rank == 4 {
+                    // Spare: wait for the invitation, then join + allreduce.
+                    let (epoch, members, as_rank) = ctx.wait_join().expect("join");
+                    assert_eq!(as_rank, 2);
+                    let mut comm = ulfm::join_as_spare(&mut ctx, epoch, members, as_rank).unwrap();
+                    let mut v = [100.0];
+                    comm.allreduce_sum(&mut ctx, &mut v).unwrap();
+                    return v[0];
+                }
+                let comm = Comm::world(n_app, rank);
+                if rank == 2 {
+                    let _ = ctx.die();
+                    return -1.0;
+                }
+                common::wait_dead(&ctx.world, 2);
+                ulfm::revoke(&mut ctx, &comm);
+                let shrunk = ulfm::shrink(&mut ctx, &comm).unwrap();
+                let assignment = vec![(2usize, 4usize)];
+                let mut stitched =
+                    ulfm::stitch_spares(&mut ctx, &comm, &shrunk, &assignment).unwrap();
+                assert_eq!(stitched.size(), 4);
+                assert_eq!(stitched.members, vec![0, 1, 4, 3]);
+                let mut v = [comm.rank as f64];
+                stitched.allreduce_sum(&mut ctx, &mut v).unwrap();
+                v[0]
+            })
+        })
+        .collect();
+    let results: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // Sum over stitched comm: ranks 0,1,3 contribute their old rank ids,
+    // spare contributes 100 -> 0 + 1 + 3 + 100 = 104.
+    for (r, v) in results.iter().enumerate() {
+        if r != 2 {
+            assert_eq!(*v, 104.0, "rank {r}");
+        }
+    }
+}
+
+#[test]
+fn detection_latency_charged_once() {
+    let n = 2;
+    let results = run_ranks(n, move |mut ctx| {
+        if ctx.rank == 1 {
+            let _ = ctx.die();
+            return 0.0;
+        }
+        wait_dead(&ctx.world, 1);
+        let comm = Comm::world(n, ctx.rank);
+        let t0 = ctx.clock;
+        let e1 = comm.send(&mut ctx, 1, 0, Blob::scalar(1.0));
+        let t1 = ctx.clock;
+        let e2 = comm.send(&mut ctx, 1, 0, Blob::scalar(1.0));
+        let t2 = ctx.clock;
+        assert!(e1.is_err() && e2.is_err());
+        // First detection pays detect_latency; the second is immediate.
+        assert!(t1 - t0 >= 1e-3, "first detection charged: {}", t1 - t0);
+        assert!(t2 - t1 < 1e-4, "second detection cheap: {}", t2 - t1);
+        1.0
+    });
+    assert_eq!(results[0], 1.0);
+}
+
+#[test]
+fn shutdown_releases_idle_spare() {
+    let (w, rxs) = ulfm_ftgmres::simmpi::World::new(
+        1,
+        1,
+        ulfm_ftgmres::netsim::NetParams::default(),
+        ulfm_ftgmres::failure::Injector::new(ulfm_ftgmres::failure::InjectionPlan::none()),
+    );
+    let mut it = rxs.into_iter();
+    let (_r0, rx0) = (0, it.next().unwrap());
+    let rx1 = it.next().unwrap();
+    let w2 = w.clone();
+    let spare = std::thread::spawn(move || {
+        let mut ctx = ulfm_ftgmres::simmpi::Ctx::new(w2, 1, rx1);
+        ctx.wait_join().is_none()
+    });
+    let mut ctx0 = ulfm_ftgmres::simmpi::Ctx::new(w, 0, rx0);
+    ctx0.send_ctl(1, Ctl::Shutdown);
+    assert!(spare.join().unwrap(), "spare exits on shutdown");
+}

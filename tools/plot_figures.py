@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""Plot the regenerated paper figures from out/fig{4,5,6}.csv.
+
+Usage:  python tools/plot_figures.py [--out-dir out]
+
+Produces out/fig4.png, out/fig5.png, out/fig6.png in the paper's layout
+(grouped bars per process count; shrink patterned, substitute solid —
+mirroring the originals).
+"""
+
+import argparse
+import csv
+import os
+from collections import defaultdict
+
+import matplotlib
+
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt  # noqa: E402
+
+
+def read(path):
+    with open(path) as f:
+        return list(csv.DictReader(f))
+
+
+def grouped(rows, value_key):
+    """-> {(strategy, failures): {p: value}}, sorted p list."""
+    data = defaultdict(dict)
+    ps = set()
+    for r in rows:
+        p = int(r["p"])
+        ps.add(p)
+        data[(r["strategy"], int(r["failures"]))][p] = float(r[value_key])
+    return data, sorted(ps)
+
+
+def bars(ax, data, ps, f_range, title, ylabel):
+    width = 0.8 / (2 * len(f_range))
+    xs = range(len(ps))
+    for si, strategy in enumerate(["shrink", "substitute"]):
+        for fi, f in enumerate(f_range):
+            series = data.get((strategy, f))
+            if not series:
+                continue
+            offs = (si * len(f_range) + fi - len(f_range) + 0.5) * width
+            vals = [series.get(p, 0.0) for p in ps]
+            ax.bar(
+                [x + offs for x in xs],
+                vals,
+                width=width,
+                label=f"{strategy} {f}F",
+                hatch="//" if strategy == "shrink" else None,
+                edgecolor="black",
+                linewidth=0.3,
+            )
+    ax.set_xticks(list(xs))
+    ax.set_xticklabels([str(p) for p in ps])
+    ax.set_xlabel("processes")
+    ax.set_ylabel(ylabel)
+    ax.set_title(title)
+    ax.legend(fontsize=6, ncol=2)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="out")
+    args = ap.parse_args()
+    od = args.out_dir
+
+    # Figure 4
+    rows = read(os.path.join(od, "fig4.csv"))
+    data, ps = grouped(rows, "slowdown")
+    fig, ax = plt.subplots(figsize=(7, 3.2), dpi=150)
+    bars(ax, data, ps, range(0, 5), "Fig. 4: slowdown vs no protection", "normalized time")
+    ax.axhline(1.0, color="gray", lw=0.5)
+    fig.tight_layout()
+    fig.savefig(os.path.join(od, "fig4.png"))
+
+    # Figure 5
+    rows = read(os.path.join(od, "fig5.csv"))
+    data, ps = grouped(rows, "ckpt_norm")
+    pct, _ = grouped(rows, "ckpt_pct_of_total")
+    fig, ax = plt.subplots(figsize=(7, 3.2), dpi=150)
+    bars(ax, data, ps, range(1, 5), "Fig. 5: checkpoint time (normalized to 0F)", "normalized ckpt time")
+    ax2 = ax.twinx()
+    for strategy, style in [("shrink", "--o"), ("substitute", "-s")]:
+        series = pct.get((strategy, 4), {})
+        ax2.plot(
+            [ps.index(p) for p in ps if p in series],
+            [series[p] for p in ps if p in series],
+            style,
+            color="black",
+            markersize=3,
+            lw=0.8,
+            label=f"{strategy} 4F % of total",
+        )
+    ax2.set_ylabel("% of total (4F)")
+    ax2.legend(fontsize=6, loc="upper right")
+    fig.tight_layout()
+    fig.savefig(os.path.join(od, "fig5.png"))
+
+    # Figure 6
+    rows = read(os.path.join(od, "fig6.csv"))
+    data, ps = grouped(rows, "recovery_norm")
+    pct, _ = grouped(rows, "recovery_pct")
+    fig, ax = plt.subplots(figsize=(7, 3.2), dpi=150)
+    bars(ax, data, ps, range(1, 5), "Fig. 6: recovery time (normalized to 1F)", "normalized recovery time")
+    ax2 = ax.twinx()
+    for strategy, style in [("shrink", "--o"), ("substitute", "-s")]:
+        series = pct.get((strategy, 4), {})
+        ax2.plot(
+            [ps.index(p) for p in ps if p in series],
+            [series[p] for p in ps if p in series],
+            style,
+            color="black",
+            markersize=3,
+            lw=0.8,
+            label=f"{strategy} 4F % of total",
+        )
+    ax2.set_ylabel("% of total (4F)")
+    ax2.legend(fontsize=6, loc="upper right")
+    fig.tight_layout()
+    fig.savefig(os.path.join(od, "fig6.png"))
+
+    print(f"wrote {od}/fig4.png {od}/fig5.png {od}/fig6.png")
+
+
+if __name__ == "__main__":
+    main()
