@@ -1,0 +1,67 @@
+//! Adaptive recovery policy walkthrough: inject *more* failures than warm
+//! spares and watch the `spares-first` policy substitute while the pool
+//! lasts, then degrade gracefully to shrink — the paper's §IV tradeoff
+//! decided per failure event at runtime instead of per run.
+//!
+//! Run with: `cargo run --release --example adaptive_policy`
+
+use ulfm_ftgmres::config::RunConfig;
+use ulfm_ftgmres::coordinator;
+use ulfm_ftgmres::failure::InjectionPlan;
+use ulfm_ftgmres::figures::decision_table;
+use ulfm_ftgmres::problem::Grid3D;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.grid = Grid3D::cube(16);
+    cfg.p = 8;
+    cfg.failures = 3;
+    // One warm spare against three failures: the pool WILL run dry.
+    cfg.warm_spares = Some(1);
+    anyhow::ensure!(cfg.set("policy", "spares-first")?, "policy key");
+    // Short inner solves compress the kill schedule (kills at iterations
+    // 25, 35, 45) so the run stays seconds-scale.
+    cfg.solver.m_inner = 10;
+    cfg.solver.m_outer = 20;
+    cfg.solver.max_cycles = 20;
+    cfg.solver.tol = 1e-10;
+
+    println!(
+        "p = {} ranks, warm spares = {}, injected failures = {}, policy = {}",
+        cfg.p,
+        cfg.warm_spare_count(),
+        cfg.failures,
+        cfg.policy().name()
+    );
+
+    // A dense back-to-back campaign (one checkpoint window apart) so the
+    // pool is exhausted mid-run, not at the end.
+    let plan = InjectionPlan::exhaustion_campaign(cfg.p, cfg.failures, cfg.solver.m_inner as u64);
+    let backend = coordinator::make_backend(&cfg)?;
+    let rep = coordinator::run_custom(&cfg, backend, plan)?;
+
+    println!(
+        "\nconverged = {}  relres = {:.3e}  iterations = {}  failures = {}",
+        rep.converged, rep.final_relres, rep.iterations, rep.failures
+    );
+    println!("virtual time-to-solution = {:.4}s\n", rep.time_to_solution);
+    println!("{}", decision_table(&rep).to_text());
+
+    // The hybrid timeline the fixed strategies cannot express: substitute
+    // while a spare is free, shrink afterwards.
+    assert!(rep.converged, "adaptive run must converge");
+    let names: Vec<&str> = rep.decisions.iter().map(|d| d.decision).collect();
+    assert_eq!(names.first(), Some(&"substitute"), "decisions: {names:?}");
+    let first_shrink = names.iter().position(|&n| n == "shrink");
+    assert!(
+        first_shrink.is_some_and(|i| i >= 1),
+        "expected a shrink decision after pool exhaustion, got {names:?}"
+    );
+    println!(
+        "hybrid run: {} substitution(s) while the pool lasted, then {} shrink(s)",
+        names.iter().filter(|&&n| n == "substitute").count(),
+        names.iter().filter(|&&n| n == "shrink").count()
+    );
+    println!("\nOK");
+    Ok(())
+}

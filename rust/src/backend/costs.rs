@@ -1,9 +1,17 @@
-//! Shared virtual-cost formulas for the five solver ops, used by the native
-//! backend and by the PJRT backend in modeled-clock mode (so both charge
-//! identical virtual time for identical work).
+//! Shared virtual-cost formulas: the five solver ops (used by the native
+//! backend and by the PJRT backend in modeled-clock mode, so both charge
+//! identical virtual time for identical work), plus the *a-priori recovery
+//! cost estimates* the adaptive policy engine compares before committing to
+//! a strategy (paper §IV's tradeoff as numbers; see DESIGN.md §3).
+//!
+//! The recovery estimates deliberately use only configuration-static and
+//! registry-derived inputs (rows per rank, survivor count, pool state) so
+//! that every survivor computes the identical estimate and the distributed
+//! policy decision stays consistent without extra communication.
 
-use crate::netsim::ComputeModel;
+use crate::netsim::{ComputeModel, NetParams};
 use crate::problem::laplacian::K;
+use crate::recovery::global_restart::GlobalCrModel;
 
 pub fn spmv(m: &ComputeModel, rows: usize, x_halo_len: usize) -> f64 {
     let bytes = (12 * rows * K + 8 * x_halo_len + 8 * rows) as f64;
@@ -28,3 +36,183 @@ pub fn update_x(m: &ComputeModel, m_used: usize, r: usize) -> f64 {
 pub fn scale(m: &ComputeModel, r: usize) -> f64 {
     m.cost(r as f64, 16.0 * r as f64)
 }
+
+// ---------------------------------------------------------------------
+// Recovery cost estimates (policy-engine inputs)
+// ---------------------------------------------------------------------
+
+/// Configuration- and registry-derived inputs to the recovery estimates.
+/// Everything here is identical on every survivor of the same failure
+/// event: `rows_per_rank` comes from the grid and the old communicator
+/// size, pool/survivor counts from the liveness registry, and the rest from
+/// the run configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct RecoveryCostInputs {
+    /// Block rows per rank under the failed communicator's partition.
+    pub rows_per_rank: usize,
+    /// Checkpointed basis vectors per rank (outer V + Z slots).
+    pub basis_vecs: usize,
+    /// Ranks lost in this failure event.
+    pub n_failed: usize,
+    /// Ranks that survive the event.
+    pub survivors: usize,
+    /// Buddy copies per checkpointed object.
+    pub buddy_k: usize,
+    /// Inner iterations the policy assumes remain (the capacity-loss
+    /// horizon; config key `policy_horizon`).
+    ///
+    /// Deliberately a *static* config value, not the work actually
+    /// remaining: per-rank progress counters can differ by one iteration
+    /// between survivors at the instant a failure unblocks them, and a
+    /// dynamic horizon read from them could flip the decision on ranks
+    /// near a cost crossover — divergent decisions deadlock the repair.
+    /// A truly consistent dynamic horizon needs a leader decision
+    /// broadcast over the post-shrink communicator (future work noted in
+    /// DESIGN.md §3); until then the horizon is the operator's prior.
+    pub horizon_iters: u64,
+    /// Inner iterations per outer step (sizes the per-iteration estimate).
+    pub m_inner: usize,
+}
+
+/// Estimated seconds for each recovery strategy, comparable against each
+/// other (the `cost-min` policy picks the minimum over the feasible set).
+#[derive(Debug, Clone, Copy)]
+pub struct RecoveryEstimates {
+    pub substitute: f64,
+    pub substitute_cold: f64,
+    pub shrink: f64,
+    pub global_restart: f64,
+}
+
+/// Checkpointed state bytes per rank: ELL values + global columns (8 B
+/// each), solution and RHS blocks, and the outer Krylov bases, scaled by
+/// the campaign's workload scale (see [`NetParams::data_scale`]).
+pub fn state_bytes_per_rank(net: &NetParams, rows: usize, basis_vecs: usize) -> f64 {
+    8.0 * rows as f64 * (2.0 * K as f64 + 2.0 + basis_vecs as f64) * net.data_scale
+}
+
+/// One point-to-point inter-node transfer of `bytes`.
+fn inter_xfer(net: &NetParams, bytes: f64) -> f64 {
+    net.inter_latency + bytes / net.inter_bandwidth
+}
+
+/// Modeled seconds of one inner solver iteration at this block size (SpMV
+/// plus the orthogonalization ops), used to price the capacity lost by
+/// shrinking over the policy horizon.
+pub fn inner_iter_secs(m: &ComputeModel, rows: usize, m_inner: usize) -> f64 {
+    spmv(m, rows, rows) + dot_partials(m, m_inner, rows) + update_w(m, m_inner, rows)
+}
+
+/// A-priori per-strategy recovery cost estimates (paper §IV as a decision
+/// aid; see DESIGN.md §3 for the derivation and its deliberate coarseness):
+///
+/// * **substitute** — ship one failed rank's full checkpointed state from
+///   its buddy to the spare node, rebuild locally, then re-establish every
+///   buddy checkpoint over the restored configuration;
+/// * **substitute-cold** — the same plus the cold-spawn latency;
+/// * **shrink** — redistribute the failed blocks plus the rebalancing shift
+///   over the survivors (≈ `2 * S * f / s` bytes per survivor), rebuild,
+///   re-establish checkpoints, *plus* the slowdown of finishing the
+///   remaining `horizon_iters` on fewer ranks — the term that makes shrink
+///   lose to substitute early in a run and win once spares run dry or the
+///   run is nearly done;
+/// * **global_restart** — the paper's §I strawman, priced by the analytic
+///   [`GlobalCrModel`]; in-situ strategies beat it by orders of magnitude,
+///   which is exactly the paper's motivating contrast.
+pub fn recovery_estimates(
+    host: &ComputeModel,
+    net: &NetParams,
+    global: &GlobalCrModel,
+    inp: &RecoveryCostInputs,
+) -> RecoveryEstimates {
+    let s_bytes = state_bytes_per_rank(net, inp.rows_per_rank, inp.basis_vecs);
+    let rebuild = host.cost(
+        (inp.rows_per_rank * K) as f64,
+        (24 * inp.rows_per_rank * K) as f64,
+    );
+    let reestablish = inp.buddy_k as f64 * inter_xfer(net, s_bytes);
+
+    let substitute = inter_xfer(net, s_bytes) + rebuild + reestablish;
+    let substitute_cold = substitute + net.cold_spawn_latency;
+
+    let survivors = inp.survivors.max(1) as f64;
+    let redistribution =
+        inter_xfer(net, 2.0 * s_bytes * inp.n_failed as f64 / survivors);
+    let capacity_loss = inner_iter_secs(host, inp.rows_per_rank, inp.m_inner)
+        * inp.horizon_iters as f64
+        * inp.n_failed as f64
+        / survivors;
+    let shrink = redistribution + rebuild + reestablish + capacity_loss;
+
+    let total_bytes = s_bytes * (inp.survivors + inp.n_failed) as f64;
+    let global_restart = global.waste_per_failure(total_bytes as usize);
+
+    RecoveryEstimates { substitute, substitute_cold, shrink, global_restart }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs() -> RecoveryCostInputs {
+        RecoveryCostInputs {
+            rows_per_rank: 4096,
+            basis_vecs: 51,
+            n_failed: 1,
+            survivors: 31,
+            buddy_k: 1,
+            horizon_iters: 50,
+            m_inner: 25,
+        }
+    }
+
+    #[test]
+    fn cold_costs_spawn_latency_more_than_warm() {
+        let net = NetParams::default();
+        let est = recovery_estimates(
+            &ComputeModel::default(),
+            &net,
+            &GlobalCrModel::default(),
+            &inputs(),
+        );
+        let diff = est.substitute_cold - est.substitute;
+        assert!((diff - net.cold_spawn_latency).abs() < 1e-12);
+    }
+
+    #[test]
+    fn global_restart_dwarfs_in_situ() {
+        let est = recovery_estimates(
+            &ComputeModel::default(),
+            &NetParams::default(),
+            &GlobalCrModel::default(),
+            &inputs(),
+        );
+        assert!(est.global_restart > 10.0 * est.substitute);
+        assert!(est.global_restart > 10.0 * est.shrink);
+    }
+
+    #[test]
+    fn horizon_shifts_shrink_vs_substitute() {
+        let host = ComputeModel::default();
+        let net = NetParams::default();
+        let global = GlobalCrModel::default();
+        // No remaining work: shrink pays no capacity penalty and its
+        // redistribution share (2S/31) is cheaper than shipping a full
+        // block to the spare (S), so shrink wins.
+        let mut inp = inputs();
+        inp.horizon_iters = 0;
+        let est = recovery_estimates(&host, &net, &global, &inp);
+        assert!(
+            est.shrink < est.substitute,
+            "short horizon must favor shrink: {est:?}"
+        );
+        // A long horizon makes the lost capacity dominate: substitute wins.
+        inp.horizon_iters = 100_000;
+        let est = recovery_estimates(&host, &net, &global, &inp);
+        assert!(
+            est.substitute < est.shrink,
+            "long horizon must favor substitute: {est:?}"
+        );
+    }
+}
+

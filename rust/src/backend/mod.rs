@@ -3,7 +3,8 @@
 //! Two implementations of the same five-op surface as the AOT artifacts:
 //!
 //! * [`native::NativeBackend`] — pure Rust, used by the deterministic
-//!   figure campaigns (virtual compute cost from [`ComputeModel`]);
+//!   figure campaigns (virtual compute cost from
+//!   [`crate::netsim::ComputeModel`]);
 //! * [`crate::runtime::PjrtEngine`] — loads `artifacts/*.hlo.txt` and runs
 //!   them on the PJRT CPU client (the production path; Python is never
 //!   involved at runtime).
@@ -79,7 +80,7 @@ pub trait Backend: Send + Sync {
     /// out[0..m_used] = V[0..m_used] . w (local partials); rest zeroed.
     fn dot_partials(&self, v: &DenseBasis, m_used: usize, w: &[f64], out: &mut [f64]) -> f64;
 
-    /// w -= V[0..m_used]^T h[0..m_used]; returns (local <w,w>, seconds).
+    /// w -= V[0..m_used]^T h[0..m_used]; returns (local `<w,w>`, seconds).
     fn update_w(&self, v: &DenseBasis, m_used: usize, w: &mut [f64], h: &[f64]) -> (f64, f64);
 
     /// x += V[0..m_used]^T y[0..m_used].

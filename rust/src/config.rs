@@ -9,8 +9,9 @@ use std::path::Path;
 use crate::failure::InjectionPlan;
 use crate::netsim::{ComputeModel, NetParams};
 use crate::problem::Grid3D;
-use crate::recovery::Strategy;
+use crate::recovery::{Decision, PolicyKind, Strategy};
 use crate::solver::FtGmresCfg;
+use crate::spares::SparePool;
 
 /// Which compute backend executes the solver step graphs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -37,6 +38,20 @@ pub struct RunConfig {
     /// Application process count.
     pub p: usize,
     pub strategy: Strategy,
+    /// Recovery policy; `None` means `fixed:<strategy>` (the paper's
+    /// per-run configuration).  Config/CLI key `policy`, values
+    /// `fixed:<strategy>`, `spares-first`, `cost-min`.
+    pub policy: Option<PolicyKind>,
+    /// Warm spares to allocate; `None` derives the paper default (one per
+    /// expected failure for substitute-style runs).  Key `warm_spares` —
+    /// set it below `failures` to exercise pool exhaustion.
+    pub warm_spares: Option<usize>,
+    /// Cold spare slots (spawned at failure time); `None` derives the
+    /// default (`failures` for `fixed:substitute-cold`, else 0).
+    pub cold_spares: Option<usize>,
+    /// Inner iterations the `cost-min` policy assumes remain when pricing
+    /// shrink's lost capacity (key `policy_horizon`).
+    pub policy_horizon: u64,
     /// Failures to inject (0 = failure-free; ignored for NoProtection).
     pub failures: usize,
     pub solver: FtGmresCfg,
@@ -55,6 +70,10 @@ impl Default for RunConfig {
             grid: Grid3D::cube(24),
             p: 8,
             strategy: Strategy::Shrink,
+            policy: None,
+            warm_spares: None,
+            cold_spares: None,
+            policy_horizon: 50,
             failures: 0,
             solver: FtGmresCfg::default(),
             net: NetParams::default(),
@@ -67,13 +86,50 @@ impl Default for RunConfig {
 }
 
 impl RunConfig {
-    /// Warm spares to allocate (paper: "assume the presence of an adequate
-    /// number of spares").
-    pub fn spares(&self) -> usize {
-        match self.strategy {
-            Strategy::Substitute | Strategy::SubstituteCold => self.failures,
+    /// Effective recovery policy: the explicit `policy` key, defaulting to
+    /// `fixed:<strategy>` so fixed-strategy configs behave exactly as the
+    /// paper's campaigns expect.
+    pub fn policy(&self) -> PolicyKind {
+        self.policy
+            .unwrap_or(PolicyKind::Fixed(Decision::from_strategy(self.strategy)))
+    }
+
+    /// Warm spares to allocate.  Explicit `warm_spares` wins; the derived
+    /// default is the paper's "adequate number of spares" (one per expected
+    /// failure) for substitute-style and adaptive runs, zero otherwise.
+    pub fn warm_spare_count(&self) -> usize {
+        if let Some(w) = self.warm_spares {
+            return w;
+        }
+        match self.policy() {
+            PolicyKind::Fixed(Decision::Substitute)
+            | PolicyKind::SparesFirst
+            | PolicyKind::CostMin => self.failures,
+            PolicyKind::Fixed(_) => 0,
+        }
+    }
+
+    /// Cold spare slots to allocate.  Explicit `cold_spares` wins; the
+    /// derived default covers every expected failure for the fixed
+    /// cold-substitution strategy and is zero otherwise.
+    pub fn cold_spare_count(&self) -> usize {
+        if let Some(c) = self.cold_spares {
+            return c;
+        }
+        match self.policy() {
+            PolicyKind::Fixed(Decision::SubstituteCold) => self.failures,
             _ => 0,
         }
+    }
+
+    /// Total spare rank threads the coordinator launches (warm + cold).
+    pub fn spares(&self) -> usize {
+        self.spare_pool().total()
+    }
+
+    /// Spare-pool layout for this run (see [`SparePool`]).
+    pub fn spare_pool(&self) -> SparePool {
+        SparePool::new(self.p, self.warm_spare_count(), self.cold_spare_count())
     }
 
     /// The paper's reproducible injection campaign for this leg.
@@ -116,6 +172,19 @@ impl RunConfig {
                 self.strategy = Strategy::parse(v)
                     .ok_or_else(|| anyhow::anyhow!("unknown strategy {v}"))?
             }
+            "policy" => {
+                self.policy = Some(
+                    PolicyKind::parse(v).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown policy {v} (expected fixed:<strategy>, \
+                             spares-first or cost-min)"
+                        )
+                    })?,
+                )
+            }
+            "warm_spares" => self.warm_spares = Some(v.parse()?),
+            "cold_spares" => self.cold_spares = Some(v.parse()?),
+            "policy_horizon" => self.policy_horizon = v.parse()?,
             "failures" => self.failures = v.parse()?,
             "m_inner" => self.solver.m_inner = v.parse()?,
             "m_outer" => self.solver.m_outer = v.parse()?,
@@ -174,6 +243,8 @@ impl RunConfig {
         m.insert("rows", self.grid.n().to_string());
         m.insert("p", self.p.to_string());
         m.insert("strategy", self.strategy.name().to_string());
+        m.insert("policy", self.policy().name());
+        m.insert("spares", format!("{}w+{}c", self.warm_spare_count(), self.cold_spare_count()));
         m.insert("failures", self.failures.to_string());
         m.insert("m_inner", self.solver.m_inner.to_string());
         m.insert("tol", format!("{:e}", self.solver.tol));
@@ -205,6 +276,47 @@ mod tests {
         assert_eq!(c.strategy, Strategy::Substitute);
         assert_eq!(c.spares(), 3);
         assert!(!c.set("bogus", "1").unwrap());
+    }
+
+    #[test]
+    fn policy_defaults_mirror_strategy() {
+        let mut c = RunConfig::default();
+        c.failures = 2;
+        // Default shrink strategy: fixed policy, no spares.
+        assert_eq!(c.policy(), PolicyKind::Fixed(Decision::Shrink));
+        assert_eq!(c.spares(), 0);
+        // Substitute derives one warm spare per expected failure.
+        c.strategy = Strategy::Substitute;
+        assert_eq!(c.policy(), PolicyKind::Fixed(Decision::Substitute));
+        assert_eq!(c.warm_spare_count(), 2);
+        assert_eq!(c.cold_spare_count(), 0);
+        // Cold substitution allocates cold slots instead of warm spares.
+        c.strategy = Strategy::SubstituteCold;
+        assert_eq!(c.warm_spare_count(), 0);
+        assert_eq!(c.cold_spare_count(), 2);
+        assert_eq!(c.spares(), 2);
+        assert!(c.spare_pool().is_cold(c.p));
+    }
+
+    #[test]
+    fn policy_keys_parse_and_override() {
+        let mut c = RunConfig::default();
+        c.failures = 3;
+        assert!(c.set("policy", "spares-first").unwrap());
+        assert_eq!(c.policy(), PolicyKind::SparesFirst);
+        // Adaptive default: adequate warm pool...
+        assert_eq!(c.warm_spare_count(), 3);
+        // ...unless overridden to force exhaustion.
+        assert!(c.set("warm_spares", "1").unwrap());
+        assert!(c.set("cold_spares", "1").unwrap());
+        assert_eq!(c.spare_pool(), crate::spares::SparePool::new(c.p, 1, 1));
+        assert!(c.set("policy", "cost-min").unwrap());
+        assert_eq!(c.policy(), PolicyKind::CostMin);
+        assert!(c.set("policy", "fixed:substitute").unwrap());
+        assert_eq!(c.policy(), PolicyKind::Fixed(Decision::Substitute));
+        assert!(c.set("policy_horizon", "200").unwrap());
+        assert_eq!(c.policy_horizon, 200);
+        assert!(c.set("policy", "nonsense").is_err());
     }
 
     #[test]

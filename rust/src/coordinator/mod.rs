@@ -7,13 +7,15 @@
 use std::sync::Arc;
 use std::thread;
 
+use crate::backend::costs::RecoveryCostInputs;
 use crate::backend::native::NativeBackend;
 use crate::backend::Backend;
 use crate::checkpoint::CkptStore;
 use crate::config::{BackendKind, RunConfig};
 use crate::failure::Injector;
-use crate::metrics::{Phase, RankReport, RunReport};
-use crate::recovery::{self, Strategy};
+use crate::metrics::{DecisionRecord, Phase, RankReport, RunReport};
+use crate::recovery::policy::{self, PolicyInputs};
+use crate::recovery::{self, Decision, Strategy};
 use crate::simmpi::{ulfm, Comm, Ctl, Ctx, Msg, MpiError, MpiResult, Payload, World};
 use crate::solver::{FtGmres, Outcome, SolverState};
 
@@ -140,12 +142,13 @@ fn solve_loop(
                     return Err(ctx.die());
                 }
                 ctx.recompute = false;
-                recovery::handle_failure(
+                let decision = choose_recovery(ctx, comm, cfg);
+                recovery::handle_failure_with(
                     ctx,
                     comm,
                     state,
                     store,
-                    cfg.strategy,
+                    decision,
                     cfg.solver.ckpt_buddies,
                     &cfg.compute,
                 )?;
@@ -153,6 +156,57 @@ fn solve_loop(
             }
         }
     }
+}
+
+/// Evaluate the run's recovery policy for the failure event visible in
+/// `comm` and record the decision on this rank's timeline.
+///
+/// Every survivor calls this independently and must reach the same answer:
+/// the inputs are restricted to the liveness registry, the failed
+/// communicator's membership, and static configuration (see the
+/// consistency notes in [`crate::recovery::policy`]).
+fn choose_recovery(ctx: &mut Ctx, comm: &Comm, cfg: &RunConfig) -> Decision {
+    let failed: Vec<usize> = comm
+        .members
+        .iter()
+        .copied()
+        .filter(|&wr| !ctx.world.is_alive(wr))
+        .collect();
+    let status = cfg.spare_pool().status(&ctx.world, &comm.members);
+    let (decision, reason) = if failed.is_empty() {
+        // Spurious wake-up (e.g. a stale revoke): repair the communicator
+        // over the full membership without consuming any spares.
+        (Decision::Shrink, "no failed members visible (stale revoke)".to_string())
+    } else {
+        let survivors = comm.size() - failed.len();
+        let inputs = PolicyInputs {
+            n_failed: failed.len(),
+            survivors,
+            pool: status,
+            cost: RecoveryCostInputs {
+                rows_per_rank: (cfg.grid.n() / comm.size().max(1)).max(1),
+                basis_vecs: 2 * cfg.solver.m_outer + 1,
+                n_failed: failed.len(),
+                survivors,
+                buddy_k: cfg.solver.ckpt_buddies,
+                horizon_iters: cfg.policy_horizon,
+                m_inner: cfg.solver.m_inner,
+            },
+            failures_so_far: ctx.world.dead_set().len(),
+            event_seq: ctx.decisions.len(),
+        };
+        policy::decide(cfg.policy(), &inputs, &cfg.compute, &cfg.net)
+    };
+    ctx.decisions.push(DecisionRecord {
+        seq: ctx.decisions.len(),
+        at: ctx.clock,
+        failed_ranks: failed,
+        decision: decision.name(),
+        reason,
+        warm_free: status.warm_free,
+        cold_free: status.cold_free,
+    });
+    decision
 }
 
 fn finish(ctx: Ctx, outcome: Option<Outcome>, killed: bool, was_spare: bool) -> RankResult {
@@ -164,6 +218,7 @@ fn finish(ctx: Ctx, outcome: Option<Outcome>, killed: bool, was_spare: bool) -> 
             iterations: ctx.iterations,
             killed,
             was_spare,
+            decisions: ctx.decisions.clone(),
         },
         outcome,
     }
@@ -201,8 +256,8 @@ fn spare_rank(mut ctx: Ctx, cfg: &RunConfig, backend: &dyn Backend) -> RankResul
         Some(j) => j,
     };
     let result = (|| -> MpiResult<Outcome> {
-        if cfg.strategy == Strategy::SubstituteCold {
-            // The process only starts now: job-launcher spawn, binary load,
+        if cfg.spare_pool().is_cold(ctx.rank) {
+            // A cold slot only starts now: job-launcher spawn, binary load,
             // runtime init (paper: "spawning processes at runtime has more
             // overhead").  Charged to reconfiguration.
             ctx.set_phase(Phase::Reconfig);

@@ -62,6 +62,44 @@ impl InjectionPlan {
     pub fn n_failures(&self) -> usize {
         self.kills.len()
     }
+
+    /// A pool-exhaustion campaign for the adaptive policies: back-to-back
+    /// kills spaced one checkpoint window apart (twice as dense as
+    /// [`InjectionPlan::paper_campaign`]), targeting alternating high and
+    /// mid-machine ranks so both the shrink and the substitute legs of a
+    /// hybrid run see their worst-case placement.  Inject more failures
+    /// than `warm_spares` and a `spares-first` run is forced through the
+    /// substitute→shrink degradation mid-run (DESIGN.md §3).
+    pub fn exhaustion_campaign(p: usize, n_failures: usize, ckpt_interval: u64) -> Self {
+        assert!(
+            n_failures <= p / 2,
+            "exhaustion campaign supports at most p/2 failures (alternating \
+             high/mid targets must stay distinct)"
+        );
+        let kills = (0..n_failures)
+            .map(|i| Kill {
+                // Alternate the paper's two worst-case layouts: high ranks
+                // (shrink, Fig. 3) and mid-machine ranks (substitute).
+                world_rank: if i % 2 == 0 { p - 1 - i / 2 } else { p / 2 - i / 2 },
+                at_inner_iter: ckpt_interval * 2 + ckpt_interval / 2
+                    + i as u64 * ckpt_interval,
+            })
+            .collect();
+        InjectionPlan { kills }
+    }
+
+    /// Simultaneous multi-rank failure: `ranks` all die at the same inner
+    /// iteration (whole-node loss).  Exercises the registry's atomic
+    /// co-scheduled death marking and multi-slot spare assignment in one
+    /// recovery event.
+    pub fn burst(ranks: &[WorldRank], at_inner_iter: u64) -> Self {
+        InjectionPlan {
+            kills: ranks
+                .iter()
+                .map(|&world_rank| Kill { world_rank, at_inner_iter })
+                .collect(),
+        }
+    }
 }
 
 /// Thread-safe injector consulted by every rank at iteration boundaries.
@@ -148,5 +186,33 @@ mod tests {
     fn none_never_fires() {
         let inj = Injector::new(InjectionPlan::none());
         assert!(!inj.should_die(0, u64::MAX));
+    }
+
+    #[test]
+    fn exhaustion_campaign_is_denser_than_paper() {
+        let plan = InjectionPlan::exhaustion_campaign(8, 3, 10);
+        assert_eq!(plan.n_failures(), 3);
+        // One window apart (25, 35, 45 at interval 10) vs the paper's 1.5.
+        assert_eq!(plan.kills[0].at_inner_iter, 25);
+        assert_eq!(plan.kills[1].at_inner_iter, 35);
+        assert_eq!(plan.kills[2].at_inner_iter, 45);
+        // Alternating high / mid-machine targets, all distinct.
+        assert_eq!(plan.kills[0].world_rank, 7);
+        assert_eq!(plan.kills[1].world_rank, 4);
+        assert_eq!(plan.kills[2].world_rank, 6);
+        let mut ranks: Vec<_> = plan.kills.iter().map(|k| k.world_rank).collect();
+        ranks.sort_unstable();
+        ranks.dedup();
+        assert_eq!(ranks.len(), 3, "kill targets must be distinct");
+    }
+
+    #[test]
+    fn burst_kills_are_co_scheduled() {
+        let plan = InjectionPlan::burst(&[3, 5], 40);
+        let inj = Injector::new(plan);
+        assert!(inj.should_die(3, 40));
+        assert!(inj.should_die(5, 40));
+        assert_eq!(inj.co_scheduled(3, 40), vec![5]);
+        assert_eq!(inj.co_scheduled(5, 40), vec![3]);
     }
 }

@@ -232,6 +232,43 @@ impl Campaign {
     }
 }
 
+/// Per-event decision log of one run as a table: which strategy the policy
+/// engine chose for each failure, with the pool state and the reason.  The
+/// CLI prints this for `run`/`report` legs, and the adaptive examples use
+/// it to show hybrid substitute-then-shrink timelines.
+pub fn decision_table(rep: &RunReport) -> Table {
+    let mut t = Table::new(
+        "Recovery decisions (per failure event)",
+        vec![
+            "event".into(),
+            "t_virtual".into(),
+            "failed_ranks".into(),
+            "decision".into(),
+            "warm_free".into(),
+            "cold_free".into(),
+            "reason".into(),
+        ],
+    );
+    for d in &rep.decisions {
+        let failed = d
+            .failed_ranks
+            .iter()
+            .map(|r| r.to_string())
+            .collect::<Vec<_>>()
+            .join("+");
+        t.row(vec![
+            d.seq.to_string(),
+            format!("{:.4}", d.at),
+            failed,
+            d.decision.to_string(),
+            d.warm_free.to_string(),
+            d.cold_free.to_string(),
+            d.reason.clone(),
+        ]);
+    }
+    t
+}
+
 fn fmt2(v: f64) -> String {
     format!("{v:.2}")
 }
@@ -317,5 +354,34 @@ mod tests {
         assert!(txt.contains(" a  bb"));
         let csv = t.to_csv();
         assert_eq!(csv, "a,bb\n1,2\n10,20\n");
+    }
+
+    #[test]
+    fn decision_table_lists_events_in_order() {
+        use crate::metrics::{DecisionRecord, PhaseTimers, RankReport};
+        let dec = |seq, name: &'static str| DecisionRecord {
+            seq,
+            at: 0.5 * (seq as f64 + 1.0),
+            failed_ranks: vec![7 - seq],
+            decision: name,
+            reason: format!("event {seq}"),
+            warm_free: 1 - seq.min(1),
+            cold_free: 0,
+        };
+        let rank = RankReport {
+            world_rank: 0,
+            finish_time: 2.0,
+            phases: PhaseTimers::default(),
+            iterations: 50,
+            killed: false,
+            was_spare: false,
+            decisions: vec![dec(0, "substitute"), dec(1, "shrink")],
+        };
+        let rep = RunReport::from_ranks(vec![rank], 1e-9, true, 2);
+        let t = decision_table(&rep);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][3], "substitute");
+        assert_eq!(t.rows[1][3], "shrink");
+        assert_eq!(t.rows[1][0], "1");
     }
 }

@@ -7,8 +7,10 @@
 //! * **L3 (this crate)** — a simulated-cluster message-passing runtime with
 //!   ULFM semantics ([`simmpi`]), in-memory buddy checkpointing
 //!   ([`checkpoint`]), the *shrink* and *substitute* in-situ recovery
-//!   strategies ([`recovery`]), and a distributed FT-GMRES solver
-//!   ([`solver`]) over a 3D-Laplacian test problem ([`problem`]).
+//!   strategies plus the adaptive per-event policy engine and spare-pool
+//!   manager ([`recovery`], [`recovery::policy`], [`spares`]), and a
+//!   distributed FT-GMRES solver ([`solver`]) over a 3D-Laplacian test
+//!   problem ([`problem`]).
 //! * **L2/L1 (build time)** — the solver's local step graphs and the ELL
 //!   SpMV Pallas kernel, AOT-lowered to `artifacts/*.hlo.txt` by
 //!   `python/compile/aot.py` and executed via the PJRT CPU client
@@ -31,3 +33,4 @@ pub mod recovery;
 pub mod runtime;
 pub mod simmpi;
 pub mod solver;
+pub mod spares;

@@ -13,6 +13,12 @@
 //!
 //! `key=value` pairs are the same keys as config files (see config.rs), e.g.
 //! `p=64 strategy=shrink failures=2 grid=48 backend=pjrt`.
+//!
+//! `--policy VALUE` selects the per-event recovery policy (shorthand for
+//! `policy=VALUE`): `fixed:<strategy>`, `spares-first`, or `cost-min` —
+//! combine with `warm_spares=N` / `cold_spares=N` to exercise spare-pool
+//! exhaustion (see DESIGN.md §3).  Runs that recovered from failures print
+//! the per-event decision log after the phase breakdown.
 
 use std::path::{Path, PathBuf};
 
@@ -24,7 +30,7 @@ use ulfm_ftgmres::metrics::RunReport;
 fn usage() -> ! {
     eprintln!(
         "usage: ftgmres <run|report|figure4|figure5|figure6|figures> \
-         [--config FILE] [--quick] [--out DIR] [key=value ...]"
+         [--config FILE] [--policy POLICY] [--quick] [--out DIR] [key=value ...]"
     );
     std::process::exit(2);
 }
@@ -53,6 +59,14 @@ fn parse_args() -> anyhow::Result<Args> {
             "--config" => {
                 anyhow::ensure!(i + 1 < rest.len(), "--config needs a path");
                 cfg.load_file(Path::new(&rest[i + 1]))?;
+                rest.drain(i..=i + 1);
+            }
+            "--policy" => {
+                anyhow::ensure!(i + 1 < rest.len(), "--policy needs a value");
+                anyhow::ensure!(
+                    cfg.set("policy", &rest[i + 1])?,
+                    "policy key rejected"
+                );
                 rest.drain(i..=i + 1);
             }
             "--out" => {
@@ -95,6 +109,9 @@ fn print_report(cfg: &RunConfig, rep: &RunReport) {
         pct(m.reconfig),
         pct(m.recompute)
     );
+    if !rep.decisions.is_empty() {
+        println!("\n{}", ulfm_ftgmres::figures::decision_table(rep).to_text());
+    }
 }
 
 fn campaign(args: &Args) -> anyhow::Result<Campaign> {

@@ -103,6 +103,28 @@ impl PhaseTimers {
     }
 }
 
+/// One recovery-policy decision, recorded at the moment a survivor chose a
+/// strategy for a failure event (see [`crate::recovery::policy`]).  The
+/// campaign reports aggregate these so every figure row can be traced back
+/// to *which* strategy handled *which* failure and *why*.
+#[derive(Debug, Clone)]
+pub struct DecisionRecord {
+    /// 0-based failure-event sequence number on the recording rank.
+    pub seq: usize,
+    /// Virtual time at which the decision was made.
+    pub at: f64,
+    /// World ranks this event lost (failed members of the old comm).
+    pub failed_ranks: Vec<usize>,
+    /// Chosen strategy name (`shrink`, `substitute`, ...).
+    pub decision: &'static str,
+    /// Human-readable explanation produced by the policy engine.
+    pub reason: String,
+    /// Warm spares still free at decision time.
+    pub warm_free: usize,
+    /// Cold slots still free at decision time.
+    pub cold_free: usize,
+}
+
 /// Final report for one rank of one run.
 #[derive(Debug, Clone)]
 pub struct RankReport {
@@ -116,6 +138,8 @@ pub struct RankReport {
     pub killed: bool,
     /// Whether this rank started as a spare.
     pub was_spare: bool,
+    /// Recovery decisions this rank participated in, in event order.
+    pub decisions: Vec<DecisionRecord>,
 }
 
 /// Aggregated result of one solver run (one configuration, one campaign leg).
@@ -135,6 +159,15 @@ pub struct RunReport {
     pub converged: bool,
     /// Number of failures actually injected.
     pub failures: usize,
+    /// Per-event recovery decisions, merged over the surviving ranks'
+    /// logs: records are ordered by decision time and deduplicated by the
+    /// failed-rank set (unique per event, since deaths are permanent), then
+    /// renumbered.  Merging — rather than taking any one rank's log —
+    /// keeps the report complete even when every witness of an early event
+    /// was itself killed later and only mid-run-adopted spares finished.
+    /// Decisions are deterministic across survivors of the same event (see
+    /// [`crate::recovery::policy`]), so deduplication is exact.
+    pub decisions: Vec<DecisionRecord>,
 }
 
 impl RunReport {
@@ -146,6 +179,7 @@ impl RunReport {
         let mut mean_phases = PhaseTimers::default();
         let mut tts = 0.0f64;
         let mut iters = 0u64;
+        let mut all_decisions: Vec<DecisionRecord> = Vec::new();
         for r in &survivors {
             max_phases.max_with(&r.phases);
             for p in ALL_PHASES {
@@ -154,6 +188,22 @@ impl RunReport {
             }
             tts = tts.max(r.finish_time);
             iters = iters.max(r.iterations);
+            all_decisions.extend(r.decisions.iter().cloned());
+        }
+        // Merge per-rank decision logs into one per-event log: order by
+        // decision time, keep the first record of each event (identified by
+        // its failed-rank set), renumber.  Per-rank clocks at the same
+        // event differ by at most the failure-detection skew, which is far
+        // below the inter-event spacing, so time-ordering is event-ordering.
+        all_decisions
+            .sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap_or(std::cmp::Ordering::Equal));
+        let mut decisions: Vec<DecisionRecord> = Vec::new();
+        for d in all_decisions {
+            if !decisions.iter().any(|e| e.failed_ranks == d.failed_ranks) {
+                let mut d = d;
+                d.seq = decisions.len();
+                decisions.push(d);
+            }
         }
         RunReport {
             time_to_solution: tts,
@@ -164,6 +214,7 @@ impl RunReport {
             iterations: iters,
             converged,
             failures,
+            decisions,
         }
     }
 }
@@ -208,6 +259,7 @@ mod tests {
             iterations: iters,
             killed,
             was_spare: spare,
+            decisions: Vec::new(),
         };
         let ranks = vec![
             mk(0, 10.0, false, false, 100),
@@ -218,5 +270,86 @@ mod tests {
         let rep = RunReport::from_ranks(ranks, 1e-9, true, 1);
         assert!((rep.time_to_solution - 12.0).abs() < 1e-12);
         assert_eq!(rep.iterations, 100);
+    }
+
+    #[test]
+    fn merges_decision_logs_across_survivors() {
+        // Event identity is the failed-rank set; `at` orders events; the
+        // recording rank's local seq may be wrong (spares adopted mid-run
+        // start counting at 0) and must be rewritten by the merge.
+        let dec = |seq, at, failed: usize, name: &'static str| DecisionRecord {
+            seq,
+            at,
+            failed_ranks: vec![failed],
+            decision: name,
+            reason: String::new(),
+            warm_free: 0,
+            cold_free: 0,
+        };
+        let mk = |wr, killed, spare, decisions| RankReport {
+            world_rank: wr,
+            finish_time: 1.0,
+            phases: PhaseTimers::default(),
+            iterations: 10,
+            killed,
+            was_spare: spare,
+            decisions,
+        };
+        let ranks = vec![
+            // Killed ranks are excluded from the merge entirely.
+            mk(0, true, false, vec![dec(0, 1.0, 3, "substitute")]),
+            // An original survivor witnessed both events.
+            mk(1, false, false, vec![dec(0, 1.01, 3, "substitute"), dec(1, 2.0, 0, "shrink")]),
+            // The adopted spare saw only event 1, locally numbered 0.
+            mk(4, false, true, vec![dec(0, 2.02, 0, "shrink")]),
+        ];
+        let rep = RunReport::from_ranks(ranks, 1e-9, true, 2);
+        assert_eq!(rep.decisions.len(), 2);
+        assert_eq!(rep.decisions[0].decision, "substitute");
+        assert_eq!(rep.decisions[0].seq, 0);
+        assert_eq!(rep.decisions[0].failed_ranks, vec![3]);
+        assert_eq!(rep.decisions[1].decision, "shrink");
+        assert_eq!(rep.decisions[1].seq, 1);
+    }
+
+    #[test]
+    fn merge_recovers_events_whose_witnesses_died() {
+        // The code-review scenario: every witness of event 0 is killed by
+        // event 1, and only the mid-run-adopted spare (local seq 0) plus a
+        // late joiner survive.  The merged log must still show both events
+        // in order with correct numbering.
+        let dec = |seq, at, failed: usize, name: &'static str| DecisionRecord {
+            seq,
+            at,
+            failed_ranks: vec![failed],
+            decision: name,
+            reason: String::new(),
+            warm_free: 0,
+            cold_free: 0,
+        };
+        let mk = |wr, killed, spare, decisions| RankReport {
+            world_rank: wr,
+            finish_time: 1.0,
+            phases: PhaseTimers::default(),
+            iterations: 10,
+            killed,
+            was_spare: spare,
+            decisions,
+        };
+        let ranks = vec![
+            mk(0, true, false, vec![dec(0, 1.0, 3, "substitute")]),
+            mk(1, true, false, vec![dec(0, 1.01, 3, "substitute")]),
+            // Spare 4 adopted at event 0, then witnessed event 1.
+            mk(4, false, true, vec![dec(0, 2.0, 0, "shrink")]),
+            // Spare 5 adopted at event 0 as well, witnessed event 1 too.
+            mk(5, false, true, vec![dec(0, 2.01, 0, "shrink")]),
+        ];
+        let rep = RunReport::from_ranks(ranks, 1e-9, true, 2);
+        // Event 0's only witnesses were killed: with killed ranks excluded
+        // the merge can only recover event 1 — but it must recover it
+        // exactly once, renumbered from the spares' local seq 0.
+        assert_eq!(rep.decisions.len(), 1);
+        assert_eq!(rep.decisions[0].decision, "shrink");
+        assert_eq!(rep.decisions[0].seq, 0);
     }
 }

@@ -1,9 +1,20 @@
-//! In-situ recovery strategies (the paper's contribution): *shrink* and
-//! *substitute*, plus the recovery driver that turns a ULFM failure
-//! notification into a repaired communicator and restored state.
+//! In-situ recovery (the paper's contribution): the *shrink* and
+//! *substitute* strategies, the per-event [`policy`] engine that chooses
+//! between them at runtime, and the recovery driver that turns a ULFM
+//! failure notification into a repaired communicator and restored state.
+//!
+//! The repair pipeline every strategy shares (paper §IV): `revoke` the
+//! failed communicator so all survivors unblock, `shrink` to a pristine
+//! survivor communicator, then run strategy-specific state recovery —
+//! redistribution for [`shrink`], spare stitching plus buddy state transfer
+//! for [`substitute`], and the analytic relaunch penalty of
+//! [`global_restart`] for the last-resort path.  Which branch runs is a
+//! per-failure [`policy::Decision`]; fixed-strategy runs are the
+//! `fixed:<strategy>` special case (see DESIGN.md §3).
 
 pub mod global_restart;
 pub mod plan;
+pub mod policy;
 pub mod shrink;
 pub mod substitute;
 
@@ -13,7 +24,11 @@ use crate::netsim::ComputeModel;
 use crate::simmpi::{ulfm, Comm, Ctx, MpiResult};
 use crate::solver::state::SolverState;
 
-/// Which failure-handling strategy a run uses.
+pub use policy::{Decision, PolicyKind};
+
+/// Which failure-handling strategy a run is *configured* with.  Adaptive
+/// runs re-decide per failure event via [`policy`]; `Strategy` remains the
+/// per-run surface the paper's campaigns (Figures 4-6) are expressed in.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Strategy {
     /// Baseline: no checkpointing, no recovery (and no failures injected) —
@@ -51,15 +66,48 @@ impl Strategy {
     }
 }
 
-/// Survivor-side failure handling: revoke, shrink, then strategy-specific
-/// state recovery.  On success `comm` is the repaired communicator and
-/// `state`/`store` are consistent at the last committed checkpoint.
+/// Survivor-side failure handling with a fixed per-run strategy: the
+/// original paper configuration, kept as a thin wrapper over
+/// [`handle_failure_with`] (a fixed strategy is just a constant
+/// [`Decision`]).
 pub fn handle_failure(
     ctx: &mut Ctx,
     comm: &mut Comm,
     state: &mut SolverState,
     store: &mut CkptStore,
     strategy: Strategy,
+    buddy_k: usize,
+    host: &ComputeModel,
+) -> MpiResult<()> {
+    debug_assert!(
+        strategy != Strategy::NoProtection,
+        "no-protection runs never inject failures"
+    );
+    handle_failure_with(
+        ctx,
+        comm,
+        state,
+        store,
+        Decision::from_strategy(strategy),
+        buddy_k,
+        host,
+    )
+}
+
+/// Survivor-side failure handling for one per-event [`Decision`]: revoke,
+/// shrink, then decision-specific state recovery.  On success `comm` is the
+/// repaired communicator and `state`/`store` are consistent at the last
+/// committed checkpoint.
+///
+/// Every survivor of the same event must pass the same decision (see the
+/// consistency notes in [`policy`]); the decision is made *before* calling
+/// this, so the ULFM repair sequence below is common to all strategies.
+pub fn handle_failure_with(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    state: &mut SolverState,
+    store: &mut CkptStore,
+    decision: Decision,
     buddy_k: usize,
     host: &ComputeModel,
 ) -> MpiResult<()> {
@@ -71,18 +119,38 @@ pub fn handle_failure(
     ctx.set_phase(prev);
 
     let old = comm.clone();
-    match strategy {
-        Strategy::Shrink => {
+    match decision {
+        Decision::Shrink => {
             let mut new_comm = shrunk;
             shrink::recover(ctx, &old, &mut new_comm, state, store, buddy_k, host)?;
             *comm = new_comm;
         }
-        Strategy::Substitute | Strategy::SubstituteCold => {
+        Decision::Substitute | Decision::SubstituteCold => {
             *comm =
                 substitute::recover_survivor(ctx, &old, shrunk, state, store, buddy_k, host)?;
         }
-        Strategy::NoProtection => {
-            unreachable!("no-protection runs never inject failures")
+        Decision::GlobalRestart => {
+            // The §I strawman as the universal fallback: tear the job down
+            // and relaunch on the survivors.  Mechanically this is shrink
+            // recovery (survivors re-read state and continue), preceded by
+            // the analytic relaunch + PFS waste of the global C/R model —
+            // priced with the SAME state-size formula the cost-min policy
+            // used to (not) choose it, so the executed charge matches the
+            // `restart=` figure recorded in the decision log.
+            let model = global_restart::GlobalCrModel::default();
+            let basis_vecs = state.v_out.m + state.z_out.m;
+            let per_rank = crate::backend::costs::state_bytes_per_rank(
+                &ctx.world.net.params,
+                state.rows(),
+                basis_vecs,
+            );
+            let total_bytes = (per_rank * old.size() as f64) as usize;
+            let prev = ctx.set_phase(Phase::Recovery);
+            ctx.advance(model.waste_per_failure(total_bytes));
+            ctx.set_phase(prev);
+            let mut new_comm = shrunk;
+            shrink::recover(ctx, &old, &mut new_comm, state, store, buddy_k, host)?;
+            *comm = new_comm;
         }
     }
     Ok(())

@@ -5,7 +5,9 @@
 //! new partitions, communicator membership, the registry's dead set and the
 //! buddy ring are all globally known), so no negotiation round is needed —
 //! only the data transfers themselves, which is what the paper measures as
-//! state-recovery cost.
+//! state-recovery cost (§IV-B, Fig. 3: redistribution traffic peaks when
+//! high ranks fail).  The same no-negotiation construction carries the
+//! policy engine's per-event decisions (see [`crate::recovery::policy`]).
 
 use std::ops::Range;
 

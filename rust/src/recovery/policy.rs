@@ -1,0 +1,373 @@
+//! Adaptive recovery policy engine: choose shrink, substitute, cold
+//! substitute, or global restart *per failure event* instead of fixing one
+//! strategy per run (the paper's §IV tradeoff made into a runtime decision;
+//! see DESIGN.md §3).
+//!
+//! The paper evaluates shrink and substitute as run-long configurations and
+//! observes that which one wins depends on runtime conditions: substitute
+//! preserves capacity but needs a spare (and pays distant-node checkpoints,
+//! Fig. 2/5); shrink always works but loses capacity and pays
+//! redistribution (Fig. 3).  FTHP-MPI-style replica pools and ReStore-style
+//! adaptive redundancy push the same direction.  This module turns the
+//! choice into a per-event decision function over:
+//!
+//! * **spare-pool state** — warm spares remaining, cold slots remaining
+//!   ([`crate::spares::SparePool`]);
+//! * **the recovery cost model** —
+//!   [`crate::backend::costs::recovery_estimates`], fed by the network and
+//!   compute models;
+//! * **failure history** — failures so far and the per-run event sequence
+//!   number (recorded with every decision in
+//!   [`crate::metrics::DecisionRecord`]).
+//!
+//! # Distributed consistency
+//!
+//! Every survivor evaluates the policy independently during recovery, so
+//! the decision function is deliberately restricted to inputs that are
+//! identical across survivors at the same event: the liveness registry, the
+//! failed communicator's membership, and static configuration.  Per-rank
+//! clocks and timers are *not* admissible inputs — two survivors near a
+//! cost crossover could otherwise pick different strategies and deadlock
+//! the repair protocol.  This is the same construction
+//! [`crate::recovery::substitute::assign_spares`] uses for deterministic
+//! spare placement.
+//!
+//! # Policies (config key `policy`, CLI `--policy`)
+//!
+//! * `fixed:<strategy>` — always the named strategy (`shrink`,
+//!   `substitute`, `substitute-cold`, `global-restart`); the paper's
+//!   original per-run configuration.
+//! * `spares-first` — substitute while warm spares last, fall back to cold
+//!   slots, then degrade gracefully to shrink once the pool is dry.
+//! * `cost-min` — evaluate the per-strategy cost estimates at every event
+//!   and take the cheapest feasible strategy.
+
+use crate::backend::costs::{self, RecoveryCostInputs, RecoveryEstimates};
+use crate::netsim::{ComputeModel, NetParams};
+use crate::recovery::global_restart::GlobalCrModel;
+use crate::recovery::Strategy;
+use crate::spares::PoolStatus;
+
+/// The per-event outcome of a policy evaluation: which recovery mechanism
+/// to run for *this* failure.  Unlike [`Strategy`] (a per-run
+/// configuration), a `Decision` is produced fresh at every ULFM failure
+/// notification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Continue with the survivors; redistribute the workload (§IV-B).
+    Shrink,
+    /// Stitch warm spares into the failed slots (§IV-A).
+    Substitute,
+    /// Stitch cold spares in, paying the spawn latency (§IV-A).
+    SubstituteCold,
+    /// Last resort: the §I global checkpoint/restart strawman — relaunch on
+    /// the survivors, paying the analytic [`GlobalCrModel`] waste.
+    GlobalRestart,
+}
+
+impl Decision {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Decision::Shrink => "shrink",
+            Decision::Substitute => "substitute",
+            Decision::SubstituteCold => "substitute-cold",
+            Decision::GlobalRestart => "global-restart",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Decision> {
+        match s {
+            "shrink" => Some(Decision::Shrink),
+            "substitute" | "spare" => Some(Decision::Substitute),
+            "substitute-cold" | "cold" => Some(Decision::SubstituteCold),
+            "global-restart" | "restart" => Some(Decision::GlobalRestart),
+            _ => None,
+        }
+    }
+
+    /// The fixed decision equivalent to a per-run [`Strategy`].
+    pub fn from_strategy(s: Strategy) -> Decision {
+        match s {
+            Strategy::Shrink | Strategy::NoProtection => Decision::Shrink,
+            Strategy::Substitute => Decision::Substitute,
+            Strategy::SubstituteCold => Decision::SubstituteCold,
+        }
+    }
+}
+
+/// Which policy a run uses (config key `policy`; defaults to
+/// `fixed:<strategy>` so existing fixed-strategy configs behave exactly as
+/// before).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Always the given decision — the paper's original configuration.
+    Fixed(Decision),
+    /// Substitute while spares last (warm before cold), then shrink.
+    SparesFirst,
+    /// Minimize the per-event estimate from
+    /// [`crate::backend::costs::recovery_estimates`].
+    CostMin,
+}
+
+impl PolicyKind {
+    /// Parse the CLI/config surface: `fixed:<strategy>`, `spares-first`,
+    /// `cost-min`.
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s {
+            "spares-first" => Some(PolicyKind::SparesFirst),
+            "cost-min" => Some(PolicyKind::CostMin),
+            _ => {
+                let rest = s.strip_prefix("fixed:")?;
+                Decision::parse(rest).map(PolicyKind::Fixed)
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            PolicyKind::Fixed(d) => format!("fixed:{}", d.name()),
+            PolicyKind::SparesFirst => "spares-first".to_string(),
+            PolicyKind::CostMin => "cost-min".to_string(),
+        }
+    }
+}
+
+/// Everything the decision function may look at.  All fields are derived
+/// from the liveness registry, the failed communicator, and static
+/// configuration — see the module docs on distributed consistency.
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyInputs {
+    /// Ranks lost in this failure event (failed members of the old comm).
+    pub n_failed: usize,
+    /// Members of the old communicator that survive.
+    pub survivors: usize,
+    /// Spare-pool availability at decision time.
+    pub pool: PoolStatus,
+    /// Cost-model inputs (rows per rank, buddy count, horizon, ...).
+    pub cost: RecoveryCostInputs,
+    /// Failures observed in the whole run so far (registry dead-set size).
+    pub failures_so_far: usize,
+    /// 0-based sequence number of this recovery on the deciding rank.
+    pub event_seq: usize,
+}
+
+/// Evaluate `kind` on `inputs`, returning the decision and a human-readable
+/// reason that is recorded in the run report (the "why" of every choice).
+///
+/// Feasibility rules applied to every policy:
+/// * substitution needs `pool.warm_free >= n_failed` (warm) or
+///   `pool.total_free() >= n_failed` (cold-assisted);
+/// * shrink needs at least 2 survivors (a 1-rank "cluster" cannot
+///   redistribute);
+/// * global restart is always feasible — it is the universal, expensive
+///   fallback, exactly the role the paper assigns it.
+///
+/// `Fixed` policies skip the feasibility rules and fail later in recovery
+/// if their strategy cannot proceed, preserving the seed semantics of
+/// fixed-strategy runs (a substitute run without spares is a configuration
+/// error, not something to silently paper over).
+pub fn decide(
+    kind: PolicyKind,
+    inputs: &PolicyInputs,
+    host: &ComputeModel,
+    net: &NetParams,
+) -> (Decision, String) {
+    let p = &inputs.pool;
+    match kind {
+        PolicyKind::Fixed(d) => (
+            d,
+            format!("policy=fixed event={} failed={}", inputs.event_seq, inputs.n_failed),
+        ),
+        PolicyKind::SparesFirst => {
+            let base = format!(
+                "policy=spares-first event={} failed={} warm_free={} cold_free={}",
+                inputs.event_seq, inputs.n_failed, p.warm_free, p.cold_free
+            );
+            if p.warm_free >= inputs.n_failed {
+                (Decision::Substitute, format!("{base}: warm spares cover the event"))
+            } else if p.total_free() >= inputs.n_failed {
+                (
+                    Decision::SubstituteCold,
+                    format!("{base}: warm pool short, spawning cold spares"),
+                )
+            } else if inputs.survivors >= 2 {
+                (Decision::Shrink, format!("{base}: pool exhausted, degrading to shrink"))
+            } else {
+                (
+                    Decision::GlobalRestart,
+                    format!("{base}: pool exhausted and too few survivors to shrink"),
+                )
+            }
+        }
+        PolicyKind::CostMin => {
+            let est = costs::recovery_estimates(host, net, &GlobalCrModel::default(), &inputs.cost);
+            let (d, secs) = cheapest_feasible(&est, inputs);
+            (
+                d,
+                format!(
+                    "policy=cost-min event={} failed={} warm_free={} cold_free={} \
+                     est[s]: substitute={:.4} cold={:.4} shrink={:.4} restart={:.4} \
+                     -> {} ({secs:.4}s)",
+                    inputs.event_seq,
+                    inputs.n_failed,
+                    p.warm_free,
+                    p.cold_free,
+                    est.substitute,
+                    est.substitute_cold,
+                    est.shrink,
+                    est.global_restart,
+                    d.name(),
+                ),
+            )
+        }
+    }
+}
+
+/// The cheapest strategy whose preconditions hold.  Global restart is the
+/// always-feasible fallback, so the candidate set is never empty.
+fn cheapest_feasible(est: &RecoveryEstimates, inputs: &PolicyInputs) -> (Decision, f64) {
+    let p = &inputs.pool;
+    let mut candidates: Vec<(Decision, f64)> = Vec::with_capacity(4);
+    if p.warm_free >= inputs.n_failed {
+        candidates.push((Decision::Substitute, est.substitute));
+    } else if p.total_free() >= inputs.n_failed {
+        // Short on warm spares: the event can still be covered if cold
+        // slots make up the difference, at cold cost.
+        candidates.push((Decision::SubstituteCold, est.substitute_cold));
+    }
+    if inputs.survivors >= 2 {
+        candidates.push((Decision::Shrink, est.shrink));
+    }
+    candidates.push((Decision::GlobalRestart, est.global_restart));
+    candidates
+        .into_iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).expect("cost estimates are finite"))
+        .expect("global restart is always a candidate")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs(warm_free: usize, cold_free: usize) -> PolicyInputs {
+        PolicyInputs {
+            n_failed: 1,
+            survivors: 7,
+            pool: PoolStatus { warm_free, cold_free },
+            cost: RecoveryCostInputs {
+                rows_per_rank: 2048,
+                basis_vecs: 51,
+                n_failed: 1,
+                survivors: 7,
+                buddy_k: 1,
+                horizon_iters: 50,
+                m_inner: 25,
+            },
+            failures_so_far: 1,
+            event_seq: 0,
+        }
+    }
+
+    fn host() -> ComputeModel {
+        ComputeModel::default()
+    }
+
+    fn net() -> NetParams {
+        NetParams::default()
+    }
+
+    #[test]
+    fn parse_surface() {
+        assert_eq!(PolicyKind::parse("spares-first"), Some(PolicyKind::SparesFirst));
+        assert_eq!(PolicyKind::parse("cost-min"), Some(PolicyKind::CostMin));
+        assert_eq!(
+            PolicyKind::parse("fixed:shrink"),
+            Some(PolicyKind::Fixed(Decision::Shrink))
+        );
+        assert_eq!(
+            PolicyKind::parse("fixed:substitute"),
+            Some(PolicyKind::Fixed(Decision::Substitute))
+        );
+        assert_eq!(
+            PolicyKind::parse("fixed:global-restart"),
+            Some(PolicyKind::Fixed(Decision::GlobalRestart))
+        );
+        assert_eq!(PolicyKind::parse("fixed:bogus"), None);
+        assert_eq!(PolicyKind::parse("bogus"), None);
+        assert_eq!(PolicyKind::Fixed(Decision::SubstituteCold).name(), "fixed:substitute-cold");
+    }
+
+    #[test]
+    fn fixed_never_adapts() {
+        let (d, why) = decide(
+            PolicyKind::Fixed(Decision::Substitute),
+            &inputs(0, 0),
+            &host(),
+            &net(),
+        );
+        assert_eq!(d, Decision::Substitute);
+        assert!(why.contains("fixed"));
+    }
+
+    #[test]
+    fn spares_first_exhaustion_flips_substitute_to_shrink() {
+        // Warm spare available: substitute.
+        let (d, _) = decide(PolicyKind::SparesFirst, &inputs(1, 0), &host(), &net());
+        assert_eq!(d, Decision::Substitute);
+        // Warm pool dry, cold slot available: cold substitute.
+        let (d, why) = decide(PolicyKind::SparesFirst, &inputs(0, 1), &host(), &net());
+        assert_eq!(d, Decision::SubstituteCold);
+        assert!(why.contains("cold"));
+        // Pool fully exhausted: graceful degradation to shrink.
+        let (d, why) = decide(PolicyKind::SparesFirst, &inputs(0, 0), &host(), &net());
+        assert_eq!(d, Decision::Shrink);
+        assert!(why.contains("exhausted"));
+    }
+
+    #[test]
+    fn spares_first_global_restart_when_nothing_else_works() {
+        let mut inp = inputs(0, 0);
+        inp.survivors = 1;
+        let (d, _) = decide(PolicyKind::SparesFirst, &inp, &host(), &net());
+        assert_eq!(d, Decision::GlobalRestart);
+    }
+
+    #[test]
+    fn cost_min_picks_shrink_when_redistribution_is_cheaper() {
+        // Nearly-done run: no capacity horizon left, so shrink's
+        // redistribution share beats shipping a full block to a spare.
+        let mut inp = inputs(4, 0);
+        inp.cost.horizon_iters = 0;
+        let (d, why) = decide(PolicyKind::CostMin, &inp, &host(), &net());
+        assert_eq!(d, Decision::Shrink, "{why}");
+        assert!(why.contains("cost-min"));
+    }
+
+    #[test]
+    fn cost_min_picks_substitute_when_capacity_matters() {
+        // Long horizon: losing a rank for the rest of the run dominates.
+        let mut inp = inputs(4, 0);
+        inp.cost.horizon_iters = 100_000;
+        let (d, why) = decide(PolicyKind::CostMin, &inp, &host(), &net());
+        assert_eq!(d, Decision::Substitute, "{why}");
+    }
+
+    #[test]
+    fn cost_min_respects_pool_feasibility() {
+        // Substitution would win on cost, but the pool is dry.
+        let mut inp = inputs(0, 0);
+        inp.cost.horizon_iters = 100_000;
+        let (d, _) = decide(PolicyKind::CostMin, &inp, &host(), &net());
+        assert_eq!(d, Decision::Shrink);
+    }
+
+    #[test]
+    fn cost_min_charges_spawn_latency_to_cold_only_pools() {
+        // Only cold slots left: the candidate is cold substitution, which
+        // must carry the spawn latency in its estimate.
+        let mut inp = inputs(0, 2);
+        inp.cost.horizon_iters = 100_000;
+        let (d, why) = decide(PolicyKind::CostMin, &inp, &host(), &net());
+        assert_eq!(d, Decision::SubstituteCold, "{why}");
+    }
+}

@@ -24,6 +24,11 @@ fn spare_tag(id: u32) -> u32 {
 
 /// Deterministic spare assignment: failed old-comm slots (ascending) get the
 /// lowest-world-rank alive spares not already serving in `old_comm`.
+///
+/// Because the [`crate::spares::SparePool`] lays warm spares out at lower
+/// world ranks than cold slots, lowest-first assignment drains the warm
+/// pool before any cold slot is touched — the cold-spawn latency is only
+/// ever paid once no warm spare is free (paper §IV-A).
 pub fn assign_spares(
     ctx: &Ctx,
     old_comm: &Comm,

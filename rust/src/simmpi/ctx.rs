@@ -5,7 +5,7 @@ use std::collections::{BTreeSet, VecDeque};
 use std::sync::mpsc::{Receiver, TryRecvError};
 use std::sync::Arc;
 
-use crate::metrics::{Phase, PhaseTimers};
+use crate::metrics::{DecisionRecord, Phase, PhaseTimers};
 use crate::simmpi::msg::{Ctl, Msg, Payload, Tag};
 use crate::simmpi::world::{World, WorldRank};
 use crate::simmpi::{MpiError, MpiResult};
@@ -29,6 +29,9 @@ pub struct Ctx {
     pub timers: PhaseTimers,
     /// Inner iterations executed (for reports and the injector).
     pub iterations: u64,
+    /// Recovery-policy decisions this rank made, in event order (the
+    /// coordinator copies these into the [`crate::metrics::RankReport`]).
+    pub decisions: Vec<DecisionRecord>,
     rx: Receiver<Msg>,
     /// Out-of-order buffer (matched by (epoch, src, tag)).
     pending: VecDeque<Msg>,
@@ -54,6 +57,7 @@ impl Ctx {
             recompute: false,
             timers: PhaseTimers::default(),
             iterations: 0,
+            decisions: Vec::new(),
             rx,
             pending: VecDeque::new(),
             known_dead: BTreeSet::new(),

@@ -2,7 +2,7 @@
 
 use crate::simmpi::WorldRank;
 
-/// Message tag. Tags below [`Tag::COLL_BASE`] are free for point-to-point
+/// Message tag. Tags below [`tags::COLL_BASE`] are free for point-to-point
 /// application use; collectives allocate from a rolling window above it.
 pub type Tag = u32;
 

@@ -3,7 +3,7 @@
 //! Mirrors the MPI-ULFM primitives the paper relies on:
 //!
 //! * failure *notification* — ops return `MPI_ERR_PROC_FAILED`
-//!   ([`MpiError::ProcFailed`], raised by `Ctx` send/recv);
+//!   ([`crate::simmpi::MpiError::ProcFailed`], raised by `Ctx` send/recv);
 //! * [`revoke`] — `MPI_Comm_revoke`: poison a communicator so every member's
 //!   pending/future operations return `Revoked` (this is how ranks that did
 //!   not observe the failure directly are pulled into recovery);

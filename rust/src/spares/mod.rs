@@ -1,0 +1,135 @@
+//! Spare-pool bookkeeping: warm and cold spare capacity as a first-class
+//! runtime resource (paper §IV-A; see DESIGN.md §3).
+//!
+//! The paper "assume[s] the presence of an adequate number of spares"; this
+//! module drops that assumption so the recovery policy engine
+//! ([`crate::recovery::policy`]) can react to the pool draining at runtime.
+//! The pool itself is a *pure layout description*: which world ranks are
+//! warm spares (allocated at job launch, idle until adopted — the paper's
+//! "non-utilization of resources in the failure-free case") and which are
+//! cold slots (processes spawned at failure time, paying
+//! [`crate::netsim::NetParams::cold_spawn_latency`] before they join).
+//!
+//! Availability is always *derived* from the liveness registry plus the
+//! current communicator membership, never cached: every survivor of a
+//! failure must reach the identical policy decision independently, and the
+//! registry is the only state they all observe consistently (the same
+//! construction [`crate::recovery::substitute::assign_spares`] relies on).
+
+use crate::simmpi::{World, WorldRank};
+
+/// Static layout of the spare pool for one run.
+///
+/// World ranks `0..n_app` are application ranks, `n_app..n_app + warm` are
+/// warm spares, and `n_app + warm..n_app + warm + cold` are cold slots.
+/// Warm ranks sort below cold ranks, so the deterministic lowest-rank-first
+/// assignment in [`crate::recovery::substitute::assign_spares`] naturally
+/// drains warm spares before cold ones.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SparePool {
+    /// Application process count (world ranks below this are not spares).
+    pub n_app: usize,
+    /// Warm spares allocated at launch.
+    pub warm: usize,
+    /// Cold slots that can be spawned at failure time.
+    pub cold: usize,
+}
+
+/// Snapshot of how much of the pool is still usable, derived from the
+/// liveness registry and the communicator membership at one instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStatus {
+    /// Warm spares alive and not already serving in the communicator.
+    pub warm_free: usize,
+    /// Cold slots alive and not already serving in the communicator.
+    pub cold_free: usize,
+}
+
+impl PoolStatus {
+    /// Total spares still available.
+    pub fn total_free(&self) -> usize {
+        self.warm_free + self.cold_free
+    }
+}
+
+impl SparePool {
+    pub fn new(n_app: usize, warm: usize, cold: usize) -> SparePool {
+        SparePool { n_app, warm, cold }
+    }
+
+    /// Total spare slots (warm + cold), i.e. how many extra rank threads the
+    /// coordinator launches beyond the application ranks.
+    pub fn total(&self) -> usize {
+        self.warm + self.cold
+    }
+
+    /// Is `wr` any kind of spare slot?
+    pub fn is_spare(&self, wr: WorldRank) -> bool {
+        wr >= self.n_app && wr < self.n_app + self.total()
+    }
+
+    /// Is `wr` a warm spare slot?
+    pub fn is_warm(&self, wr: WorldRank) -> bool {
+        wr >= self.n_app && wr < self.n_app + self.warm
+    }
+
+    /// Is `wr` a cold slot?  Cold spares charge the spawn latency when they
+    /// join (paper: "spawning processes at runtime has more overhead").
+    pub fn is_cold(&self, wr: WorldRank) -> bool {
+        wr >= self.n_app + self.warm && wr < self.n_app + self.total()
+    }
+
+    /// Availability snapshot: spares that are alive in the registry and not
+    /// members of `in_use` (the communicator the failure hit — spares
+    /// adopted by earlier recoveries appear there and are no longer free).
+    pub fn status(&self, world: &World, in_use: &[WorldRank]) -> PoolStatus {
+        let free = |wr: WorldRank| world.is_alive(wr) && !in_use.contains(&wr);
+        PoolStatus {
+            warm_free: (self.n_app..self.n_app + self.warm).filter(|&wr| free(wr)).count(),
+            cold_free: (self.n_app + self.warm..self.n_app + self.total())
+                .filter(|&wr| free(wr))
+                .count(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::failure::{InjectionPlan, Injector};
+    use crate::netsim::NetParams;
+
+    #[test]
+    fn rank_classification() {
+        let pool = SparePool::new(8, 2, 1);
+        assert_eq!(pool.total(), 3);
+        assert!(!pool.is_spare(7));
+        assert!(pool.is_warm(8));
+        assert!(pool.is_warm(9));
+        assert!(pool.is_cold(10));
+        assert!(!pool.is_spare(11));
+        assert!(!pool.is_cold(9));
+    }
+
+    #[test]
+    fn status_excludes_dead_and_in_use() {
+        let pool = SparePool::new(4, 2, 1);
+        let (w, _rxs) = crate::simmpi::World::new(
+            4,
+            3,
+            NetParams::default(),
+            Injector::new(InjectionPlan::none()),
+        );
+        // All free initially.
+        let s = pool.status(&w, &[0, 1, 2, 3]);
+        assert_eq!(s, PoolStatus { warm_free: 2, cold_free: 1 });
+        // Warm spare 4 adopted into the communicator: no longer free.
+        let s = pool.status(&w, &[0, 1, 2, 4]);
+        assert_eq!(s.warm_free, 1);
+        // A dead spare is not available either.
+        w.mark_dead(5, 1.0);
+        let s = pool.status(&w, &[0, 1, 2, 4]);
+        assert_eq!(s, PoolStatus { warm_free: 0, cold_free: 1 });
+        assert_eq!(s.total_free(), 1);
+    }
+}

@@ -1,0 +1,165 @@
+//! Integration tests for the adaptive recovery policy engine: multi-failure
+//! campaigns that exhaust the spare pool mid-run and must degrade
+//! gracefully from substitute to shrink (DESIGN.md §3).
+
+mod common;
+
+use std::sync::Arc;
+
+use common::quick_config;
+use ulfm_ftgmres::backend::native::NativeBackend;
+use ulfm_ftgmres::config::RunConfig;
+use ulfm_ftgmres::coordinator;
+use ulfm_ftgmres::failure::InjectionPlan;
+use ulfm_ftgmres::metrics::RunReport;
+use ulfm_ftgmres::recovery::Strategy;
+
+fn run_with_plan(cfg: &RunConfig, plan: InjectionPlan) -> RunReport {
+    let backend = Arc::new(NativeBackend::new(cfg.compute.clone()));
+    coordinator::run_custom(cfg, backend, plan).expect("run completes")
+}
+
+/// The acceptance scenario: more failures than warm spares under
+/// `spares-first` — the run must substitute while the pool lasts, then
+/// shrink, and still converge.
+#[test]
+fn spares_first_survives_pool_exhaustion() {
+    let mut cfg = quick_config(8, Strategy::Shrink, 2);
+    cfg.warm_spares = Some(1);
+    assert!(cfg.set("policy", "spares-first").unwrap());
+    assert_eq!(cfg.spares(), 1, "one warm spare against two failures");
+
+    let plan = InjectionPlan::exhaustion_campaign(cfg.p, 2, cfg.solver.m_inner as u64);
+    let rep = run_with_plan(&cfg, plan);
+
+    assert!(rep.converged, "hybrid run must converge, relres={}", rep.final_relres);
+    assert_eq!(rep.failures, 2);
+    let names: Vec<&str> = rep.decisions.iter().map(|d| d.decision).collect();
+    assert_eq!(
+        names,
+        vec!["substitute", "shrink"],
+        "substitute while the pool lasts, shrink after exhaustion"
+    );
+    // The decision log carries the pool drain: one warm spare free at the
+    // first event, none at the second.
+    assert_eq!(rep.decisions[0].warm_free, 1);
+    assert_eq!(rep.decisions[1].warm_free, 0);
+    assert!(rep.decisions[1].reason.contains("exhausted"), "{}", rep.decisions[1].reason);
+}
+
+/// Every survivor must make the identical per-event decision (the policy is
+/// a deterministic function of registry + config); divergent decisions
+/// would deadlock the repair protocol, so check the per-rank logs agree.
+#[test]
+fn decisions_are_identical_across_survivors() {
+    let mut cfg = quick_config(8, Strategy::Shrink, 2);
+    cfg.warm_spares = Some(1);
+    assert!(cfg.set("policy", "spares-first").unwrap());
+    let plan = InjectionPlan::exhaustion_campaign(cfg.p, 2, cfg.solver.m_inner as u64);
+    let rep = run_with_plan(&cfg, plan);
+
+    let full: Vec<&str> = rep.decisions.iter().map(|d| d.decision).collect();
+    assert_eq!(full.len(), 2);
+    for r in rep.ranks.iter().filter(|r| !r.killed) {
+        let mine: Vec<&str> = r.decisions.iter().map(|d| d.decision).collect();
+        // Ranks adopted mid-run saw a suffix of the events; everyone else
+        // the full log.  No rank may disagree on a shared event.
+        assert!(
+            full.ends_with(&mine),
+            "rank {} decision log {mine:?} diverges from {full:?}",
+            r.world_rank
+        );
+    }
+}
+
+/// Cold slots extend the pool once warm spares run dry: with one warm spare
+/// and one cold slot against three failures, the policy must walk the full
+/// substitute → substitute-cold → shrink ladder.
+#[test]
+fn spares_first_walks_warm_cold_shrink_ladder() {
+    let mut cfg = quick_config(8, Strategy::Shrink, 3);
+    cfg.warm_spares = Some(1);
+    cfg.cold_spares = Some(1);
+    assert!(cfg.set("policy", "spares-first").unwrap());
+    assert_eq!(cfg.spares(), 2);
+
+    let plan = InjectionPlan::exhaustion_campaign(cfg.p, 3, cfg.solver.m_inner as u64);
+    let rep = run_with_plan(&cfg, plan);
+
+    assert!(rep.converged, "relres={}", rep.final_relres);
+    let names: Vec<&str> = rep.decisions.iter().map(|d| d.decision).collect();
+    assert_eq!(names, vec!["substitute", "substitute-cold", "shrink"]);
+    // The cold join must have charged the spawn latency somewhere: the
+    // reconfiguration phase of the cold event dwarfs a warm stitch.
+    assert!(
+        rep.max_phases.reconfig >= cfg.net.cold_spawn_latency,
+        "cold spawn latency must appear in reconfiguration time: {:.4}s",
+        rep.max_phases.reconfig
+    );
+}
+
+/// One simultaneous two-rank burst (whole-node loss) handled as a single
+/// event: both slots must be re-filled by spares in one substitution.
+/// The ranks are non-adjacent on the buddy ring so each dead rank's buddy
+/// survives to serve its state (losing a rank *and* its only buddy is
+/// unrecoverable by design with k = 1).
+#[test]
+fn burst_failure_substitutes_both_slots_in_one_event() {
+    let mut cfg = quick_config(8, Strategy::Shrink, 2);
+    cfg.warm_spares = Some(2);
+    assert!(cfg.set("policy", "spares-first").unwrap());
+    let rep = run_with_plan(&cfg, InjectionPlan::burst(&[2, 5], 25));
+
+    assert!(rep.converged);
+    assert_eq!(rep.failures, 2);
+    assert_eq!(rep.decisions.len(), 1, "one event, not two");
+    assert_eq!(rep.decisions[0].decision, "substitute");
+    assert_eq!(rep.decisions[0].failed_ranks, vec![2, 5]);
+}
+
+/// cost-min completes a failure campaign end-to-end and records its
+/// estimates in the reason string (the "why" of the figures extension).
+#[test]
+fn cost_min_runs_and_explains_itself() {
+    let mut cfg = quick_config(8, Strategy::Shrink, 1);
+    cfg.warm_spares = Some(1);
+    assert!(cfg.set("policy", "cost-min").unwrap());
+    let plan = InjectionPlan::exhaustion_campaign(cfg.p, 1, cfg.solver.m_inner as u64);
+    let rep = run_with_plan(&cfg, plan);
+
+    assert!(rep.converged);
+    assert_eq!(rep.decisions.len(), 1);
+    let d = &rep.decisions[0];
+    assert!(
+        d.decision == "substitute" || d.decision == "shrink",
+        "cost-min must pick an in-situ strategy here, got {}",
+        d.decision
+    );
+    assert!(d.reason.contains("cost-min"), "{}", d.reason);
+    assert!(d.reason.contains("est[s]"), "{}", d.reason);
+}
+
+/// A long horizon prices shrink's lost capacity high enough that cost-min
+/// substitutes; a zero horizon (nothing left to compute) makes shrink's
+/// smaller redistribution bill win.  Same cluster, opposite decisions —
+/// the crossover the fixed strategies cannot express.
+#[test]
+fn cost_min_horizon_flips_the_decision() {
+    let base = {
+        let mut cfg = quick_config(8, Strategy::Shrink, 1);
+        cfg.warm_spares = Some(1);
+        assert!(cfg.set("policy", "cost-min").unwrap());
+        cfg
+    };
+    let plan = || InjectionPlan::exhaustion_campaign(8, 1, base.solver.m_inner as u64);
+
+    let mut long = base.clone();
+    long.policy_horizon = 1_000_000;
+    let rep = run_with_plan(&long, plan());
+    assert_eq!(rep.decisions[0].decision, "substitute", "{}", rep.decisions[0].reason);
+
+    let mut short = base.clone();
+    short.policy_horizon = 0;
+    let rep = run_with_plan(&short, plan());
+    assert_eq!(rep.decisions[0].decision, "shrink", "{}", rep.decisions[0].reason);
+}

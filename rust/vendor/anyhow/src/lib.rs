@@ -1,0 +1,158 @@
+//! Offline, dependency-free subset of the `anyhow` crate API.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! provides exactly the surface the workspace uses: [`Error`], [`Result`],
+//! and the [`anyhow!`], [`bail!`] and [`ensure!`] macros.  Semantics match
+//! upstream for that subset: any `std::error::Error + Send + Sync` value
+//! converts into [`Error`] via `?`, and `Error` intentionally does *not*
+//! implement `std::error::Error` itself (just like upstream, which is what
+//! keeps the blanket `From` impl coherent).
+
+use std::fmt;
+
+/// A type-erased error, convertible from any standard error type.
+pub struct Error(Box<dyn std::error::Error + Send + Sync + 'static>);
+
+/// `Result<T, anyhow::Error>` with an overridable error type, mirroring
+/// upstream's signature.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a printable message (what [`anyhow!`] expands to).
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        struct MessageError<M>(M);
+        impl<M: fmt::Display> fmt::Display for MessageError<M> {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                fmt::Display::fmt(&self.0, f)
+            }
+        }
+        impl<M: fmt::Debug> fmt::Debug for MessageError<M> {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                fmt::Debug::fmt(&self.0, f)
+            }
+        }
+        impl<M: fmt::Display + fmt::Debug> std::error::Error for MessageError<M> {}
+        Error(Box::new(MessageError(message)))
+    }
+
+    /// Wrap a concrete error value.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error(Box::new(error))
+    }
+
+    /// Borrow the underlying error.
+    pub fn as_dyn(&self) -> &(dyn std::error::Error + Send + Sync + 'static) {
+        &*self.0
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error(Box::new(error))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Match upstream: Debug prints the message plus the source chain.
+        write!(f, "{}", self.0)?;
+        let mut source = self.0.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(cause) = source {
+            write!(f, "\n    {cause}")?;
+            source = cause.source();
+        }
+        Ok(())
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        Ok(s.parse::<i32>()?)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse("42").unwrap(), 42);
+        let err = parse("nope").unwrap_err();
+        assert!(err.to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        let v = 9;
+        let e = anyhow!("inline capture {v}");
+        assert_eq!(e.to_string(), "inline capture 9");
+
+        fn fails() -> Result<()> {
+            bail!("nope {}", 1);
+        }
+        assert_eq!(fails().unwrap_err().to_string(), "nope 1");
+
+        fn checked(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert!(checked(1).is_ok());
+        assert_eq!(checked(-1).unwrap_err().to_string(), "x must be positive, got -1");
+    }
+}

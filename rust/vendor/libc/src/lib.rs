@@ -1,0 +1,45 @@
+//! Offline `libc` subset: exactly the allocator-tuning surface the PJRT
+//! runtime service thread uses (`mallopt` with the mmap/trim thresholds).
+//!
+//! On glibc targets this calls the real `mallopt`; elsewhere it is a no-op
+//! that reports success, so the tuning degrades gracefully instead of
+//! failing to link.
+
+#![allow(non_camel_case_types)]
+
+pub type c_int = i32;
+
+/// glibc `M_MMAP_THRESHOLD` mallopt parameter.
+pub const M_MMAP_THRESHOLD: c_int = -3;
+/// glibc `M_TRIM_THRESHOLD` mallopt parameter.
+pub const M_TRIM_THRESHOLD: c_int = -1;
+
+#[cfg(all(target_os = "linux", target_env = "gnu"))]
+mod imp {
+    use super::c_int;
+    extern "C" {
+        #[link_name = "mallopt"]
+        fn glibc_mallopt(param: c_int, value: c_int) -> c_int;
+    }
+    pub unsafe fn mallopt(param: c_int, value: c_int) -> c_int {
+        glibc_mallopt(param, value)
+    }
+}
+
+#[cfg(not(all(target_os = "linux", target_env = "gnu")))]
+mod imp {
+    use super::c_int;
+    /// No glibc: accept and ignore the hint (1 = success, as glibc returns).
+    pub unsafe fn mallopt(_param: c_int, _value: c_int) -> c_int {
+        1
+    }
+}
+
+/// Tune a glibc malloc parameter.  Returns 1 on success (glibc convention).
+///
+/// # Safety
+/// Directly adjusts process-global allocator state; callers must uphold the
+/// same contract as the C `mallopt`.
+pub unsafe fn mallopt(param: c_int, value: c_int) -> c_int {
+    imp::mallopt(param, value)
+}

@@ -1,0 +1,131 @@
+//! Compile-time stub of the `xla-rs` PJRT surface.
+//!
+//! The offline build environment has no XLA/PJRT shared libraries, so this
+//! crate provides the exact API shape `crate::runtime` compiles against
+//! while reporting the client as unavailable at runtime:
+//! [`PjRtClient::cpu`] returns an error, which the runtime service thread
+//! turns into per-request error replies.  Callers already gate PJRT work on
+//! artifact presence, so the native backend (the default) is unaffected.
+//!
+//! Swapping in the real `xla` crate re-enables the PJRT path without any
+//! source change — only this path dependency goes away.
+
+use std::fmt;
+
+/// Error type shared by every stubbed operation.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: XLA/PJRT is unavailable in this build (vendored stub; \
+             use the native backend or link the real xla crate)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Parsed HLO module text (stub: never constructed successfully).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let _ = path;
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation built from an HLO proto.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-resident buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Host-side literal value.
+#[derive(Debug)]
+pub struct Literal;
+
+impl Literal {
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(Error::unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        Err(Error::unavailable("Literal::to_tuple2"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+/// Compiled, device-loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let _ = args;
+        Err(Error::unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// PJRT client handle (stub: construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let _ = (data, dims, device);
+        Err(Error::unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("unavailable"));
+    }
+}
