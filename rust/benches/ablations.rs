@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
         let mut c = cfg.clone();
         c.strategy = Strategy::Shrink;
         c.failures = 2;
-        c.solver.ckpt_buddies = k;
+        c.solver.ckpt.scheme = ulfm_ftgmres::ckptstore::Scheme::Mirror { k };
         let rep = coordinator::run(&c)?;
         assert!(rep.converged);
         println!(
@@ -79,8 +79,9 @@ fn main() -> anyhow::Result<()> {
     // --- A4: failure position (paper Fig. 3 worst case) ---
     println!("\n# A4: shrink failure position — recovery traffic asymmetry");
     {
+        use ulfm_ftgmres::ckptstore::Scheme;
         use ulfm_ftgmres::problem::Partition;
-        use ulfm_ftgmres::recovery::plan::transfer_segments;
+        use ulfm_ftgmres::recovery::plan::transfer_segments_scheme;
         let n = cfg.grid.n();
         let p = 32;
         let old = Partition::balanced(n, p);
@@ -90,12 +91,19 @@ fn main() -> anyhow::Result<()> {
             let old_members: Vec<usize> = (0..p).collect();
             let new_members: Vec<usize> = (0..p).filter(|&r| r != dead).collect();
             let alive = move |r: usize| r != dead;
-            let moved: usize =
-                transfer_segments(&old, &old_members, &new, &new_members, &alive, 1, 1)
-                    .iter()
-                    .filter(|s| s.server_wr != s.dest_wr)
-                    .map(|s| s.rows.len())
-                    .sum();
+            let moved: usize = transfer_segments_scheme(
+                &old,
+                &old_members,
+                &new,
+                &new_members,
+                &alive,
+                &Scheme::Mirror { k: 1 },
+                1,
+            )
+            .iter()
+            .filter(|s| s.server_wr != s.dest_wr)
+            .map(|s| s.rows.len())
+            .sum();
             println!("{dead:<12} {moved:>16}");
         }
     }

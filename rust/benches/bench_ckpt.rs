@@ -1,0 +1,165 @@
+//! Bench: checkpoint-volume and commit-latency comparison across the
+//! checkpoint-store redundancy schemes (DESIGN.md §8) — mirror vs xor,
+//! full vs delta — on the FT-GMRES workload, with a single-failure shrink
+//! leg per scheme to confirm recoveries restore the same committed state.
+//!
+//! Emits `BENCH_ckpt.json` at the repository root (bytes shipped per
+//! commit + commit latency per leg) so the perf trajectory of the
+//! checkpoint path is tracked in-repo.
+//!
+//! `cargo bench --bench bench_ckpt` (offline environment: deterministic
+//! virtual-clock workload, criterion-style reporting by hand).
+
+mod bench_common;
+
+use std::fmt::Write as _;
+
+use ulfm_ftgmres::ckptstore::Scheme;
+use ulfm_ftgmres::config::RunConfig;
+use ulfm_ftgmres::coordinator;
+use ulfm_ftgmres::metrics::RunReport;
+use ulfm_ftgmres::problem::Grid3D;
+use ulfm_ftgmres::recovery::Strategy;
+
+struct LegResult {
+    name: &'static str,
+    scheme: String,
+    delta: bool,
+    commits: usize,
+    shipped_bytes: usize,
+    logical_bytes: usize,
+    bytes_per_commit: f64,
+    commit_latency_ms: f64,
+    tts: f64,
+    iterations: u64,
+    converged: bool,
+}
+
+fn cfg_for(scheme: Scheme, delta: bool, failures: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.grid = Grid3D::cube(16);
+    cfg.p = 8;
+    cfg.strategy = Strategy::Shrink;
+    cfg.failures = failures;
+    cfg.solver.tol = 1e-10;
+    cfg.solver.m_inner = 10;
+    cfg.solver.m_outer = 20;
+    cfg.solver.max_cycles = 20;
+    cfg.solver.ckpt.scheme = scheme;
+    cfg.solver.ckpt.delta = delta;
+    cfg
+}
+
+fn run_leg(name: &'static str, scheme: Scheme, delta: bool, failures: usize) -> LegResult {
+    let cfg = cfg_for(scheme, delta, failures);
+    let rep: RunReport =
+        bench_common::timed(name, || coordinator::run(&cfg)).expect("leg completes");
+    assert!(rep.converged, "{name}: relres={}", rep.final_relres);
+    let (shipped, logical, commits) = rep.ckpt_totals();
+    assert!(commits > 0, "{name}: no commits recorded");
+    LegResult {
+        name,
+        scheme: scheme.name(),
+        delta,
+        commits,
+        shipped_bytes: shipped,
+        logical_bytes: logical,
+        bytes_per_commit: shipped as f64 / commits as f64,
+        commit_latency_ms: 1e3 * rep.max_phases.checkpoint / commits as f64,
+        tts: rep.time_to_solution,
+        iterations: rep.iterations,
+        converged: rep.converged,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // Failure-free volume legs: the steady-state checkpoint bill.
+    let legs = vec![
+        run_leg("mirror1_full", Scheme::Mirror { k: 1 }, false, 0),
+        run_leg("mirror1_delta", Scheme::Mirror { k: 1 }, true, 0),
+        run_leg("mirror2_full", Scheme::Mirror { k: 2 }, false, 0),
+        run_leg("xor4_full", Scheme::Xor { g: 4 }, false, 0),
+        run_leg("xor4_delta", Scheme::Xor { g: 4 }, true, 0),
+        // Single-failure recovery legs: schemes must restore the same
+        // committed state (identical post-recovery iteration history).
+        run_leg("mirror1_full_f1", Scheme::Mirror { k: 1 }, false, 1),
+        run_leg("xor4_delta_f1", Scheme::Xor { g: 4 }, true, 1),
+    ];
+
+    println!(
+        "{:<18} {:>10} {:>8} {:>14} {:>16} {:>14} {:>10}",
+        "leg", "scheme", "commits", "shipped[MB]", "bytes/commit[KB]", "latency[ms]", "tts[s]"
+    );
+    for l in &legs {
+        println!(
+            "{:<18} {:>10} {:>8} {:>14.3} {:>16.1} {:>14.4} {:>10.4}",
+            l.name,
+            l.scheme,
+            l.commits,
+            l.shipped_bytes as f64 / 1e6,
+            l.bytes_per_commit / 1e3,
+            l.commit_latency_ms,
+            l.tts
+        );
+    }
+
+    let by_name = |n: &str| legs.iter().find(|l| l.name == n).unwrap();
+    let base = by_name("mirror1_full");
+    let best = by_name("xor4_delta");
+    let reduction = base.bytes_per_commit / best.bytes_per_commit;
+    println!("\nper-commit redundant bytes: mirror:1 full / xor:4 delta = {reduction:.2}x");
+
+    // Acceptance: xor:4 + delta cuts per-commit redundant bytes shipped by
+    // at least 2x vs mirror:1...
+    assert!(
+        reduction >= 2.0,
+        "xor:4+delta must ship at least 2x fewer bytes per commit: {reduction:.2}x"
+    );
+    // ...the delta layer alone already helps...
+    assert!(
+        by_name("mirror1_delta").shipped_bytes < base.shipped_bytes,
+        "delta must reduce mirror shipping"
+    );
+    // ...and recoveries under both schemes restore the same committed
+    // state: identical iteration history after the same kill schedule.
+    assert_eq!(
+        by_name("mirror1_full_f1").iterations,
+        by_name("xor4_delta_f1").iterations,
+        "schemes must restore the same committed version"
+    );
+
+    // Emit BENCH_ckpt.json at the repository root.
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"ckpt\",\n  \"workload\": \"ftgmres p=8 cube16 m_inner=10\",\n");
+    let _ = writeln!(
+        json,
+        "  \"reduction_mirror1_full_over_xor4_delta\": {reduction:.4},\n  \"legs\": ["
+    );
+    for (i, l) in legs.iter().enumerate() {
+        let _ = writeln!(
+            json,
+            "    {{\"name\": \"{}\", \"scheme\": \"{}\", \"delta\": {}, \"commits\": {}, \
+             \"shipped_bytes\": {}, \"logical_bytes\": {}, \"bytes_per_commit\": {:.1}, \
+             \"commit_latency_ms\": {:.4}, \"tts_virtual_s\": {:.4}, \"iterations\": {}, \
+             \"converged\": {}}}{}",
+            l.name,
+            l.scheme,
+            l.delta,
+            l.commits,
+            l.shipped_bytes,
+            l.logical_bytes,
+            l.bytes_per_commit,
+            l.commit_latency_ms,
+            l.tts,
+            l.iterations,
+            l.converged,
+            if i + 1 < legs.len() { "," } else { "" }
+        );
+    }
+    json.push_str("  ]\n}\n");
+    let path = std::path::Path::new("../BENCH_ckpt.json");
+    std::fs::write(path, &json)?;
+    eprintln!("wrote {}", path.display());
+    println!("bench_ckpt checks passed");
+    Ok(())
+}

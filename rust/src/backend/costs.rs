@@ -72,6 +72,12 @@ pub struct RecoveryCostInputs {
     pub horizon_iters: u64,
     /// Inner iterations per outer step (sizes the per-iteration estimate).
     pub m_inner: usize,
+    /// Parity-group size when the checkpoint store runs `xor:<g>`
+    /// (`None` = mirror buddies).  Shifts the per-strategy estimates: xor
+    /// reconstruction gathers `g-1` member blobs plus a fold instead of one
+    /// buddy fetch, while re-encoding ships one parity contribution instead
+    /// of `k` full copies.
+    pub xor_group: Option<usize>,
 }
 
 /// Estimated seconds for each recovery strategy, comparable against each
@@ -94,6 +100,47 @@ pub fn state_bytes_per_rank(net: &NetParams, rows: usize, basis_vecs: usize) -> 
 /// One point-to-point inter-node transfer of `bytes`.
 fn inter_xfer(net: &NetParams, bytes: f64) -> f64 {
     net.inter_latency + bytes / net.inter_bandwidth
+}
+
+/// Modeled seconds to XOR-fold `bytes` of parity (memory-bound: read two
+/// streams, write one).
+pub fn xor_fold_secs(m: &ComputeModel, bytes: f64) -> f64 {
+    m.cost(bytes / 8.0, 3.0 * bytes)
+}
+
+/// Seconds to re-encode one rank's checkpoint redundancy after recovery:
+/// `k` full buddy copies under mirror, one parity contribution plus the
+/// stripe fold under xor.
+pub fn reencode_secs(
+    host: &ComputeModel,
+    net: &NetParams,
+    state_bytes: f64,
+    buddy_k: usize,
+    xor_group: Option<usize>,
+) -> f64 {
+    match xor_group {
+        None => buddy_k as f64 * inter_xfer(net, state_bytes),
+        Some(_) => inter_xfer(net, state_bytes) + xor_fold_secs(host, state_bytes),
+    }
+}
+
+/// Seconds to rebuild one failed rank's state from the store: one buddy
+/// fetch under mirror; a gather of `g-1` surviving member blobs plus the
+/// parity fold under xor (the group-reconstruction the recovery reader
+/// runs), followed by the ship to wherever the state is needed.
+pub fn reconstruct_secs(
+    host: &ComputeModel,
+    net: &NetParams,
+    state_bytes: f64,
+    xor_group: Option<usize>,
+) -> f64 {
+    match xor_group {
+        None => inter_xfer(net, state_bytes),
+        Some(g) => {
+            let gather = inter_xfer(net, (g.saturating_sub(1)) as f64 * state_bytes);
+            gather + xor_fold_secs(host, g as f64 * state_bytes) + inter_xfer(net, state_bytes)
+        }
+    }
 }
 
 /// Modeled seconds of one inner solver iteration at this block size (SpMV
@@ -130,19 +177,27 @@ pub fn recovery_estimates(
         (inp.rows_per_rank * K) as f64,
         (24 * inp.rows_per_rank * K) as f64,
     );
-    let reestablish = inp.buddy_k as f64 * inter_xfer(net, s_bytes);
+    let reestablish = reencode_secs(host, net, s_bytes, inp.buddy_k, inp.xor_group);
+    let fetch = reconstruct_secs(host, net, s_bytes, inp.xor_group);
 
-    let substitute = inter_xfer(net, s_bytes) + rebuild + reestablish;
+    let substitute = fetch + rebuild + reestablish;
     let substitute_cold = substitute + net.cold_spawn_latency;
 
     let survivors = inp.survivors.max(1) as f64;
     let redistribution =
         inter_xfer(net, 2.0 * s_bytes * inp.n_failed as f64 / survivors);
+    // Shrink also rebuilds the failed blocks before redistributing them —
+    // free under mirror relative to the redistribution it overlaps with,
+    // but a real gather+fold round under xor.
+    let shrink_fetch = match inp.xor_group {
+        None => 0.0,
+        Some(_) => fetch * inp.n_failed as f64,
+    };
     let capacity_loss = inner_iter_secs(host, inp.rows_per_rank, inp.m_inner)
         * inp.horizon_iters as f64
         * inp.n_failed as f64
         / survivors;
-    let shrink = redistribution + rebuild + reestablish + capacity_loss;
+    let shrink = shrink_fetch + redistribution + rebuild + reestablish + capacity_loss;
 
     let total_bytes = s_bytes * (inp.survivors + inp.n_failed) as f64;
     let global_restart = global.waste_per_failure(total_bytes as usize);
@@ -163,6 +218,7 @@ mod tests {
             buddy_k: 1,
             horizon_iters: 50,
             m_inner: 25,
+            xor_group: None,
         }
     }
 
@@ -189,6 +245,28 @@ mod tests {
         );
         assert!(est.global_restart > 10.0 * est.substitute);
         assert!(est.global_restart > 10.0 * est.shrink);
+    }
+
+    #[test]
+    fn xor_trades_cheaper_reencode_for_costlier_reconstruction() {
+        let host = ComputeModel::default();
+        let net = NetParams::default();
+        // Reconstruction: gathering g-1 blobs + fold beats one buddy fetch
+        // only in memory, never in time.
+        let s = state_bytes_per_rank(&net, 4096, 51);
+        assert!(
+            reconstruct_secs(&host, &net, s, Some(4)) > reconstruct_secs(&host, &net, s, None)
+        );
+        // Re-encode: one parity contribution vs k=2 full copies.
+        assert!(
+            reencode_secs(&host, &net, s, 2, Some(4)) < reencode_secs(&host, &net, s, 2, None)
+        );
+        // End-to-end: the xor substitute estimate carries the gather.
+        let mut inp = inputs();
+        let base = recovery_estimates(&host, &net, &GlobalCrModel::default(), &inp);
+        inp.xor_group = Some(4);
+        let xor = recovery_estimates(&host, &net, &GlobalCrModel::default(), &inp);
+        assert!(xor.substitute > base.substitute, "{xor:?} vs {base:?}");
     }
 
     #[test]

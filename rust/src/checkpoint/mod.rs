@@ -1,21 +1,21 @@
-//! Application-driven in-memory buddy checkpointing (paper §III-IV).
+//! Per-rank in-memory checkpoint **storage** (paper §III-IV).
 //!
-//! Each rank keeps its checkpointed objects in local memory and ships a
-//! redundant copy to `k` buddy ranks (comm-rank successors on the ring) via
-//! point-to-point messages — the paper's "checkpoints are stored in the
-//! memory of neighboring nodes".  Static objects (matrix block, rhs) are
-//! replicated once at startup and re-established after every recovery;
-//! dynamic objects (solution vector, iteration scalars) are checkpointed at
-//! user-defined intervals (after each inner solve).
+//! Each rank keeps its checkpointed objects in local memory plus whatever
+//! redundancy the configured scheme assigns it: full buddy copies of its
+//! wards' objects (`mirror:<k>`, the paper's "checkpoints are stored in the
+//! memory of neighboring nodes") and/or XOR parity stripes for the groups
+//! it holds (`xor:<g>`).  The coordinated commit protocol, the encoding
+//! schemes and the delta codec live in [`crate::ckptstore`]; this module
+//! owns the versioned object store and the buddy-ring placement math.
 //!
 //! A checkpoint version is *committed* only after the fault-aware agreement
-//! at the end of [`checkpoint`] succeeds, so recovery always restores a
-//! globally consistent version: survivors agree on `min(committed)`.
+//! at the end of [`crate::ckptstore::commit`] succeeds, so recovery always
+//! restores a globally consistent version: survivors agree on
+//! `min(committed)`.
 
 use std::collections::{BTreeMap, HashMap};
 
-use crate::metrics::Phase;
-use crate::simmpi::{tags, Blob, Comm, Ctx, MpiResult, WorldRank};
+use crate::simmpi::{Blob, Comm, Ctx, MpiResult, WorldRank};
 
 pub type ObjId = u32;
 pub type Version = i64;
@@ -38,15 +38,53 @@ pub mod obj {
 /// How many predecessor/successor buddies hold a copy of each object.
 pub const DEFAULT_BUDDIES: usize = 1;
 
+/// One XOR parity stripe: the word-wise XOR of every group member's packed
+/// object (see [`crate::ckptstore::delta::pack_words`]), padded to the
+/// longest member, plus the per-member metadata needed to carve a single
+/// member back out of it.
+#[derive(Debug, Clone)]
+pub struct ParityStripe {
+    /// World ranks of the group members, in comm-rank order at encode time.
+    pub members: Vec<WorldRank>,
+    /// Per-member f-lane lengths (same order as `members`).
+    pub f_lens: Vec<usize>,
+    /// Per-member i-lane lengths.
+    pub i_lens: Vec<usize>,
+    /// Per-member charged-wire scale factors (campaign `data_scale`).
+    pub wire_factors: Vec<f64>,
+    /// The stripe words.
+    pub words: Vec<i64>,
+}
+
+impl ParityStripe {
+    /// Resident bytes of the stripe payload, in the same *charged* units
+    /// as [`Blob::bytes`]: physical words scaled by the campaign
+    /// `data_scale` the members' objects were charged at (carried per
+    /// member in `wire_factors`), so mirror copies and parity stripes are
+    /// comparable in the memory-overhead metric.
+    pub fn bytes(&self) -> usize {
+        let factor = self.wire_factors.iter().copied().fold(1.0, f64::max);
+        ((8 * self.words.len()) as f64 * factor) as usize
+    }
+}
+
 /// In-memory checkpoint store of one rank.
 #[derive(Debug, Default)]
 pub struct CkptStore {
     /// Last version whose global commit succeeded.
     committed: Version,
+    /// Version of the newest *fresh* (establishment) commit: every object,
+    /// buddy copy and parity stripe of the current layout was re-written at
+    /// this version, which makes it the purge watermark for entries from
+    /// pre-recovery layouts (see [`CkptStore::gc_committed`]).
+    last_fresh: Version,
     /// My own objects: obj -> version -> blob.
     local: HashMap<ObjId, BTreeMap<Version, Blob>>,
     /// Buddy copies held for other ranks: (owner world rank, obj) -> ...
     remote: HashMap<(WorldRank, ObjId), BTreeMap<Version, Blob>>,
+    /// Parity stripes held for groups anchored at a world rank (the group's
+    /// first member at encode time): (anchor, obj) -> version -> stripe.
+    parity: HashMap<(WorldRank, ObjId), BTreeMap<Version, ParityStripe>>,
 }
 
 impl CkptStore {
@@ -64,6 +102,16 @@ impl CkptStore {
 
     pub fn put_remote(&mut self, owner: WorldRank, id: ObjId, version: Version, blob: Blob) {
         self.remote.entry((owner, id)).or_default().insert(version, blob);
+    }
+
+    pub fn put_parity(
+        &mut self,
+        anchor: WorldRank,
+        id: ObjId,
+        version: Version,
+        stripe: ParityStripe,
+    ) {
+        self.parity.entry((anchor, id)).or_default().insert(version, stripe);
     }
 
     pub fn get_local(&self, id: ObjId, version: Version) -> Option<&Blob> {
@@ -90,32 +138,98 @@ impl CkptStore {
         Some((*v, b))
     }
 
+    pub fn get_parity_at_most(
+        &self,
+        anchor: WorldRank,
+        id: ObjId,
+        version: Version,
+    ) -> Option<(Version, &ParityStripe)> {
+        let (v, s) = self.parity.get(&(anchor, id))?.range(..=version).next_back()?;
+        Some((*v, s))
+    }
+
     /// Drop remote copies held for `owner` (after its data was re-homed).
     pub fn drop_owner(&mut self, owner: WorldRank) {
         self.remote.retain(|(o, _), _| *o != owner);
     }
 
-    /// Garbage-collect: keep only the newest `keep` versions of everything.
-    pub fn gc(&mut self, keep: usize) {
-        let trim = |m: &mut BTreeMap<Version, Blob>| {
-            while m.len() > keep {
-                let oldest = *m.keys().next().unwrap();
-                m.remove(&oldest);
-            }
-        };
-        self.local.values_mut().for_each(trim);
-        self.remote.values_mut().for_each(trim);
+    /// Record that `version` was a *fresh* (establishment) commit: the
+    /// whole current layout was re-encoded at it.  Called by the commit
+    /// protocol after the fault-aware agreement succeeds.
+    pub(crate) fn note_fresh(&mut self, version: Version) {
+        self.last_fresh = self.last_fresh.max(version);
     }
 
-    fn commit(&mut self, version: Version) {
+    /// Garbage-collect versions below the globally committed floor.
+    ///
+    /// Commit skew between any two live ranks is at most one version (a
+    /// torn agreement leaves some ranks one commit behind; the next
+    /// successful recovery re-synchronizes everyone), so the restore
+    /// version `min(committed)` can be at most `committed - 1` on this
+    /// rank.  Per object, keep the newest version at or below that floor —
+    /// the version any restore could still ask for — plus everything newer.
+    /// Static objects written once at establishment keep exactly their
+    /// single version; dynamic objects keep two.
+    ///
+    /// Additionally, once a commit *after* the newest establishment has
+    /// succeeded, every participant of that later commit has provably
+    /// committed at least the establishment version, so no future restore
+    /// can agree on anything older: whole entries whose newest version
+    /// predates the establishment — buddy copies and parity stripes keyed
+    /// under pre-recovery layouts (stale owners, stale group anchors) —
+    /// are dropped outright.  Purging is deliberately deferred by that one
+    /// commit: right after the establishment itself, a torn agreement
+    /// could still roll survivors back to the previous layout, whose
+    /// redundancy must stay readable.
+    pub fn gc_committed(&mut self) {
+        let floor = self.committed - 1;
+        fn trim<T>(m: &mut BTreeMap<Version, T>, floor: Version) {
+            if let Some((&pin, _)) = m.range(..=floor).next_back() {
+                // Everything strictly older than the pinned floor version
+                // can never be restored again.
+                let keep = m.split_off(&pin);
+                *m = keep;
+            }
+        }
+        self.local.values_mut().for_each(|m| trim(m, floor));
+        self.remote.values_mut().for_each(|m| trim(m, floor));
+        self.parity.values_mut().for_each(|m| trim(m, floor));
+        if self.committed > self.last_fresh {
+            let vf = self.last_fresh;
+            let live = |newest: Option<Version>| newest.is_some_and(|v| v >= vf);
+            self.local.retain(|_, m| live(m.keys().next_back().copied()));
+            self.remote.retain(|_, m| live(m.keys().next_back().copied()));
+            self.parity.retain(|_, m| live(m.keys().next_back().copied()));
+        }
+    }
+
+    /// Forget everything (global restart from scratch: survivors rebuild
+    /// state analytically and re-establish fresh checkpoints).
+    pub fn clear_all(&mut self) {
+        self.local.clear();
+        self.remote.clear();
+        self.parity.clear();
+    }
+
+    pub(crate) fn commit(&mut self, version: Version) {
         self.committed = version;
     }
 
-    /// Total resident bytes (local + buddy copies) — memory-overhead metric.
+    /// Test seam: force the committed watermark without running the
+    /// agreement (models a torn commit where only some ranks advanced).
+    #[doc(hidden)]
+    pub fn force_committed(&mut self, version: Version) {
+        self.commit(version);
+    }
+
+    /// Total resident bytes (local + buddy copies + parity stripes) — the
+    /// memory-overhead metric.
     pub fn resident_bytes(&self) -> usize {
         let l: usize = self.local.values().flat_map(|m| m.values()).map(Blob::bytes).sum();
         let r: usize = self.remote.values().flat_map(|m| m.values()).map(Blob::bytes).sum();
-        l + r
+        let p: usize =
+            self.parity.values().flat_map(|m| m.values()).map(ParityStripe::bytes).sum();
+        l + r + p
     }
 }
 
@@ -161,12 +275,10 @@ pub fn ward_of_stride(r: usize, d: usize, n: usize, stride: usize) -> usize {
     (r + n - (d * stride) % n) % n
 }
 
-/// Coordinated checkpoint of `objs` at `version` with `k` buddies.
-///
-/// Called at a quiescent point by every member of `comm` (the paper
-/// checkpoints after each completed inner solve, when no solver messages are
-/// in flight).  Commits the version only after a fault-aware agreement, so a
-/// failure mid-checkpoint leaves the previous committed version intact.
+/// Coordinated full-copy checkpoint of `objs` at `version` with `k`
+/// buddies: the paper's original protocol, kept as a thin wrapper over
+/// [`crate::ckptstore::commit`] with a `mirror:<k>` scheme and the delta
+/// layer off.
 pub fn checkpoint(
     ctx: &mut Ctx,
     comm: &mut Comm,
@@ -175,59 +287,8 @@ pub fn checkpoint(
     version: Version,
     k: usize,
 ) -> MpiResult<()> {
-    // Post-recovery re-establishment is charged to Recovery (the paper
-    // counts "updating all the in-memory checkpoints" as recovery cost);
-    // steady-state checkpoints get their own bucket.
-    let prev = if ctx.phase == Phase::Recovery {
-        Phase::Recovery
-    } else {
-        ctx.set_phase(Phase::Checkpoint)
-    };
-    let result = checkpoint_inner(ctx, comm, store, objs, version, k);
-    ctx.set_phase(prev);
-    result
-}
-
-fn checkpoint_inner(
-    ctx: &mut Ctx,
-    comm: &mut Comm,
-    store: &mut CkptStore,
-    objs: &[(ObjId, Blob)],
-    version: Version,
-    k: usize,
-) -> MpiResult<()> {
-    let n = comm.size();
-    let me = comm.rank;
-    let k = k.min(n.saturating_sub(1));
-    let stride = effective_stride(&ctx.world.net.params, n);
-    for (id, blob) in objs {
-        store.put_local(*id, version, blob.clone());
-    }
-    // Ship to all buddies first (unbounded channels: no deadlock), then
-    // receive the copies this rank holds for its wards.
-    for d in 1..=k {
-        let buddy = buddy_of_stride(me, d, n, stride);
-        for (id, blob) in objs {
-            comm.send(ctx, buddy, ckpt_tag(*id, d), blob.clone())?;
-        }
-    }
-    for d in 1..=k {
-        let ward = ward_of_stride(me, d, n, stride);
-        let owner_wr = comm.world_of(ward);
-        for (id, _) in objs {
-            let blob = comm.recv(ctx, ward, ckpt_tag(*id, d))?;
-            store.put_remote(owner_wr, *id, version, blob);
-        }
-    }
-    // Global commit: everyone stored everything.
-    comm.agree(ctx, u64::MAX)?;
-    store.commit(version);
-    store.gc(2);
-    Ok(())
-}
-
-fn ckpt_tag(id: ObjId, d: usize) -> u32 {
-    tags::CKPT_BASE + id * 16 + d as u32
+    let cfg = crate::ckptstore::CkptCfg::mirror(k);
+    crate::ckptstore::commit(ctx, comm, store, objs, version, &cfg, false)
 }
 
 /// Agree on the restore version: the newest version every survivor has
@@ -280,12 +341,39 @@ mod tests {
         for v in 0..5 {
             s.put_local(obj::X, v, Blob::scalar(v as f64));
         }
-        s.gc(2);
+        s.force_committed(4);
+        s.gc_committed();
         assert!(s.get_local(obj::X, 2).is_none());
+        assert_eq!(s.get_local(obj::X, 3).unwrap().f, vec![3.0]);
         assert_eq!(s.get_local(obj::X, 4).unwrap().f, vec![4.0]);
         let (v, b) = s.get_local_at_most(obj::X, 100).unwrap();
         assert_eq!(v, 4);
         assert_eq!(b.f, vec![4.0]);
+    }
+
+    #[test]
+    fn gc_committed_keeps_restore_floor_and_statics() {
+        let mut s = CkptStore::new();
+        // Static object written once at establishment (version 0).
+        s.put_local(obj::MAT, 0, Blob::scalar(10.0));
+        s.put_remote(3, obj::MAT, 0, Blob::scalar(30.0));
+        // Dynamic object at every commit.
+        for v in 0..=4 {
+            s.put_local(obj::X, v, Blob::scalar(v as f64));
+            s.put_remote(3, obj::X, v, Blob::scalar(10.0 + v as f64));
+        }
+        s.force_committed(4);
+        s.gc_committed();
+        // Floor = 3: versions 3 and 4 survive (a peer may only have
+        // committed 3), older dynamic versions are gone.
+        assert!(s.get_local(obj::X, 2).is_none());
+        assert!(s.get_local(obj::X, 3).is_some());
+        assert!(s.get_local(obj::X, 4).is_some());
+        assert!(s.get_remote(3, obj::X, 2).is_none());
+        assert!(s.get_remote(3, obj::X, 3).is_some());
+        // The static object's single version is pinned, not collected.
+        assert!(s.get_local(obj::MAT, 0).is_some());
+        assert!(s.get_remote(3, obj::MAT, 0).is_some());
     }
 
     #[test]
@@ -297,6 +385,27 @@ mod tests {
         s.drop_owner(7);
         assert!(s.get_remote(7, obj::X, 1).is_none());
         assert!(s.get_remote(8, obj::X, 1).is_some());
+    }
+
+    #[test]
+    fn parity_versioning_and_clear() {
+        let mut s = CkptStore::new();
+        let stripe = |w: i64| ParityStripe {
+            members: vec![0, 1, 2, 3],
+            f_lens: vec![1; 4],
+            i_lens: vec![0; 4],
+            wire_factors: vec![1.0; 4],
+            words: vec![w, w],
+        };
+        s.put_parity(0, obj::X, 1, stripe(1));
+        s.put_parity(0, obj::X, 2, stripe(2));
+        let (v, got) = s.get_parity_at_most(0, obj::X, 5).unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(got.words, vec![2, 2]);
+        assert_eq!(s.resident_bytes(), 32);
+        s.clear_all();
+        assert!(s.get_parity_at_most(0, obj::X, 5).is_none());
+        assert_eq!(s.resident_bytes(), 0);
     }
 
     #[test]

@@ -1,0 +1,395 @@
+//! Chunk-level delta encoding for checkpoint shipping (DESIGN.md §8).
+//!
+//! Checkpointed objects are serialized to a flat array of 64-bit *words*
+//! (f64 bit patterns followed by i64 values) and compared chunk-by-chunk
+//! against the previous committed version; only changed chunks travel on
+//! the wire.  Three wire formats exist:
+//!
+//! * [`FMT_MDELTA`] — mirror delta: changed chunks carry the *new* words;
+//!   the buddy overlays them on its stored copy of the base version and
+//!   materializes a full blob, so the store always holds full objects and
+//!   recovery never chases delta chains.
+//! * [`FMT_XFULL`] — xor full contribution: the complete packed words of
+//!   one group member, folded into a fresh parity stripe (rebase commits).
+//! * [`FMT_XDELTA`] — xor delta contribution: changed chunks carry
+//!   `old ^ new`, which is exactly the parity-stripe update
+//!   (`stripe' = stripe ^ old ^ new`), so delta shipping and parity
+//!   encoding compose without the holder ever seeing the member's data.
+//!
+//! Word-level XOR is bit-exact (no floating-point arithmetic touches the
+//! payloads), so reconstruction returns bit-identical objects.  Length
+//! changes between versions (the Krylov basis grows every outer step) are
+//! handled by comparing over zero-padded arrays: the common prefix still
+//! dedupes, and only the tail plus genuinely changed chunks ship.
+//!
+//! All payloads ride in the `i` lane of a [`Blob`] so the virtual network
+//! charges them at exactly 8 bytes per word.
+
+use crate::checkpoint::Version;
+use crate::simmpi::Blob;
+
+/// Mirror delta wire format tag.
+pub const FMT_MDELTA: i64 = 2;
+/// Xor full-contribution wire format tag.
+pub const FMT_XFULL: i64 = 3;
+/// Xor delta-contribution wire format tag.
+pub const FMT_XDELTA: i64 = 4;
+
+/// Serialize a blob into 64-bit words: f64 bit patterns, then i64 values.
+pub fn pack_words(b: &Blob) -> Vec<i64> {
+    let mut w = Vec::with_capacity(b.f.len() + b.i.len());
+    w.extend(b.f.iter().map(|v| v.to_bits() as i64));
+    w.extend_from_slice(&b.i);
+    w
+}
+
+/// Inverse of [`pack_words`] given the original lane lengths.  `words` may
+/// be longer (parity stripes are padded to the longest group member).
+pub fn unpack_words(words: &[i64], f_len: usize, i_len: usize) -> Blob {
+    debug_assert!(
+        words.len() >= f_len + i_len,
+        "packed words shorter than recorded lengths"
+    );
+    Blob {
+        f: words[..f_len].iter().map(|&w| f64::from_bits(w as u64)).collect(),
+        i: words[f_len..f_len + i_len].to_vec(),
+        wire: None,
+    }
+}
+
+/// XOR `words` into `acc`, growing `acc` with zeros as needed.
+pub fn xor_into(acc: &mut Vec<i64>, words: &[i64]) {
+    if acc.len() < words.len() {
+        acc.resize(words.len(), 0);
+    }
+    for (a, w) in acc.iter_mut().zip(words.iter()) {
+        *a ^= *w;
+    }
+}
+
+/// Ratio of charged wire bytes to physical payload bytes of `b` (the
+/// campaign `data_scale` for rows-proportional objects, 1 otherwise).
+/// Derived payloads (deltas, parity contributions, reconstructed blobs)
+/// inherit this factor so the network model keeps pricing them like the
+/// full objects they stand in for.
+pub fn wire_factor(b: &Blob) -> f64 {
+    let physical = 8 * (b.f.len() + b.i.len());
+    match b.wire {
+        Some(w) if physical > 0 => w as f64 / physical as f64,
+        _ => 1.0,
+    }
+}
+
+/// Wire format tag of an encoded payload.
+pub fn wire_fmt(wire: &Blob) -> i64 {
+    wire.i[0]
+}
+
+fn word_at(words: &[i64], j: usize) -> i64 {
+    if j < words.len() {
+        words[j]
+    } else {
+        0
+    }
+}
+
+/// Chunk indices (over `total` zero-padded words, `cw` words per chunk)
+/// where `base` and `new_w` differ.
+fn changed_chunks(base: &[i64], new_w: &[i64], total: usize, cw: usize) -> Vec<usize> {
+    let n_chunks = total.div_ceil(cw);
+    let mut changed = Vec::new();
+    for c in 0..n_chunks {
+        let lo = c * cw;
+        let hi = total.min(lo + cw);
+        if (lo..hi).any(|j| word_at(base, j) != word_at(new_w, j)) {
+            changed.push(c);
+        }
+    }
+    changed
+}
+
+/// Shared delta wire layout:
+/// `[fmt, base_version, f_len, i_len, chunk_words, total_words, n_chunks,
+///   idx_0..idx_{n-1}, chunk words...]`.
+fn delta_wire(
+    fmt: i64,
+    base_w: &[i64],
+    new_w: &[i64],
+    total: usize,
+    f_len: usize,
+    i_len: usize,
+    base_version: Version,
+    cw: usize,
+    xor: bool,
+) -> Blob {
+    let changed = changed_chunks(base_w, new_w, total, cw);
+    let mut i = Vec::with_capacity(7 + changed.len() * (cw + 1));
+    i.push(fmt);
+    i.push(base_version);
+    i.push(f_len as i64);
+    i.push(i_len as i64);
+    i.push(cw as i64);
+    i.push(total as i64);
+    i.push(changed.len() as i64);
+    for &c in &changed {
+        i.push(c as i64);
+    }
+    for &c in &changed {
+        let lo = c * cw;
+        let hi = total.min(lo + cw);
+        for j in lo..hi {
+            let v = if xor {
+                word_at(base_w, j) ^ word_at(new_w, j)
+            } else {
+                word_at(new_w, j)
+            };
+            i.push(v);
+        }
+    }
+    Blob { f: Vec::new(), i, wire: None }
+}
+
+/// Encode a mirror delta of `new` against `base` (chunks carry new words;
+/// comparison runs over `new`'s length, zero-padding or truncating the
+/// base).
+pub fn mirror_delta_wire(
+    base: &Blob,
+    new: &Blob,
+    base_version: Version,
+    chunk_words: usize,
+) -> Blob {
+    let base_w = pack_words(base);
+    let new_w = pack_words(new);
+    let total = new_w.len();
+    delta_wire(
+        FMT_MDELTA,
+        &base_w,
+        &new_w,
+        total,
+        new.f.len(),
+        new.i.len(),
+        base_version,
+        chunk_words.max(1),
+        false,
+    )
+}
+
+/// Encode an xor delta contribution (`old ^ new` chunks over the padded
+/// union length, so stale tail bits are cleared out of the stripe too).
+pub fn xor_delta_wire(
+    base: &Blob,
+    new: &Blob,
+    base_version: Version,
+    chunk_words: usize,
+) -> Blob {
+    let base_w = pack_words(base);
+    let new_w = pack_words(new);
+    let total = base_w.len().max(new_w.len());
+    delta_wire(
+        FMT_XDELTA,
+        &base_w,
+        &new_w,
+        total,
+        new.f.len(),
+        new.i.len(),
+        base_version,
+        chunk_words.max(1),
+        true,
+    )
+}
+
+/// Encode a full xor contribution: `[FMT_XFULL, f_len, i_len, words...]`.
+pub fn xor_full_wire(new: &Blob) -> Blob {
+    let words = pack_words(new);
+    let mut i = Vec::with_capacity(3 + words.len());
+    i.push(FMT_XFULL);
+    i.push(new.f.len() as i64);
+    i.push(new.i.len() as i64);
+    i.extend_from_slice(&words);
+    Blob { f: Vec::new(), i, wire: None }
+}
+
+/// Apply a mirror delta to the receiver's materialized `base` copy.
+/// Returns `(base_version the sender diffed against, materialized blob)`;
+/// the caller must check the version against its own store.
+pub fn apply_mirror_delta(base: &Blob, wire: &Blob) -> (Version, Blob) {
+    assert_eq!(wire.i[0], FMT_MDELTA, "not a mirror delta payload");
+    let base_version = wire.i[1];
+    let f_len = wire.i[2] as usize;
+    let i_len = wire.i[3] as usize;
+    let cw = wire.i[4] as usize;
+    let total = wire.i[5] as usize;
+    let n_chunks = wire.i[6] as usize;
+    let mut words = pack_words(base);
+    words.resize(total, 0);
+    let mut off = 7 + n_chunks;
+    for ci in 0..n_chunks {
+        let c = wire.i[7 + ci] as usize;
+        let lo = c * cw;
+        let hi = total.min(lo + cw);
+        words[lo..hi].copy_from_slice(&wire.i[off..off + (hi - lo)]);
+        off += hi - lo;
+    }
+    (base_version, unpack_words(&words, f_len, i_len))
+}
+
+/// Fold a full xor contribution into a stripe accumulator.  Returns the
+/// member's `(f_len, i_len)`.
+pub fn fold_xor_full(acc: &mut Vec<i64>, wire: &Blob) -> (usize, usize) {
+    assert_eq!(wire.i[0], FMT_XFULL, "not a full xor contribution");
+    let f_len = wire.i[1] as usize;
+    let i_len = wire.i[2] as usize;
+    xor_into(acc, &wire.i[3..]);
+    (f_len, i_len)
+}
+
+/// Fold an xor delta contribution into a stripe accumulator.  Returns the
+/// `(base version the member diffed against, new f_len, new i_len)`; the
+/// caller must have seeded `acc` from its stripe at that base version.
+pub fn fold_xor_delta(acc: &mut Vec<i64>, wire: &Blob) -> (Version, usize, usize) {
+    assert_eq!(wire.i[0], FMT_XDELTA, "not an xor delta contribution");
+    let base_version = wire.i[1];
+    let f_len = wire.i[2] as usize;
+    let i_len = wire.i[3] as usize;
+    let cw = wire.i[4] as usize;
+    let total = wire.i[5] as usize;
+    let n_chunks = wire.i[6] as usize;
+    if acc.len() < total {
+        acc.resize(total, 0);
+    }
+    let mut off = 7 + n_chunks;
+    for ci in 0..n_chunks {
+        let c = wire.i[7 + ci] as usize;
+        let lo = c * cw;
+        let hi = total.min(lo + cw);
+        for j in lo..hi {
+            acc[j] ^= wire.i[off + (j - lo)];
+        }
+        off += hi - lo;
+    }
+    (base_version, f_len, i_len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob(f: Vec<f64>, i: Vec<i64>) -> Blob {
+        Blob { f, i, wire: None }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_preserves_bits() {
+        let b = blob(vec![1.5, -0.0, f64::NAN, 3.25e-300], vec![-7, 0, 42]);
+        let w = pack_words(&b);
+        let r = unpack_words(&w, 4, 3);
+        assert_eq!(r.i, b.i);
+        for (x, y) in r.f.iter().zip(&b.f) {
+            assert_eq!(x.to_bits(), y.to_bits(), "bit-exact f64 roundtrip");
+        }
+    }
+
+    #[test]
+    fn mirror_delta_roundtrips_same_length() {
+        let base = blob((0..100).map(|i| i as f64).collect(), vec![1, 2]);
+        let mut new = base.clone();
+        new.f[3] = -3.0;
+        new.f[97] = 99.5;
+        let wire = mirror_delta_wire(&base, &new, 7, 8);
+        // Two changed chunks out of ~13: far fewer words than full.
+        assert!(wire.i.len() < 100 / 2);
+        let (bv, out) = apply_mirror_delta(&base, &wire);
+        assert_eq!(bv, 7);
+        assert_eq!(out.f, new.f);
+        assert_eq!(out.i, new.i);
+    }
+
+    #[test]
+    fn mirror_delta_handles_growth_and_shrink() {
+        let base = blob((0..40).map(|i| i as f64).collect(), vec![2, 1]);
+        // Growth: prefix intact, tail appended.
+        let mut grown = base.clone();
+        grown.f.extend((0..16).map(|i| -(i as f64)));
+        grown.i = vec![3, 2];
+        let wire = mirror_delta_wire(&base, &grown, 1, 8);
+        let (_, out) = apply_mirror_delta(&base, &wire);
+        assert_eq!(out.f, grown.f);
+        assert_eq!(out.i, grown.i);
+        // Shrink: result truncates.
+        let mut small = base.clone();
+        small.f.truncate(10);
+        let wire = mirror_delta_wire(&base, &small, 1, 8);
+        let (_, out) = apply_mirror_delta(&base, &wire);
+        assert_eq!(out.f, small.f);
+        assert_eq!(out.i, small.i);
+    }
+
+    #[test]
+    fn unchanged_blob_ships_header_only() {
+        let base = blob((0..512).map(|i| (i as f64).sin()).collect(), vec![9]);
+        let wire = mirror_delta_wire(&base, &base, 3, 64);
+        assert_eq!(wire.i[6], 0, "no changed chunks");
+        assert_eq!(wire.i.len(), 7, "header only");
+        let (_, out) = apply_mirror_delta(&base, &wire);
+        assert_eq!(out.f, base.f);
+    }
+
+    #[test]
+    fn xor_full_fold_reconstructs_missing_member() {
+        // Three members; stripe = xor of all; losing m1 reconstructs from
+        // stripe ^ m0 ^ m2.
+        let m0 = blob(vec![1.0, 2.0, 3.0], vec![5]);
+        let m1 = blob(vec![-4.0, 0.5], vec![7, 8]);
+        let m2 = blob(vec![9.0; 5], vec![]);
+        let mut stripe: Vec<i64> = Vec::new();
+        let mut lens = Vec::new();
+        for m in [&m0, &m1, &m2] {
+            lens.push(fold_xor_full(&mut stripe, &xor_full_wire(m)));
+        }
+        assert_eq!(lens[1], (2, 2));
+        let mut acc = stripe.clone();
+        xor_into(&mut acc, &pack_words(&m0));
+        xor_into(&mut acc, &pack_words(&m2));
+        let rec = unpack_words(&acc, 2, 2);
+        assert_eq!(rec.f, m1.f);
+        assert_eq!(rec.i, m1.i);
+    }
+
+    #[test]
+    fn xor_delta_updates_stripe_exactly() {
+        // Stripe over two members; member 0 changes (and grows); the delta
+        // contribution must leave the stripe equal to a fresh re-encode.
+        let m0 = blob((0..64).map(|i| i as f64).collect(), vec![1]);
+        let m1 = blob((0..50).map(|i| -(i as f64)).collect(), vec![2, 3]);
+        let mut stripe: Vec<i64> = Vec::new();
+        fold_xor_full(&mut stripe, &xor_full_wire(&m0));
+        fold_xor_full(&mut stripe, &xor_full_wire(&m1));
+
+        let mut m0b = m0.clone();
+        m0b.f[10] = 1e9;
+        m0b.f.extend([7.0, 8.0]);
+        let wire = xor_delta_wire(&m0, &m0b, 4, 8);
+        let (bv, f_len, i_len) = fold_xor_delta(&mut stripe, &wire);
+        assert_eq!(bv, 4);
+        assert_eq!((f_len, i_len), (66, 1));
+
+        let mut fresh: Vec<i64> = Vec::new();
+        fold_xor_full(&mut fresh, &xor_full_wire(&m0b));
+        fold_xor_full(&mut fresh, &xor_full_wire(&m1));
+        assert_eq!(stripe, fresh, "delta fold == fresh re-encode");
+        // And the updated stripe reconstructs the changed member.
+        let mut acc = stripe.clone();
+        xor_into(&mut acc, &pack_words(&m1));
+        let rec = unpack_words(&acc, f_len, i_len);
+        assert_eq!(rec.f, m0b.f);
+        assert_eq!(rec.i, m0b.i);
+    }
+
+    #[test]
+    fn wire_factor_tracks_data_scale() {
+        let b = blob(vec![0.0; 10], vec![]).scaled(36.0);
+        assert!((wire_factor(&b) - 36.0).abs() < 1e-12);
+        assert_eq!(wire_factor(&blob(vec![0.0; 4], vec![1])), 1.0);
+        assert_eq!(wire_factor(&Blob::empty()), 1.0);
+    }
+}

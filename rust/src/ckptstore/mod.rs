@@ -1,0 +1,567 @@
+//! Erasure-coded in-memory checkpoint subsystem (DESIGN.md §8).
+//!
+//! Replaces the flat ship-`k`-full-copies buddy scheme with three layers:
+//!
+//! * an **encoding layer** ([`scheme`]) — pluggable redundancy:
+//!   `mirror:<k>` (the paper's buddy replication, default) and `xor:<g>`
+//!   (parity groups of `g` ranks; one XOR stripe per group per object on a
+//!   holder outside the group, cutting redundant memory from `k x state`
+//!   to `state / g`);
+//! * a **delta layer** ([`delta`]) — dynamic objects ship chunk-level
+//!   diffs against the last committed version with periodic full rebases
+//!   (`ckpt_delta`, `ckpt_chunk_kib`, `ckpt_rebase_every`), cutting bytes
+//!   shipped per commit;
+//! * a **recovery reader** ([`reconstruct_failed`]) — rebuilds a failed
+//!   rank's objects from surviving group members plus parity (or serves
+//!   mirror buddy copies), shared by shrink and substitute recovery, and a
+//!   loss assessor ([`assess_loss`]) that detects *unrecoverable* losses
+//!   (two failures in one parity group before a re-encode, a group member
+//!   plus its holder, or a rank plus all its mirror buddies) so the policy
+//!   engine can escalate to a global restart instead of wedging.
+//!
+//! Group-failure escalation matrix (`xor:<g>`, between re-encodes):
+//!
+//! | Loss pattern                    | Outcome                             |
+//! |---------------------------------|-------------------------------------|
+//! | 1 member of a group             | in-situ reconstruct via parity      |
+//! | holder only                     | nothing lost; stripe rebuilt at next commit |
+//! | ≥ 2 members of one group        | escalate: `GlobalRestart`           |
+//! | 1 member + that group's holder  | escalate: `GlobalRestart`           |
+//!
+//! Every commit is still sealed by the fault-aware agreement, so a failure
+//! mid-commit leaves the previous committed version intact, and commit
+//! metrics ([`crate::metrics::CkptRecord`]) record bytes shipped and
+//! encode time per commit for the checkpoint-overhead figures.
+
+pub mod delta;
+pub mod scheme;
+
+pub use scheme::Scheme;
+
+use crate::checkpoint::{
+    buddy_of_stride, effective_stride, ward_of_stride, CkptStore, ObjId, ParityStripe, Version,
+};
+use crate::metrics::{CkptRecord, Phase};
+use crate::simmpi::{tags, Blob, Comm, Ctx, MpiResult, Tag, WorldRank};
+
+/// Checkpoint-store configuration (config keys `ckpt_scheme`, `ckpt_delta`,
+/// `ckpt_chunk_kib`, `ckpt_rebase_every`; CLI `--ckpt-scheme` /
+/// `--ckpt-delta`).
+#[derive(Debug, Clone)]
+pub struct CkptCfg {
+    /// Redundancy scheme.
+    pub scheme: Scheme,
+    /// Ship dynamic commits as chunk deltas against the last committed
+    /// version (full rebases every `rebase_every` versions).
+    pub delta: bool,
+    /// Delta chunk size in KiB (1 KiB = 128 words).
+    pub chunk_kib: usize,
+    /// Versions between full rebases when the delta layer is on.
+    pub rebase_every: u32,
+    /// Modeled encode/fold throughput (bytes/s) for XOR folding and delta
+    /// scans — a deliberately simple memory-bandwidth-style knob so every
+    /// rank charges identical, deterministic virtual time.
+    pub encode_bytes_per_sec: f64,
+}
+
+impl Default for CkptCfg {
+    fn default() -> Self {
+        CkptCfg {
+            scheme: Scheme::default(),
+            delta: false,
+            chunk_kib: 4,
+            rebase_every: 8,
+            encode_bytes_per_sec: 4e9,
+        }
+    }
+}
+
+impl CkptCfg {
+    /// The paper's original configuration: `mirror:<k>`, no delta.
+    pub fn mirror(k: usize) -> Self {
+        CkptCfg { scheme: Scheme::Mirror { k }, ..CkptCfg::default() }
+    }
+
+    /// Delta chunk size in 64-bit words.
+    pub fn chunk_words(&self) -> usize {
+        (self.chunk_kib.max(1) * 1024) / 8
+    }
+
+    /// Whether commit `version` ships deltas (`fresh` commits — initial
+    /// establishment and post-recovery re-establishment — always rebase,
+    /// because membership or layout just changed).
+    pub fn use_delta(&self, version: Version, fresh: bool) -> bool {
+        self.delta
+            && !fresh
+            && version > 0
+            && version % self.rebase_every.max(1) as i64 != 0
+    }
+}
+
+/// Buddy-copy shipping tag (mirror scheme), object `id` to buddy distance
+/// `d`.  Public so protocol tests can interleave with the real exchange.
+pub fn ship_tag(id: ObjId, d: usize) -> Tag {
+    tags::CKPT_BASE + id * 16 + d as u32
+}
+
+fn parity_tag(id: ObjId) -> Tag {
+    tags::CKPT_PARITY_BASE + id
+}
+
+fn recon_tag(id: ObjId, failed_cr: usize) -> Tag {
+    tags::RECON_BASE + id * 4096 + failed_cr as u32
+}
+
+/// Charge deterministic encode/fold time for touching `words` 64-bit words.
+fn charge_encode(ctx: &mut Ctx, cfg: &CkptCfg, words: usize, acc: &mut f64) {
+    let secs = (8 * words) as f64 / cfg.encode_bytes_per_sec;
+    ctx.advance(secs);
+    *acc += secs;
+}
+
+/// Coordinated checkpoint commit of `objs` at `version` under `cfg`.
+///
+/// Called at a quiescent point by every member of `comm`.  `fresh` marks
+/// establishment commits (initial setup and post-recovery), which always
+/// ship full payloads.  The version is committed only after a fault-aware
+/// agreement, so a failure mid-commit leaves the previous committed version
+/// intact; afterwards versions below the committed floor are garbage-
+/// collected on both the local and the redundancy side.
+pub fn commit(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    store: &mut CkptStore,
+    objs: &[(ObjId, Blob)],
+    version: Version,
+    cfg: &CkptCfg,
+    fresh: bool,
+) -> MpiResult<()> {
+    // Post-recovery re-establishment is charged to Recovery (the paper
+    // counts "updating all the in-memory checkpoints" as recovery cost);
+    // steady-state checkpoints get their own bucket.
+    let prev = if ctx.phase == Phase::Recovery {
+        Phase::Recovery
+    } else {
+        ctx.set_phase(Phase::Checkpoint)
+    };
+    let result = commit_inner(ctx, comm, store, objs, version, cfg, fresh);
+    ctx.set_phase(prev);
+    result
+}
+
+fn commit_inner(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    store: &mut CkptStore,
+    objs: &[(ObjId, Blob)],
+    version: Version,
+    cfg: &CkptCfg,
+    fresh: bool,
+) -> MpiResult<()> {
+    let n = comm.size();
+    let use_delta = cfg.use_delta(version, fresh);
+    let mut shipped = 0usize;
+    let mut encode_secs = 0.0f64;
+    let logical: usize = objs.iter().map(|(_, b)| b.bytes()).sum();
+
+    let result = if cfg.scheme.xor_active(n) {
+        let Scheme::Xor { g } = cfg.scheme else { unreachable!() };
+        exchange_xor(
+            ctx, comm, store, objs, version, cfg, g, use_delta, &mut shipped, &mut encode_secs,
+        )
+    } else {
+        let k = cfg.scheme.mirror_k().min(n.saturating_sub(1));
+        exchange_mirror(
+            ctx, comm, store, objs, version, cfg, k, use_delta, &mut shipped, &mut encode_secs,
+        )
+    };
+    result?;
+
+    // Global commit: everyone stored everything.
+    comm.agree(ctx, u64::MAX)?;
+    store.commit(version);
+    if fresh {
+        store.note_fresh(version);
+    }
+    store.gc_committed();
+    ctx.ckpt_log.push(CkptRecord {
+        version,
+        at: ctx.clock,
+        logical_bytes: logical,
+        shipped_bytes: shipped,
+        delta: use_delta,
+        encode_secs,
+    });
+    Ok(())
+}
+
+/// Mirror exchange: store locally, ship (full or delta) copies to `k` ring
+/// buddies, materialize the copies received for this rank's wards.
+#[allow(clippy::too_many_arguments)]
+fn exchange_mirror(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    store: &mut CkptStore,
+    objs: &[(ObjId, Blob)],
+    version: Version,
+    cfg: &CkptCfg,
+    k: usize,
+    use_delta: bool,
+    shipped: &mut usize,
+    encode_secs: &mut f64,
+) -> MpiResult<()> {
+    let n = comm.size();
+    let me = comm.rank;
+    let stride = effective_stride(&ctx.world.net.params, n);
+    // Delta mode: encode wires against the pre-commit store state.  Full
+    // mode ships the objects themselves, with no intermediate copies.
+    let wires: Option<Vec<Blob>> = if use_delta {
+        let mut w = Vec::with_capacity(objs.len());
+        for (id, blob) in objs {
+            let (bv, base) = store
+                .get_local_at_most(*id, version - 1)
+                .unwrap_or_else(|| panic!("delta base for obj {id} missing"));
+            let wire = delta::mirror_delta_wire(base, blob, bv, cfg.chunk_words());
+            charge_encode(
+                ctx,
+                cfg,
+                blob.f.len() + blob.i.len() + base.f.len() + base.i.len(),
+                encode_secs,
+            );
+            let factor = delta::wire_factor(blob);
+            w.push(wire.scaled(factor));
+        }
+        Some(w)
+    } else {
+        None
+    };
+    for (id, blob) in objs {
+        store.put_local(*id, version, blob.clone());
+    }
+    // Ship to all buddies first (unbounded channels: no deadlock), then
+    // receive the copies this rank holds for its wards.
+    for d in 1..=k {
+        let buddy = buddy_of_stride(me, d, n, stride);
+        for (i, (id, blob)) in objs.iter().enumerate() {
+            let wire = match &wires {
+                Some(w) => w[i].clone(),
+                None => blob.clone(),
+            };
+            *shipped += wire.bytes();
+            comm.send(ctx, buddy, ship_tag(*id, d), wire)?;
+        }
+    }
+    for d in 1..=k {
+        let ward = ward_of_stride(me, d, n, stride);
+        let owner_wr = comm.world_of(ward);
+        for (id, _) in objs {
+            let wire = comm.recv(ctx, ward, ship_tag(*id, d))?;
+            if use_delta {
+                let bv = wire.i[1];
+                let factor = delta::wire_factor(&wire);
+                let base = store
+                    .get_remote(owner_wr, *id, bv)
+                    .unwrap_or_else(|| {
+                        panic!("buddy delta base v{bv} for owner {owner_wr} obj {id} missing")
+                    })
+                    .clone();
+                let (bv2, out) = delta::apply_mirror_delta(&base, &wire);
+                debug_assert_eq!(bv2, bv);
+                charge_encode(ctx, cfg, out.f.len() + out.i.len(), encode_secs);
+                store.put_remote(owner_wr, *id, version, out.scaled(factor));
+            } else {
+                store.put_remote(owner_wr, *id, version, wire);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Xor exchange: store locally, ship one (full or delta) parity
+/// contribution per object to the group's holder; holders fold the stripes
+/// for the groups they protect.
+#[allow(clippy::too_many_arguments)]
+fn exchange_xor(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    store: &mut CkptStore,
+    objs: &[(ObjId, Blob)],
+    version: Version,
+    cfg: &CkptCfg,
+    g: usize,
+    use_delta: bool,
+    shipped: &mut usize,
+    encode_secs: &mut f64,
+) -> MpiResult<()> {
+    let n = comm.size();
+    let me = comm.rank;
+    let my_holder = scheme::holder_cr(scheme::group_of(me, g), g, n);
+    // Encode contributions against the pre-commit store, then store.
+    let mut wires: Vec<Blob> = Vec::with_capacity(objs.len());
+    for (id, blob) in objs {
+        let words = blob.f.len() + blob.i.len();
+        let wire = if use_delta {
+            let (bv, base) = store
+                .get_local_at_most(*id, version - 1)
+                .unwrap_or_else(|| panic!("delta base for obj {id} missing"));
+            charge_encode(ctx, cfg, words + base.f.len() + base.i.len(), encode_secs);
+            delta::xor_delta_wire(base, blob, bv, cfg.chunk_words())
+        } else {
+            charge_encode(ctx, cfg, words, encode_secs);
+            delta::xor_full_wire(blob)
+        };
+        wires.push(wire.scaled(delta::wire_factor(blob)));
+    }
+    for (id, blob) in objs {
+        store.put_local(*id, version, blob.clone());
+    }
+    for ((id, _), wire) in objs.iter().zip(&wires) {
+        *shipped += wire.bytes();
+        comm.send(ctx, my_holder, parity_tag(*id), wire.clone())?;
+    }
+    // Fold stripes for every group this rank holds parity for.
+    for grp in 0..scheme::n_groups(n, g) {
+        if scheme::holder_cr(grp, g, n) != me {
+            continue;
+        }
+        let (start, len) = scheme::group_span(grp, g, n);
+        let anchor = comm.world_of(start);
+        let members: Vec<WorldRank> = (start..start + len).map(|cr| comm.world_of(cr)).collect();
+        for (id, _) in objs {
+            let mut stripe = if use_delta {
+                let (sv, base) = store
+                    .get_parity_at_most(anchor, *id, version - 1)
+                    .unwrap_or_else(|| panic!("parity base stripe for obj {id} missing"));
+                debug_assert_eq!(sv, version - 1, "stripe chain broken");
+                debug_assert_eq!(base.members, members, "group membership changed mid-chain");
+                base.clone()
+            } else {
+                ParityStripe {
+                    members: members.clone(),
+                    f_lens: vec![0; len],
+                    i_lens: vec![0; len],
+                    wire_factors: vec![1.0; len],
+                    words: Vec::new(),
+                }
+            };
+            for slot in 0..len {
+                let wire = comm.recv(ctx, start + slot, parity_tag(*id))?;
+                let factor = delta::wire_factor(&wire);
+                if use_delta {
+                    let (bv, f_len, i_len) = delta::fold_xor_delta(&mut stripe.words, &wire);
+                    debug_assert_eq!(bv, version - 1, "contribution diffed a stale base");
+                    stripe.f_lens[slot] = f_len;
+                    stripe.i_lens[slot] = i_len;
+                } else {
+                    let (f_len, i_len) = delta::fold_xor_full(&mut stripe.words, &wire);
+                    stripe.f_lens[slot] = f_len;
+                    stripe.i_lens[slot] = i_len;
+                }
+                stripe.wire_factors[slot] = factor;
+                charge_encode(ctx, cfg, wire.i.len(), encode_secs);
+            }
+            store.put_parity(anchor, *id, version, stripe);
+        }
+    }
+    Ok(())
+}
+
+/// Whether the objects lost with the currently-dead members of
+/// `old_members` can be rebuilt in situ.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LossCheck {
+    /// Every failed rank's state has a live server (buddy or parity group).
+    Recoverable,
+    /// At least one failed rank's state cannot be rebuilt; the reason names
+    /// the rank and the redundancy that died with it.
+    Unrecoverable(String),
+}
+
+/// Deterministic in-situ recoverability check, evaluated identically by
+/// every survivor from the shared liveness registry (the same construction
+/// the policy engine and the redistribution planner use).
+pub fn assess_loss(
+    cfg: &CkptCfg,
+    old_members: &[WorldRank],
+    alive: &dyn Fn(WorldRank) -> bool,
+    stride: usize,
+) -> LossCheck {
+    let n = old_members.len();
+    let alive_cr = |cr: usize| alive(old_members[cr]);
+    for (cr, &wr) in old_members.iter().enumerate() {
+        if alive(wr) {
+            continue;
+        }
+        if cfg.scheme.server_cr_for(cr, n, &alive_cr, stride).is_none() {
+            let why = match cfg.scheme {
+                Scheme::Mirror { k } => format!(
+                    "rank {wr} (comm rank {cr}) and all {k} of its buddy copies are lost"
+                ),
+                Scheme::Xor { g } => {
+                    let grp = scheme::group_of(cr, g);
+                    format!(
+                        "rank {wr} (comm rank {cr}) lost with a second failure in \
+                         parity group {grp} (or the group's parity holder) before re-encode"
+                    )
+                }
+            };
+            return LossCheck::Unrecoverable(why);
+        }
+    }
+    LossCheck::Recoverable
+}
+
+/// Recovery reader: materialize every currently-dead old member's objects
+/// at (or below) restore version `v` into the store of the rank that will
+/// serve them, reconstructing from surviving group members plus parity for
+/// the xor scheme.  Mirror schemes are a no-op (buddy copies already sit in
+/// the store).  Must be called by every *survivor* of `old_members` (not by
+/// adopted spares) with the same arguments, over a repaired communicator
+/// `comm` that contains all survivors; afterwards the usual
+/// `get_remote_at_most` serving paths work unchanged for both shrink and
+/// substitute recovery.
+pub fn reconstruct_failed(
+    ctx: &mut Ctx,
+    comm: &Comm,
+    store: &mut CkptStore,
+    cfg: &CkptCfg,
+    old_members: &[WorldRank],
+    v: Version,
+    objs: &[ObjId],
+) -> MpiResult<()> {
+    let Scheme::Xor { g } = cfg.scheme else {
+        return Ok(());
+    };
+    let n_old = old_members.len();
+    if !cfg.scheme.xor_active(n_old) {
+        return Ok(());
+    }
+    let world = ctx.world.clone();
+    let Some(me_old) = old_members.iter().position(|&wr| wr == ctx.rank) else {
+        return Ok(());
+    };
+    let failed: Vec<usize> =
+        (0..n_old).filter(|&cr| !world.is_alive(old_members[cr])).collect();
+    for &fr in &failed {
+        let grp = scheme::group_of(fr, g);
+        let (start, len) = scheme::group_span(grp, g, n_old);
+        let holder = scheme::holder_cr(grp, g, n_old);
+        debug_assert!(
+            world.is_alive(old_members[holder]),
+            "unrecoverable loss must be escalated before reconstruction"
+        );
+        if me_old == holder {
+            let anchor = old_members[start];
+            for &id in objs {
+                let (sv, stripe) = {
+                    let (sv, s) = store
+                        .get_parity_at_most(anchor, id, v)
+                        .unwrap_or_else(|| panic!("parity stripe for obj {id} missing"));
+                    (sv, s.clone())
+                };
+                let mut acc = stripe.words.clone();
+                for cr in start..start + len {
+                    if cr == fr {
+                        continue;
+                    }
+                    let src = comm
+                        .rank_of_world(old_members[cr])
+                        .expect("surviving group member must be in the repaired comm");
+                    let blob = comm.recv(ctx, src, recon_tag(id, fr))?;
+                    delta::xor_into(&mut acc, &delta::pack_words(&blob));
+                    ctx.advance(
+                        (8 * (blob.f.len() + blob.i.len())) as f64 / cfg.encode_bytes_per_sec,
+                    );
+                }
+                let slot = fr - start;
+                let mut out =
+                    delta::unpack_words(&acc, stripe.f_lens[slot], stripe.i_lens[slot]);
+                let factor = stripe.wire_factors[slot];
+                if factor != 1.0 {
+                    out = out.scaled(factor);
+                }
+                store.put_remote(old_members[fr], id, sv, out);
+            }
+        } else if scheme::group_of(me_old, g) == grp && me_old != fr {
+            let dst = comm
+                .rank_of_world(old_members[holder])
+                .expect("parity holder must be in the repaired comm");
+            for &id in objs {
+                let blob = store
+                    .get_local_at_most(id, v)
+                    .unwrap_or_else(|| panic!("local checkpoint for obj {id} missing"))
+                    .1
+                    .clone();
+                comm.send(ctx, dst, recon_tag(id, fr), blob)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cfg_surface() {
+        let cfg = CkptCfg::default();
+        assert_eq!(cfg.scheme, Scheme::Mirror { k: 1 });
+        assert!(!cfg.delta);
+        assert_eq!(cfg.chunk_words(), 512);
+        let m2 = CkptCfg::mirror(2);
+        assert_eq!(m2.scheme, Scheme::Mirror { k: 2 });
+    }
+
+    #[test]
+    fn delta_rebase_schedule() {
+        let mut cfg = CkptCfg { delta: true, rebase_every: 4, ..CkptCfg::default() };
+        // Fresh commits always rebase.
+        assert!(!cfg.use_delta(5, true));
+        // Multiples of rebase_every rebase.
+        assert!(!cfg.use_delta(8, false));
+        assert!(cfg.use_delta(5, false));
+        assert!(cfg.use_delta(7, false));
+        // Delta off: never.
+        cfg.delta = false;
+        assert!(!cfg.use_delta(5, false));
+    }
+
+    #[test]
+    fn assess_loss_mirror_and_xor() {
+        let members: Vec<usize> = (0..8).collect();
+        let m1 = CkptCfg::mirror(1);
+        let dead_pair = |a: usize, b: usize| move |wr: usize| wr != a && wr != b;
+        // Adjacent pair under mirror:1 loses rank 2's only copy (on 3).
+        assert!(matches!(
+            assess_loss(&m1, &members, &dead_pair(2, 3), 1),
+            LossCheck::Unrecoverable(_)
+        ));
+        // Non-adjacent pair is fine.
+        assert_eq!(assess_loss(&m1, &members, &dead_pair(2, 5), 1), LossCheck::Recoverable);
+        let x4 = CkptCfg { scheme: Scheme::Xor { g: 4 }, ..CkptCfg::default() };
+        // Two losses in group 0: unrecoverable.
+        match assess_loss(&x4, &members, &dead_pair(1, 2), 1) {
+            LossCheck::Unrecoverable(why) => assert!(why.contains("parity group 0"), "{why}"),
+            other => panic!("expected unrecoverable, got {other:?}"),
+        }
+        // One loss per group: recoverable.
+        assert_eq!(assess_loss(&x4, &members, &dead_pair(1, 5), 1), LossCheck::Recoverable);
+        // Member + its group's holder (rank 4 holds group 0): unrecoverable.
+        assert!(matches!(
+            assess_loss(&x4, &members, &dead_pair(1, 4), 1),
+            LossCheck::Unrecoverable(_)
+        ));
+    }
+
+    #[test]
+    fn tag_namespaces_stay_in_their_windows() {
+        // Mirror ship tags stay below the parity window.
+        assert!(ship_tag(crate::checkpoint::obj::BASIS, 15) < parity_tag(0));
+        // Parity tags stay inside the checkpoint window.
+        assert!(parity_tag(crate::checkpoint::obj::BASIS) < tags::HALO_BASE);
+        // Reconstruction tags stay inside the recovery window.
+        assert!(recon_tag(crate::checkpoint::obj::BASIS, 4095) < tags::CKPT_BASE);
+        assert!(recon_tag(0, 0) >= tags::RECON_BASE);
+    }
+}

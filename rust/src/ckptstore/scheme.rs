@@ -1,0 +1,272 @@
+//! Redundancy schemes for the in-memory checkpoint store (DESIGN.md §8).
+//!
+//! Two pluggable schemes decide *where* the redundant bits of every
+//! checkpointed object live:
+//!
+//! * [`Scheme::Mirror`] — the paper's buddy replication: each rank ships a
+//!   full copy of every object to `k` ring successors.  Redundant memory
+//!   and wire volume are `k x state` per rank.
+//! * [`Scheme::Xor`] — parity groups: the communicator is partitioned into
+//!   groups of `g` consecutive comm ranks; one XOR parity stripe per group
+//!   per object lives on the *parity holder* (the base rank of the next
+//!   group on the group ring, so the stripe never shares fate with its own
+//!   group).  Redundant memory is `state / g` per rank amortized, at the
+//!   cost of tolerating only one failure per group between re-encodes —
+//!   two failures in one group (or a member plus its group's holder) are an
+//!   *unrecoverable* loss that escalates to global restart (see
+//!   [`crate::ckptstore::assess_loss`]).
+//!
+//! Group layout is a pure function of the communicator size, so every rank
+//! derives identical groups with no negotiation — the same construction the
+//! redistribution planner and the policy engine rely on.
+
+use crate::checkpoint::buddy_of_stride;
+
+/// Which redundancy scheme the checkpoint store uses (config key
+/// `ckpt_scheme`, CLI `--ckpt-scheme`; values `mirror:<k>` / `xor:<g>`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    /// Full buddy copies to `k` ring successors (the paper's layout).
+    Mirror {
+        /// Buddy copies per object.
+        k: usize,
+    },
+    /// One XOR parity stripe per group of `g` consecutive comm ranks.
+    Xor {
+        /// Parity-group size.
+        g: usize,
+    },
+}
+
+impl Default for Scheme {
+    fn default() -> Self {
+        Scheme::Mirror { k: 1 }
+    }
+}
+
+impl Scheme {
+    /// Parse `mirror`, `mirror:<k>`, `xor`, `xor:<g>`.
+    pub fn parse(s: &str) -> Option<Scheme> {
+        let s = s.trim();
+        if let Some(rest) = s.strip_prefix("mirror") {
+            let k = match rest.strip_prefix(':') {
+                Some(n) => n.trim().parse().ok()?,
+                None if rest.is_empty() => 1,
+                None => return None,
+            };
+            if k == 0 {
+                return None;
+            }
+            return Some(Scheme::Mirror { k });
+        }
+        if let Some(rest) = s.strip_prefix("xor") {
+            let g = match rest.strip_prefix(':') {
+                Some(n) => n.trim().parse().ok()?,
+                None if rest.is_empty() => 4,
+                None => return None,
+            };
+            if g < 2 {
+                return None;
+            }
+            return Some(Scheme::Xor { g });
+        }
+        None
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Scheme::Mirror { k } => format!("mirror:{k}"),
+            Scheme::Xor { g } => format!("xor:{g}"),
+        }
+    }
+
+    /// Buddy count for mirror semantics (estimate inputs; 1 for xor, whose
+    /// re-encode ships one parity contribution instead of full copies).
+    pub fn mirror_k(&self) -> usize {
+        match self {
+            Scheme::Mirror { k } => *k,
+            Scheme::Xor { .. } => 1,
+        }
+    }
+
+    /// Whether the xor encoding is actually usable at communicator size
+    /// `n`: a single group cannot place its parity outside itself, so runs
+    /// (or shrunken survivor sets) with `n <= g` degrade to `mirror:1`.
+    pub fn xor_active(&self, n: usize) -> bool {
+        matches!(self, Scheme::Xor { g } if n > *g)
+    }
+
+    /// The comm rank that, if `owner_cr` fails, serves its checkpointed
+    /// objects to the recovery reader — or `None` when the loss is
+    /// unrecoverable in situ.
+    ///
+    /// * mirror: the first *alive* buddy on the ring (every buddy holds a
+    ///   full copy);
+    /// * xor (active): the owner's parity holder, feasible only while the
+    ///   holder *and* every other member of the owner's group are alive;
+    /// * xor at `n <= g`: the degraded `mirror:1` buddy.
+    ///
+    /// Every rank (survivors and adopted spares alike) evaluates this from
+    /// the shared liveness registry, so server choice needs no negotiation.
+    pub fn server_cr_for(
+        &self,
+        owner_cr: usize,
+        n: usize,
+        alive_cr: &dyn Fn(usize) -> bool,
+        stride: usize,
+    ) -> Option<usize> {
+        match self {
+            Scheme::Mirror { k } => (1..=(*k).min(n.saturating_sub(1)))
+                .map(|d| buddy_of_stride(owner_cr, d, n, stride))
+                .find(|&cr| alive_cr(cr)),
+            Scheme::Xor { g } => {
+                if !self.xor_active(n) {
+                    return (1..n.min(2))
+                        .map(|d| buddy_of_stride(owner_cr, d, n, stride))
+                        .find(|&cr| alive_cr(cr));
+                }
+                let grp = group_of(owner_cr, *g);
+                let holder = holder_cr(grp, *g, n);
+                if !alive_cr(holder) {
+                    return None;
+                }
+                let (start, len) = group_span(grp, *g, n);
+                for cr in start..start + len {
+                    if cr != owner_cr && !alive_cr(cr) {
+                        return None;
+                    }
+                }
+                Some(holder)
+            }
+        }
+    }
+}
+
+/// Parity group of comm rank `cr` for group size `g`.
+pub fn group_of(cr: usize, g: usize) -> usize {
+    cr / g
+}
+
+/// Number of parity groups in a communicator of `n`.
+pub fn n_groups(n: usize, g: usize) -> usize {
+    n.div_ceil(g)
+}
+
+/// `(start comm rank, member count)` of group `grp` (the last group may be
+/// short when `g` does not divide `n`).
+pub fn group_span(grp: usize, g: usize, n: usize) -> (usize, usize) {
+    let start = grp * g;
+    (start, g.min(n - start))
+}
+
+/// Parity holder of group `grp`: the base rank of the next group on the
+/// group ring.  For any `n > g` this rank is outside `grp` itself, so a
+/// whole-group stripe never shares fate with the data it protects.
+pub fn holder_cr(grp: usize, g: usize, n: usize) -> usize {
+    ((grp + 1) * g) % n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_surface() {
+        assert_eq!(Scheme::parse("mirror:2"), Some(Scheme::Mirror { k: 2 }));
+        assert_eq!(Scheme::parse("mirror"), Some(Scheme::Mirror { k: 1 }));
+        assert_eq!(Scheme::parse("xor:4"), Some(Scheme::Xor { g: 4 }));
+        assert_eq!(Scheme::parse("xor"), Some(Scheme::Xor { g: 4 }));
+        assert_eq!(Scheme::parse("xor:1"), None);
+        assert_eq!(Scheme::parse("mirror:0"), None);
+        assert_eq!(Scheme::parse("raid6"), None);
+        assert_eq!(Scheme::Xor { g: 4 }.name(), "xor:4");
+        assert_eq!(Scheme::Mirror { k: 1 }.name(), "mirror:1");
+    }
+
+    #[test]
+    fn holder_is_always_outside_its_group() {
+        for n in [5usize, 6, 8, 10, 12, 16, 48] {
+            for g in [2usize, 3, 4] {
+                if n <= g {
+                    continue;
+                }
+                for grp in 0..n_groups(n, g) {
+                    let h = holder_cr(grp, g, n);
+                    let (start, len) = group_span(grp, g, n);
+                    assert!(
+                        h < start || h >= start + len,
+                        "holder {h} inside group {grp} (n={n}, g={g})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn holders_are_distinct_per_group() {
+        for n in [6usize, 8, 10, 12, 16, 48] {
+            for g in [2usize, 4] {
+                if n <= g {
+                    continue;
+                }
+                let mut holders: Vec<usize> =
+                    (0..n_groups(n, g)).map(|grp| holder_cr(grp, g, n)).collect();
+                holders.sort_unstable();
+                holders.dedup();
+                assert_eq!(holders.len(), n_groups(n, g), "n={n} g={g}");
+            }
+        }
+    }
+
+    #[test]
+    fn mirror_server_is_first_alive_buddy() {
+        let s = Scheme::Mirror { k: 2 };
+        let alive = |cr: usize| cr != 3 && cr != 4;
+        // Owner 3 dead: buddy 4 also dead, buddy 5 serves.
+        assert_eq!(s.server_cr_for(3, 8, &alive, 1), Some(5));
+        // k=1 with the only buddy dead: unrecoverable.
+        let s1 = Scheme::Mirror { k: 1 };
+        assert_eq!(s1.server_cr_for(3, 8, &alive, 1), None);
+    }
+
+    #[test]
+    fn xor_server_is_parity_holder_when_group_intact() {
+        let s = Scheme::Xor { g: 4 };
+        // n=8: groups {0..3} and {4..7}; holders 4 and 0.
+        let alive = |cr: usize| cr != 1;
+        assert_eq!(s.server_cr_for(1, 8, &alive, 1), Some(4));
+        let alive2 = |cr: usize| cr != 5;
+        assert_eq!(s.server_cr_for(5, 8, &alive2, 1), Some(0));
+    }
+
+    #[test]
+    fn xor_two_losses_in_one_group_are_unrecoverable() {
+        let s = Scheme::Xor { g: 4 };
+        let alive = |cr: usize| cr != 1 && cr != 2;
+        assert_eq!(s.server_cr_for(1, 8, &alive, 1), None);
+        assert_eq!(s.server_cr_for(2, 8, &alive, 1), None);
+        // One loss per group stays recoverable.
+        let alive2 = |cr: usize| cr != 1 && cr != 5;
+        assert_eq!(s.server_cr_for(1, 8, &alive2, 1), Some(4));
+        assert_eq!(s.server_cr_for(5, 8, &alive2, 1), Some(0));
+    }
+
+    #[test]
+    fn xor_dead_holder_is_unrecoverable() {
+        let s = Scheme::Xor { g: 4 };
+        // Member 1 (group 0) and holder 4 (group 0's stripe) both dead.
+        let alive = |cr: usize| cr != 1 && cr != 4;
+        assert_eq!(s.server_cr_for(1, 8, &alive, 1), None);
+    }
+
+    #[test]
+    fn xor_degrades_to_mirror_when_group_covers_comm() {
+        let s = Scheme::Xor { g: 4 };
+        assert!(!s.xor_active(4));
+        assert!(!s.xor_active(3));
+        assert!(s.xor_active(5));
+        let alive = |cr: usize| cr != 2;
+        // n=3 <= g: mirror:1 fallback, buddy 0 serves owner 2.
+        assert_eq!(s.server_cr_for(2, 3, &alive, 1), Some(0));
+    }
+}

@@ -6,6 +6,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
+use crate::ckptstore::Scheme;
 use crate::failure::InjectionPlan;
 use crate::netsim::{ComputeModel, NetParams};
 use crate::problem::Grid3D;
@@ -50,8 +51,12 @@ pub struct RunConfig {
     /// default (`failures` for `fixed:substitute-cold`, else 0).
     pub cold_spares: Option<usize>,
     /// Inner iterations the `cost-min` policy assumes remain when pricing
-    /// shrink's lost capacity (key `policy_horizon`).
-    pub policy_horizon: u64,
+    /// shrink's lost capacity (key `policy_horizon`).  `None` (the default)
+    /// lets the recovery leader estimate the remaining work from observed
+    /// convergence and broadcast it post-shrink
+    /// ([`crate::recovery::policy::agreed_capacity_horizon`]); setting the
+    /// key pins the operator's static prior instead.
+    pub policy_horizon: Option<u64>,
     /// Failures to inject (0 = failure-free; ignored for NoProtection).
     pub failures: usize,
     pub solver: FtGmresCfg,
@@ -73,7 +78,7 @@ impl Default for RunConfig {
             policy: None,
             warm_spares: None,
             cold_spares: None,
-            policy_horizon: 50,
+            policy_horizon: None,
             failures: 0,
             solver: FtGmresCfg::default(),
             net: NetParams::default(),
@@ -184,14 +189,26 @@ impl RunConfig {
             }
             "warm_spares" => self.warm_spares = Some(v.parse()?),
             "cold_spares" => self.cold_spares = Some(v.parse()?),
-            "policy_horizon" => self.policy_horizon = v.parse()?,
+            "policy_horizon" => self.policy_horizon = Some(v.parse()?),
             "failures" => self.failures = v.parse()?,
             "m_inner" => self.solver.m_inner = v.parse()?,
             "m_outer" => self.solver.m_outer = v.parse()?,
             "tol" => self.solver.tol = v.parse()?,
             "max_cycles" => self.solver.max_cycles = v.parse()?,
             "reorth" => self.solver.reorth = v.parse()?,
-            "ckpt_buddies" => self.solver.ckpt_buddies = v.parse()?,
+            // Legacy alias for `ckpt_scheme = mirror:<k>`; validated like it.
+            "ckpt_buddies" => {
+                self.solver.ckpt.scheme = Scheme::parse(&format!("mirror:{}", v.trim()))
+                    .ok_or_else(|| anyhow::anyhow!("ckpt_buddies must be >= 1, got {v}"))?
+            }
+            "ckpt_scheme" => {
+                self.solver.ckpt.scheme = Scheme::parse(v).ok_or_else(|| {
+                    anyhow::anyhow!("unknown ckpt_scheme {v} (expected mirror:<k> or xor:<g>)")
+                })?
+            }
+            "ckpt_delta" => self.solver.ckpt.delta = v.parse()?,
+            "ckpt_chunk_kib" => self.solver.ckpt.chunk_kib = v.parse()?,
+            "ckpt_rebase_every" => self.solver.ckpt.rebase_every = v.parse()?,
             "inner_tol" => self.solver.inner_tol = v.parse()?,
             "backend" => {
                 self.backend = BackendKind::parse(v)
@@ -246,6 +263,14 @@ impl RunConfig {
         m.insert("policy", self.policy().name());
         m.insert("spares", format!("{}w+{}c", self.warm_spare_count(), self.cold_spare_count()));
         m.insert("failures", self.failures.to_string());
+        m.insert(
+            "ckpt",
+            format!(
+                "{}{}",
+                self.solver.ckpt.scheme.name(),
+                if self.solver.ckpt.delta { "+delta" } else { "" }
+            ),
+        );
         m.insert("m_inner", self.solver.m_inner.to_string());
         m.insert("tol", format!("{:e}", self.solver.tol));
         m.insert(
@@ -315,8 +340,28 @@ mod tests {
         assert!(c.set("policy", "fixed:substitute").unwrap());
         assert_eq!(c.policy(), PolicyKind::Fixed(Decision::Substitute));
         assert!(c.set("policy_horizon", "200").unwrap());
-        assert_eq!(c.policy_horizon, 200);
+        assert_eq!(c.policy_horizon, Some(200));
         assert!(c.set("policy", "nonsense").is_err());
+    }
+
+    #[test]
+    fn ckpt_scheme_keys_parse() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.solver.ckpt.scheme, Scheme::Mirror { k: 1 });
+        assert!(c.set("ckpt_scheme", "xor:4").unwrap());
+        assert_eq!(c.solver.ckpt.scheme, Scheme::Xor { g: 4 });
+        assert!(c.set("ckpt_delta", "true").unwrap());
+        assert!(c.set("ckpt_chunk_kib", "8").unwrap());
+        assert!(c.set("ckpt_rebase_every", "16").unwrap());
+        assert!(c.solver.ckpt.delta);
+        assert_eq!(c.solver.ckpt.chunk_kib, 8);
+        assert_eq!(c.solver.ckpt.rebase_every, 16);
+        // Legacy alias still maps onto the scheme, with the same validation.
+        assert!(c.set("ckpt_buddies", "2").unwrap());
+        assert_eq!(c.solver.ckpt.scheme, Scheme::Mirror { k: 2 });
+        assert!(c.set("ckpt_buddies", "0").is_err());
+        assert!(c.set("ckpt_scheme", "raid6").is_err());
+        assert!(c.summary().get("ckpt").unwrap().contains("mirror:2"));
     }
 
     #[test]

@@ -10,7 +10,8 @@ use std::thread;
 use crate::backend::costs::RecoveryCostInputs;
 use crate::backend::native::NativeBackend;
 use crate::backend::Backend;
-use crate::checkpoint::CkptStore;
+use crate::checkpoint::{effective_stride, CkptStore};
+use crate::ckptstore::{self, LossCheck, Scheme};
 use crate::config::{BackendKind, RunConfig};
 use crate::failure::Injector;
 use crate::metrics::{DecisionRecord, Phase, RankReport, RunReport};
@@ -142,14 +143,16 @@ fn solve_loop(
                     return Err(ctx.die());
                 }
                 ctx.recompute = false;
-                let decision = choose_recovery(ctx, comm, cfg);
-                recovery::handle_failure_with(
+                let mut shrunk = recovery::repair_membership(ctx, comm)?;
+                let decision = choose_recovery(ctx, &mut shrunk, comm, state, cfg)?;
+                recovery::execute_decision(
                     ctx,
                     comm,
+                    shrunk,
                     state,
                     store,
                     decision,
-                    cfg.solver.ckpt_buddies,
+                    &cfg.solver.ckpt,
                     &cfg.compute,
                 )?;
                 ctx.set_phase(Phase::Compute);
@@ -158,44 +161,96 @@ fn solve_loop(
     }
 }
 
-/// Evaluate the run's recovery policy for the failure event visible in
-/// `comm` and record the decision on this rank's timeline.
+/// Evaluate the run's recovery policy for the failure event visible in the
+/// failed communicator `old` and record the decision on this rank's
+/// timeline.  Runs after the ULFM shrink produced the pristine survivor
+/// communicator `shrunk`, so adaptive policies may use one leader
+/// broadcast over it (the dynamic capacity horizon).
 ///
 /// Every survivor calls this independently and must reach the same answer:
-/// the inputs are restricted to the liveness registry, the failed
-/// communicator's membership, and static configuration (see the
-/// consistency notes in [`crate::recovery::policy`]).
-fn choose_recovery(ctx: &mut Ctx, comm: &Comm, cfg: &RunConfig) -> Decision {
-    let failed: Vec<usize> = comm
+/// the inputs are the liveness registry, the failed communicator's
+/// membership, static configuration, and leader-broadcast values (see the
+/// consistency notes in [`crate::recovery::policy`]).  Unrecoverable
+/// in-memory losses (e.g. two failures in one parity group,
+/// [`crate::ckptstore::assess_loss`]) preempt the policy and escalate to a
+/// global restart — the only remaining sound choice.
+fn choose_recovery(
+    ctx: &mut Ctx,
+    shrunk: &mut Comm,
+    old: &Comm,
+    state: &SolverState,
+    cfg: &RunConfig,
+) -> MpiResult<Decision> {
+    let failed: Vec<usize> = old
         .members
         .iter()
         .copied()
         .filter(|&wr| !ctx.world.is_alive(wr))
         .collect();
-    let status = cfg.spare_pool().status(&ctx.world, &comm.members);
+    let status = cfg.spare_pool().status(&ctx.world, &old.members);
     let (decision, reason) = if failed.is_empty() {
         // Spurious wake-up (e.g. a stale revoke): repair the communicator
         // over the full membership without consuming any spares.
         (Decision::Shrink, "no failed members visible (stale revoke)".to_string())
     } else {
-        let survivors = comm.size() - failed.len();
-        let inputs = PolicyInputs {
-            n_failed: failed.len(),
-            survivors,
-            pool: status,
-            cost: RecoveryCostInputs {
-                rows_per_rank: (cfg.grid.n() / comm.size().max(1)).max(1),
-                basis_vecs: 2 * cfg.solver.m_outer + 1,
-                n_failed: failed.len(),
-                survivors,
-                buddy_k: cfg.solver.ckpt_buddies,
-                horizon_iters: cfg.policy_horizon,
-                m_inner: cfg.solver.m_inner,
-            },
-            failures_so_far: ctx.world.dead_set().len(),
-            event_seq: ctx.decisions.len(),
-        };
-        policy::decide(cfg.policy(), &inputs, &cfg.compute, &cfg.net)
+        let world = ctx.world.clone();
+        let alive = move |wr: usize| world.is_alive(wr);
+        let stride = effective_stride(&ctx.world.net.params, old.size());
+        match ckptstore::assess_loss(&cfg.solver.ckpt, &old.members, &alive, stride) {
+            LossCheck::Unrecoverable(why) => (
+                Decision::GlobalRestart,
+                format!("unrecoverable in-memory loss: {why}; escalating to global restart"),
+            ),
+            LossCheck::Recoverable => {
+                let survivors = old.size() - failed.len();
+                // The cost-min capacity horizon tracks actual remaining
+                // work via a leader broadcast over the survivor
+                // communicator — unless the operator pinned a static prior
+                // with `policy_horizon`.  Other policies never pay the
+                // extra broadcast.
+                let cost_min = cfg.policy() == policy::PolicyKind::CostMin;
+                let (horizon, dynamic) = match (cost_min, cfg.policy_horizon) {
+                    (_, Some(prior)) => (prior, false),
+                    (false, None) => (policy::DEFAULT_HORIZON_PRIOR, false),
+                    (true, None) => (
+                        policy::agreed_capacity_horizon(
+                            ctx,
+                            shrunk,
+                            state,
+                            cfg.solver.tol,
+                            policy::DEFAULT_HORIZON_PRIOR,
+                        )?,
+                        true,
+                    ),
+                };
+                let inputs = PolicyInputs {
+                    n_failed: failed.len(),
+                    survivors,
+                    pool: status,
+                    cost: RecoveryCostInputs {
+                        rows_per_rank: (cfg.grid.n() / old.size().max(1)).max(1),
+                        basis_vecs: 2 * cfg.solver.m_outer + 1,
+                        n_failed: failed.len(),
+                        survivors,
+                        buddy_k: cfg.solver.ckpt.scheme.mirror_k(),
+                        horizon_iters: horizon,
+                        m_inner: cfg.solver.m_inner,
+                        xor_group: match cfg.solver.ckpt.scheme {
+                            Scheme::Xor { g } if old.size() > g => Some(g),
+                            _ => None,
+                        },
+                    },
+                    failures_so_far: ctx.world.dead_set().len(),
+                    event_seq: ctx.decisions.len(),
+                };
+                let (d, mut why) = policy::decide(cfg.policy(), &inputs, &cfg.compute, &cfg.net);
+                if cost_min {
+                    let src = if dynamic { "leader-agreed" } else { "pinned prior" };
+                    why.push_str(&format!(" horizon={horizon} ({src})"));
+                }
+                (d, why)
+            }
+        }
     };
     ctx.decisions.push(DecisionRecord {
         seq: ctx.decisions.len(),
@@ -206,7 +261,7 @@ fn choose_recovery(ctx: &mut Ctx, comm: &Comm, cfg: &RunConfig) -> Decision {
         warm_free: status.warm_free,
         cold_free: status.cold_free,
     });
-    decision
+    Ok(decision)
 }
 
 fn finish(ctx: Ctx, outcome: Option<Outcome>, killed: bool, was_spare: bool) -> RankResult {
@@ -219,6 +274,7 @@ fn finish(ctx: Ctx, outcome: Option<Outcome>, killed: bool, was_spare: bool) -> 
             killed,
             was_spare,
             decisions: ctx.decisions.clone(),
+            ckpt: ctx.ckpt_log.clone(),
         },
         outcome,
     }
@@ -235,7 +291,7 @@ fn app_rank(mut ctx: Ctx, cfg: &RunConfig, backend: &dyn Backend) -> RankResult 
             cfg.grid,
             &cfg.compute,
             cfg.solver.m_outer,
-            cfg.solver.ckpt_buddies,
+            &cfg.solver.ckpt,
             cfg.ckpt_enabled(),
         )?;
         solve_loop(&mut ctx, &mut comm, &mut state, &mut store, cfg, backend)
@@ -249,7 +305,7 @@ fn app_rank(mut ctx: Ctx, cfg: &RunConfig, backend: &dyn Backend) -> RankResult 
 
 fn spare_rank(mut ctx: Ctx, cfg: &RunConfig, backend: &dyn Backend) -> RankResult {
     ctx.set_phase(Phase::Idle);
-    let (epoch, members, as_rank) = match ctx.wait_join() {
+    let (epoch, members, old_members, as_rank) = match ctx.wait_join() {
         // Never used: allocated-but-idle (the paper's "non-utilization of
         // resources in the failure-free case").
         None => return finish(ctx, None, false, true),
@@ -268,10 +324,11 @@ fn spare_rank(mut ctx: Ctx, cfg: &RunConfig, backend: &dyn Backend) -> RankResul
         let mut state = recovery::substitute::recover_spare(
             &mut ctx,
             &mut comm,
+            &old_members,
             cfg.grid,
             cfg.solver.m_outer,
             &mut store,
-            cfg.solver.ckpt_buddies,
+            &cfg.solver.ckpt,
             &cfg.compute,
         )?;
         ctx.set_phase(Phase::Compute);

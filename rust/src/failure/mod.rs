@@ -100,6 +100,52 @@ impl InjectionPlan {
                 .collect(),
         }
     }
+
+    /// Correlated same-group failure for the `xor:<g>` checkpoint scheme:
+    /// `victims` *consecutive* ranks inside parity group `group` die at the
+    /// same inner iteration — the worst case erasure coding has to face
+    /// (correlated loss inside one redundancy domain, e.g. a board or PSU
+    /// taking adjacent ranks down together).  With `victims >= 2` the loss
+    /// is unrecoverable in situ and must escalate to a global restart; with
+    /// `victims == 1` it degenerates to a single in-group failure the
+    /// parity stripe covers.
+    pub fn same_group_burst(p: usize, g: usize, group: usize, victims: usize, at_inner_iter: u64) -> Self {
+        let start = group * g;
+        assert!(start < p, "group {group} out of range for p={p}");
+        let len = g.min(p - start);
+        assert!(
+            victims <= len,
+            "cannot kill {victims} ranks in a group of {len}"
+        );
+        InjectionPlan {
+            kills: (start..start + victims)
+                .map(|world_rank| Kill { world_rank, at_inner_iter })
+                .collect(),
+        }
+    }
+
+    /// The recoverable contrast to [`InjectionPlan::same_group_burst`]: one
+    /// failure in each of the first `failures` parity groups, spaced one
+    /// checkpoint window apart, so every loss is covered by its group's
+    /// stripe and the re-encode between events restores full redundancy.
+    pub fn cross_group_campaign(p: usize, g: usize, failures: usize, ckpt_interval: u64) -> Self {
+        assert!(
+            failures <= p.div_ceil(g),
+            "at most one failure per parity group ({} groups for p={p}, g={g})",
+            p.div_ceil(g)
+        );
+        InjectionPlan {
+            kills: (0..failures)
+                .map(|i| Kill {
+                    // The last member of group i: distinct groups, and never
+                    // the group-base ranks that hold other groups' parity.
+                    world_rank: (i * g + g - 1).min(p - 1),
+                    at_inner_iter: ckpt_interval * 2 + ckpt_interval / 2
+                        + i as u64 * ckpt_interval,
+                })
+                .collect(),
+        }
+    }
 }
 
 /// Thread-safe injector consulted by every rank at iteration boundaries.
@@ -204,6 +250,29 @@ mod tests {
         ranks.sort_unstable();
         ranks.dedup();
         assert_eq!(ranks.len(), 3, "kill targets must be distinct");
+    }
+
+    #[test]
+    fn same_group_burst_targets_one_parity_group() {
+        let plan = InjectionPlan::same_group_burst(8, 4, 1, 2, 40);
+        assert_eq!(plan.n_failures(), 2);
+        assert_eq!(plan.kills[0].world_rank, 4);
+        assert_eq!(plan.kills[1].world_rank, 5);
+        assert!(plan.kills.iter().all(|k| k.at_inner_iter == 40));
+        // All victims inside group 1 = ranks 4..8 for g=4.
+        assert!(plan.kills.iter().all(|k| k.world_rank / 4 == 1));
+    }
+
+    #[test]
+    fn cross_group_campaign_spreads_one_failure_per_group() {
+        let plan = InjectionPlan::cross_group_campaign(12, 4, 3, 10);
+        assert_eq!(plan.n_failures(), 3);
+        let groups: Vec<usize> = plan.kills.iter().map(|k| k.world_rank / 4).collect();
+        assert_eq!(groups, vec![0, 1, 2], "one victim per group");
+        // Spaced one window apart starting mid-window after two commits.
+        assert_eq!(plan.kills[0].at_inner_iter, 25);
+        assert_eq!(plan.kills[1].at_inner_iter, 35);
+        assert_eq!(plan.kills[2].at_inner_iter, 45);
     }
 
     #[test]

@@ -269,6 +269,37 @@ pub fn decision_table(rep: &RunReport) -> Table {
     t
 }
 
+/// Per-commit checkpoint-overhead table of one run: logical state bytes vs
+/// bytes actually shipped for redundancy (summed over ranks), the shipping
+/// ratio, and the modeled encode time — the `ckptstore` counterpart of the
+/// Figure 5 view (see DESIGN.md §8).
+pub fn ckpt_table(rep: &RunReport) -> Table {
+    let mut t = Table::new(
+        "Checkpoint commits (bytes shipped for redundancy, per commit)",
+        vec![
+            "version".into(),
+            "t_virtual".into(),
+            "kind".into(),
+            "state_MB".into(),
+            "shipped_MB".into(),
+            "ship_ratio".into(),
+            "encode_ms".into(),
+        ],
+    );
+    for c in &rep.ckpt {
+        t.row(vec![
+            c.version.to_string(),
+            format!("{:.4}", c.at),
+            if c.delta { "delta" } else { "full" }.to_string(),
+            format!("{:.3}", c.logical_bytes as f64 / 1e6),
+            format!("{:.3}", c.shipped_bytes as f64 / 1e6),
+            format!("{:.3}", c.shipped_bytes as f64 / (c.logical_bytes as f64).max(1.0)),
+            format!("{:.3}", 1e3 * c.encode_secs),
+        ]);
+    }
+    t
+}
+
 fn fmt2(v: f64) -> String {
     format!("{v:.2}")
 }
@@ -376,6 +407,7 @@ mod tests {
             killed: false,
             was_spare: false,
             decisions: vec![dec(0, "substitute"), dec(1, "shrink")],
+            ckpt: Vec::new(),
         };
         let rep = RunReport::from_ranks(vec![rank], 1e-9, true, 2);
         let t = decision_table(&rep);

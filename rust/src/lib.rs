@@ -5,8 +5,10 @@
 //! Engelmann — ORNL, 2018) as a three-layer Rust + JAX + Pallas system.
 //!
 //! * **L3 (this crate)** — a simulated-cluster message-passing runtime with
-//!   ULFM semantics ([`simmpi`]), in-memory buddy checkpointing
-//!   ([`checkpoint`]), the *shrink* and *substitute* in-situ recovery
+//!   ULFM semantics ([`simmpi`]), an erasure-coded in-memory checkpoint
+//!   store with mirror/XOR-parity schemes and delta commits ([`ckptstore`]
+//!   over the per-rank store in [`checkpoint`]), the *shrink* and
+//!   *substitute* in-situ recovery
 //!   strategies plus the adaptive per-event policy engine and spare-pool
 //!   manager ([`recovery`], [`recovery::policy`], [`spares`]), and a
 //!   distributed FT-GMRES solver ([`solver`]) over a 3D-Laplacian test
@@ -22,6 +24,7 @@
 
 pub mod backend;
 pub mod checkpoint;
+pub mod ckptstore;
 pub mod config;
 pub mod coordinator;
 pub mod failure;

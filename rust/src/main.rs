@@ -19,6 +19,11 @@
 //! combine with `warm_spares=N` / `cold_spares=N` to exercise spare-pool
 //! exhaustion (see DESIGN.md §3).  Runs that recovered from failures print
 //! the per-event decision log after the phase breakdown.
+//!
+//! `--ckpt-scheme VALUE` selects the checkpoint redundancy scheme
+//! (shorthand for `ckpt_scheme=VALUE`): `mirror:<k>` or `xor:<g>`;
+//! `--ckpt-delta` turns on chunk-delta shipping (`ckpt_delta=true`, tune
+//! with `ckpt_chunk_kib=N` / `ckpt_rebase_every=N`).  See DESIGN.md §8.
 
 use std::path::{Path, PathBuf};
 
@@ -30,7 +35,8 @@ use ulfm_ftgmres::metrics::RunReport;
 fn usage() -> ! {
     eprintln!(
         "usage: ftgmres <run|report|figure4|figure5|figure6|figures> \
-         [--config FILE] [--policy POLICY] [--quick] [--out DIR] [key=value ...]"
+         [--config FILE] [--policy POLICY] [--ckpt-scheme SCHEME] [--ckpt-delta] \
+         [--quick] [--out DIR] [key=value ...]"
     );
     std::process::exit(2);
 }
@@ -68,6 +74,18 @@ fn parse_args() -> anyhow::Result<Args> {
                     "policy key rejected"
                 );
                 rest.drain(i..=i + 1);
+            }
+            "--ckpt-scheme" => {
+                anyhow::ensure!(i + 1 < rest.len(), "--ckpt-scheme needs a value");
+                anyhow::ensure!(
+                    cfg.set("ckpt_scheme", &rest[i + 1])?,
+                    "ckpt_scheme key rejected"
+                );
+                rest.drain(i..=i + 1);
+            }
+            "--ckpt-delta" => {
+                anyhow::ensure!(cfg.set("ckpt_delta", "true")?, "ckpt_delta key rejected");
+                rest.remove(i);
             }
             "--out" => {
                 anyhow::ensure!(i + 1 < rest.len(), "--out needs a path");
@@ -109,6 +127,17 @@ fn print_report(cfg: &RunConfig, rep: &RunReport) {
         pct(m.reconfig),
         pct(m.recompute)
     );
+    if !rep.ckpt.is_empty() {
+        let (shipped, logical, commits) = rep.ckpt_totals();
+        println!(
+            "checkpoints:   {} commits, {:.2} MB state checkpointed, {:.2} MB shipped \
+             for redundancy ({:.1}% of full-copy volume)",
+            commits,
+            logical as f64 / 1e6,
+            shipped as f64 / 1e6,
+            100.0 * shipped as f64 / (logical as f64).max(1.0),
+        );
+    }
     if !rep.decisions.is_empty() {
         println!("\n{}", ulfm_ftgmres::figures::decision_table(rep).to_text());
     }
@@ -137,6 +166,9 @@ fn main() -> anyhow::Result<()> {
         "report" => {
             let rep = coordinator::run(&args.cfg)?;
             print_report(&args.cfg, &rep);
+            if !rep.ckpt.is_empty() {
+                println!("\n{}", ulfm_ftgmres::figures::ckpt_table(&rep).to_text());
+            }
             println!("\nper-rank phases:");
             for r in &rep.ranks {
                 let p = &r.phases;

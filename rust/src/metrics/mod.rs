@@ -5,7 +5,7 @@
 //! second a rank spends is charged to exactly one [`Phase`]; the campaign
 //! report aggregates per-rank timelines into the numbers Figures 4-6 plot.
 
-
+use std::collections::BTreeMap;
 
 /// What a rank is doing while virtual time advances.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -125,6 +125,27 @@ pub struct DecisionRecord {
     pub cold_free: usize,
 }
 
+/// One checkpoint commit as observed by one rank: how many bytes the full
+/// state was worth, how many actually went on the wire for redundancy
+/// (buddy copies, deltas or parity contributions), and the modeled encode
+/// time (see [`crate::ckptstore`]).  Run reports merge these per version so
+/// the checkpoint-overhead figures can plot bytes shipped per commit.
+#[derive(Debug, Clone)]
+pub struct CkptRecord {
+    /// Committed checkpoint version.
+    pub version: i64,
+    /// Virtual time of the commit on the recording rank.
+    pub at: f64,
+    /// Charged bytes of the full object set (the redundancy input).
+    pub logical_bytes: usize,
+    /// Charged bytes this rank shipped for redundancy.
+    pub shipped_bytes: usize,
+    /// Whether this commit shipped chunk deltas (vs full payloads).
+    pub delta: bool,
+    /// Modeled encode/fold seconds spent by this rank.
+    pub encode_secs: f64,
+}
+
 /// Final report for one rank of one run.
 #[derive(Debug, Clone)]
 pub struct RankReport {
@@ -140,6 +161,8 @@ pub struct RankReport {
     pub was_spare: bool,
     /// Recovery decisions this rank participated in, in event order.
     pub decisions: Vec<DecisionRecord>,
+    /// Checkpoint commits this rank participated in, in version order.
+    pub ckpt: Vec<CkptRecord>,
 }
 
 /// Aggregated result of one solver run (one configuration, one campaign leg).
@@ -168,6 +191,10 @@ pub struct RunReport {
     /// Decisions are deterministic across survivors of the same event (see
     /// [`crate::recovery::policy`]), so deduplication is exact.
     pub decisions: Vec<DecisionRecord>,
+    /// Per-commit checkpoint records, merged over the surviving ranks'
+    /// logs and grouped by version: byte counts are summed across ranks
+    /// (total wire volume of the commit), times are maxima.
+    pub ckpt: Vec<CkptRecord>,
 }
 
 impl RunReport {
@@ -180,6 +207,7 @@ impl RunReport {
         let mut tts = 0.0f64;
         let mut iters = 0u64;
         let mut all_decisions: Vec<DecisionRecord> = Vec::new();
+        let mut ckpt_by_version: BTreeMap<i64, CkptRecord> = BTreeMap::new();
         for r in &survivors {
             max_phases.max_with(&r.phases);
             for p in ALL_PHASES {
@@ -189,6 +217,18 @@ impl RunReport {
             tts = tts.max(r.finish_time);
             iters = iters.max(r.iterations);
             all_decisions.extend(r.decisions.iter().cloned());
+            for c in &r.ckpt {
+                ckpt_by_version
+                    .entry(c.version)
+                    .and_modify(|e| {
+                        e.logical_bytes += c.logical_bytes;
+                        e.shipped_bytes += c.shipped_bytes;
+                        e.at = e.at.max(c.at);
+                        e.encode_secs = e.encode_secs.max(c.encode_secs);
+                        e.delta |= c.delta;
+                    })
+                    .or_insert_with(|| c.clone());
+            }
         }
         // Merge per-rank decision logs into one per-event log: order by
         // decision time, keep the first record of each event (identified by
@@ -215,7 +255,17 @@ impl RunReport {
             converged,
             failures,
             decisions,
+            ckpt: ckpt_by_version.into_values().collect(),
         }
+    }
+
+    /// Total redundancy bytes shipped and logical state bytes over all
+    /// commits, plus the commit count — the checkpoint-volume headline the
+    /// `bench_ckpt` target reports.
+    pub fn ckpt_totals(&self) -> (usize, usize, usize) {
+        let shipped = self.ckpt.iter().map(|c| c.shipped_bytes).sum();
+        let logical = self.ckpt.iter().map(|c| c.logical_bytes).sum();
+        (shipped, logical, self.ckpt.len())
     }
 }
 
@@ -260,6 +310,7 @@ mod tests {
             killed,
             was_spare: spare,
             decisions: Vec::new(),
+            ckpt: Vec::new(),
         };
         let ranks = vec![
             mk(0, 10.0, false, false, 100),
@@ -294,6 +345,7 @@ mod tests {
             killed,
             was_spare: spare,
             decisions,
+            ckpt: Vec::new(),
         };
         let ranks = vec![
             // Killed ranks are excluded from the merge entirely.
@@ -335,6 +387,7 @@ mod tests {
             killed,
             was_spare: spare,
             decisions,
+            ckpt: Vec::new(),
         };
         let ranks = vec![
             mk(0, true, false, vec![dec(0, 1.0, 3, "substitute")]),
@@ -351,5 +404,40 @@ mod tests {
         assert_eq!(rep.decisions.len(), 1);
         assert_eq!(rep.decisions[0].decision, "shrink");
         assert_eq!(rep.decisions[0].seq, 0);
+    }
+
+    #[test]
+    fn ckpt_records_merge_by_version() {
+        let rec = |version, shipped| CkptRecord {
+            version,
+            at: version as f64,
+            logical_bytes: 100,
+            shipped_bytes: shipped,
+            delta: version == 2,
+            encode_secs: 0.001 * version as f64,
+        };
+        let mk = |wr, ckpt| RankReport {
+            world_rank: wr,
+            finish_time: 1.0,
+            phases: PhaseTimers::default(),
+            iterations: 10,
+            killed: false,
+            was_spare: false,
+            decisions: Vec::new(),
+            ckpt,
+        };
+        let ranks = vec![
+            mk(0, vec![rec(1, 800), rec(2, 80)]),
+            mk(1, vec![rec(1, 800), rec(2, 120)]),
+        ];
+        let rep = RunReport::from_ranks(ranks, 1e-9, true, 0);
+        assert_eq!(rep.ckpt.len(), 2);
+        assert_eq!(rep.ckpt[0].version, 1);
+        assert_eq!(rep.ckpt[0].shipped_bytes, 1600);
+        assert_eq!(rep.ckpt[0].logical_bytes, 200);
+        assert_eq!(rep.ckpt[1].shipped_bytes, 200);
+        assert!(rep.ckpt[1].delta);
+        let (shipped, logical, commits) = rep.ckpt_totals();
+        assert_eq!((shipped, logical, commits), (1800, 400, 2));
     }
 }

@@ -7,6 +7,22 @@
 //! per-checkpoint PFS write time (aggregate bandwidth shared by all ranks),
 //! and the expected waste per failure (restart latency + state re-read +
 //! half-interval recomputation).
+//!
+//! It also executes the *escalation* path ([`restart_on_survivors`]): when
+//! the checkpoint store reports an unrecoverable loss (e.g. two failures in
+//! one `xor:<g>` parity group before re-encode,
+//! [`crate::ckptstore::assess_loss`]), survivors rebuild the problem from
+//! scratch — the test problem is analytic, so matrix, RHS and the zero
+//! initial guess regenerate deterministically — and re-establish fresh
+//! checkpoints, instead of wedging on state that no longer exists anywhere.
+
+use crate::checkpoint::CkptStore;
+use crate::ckptstore::CkptCfg;
+use crate::metrics::Phase;
+use crate::netsim::ComputeModel;
+use crate::problem::Partition;
+use crate::simmpi::{Comm, Ctx, MpiResult};
+use crate::solver::state::{generate_local_problem, IterScalars, SolverState};
 
 /// Parameters of the global C/R baseline.
 #[derive(Debug, Clone)]
@@ -53,6 +69,70 @@ impl GlobalCrModel {
         let c = self.checkpoint_cost(bytes);
         c / (c + self.young_interval(bytes))
     }
+}
+
+/// Restart from scratch on the survivor communicator after an
+/// unrecoverable in-memory loss.
+///
+/// Every survivor regenerates its block of the analytic test problem under
+/// the new partition (matrix rows, RHS, zero initial guess), resets the
+/// iteration state, wipes the checkpoint store and establishes fresh
+/// checkpoints — the simulation analogue of the paper's relaunch-the-job
+/// strawman, whose scheduling/PFS waste the caller has already charged via
+/// [`GlobalCrModel::waste_per_failure`].  Deterministic: every survivor
+/// computes the identical rebuild, and the re-established store starts a
+/// fresh version chain, so later failures recover normally.
+pub fn restart_on_survivors(
+    ctx: &mut Ctx,
+    new_comm: &mut Comm,
+    state: &mut SolverState,
+    store: &mut CkptStore,
+    ckpt: &CkptCfg,
+    host: &ComputeModel,
+) -> MpiResult<()> {
+    let prev = ctx.set_phase(Phase::Recovery);
+    let result = restart_inner(ctx, new_comm, state, store, ckpt, host);
+    ctx.set_phase(prev);
+    result
+}
+
+fn restart_inner(
+    ctx: &mut Ctx,
+    new_comm: &mut Comm,
+    state: &mut SolverState,
+    store: &mut CkptStore,
+    ckpt: &CkptCfg,
+    host: &ComputeModel,
+) -> MpiResult<()> {
+    let me = new_comm.rank;
+    let part = Partition::balanced(state.grid.n(), new_comm.size());
+    // Same rebuild recipe (and modeled cost) as initial setup.
+    let (mat, blk, b) = generate_local_problem(ctx, host, state.grid, &part, me);
+
+    let mut nsq = [b.iter().map(|v| v * v).sum::<f64>()];
+    new_comm.allreduce_sum(ctx, &mut nsq)?;
+    let bnorm = nsq[0].sqrt();
+
+    let rows = mat.rows;
+    let next_version = state.scalars.next_version;
+    state.part = part;
+    state.mat = mat;
+    state.blk = blk;
+    state.x = vec![0.0; rows];
+    state.b = b;
+    state.v_out = crate::backend::DenseBasis::zeros(state.v_out.m, rows);
+    state.z_out = crate::backend::DenseBasis::zeros(state.z_out.m, rows);
+    state.cycle = None;
+    // The restarted solve is new work, not recomputation: reset the
+    // progress counter and the high-water mark together.
+    state.scalars = IterScalars { inner_iters_done: 0, next_version, bnorm };
+    state.hwm_iters = 0;
+
+    // Nothing in the old store is trustworthy (that is why we are here);
+    // start a fresh redundancy chain at the next version.
+    store.clear_all();
+    state.establish_checkpoints(ctx, new_comm, store, next_version, ckpt)?;
+    Ok(())
 }
 
 #[cfg(test)]

@@ -6,11 +6,23 @@
 //! The repair pipeline every strategy shares (paper §IV): `revoke` the
 //! failed communicator so all survivors unblock, `shrink` to a pristine
 //! survivor communicator, then run strategy-specific state recovery —
-//! redistribution for [`shrink`], spare stitching plus buddy state transfer
-//! for [`substitute`], and the analytic relaunch penalty of
+//! redistribution for [`shrink`], spare stitching plus checkpoint-store
+//! state transfer for [`substitute`], and the analytic relaunch penalty of
 //! [`global_restart`] for the last-resort path.  Which branch runs is a
 //! per-failure [`policy::Decision`]; fixed-strategy runs are the
-//! `fixed:<strategy>` special case (see DESIGN.md §3).
+//! `fixed:<strategy>` special case (see DESIGN.md §3).  The decision point
+//! sits *after* the ULFM shrink, so adaptive policies may use one
+//! leader-broadcast over the survivor communicator (the dynamic capacity
+//! horizon of [`policy::agreed_capacity_horizon`]) and still hand every
+//! survivor the identical decision.
+//!
+//! Failed state is read back through the checkpoint subsystem's recovery
+//! reader ([`crate::ckptstore::reconstruct_failed`]); when the loss is
+//! *unrecoverable* under the configured redundancy scheme (e.g. two
+//! failures in one `xor:<g>` parity group before a re-encode, see
+//! [`crate::ckptstore::assess_loss`]), the `GlobalRestart` branch rebuilds
+//! the problem from scratch on the survivors instead of wedging on a
+//! checkpoint that no longer exists.
 
 pub mod global_restart;
 pub mod plan;
@@ -18,7 +30,8 @@ pub mod policy;
 pub mod shrink;
 pub mod substitute;
 
-use crate::checkpoint::CkptStore;
+use crate::checkpoint::{effective_stride, CkptStore};
+use crate::ckptstore::{self, CkptCfg, LossCheck};
 use crate::metrics::Phase;
 use crate::netsim::ComputeModel;
 use crate::simmpi::{ulfm, Comm, Ctx, MpiResult};
@@ -76,7 +89,7 @@ pub fn handle_failure(
     state: &mut SolverState,
     store: &mut CkptStore,
     strategy: Strategy,
-    buddy_k: usize,
+    ckpt: &CkptCfg,
     host: &ComputeModel,
 ) -> MpiResult<()> {
     debug_assert!(
@@ -89,54 +102,79 @@ pub fn handle_failure(
         state,
         store,
         Decision::from_strategy(strategy),
-        buddy_k,
+        ckpt,
         host,
     )
 }
 
-/// Survivor-side failure handling for one per-event [`Decision`]: revoke,
-/// shrink, then decision-specific state recovery.  On success `comm` is the
-/// repaired communicator and `state`/`store` are consistent at the last
-/// committed checkpoint.
-///
-/// Every survivor of the same event must pass the same decision (see the
-/// consistency notes in [`policy`]); the decision is made *before* calling
-/// this, so the ULFM repair sequence below is common to all strategies.
+/// Survivor-side failure handling for one pre-made per-event [`Decision`]:
+/// [`repair_membership`] followed by [`execute_decision`].  Every survivor
+/// of the same event must pass the same decision.
 pub fn handle_failure_with(
     ctx: &mut Ctx,
     comm: &mut Comm,
     state: &mut SolverState,
     store: &mut CkptStore,
     decision: Decision,
-    buddy_k: usize,
+    ckpt: &CkptCfg,
     host: &ComputeModel,
 ) -> MpiResult<()> {
-    // ULFM repair sequence (paper §IV): propagate the error so every
-    // survivor unblocks, then build a pristine communicator.
+    let shrunk = repair_membership(ctx, comm)?;
+    execute_decision(ctx, comm, shrunk, state, store, decision, ckpt, host)
+}
+
+/// Stage 1 of survivor-side failure handling — the ULFM repair sequence
+/// every strategy shares (paper §IV): propagate the error so every survivor
+/// unblocks, then build a pristine survivor communicator.  The caller
+/// evaluates its recovery policy between this and [`execute_decision`]
+/// (collectives over the returned communicator, like the leader horizon
+/// broadcast, are allowed there — every survivor runs the same sequence).
+pub fn repair_membership(ctx: &mut Ctx, comm: &Comm) -> MpiResult<Comm> {
     let prev = ctx.set_phase(Phase::Reconfig);
     ulfm::revoke(ctx, comm);
-    let shrunk = ulfm::shrink(ctx, comm)?;
+    let shrunk = ulfm::shrink(ctx, comm);
     ctx.set_phase(prev);
+    shrunk
+}
 
+/// Stage 2: run decision-specific state recovery over the `shrunk`
+/// communicator produced by [`repair_membership`].  On success `comm` is
+/// the repaired communicator and `state`/`store` are consistent at the
+/// last committed checkpoint (or at a fresh restart for an
+/// unrecoverable-loss `GlobalRestart`).
+#[allow(clippy::too_many_arguments)]
+pub fn execute_decision(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    shrunk: Comm,
+    state: &mut SolverState,
+    store: &mut CkptStore,
+    decision: Decision,
+    ckpt: &CkptCfg,
+    host: &ComputeModel,
+) -> MpiResult<()> {
     let old = comm.clone();
     match decision {
         Decision::Shrink => {
             let mut new_comm = shrunk;
-            shrink::recover(ctx, &old, &mut new_comm, state, store, buddy_k, host)?;
+            shrink::recover(ctx, &old, &mut new_comm, state, store, ckpt, host)?;
             *comm = new_comm;
         }
         Decision::Substitute | Decision::SubstituteCold => {
             *comm =
-                substitute::recover_survivor(ctx, &old, shrunk, state, store, buddy_k, host)?;
+                substitute::recover_survivor(ctx, &old, shrunk, state, store, ckpt, host)?;
         }
         Decision::GlobalRestart => {
             // The §I strawman as the universal fallback: tear the job down
             // and relaunch on the survivors.  Mechanically this is shrink
-            // recovery (survivors re-read state and continue), preceded by
-            // the analytic relaunch + PFS waste of the global C/R model —
-            // priced with the SAME state-size formula the cost-min policy
+            // recovery (survivors re-read state and continue) when the
+            // in-memory checkpoints still cover every failed rank, preceded
+            // by the analytic relaunch + PFS waste of the global C/R model
+            // — priced with the SAME state-size formula the cost-min policy
             // used to (not) choose it, so the executed charge matches the
-            // `restart=` figure recorded in the decision log.
+            // `restart=` figure recorded in the decision log.  When the
+            // loss is unrecoverable (the escalation path), survivors
+            // instead rebuild the problem from scratch.
             let model = global_restart::GlobalCrModel::default();
             let basis_vecs = state.v_out.m + state.z_out.m;
             let per_rank = crate::backend::costs::state_bytes_per_rank(
@@ -148,8 +186,21 @@ pub fn handle_failure_with(
             let prev = ctx.set_phase(Phase::Recovery);
             ctx.advance(model.waste_per_failure(total_bytes));
             ctx.set_phase(prev);
+
+            let world = ctx.world.clone();
+            let alive = move |wr: usize| world.is_alive(wr);
+            let stride = effective_stride(&ctx.world.net.params, old.size());
             let mut new_comm = shrunk;
-            shrink::recover(ctx, &old, &mut new_comm, state, store, buddy_k, host)?;
+            match ckptstore::assess_loss(ckpt, &old.members, &alive, stride) {
+                LossCheck::Recoverable => {
+                    shrink::recover(ctx, &old, &mut new_comm, state, store, ckpt, host)?;
+                }
+                LossCheck::Unrecoverable(_) => {
+                    global_restart::restart_on_survivors(
+                        ctx, &mut new_comm, state, store, ckpt, host,
+                    )?;
+                }
+            }
             *comm = new_comm;
         }
     }

@@ -11,7 +11,7 @@
 
 use std::ops::Range;
 
-use crate::checkpoint::buddy_of_stride;
+use crate::ckptstore::Scheme;
 use crate::problem::{sources, Partition};
 use crate::simmpi::WorldRank;
 
@@ -30,44 +30,37 @@ pub struct Segment {
     pub dest_wr: WorldRank,
 }
 
-/// Pick the serving rank for data of old comm rank `owner_cr`: the owner if
-/// alive, otherwise the first alive buddy on the ring (the paper's redundant
-/// in-memory copies).
-pub fn server_for(
-    owner_cr: usize,
-    old_members: &[WorldRank],
-    alive: &dyn Fn(WorldRank) -> bool,
-    buddy_k: usize,
-    stride: usize,
-) -> Option<WorldRank> {
-    let n = old_members.len();
-    let owner_wr = old_members[owner_cr];
-    if alive(owner_wr) {
-        return Some(owner_wr);
-    }
-    (1..=buddy_k.min(n - 1))
-        .map(|d| old_members[buddy_of_stride(owner_cr, d, n, stride)])
-        .find(|&wr| alive(wr))
-}
-
-/// Full deterministic segment list for a repartition
-/// `old_part`/`old_members` -> `new_part`/`new_members`.
-pub fn transfer_segments(
+/// Scheme-aware segment list: dead owners' rows are served by whichever
+/// rank the redundancy scheme designates — a live mirror buddy, or the
+/// parity holder that the recovery reader
+/// ([`crate::ckptstore::reconstruct_failed`]) materialized the owner's
+/// objects on.  Unrecoverable losses must have been escalated *before*
+/// planning (see [`crate::ckptstore::assess_loss`]); hitting one here is a
+/// protocol bug, not a runtime condition.
+pub fn transfer_segments_scheme(
     old_part: &Partition,
     old_members: &[WorldRank],
     new_part: &Partition,
     new_members: &[WorldRank],
     alive: &dyn Fn(WorldRank) -> bool,
-    buddy_k: usize,
+    scheme: &Scheme,
     stride: usize,
 ) -> Vec<Segment> {
     assert_eq!(old_part.n(), new_part.n(), "row space must be preserved");
+    let n_old = old_members.len();
+    let alive_cr = |cr: usize| alive(old_members[cr]);
     let mut segs = Vec::new();
     let mut idx = 0;
     for (new_cr, &dest_wr) in new_members.iter().enumerate() {
         for src in sources(old_part, new_part.range(new_cr)) {
-            let server_wr = server_for(src.owner, old_members, alive, buddy_k, stride)
-                .expect("no live holder of a required segment — unrecoverable");
+            let server_wr = if alive(old_members[src.owner]) {
+                old_members[src.owner]
+            } else {
+                let cr = scheme
+                    .server_cr_for(src.owner, n_old, &alive_cr, stride)
+                    .expect("no live holder of a required segment — unrecoverable");
+                old_members[cr]
+            };
             segs.push(Segment {
                 idx,
                 rows: src.rows,
@@ -114,22 +107,7 @@ mod tests {
         move |r| !dead.contains(&r)
     }
 
-    #[test]
-    fn server_prefers_owner_then_buddy() {
-        let members = vec![10, 11, 12, 13];
-        let alive = alive_except(vec![12]);
-        assert_eq!(server_for(1, &members, &alive, 1, 1), Some(11));
-        assert_eq!(server_for(2, &members, &alive, 1, 1), Some(13)); // buddy of 2 is 3
-    }
-
-    #[test]
-    fn server_none_when_owner_and_buddies_dead() {
-        let members = vec![10, 11, 12, 13];
-        let alive = alive_except(vec![12, 13]);
-        assert_eq!(server_for(2, &members, &alive, 1, 1), None);
-        // With two buddies the next one steps in.
-        assert_eq!(server_for(2, &members, &alive, 2, 1), Some(10));
-    }
+    const MIRROR1: Scheme = Scheme::Mirror { k: 1 };
 
     #[test]
     fn segments_cover_new_partition_exactly() {
@@ -139,7 +117,9 @@ mod tests {
         let old_members: Vec<usize> = (0..5).collect();
         let new_members = vec![0, 1, 2, 3];
         let alive = alive_except(vec![4]);
-        let segs = transfer_segments(&old, &old_members, &new, &new_members, &alive, 1, 1);
+        let segs = transfer_segments_scheme(
+            &old, &old_members, &new, &new_members, &alive, &MIRROR1, 1,
+        );
         // Coverage: every global row exactly once.
         let mut seen = vec![false; n];
         for s in &segs {
@@ -166,11 +146,13 @@ mod tests {
             let new_members: Vec<usize> = (0..10).filter(|&r| r != dead).collect();
             let new = Partition::balanced(n, 9);
             let alive = move |r: usize| r != dead;
-            transfer_segments(&old, &old_members, &new, &new_members, &alive, 1, 1)
-                .iter()
-                .filter(|s| s.server_wr != s.dest_wr)
-                .map(|s| s.rows.len())
-                .sum()
+            transfer_segments_scheme(
+                &old, &old_members, &new, &new_members, &alive, &MIRROR1, 1,
+            )
+            .iter()
+            .filter(|s| s.server_wr != s.dest_wr)
+            .map(|s| s.rows.len())
+            .sum()
         };
         assert!(
             moved(9) > moved(0),
@@ -181,6 +163,39 @@ mod tests {
     }
 
     #[test]
+    fn xor_segments_are_served_by_the_parity_holder() {
+        let n = 800;
+        let old = Partition::balanced(n, 8);
+        let new = Partition::balanced(n, 7);
+        let old_members: Vec<usize> = (0..8).collect();
+        // Rank 5 (group 1 = {4..7}) dies; group 1's parity holder is 0.
+        let new_members: Vec<usize> = (0..8).filter(|&r| r != 5).collect();
+        let alive = |r: usize| r != 5;
+        let segs = transfer_segments_scheme(
+            &old,
+            &old_members,
+            &new,
+            &new_members,
+            &alive,
+            &Scheme::Xor { g: 4 },
+            1,
+        );
+        let mut seen = vec![false; n];
+        for s in &segs {
+            for r in s.rows.clone() {
+                assert!(!seen[r]);
+                seen[r] = true;
+            }
+            if s.owner_wr == 5 {
+                assert_eq!(s.server_wr, 0, "holder of group 1 serves the dead member");
+            } else {
+                assert_eq!(s.server_wr, s.owner_wr);
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
     fn my_transfers_partitions_segments() {
         let n = 100;
         let old = Partition::balanced(n, 4);
@@ -188,7 +203,9 @@ mod tests {
         let old_members = vec![0, 1, 2, 3];
         let new_members = vec![0, 1, 2];
         let alive = alive_except(vec![3]);
-        let segs = transfer_segments(&old, &old_members, &new, &new_members, &alive, 1, 1);
+        let segs = transfer_segments_scheme(
+            &old, &old_members, &new, &new_members, &alive, &MIRROR1, 1,
+        );
         let total: usize = (0..4)
             .map(|me| {
                 let t = my_transfers(&segs, me);
@@ -203,7 +220,8 @@ mod tests {
         let old = Partition::balanced(64, 4);
         let members = vec![0, 1, 2, 3];
         let alive = |_r: usize| true;
-        let segs = transfer_segments(&old, &members, &old, &members, &alive, 1, 1);
+        let segs =
+            transfer_segments_scheme(&old, &members, &old, &members, &alive, &MIRROR1, 1);
         assert!(segs.iter().all(|s| s.server_wr == s.dest_wr));
     }
 }

@@ -46,6 +46,8 @@ use crate::backend::costs::{self, RecoveryCostInputs, RecoveryEstimates};
 use crate::netsim::{ComputeModel, NetParams};
 use crate::recovery::global_restart::GlobalCrModel;
 use crate::recovery::Strategy;
+use crate::simmpi::{Blob, Comm, Ctx, MpiResult};
+use crate::solver::state::SolverState;
 use crate::spares::PoolStatus;
 
 /// The per-event outcome of a policy evaluation: which recovery mechanism
@@ -223,6 +225,68 @@ pub fn decide(
     }
 }
 
+/// Default capacity-horizon prior (inner iterations) when the operator has
+/// not pinned `policy_horizon` and no convergence progress is observable
+/// yet — the paper-era default the seed shipped with.
+pub const DEFAULT_HORIZON_PRIOR: u64 = 50;
+
+/// Leader-estimated inner iterations of work remaining, from observed
+/// convergence progress (geometric extrapolation of the least-squares
+/// residual), falling back to `prior` (the `policy_horizon` config key)
+/// when no mid-cycle progress is visible.
+///
+/// Pure function of one rank's solver state — only the recovery *leader*
+/// evaluates it; everyone else receives the result via
+/// [`agreed_capacity_horizon`].
+pub fn estimate_remaining_iters(state: &SolverState, tol: f64, prior: u64) -> u64 {
+    let done = state.scalars.inner_iters_done;
+    let Some(cycle) = state.cycle.as_ref() else {
+        return prior;
+    };
+    if done == 0 || state.scalars.bnorm <= 0.0 {
+        return prior;
+    }
+    let relres = cycle.ls.residual() / state.scalars.bnorm;
+    if !relres.is_finite() || relres >= 1.0 {
+        return prior;
+    }
+    if relres <= tol {
+        return 0;
+    }
+    // relres ~ rho^done with rho = relres^(1/done); remaining iterations to
+    // reach tol: done * ln(tol/relres) / ln(relres).
+    let remaining = done as f64 * ((tol / relres).ln() / relres.ln());
+    remaining.clamp(0.0, 1e12) as u64
+}
+
+/// The capacity horizon the `cost-min` policy prices shrink's lost capacity
+/// with, tracking *actual remaining work* instead of the static
+/// `policy_horizon` prior (ROADMAP open item; DESIGN.md §3).
+///
+/// Per-rank progress counters can differ by one iteration at the instant a
+/// failure unblocks the survivors, so no rank may feed its *own* counter
+/// into the decision — near a cost crossover two survivors could pick
+/// different strategies and deadlock the repair.  Instead the recovery
+/// leader (rank 0 of the post-shrink communicator) computes the estimate
+/// from its local progress and broadcasts it; every survivor prices the
+/// decision with the identical agreed value, keeping decisions
+/// deterministic across survivors.
+pub fn agreed_capacity_horizon(
+    ctx: &mut Ctx,
+    shrunk: &mut Comm,
+    state: &SolverState,
+    tol: f64,
+    prior: u64,
+) -> MpiResult<u64> {
+    let mine = if shrunk.rank == 0 {
+        estimate_remaining_iters(state, tol, prior) as i64
+    } else {
+        0
+    };
+    let out = shrunk.bcast(ctx, Blob::from_i64s(vec![mine]))?;
+    Ok(out.i[0] as u64)
+}
+
 /// The cheapest strategy whose preconditions hold.  Global restart is the
 /// always-feasible fallback, so the candidate set is never empty.
 fn cheapest_feasible(est: &RecoveryEstimates, inputs: &PolicyInputs) -> (Decision, f64) {
@@ -262,6 +326,7 @@ mod tests {
                 buddy_k: 1,
                 horizon_iters: 50,
                 m_inner: 25,
+                xor_group: None,
             },
             failures_so_far: 1,
             event_seq: 0,
@@ -359,6 +424,46 @@ mod tests {
         inp.cost.horizon_iters = 100_000;
         let (d, _) = decide(PolicyKind::CostMin, &inp, &host(), &net());
         assert_eq!(d, Decision::Shrink);
+    }
+
+    #[test]
+    fn horizon_estimate_extrapolates_observed_rate() {
+        use crate::backend::DenseBasis;
+        use crate::problem::{EllBlock, Grid3D, MatrixRows, Partition};
+        use crate::solver::givens::GivensLs;
+        use crate::solver::state::{CycleCtl, IterScalars, SolverState};
+        let grid = Grid3D::cube(4);
+        let part = Partition::balanced(grid.n(), 1);
+        let mat = MatrixRows::generate(&grid, 0, grid.n());
+        let blk = EllBlock::build(&mat, &part, 0);
+        let rows = mat.rows;
+        let mut state = SolverState {
+            grid,
+            part,
+            mat,
+            blk,
+            x: vec![0.0; rows],
+            b: vec![0.0; rows],
+            v_out: DenseBasis::zeros(3, rows),
+            z_out: DenseBasis::zeros(2, rows),
+            cycle: None,
+            scalars: IterScalars { inner_iters_done: 100, next_version: 1, bnorm: 1.0 },
+            hwm_iters: 100,
+        };
+        // Between cycles there is no observable progress: the prior wins.
+        assert_eq!(estimate_remaining_iters(&state, 1e-8, 42), 42);
+        // Mid-cycle at relres 1e-4 after 100 iterations: extrapolating the
+        // observed geometric rate needs ~100 more to reach 1e-8.
+        state.cycle = Some(CycleCtl { j_done: 0, ls: GivensLs::new(2, 1e-4) });
+        let h = estimate_remaining_iters(&state, 1e-8, 42);
+        assert!((90..=110).contains(&h), "h={h}");
+        // Already converged: nothing remains, shrink costs no capacity.
+        state.cycle = Some(CycleCtl { j_done: 0, ls: GivensLs::new(2, 1e-9) });
+        assert_eq!(estimate_remaining_iters(&state, 1e-8, 42), 0);
+        // No iterations done yet: the prior wins.
+        state.scalars.inner_iters_done = 0;
+        state.cycle = Some(CycleCtl { j_done: 0, ls: GivensLs::new(2, 1e-4) });
+        assert_eq!(estimate_remaining_iters(&state, 1e-8, 42), 42);
     }
 
     #[test]

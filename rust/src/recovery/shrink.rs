@@ -8,10 +8,11 @@
 //! recovery").
 
 use crate::checkpoint::{agree_restore_version, obj, CkptStore, ObjId, Version};
+use crate::ckptstore::{self, CkptCfg};
 use crate::metrics::Phase;
 use crate::netsim::ComputeModel;
 use crate::problem::{MatrixRows, Partition, K};
-use crate::recovery::plan::{my_transfers, transfer_segments, Segment};
+use crate::recovery::plan::{my_transfers, transfer_segments_scheme, Segment};
 use crate::simmpi::{tags, Blob, Comm, Ctx, MpiResult, WorldRank};
 use crate::solver::state::SolverState;
 
@@ -72,11 +73,11 @@ pub fn recover(
     new_comm: &mut Comm,
     state: &mut SolverState,
     store: &mut CkptStore,
-    buddy_k: usize,
+    ckpt: &CkptCfg,
     host: &ComputeModel,
 ) -> MpiResult<()> {
     let prev = ctx.set_phase(Phase::Recovery);
-    let result = recover_inner(ctx, old_comm, new_comm, state, store, buddy_k, host);
+    let result = recover_inner(ctx, old_comm, new_comm, state, store, ckpt, host);
     ctx.set_phase(prev);
     result
 }
@@ -87,12 +88,25 @@ fn recover_inner(
     new_comm: &mut Comm,
     state: &mut SolverState,
     store: &mut CkptStore,
-    buddy_k: usize,
+    ckpt: &CkptCfg,
     host: &ComputeModel,
 ) -> MpiResult<()> {
     let me = ctx.rank;
     // 1. Agree on the restore version (newest globally committed).
     let v = agree_restore_version(ctx, new_comm, store)?;
+
+    // 1b. Recovery reader: materialize the failed ranks' objects on their
+    //     designated servers (parity reconstruction under xor; a no-op for
+    //     mirror, whose buddy copies already sit in the store).
+    ckptstore::reconstruct_failed(
+        ctx,
+        new_comm,
+        store,
+        ckpt,
+        &old_comm.members,
+        v,
+        &REDIST_OBJS,
+    )?;
 
     // 2. Roll back iteration + least-squares state from my own checkpoint.
     let iter_blob = store
@@ -107,13 +121,13 @@ fn recover_inner(
     let new_part = Partition::balanced(state.grid.n(), new_comm.size());
     let world = ctx.world.clone();
     let alive = move |r: WorldRank| world.is_alive(r);
-    let segs = transfer_segments(
+    let segs = transfer_segments_scheme(
         &old_part,
         &old_comm.members,
         &new_part,
         &new_comm.members,
         &alive,
-        buddy_k,
+        &ckpt.scheme,
         crate::checkpoint::effective_stride(&ctx.world.net.params, old_comm.size()),
     );
     let mine = my_transfers(&segs, me);
@@ -219,12 +233,12 @@ fn recover_inner(
     ctx.advance(host.cost((state.rows() * K) as f64, (24 * state.rows() * K) as f64));
 
     // 6. Forget the dead; re-establish every checkpoint under the new layout
-    //    (charged to Recovery — see checkpoint()).
+    //    (charged to Recovery — see the commit protocol).
     for &wr in &old_comm.members {
         if !ctx.world.is_alive(wr) {
             store.drop_owner(wr);
         }
     }
-    state.establish_checkpoints(ctx, new_comm, store, v + 1, buddy_k)?;
+    state.establish_checkpoints(ctx, new_comm, store, v + 1, ckpt)?;
     Ok(())
 }

@@ -4,18 +4,25 @@
 //! Survivors keep their data distribution and restore the solution vector
 //! from *local* checkpoint copies; the spare is stitched into the failed
 //! rank's comm-rank slot (Figure 1), fetches the failed rank's static and
-//! dynamic state from the failed rank's buddy, and synchronizes its local
+//! dynamic state from the rank the redundancy scheme designates — the
+//! failed rank's first live mirror buddy, or the parity holder that the
+//! recovery reader materialized the objects on — and synchronizes its local
 //! scalars from a survivor.  Checkpointing then continues over the restored
 //! configuration — with the spare on a distant node, which is exactly where
 //! the paper's post-substitution checkpoint overhead comes from (Figure 2).
 
-use crate::checkpoint::{agree_restore_version, buddy_of_stride, effective_stride, obj, CkptStore, Version};
+use crate::checkpoint::{agree_restore_version, effective_stride, obj, CkptStore, Version};
+use crate::ckptstore::{self, CkptCfg};
 use crate::metrics::Phase;
 use crate::netsim::ComputeModel;
 use crate::problem::{Grid3D, MatrixRows, Partition, K};
 use crate::simmpi::{tags, ulfm, Blob, Comm, Ctx, MpiError, MpiResult, WorldRank};
 use crate::solver::state::{IterScalars, SolverState};
 use crate::backend::DenseBasis;
+
+/// Objects the spare needs to adopt the failed rank's block.
+const SPARE_OBJS: [crate::checkpoint::ObjId; 5] =
+    [obj::MAT, obj::RHS, obj::X, obj::BASIS, obj::ITER];
 
 /// Tag namespace for spare state transfer.
 fn spare_tag(id: u32) -> u32 {
@@ -59,7 +66,7 @@ pub fn recover_survivor(
     mut shrunk: Comm,
     state: &mut SolverState,
     store: &mut CkptStore,
-    buddy_k: usize,
+    ckpt: &CkptCfg,
     host: &ComputeModel,
 ) -> MpiResult<Comm> {
     // --- Reconfiguration: agree on the restore version over the survivors,
@@ -78,7 +85,7 @@ pub fn recover_survivor(
 
     let prev = ctx.set_phase(Phase::Recovery);
     let result = survivor_state_recovery(
-        ctx, old_comm, &mut stitched, &assignment, state, store, v, buddy_k, host,
+        ctx, old_comm, &mut stitched, &assignment, state, store, v, ckpt, host,
     );
     ctx.set_phase(prev);
     result?;
@@ -94,7 +101,7 @@ fn survivor_state_recovery(
     state: &mut SolverState,
     store: &mut CkptStore,
     v: Version,
-    buddy_k: usize,
+    ckpt: &CkptCfg,
     host: &ComputeModel,
 ) -> MpiResult<()> {
     let n = old_comm.size();
@@ -113,73 +120,108 @@ fn survivor_state_recovery(
     state.restore_basis(&basis_blob);
     ctx.advance(host.cost(state.rows() as f64, 16.0 * state.rows() as f64));
 
-    // 2. If I am the buddy of a failed rank, serve its state to the spare.
+    // 2. Recovery reader: materialize the failed ranks' objects on their
+    //    designated servers (parity reconstruction under xor; a no-op for
+    //    mirror).  Runs among the old-comm survivors only — the spares are
+    //    still blocked waiting for their state below.
+    ckptstore::reconstruct_failed(
+        ctx,
+        stitched,
+        store,
+        ckpt,
+        &old_comm.members,
+        v,
+        &SPARE_OBJS,
+    )?;
+
+    // 3. If I am the designated server of a failed rank, send its state to
+    //    the spare (the paper's buddy-serves-the-spare transfer).
+    let world = ctx.world.clone();
+    let alive_cr = |cr: usize| world.is_alive(old_comm.members[cr]);
     for &(failed_cr, spare_wr) in assignment {
-        for d in 1..=buddy_k.min(n - 1) {
-            if buddy_of_stride(failed_cr, d, n, stride) == old_comm.rank {
-                let owner_wr = old_comm.members[failed_cr];
-                let spare_cr = stitched
-                    .rank_of_world(spare_wr)
-                    .expect("spare must be stitched");
-                for id in [obj::MAT, obj::RHS, obj::X, obj::BASIS, obj::ITER] {
-                    let blob = store
-                        .get_remote_at_most(owner_wr, id, v)
-                        .unwrap_or_else(|| panic!("buddy copy of obj {id} missing"))
-                        .1
-                        .clone();
-                    // Stored blobs already carry their scaled wire size.
-                    stitched.send(ctx, spare_cr, spare_tag(id), blob)?;
-                }
-                // Control blob: restore version + recompute high-water mark
-                // ("use any surviving process to populate the local state").
-                let ctl = Blob::from_i64s(vec![v, state.hwm_iters as i64]);
-                stitched.send(ctx, spare_cr, spare_tag(99), ctl)?;
-                break;
-            }
+        let server = ckpt
+            .scheme
+            .server_cr_for(failed_cr, n, &alive_cr, stride)
+            .expect("unrecoverable loss must be escalated before substitution");
+        if server != old_comm.rank {
+            continue;
         }
+        let owner_wr = old_comm.members[failed_cr];
+        let spare_cr = stitched
+            .rank_of_world(spare_wr)
+            .expect("spare must be stitched");
+        for id in SPARE_OBJS {
+            let blob = store
+                .get_remote_at_most(owner_wr, id, v)
+                .unwrap_or_else(|| panic!("serving copy of obj {id} missing"))
+                .1
+                .clone();
+            // Stored blobs already carry their scaled wire size.
+            stitched.send(ctx, spare_cr, spare_tag(id), blob)?;
+        }
+        // Control blob: restore version + recompute high-water mark
+        // ("use any surviving process to populate the local state").
+        let ctl = Blob::from_i64s(vec![v, state.hwm_iters as i64]);
+        stitched.send(ctx, spare_cr, spare_tag(99), ctl)?;
     }
 
-    // 3. Forget the dead; re-establish checkpoints over the restored
+    // 4. Forget the dead; re-establish checkpoints over the restored
     //    configuration (spare included — its distant node makes this and all
     //    future checkpoints costlier, the paper's Figure 2/5 effect).
     for &(failed_cr, _) in assignment {
         store.drop_owner(old_comm.members[failed_cr]);
     }
-    state.establish_checkpoints(ctx, stitched, store, v + 1, buddy_k)?;
+    state.establish_checkpoints(ctx, stitched, store, v + 1, ckpt)?;
     Ok(())
 }
 
 /// Spare side: called after `ulfm::join_as_spare` produced `comm` (this
 /// rank already holds comm rank = the failed slot).  Builds the full solver
-/// state from the buddy's copies and joins checkpoint re-establishment.
+/// state from the scheme-designated server's copies and joins checkpoint
+/// re-establishment.
+#[allow(clippy::too_many_arguments)]
 pub fn recover_spare(
     ctx: &mut Ctx,
     comm: &mut Comm,
+    old_members: &[WorldRank],
     grid: Grid3D,
     m_outer: usize,
     store: &mut CkptStore,
-    buddy_k: usize,
+    ckpt: &CkptCfg,
     host: &ComputeModel,
 ) -> MpiResult<SolverState> {
     let prev = ctx.set_phase(Phase::Recovery);
-    let result = recover_spare_inner(ctx, comm, grid, m_outer, store, buddy_k, host);
+    let result = recover_spare_inner(ctx, comm, old_members, grid, m_outer, store, ckpt, host);
     ctx.set_phase(prev);
     result
 }
 
+#[allow(clippy::too_many_arguments)]
 fn recover_spare_inner(
     ctx: &mut Ctx,
     comm: &mut Comm,
+    old_members: &[WorldRank],
     grid: Grid3D,
     m_outer: usize,
     store: &mut CkptStore,
-    buddy_k: usize,
+    ckpt: &CkptCfg,
     host: &ComputeModel,
 ) -> MpiResult<SolverState> {
     let n = comm.size();
     let me = comm.rank;
-    // The serving buddy occupies the failed rank's first buddy slot.
-    let server_cr = buddy_of_stride(me, 1, n, effective_stride(&ctx.world.net.params, n));
+    // The designated server of the failed slot this spare adopted: the
+    // first live mirror buddy, or the slot's parity holder.  Liveness is
+    // evaluated over the *failed* communicator's membership (carried by the
+    // Join invitation) — exactly the function the surviving servers
+    // evaluated — so both sides pick the same server with no negotiation,
+    // even when several slots failed in the same event.
+    debug_assert_eq!(old_members.len(), n);
+    let world = ctx.world.clone();
+    let alive_cr = |cr: usize| world.is_alive(old_members[cr]);
+    let server_cr = ckpt
+        .scheme
+        .server_cr_for(me, n, &alive_cr, effective_stride(&ctx.world.net.params, n))
+        .expect("unrecoverable loss must be escalated before substitution");
     let mat_blob = comm.recv(ctx, server_cr, spare_tag(obj::MAT))?;
     let rhs_blob = comm.recv(ctx, server_cr, spare_tag(obj::RHS))?;
     let x_blob = comm.recv(ctx, server_cr, spare_tag(obj::X))?;
@@ -216,6 +258,6 @@ fn recover_spare_inner(
     ctx.advance(host.cost((state.rows() * K) as f64, (24 * state.rows() * K) as f64));
 
     // Join the collective checkpoint re-establishment at v + 1.
-    state.establish_checkpoints(ctx, comm, store, v + 1, buddy_k)?;
+    state.establish_checkpoints(ctx, comm, store, v + 1, ckpt)?;
     Ok(state)
 }

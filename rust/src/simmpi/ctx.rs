@@ -5,7 +5,7 @@ use std::collections::{BTreeSet, VecDeque};
 use std::sync::mpsc::{Receiver, TryRecvError};
 use std::sync::Arc;
 
-use crate::metrics::{DecisionRecord, Phase, PhaseTimers};
+use crate::metrics::{CkptRecord, DecisionRecord, Phase, PhaseTimers};
 use crate::simmpi::msg::{Ctl, Msg, Payload, Tag};
 use crate::simmpi::world::{World, WorldRank};
 use crate::simmpi::{MpiError, MpiResult};
@@ -32,6 +32,9 @@ pub struct Ctx {
     /// Recovery-policy decisions this rank made, in event order (the
     /// coordinator copies these into the [`crate::metrics::RankReport`]).
     pub decisions: Vec<DecisionRecord>,
+    /// Checkpoint commits this rank participated in (bytes shipped, encode
+    /// time), recorded by [`crate::ckptstore::commit`].
+    pub ckpt_log: Vec<CkptRecord>,
     rx: Receiver<Msg>,
     /// Out-of-order buffer (matched by (epoch, src, tag)).
     pending: VecDeque<Msg>,
@@ -41,8 +44,9 @@ pub struct Ctx {
     detected: BTreeSet<WorldRank>,
     /// Communicator epochs known to be revoked.
     revoked: BTreeSet<u64>,
-    /// Pending Join invitations (spares).
-    joins: VecDeque<(u64, Vec<WorldRank>, usize)>,
+    /// Pending Join invitations (spares): (epoch, members, old members,
+    /// adopted comm rank).
+    joins: VecDeque<(u64, Vec<WorldRank>, Vec<WorldRank>, usize)>,
     /// Shutdown received.
     shutdown: bool,
 }
@@ -58,6 +62,7 @@ impl Ctx {
             timers: PhaseTimers::default(),
             iterations: 0,
             decisions: Vec::new(),
+            ckpt_log: Vec::new(),
             rx,
             pending: VecDeque::new(),
             known_dead: BTreeSet::new(),
@@ -226,8 +231,8 @@ impl Ctx {
             Payload::Ctl(Ctl::Revoke { epoch }) => {
                 self.revoked.insert(*epoch);
             }
-            Payload::Ctl(Ctl::Join { epoch, members, as_rank }) => {
-                self.joins.push_back((*epoch, members.clone(), *as_rank));
+            Payload::Ctl(Ctl::Join { epoch, members, old_members, as_rank }) => {
+                self.joins.push_back((*epoch, members.clone(), old_members.clone(), *as_rank));
             }
             Payload::Ctl(Ctl::Shutdown) => {
                 self.shutdown = true;
@@ -277,8 +282,9 @@ impl Ctx {
     }
 
     /// Spare-side: block until a Join invitation (or Shutdown) arrives.
-    /// Returns `None` on shutdown.
-    pub fn wait_join(&mut self) -> Option<(u64, Vec<WorldRank>, usize)> {
+    /// Returns `None` on shutdown, else
+    /// `(epoch, members, old members, adopted comm rank)`.
+    pub fn wait_join(&mut self) -> Option<(u64, Vec<WorldRank>, Vec<WorldRank>, usize)> {
         loop {
             if let Some(j) = self.joins.pop_front() {
                 return Some(j);

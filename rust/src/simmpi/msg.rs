@@ -18,10 +18,18 @@ pub mod tags {
     pub const COLL_SEQS: Tag = 1 << 16;
     /// Halo exchange tags: HALO_BASE + peer rank.
     pub const HALO_BASE: Tag = 1 << 22;
-    /// Checkpoint shipping tags: CKPT_BASE + object id.
+    /// Checkpoint shipping tags: CKPT_BASE + object id * 16 + buddy
+    /// distance (mirror copies and deltas).
     pub const CKPT_BASE: Tag = 1 << 21;
+    /// XOR parity contributions (member -> group holder), one tag per
+    /// object id, inside the checkpoint window above the mirror tags.
+    pub const CKPT_PARITY_BASE: Tag = CKPT_BASE + (1 << 12);
     /// Recovery / redistribution transfers.
     pub const RECOVER_BASE: Tag = 1 << 20;
+    /// Parity reconstruction (surviving group member -> holder):
+    /// RECON_BASE + object id * 4096 + failed comm rank, inside the
+    /// recovery window above the redistribution and spare-transfer tags.
+    pub const RECON_BASE: Tag = RECOVER_BASE + (1 << 19);
 }
 
 /// Typed payload container: every application message is some mix of f64 and
@@ -79,8 +87,17 @@ pub enum Ctl {
     /// ULFM `MPI_Comm_revoke` on communicator `epoch`.
     Revoke { epoch: u64 },
     /// Substitute recovery: spare adopts communicator `epoch` with comm rank
-    /// `as_rank` over `members`.
-    Join { epoch: u64, members: Vec<WorldRank>, as_rank: usize },
+    /// `as_rank` over `members`.  `old_members` is the failed
+    /// communicator's membership, so the spare can evaluate the same
+    /// registry-derived serving/liveness functions the survivors used (the
+    /// stitched membership already has spares in the failed slots and would
+    /// skew them).
+    Join {
+        epoch: u64,
+        members: Vec<WorldRank>,
+        old_members: Vec<WorldRank>,
+        as_rank: usize,
+    },
     /// Run is over; unused spares exit their wait loop.
     Shutdown,
 }
@@ -132,5 +149,10 @@ mod tests {
         assert!(HALO_BASE + 100_000 < COLL_BASE);
         assert!(CKPT_BASE + 10_000 < HALO_BASE);
         assert!(RECOVER_BASE + 10_000 < CKPT_BASE);
+        // Sub-windows nest inside their parents without touching siblings.
+        assert!(CKPT_BASE + 6 * 16 < CKPT_PARITY_BASE); // mirror ship tags below parity
+        assert!(CKPT_PARITY_BASE + 1_000 < HALO_BASE);
+        assert!(RECON_BASE > RECOVER_BASE + (1 << 18) + 10_000); // above spare tags
+        assert!(RECON_BASE + 6 * 4096 < CKPT_BASE);
     }
 }

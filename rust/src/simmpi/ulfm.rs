@@ -112,11 +112,19 @@ pub fn stitch_spares(
     let mut stitched = Comm::new(epoch, members.clone(), my_new);
 
     // The leader invites the spares (they are blocked in `wait_join`).
+    // The invitation carries the failed communicator's membership so the
+    // spare can evaluate the same registry-derived serving functions the
+    // survivors use (see `Ctl::Join`).
     if shrunk.rank == 0 {
         for &(failed_cr, spare_wr) in spare_assignment {
             ctx.send_ctl(
                 spare_wr,
-                Ctl::Join { epoch, members: members.clone(), as_rank: failed_cr },
+                Ctl::Join {
+                    epoch,
+                    members: members.clone(),
+                    old_members: old_comm.members.clone(),
+                    as_rank: failed_cr,
+                },
             );
         }
     }

@@ -17,6 +17,7 @@
 
 use crate::backend::{Backend, DenseBasis};
 use crate::checkpoint::CkptStore;
+use crate::ckptstore::CkptCfg;
 use crate::metrics::Phase;
 use crate::netsim::ComputeModel;
 use crate::simmpi::{Comm, Ctx, MpiResult};
@@ -39,8 +40,9 @@ pub struct FtGmresCfg {
     pub max_cycles: usize,
     /// CGS2 re-orthogonalization (Trilinos ICGS-style).
     pub reorth: bool,
-    /// Buddy copies per checkpointed object.
-    pub ckpt_buddies: usize,
+    /// Checkpoint-store configuration: redundancy scheme (`mirror:<k>` /
+    /// `xor:<g>`) and the delta layer (see [`crate::ckptstore`]).
+    pub ckpt: CkptCfg,
     /// Checkpointing on/off (off for the no-protection baseline).
     pub ckpt_enabled: bool,
     /// Early-exit tolerance for the inner solve (0 = fixed m_inner iters,
@@ -56,7 +58,7 @@ impl Default for FtGmresCfg {
             tol: 1e-8,
             max_cycles: 8,
             reorth: true,
-            ckpt_buddies: 1,
+            ckpt: CkptCfg::default(),
             ckpt_enabled: true,
             inner_tol: 0.0,
         }
@@ -194,7 +196,7 @@ impl<'a> FtGmres<'a> {
 
                 state.cycle = Some(CycleCtl { j_done: j, ls: ls.clone() });
                 if cfg.ckpt_enabled {
-                    state.checkpoint_dynamic(ctx, comm, store, cfg.ckpt_buddies)?;
+                    state.checkpoint_dynamic(ctx, comm, store, &cfg.ckpt)?;
                 }
             }
             let _ = done; // true residual verified at the next loop top

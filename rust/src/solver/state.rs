@@ -12,6 +12,7 @@
 
 use crate::backend::DenseBasis;
 use crate::checkpoint::{obj, CkptStore, Version};
+use crate::ckptstore::CkptCfg;
 use crate::metrics::Phase;
 use crate::netsim::ComputeModel;
 use crate::problem::{EllBlock, Grid3D, MatrixRows, Partition};
@@ -22,6 +23,39 @@ use crate::solver::givens::GivensLs;
 /// verification need no communication.
 pub fn x_true(g: usize) -> f64 {
     (g as f64 * 0.017).sin() + 0.5 * (g as f64 * 0.003).cos()
+}
+
+/// Generate this rank's block of the analytic test problem under `part`:
+/// matrix rows, localized ELL block, and the analytic RHS (`b = A x_true`,
+/// computable locally), charging the modeled generation costs.  The single
+/// source of the rebuild recipe — used by initial [`SolverState::setup`]
+/// and by the global-restart escalation path
+/// ([`crate::recovery::global_restart::restart_on_survivors`]), so both
+/// construct the identical problem at identical virtual cost.
+pub fn generate_local_problem(
+    ctx: &mut Ctx,
+    host: &ComputeModel,
+    grid: Grid3D,
+    part: &Partition,
+    me: usize,
+) -> (MatrixRows, EllBlock, Vec<f64>) {
+    use crate::problem::K;
+    let range = part.range(me);
+    let mat = MatrixRows::generate(&grid, range.start, range.len());
+    // Generation cost: touch every slot once.
+    ctx.advance(host.cost((mat.rows * K) as f64, (12 * mat.rows * K) as f64));
+    let blk = EllBlock::build(&mat, part, me);
+    let mut b = vec![0.0; mat.rows];
+    for r in 0..mat.rows {
+        let mut acc = 0.0;
+        for k in 0..K {
+            let idx = r * K + k;
+            acc += mat.vals[idx] * x_true(mat.gcols[idx] as usize);
+        }
+        b[r] = acc;
+    }
+    ctx.advance(host.cost((2 * mat.rows * K) as f64, (16 * mat.rows * K) as f64));
+    (mat, blk, b)
 }
 
 /// Iteration scalars kept consistent across ranks (the paper's "local state
@@ -84,34 +118,12 @@ impl SolverState {
         grid: Grid3D,
         host: &ComputeModel,
         m_outer: usize,
-        ckpt_buddies: usize,
+        ckpt: &CkptCfg,
         ckpt_enabled: bool,
     ) -> MpiResult<SolverState> {
         let me = comm.rank;
         let part = Partition::balanced(grid.n(), comm.size());
-        let range = part.range(me);
-        let mat = MatrixRows::generate(&grid, range.start, range.len());
-        // Generation cost: touch every slot once.
-        ctx.advance(host.cost(
-            (mat.rows * crate::problem::K) as f64,
-            (12 * mat.rows * crate::problem::K) as f64,
-        ));
-        let blk = EllBlock::build(&mat, &part, me);
-
-        // b = A * x_true, computable locally (x_true analytic).
-        let mut b = vec![0.0; mat.rows];
-        for r in 0..mat.rows {
-            let mut acc = 0.0;
-            for k in 0..crate::problem::K {
-                let idx = r * crate::problem::K + k;
-                acc += mat.vals[idx] * x_true(mat.gcols[idx] as usize);
-            }
-            b[r] = acc;
-        }
-        ctx.advance(host.cost(
-            (2 * mat.rows * crate::problem::K) as f64,
-            (16 * mat.rows * crate::problem::K) as f64,
-        ));
+        let (mat, blk, b) = generate_local_problem(ctx, host, grid, &part, me);
 
         let prev = ctx.set_phase(Phase::Comm);
         let mut nsq = [b.iter().map(|v| v * v).sum::<f64>()];
@@ -135,7 +147,7 @@ impl SolverState {
         };
         // Initial full checkpoint (static + dynamic) at version 0.
         if ckpt_enabled {
-            state.establish_checkpoints(ctx, comm, store, 0, ckpt_buddies)?;
+            state.establish_checkpoints(ctx, comm, store, 0, ckpt)?;
         }
         Ok(state)
     }
@@ -149,8 +161,19 @@ impl SolverState {
     // Checkpoint object (de)serialization
     // ------------------------------------------------------------------
 
-    /// Dynamic basis payload: live V rows (j_done + 2) and Z rows
-    /// (j_done + 1) concatenated; empty between cycles.
+    /// Dynamic basis payload: the live V rows (j_done + 2) and Z rows
+    /// (j_done + 1) *interleaved* in creation order
+    /// (`V0, Z0, V1, Z1, ..., V_{nv-1}`); empty between cycles.
+    ///
+    /// The interleaving makes consecutive versions of the blob pure
+    /// *appends* — each outer step adds `[Z_j, V_{j+1}]` at the tail and
+    /// never shifts existing bytes — which is exactly what the checkpoint
+    /// delta layer ([`crate::ckptstore::delta`]) turns into two-row
+    /// commits instead of reshipping the whole basis.  Everything that
+    /// redistributes the blob (shrink's per-vector slicing and
+    /// reassembly) treats it as `nv + nz` opaque rows and is agnostic to
+    /// row order; only this function and [`SolverState::restore_basis`]
+    /// know the interleaving.
     pub fn basis_blob(&self) -> Blob {
         match &self.cycle {
             None => Blob::from_i64s(vec![0, 0]),
@@ -159,11 +182,11 @@ impl SolverState {
                 let nz = c.j_done + 1;
                 let r = self.rows();
                 let mut f = Vec::with_capacity((nv + nz) * r);
-                for j in 0..nv {
-                    f.extend_from_slice(self.v_out.row(j));
-                }
-                for j in 0..nz {
-                    f.extend_from_slice(self.z_out.row(j));
+                for t in 0..nv {
+                    f.extend_from_slice(self.v_out.row(t));
+                    if t < nz {
+                        f.extend_from_slice(self.z_out.row(t));
+                    }
                 }
                 Blob { f, i: vec![nv as i64, nz as i64], wire: None }
             }
@@ -200,7 +223,8 @@ impl SolverState {
         };
     }
 
-    /// Restore V/Z from a BASIS blob (already sliced to my current rows).
+    /// Restore V/Z from a BASIS blob (already sliced to my current rows),
+    /// undoing the interleaved layout of [`SolverState::basis_blob`].
     pub fn restore_basis(&mut self, blob: &Blob) {
         let r = self.rows();
         self.v_out = DenseBasis::zeros(self.v_out.m, r);
@@ -208,25 +232,34 @@ impl SolverState {
         let nv = blob.i[0] as usize;
         let nz = blob.i[1] as usize;
         debug_assert_eq!(blob.f.len(), (nv + nz) * r, "basis blob shape mismatch");
-        for j in 0..nv {
-            self.v_out.row_mut(j).copy_from_slice(&blob.f[j * r..(j + 1) * r]);
+        let (mut iv, mut iz) = (0usize, 0usize);
+        for k in 0..nv + nz {
+            let row = &blob.f[k * r..(k + 1) * r];
+            // V leads on even positions while both kinds remain, then the
+            // leftover kind finishes the tail (nv = nz + 1 in practice).
+            if (k % 2 == 0 && iv < nv) || iz >= nz {
+                self.v_out.row_mut(iv).copy_from_slice(row);
+                iv += 1;
+            } else {
+                self.z_out.row_mut(iz).copy_from_slice(row);
+                iz += 1;
+            }
         }
-        for j in 0..nz {
-            let off = (nv + j) * r;
-            self.z_out.row_mut(j).copy_from_slice(&blob.f[off..off + r]);
-        }
+        debug_assert!(iv == nv && iz == nz, "interleaved basis rows exhausted unevenly");
     }
 
-    /// Bundle every checkpointed object at `version` and ship to buddies.
-    /// Used for the initial distribution and for post-recovery
-    /// re-establishment (the paper's "update all the in-memory checkpoints").
+    /// Bundle every checkpointed object at `version` and commit it through
+    /// the configured redundancy scheme.  Used for the initial distribution
+    /// and for post-recovery re-establishment (the paper's "update all the
+    /// in-memory checkpoints") — always a *fresh* full commit, because
+    /// membership or layout just changed.
     pub fn establish_checkpoints(
         &mut self,
         ctx: &mut Ctx,
         comm: &mut Comm,
         store: &mut CkptStore,
         version: Version,
-        k: usize,
+        ckpt: &CkptCfg,
     ) -> MpiResult<()> {
         let ds = ctx.world.net.params.data_scale;
         let objs = vec![
@@ -236,19 +269,20 @@ impl SolverState {
             (obj::BASIS, self.basis_blob().scaled(ds)),
             (obj::ITER, self.iter_blob()),
         ];
-        crate::checkpoint::checkpoint(ctx, comm, store, &objs, version, k)?;
+        crate::ckptstore::commit(ctx, comm, store, &objs, version, ckpt, true)?;
         self.scalars.next_version = version + 1;
         Ok(())
     }
 
     /// Periodic dynamic-state checkpoint (x0 + basis + iteration state) —
-    /// taken after each completed inner solve, per the paper.
+    /// taken after each completed inner solve, per the paper.  Ships chunk
+    /// deltas when the delta layer is on.
     pub fn checkpoint_dynamic(
         &mut self,
         ctx: &mut Ctx,
         comm: &mut Comm,
         store: &mut CkptStore,
-        k: usize,
+        ckpt: &CkptCfg,
     ) -> MpiResult<()> {
         let version = self.scalars.next_version;
         let ds = ctx.world.net.params.data_scale;
@@ -257,7 +291,7 @@ impl SolverState {
             (obj::BASIS, self.basis_blob().scaled(ds)),
             (obj::ITER, self.iter_blob()),
         ];
-        crate::checkpoint::checkpoint(ctx, comm, store, &objs, version, k)?;
+        crate::ckptstore::commit(ctx, comm, store, &objs, version, ckpt, false)?;
         self.scalars.next_version = version + 1;
         Ok(())
     }

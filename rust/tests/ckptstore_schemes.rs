@@ -1,0 +1,214 @@
+//! End-to-end checkpoint-store scheme tests: xor parity recovery through
+//! both in-situ strategies, delta commits, and group-failure escalation to
+//! a global restart (DESIGN.md §8).
+
+mod common;
+
+use std::sync::Arc;
+
+use common::quick_config;
+use ulfm_ftgmres::backend::native::NativeBackend;
+use ulfm_ftgmres::ckptstore::Scheme;
+use ulfm_ftgmres::config::RunConfig;
+use ulfm_ftgmres::coordinator;
+use ulfm_ftgmres::failure::InjectionPlan;
+use ulfm_ftgmres::metrics::RunReport;
+use ulfm_ftgmres::recovery::Strategy;
+
+fn with_scheme(mut cfg: RunConfig, scheme: Scheme, delta: bool) -> RunConfig {
+    cfg.solver.ckpt.scheme = scheme;
+    cfg.solver.ckpt.delta = delta;
+    cfg
+}
+
+fn run_with_plan(cfg: &RunConfig, plan: InjectionPlan) -> RunReport {
+    let backend = Arc::new(NativeBackend::new(cfg.compute.clone()));
+    coordinator::run_custom(cfg, backend, plan).expect("run completes")
+}
+
+/// A single in-group failure under xor:4 reconstructs from parity and the
+/// shrink recovery restores the *same* committed state as mirror:1 — the
+/// iteration sequence afterwards is bit-identical.
+#[test]
+fn xor_shrink_restores_the_same_committed_state_as_mirror() {
+    let mirror = coordinator::run(&with_scheme(
+        quick_config(8, Strategy::Shrink, 1),
+        Scheme::Mirror { k: 1 },
+        false,
+    ))
+    .unwrap();
+    let xor = coordinator::run(&with_scheme(
+        quick_config(8, Strategy::Shrink, 1),
+        Scheme::Xor { g: 4 },
+        false,
+    ))
+    .unwrap();
+    assert_eq!(mirror.failures, 1);
+    assert_eq!(xor.failures, 1);
+    assert!(mirror.converged && xor.converged);
+    assert!(mirror.final_relres < 1e-10 && xor.final_relres < 1e-10);
+    // Parity reconstruction is bit-exact, so the restored state and hence
+    // the whole post-recovery iteration history must match.
+    assert_eq!(mirror.iterations, xor.iterations);
+    assert!(
+        (mirror.final_relres - xor.final_relres).abs() <= 1e-14,
+        "mirror {} vs xor {}",
+        mirror.final_relres,
+        xor.final_relres
+    );
+}
+
+/// Substitute recovery under xor: the parity holder reconstructs the failed
+/// rank's objects and serves them to the spare.
+#[test]
+fn xor_substitute_single_failure_converges() {
+    let cfg = with_scheme(
+        quick_config(8, Strategy::Substitute, 1),
+        Scheme::Xor { g: 4 },
+        false,
+    );
+    let rep = coordinator::run(&cfg).unwrap();
+    assert_eq!(rep.failures, 1);
+    assert!(rep.converged, "relres={}", rep.final_relres);
+    assert!(
+        rep.ranks.iter().any(|r| r.was_spare && r.iterations > 0),
+        "spare must have been used"
+    );
+}
+
+/// One failure per parity group across separate events: each loss is
+/// covered by its stripe and the re-encode between events restores full
+/// redundancy, so the campaign survives failures in every group.
+#[test]
+fn xor_cross_group_campaign_recovers_in_situ() {
+    let cfg = with_scheme(quick_config(8, Strategy::Shrink, 2), Scheme::Xor { g: 4 }, false);
+    let plan = InjectionPlan::cross_group_campaign(8, 4, 2, cfg.solver.m_inner as u64);
+    let rep = run_with_plan(&cfg, plan);
+    assert_eq!(rep.failures, 2);
+    assert!(rep.converged, "relres={}", rep.final_relres);
+    assert!(rep.final_relres < 1e-10);
+    let names: Vec<&str> = rep.decisions.iter().map(|d| d.decision).collect();
+    assert_eq!(names, vec!["shrink", "shrink"], "both events recovered in situ");
+}
+
+/// The delta layer changes transport only: the solve (and its answer) is
+/// identical, while the redundancy bytes shipped drop by a lot.
+#[test]
+fn delta_cuts_shipped_bytes_without_changing_the_answer() {
+    let full =
+        coordinator::run(&with_scheme(quick_config(4, Strategy::Shrink, 0), Scheme::Mirror { k: 1 }, false))
+            .unwrap();
+    let delta =
+        coordinator::run(&with_scheme(quick_config(4, Strategy::Shrink, 0), Scheme::Mirror { k: 1 }, true))
+            .unwrap();
+    assert!(full.converged && delta.converged);
+    assert_eq!(full.iterations, delta.iterations, "transport must not change the math");
+    assert!((full.final_relres - delta.final_relres).abs() <= 1e-14);
+    let (full_shipped, full_logical, full_commits) = full.ckpt_totals();
+    let (delta_shipped, delta_logical, delta_commits) = delta.ckpt_totals();
+    assert_eq!(full_commits, delta_commits);
+    assert_eq!(full_logical, delta_logical);
+    assert!(full_shipped > 0 && delta_shipped > 0);
+    assert!(
+        2 * delta_shipped < full_shipped,
+        "delta must at least halve shipped bytes: {delta_shipped} vs {full_shipped}"
+    );
+    // Delta survives recovery too: same campaign with one failure.
+    let rec =
+        coordinator::run(&with_scheme(quick_config(8, Strategy::Shrink, 1), Scheme::Mirror { k: 1 }, true))
+            .unwrap();
+    assert!(rec.converged, "relres={}", rec.final_relres);
+    assert!(rec.final_relres < 1e-10);
+}
+
+/// xor + delta compose: parity contributions ship as chunk deltas and a
+/// failure still reconstructs the exact committed state.
+#[test]
+fn xor_delta_recovers_after_failure() {
+    let cfg = with_scheme(quick_config(8, Strategy::Shrink, 1), Scheme::Xor { g: 4 }, true);
+    let rep = coordinator::run(&cfg).unwrap();
+    assert_eq!(rep.failures, 1);
+    assert!(rep.converged, "relres={}", rep.final_relres);
+    assert!(rep.final_relres < 1e-10);
+    let mirror = coordinator::run(&with_scheme(
+        quick_config(8, Strategy::Shrink, 1),
+        Scheme::Mirror { k: 1 },
+        false,
+    ))
+    .unwrap();
+    assert_eq!(rep.iterations, mirror.iterations, "same restored state, same history");
+}
+
+/// Two simultaneous failures inside one parity group before any re-encode:
+/// the loss is unrecoverable in situ and must deterministically escalate to
+/// a recorded `GlobalRestart` — and the run must still produce the right
+/// answer (survivors rebuild from scratch), not a wrong one or a hang.
+#[test]
+fn same_group_double_failure_escalates_to_global_restart() {
+    let cfg = with_scheme(quick_config(8, Strategy::Shrink, 0), Scheme::Xor { g: 4 }, false);
+    let plan = InjectionPlan::same_group_burst(8, 4, 1, 2, 25);
+    let rep = run_with_plan(&cfg, plan);
+    assert_eq!(rep.failures, 2, "both kills fired");
+    assert_eq!(rep.decisions.len(), 1, "one event");
+    assert_eq!(rep.decisions[0].decision, "global-restart");
+    assert!(
+        rep.decisions[0].reason.contains("unrecoverable"),
+        "escalation reason recorded: {}",
+        rep.decisions[0].reason
+    );
+    assert!(rep.converged, "restarted run must still converge: relres={}", rep.final_relres);
+    assert!(rep.final_relres < 1e-10, "and produce the right answer");
+}
+
+/// Losing a group member together with that group's parity holder is just
+/// as fatal as two in-group losses: escalate, restart, converge.
+#[test]
+fn member_plus_holder_failure_escalates() {
+    let cfg = with_scheme(quick_config(8, Strategy::Shrink, 0), Scheme::Xor { g: 4 }, false);
+    // Rank 5 is in group 1; rank 0 holds group 1's parity stripe.
+    let plan = InjectionPlan::burst(&[0, 5], 25);
+    let rep = run_with_plan(&cfg, plan);
+    assert_eq!(rep.failures, 2);
+    assert_eq!(rep.decisions[0].decision, "global-restart");
+    assert!(rep.decisions[0].reason.contains("unrecoverable"));
+    assert!(rep.converged, "relres={}", rep.final_relres);
+}
+
+/// Under mirror:1, losing a rank and its only buddy likewise escalates
+/// instead of panicking mid-redistribution.
+#[test]
+fn adjacent_pair_loss_under_mirror1_escalates() {
+    let cfg = with_scheme(quick_config(8, Strategy::Shrink, 0), Scheme::Mirror { k: 1 }, false);
+    let plan = InjectionPlan::burst(&[3, 4], 25);
+    let rep = run_with_plan(&cfg, plan);
+    assert_eq!(rep.failures, 2);
+    assert_eq!(rep.decisions[0].decision, "global-restart");
+    assert!(rep.decisions[0].reason.contains("unrecoverable"));
+    assert!(rep.converged, "relres={}", rep.final_relres);
+}
+
+/// Checkpoint metrics land in the run report: commits are recorded with
+/// positive logical and shipped bytes under every scheme.
+#[test]
+fn ckpt_records_populate_the_report() {
+    for (scheme, delta) in [
+        (Scheme::Mirror { k: 1 }, false),
+        (Scheme::Mirror { k: 2 }, false),
+        (Scheme::Xor { g: 4 }, false),
+        (Scheme::Xor { g: 4 }, true),
+    ] {
+        let rep =
+            coordinator::run(&with_scheme(quick_config(8, Strategy::Shrink, 0), scheme, delta))
+                .unwrap();
+        let (shipped, logical, commits) = rep.ckpt_totals();
+        assert!(commits > 1, "{scheme:?}: establishment + dynamic commits");
+        assert!(logical > 0 && shipped > 0, "{scheme:?}");
+        // mirror:2 ships two copies of everything; everyone else at most
+        // one copy's worth.
+        if scheme == (Scheme::Mirror { k: 2 }) {
+            assert!(shipped > logical, "{scheme:?}: k=2 ships 2x state");
+        } else {
+            assert!(shipped <= logical + logical / 8, "{scheme:?}: at most ~1x state");
+        }
+    }
+}

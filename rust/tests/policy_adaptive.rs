@@ -153,13 +153,15 @@ fn cost_min_horizon_flips_the_decision() {
     };
     let plan = || InjectionPlan::exhaustion_campaign(8, 1, base.solver.m_inner as u64);
 
+    // Pinning the horizon key disables the leader's dynamic estimate, so
+    // the configured prior alone drives the crossover.
     let mut long = base.clone();
-    long.policy_horizon = 1_000_000;
+    long.policy_horizon = Some(1_000_000);
     let rep = run_with_plan(&long, plan());
     assert_eq!(rep.decisions[0].decision, "substitute", "{}", rep.decisions[0].reason);
 
     let mut short = base.clone();
-    short.policy_horizon = 0;
+    short.policy_horizon = Some(0);
     let rep = run_with_plan(&short, plan());
     assert_eq!(rep.decisions[0].decision, "shrink", "{}", rep.decisions[0].reason);
 }

@@ -9,7 +9,8 @@ use common::Rng;
 use ulfm_ftgmres::backend::native::NativeBackend;
 use ulfm_ftgmres::backend::{Backend, DenseBasis};
 use ulfm_ftgmres::problem::{sources, EllBlock, Grid3D, MatrixRows, Partition};
-use ulfm_ftgmres::recovery::plan::{my_transfers, transfer_segments};
+use ulfm_ftgmres::ckptstore::Scheme;
+use ulfm_ftgmres::recovery::plan::{my_transfers, transfer_segments_scheme};
 use ulfm_ftgmres::simmpi::Blob;
 use ulfm_ftgmres::solver::givens::GivensLs;
 
@@ -73,8 +74,15 @@ fn prop_transfer_segments_cover_once_with_random_failures() {
         let old = Partition::balanced(n, p_old);
         let new = Partition::balanced(n, p_old - 1);
         let alive = move |r: usize| r != dead_cr;
-        let segs =
-            transfer_segments(&old, &old_members, &new, &new_members, &alive, 1, 1);
+        let segs = transfer_segments_scheme(
+            &old,
+            &old_members,
+            &new,
+            &new_members,
+            &alive,
+            &Scheme::Mirror { k: 1 },
+            1,
+        );
         // 1. Exact cover.
         let mut seen = vec![false; n];
         for s in &segs {

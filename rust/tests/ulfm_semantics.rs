@@ -135,8 +135,13 @@ fn stitch_spare_restores_original_size() {
                 let mut ctx = ulfm_ftgmres::simmpi::Ctx::new(w, rank, rx);
                 if rank == 4 {
                     // Spare: wait for the invitation, then join + allreduce.
-                    let (epoch, members, as_rank) = ctx.wait_join().expect("join");
+                    let (epoch, members, old_members, as_rank) =
+                        ctx.wait_join().expect("join");
                     assert_eq!(as_rank, 2);
+                    // The invitation names the failed communicator's
+                    // membership so the spare can evaluate the survivors'
+                    // serving functions.
+                    assert_eq!(old_members, vec![0, 1, 2, 3]);
                     let mut comm = ulfm::join_as_spare(&mut ctx, epoch, members, as_rank).unwrap();
                     let mut v = [100.0];
                     comm.allreduce_sum(&mut ctx, &mut v).unwrap();
@@ -168,6 +173,93 @@ fn stitch_spare_restores_original_size() {
         if r != 2 {
             assert_eq!(*v, 104.0, "rank {r}");
         }
+    }
+}
+
+/// A failure arriving *during* the checkpoint-commit agreement: the dying
+/// rank completes the whole data exchange (its copies are delivered) and
+/// dies inside the agreement.  No survivor may hang, none may commit the
+/// torn version, and after the repair the survivors agree to restore the
+/// previous committed version — which the GC must still be holding.
+#[test]
+fn failure_during_commit_agreement_preserves_previous_commit() {
+    use ulfm_ftgmres::checkpoint::{self, agree_restore_version, obj, CkptStore};
+    use ulfm_ftgmres::ckptstore::ship_tag;
+
+    let n = 4;
+    let results = run_ranks(n, move |mut ctx| {
+        let mut comm = Comm::world(n, ctx.rank);
+        let mut store = CkptStore::new();
+        let objs = vec![(obj::X, Blob::scalar(ctx.rank as f64))];
+        checkpoint::checkpoint(&mut ctx, &mut comm, &mut store, &objs, 1, 1).unwrap();
+        if ctx.rank == 1 {
+            // Re-play the v2 data exchange by hand (same wire protocol:
+            // ship to buddy 2, receive ward 0's copy), then die *before*
+            // the commit agreement — a failure mid-agreement.
+            comm.send(&mut ctx, 2, ship_tag(obj::X, 1), Blob::scalar(10.0)).unwrap();
+            let _ = comm.recv(&mut ctx, 0, ship_tag(obj::X, 1)).unwrap();
+            let _ = ctx.die();
+            return (true, 1, 1);
+        }
+        // Survivors run the full v2 checkpoint: their data exchange
+        // completes (rank 1's copies were delivered), so the error can
+        // only surface inside the agreement.
+        let objs2 = vec![(obj::X, Blob::scalar(10.0 + ctx.rank as f64))];
+        let r = checkpoint::checkpoint(&mut ctx, &mut comm, &mut store, &objs2, 2, 1);
+        if r.is_err() {
+            ulfm::revoke(&mut ctx, &comm);
+        }
+        // Repair and agree on the restore version like the recovery driver.
+        wait_dead(&ctx.world, 1);
+        let mut shrunk = ulfm::shrink(&mut ctx, &comm).unwrap();
+        let v = agree_restore_version(&mut ctx, &mut shrunk, &store).unwrap();
+        // The restore version's payload must still exist locally (the
+        // committed-floor GC may not have collected it).
+        assert!(store.get_local_at_most(obj::X, v).is_some());
+        (r.is_err(), store.committed(), v)
+    });
+    for (rank, (is_err, committed, v)) in results.iter().enumerate() {
+        if rank == 1 {
+            continue;
+        }
+        assert!(*is_err, "rank {rank}: the torn commit must error, not hang");
+        assert_eq!(*committed, 1, "rank {rank}: v2 must not commit");
+        assert_eq!(*v, 1, "rank {rank}: survivors restore the last full commit");
+    }
+}
+
+/// Torn commit: some ranks advanced their committed watermark, a straggler
+/// did not.  `agree_restore_version` must return min(committed), and every
+/// rank — including the ones already committed past it — must still hold
+/// the agreed version's data after the committed-floor GC.
+#[test]
+fn torn_commit_survivors_agree_on_min_and_retain_the_floor() {
+    use ulfm_ftgmres::checkpoint::{self, agree_restore_version, obj, CkptStore};
+
+    let n = 3;
+    let results = run_ranks(n, move |mut ctx| {
+        let mut comm = Comm::world(n, ctx.rank);
+        let mut store = CkptStore::new();
+        for v in 1..=2 {
+            let objs = vec![(obj::X, Blob::scalar(v as f64))];
+            checkpoint::checkpoint(&mut ctx, &mut comm, &mut store, &objs, v, 1).unwrap();
+        }
+        // Model a torn v3: ranks 0 and 1 stored + committed it, rank 2
+        // never advanced (e.g. it errored first in the agreement).
+        if ctx.rank != 2 {
+            store.put_local(obj::X, 3, Blob::scalar(3.0));
+            store.force_committed(3);
+            store.gc_committed();
+        }
+        let v = agree_restore_version(&mut ctx, &mut comm, &store).unwrap();
+        // min(committed) = 2, and version 2 must have survived the GC on
+        // the ranks whose own committed watermark is already 3.
+        let have = store.get_local_at_most(obj::X, v).map(|(got, b)| (got, b.f[0]));
+        (v, have)
+    });
+    for (rank, (v, have)) in results.iter().enumerate() {
+        assert_eq!(*v, 2, "rank {rank}");
+        assert_eq!(*have, Some((2, 2.0)), "rank {rank} must retain the agreed floor");
     }
 }
 

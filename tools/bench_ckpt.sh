@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Checkpoint-volume bench: mirror vs xor, full vs delta, on the FT-GMRES
+# workload.  Emits BENCH_ckpt.json at the repository root (bytes shipped
+# per commit + commit latency per leg) and fails if xor:4+delta does not
+# cut per-commit redundant bytes by at least 2x vs mirror:1.
+#
+# Usage: tools/bench_ckpt.sh [extra cargo bench args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+cargo bench --bench bench_ckpt "$@"
+echo "BENCH_ckpt.json:"
+cat BENCH_ckpt.json
