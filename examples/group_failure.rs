@@ -1,10 +1,12 @@
-//! Correlated group failures under the `xor:4` checkpoint scheme
-//! (DESIGN.md §8): one failure per parity group reconstructs in situ from
-//! the group's XOR stripe, while two failures inside *one* group before a
-//! re-encode destroy both the data and its only redundancy — the policy
-//! engine detects the unrecoverable loss and escalates to a global
+//! Correlated group failures under the parity checkpoint schemes
+//! (DESIGN.md §8–§9): one failure per parity group reconstructs in situ
+//! from the group's XOR stripe; two failures inside *one* group before a
+//! re-encode destroy both the data and its only `xor:4` redundancy — the
+//! policy engine detects the unrecoverable loss and escalates to a global
 //! restart, recording why, and the survivors still produce the right
-//! answer by rebuilding from scratch.
+//! answer by rebuilding from scratch.  The same correlated double fault
+//! under `rs2:4` (double parity, DESIGN.md §9) instead reconstructs via
+//! the two-erasure GF(2^8) solve and recovers in situ — no restart.
 //!
 //! ```sh
 //! cargo run --release --example group_failure
@@ -74,9 +76,28 @@ fn main() -> anyhow::Result<()> {
     );
     assert!(rep.converged, "the restarted run still converges to the right answer");
 
+    // --- Leg 3: the same double fault under rs2:4 -> in-situ recovery ---
+    println!("# leg 3: rs2:4, the same two-in-group burst (double parity recovers it)");
+    let mut cfg = xor_cfg();
+    cfg.solver.ckpt.scheme = Scheme::Rs2 { g: 4 };
+    let backend = Arc::new(NativeBackend::new(cfg.compute.clone()));
+    let plan = InjectionPlan::same_group_burst(cfg.p, 4, 1, 2, 25);
+    let rep = coordinator::run_custom(&cfg, backend, plan)?;
+    println!(
+        "tts={:.4}s iters={} relres={:.2e} converged={} failures={}",
+        rep.time_to_solution, rep.iterations, rep.final_relres, rep.converged, rep.failures
+    );
+    println!("{}", decision_table(&rep).to_text());
+    assert!(rep.converged);
+    assert!(
+        rep.decisions.iter().all(|d| d.decision != "global-restart"),
+        "rs2's two-erasure solve turns the forced restart into in-situ recovery"
+    );
+
     println!(
         "group-failure walkthrough passed: in-situ parity reconstruction for isolated \
-         losses, recorded global-restart escalation for correlated in-group losses"
+         losses, recorded global-restart escalation for correlated in-group losses under \
+         xor:4, and in-situ double-fault recovery under rs2:4"
     );
     Ok(())
 }

@@ -1,11 +1,13 @@
 //! Bench: checkpoint-volume and commit-latency comparison across the
-//! checkpoint-store redundancy schemes (DESIGN.md §8) — mirror vs xor,
-//! full vs delta — on the FT-GMRES workload, with a single-failure shrink
-//! leg per scheme to confirm recoveries restore the same committed state.
+//! checkpoint-store redundancy schemes (DESIGN.md §8–§9) — mirror vs xor
+//! vs rs2 double parity, full vs delta, compressed vs raw — on the
+//! FT-GMRES workload, with recovery legs per scheme to confirm recoveries
+//! restore the same committed state (including an rs2 same-group
+//! double-fault leg that must recover *without* a global restart).
 //!
 //! Emits `BENCH_ckpt.json` at the repository root (bytes shipped per
-//! commit + commit latency per leg) so the perf trajectory of the
-//! checkpoint path is tracked in-repo.
+//! commit, raw vs compressed, commit latency per leg) so the perf
+//! trajectory of the checkpoint path is tracked in-repo.
 //!
 //! `cargo bench --bench bench_ckpt` (offline environment: deterministic
 //! virtual-clock workload, criterion-style reporting by hand).
@@ -13,10 +15,13 @@
 mod bench_common;
 
 use std::fmt::Write as _;
+use std::sync::Arc;
 
+use ulfm_ftgmres::backend::native::NativeBackend;
 use ulfm_ftgmres::ckptstore::Scheme;
 use ulfm_ftgmres::config::RunConfig;
 use ulfm_ftgmres::coordinator;
+use ulfm_ftgmres::failure::InjectionPlan;
 use ulfm_ftgmres::metrics::RunReport;
 use ulfm_ftgmres::problem::Grid3D;
 use ulfm_ftgmres::recovery::Strategy;
@@ -25,77 +30,157 @@ struct LegResult {
     name: &'static str,
     scheme: String,
     delta: bool,
+    compress: bool,
     commits: usize,
     shipped_bytes: usize,
+    raw_bytes: usize,
     logical_bytes: usize,
     bytes_per_commit: f64,
     commit_latency_ms: f64,
     tts: f64,
     iterations: u64,
     converged: bool,
+    global_restarts: usize,
 }
 
-fn cfg_for(scheme: Scheme, delta: bool, failures: usize) -> RunConfig {
-    let mut cfg = RunConfig::default();
-    cfg.grid = Grid3D::cube(16);
-    cfg.p = 8;
-    cfg.strategy = Strategy::Shrink;
-    cfg.failures = failures;
-    cfg.solver.tol = 1e-10;
-    cfg.solver.m_inner = 10;
-    cfg.solver.m_outer = 20;
-    cfg.solver.max_cycles = 20;
-    cfg.solver.ckpt.scheme = scheme;
-    cfg.solver.ckpt.delta = delta;
-    cfg
+struct LegCfg {
+    scheme: Scheme,
+    delta: bool,
+    compress: bool,
+    /// Delta chunk size in KiB (None = default).
+    chunk_kib: Option<usize>,
+    /// Rebase/rotation period (None = default).
+    rebase_every: Option<u32>,
+    failures: usize,
 }
 
-fn run_leg(name: &'static str, scheme: Scheme, delta: bool, failures: usize) -> LegResult {
-    let cfg = cfg_for(scheme, delta, failures);
-    let rep: RunReport =
-        bench_common::timed(name, || coordinator::run(&cfg)).expect("leg completes");
+impl LegCfg {
+    fn new(scheme: Scheme, delta: bool) -> LegCfg {
+        LegCfg { scheme, delta, compress: false, chunk_kib: None, rebase_every: None, failures: 0 }
+    }
+
+    fn build(&self) -> RunConfig {
+        let mut cfg = RunConfig::default();
+        cfg.grid = Grid3D::cube(16);
+        cfg.p = 8;
+        cfg.strategy = Strategy::Shrink;
+        cfg.failures = self.failures;
+        cfg.solver.tol = 1e-10;
+        cfg.solver.m_inner = 10;
+        cfg.solver.m_outer = 20;
+        cfg.solver.max_cycles = 20;
+        cfg.solver.ckpt.scheme = self.scheme;
+        cfg.solver.ckpt.delta = self.delta;
+        cfg.solver.ckpt.compress = self.compress;
+        if let Some(kib) = self.chunk_kib {
+            cfg.solver.ckpt.chunk_kib = kib;
+        }
+        if let Some(re) = self.rebase_every {
+            cfg.solver.ckpt.rebase_every = re;
+        }
+        cfg
+    }
+}
+
+fn leg_result(name: &'static str, leg: &LegCfg, rep: RunReport) -> LegResult {
     assert!(rep.converged, "{name}: relres={}", rep.final_relres);
     let (shipped, logical, commits) = rep.ckpt_totals();
     assert!(commits > 0, "{name}: no commits recorded");
     LegResult {
         name,
-        scheme: scheme.name(),
-        delta,
+        scheme: leg.scheme.name(),
+        delta: leg.delta,
+        compress: leg.compress,
         commits,
         shipped_bytes: shipped,
+        raw_bytes: rep.ckpt_raw_bytes(),
         logical_bytes: logical,
         bytes_per_commit: shipped as f64 / commits as f64,
         commit_latency_ms: 1e3 * rep.max_phases.checkpoint / commits as f64,
         tts: rep.time_to_solution,
         iterations: rep.iterations,
         converged: rep.converged,
+        global_restarts: rep.decisions.iter().filter(|d| d.decision == "global-restart").count(),
     }
 }
 
+fn run_leg(name: &'static str, leg: LegCfg) -> LegResult {
+    let cfg = leg.build();
+    let rep: RunReport =
+        bench_common::timed(name, || coordinator::run(&cfg)).expect("leg completes");
+    leg_result(name, &leg, rep)
+}
+
+fn run_leg_with_plan(name: &'static str, leg: LegCfg, plan: InjectionPlan) -> LegResult {
+    let cfg = leg.build();
+    let backend = Arc::new(NativeBackend::new(cfg.compute.clone()));
+    let rep: RunReport = bench_common::timed(name, || {
+        coordinator::run_custom(&cfg, backend.clone(), plan.clone())
+    })
+    .expect("leg completes");
+    leg_result(name, &leg, rep)
+}
+
 fn main() -> anyhow::Result<()> {
-    // Failure-free volume legs: the steady-state checkpoint bill.
+    // The rs2-vs-xor comparison legs share identical delta/chunk/rebase
+    // parameters so the only variables are the scheme and the compression.
+    let c64 = |scheme: Scheme, compress: bool| LegCfg {
+        compress,
+        chunk_kib: Some(64),
+        rebase_every: Some(16),
+        ..LegCfg::new(scheme, true)
+    };
     let legs = vec![
-        run_leg("mirror1_full", Scheme::Mirror { k: 1 }, false, 0),
-        run_leg("mirror1_delta", Scheme::Mirror { k: 1 }, true, 0),
-        run_leg("mirror2_full", Scheme::Mirror { k: 2 }, false, 0),
-        run_leg("xor4_full", Scheme::Xor { g: 4 }, false, 0),
-        run_leg("xor4_delta", Scheme::Xor { g: 4 }, true, 0),
+        // Failure-free volume legs: the steady-state checkpoint bill.
+        run_leg("mirror1_full", LegCfg::new(Scheme::Mirror { k: 1 }, false)),
+        run_leg("mirror1_delta", LegCfg::new(Scheme::Mirror { k: 1 }, true)),
+        run_leg("mirror2_full", LegCfg::new(Scheme::Mirror { k: 2 }, false)),
+        run_leg("xor4_full", LegCfg::new(Scheme::Xor { g: 4 }, false)),
+        run_leg("xor4_delta", LegCfg::new(Scheme::Xor { g: 4 }, true)),
+        run_leg("rs2_4_full", LegCfg::new(Scheme::Rs2 { g: 4 }, false)),
+        run_leg("rs2_4_delta", LegCfg::new(Scheme::Rs2 { g: 4 }, true)),
+        // Matched-parameter comparison: uncompressed xor vs compressed rs2.
+        run_leg("xor4_delta_c64", c64(Scheme::Xor { g: 4 }, false)),
+        run_leg("rs2_4_delta_comp_c64", c64(Scheme::Rs2 { g: 4 }, true)),
         // Single-failure recovery legs: schemes must restore the same
         // committed state (identical post-recovery iteration history).
-        run_leg("mirror1_full_f1", Scheme::Mirror { k: 1 }, false, 1),
-        run_leg("xor4_delta_f1", Scheme::Xor { g: 4 }, true, 1),
+        run_leg(
+            "mirror1_full_f1",
+            LegCfg { failures: 1, ..LegCfg::new(Scheme::Mirror { k: 1 }, false) },
+        ),
+        run_leg(
+            "xor4_delta_f1",
+            LegCfg { failures: 1, ..LegCfg::new(Scheme::Xor { g: 4 }, true) },
+        ),
+        run_leg(
+            "rs2_4_delta_f1",
+            LegCfg { failures: 1, ..LegCfg::new(Scheme::Rs2 { g: 4 }, true) },
+        ),
+        // Same-group double fault: xor must escalate, rs2 must solve it.
+        run_leg_with_plan(
+            "xor4_doublefault",
+            LegCfg::new(Scheme::Xor { g: 4 }, false),
+            InjectionPlan::same_group_burst(8, 4, 0, 2, 25),
+        ),
+        run_leg_with_plan(
+            "rs2_4_doublefault",
+            LegCfg::new(Scheme::Rs2 { g: 4 }, false),
+            InjectionPlan::same_group_burst(8, 4, 0, 2, 25),
+        ),
     ];
 
     println!(
-        "{:<18} {:>10} {:>8} {:>14} {:>16} {:>14} {:>10}",
-        "leg", "scheme", "commits", "shipped[MB]", "bytes/commit[KB]", "latency[ms]", "tts[s]"
+        "{:<20} {:>10} {:>8} {:>12} {:>12} {:>16} {:>12} {:>9}",
+        "leg", "scheme", "commits", "raw[MB]", "shipped[MB]", "bytes/commit[KB]", "latency[ms]",
+        "tts[s]"
     );
     for l in &legs {
         println!(
-            "{:<18} {:>10} {:>8} {:>14.3} {:>16.1} {:>14.4} {:>10.4}",
+            "{:<20} {:>10} {:>8} {:>12.3} {:>12.3} {:>16.1} {:>12.4} {:>9.4}",
             l.name,
             l.scheme,
             l.commits,
+            l.raw_bytes as f64 / 1e6,
             l.shipped_bytes as f64 / 1e6,
             l.bytes_per_commit / 1e3,
             l.commit_latency_ms,
@@ -108,6 +193,13 @@ fn main() -> anyhow::Result<()> {
     let best = by_name("xor4_delta");
     let reduction = base.bytes_per_commit / best.bytes_per_commit;
     println!("\nper-commit redundant bytes: mirror:1 full / xor:4 delta = {reduction:.2}x");
+    let xor_c64 = by_name("xor4_delta_c64");
+    let rs2_comp = by_name("rs2_4_delta_comp_c64");
+    let comp_reduction = xor_c64.bytes_per_commit / rs2_comp.bytes_per_commit;
+    println!(
+        "per-commit redundant bytes: xor:4 delta (raw) / rs2:4 delta (compressed) = \
+         {comp_reduction:.2}x"
+    );
 
     // Acceptance: xor:4 + delta cuts per-commit redundant bytes shipped by
     // at least 2x vs mirror:1...
@@ -120,12 +212,46 @@ fn main() -> anyhow::Result<()> {
         by_name("mirror1_delta").shipped_bytes < base.shipped_bytes,
         "delta must reduce mirror shipping"
     );
-    // ...and recoveries under both schemes restore the same committed
-    // state: identical iteration history after the same kill schedule.
+    // ...compressed rs2 double parity ships FEWER bytes per commit than
+    // uncompressed single-parity xor at matched parameters — the extra
+    // stripe is cheaper than the chunk padding compression elides...
+    assert!(
+        rs2_comp.bytes_per_commit < xor_c64.bytes_per_commit,
+        "compressed rs2:4+delta must undercut uncompressed xor:4+delta: {:.1} vs {:.1} \
+         bytes/commit",
+        rs2_comp.bytes_per_commit,
+        xor_c64.bytes_per_commit
+    );
+    // ...compression accounting is sound: raw >= shipped, equal when off...
+    for l in &legs {
+        if l.compress {
+            assert!(l.raw_bytes > l.shipped_bytes, "{}: compression must save bytes", l.name);
+        } else {
+            assert_eq!(l.raw_bytes, l.shipped_bytes, "{}: raw == shipped when off", l.name);
+        }
+    }
+    // ...recoveries under all schemes restore the same committed state:
+    // identical iteration history after the same kill schedule...
     assert_eq!(
         by_name("mirror1_full_f1").iterations,
         by_name("xor4_delta_f1").iterations,
         "schemes must restore the same committed version"
+    );
+    assert_eq!(
+        by_name("mirror1_full_f1").iterations,
+        by_name("rs2_4_delta_f1").iterations,
+        "rs2 must restore the same committed version as mirror"
+    );
+    // ...and the same-group double fault escalates under xor but is solved
+    // in situ by rs2's double parity.
+    assert!(
+        by_name("xor4_doublefault").global_restarts > 0,
+        "xor:4 must record a global restart for a two-in-group loss"
+    );
+    assert_eq!(
+        by_name("rs2_4_doublefault").global_restarts,
+        0,
+        "rs2:4 must recover the two-in-group loss without a restart"
     );
 
     // Emit BENCH_ckpt.json at the repository root.
@@ -133,26 +259,31 @@ fn main() -> anyhow::Result<()> {
     json.push_str("{\n  \"bench\": \"ckpt\",\n  \"workload\": \"ftgmres p=8 cube16 m_inner=10\",\n");
     let _ = writeln!(
         json,
-        "  \"reduction_mirror1_full_over_xor4_delta\": {reduction:.4},\n  \"legs\": ["
+        "  \"reduction_mirror1_full_over_xor4_delta\": {reduction:.4},\n  \
+         \"reduction_xor4_delta_over_rs2_delta_comp\": {comp_reduction:.4},\n  \"legs\": ["
     );
     for (i, l) in legs.iter().enumerate() {
         let _ = writeln!(
             json,
-            "    {{\"name\": \"{}\", \"scheme\": \"{}\", \"delta\": {}, \"commits\": {}, \
-             \"shipped_bytes\": {}, \"logical_bytes\": {}, \"bytes_per_commit\": {:.1}, \
-             \"commit_latency_ms\": {:.4}, \"tts_virtual_s\": {:.4}, \"iterations\": {}, \
-             \"converged\": {}}}{}",
+            "    {{\"name\": \"{}\", \"scheme\": \"{}\", \"delta\": {}, \"compress\": {}, \
+             \"commits\": {}, \"shipped_bytes\": {}, \"raw_bytes\": {}, \"logical_bytes\": {}, \
+             \"bytes_per_commit\": {:.1}, \"commit_latency_ms\": {:.4}, \
+             \"tts_virtual_s\": {:.4}, \"iterations\": {}, \"converged\": {}, \
+             \"global_restarts\": {}}}{}",
             l.name,
             l.scheme,
             l.delta,
+            l.compress,
             l.commits,
             l.shipped_bytes,
+            l.raw_bytes,
             l.logical_bytes,
             l.bytes_per_commit,
             l.commit_latency_ms,
             l.tts,
             l.iterations,
             l.converged,
+            l.global_restarts,
             if i + 1 < legs.len() { "," } else { "" }
         );
     }

@@ -9,9 +9,42 @@
 //! that every survivor computes the identical estimate and the distributed
 //! policy decision stays consistent without extra communication.
 
+use crate::ckptstore::Scheme;
 use crate::netsim::{ComputeModel, NetParams};
 use crate::problem::laplacian::K;
 use crate::recovery::global_restart::GlobalCrModel;
+
+/// Shape of the checkpoint redundancy as the recovery estimates see it:
+/// which encode/reconstruct formulas apply (mirror fetch, xor gather+fold,
+/// or the rs2 double-stripe encode and two-erasure solve).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParityShape {
+    /// Buddy copies (also every parity scheme degraded below its
+    /// activation bound).
+    Mirror,
+    /// Single XOR stripe per group of `g`.
+    Xor {
+        /// Parity-group size.
+        g: usize,
+    },
+    /// Double parity (XOR + GF-weighted stripe) per group of `g`.
+    Rs2 {
+        /// Parity-group size.
+        g: usize,
+    },
+}
+
+impl ParityShape {
+    /// The shape the configured scheme takes at communicator size `n`
+    /// (inactive parity schemes degrade to mirror semantics).
+    pub fn from_scheme(scheme: &Scheme, n: usize) -> ParityShape {
+        match scheme {
+            Scheme::Xor { g } if scheme.parity_active(n) => ParityShape::Xor { g: *g },
+            Scheme::Rs2 { g } if scheme.parity_active(n) => ParityShape::Rs2 { g: *g },
+            _ => ParityShape::Mirror,
+        }
+    }
+}
 
 pub fn spmv(m: &ComputeModel, rows: usize, x_halo_len: usize) -> f64 {
     let bytes = (12 * rows * K + 8 * x_halo_len + 8 * rows) as f64;
@@ -72,12 +105,12 @@ pub struct RecoveryCostInputs {
     pub horizon_iters: u64,
     /// Inner iterations per outer step (sizes the per-iteration estimate).
     pub m_inner: usize,
-    /// Parity-group size when the checkpoint store runs `xor:<g>`
-    /// (`None` = mirror buddies).  Shifts the per-strategy estimates: xor
-    /// reconstruction gathers `g-1` member blobs plus a fold instead of one
-    /// buddy fetch, while re-encoding ships one parity contribution instead
-    /// of `k` full copies.
-    pub xor_group: Option<usize>,
+    /// Active redundancy shape ([`ParityShape::from_scheme`]).  Shifts the
+    /// per-strategy estimates: parity reconstruction gathers surviving
+    /// member blobs plus a fold (and, for rs2, the second stripe and the
+    /// GF solve) instead of one buddy fetch, while re-encoding ships parity
+    /// contributions instead of `k` full copies.
+    pub parity: ParityShape,
 }
 
 /// Estimated seconds for each recovery strategy, comparable against each
@@ -108,37 +141,60 @@ pub fn xor_fold_secs(m: &ComputeModel, bytes: f64) -> f64 {
     m.cost(bytes / 8.0, 3.0 * bytes)
 }
 
+/// Modeled seconds to GF(2^8)-multiply `bytes` of stripe data (byte-wise
+/// table lookups: ~2 ops and 3 streamed bytes per byte).
+pub fn gf_mul_secs(m: &ComputeModel, bytes: f64) -> f64 {
+    m.cost(2.0 * bytes, 3.0 * bytes)
+}
+
 /// Seconds to re-encode one rank's checkpoint redundancy after recovery:
-/// `k` full buddy copies under mirror, one parity contribution plus the
-/// stripe fold under xor.
+/// `k` full buddy copies under mirror; one parity contribution plus the
+/// stripe fold under xor; under rs2 additionally the amortized share of
+/// the combined Q forward (`state / g` per member) plus the weighted fold.
 pub fn reencode_secs(
     host: &ComputeModel,
     net: &NetParams,
     state_bytes: f64,
     buddy_k: usize,
-    xor_group: Option<usize>,
+    parity: ParityShape,
 ) -> f64 {
-    match xor_group {
-        None => buddy_k as f64 * inter_xfer(net, state_bytes),
-        Some(_) => inter_xfer(net, state_bytes) + xor_fold_secs(host, state_bytes),
+    match parity {
+        ParityShape::Mirror => buddy_k as f64 * inter_xfer(net, state_bytes),
+        ParityShape::Xor { .. } => {
+            inter_xfer(net, state_bytes) + xor_fold_secs(host, state_bytes)
+        }
+        ParityShape::Rs2 { g } => {
+            inter_xfer(net, state_bytes * (1.0 + 1.0 / g as f64))
+                + xor_fold_secs(host, 2.0 * state_bytes)
+                + gf_mul_secs(host, state_bytes)
+        }
     }
 }
 
 /// Seconds to rebuild one failed rank's state from the store: one buddy
 /// fetch under mirror; a gather of `g-1` surviving member blobs plus the
 /// parity fold under xor (the group-reconstruction the recovery reader
-/// runs), followed by the ship to wherever the state is needed.
+/// runs); under rs2 the gather additionally pulls up to two stripes and
+/// pays the GF-weighted fold and solve — followed by the ship to wherever
+/// the state is needed.
 pub fn reconstruct_secs(
     host: &ComputeModel,
     net: &NetParams,
     state_bytes: f64,
-    xor_group: Option<usize>,
+    parity: ParityShape,
 ) -> f64 {
-    match xor_group {
-        None => inter_xfer(net, state_bytes),
-        Some(g) => {
+    match parity {
+        ParityShape::Mirror => inter_xfer(net, state_bytes),
+        ParityShape::Xor { g } => {
             let gather = inter_xfer(net, (g.saturating_sub(1)) as f64 * state_bytes);
             gather + xor_fold_secs(host, g as f64 * state_bytes) + inter_xfer(net, state_bytes)
+        }
+        ParityShape::Rs2 { g } => {
+            let gather = inter_xfer(net, (g.saturating_sub(1) + 2) as f64 * state_bytes);
+            gather
+                + xor_fold_secs(host, (g + 2) as f64 * state_bytes)
+                + gf_mul_secs(host, 2.0 * state_bytes)
+                + inter_xfer(net, state_bytes)
         }
     }
 }
@@ -177,8 +233,8 @@ pub fn recovery_estimates(
         (inp.rows_per_rank * K) as f64,
         (24 * inp.rows_per_rank * K) as f64,
     );
-    let reestablish = reencode_secs(host, net, s_bytes, inp.buddy_k, inp.xor_group);
-    let fetch = reconstruct_secs(host, net, s_bytes, inp.xor_group);
+    let reestablish = reencode_secs(host, net, s_bytes, inp.buddy_k, inp.parity);
+    let fetch = reconstruct_secs(host, net, s_bytes, inp.parity);
 
     let substitute = fetch + rebuild + reestablish;
     let substitute_cold = substitute + net.cold_spawn_latency;
@@ -188,10 +244,10 @@ pub fn recovery_estimates(
         inter_xfer(net, 2.0 * s_bytes * inp.n_failed as f64 / survivors);
     // Shrink also rebuilds the failed blocks before redistributing them —
     // free under mirror relative to the redistribution it overlaps with,
-    // but a real gather+fold round under xor.
-    let shrink_fetch = match inp.xor_group {
-        None => 0.0,
-        Some(_) => fetch * inp.n_failed as f64,
+    // but a real gather+fold round under the parity schemes.
+    let shrink_fetch = match inp.parity {
+        ParityShape::Mirror => 0.0,
+        ParityShape::Xor { .. } | ParityShape::Rs2 { .. } => fetch * inp.n_failed as f64,
     };
     let capacity_loss = inner_iter_secs(host, inp.rows_per_rank, inp.m_inner)
         * inp.horizon_iters as f64
@@ -218,7 +274,7 @@ mod tests {
             buddy_k: 1,
             horizon_iters: 50,
             m_inner: 25,
-            xor_group: None,
+            parity: ParityShape::Mirror,
         }
     }
 
@@ -254,19 +310,38 @@ mod tests {
         // Reconstruction: gathering g-1 blobs + fold beats one buddy fetch
         // only in memory, never in time.
         let s = state_bytes_per_rank(&net, 4096, 51);
+        let (mir, xor4) = (ParityShape::Mirror, ParityShape::Xor { g: 4 });
         assert!(
-            reconstruct_secs(&host, &net, s, Some(4)) > reconstruct_secs(&host, &net, s, None)
+            reconstruct_secs(&host, &net, s, xor4) > reconstruct_secs(&host, &net, s, mir)
         );
         // Re-encode: one parity contribution vs k=2 full copies.
-        assert!(
-            reencode_secs(&host, &net, s, 2, Some(4)) < reencode_secs(&host, &net, s, 2, None)
-        );
+        assert!(reencode_secs(&host, &net, s, 2, xor4) < reencode_secs(&host, &net, s, 2, mir));
         // End-to-end: the xor substitute estimate carries the gather.
         let mut inp = inputs();
         let base = recovery_estimates(&host, &net, &GlobalCrModel::default(), &inp);
-        inp.xor_group = Some(4);
+        inp.parity = xor4;
         let xor = recovery_estimates(&host, &net, &GlobalCrModel::default(), &inp);
         assert!(xor.substitute > base.substitute, "{xor:?} vs {base:?}");
+    }
+
+    #[test]
+    fn rs2_costs_sit_between_xor_and_mirror_reencode_and_above_xor_solve() {
+        let host = ComputeModel::default();
+        let net = NetParams::default();
+        let s = state_bytes_per_rank(&net, 4096, 51);
+        let (mir, xor4, rs2) =
+            (ParityShape::Mirror, ParityShape::Xor { g: 4 }, ParityShape::Rs2 { g: 4 });
+        // Second stripe: re-encode costs more than xor (forward share +
+        // weighted fold) but still beats shipping k=2 full mirror copies.
+        assert!(reencode_secs(&host, &net, s, 2, rs2) > reencode_secs(&host, &net, s, 2, xor4));
+        assert!(reencode_secs(&host, &net, s, 2, rs2) < reencode_secs(&host, &net, s, 2, mir));
+        // Two-erasure solve: strictly costlier than the single-stripe fold.
+        assert!(reconstruct_secs(&host, &net, s, rs2) > reconstruct_secs(&host, &net, s, xor4));
+        // Shape derivation honors the activation bounds.
+        assert_eq!(ParityShape::from_scheme(&Scheme::Rs2 { g: 4 }, 8), rs2);
+        assert_eq!(ParityShape::from_scheme(&Scheme::Rs2 { g: 4 }, 5), mir);
+        assert_eq!(ParityShape::from_scheme(&Scheme::Xor { g: 4 }, 4), mir);
+        assert_eq!(ParityShape::from_scheme(&Scheme::Mirror { k: 2 }, 8), mir);
     }
 
     #[test]

@@ -3,10 +3,11 @@
 //! Each rank keeps its checkpointed objects in local memory plus whatever
 //! redundancy the configured scheme assigns it: full buddy copies of its
 //! wards' objects (`mirror:<k>`, the paper's "checkpoints are stored in the
-//! memory of neighboring nodes") and/or XOR parity stripes for the groups
-//! it holds (`xor:<g>`).  The coordinated commit protocol, the encoding
-//! schemes and the delta codec live in [`crate::ckptstore`]; this module
-//! owns the versioned object store and the buddy-ring placement math.
+//! memory of neighboring nodes") and/or parity stripes for the groups it
+//! holds (`xor:<g>`; the rotating `P`/`Q` stripe pairs of `rs2:<g>`).  The
+//! coordinated commit protocol, the encoding schemes, the delta codec and
+//! the wire compression live in [`crate::ckptstore`]; this module owns the
+//! versioned object store and the buddy-ring placement math.
 //!
 //! A checkpoint version is *committed* only after the fault-aware agreement
 //! at the end of [`crate::ckptstore::commit`] succeeds, so recovery always
@@ -38,10 +39,14 @@ pub mod obj {
 /// How many predecessor/successor buddies hold a copy of each object.
 pub const DEFAULT_BUDDIES: usize = 1;
 
-/// One XOR parity stripe: the word-wise XOR of every group member's packed
+/// One parity stripe: the word-wise fold of every group member's packed
 /// object (see [`crate::ckptstore::delta::pack_words`]), padded to the
 /// longest member, plus the per-member metadata needed to carve a single
-/// member back out of it.
+/// member back out of it.  Under `xor:<g>` this is the plain XOR of the
+/// members; under `rs2:<g>` the same struct also carries the
+/// GF(2^8)-weighted `Q` stripe on its own holder (which fold a given
+/// holder stores is determined by the rotation schedule,
+/// [`crate::ckptstore::scheme::rs2_holders`]).
 #[derive(Debug, Clone)]
 pub struct ParityStripe {
     /// World ranks of the group members, in comm-rank order at encode time.

@@ -1,20 +1,39 @@
-//! Chunk-level delta encoding for checkpoint shipping (DESIGN.md §8).
+//! Chunk-level delta encoding and the compressed wire format for
+//! checkpoint shipping (DESIGN.md §8–§9).
 //!
 //! Checkpointed objects are serialized to a flat array of 64-bit *words*
 //! (f64 bit patterns followed by i64 values) and compared chunk-by-chunk
 //! against the previous committed version; only changed chunks travel on
-//! the wire.  Three wire formats exist:
+//! the wire.  The uncompressed wire formats:
 //!
 //! * [`FMT_MDELTA`] — mirror delta: changed chunks carry the *new* words;
 //!   the buddy overlays them on its stored copy of the base version and
 //!   materializes a full blob, so the store always holds full objects and
 //!   recovery never chases delta chains.
-//! * [`FMT_XFULL`] — xor full contribution: the complete packed words of
-//!   one group member, folded into a fresh parity stripe (rebase commits).
-//! * [`FMT_XDELTA`] — xor delta contribution: changed chunks carry
+//! * [`FMT_XFULL`] — parity full contribution: the complete packed words
+//!   of one group member, folded into a fresh stripe (rebase commits).
+//! * [`FMT_XDELTA`] — parity delta contribution: changed chunks carry
 //!   `old ^ new`, which is exactly the parity-stripe update
 //!   (`stripe' = stripe ^ old ^ new`), so delta shipping and parity
 //!   encoding compose without the holder ever seeing the member's data.
+//!   The `rs2` scheme folds the *same* payload into its GF-weighted `Q`
+//!   stripe as `Q' = Q ^ c_k·(old ^ new)` ([`crate::ckptstore::gf256`]).
+//! * [`FMT_QFULL`] / [`FMT_QDELTA`] — the combined `Q`-stripe update the
+//!   `P` holder forwards to the `Q` holder under `rs2` (built in
+//!   [`crate::ckptstore`], format documented in DESIGN.md §9), so members
+//!   ship each contribution once instead of twice.
+//!
+//! **Compression** (`ckpt_compress`, CLI `--ckpt-compress`): every wire
+//! payload above — plus whole-blob reconstruction and spare-transfer
+//! traffic — can additionally be wrapped in a word-level
+//! run-length-encoded envelope ([`FMT_CWIRE`] for `i`-lane wires,
+//! [`FMT_CBLOB`] for full blobs; see [`rle_compress`] for the token
+//! grammar).  Zero runs dominate in practice: inside a changed chunk, the
+//! `old ^ new` representation zeroes every *unchanged* word, so
+//! compression recovers word-granular deltas from chunk-granular shipping
+//! regardless of `ckpt_chunk_kib`.  Compression is transport-only and
+//! loss-less — charged wire bytes drop, the decoded payload is
+//! bit-identical.
 //!
 //! Word-level XOR is bit-exact (no floating-point arithmetic touches the
 //! payloads), so reconstruction returns bit-identical objects.  Length
@@ -30,10 +49,20 @@ use crate::simmpi::Blob;
 
 /// Mirror delta wire format tag.
 pub const FMT_MDELTA: i64 = 2;
-/// Xor full-contribution wire format tag.
+/// Parity full-contribution wire format tag.
 pub const FMT_XFULL: i64 = 3;
-/// Xor delta-contribution wire format tag.
+/// Parity delta-contribution wire format tag.
 pub const FMT_XDELTA: i64 = 4;
+/// Compressed `i`-lane wire envelope tag (see [`compress_wire`]).
+pub const FMT_CWIRE: i64 = 5;
+/// Compressed whole-blob envelope tag (see [`compress_blob`]).
+pub const FMT_CBLOB: i64 = 6;
+/// `rs2` combined Q-stripe full forward (P holder -> Q holder).
+pub const FMT_QFULL: i64 = 7;
+/// `rs2` combined Q-stripe delta forward (P holder -> Q holder).
+pub const FMT_QDELTA: i64 = 8;
+/// `rs2` stripe transfer to the reconstruction leader (holder -> leader).
+pub const FMT_STRIPE: i64 = 9;
 
 /// Serialize a blob into 64-bit words: f64 bit patterns, then i64 values.
 pub fn pack_words(b: &Blob) -> Vec<i64> {
@@ -207,6 +236,199 @@ pub fn xor_full_wire(new: &Blob) -> Blob {
     i.push(new.i.len() as i64);
     i.extend_from_slice(&words);
     Blob { f: Vec::new(), i, wire: None }
+}
+
+// ---------------------------------------------------------------------
+// Word-level RLE compression (DESIGN.md §9)
+// ---------------------------------------------------------------------
+
+/// Zero-run token: `[0, n]` stands for `n` zero words.
+const TOK_ZERO: i64 = 0;
+/// Repeat token: `[1, n, w]` stands for `n` copies of word `w`.
+const TOK_RUN: i64 = 1;
+/// Literal token: `[2, n, w_0..w_{n-1}]` carries `n` verbatim words.
+const TOK_LIT: i64 = 2;
+
+/// Word-level run-length encode: zero runs of >= 3 words collapse to
+/// `[0, n]` (zero-run elision), non-zero runs of >= 4 to `[1, n, w]`,
+/// everything else rides in literal blocks `[2, n, words...]`.  The
+/// output is never more than `words.len() + 2` words (degenerate inputs
+/// fall back to one literal block), so compression can be applied
+/// unconditionally.
+///
+/// ```
+/// use ulfm_ftgmres::ckptstore::delta::{rle_compress, rle_decompress};
+/// let words = vec![9, 0, 0, 0, 0, 0, 0, 0, 7, 7, 7, 7, 7, 7, -1];
+/// let toks = rle_compress(&words);
+/// assert!(toks.len() < words.len()); // lit[9] + 7 zeros elided + run of 7s + lit[-1]
+/// assert_eq!(rle_decompress(&toks), words);
+/// ```
+pub fn rle_compress(words: &[i64]) -> Vec<i64> {
+    let n = words.len();
+    let mut out = Vec::new();
+    let mut lit_start = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let w = words[i];
+        let mut j = i + 1;
+        while j < n && words[j] == w {
+            j += 1;
+        }
+        let run = j - i;
+        let qualifies = if w == 0 { run >= 3 } else { run >= 4 };
+        if qualifies {
+            if lit_start < i {
+                out.push(TOK_LIT);
+                out.push((i - lit_start) as i64);
+                out.extend_from_slice(&words[lit_start..i]);
+            }
+            if w == 0 {
+                out.push(TOK_ZERO);
+                out.push(run as i64);
+            } else {
+                out.push(TOK_RUN);
+                out.push(run as i64);
+                out.push(w);
+            }
+            lit_start = j;
+        }
+        i = j;
+    }
+    if lit_start < n {
+        out.push(TOK_LIT);
+        out.push((n - lit_start) as i64);
+        out.extend_from_slice(&words[lit_start..n]);
+    }
+    if out.len() > n + 2 {
+        // Pathological run/literal interleaving: ship one literal block.
+        let mut lit = Vec::with_capacity(n + 2);
+        lit.push(TOK_LIT);
+        lit.push(n as i64);
+        lit.extend_from_slice(words);
+        return lit;
+    }
+    out
+}
+
+/// Inverse of [`rle_compress`].
+pub fn rle_decompress(tokens: &[i64]) -> Vec<i64> {
+    let mut out = Vec::new();
+    let mut k = 0usize;
+    while k < tokens.len() {
+        match tokens[k] {
+            TOK_ZERO => {
+                let n = tokens[k + 1] as usize;
+                out.resize(out.len() + n, 0);
+                k += 2;
+            }
+            TOK_RUN => {
+                let n = tokens[k + 1] as usize;
+                let w = tokens[k + 2];
+                out.resize(out.len() + n, w);
+                k += 3;
+            }
+            TOK_LIT => {
+                let n = tokens[k + 1] as usize;
+                out.extend_from_slice(&tokens[k + 2..k + 2 + n]);
+                k += 2 + n;
+            }
+            t => panic!("corrupt RLE stream: unknown token {t}"),
+        }
+    }
+    out
+}
+
+/// Wrap an `i`-lane wire payload in a compressed envelope:
+/// `[FMT_CWIRE, raw_words, tokens...]`.  Apply any charged-wire scaling
+/// *after* compressing (the commit paths do), so [`wire_factor`] of the
+/// shipped envelope still reports the original campaign scale factor.
+pub fn compress_wire(wire: &Blob) -> Blob {
+    debug_assert!(wire.f.is_empty(), "wire payloads ride the i lane only");
+    let toks = rle_compress(&wire.i);
+    let mut i = Vec::with_capacity(2 + toks.len());
+    i.push(FMT_CWIRE);
+    i.push(wire.i.len() as i64);
+    i.extend_from_slice(&toks);
+    Blob { f: Vec::new(), i, wire: None }
+}
+
+/// Unwrap a [`compress_wire`] envelope back to the inner `i`-lane wire.
+pub fn decompress_wire(wire: &Blob) -> Blob {
+    assert_eq!(wire.i[0], FMT_CWIRE, "not a compressed wire envelope");
+    let raw_len = wire.i[1] as usize;
+    let out = rle_decompress(&wire.i[2..]);
+    debug_assert_eq!(out.len(), raw_len, "compressed wire length mismatch");
+    Blob { f: Vec::new(), i: out, wire: None }
+}
+
+/// Compress a whole blob (reconstruction gathers, spare state transfers,
+/// full mirror copies): `f = [original wire factor]`,
+/// `i = [FMT_CBLOB, f_len, i_len, raw_words, tokens...]`, already scaled so
+/// the charged bytes are `compressed physical x original factor`.
+pub fn compress_blob(b: &Blob) -> Blob {
+    let factor = wire_factor(b);
+    let words = pack_words(b);
+    let toks = rle_compress(&words);
+    let mut i = Vec::with_capacity(4 + toks.len());
+    i.push(FMT_CBLOB);
+    i.push(b.f.len() as i64);
+    i.push(b.i.len() as i64);
+    i.push(words.len() as i64);
+    i.extend_from_slice(&toks);
+    Blob { f: vec![factor], i, wire: None }.scaled(factor)
+}
+
+/// Inverse of [`compress_blob`]: restores the original blob including its
+/// charged-wire scale factor.
+pub fn decompress_blob(wire: &Blob) -> Blob {
+    assert_eq!(wire.i[0], FMT_CBLOB, "not a compressed blob envelope");
+    let f_len = wire.i[1] as usize;
+    let i_len = wire.i[2] as usize;
+    let raw_len = wire.i[3] as usize;
+    let words = rle_decompress(&wire.i[4..]);
+    debug_assert_eq!(words.len(), raw_len, "compressed blob length mismatch");
+    let factor = wire.f[0];
+    unpack_words(&words, f_len, i_len).scaled(factor)
+}
+
+/// Parsed read-only view of a [`FMT_XDELTA`] contribution — header fields
+/// plus `(chunk index, chunk words)` slices — used by the `rs2` `P` holder
+/// to fold the same payload into the GF-weighted `Q` update.
+pub struct XDeltaView<'a> {
+    /// Version the member diffed against.
+    pub base_version: Version,
+    /// New f-lane length of the member's object.
+    pub f_len: usize,
+    /// New i-lane length.
+    pub i_len: usize,
+    /// Chunk size in words.
+    pub chunk_words: usize,
+    /// Padded comparison length in words.
+    pub total: usize,
+    /// Changed chunks: `(chunk index, chunk words)`.
+    pub chunks: Vec<(usize, &'a [i64])>,
+}
+
+/// Parse a [`FMT_XDELTA`] wire into an [`XDeltaView`] without copying the
+/// chunk payloads.
+pub fn xdelta_view(wire: &Blob) -> XDeltaView<'_> {
+    assert_eq!(wire.i[0], FMT_XDELTA, "not an xor delta contribution");
+    let base_version = wire.i[1];
+    let f_len = wire.i[2] as usize;
+    let i_len = wire.i[3] as usize;
+    let cw = wire.i[4] as usize;
+    let total = wire.i[5] as usize;
+    let n_chunks = wire.i[6] as usize;
+    let mut off = 7 + n_chunks;
+    let mut chunks = Vec::with_capacity(n_chunks);
+    for ci in 0..n_chunks {
+        let c = wire.i[7 + ci] as usize;
+        let lo = c * cw;
+        let hi = total.min(lo + cw);
+        chunks.push((c, &wire.i[off..off + (hi - lo)]));
+        off += hi - lo;
+    }
+    XDeltaView { base_version, f_len, i_len, chunk_words: cw, total, chunks }
 }
 
 /// Apply a mirror delta to the receiver's materialized `base` copy.
@@ -383,6 +605,80 @@ mod tests {
         let rec = unpack_words(&acc, f_len, i_len);
         assert_eq!(rec.f, m0b.f);
         assert_eq!(rec.i, m0b.i);
+    }
+
+    #[test]
+    fn rle_roundtrips_and_bounds() {
+        let cases: Vec<Vec<i64>> = vec![
+            vec![],
+            vec![0; 100],
+            vec![42; 100],
+            (0..100).collect(),
+            vec![1, 0, 0, 0, 0, 2, 2, 2, 2, 2, 3, 0, 0, 7],
+            vec![0, 0],          // short zero run stays literal
+            vec![5, 5, 5],       // short repeat stays literal
+        ];
+        for words in cases {
+            let toks = rle_compress(&words);
+            assert!(toks.len() <= words.len() + 2, "bound violated for {words:?}");
+            assert_eq!(rle_decompress(&toks), words, "roundtrip for {words:?}");
+        }
+        // Zero-heavy input compresses hard.
+        let mut sparse = vec![0i64; 4096];
+        sparse[100] = 9;
+        sparse[3000] = -9;
+        let toks = rle_compress(&sparse);
+        assert!(toks.len() < 20, "sparse vector must collapse: {} tokens", toks.len());
+    }
+
+    #[test]
+    fn compressed_wire_envelope_roundtrips_with_scaling() {
+        let base = blob((0..300).map(|i| (i as f64).cos()).collect(), vec![4]);
+        let mut new = base.clone();
+        new.f[7] = 1.25;
+        let wire = xor_delta_wire(&base, &new, 3, 64);
+        let comp = compress_wire(&wire).scaled(36.0);
+        // One changed word inside a 64-word chunk: 63 zeros elide.
+        assert!(comp.bytes() < wire.clone().scaled(36.0).bytes());
+        assert!((wire_factor(&comp) - 36.0).abs() < 1e-9);
+        let inner = decompress_wire(&comp);
+        assert_eq!(inner.i, wire.i);
+    }
+
+    #[test]
+    fn compressed_blob_envelope_preserves_bits_and_factor() {
+        let b = blob(vec![0.0, 1.5, f64::NAN, 0.0, 0.0, 0.0, 0.0, 0.0], vec![-3, 0, 0, 0])
+            .scaled(2.0);
+        let comp = compress_blob(&b);
+        let out = decompress_blob(&comp);
+        assert_eq!(out.i, b.i);
+        for (x, y) in out.f.iter().zip(&b.f) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(out.bytes(), b.bytes(), "charged size survives the roundtrip");
+    }
+
+    #[test]
+    fn xdelta_view_matches_fold() {
+        let base = blob((0..64).map(|i| i as f64).collect(), vec![1]);
+        let mut new = base.clone();
+        new.f[3] = -1.0;
+        new.f[60] = 7.5;
+        let wire = xor_delta_wire(&base, &new, 9, 16);
+        let view = xdelta_view(&wire);
+        assert_eq!(view.base_version, 9);
+        assert_eq!((view.f_len, view.i_len), (64, 1));
+        assert_eq!(view.chunk_words, 16);
+        assert_eq!(view.chunks.len(), 2);
+        // Reassembling the view's chunks reproduces fold_xor_delta exactly.
+        let mut from_view = vec![0i64; view.total];
+        for (c, words) in &view.chunks {
+            let lo = c * view.chunk_words;
+            from_view[lo..lo + words.len()].copy_from_slice(words);
+        }
+        let mut from_fold: Vec<i64> = Vec::new();
+        fold_xor_delta(&mut from_fold, &wire);
+        assert_eq!(from_view, from_fold);
     }
 
     #[test]

@@ -1,0 +1,261 @@
+//! GF(2^8) arithmetic for the second parity stripe of the `rs2:<g>`
+//! checkpoint scheme (DESIGN.md §9).
+//!
+//! The `rs2` scheme stores two *independent* stripes per parity group: the
+//! plain XOR stripe `P = ⊕ m_k` it shares with `xor:<g>`, and a
+//! RAID-6-style weighted stripe `Q = ⊕ c_k · m_k`, where `c_k = α^k` is the
+//! [`coef`] of member slot `k` and `·` is multiplication in GF(2^8)
+//! (polynomial `x^8 + x^4 + x^3 + x^2 + 1`, i.e. `0x11d`, generator
+//! `α = 2`).  Addition in GF(2^8) is XOR, so:
+//!
+//! * the same member contribution updates both stripes — `Q' = Q ⊕ c_k·Δ_k`
+//!   because multiplication distributes over XOR, which is what lets delta
+//!   shipping, compression and double parity compose;
+//! * losing any *two* members leaves a 2x2 linear system over GF(2^8) with
+//!   matrix `[[1, 1], [c_i, c_j]]`, whose determinant `c_i ⊕ c_j` is
+//!   non-zero whenever `i != j` (powers of the generator are distinct below
+//!   order 255) — so every member+member double loss is solvable, see
+//!   [`solve_two_erasures`].
+//!
+//! All operations act byte-wise on the packed 64-bit checkpoint words
+//! ([`crate::ckptstore::delta::pack_words`]); no floating-point arithmetic
+//! ever touches the payloads, so reconstruction stays bit-exact.
+
+/// The RAID-6 field polynomial (x^8 + x^4 + x^3 + x^2 + 1).
+const POLY: u16 = 0x11d;
+
+const fn build_exp() -> [u8; 512] {
+    let mut exp = [0u8; 512];
+    let mut x: u16 = 1;
+    let mut i = 0;
+    while i < 255 {
+        exp[i] = x as u8;
+        x <<= 1;
+        if x & 0x100 != 0 {
+            x ^= POLY;
+        }
+        i += 1;
+    }
+    // Mirror the cycle so `EXP[log_a + log_b]` never needs a modulo.
+    let mut j = 0;
+    while j < 257 {
+        exp[255 + j] = exp[j % 255];
+        j += 1;
+    }
+    exp
+}
+
+const fn build_log(exp: &[u8; 512]) -> [u8; 256] {
+    let mut log = [0u8; 256];
+    let mut i = 0;
+    while i < 255 {
+        log[exp[i] as usize] = i as u8;
+        i += 1;
+    }
+    log
+}
+
+/// `EXP[i] = α^i` (doubled so products of logs index without a modulo).
+const EXP: [u8; 512] = build_exp();
+/// `LOG[α^i] = i`; `LOG[0]` is unused (0 has no logarithm).
+const LOG: [u8; 256] = build_log(&EXP);
+
+/// Multiply in GF(2^8).
+///
+/// ```
+/// use ulfm_ftgmres::ckptstore::gf256;
+/// assert_eq!(gf256::gmul(7, 1), 7);
+/// assert_eq!(gf256::gmul(0, 0x53), 0);
+/// // gdiv inverts gmul for any non-zero divisor.
+/// assert_eq!(gf256::gdiv(gf256::gmul(0x57, 0x13), 0x13), 0x57);
+/// ```
+pub fn gmul(a: u8, b: u8) -> u8 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    EXP[LOG[a as usize] as usize + LOG[b as usize] as usize]
+}
+
+/// Divide in GF(2^8) (`b` must be non-zero).
+pub fn gdiv(a: u8, b: u8) -> u8 {
+    assert_ne!(b, 0, "GF(2^8) division by zero");
+    if a == 0 {
+        return 0;
+    }
+    EXP[255 + LOG[a as usize] as usize - LOG[b as usize] as usize]
+}
+
+/// Weight of member slot `k` in the `Q` stripe: `α^k`.  Distinct (and
+/// hence solvable against any other slot) for every `k < 255`, far above
+/// any practical parity-group size.
+pub fn coef(slot: usize) -> u8 {
+    debug_assert!(slot < 255, "rs2 group size limited to 255 slots");
+    EXP[slot]
+}
+
+/// Multiply one packed 64-bit checkpoint word byte-wise by `c`.
+pub fn mul_word(w: i64, c: u8) -> i64 {
+    if c == 1 {
+        return w;
+    }
+    let bytes = w.to_le_bytes();
+    let mut out = [0u8; 8];
+    for (o, b) in out.iter_mut().zip(bytes) {
+        *o = gmul(b, c);
+    }
+    i64::from_le_bytes(out)
+}
+
+/// XOR `c · words` into `acc`, growing `acc` with zeros as needed — the `Q`
+/// analogue of [`crate::ckptstore::delta::xor_into`].
+pub fn mul_xor_into(acc: &mut Vec<i64>, words: &[i64], c: u8) {
+    if acc.len() < words.len() {
+        acc.resize(words.len(), 0);
+    }
+    for (a, w) in acc.iter_mut().zip(words.iter()) {
+        *a ^= mul_word(*w, c);
+    }
+}
+
+/// Divide every word of `words` byte-wise by `c` in place (single-erasure
+/// solve against the `Q` stripe alone: `m_f = (Q ⊕ Σ c_k·m_k) / c_f`).
+pub fn div_words(words: &mut [i64], c: u8) {
+    if c == 1 {
+        return;
+    }
+    let inv = gdiv(1, c);
+    for w in words.iter_mut() {
+        *w = mul_word(*w, inv);
+    }
+}
+
+/// Solve the two-erasure system for member slots `i` and `j` (`c_i = coef(i)`,
+/// `c_j = coef(j)`, `i != j`) given the survivor-folded stripes
+/// `pp = m_i ⊕ m_j` and `qq = c_i·m_i ⊕ c_j·m_j`.  Returns `(m_i, m_j)`.
+///
+/// Derivation (all arithmetic in GF(2^8), per byte):
+/// `c_j·pp ⊕ qq = (c_i ⊕ c_j)·m_i`, hence `m_i = (c_j·pp ⊕ qq)/(c_i ⊕ c_j)`
+/// and `m_j = pp ⊕ m_i`.
+pub fn solve_two_erasures(pp: &[i64], qq: &[i64], ci: u8, cj: u8) -> (Vec<i64>, Vec<i64>) {
+    assert_ne!(ci, cj, "two-erasure solve needs distinct member weights");
+    let denom = ci ^ cj;
+    let n = pp.len().max(qq.len());
+    let at = |s: &[i64], k: usize| if k < s.len() { s[k] } else { 0 };
+    let mut mi = Vec::with_capacity(n);
+    let mut mj = Vec::with_capacity(n);
+    for k in 0..n {
+        let pb = at(pp, k).to_le_bytes();
+        let qb = at(qq, k).to_le_bytes();
+        let mut bi = [0u8; 8];
+        let mut bj = [0u8; 8];
+        for t in 0..8 {
+            let x = gdiv(gmul(cj, pb[t]) ^ qb[t], denom);
+            bi[t] = x;
+            bj[t] = pb[t] ^ x;
+        }
+        mi.push(i64::from_le_bytes(bi));
+        mj.push(i64::from_le_bytes(bj));
+    }
+    (mi, mj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic dependency-free PRNG for the algebra tests.
+    struct Lcg(u64);
+    impl Lcg {
+        fn next(&mut self) -> u64 {
+            self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            self.0
+        }
+    }
+
+    #[test]
+    fn field_axioms_on_samples() {
+        let mut rng = Lcg(7);
+        for _ in 0..200 {
+            let a = (rng.next() >> 24) as u8;
+            let b = (rng.next() >> 24) as u8;
+            let c = (rng.next() >> 24) as u8;
+            // Commutativity and distributivity over XOR (= field addition).
+            assert_eq!(gmul(a, b), gmul(b, a));
+            assert_eq!(gmul(a, b ^ c), gmul(a, b) ^ gmul(a, c));
+            // Multiplicative inverses.
+            if b != 0 {
+                assert_eq!(gdiv(gmul(a, b), b), a);
+            }
+            assert_eq!(gmul(a, 1), a);
+            assert_eq!(gmul(a, 0), 0);
+        }
+    }
+
+    #[test]
+    fn coefs_are_distinct() {
+        let mut seen = [false; 256];
+        for slot in 0..255 {
+            let c = coef(slot);
+            assert_ne!(c, 0);
+            assert!(!seen[c as usize], "coef({slot}) repeats");
+            seen[c as usize] = true;
+        }
+        assert_eq!(coef(0), 1);
+        assert_eq!(coef(1), 2);
+    }
+
+    #[test]
+    fn mul_word_is_bytewise_linear() {
+        let mut rng = Lcg(99);
+        for _ in 0..50 {
+            let w = rng.next() as i64;
+            let v = rng.next() as i64;
+            let c = (rng.next() >> 40) as u8;
+            assert_eq!(mul_word(w ^ v, c), mul_word(w, c) ^ mul_word(v, c));
+            assert_eq!(mul_word(w, 1), w);
+            assert_eq!(mul_word(w, 0), 0);
+        }
+    }
+
+    #[test]
+    fn two_erasure_solve_recovers_members() {
+        let mut rng = Lcg(2024);
+        // Four members of differing lengths, slots 0..4.
+        let members: Vec<Vec<i64>> = (0..4)
+            .map(|k| (0..10 + 3 * k).map(|_| rng.next() as i64).collect())
+            .collect();
+        let mut pp: Vec<i64> = Vec::new();
+        let mut qq: Vec<i64> = Vec::new();
+        for (k, m) in members.iter().enumerate() {
+            crate::ckptstore::delta::xor_into(&mut pp, m);
+            mul_xor_into(&mut qq, m, coef(k));
+        }
+        // Erase slots 1 and 3: fold the survivors back out of both stripes.
+        for k in [0usize, 2] {
+            crate::ckptstore::delta::xor_into(&mut pp, &members[k]);
+            mul_xor_into(&mut qq, &members[k], coef(k));
+        }
+        let (m1, m3) = solve_two_erasures(&pp, &qq, coef(1), coef(3));
+        assert_eq!(&m1[..members[1].len()], &members[1][..]);
+        assert_eq!(&m3[..members[3].len()], &members[3][..]);
+        // Padding beyond the true lengths is zero.
+        assert!(m1[members[1].len()..].iter().all(|&w| w == 0));
+    }
+
+    #[test]
+    fn single_erasure_via_q_alone() {
+        let mut rng = Lcg(5);
+        let members: Vec<Vec<i64>> =
+            (0..3).map(|_| (0..16).map(|_| rng.next() as i64).collect()).collect();
+        let mut qq: Vec<i64> = Vec::new();
+        for (k, m) in members.iter().enumerate() {
+            mul_xor_into(&mut qq, m, coef(k));
+        }
+        // Lose slot 2; fold survivors 0 and 1 back out, divide by coef(2).
+        for k in [0usize, 1] {
+            mul_xor_into(&mut qq, &members[k], coef(k));
+        }
+        div_words(&mut qq, coef(2));
+        assert_eq!(&qq[..16], &members[2][..]);
+    }
+}

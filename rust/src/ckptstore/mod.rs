@@ -1,39 +1,80 @@
-//! Erasure-coded in-memory checkpoint subsystem (DESIGN.md §8).
+//! Erasure-coded in-memory checkpoint subsystem (DESIGN.md §8–§9).
 //!
-//! Replaces the flat ship-`k`-full-copies buddy scheme with three layers:
+//! Replaces the flat ship-`k`-full-copies buddy scheme with four layers:
 //!
 //! * an **encoding layer** ([`scheme`]) — pluggable redundancy:
-//!   `mirror:<k>` (the paper's buddy replication, default) and `xor:<g>`
+//!   `mirror:<k>` (the paper's buddy replication, default), `xor:<g>`
 //!   (parity groups of `g` ranks; one XOR stripe per group per object on a
 //!   holder outside the group, cutting redundant memory from `k x state`
-//!   to `state / g`);
+//!   to `state / g`), and `rs2:<g>` (RAID-6-style *double* parity: an XOR
+//!   `P` stripe plus a GF(2^8)-weighted `Q` stripe ([`gf256`]) on two
+//!   rotating holders outside the group, so any two in-group losses
+//!   reconstruct in situ);
 //! * a **delta layer** ([`delta`]) — dynamic objects ship chunk-level
 //!   diffs against the last committed version with periodic full rebases
 //!   (`ckpt_delta`, `ckpt_chunk_kib`, `ckpt_rebase_every`), cutting bytes
 //!   shipped per commit;
+//! * a **compression layer** ([`delta::rle_compress`]; `ckpt_compress`,
+//!   CLI `--ckpt-compress`) — word-level RLE with zero-run elision over
+//!   every buddy, parity and reconstruction payload; transport-only and
+//!   loss-less, with per-commit raw-vs-compressed byte metrics;
 //! * a **recovery reader** ([`reconstruct_failed`]) — rebuilds a failed
 //!   rank's objects from surviving group members plus parity (or serves
-//!   mirror buddy copies), shared by shrink and substitute recovery, and a
-//!   loss assessor ([`assess_loss`]) that detects *unrecoverable* losses
-//!   (two failures in one parity group before a re-encode, a group member
-//!   plus its holder, or a rank plus all its mirror buddies) so the policy
-//!   engine can escalate to a global restart instead of wedging.
+//!   mirror buddy copies), shared by shrink, substitute and the
+//!   global-restart assessment, and a loss assessor ([`assess_loss`])
+//!   that detects *unrecoverable* losses so the policy engine can
+//!   escalate to a global restart instead of wedging.
 //!
-//! Group-failure escalation matrix (`xor:<g>`, between re-encodes):
+//! # Commit protocol
 //!
-//! | Loss pattern                    | Outcome                             |
-//! |---------------------------------|-------------------------------------|
-//! | 1 member of a group             | in-situ reconstruct via parity      |
-//! | holder only                     | nothing lost; stripe rebuilt at next commit |
-//! | ≥ 2 members of one group        | escalate: `GlobalRestart`           |
-//! | 1 member + that group's holder  | escalate: `GlobalRestart`           |
+//! [`commit`] runs at a quiescent point on every member of the
+//! communicator: each rank stores its objects locally, ships the
+//! scheme-specific redundancy (full copies, deltas, or parity
+//! contributions), materializes/folds what it holds for others, and then
+//! seals the version with a fault-aware agreement — a failure mid-commit
+//! leaves the previous committed version intact on every rank.  Under
+//! `rs2`, members ship one contribution to the epoch's `P` holder, which
+//! folds the XOR stripe, builds the combined GF-weighted `Q` update from
+//! the same payloads, and forwards it to the `Q` holder (one extra wire
+//! per group instead of a second full contribution per member).  Holder
+//! pairs advance one rotation slot per rebase epoch
+//! ([`CkptCfg::rot_index`], [`scheme::rs2_holders`]); commits at epoch
+//! boundaries re-encode *every* object — including the statics — so all
+//! stripes for a restorable version live on that version's holder pair.
 //!
-//! Every commit is still sealed by the fault-aware agreement, so a failure
-//! mid-commit leaves the previous committed version intact, and commit
-//! metrics ([`crate::metrics::CkptRecord`]) record bytes shipped and
-//! encode time per commit for the checkpoint-overhead figures.
+//! # Recovery-reader contract
+//!
+//! Every *survivor* of the failed communicator calls
+//! [`reconstruct_failed`] with identical arguments after the loss was
+//! assessed [`LossCheck::Recoverable`]; the reader materializes each
+//! failed rank's objects on the rank [`Scheme::server_cr_for`] designates
+//! (mirror buddy, xor holder, or the rs2 reconstruction leader, which
+//! gathers survivor blobs plus the needed stripes and runs the one- or
+//! two-erasure solve), after which the ordinary `get_remote_at_most`
+//! serving paths work unchanged for shrink, substitute and global-restart
+//! recovery alike.
+//!
+//! Group-failure escalation matrix (between re-encodes):
+//!
+//! | Loss pattern                    | `xor:<g>`            | `rs2:<g>` |
+//! |---------------------------------|----------------------|-----------|
+//! | 1 member of a group             | reconstruct (stripe) | reconstruct (`P` or `Q`) |
+//! | holder(s) only                  | nothing lost; stripe re-homed at next commit | same |
+//! | 2 members of one group          | escalate: `GlobalRestart` | reconstruct (two-erasure solve) |
+//! | 1 member + a stripe holder      | escalate: `GlobalRestart` | reconstruct (surviving stripe) |
+//! | 3+ members (or 2 + both holders)| escalate             | escalate: `GlobalRestart` |
+//!
+//! Holder-only losses are scheme-generic: a failed rank that merely held
+//! some *other* group's stripe never blocks in-situ recovery — its own
+//! objects are covered by its own group's redundancy, and the orphaned
+//! stripe is re-homed by the next (establishment) commit's re-encode.
+//!
+//! Commit metrics ([`crate::metrics::CkptRecord`]) record logical, raw and
+//! compressed bytes shipped, the rotation index, and encode time per
+//! commit for the checkpoint-overhead figures.
 
 pub mod delta;
+pub mod gf256;
 pub mod scheme;
 
 pub use scheme::Scheme;
@@ -45,8 +86,8 @@ use crate::metrics::{CkptRecord, Phase};
 use crate::simmpi::{tags, Blob, Comm, Ctx, MpiResult, Tag, WorldRank};
 
 /// Checkpoint-store configuration (config keys `ckpt_scheme`, `ckpt_delta`,
-/// `ckpt_chunk_kib`, `ckpt_rebase_every`; CLI `--ckpt-scheme` /
-/// `--ckpt-delta`).
+/// `ckpt_chunk_kib`, `ckpt_rebase_every`, `ckpt_compress`; CLI
+/// `--ckpt-scheme` / `--ckpt-delta` / `--ckpt-compress`).
 #[derive(Debug, Clone)]
 pub struct CkptCfg {
     /// Redundancy scheme.
@@ -56,8 +97,12 @@ pub struct CkptCfg {
     pub delta: bool,
     /// Delta chunk size in KiB (1 KiB = 128 words).
     pub chunk_kib: usize,
-    /// Versions between full rebases when the delta layer is on.
+    /// Versions between full rebases when the delta layer is on; also the
+    /// `rs2` holder-rotation period (see [`CkptCfg::rot_index`]).
     pub rebase_every: u32,
+    /// Compress every redundancy payload with word-level RLE
+    /// ([`delta::rle_compress`]) before it goes on the wire.
+    pub compress: bool,
     /// Modeled encode/fold throughput (bytes/s) for XOR folding and delta
     /// scans — a deliberately simple memory-bandwidth-style knob so every
     /// rank charges identical, deterministic virtual time.
@@ -71,6 +116,7 @@ impl Default for CkptCfg {
             delta: false,
             chunk_kib: 4,
             rebase_every: 8,
+            compress: false,
             encode_bytes_per_sec: 4e9,
         }
     }
@@ -96,6 +142,33 @@ impl CkptCfg {
             && version > 0
             && version % self.rebase_every.max(1) as i64 != 0
     }
+
+    /// `rs2` holder-rotation index of `version`: one slot per rebase
+    /// epoch, i.e. `version / rebase_every`.
+    ///
+    /// Rotating per *epoch* rather than per version is deliberate: a delta
+    /// contribution folds into the stripe at `version - 1`, which must
+    /// therefore live on the *same* holder — and `use_delta` is false at
+    /// every epoch boundary (`version % rebase_every == 0`), so each
+    /// rotation step coincides with a full re-encode that cleanly hands
+    /// the stripes to the incoming holder pair.  Every rank derives the
+    /// same index from the version alone, so the recovery reader and the
+    /// loss assessor agree on the holder pair with no negotiation.
+    pub fn rot_index(&self, version: Version) -> u64 {
+        (version / self.rebase_every.max(1) as i64).max(0) as u64
+    }
+
+    /// Whether commit `version` must re-encode the *static* objects too
+    /// (`rs2` only): at every rotation boundary the incoming holder pair
+    /// starts with no stripes at all, so statics — which otherwise ship
+    /// only at establishment — are re-encoded along with the rebase.  This
+    /// is what keeps *all* of a restorable version's stripes on that
+    /// version's holder pair (one rotation index per restore, see
+    /// [`assess_loss`]).
+    pub fn static_reencode_due(&self, version: Version) -> bool {
+        matches!(self.scheme, Scheme::Rs2 { .. })
+            && version % self.rebase_every.max(1) as i64 == 0
+    }
 }
 
 /// Buddy-copy shipping tag (mirror scheme), object `id` to buddy distance
@@ -108,8 +181,24 @@ fn parity_tag(id: ObjId) -> Tag {
     tags::CKPT_PARITY_BASE + id
 }
 
+/// rs2 combined Q-stripe forward (P holder -> Q holder) for one object of
+/// one parity group.
+fn qpar_tag(id: ObjId, grp: usize) -> Tag {
+    tags::CKPT_QPAR_BASE + id * 1024 + grp as u32
+}
+
 fn recon_tag(id: ObjId, failed_cr: usize) -> Tag {
     tags::RECON_BASE + id * 4096 + failed_cr as u32
+}
+
+/// rs2 reconstruction gather (surviving member -> leader).
+fn recon_member_tag(id: ObjId, grp: usize) -> Tag {
+    tags::RECON_MEMBER_BASE + id * 1024 + grp as u32
+}
+
+/// rs2 stripe transfer (holder -> leader); `which` is 0 for P, 1 for Q.
+fn recon_stripe_tag(id: ObjId, grp: usize, which: usize) -> Tag {
+    tags::RECON_STRIPE_BASE + id * 2048 + (grp as u32) * 2 + which as u32
 }
 
 /// Charge deterministic encode/fold time for touching `words` 64-bit words.
@@ -161,19 +250,26 @@ fn commit_inner(
     let n = comm.size();
     let use_delta = cfg.use_delta(version, fresh);
     let mut shipped = 0usize;
+    let mut raw = 0usize;
     let mut encode_secs = 0.0f64;
     let logical: usize = objs.iter().map(|(_, b)| b.bytes()).sum();
 
-    let result = if cfg.scheme.xor_active(n) {
-        let Scheme::Xor { g } = cfg.scheme else { unreachable!() };
-        exchange_xor(
-            ctx, comm, store, objs, version, cfg, g, use_delta, &mut shipped, &mut encode_secs,
-        )
-    } else {
-        let k = cfg.scheme.mirror_k().min(n.saturating_sub(1));
-        exchange_mirror(
-            ctx, comm, store, objs, version, cfg, k, use_delta, &mut shipped, &mut encode_secs,
-        )
+    let result = match cfg.scheme {
+        Scheme::Xor { g } if cfg.scheme.parity_active(n) => exchange_xor(
+            ctx, comm, store, objs, version, cfg, g, use_delta, &mut shipped, &mut raw,
+            &mut encode_secs,
+        ),
+        Scheme::Rs2 { g } if cfg.scheme.parity_active(n) => exchange_rs2(
+            ctx, comm, store, objs, version, cfg, g, use_delta, &mut shipped, &mut raw,
+            &mut encode_secs,
+        ),
+        _ => {
+            let k = cfg.scheme.mirror_k().min(n.saturating_sub(1));
+            exchange_mirror(
+                ctx, comm, store, objs, version, cfg, k, use_delta, &mut shipped, &mut raw,
+                &mut encode_secs,
+            )
+        }
     };
     result?;
 
@@ -184,19 +280,27 @@ fn commit_inner(
         store.note_fresh(version);
     }
     store.gc_committed();
+    let rotation = if matches!(cfg.scheme, Scheme::Rs2 { .. }) && cfg.scheme.parity_active(n) {
+        cfg.rot_index(version) as i64
+    } else {
+        -1
+    };
     ctx.ckpt_log.push(CkptRecord {
         version,
         at: ctx.clock,
         logical_bytes: logical,
         shipped_bytes: shipped,
+        raw_bytes: raw,
         delta: use_delta,
+        rotation,
         encode_secs,
     });
     Ok(())
 }
 
-/// Mirror exchange: store locally, ship (full or delta) copies to `k` ring
-/// buddies, materialize the copies received for this rank's wards.
+/// Mirror exchange: store locally, ship (full or delta, optionally
+/// compressed) copies to `k` ring buddies, materialize the copies received
+/// for this rank's wards.
 #[allow(clippy::too_many_arguments)]
 fn exchange_mirror(
     ctx: &mut Ctx,
@@ -208,14 +312,17 @@ fn exchange_mirror(
     k: usize,
     use_delta: bool,
     shipped: &mut usize,
+    raw: &mut usize,
     encode_secs: &mut f64,
 ) -> MpiResult<()> {
     let n = comm.size();
     let me = comm.rank;
     let stride = effective_stride(&ctx.world.net.params, n);
     // Delta mode: encode wires against the pre-commit store state.  Full
-    // mode ships the objects themselves, with no intermediate copies.
-    let wires: Option<Vec<Blob>> = if use_delta {
+    // mode ships the objects themselves (compressed as whole blobs when
+    // the compression layer is on).
+    let mut raw_per_obj: Vec<usize> = Vec::with_capacity(objs.len());
+    let wires: Vec<Blob> = if use_delta {
         let mut w = Vec::with_capacity(objs.len());
         for (id, blob) in objs {
             let (bv, base) = store
@@ -229,11 +336,28 @@ fn exchange_mirror(
                 encode_secs,
             );
             let factor = delta::wire_factor(blob);
+            raw_per_obj.push(((8 * wire.i.len()) as f64 * factor) as usize);
+            let wire = if cfg.compress {
+                charge_encode(ctx, cfg, wire.i.len(), encode_secs);
+                delta::compress_wire(&wire)
+            } else {
+                wire
+            };
             w.push(wire.scaled(factor));
         }
-        Some(w)
+        w
     } else {
-        None
+        objs.iter()
+            .map(|(_, blob)| {
+                raw_per_obj.push(blob.bytes());
+                if cfg.compress {
+                    charge_encode(ctx, cfg, blob.f.len() + blob.i.len(), encode_secs);
+                    delta::compress_blob(blob)
+                } else {
+                    blob.clone()
+                }
+            })
+            .collect()
     };
     for (id, blob) in objs {
         store.put_local(*id, version, blob.clone());
@@ -242,23 +366,22 @@ fn exchange_mirror(
     // receive the copies this rank holds for its wards.
     for d in 1..=k {
         let buddy = buddy_of_stride(me, d, n, stride);
-        for (i, (id, blob)) in objs.iter().enumerate() {
-            let wire = match &wires {
-                Some(w) => w[i].clone(),
-                None => blob.clone(),
-            };
-            *shipped += wire.bytes();
-            comm.send(ctx, buddy, ship_tag(*id, d), wire)?;
+        for (i, (id, _)) in objs.iter().enumerate() {
+            *shipped += wires[i].bytes();
+            *raw += raw_per_obj[i];
+            comm.send(ctx, buddy, ship_tag(*id, d), wires[i].clone())?;
         }
     }
     for d in 1..=k {
         let ward = ward_of_stride(me, d, n, stride);
         let owner_wr = comm.world_of(ward);
         for (id, _) in objs {
-            let wire = comm.recv(ctx, ward, ship_tag(*id, d))?;
+            let recvd = comm.recv(ctx, ward, ship_tag(*id, d))?;
             if use_delta {
+                let factor = delta::wire_factor(&recvd);
+                let wire =
+                    if cfg.compress { delta::decompress_wire(&recvd) } else { recvd };
                 let bv = wire.i[1];
-                let factor = delta::wire_factor(&wire);
                 let base = store
                     .get_remote(owner_wr, *id, bv)
                     .unwrap_or_else(|| {
@@ -269,17 +392,47 @@ fn exchange_mirror(
                 debug_assert_eq!(bv2, bv);
                 charge_encode(ctx, cfg, out.f.len() + out.i.len(), encode_secs);
                 store.put_remote(owner_wr, *id, version, out.scaled(factor));
+            } else if cfg.compress {
+                let out = delta::decompress_blob(&recvd);
+                charge_encode(ctx, cfg, out.f.len() + out.i.len(), encode_secs);
+                store.put_remote(owner_wr, *id, version, out);
             } else {
-                store.put_remote(owner_wr, *id, version, wire);
+                store.put_remote(owner_wr, *id, version, recvd);
             }
         }
     }
     Ok(())
 }
 
-/// Xor exchange: store locally, ship one (full or delta) parity
-/// contribution per object to the group's holder; holders fold the stripes
-/// for the groups they protect.
+/// Encode one parity contribution (full or delta) for `blob` against the
+/// pre-commit store, charging encode time.  Returns the *uncompressed*
+/// wire; callers compress and scale.
+fn parity_contribution(
+    ctx: &mut Ctx,
+    store: &CkptStore,
+    cfg: &CkptCfg,
+    id: ObjId,
+    blob: &Blob,
+    version: Version,
+    use_delta: bool,
+    encode_secs: &mut f64,
+) -> Blob {
+    let words = blob.f.len() + blob.i.len();
+    if use_delta {
+        let (bv, base) = store
+            .get_local_at_most(id, version - 1)
+            .unwrap_or_else(|| panic!("delta base for obj {id} missing"));
+        charge_encode(ctx, cfg, words + base.f.len() + base.i.len(), encode_secs);
+        delta::xor_delta_wire(base, blob, bv, cfg.chunk_words())
+    } else {
+        charge_encode(ctx, cfg, words, encode_secs);
+        delta::xor_full_wire(blob)
+    }
+}
+
+/// Xor exchange: store locally, ship one (full or delta, optionally
+/// compressed) parity contribution per object to the group's holder;
+/// holders fold the stripes for the groups they protect.
 #[allow(clippy::too_many_arguments)]
 fn exchange_xor(
     ctx: &mut Ctx,
@@ -291,6 +444,7 @@ fn exchange_xor(
     g: usize,
     use_delta: bool,
     shipped: &mut usize,
+    raw: &mut usize,
     encode_secs: &mut f64,
 ) -> MpiResult<()> {
     let n = comm.size();
@@ -299,18 +453,17 @@ fn exchange_xor(
     // Encode contributions against the pre-commit store, then store.
     let mut wires: Vec<Blob> = Vec::with_capacity(objs.len());
     for (id, blob) in objs {
-        let words = blob.f.len() + blob.i.len();
-        let wire = if use_delta {
-            let (bv, base) = store
-                .get_local_at_most(*id, version - 1)
-                .unwrap_or_else(|| panic!("delta base for obj {id} missing"));
-            charge_encode(ctx, cfg, words + base.f.len() + base.i.len(), encode_secs);
-            delta::xor_delta_wire(base, blob, bv, cfg.chunk_words())
+        let wire =
+            parity_contribution(ctx, store, cfg, *id, blob, version, use_delta, encode_secs);
+        let factor = delta::wire_factor(blob);
+        *raw += ((8 * wire.i.len()) as f64 * factor) as usize;
+        let wire = if cfg.compress {
+            charge_encode(ctx, cfg, wire.i.len(), encode_secs);
+            delta::compress_wire(&wire)
         } else {
-            charge_encode(ctx, cfg, words, encode_secs);
-            delta::xor_full_wire(blob)
+            wire
         };
-        wires.push(wire.scaled(delta::wire_factor(blob)));
+        wires.push(wire.scaled(factor));
     }
     for (id, blob) in objs {
         store.put_local(*id, version, blob.clone());
@@ -345,8 +498,10 @@ fn exchange_xor(
                 }
             };
             for slot in 0..len {
-                let wire = comm.recv(ctx, start + slot, parity_tag(*id))?;
-                let factor = delta::wire_factor(&wire);
+                let recvd = comm.recv(ctx, start + slot, parity_tag(*id))?;
+                let factor = delta::wire_factor(&recvd);
+                let wire =
+                    if cfg.compress { delta::decompress_wire(&recvd) } else { recvd };
                 if use_delta {
                     let (bv, f_len, i_len) = delta::fold_xor_delta(&mut stripe.words, &wire);
                     debug_assert_eq!(bv, version - 1, "contribution diffed a stale base");
@@ -366,6 +521,287 @@ fn exchange_xor(
     Ok(())
 }
 
+/// rs2 exchange (DESIGN.md §9): store locally, ship one contribution per
+/// object to the epoch's `P` holder; `P` holders fold the XOR stripe,
+/// build the combined GF-weighted `Q` update from the same payloads and
+/// forward it; `Q` holders apply the forward.  Members therefore ship each
+/// contribution once — double parity costs one extra group-level wire per
+/// object, not a second per-member contribution.
+#[allow(clippy::too_many_arguments)]
+fn exchange_rs2(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    store: &mut CkptStore,
+    objs: &[(ObjId, Blob)],
+    version: Version,
+    cfg: &CkptCfg,
+    g: usize,
+    use_delta: bool,
+    shipped: &mut usize,
+    raw: &mut usize,
+    encode_secs: &mut f64,
+) -> MpiResult<()> {
+    let n = comm.size();
+    let me = comm.rank;
+    let rot = cfg.rot_index(version);
+    let (my_p, _) = scheme::rs2_holders(scheme::group_of(me, g), g, n, rot);
+    // Encode one contribution per object; the identical payload feeds both
+    // stripes (the P holder re-weights it for Q), so members ship once.
+    let mut wires: Vec<Blob> = Vec::with_capacity(objs.len());
+    for (id, blob) in objs {
+        let wire =
+            parity_contribution(ctx, store, cfg, *id, blob, version, use_delta, encode_secs);
+        let factor = delta::wire_factor(blob);
+        *raw += ((8 * wire.i.len()) as f64 * factor) as usize;
+        let wire = if cfg.compress {
+            charge_encode(ctx, cfg, wire.i.len(), encode_secs);
+            delta::compress_wire(&wire)
+        } else {
+            wire
+        };
+        wires.push(wire.scaled(factor));
+    }
+    for (id, blob) in objs {
+        store.put_local(*id, version, blob.clone());
+    }
+    for ((id, _), wire) in objs.iter().zip(&wires) {
+        *shipped += wire.bytes();
+        comm.send(ctx, my_p, parity_tag(*id), wire.clone())?;
+    }
+    // Stripe work, in group order.  P-fold work for a group depends only
+    // on the upfront member sends, and Q holders wait only on P holders,
+    // so processing groups in ascending order cannot deadlock.
+    for grp in 0..scheme::n_groups(n, g) {
+        let (p_cr, q_cr) = scheme::rs2_holders(grp, g, n, rot);
+        let (start, len) = scheme::group_span(grp, g, n);
+        let anchor = comm.world_of(start);
+        let members: Vec<WorldRank> = (start..start + len).map(|cr| comm.world_of(cr)).collect();
+        if p_cr == me {
+            for (id, _) in objs {
+                let mut stripe = if use_delta {
+                    let (sv, base) = store
+                        .get_parity_at_most(anchor, *id, version - 1)
+                        .unwrap_or_else(|| panic!("parity base stripe for obj {id} missing"));
+                    debug_assert_eq!(sv, version - 1, "stripe chain broken");
+                    debug_assert_eq!(base.members, members, "group membership changed mid-chain");
+                    base.clone()
+                } else {
+                    ParityStripe {
+                        members: members.clone(),
+                        f_lens: vec![0; len],
+                        i_lens: vec![0; len],
+                        wire_factors: vec![1.0; len],
+                        words: Vec::new(),
+                    }
+                };
+                // Combined Q update: weighted fold of the same payloads.
+                let mut q_words: Vec<i64> = Vec::new();
+                let mut q_chunks: std::collections::BTreeSet<usize> = Default::default();
+                let mut q_total = 0usize;
+                let mut q_cw = cfg.chunk_words();
+                for slot in 0..len {
+                    let recvd = comm.recv(ctx, start + slot, parity_tag(*id))?;
+                    let factor = delta::wire_factor(&recvd);
+                    let wire =
+                        if cfg.compress { delta::decompress_wire(&recvd) } else { recvd };
+                    let c = gf256::coef(slot);
+                    if use_delta {
+                        let (bv, f_len, i_len) =
+                            delta::fold_xor_delta(&mut stripe.words, &wire);
+                        debug_assert_eq!(bv, version - 1, "contribution diffed a stale base");
+                        stripe.f_lens[slot] = f_len;
+                        stripe.i_lens[slot] = i_len;
+                        let view = delta::xdelta_view(&wire);
+                        q_cw = view.chunk_words;
+                        q_total = q_total.max(view.total);
+                        if q_words.len() < view.total {
+                            q_words.resize(view.total, 0);
+                        }
+                        for (ci, cwords) in &view.chunks {
+                            q_chunks.insert(*ci);
+                            let lo = ci * view.chunk_words;
+                            for (off, w) in cwords.iter().enumerate() {
+                                q_words[lo + off] ^= gf256::mul_word(*w, c);
+                            }
+                        }
+                    } else {
+                        let (f_len, i_len) = delta::fold_xor_full(&mut stripe.words, &wire);
+                        stripe.f_lens[slot] = f_len;
+                        stripe.i_lens[slot] = i_len;
+                        gf256::mul_xor_into(&mut q_words, &wire.i[3..], c);
+                    }
+                    stripe.wire_factors[slot] = factor;
+                    charge_encode(ctx, cfg, 2 * wire.i.len(), encode_secs);
+                }
+                // Forward the combined Q update to the Q holder.
+                let q_wire = if use_delta {
+                    qdelta_wire(version - 1, q_cw, q_total, &stripe, &q_chunks, &q_words)
+                } else {
+                    qfull_wire(version, &stripe, &q_words)
+                };
+                let q_factor =
+                    stripe.wire_factors.iter().copied().fold(1.0f64, f64::max);
+                *raw += ((8 * q_wire.i.len()) as f64 * q_factor) as usize;
+                let q_wire = if cfg.compress {
+                    charge_encode(ctx, cfg, q_wire.i.len(), encode_secs);
+                    delta::compress_wire(&q_wire)
+                } else {
+                    q_wire
+                };
+                let q_wire = q_wire.scaled(q_factor);
+                *shipped += q_wire.bytes();
+                comm.send(ctx, q_cr, qpar_tag(*id, grp), q_wire)?;
+                store.put_parity(anchor, *id, version, stripe);
+            }
+        }
+        if q_cr == me {
+            for (id, _) in objs {
+                let recvd = comm.recv(ctx, p_cr, qpar_tag(*id, grp))?;
+                let wire =
+                    if cfg.compress { delta::decompress_wire(&recvd) } else { recvd };
+                charge_encode(ctx, cfg, wire.i.len(), encode_secs);
+                let stripe = match delta::wire_fmt(&wire) {
+                    delta::FMT_QFULL => {
+                        let (v2, stripe) = parse_qfull_wire(&wire, &members);
+                        debug_assert_eq!(v2, version, "Q forward for the wrong version");
+                        stripe
+                    }
+                    delta::FMT_QDELTA => {
+                        let (sv, base) = store
+                            .get_parity_at_most(anchor, *id, version - 1)
+                            .unwrap_or_else(|| {
+                                panic!("Q base stripe for obj {id} missing")
+                            });
+                        debug_assert_eq!(sv, version - 1, "Q stripe chain broken");
+                        debug_assert_eq!(base.members, members, "group changed mid-chain");
+                        apply_qdelta_wire(&wire, base)
+                    }
+                    fmt => panic!("unexpected Q-forward format {fmt}"),
+                };
+                store.put_parity(anchor, *id, version, stripe);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Shared stripe serialization used by both the Q forward
+/// ([`delta::FMT_QFULL`]) and the holder-to-leader transfer
+/// ([`delta::FMT_STRIPE`]): `[tag, version, n_slots, f_lens.., i_lens..,
+/// factor_bits.., n_words, words...]` (factors ride as f64 bit patterns so
+/// the whole wire stays in the compressible `i` lane).
+fn encode_stripe(tag: i64, version: Version, stripe: &ParityStripe, words: &[i64]) -> Blob {
+    let ns = stripe.f_lens.len();
+    let mut i = Vec::with_capacity(4 + 3 * ns + words.len());
+    i.push(tag);
+    i.push(version);
+    i.push(ns as i64);
+    i.extend(stripe.f_lens.iter().map(|&v| v as i64));
+    i.extend(stripe.i_lens.iter().map(|&v| v as i64));
+    i.extend(stripe.wire_factors.iter().map(|&v| v.to_bits() as i64));
+    i.push(words.len() as i64);
+    i.extend_from_slice(words);
+    Blob { f: Vec::new(), i, wire: None }
+}
+
+/// Inverse of [`encode_stripe`]; `expect_tag` guards against window mix-ups.
+fn decode_stripe(expect_tag: i64, wire: &Blob, members: &[WorldRank]) -> (Version, ParityStripe) {
+    debug_assert_eq!(wire.i[0], expect_tag, "unexpected stripe wire tag");
+    let version = wire.i[1];
+    let ns = wire.i[2] as usize;
+    debug_assert_eq!(ns, members.len(), "stripe slot count mismatch");
+    let f_lens: Vec<usize> = wire.i[3..3 + ns].iter().map(|&v| v as usize).collect();
+    let i_lens: Vec<usize> = wire.i[3 + ns..3 + 2 * ns].iter().map(|&v| v as usize).collect();
+    let wire_factors: Vec<f64> =
+        wire.i[3 + 2 * ns..3 + 3 * ns].iter().map(|&v| f64::from_bits(v as u64)).collect();
+    let nw = wire.i[3 + 3 * ns] as usize;
+    let words = wire.i[4 + 3 * ns..4 + 3 * ns + nw].to_vec();
+    (
+        version,
+        ParityStripe { members: members.to_vec(), f_lens, i_lens, wire_factors, words },
+    )
+}
+
+/// Build a [`delta::FMT_QFULL`] forward: the complete Q stripe plus the
+/// per-slot metadata the Q holder stores alongside it.
+fn qfull_wire(version: Version, stripe: &ParityStripe, q_words: &[i64]) -> Blob {
+    encode_stripe(delta::FMT_QFULL, version, stripe, q_words)
+}
+
+fn parse_qfull_wire(wire: &Blob, members: &[WorldRank]) -> (Version, ParityStripe) {
+    decode_stripe(delta::FMT_QFULL, wire, members)
+}
+
+/// Build a [`delta::FMT_QDELTA`] forward: the union of the members'
+/// changed chunks, already GF-weighted and folded.  Layout:
+/// `[FMT_QDELTA, base_version, chunk_words, total, n_slots, f_lens..,
+/// i_lens.., factor_bits.., n_chunks, idx.., chunk words...]`.
+fn qdelta_wire(
+    base_version: Version,
+    cw: usize,
+    total: usize,
+    stripe: &ParityStripe,
+    chunks: &std::collections::BTreeSet<usize>,
+    q_words: &[i64],
+) -> Blob {
+    let ns = stripe.f_lens.len();
+    let mut i = Vec::with_capacity(6 + 3 * ns + chunks.len() * (cw + 1));
+    i.push(delta::FMT_QDELTA);
+    i.push(base_version);
+    i.push(cw as i64);
+    i.push(total as i64);
+    i.push(ns as i64);
+    i.extend(stripe.f_lens.iter().map(|&v| v as i64));
+    i.extend(stripe.i_lens.iter().map(|&v| v as i64));
+    i.extend(stripe.wire_factors.iter().map(|&v| v.to_bits() as i64));
+    i.push(chunks.len() as i64);
+    for &c in chunks {
+        i.push(c as i64);
+    }
+    for &c in chunks {
+        let lo = c * cw;
+        let hi = total.min(lo + cw);
+        for j in lo..hi {
+            i.push(if j < q_words.len() { q_words[j] } else { 0 });
+        }
+    }
+    Blob { f: Vec::new(), i, wire: None }
+}
+
+/// Apply a [`delta::FMT_QDELTA`] forward to the Q holder's base stripe,
+/// returning the updated stripe for the new version.
+fn apply_qdelta_wire(wire: &Blob, base: &ParityStripe) -> ParityStripe {
+    debug_assert_eq!(wire.i[0], delta::FMT_QDELTA);
+    let cw = wire.i[2] as usize;
+    let total = wire.i[3] as usize;
+    let ns = wire.i[4] as usize;
+    let off0 = 5;
+    let f_lens: Vec<usize> = wire.i[off0..off0 + ns].iter().map(|&v| v as usize).collect();
+    let i_lens: Vec<usize> =
+        wire.i[off0 + ns..off0 + 2 * ns].iter().map(|&v| v as usize).collect();
+    let wire_factors: Vec<f64> = wire.i[off0 + 2 * ns..off0 + 3 * ns]
+        .iter()
+        .map(|&v| f64::from_bits(v as u64))
+        .collect();
+    let n_chunks = wire.i[off0 + 3 * ns] as usize;
+    let idx0 = off0 + 3 * ns + 1;
+    let mut words = base.words.clone();
+    if words.len() < total {
+        words.resize(total, 0);
+    }
+    let mut off = idx0 + n_chunks;
+    for ci in 0..n_chunks {
+        let c = wire.i[idx0 + ci] as usize;
+        let lo = c * cw;
+        let hi = total.min(lo + cw);
+        for j in lo..hi {
+            words[j] ^= wire.i[off + (j - lo)];
+        }
+        off += hi - lo;
+    }
+    ParityStripe { members: base.members.clone(), f_lens, i_lens, wire_factors, words }
+}
+
 /// Whether the objects lost with the currently-dead members of
 /// `old_members` can be rebuilt in situ.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -380,14 +816,61 @@ pub enum LossCheck {
 /// Deterministic in-situ recoverability check, evaluated identically by
 /// every survivor from the shared liveness registry (the same construction
 /// the policy engine and the redistribution planner use).
+///
+/// `restore_rot` is the `rs2` holder-rotation index of the restore version
+/// ([`CkptCfg::rot_index`] of the survivors' agreed
+/// `min(committed)`) — it determines *which* two ranks carry the stripes
+/// the solve would need; mirror and xor ignore it, so callers on those
+/// schemes may pass 0.
+///
+/// Recoverability is judged **per failed rank's own data**, for every
+/// scheme alike: a failed rank that merely held some *other* group's
+/// stripe never makes the loss unrecoverable — the orphaned stripe is
+/// re-homed by the re-encode of the post-recovery establishment commit
+/// (and, under `rs2`, by the next rotation).  Under `rs2` a group's data
+/// is recoverable while `dead members + max(0, needed stripes - alive
+/// holders) <= 2` erasures can be solved: one dead member needs one alive
+/// holder, two dead members need both.
 pub fn assess_loss(
     cfg: &CkptCfg,
     old_members: &[WorldRank],
     alive: &dyn Fn(WorldRank) -> bool,
     stride: usize,
+    restore_rot: u64,
 ) -> LossCheck {
     let n = old_members.len();
     let alive_cr = |cr: usize| alive(old_members[cr]);
+    if let Scheme::Rs2 { g } = cfg.scheme {
+        if cfg.scheme.parity_active(n) {
+            for grp in 0..scheme::n_groups(n, g) {
+                let (start, len) = scheme::group_span(grp, g, n);
+                let dead: Vec<usize> =
+                    (start..start + len).filter(|&cr| !alive_cr(cr)).collect();
+                if dead.is_empty() {
+                    continue;
+                }
+                let (p, q) = scheme::rs2_holders(grp, g, n, restore_rot);
+                let holders_alive = alive_cr(p) as usize + alive_cr(q) as usize;
+                let ok = match dead.len() {
+                    1 => holders_alive >= 1,
+                    2 => holders_alive == 2,
+                    _ => false,
+                };
+                if !ok {
+                    let wrs: Vec<usize> = dead.iter().map(|&cr| old_members[cr]).collect();
+                    return LossCheck::Unrecoverable(format!(
+                        "parity group {grp} lost {} member(s) (world ranks {wrs:?}) with \
+                         {holders_alive}/2 stripe holders alive at rotation {restore_rot} — \
+                         a {}-erasure solve needs {} stripe(s)",
+                        dead.len(),
+                        dead.len().min(3),
+                        dead.len().min(2),
+                    ));
+                }
+            }
+            return LossCheck::Recoverable;
+        }
+    }
     for (cr, &wr) in old_members.iter().enumerate() {
         if alive(wr) {
             continue;
@@ -404,6 +887,11 @@ pub fn assess_loss(
                          parity group {grp} (or the group's parity holder) before re-encode"
                     )
                 }
+                // Only reachable below the activation bound (mirror:1
+                // degradation) — active rs2 is handled above.
+                Scheme::Rs2 { .. } => format!(
+                    "rank {wr} (comm rank {cr}) and its degraded mirror:1 buddy are lost"
+                ),
             };
             return LossCheck::Unrecoverable(why);
         }
@@ -413,13 +901,17 @@ pub fn assess_loss(
 
 /// Recovery reader: materialize every currently-dead old member's objects
 /// at (or below) restore version `v` into the store of the rank that will
-/// serve them, reconstructing from surviving group members plus parity for
-/// the xor scheme.  Mirror schemes are a no-op (buddy copies already sit in
-/// the store).  Must be called by every *survivor* of `old_members` (not by
+/// serve them ([`Scheme::server_cr_for`]), reconstructing from surviving
+/// group members plus parity for the xor scheme and running the one- or
+/// two-erasure GF(2^8) solve for `rs2` (DESIGN.md §9).  Mirror schemes are
+/// a no-op (buddy copies already sit in the store).
+///
+/// Contract: must be called by every *survivor* of `old_members` (not by
 /// adopted spares) with the same arguments, over a repaired communicator
-/// `comm` that contains all survivors; afterwards the usual
-/// `get_remote_at_most` serving paths work unchanged for both shrink and
-/// substitute recovery.
+/// `comm` that contains all survivors, after [`assess_loss`] returned
+/// [`LossCheck::Recoverable`] for the same liveness snapshot; afterwards
+/// the usual `get_remote_at_most` serving paths work unchanged for shrink,
+/// substitute and global-restart recovery.
 pub fn reconstruct_failed(
     ctx: &mut Ctx,
     comm: &Comm,
@@ -429,13 +921,31 @@ pub fn reconstruct_failed(
     v: Version,
     objs: &[ObjId],
 ) -> MpiResult<()> {
-    let Scheme::Xor { g } = cfg.scheme else {
-        return Ok(());
-    };
     let n_old = old_members.len();
-    if !cfg.scheme.xor_active(n_old) {
+    if !cfg.scheme.parity_active(n_old) {
         return Ok(());
     }
+    match cfg.scheme {
+        Scheme::Mirror { .. } => Ok(()),
+        Scheme::Xor { g } => reconstruct_xor(ctx, comm, store, cfg, old_members, v, objs, g),
+        Scheme::Rs2 { g } => reconstruct_rs2(ctx, comm, store, cfg, old_members, v, objs, g),
+    }
+}
+
+/// Single-erasure xor reconstruction: surviving group members stream their
+/// local blobs to the holder, which XORs them with the stripe.
+#[allow(clippy::too_many_arguments)]
+fn reconstruct_xor(
+    ctx: &mut Ctx,
+    comm: &Comm,
+    store: &mut CkptStore,
+    cfg: &CkptCfg,
+    old_members: &[WorldRank],
+    v: Version,
+    objs: &[ObjId],
+    g: usize,
+) -> MpiResult<()> {
+    let n_old = old_members.len();
     let world = ctx.world.clone();
     let Some(me_old) = old_members.iter().position(|&wr| wr == ctx.rank) else {
         return Ok(());
@@ -467,7 +977,9 @@ pub fn reconstruct_failed(
                     let src = comm
                         .rank_of_world(old_members[cr])
                         .expect("surviving group member must be in the repaired comm");
-                    let blob = comm.recv(ctx, src, recon_tag(id, fr))?;
+                    let recvd = comm.recv(ctx, src, recon_tag(id, fr))?;
+                    let blob =
+                        if cfg.compress { delta::decompress_blob(&recvd) } else { recvd };
                     delta::xor_into(&mut acc, &delta::pack_words(&blob));
                     ctx.advance(
                         (8 * (blob.f.len() + blob.i.len())) as f64 / cfg.encode_bytes_per_sec,
@@ -492,11 +1004,259 @@ pub fn reconstruct_failed(
                     .unwrap_or_else(|| panic!("local checkpoint for obj {id} missing"))
                     .1
                     .clone();
+                let blob = if cfg.compress { delta::compress_blob(&blob) } else { blob };
                 comm.send(ctx, dst, recon_tag(id, fr), blob)?;
             }
         }
     }
     Ok(())
+}
+
+/// Stripe transfer wire (holder -> rs2 reconstruction leader); same layout
+/// as the Q forward via [`encode_stripe`], under [`delta::FMT_STRIPE`].
+fn stripe_wire(sv: Version, stripe: &ParityStripe) -> Blob {
+    encode_stripe(delta::FMT_STRIPE, sv, stripe, &stripe.words)
+}
+
+fn parse_stripe_wire(wire: &Blob, members: &[WorldRank]) -> (Version, ParityStripe) {
+    decode_stripe(delta::FMT_STRIPE, wire, members)
+}
+
+/// Double-parity rs2 reconstruction (DESIGN.md §9).  Per parity group with
+/// failures, the *reconstruction leader* ([`Scheme::server_cr_for`] — the
+/// first alive rank scanning the ring from the group base) gathers the
+/// surviving members' blobs plus the needed stripe(s) from the rotation's
+/// holders, runs the one- or two-erasure solve, and materializes every
+/// failed member's objects in its own store for the ordinary serving
+/// paths.
+#[allow(clippy::too_many_arguments)]
+fn reconstruct_rs2(
+    ctx: &mut Ctx,
+    comm: &Comm,
+    store: &mut CkptStore,
+    cfg: &CkptCfg,
+    old_members: &[WorldRank],
+    v: Version,
+    objs: &[ObjId],
+    g: usize,
+) -> MpiResult<()> {
+    let n_old = old_members.len();
+    let world = ctx.world.clone();
+    let Some(me_old) = old_members.iter().position(|&wr| wr == ctx.rank) else {
+        return Ok(());
+    };
+    let alive_cr = |cr: usize| world.is_alive(old_members[cr]);
+    let rot = cfg.rot_index(v);
+    // Failed ranks, grouped by parity group in ascending group order.
+    let mut by_grp: Vec<(usize, Vec<usize>)> = Vec::new();
+    for cr in 0..n_old {
+        if alive_cr(cr) {
+            continue;
+        }
+        let grp = scheme::group_of(cr, g);
+        match by_grp.iter_mut().find(|(gg, _)| *gg == grp) {
+            Some((_, frs)) => frs.push(cr),
+            None => by_grp.push((grp, vec![cr])),
+        }
+    }
+    by_grp.sort_by_key(|(gg, _)| *gg);
+    for (grp, frs) in by_grp {
+        let (start, len) = scheme::group_span(grp, g, n_old);
+        let anchor = old_members[start];
+        let (p_cr, q_cr) = scheme::rs2_holders(grp, g, n_old, rot);
+        debug_assert!(frs.len() <= 2, "unrecoverable loss must be escalated first");
+        let need_p = alive_cr(p_cr);
+        let need_q = frs.len() == 2 || !need_p;
+        debug_assert!(
+            (!need_q || alive_cr(q_cr)) && (need_p || alive_cr(q_cr)),
+            "assess_loss admits enough alive holders"
+        );
+        let leader = cfg
+            .scheme
+            .server_cr_for(frs[0], n_old, &alive_cr, 1)
+            .expect("assess_loss admits a live reconstruction leader");
+        let survivors: Vec<usize> =
+            (start..start + len).filter(|&cr| alive_cr(cr)).collect();
+        if me_old == leader {
+            for &id in objs {
+                // Gather the needed stripes (local when the leader is a
+                // holder itself, e.g. when a whole group died).
+                let p_stripe = if need_p {
+                    Some(gather_stripe(
+                        ctx, comm, store, cfg, old_members, me_old, p_cr, anchor, id, v, grp, 0,
+                    )?)
+                } else {
+                    None
+                };
+                let q_stripe = if need_q {
+                    Some(gather_stripe(
+                        ctx, comm, store, cfg, old_members, me_old, q_cr, anchor, id, v, grp, 1,
+                    )?)
+                } else {
+                    None
+                };
+                // Gather surviving members' blobs (slot, packed words).
+                let mut contributions: Vec<(usize, Vec<i64>)> =
+                    Vec::with_capacity(survivors.len());
+                for &cr in &survivors {
+                    let words = if cr == me_old {
+                        let blob = store
+                            .get_local_at_most(id, v)
+                            .unwrap_or_else(|| panic!("local checkpoint for obj {id} missing"))
+                            .1;
+                        delta::pack_words(blob)
+                    } else {
+                        let src = comm
+                            .rank_of_world(old_members[cr])
+                            .expect("surviving member must be in the repaired comm");
+                        let recvd = comm.recv(ctx, src, recon_member_tag(id, grp))?;
+                        let blob =
+                            if cfg.compress { delta::decompress_blob(&recvd) } else { recvd };
+                        delta::pack_words(&blob)
+                    };
+                    ctx.advance((8 * words.len()) as f64 / cfg.encode_bytes_per_sec);
+                    contributions.push((cr - start, words));
+                }
+                // Solve and materialize each failed member.
+                let (sv, meta) = p_stripe
+                    .as_ref()
+                    .or(q_stripe.as_ref())
+                    .map(|(sv, s)| (*sv, s.clone()))
+                    .expect("at least one stripe is required");
+                if let (Some((svq, _)), Some((svp, _))) =
+                    (q_stripe.as_ref(), p_stripe.as_ref())
+                {
+                    debug_assert_eq!(svp, svq, "stripe versions diverged across holders");
+                }
+                let failed_slots: Vec<usize> = frs.iter().map(|&fr| fr - start).collect();
+                let solved: Vec<Vec<i64>> = match (&p_stripe, &q_stripe) {
+                    (Some((_, p)), None) => {
+                        let mut acc = p.words.clone();
+                        for (_, words) in &contributions {
+                            delta::xor_into(&mut acc, words);
+                        }
+                        vec![acc]
+                    }
+                    (None, Some((_, q))) => {
+                        let mut acc = q.words.clone();
+                        for (slot, words) in &contributions {
+                            gf256::mul_xor_into(&mut acc, words, gf256::coef(*slot));
+                        }
+                        gf256::div_words(&mut acc, gf256::coef(failed_slots[0]));
+                        vec![acc]
+                    }
+                    (Some((_, p)), Some((_, q))) => {
+                        let mut pw = p.words.clone();
+                        let mut qw = q.words.clone();
+                        for (slot, words) in &contributions {
+                            delta::xor_into(&mut pw, words);
+                            gf256::mul_xor_into(&mut qw, words, gf256::coef(*slot));
+                        }
+                        let (wi, wj) = gf256::solve_two_erasures(
+                            &pw,
+                            &qw,
+                            gf256::coef(failed_slots[0]),
+                            gf256::coef(failed_slots[1]),
+                        );
+                        vec![wi, wj]
+                    }
+                    (None, None) => unreachable!("need_p || need_q always holds"),
+                };
+                ctx.advance(
+                    (8 * solved.iter().map(Vec::len).sum::<usize>()) as f64
+                        / cfg.encode_bytes_per_sec,
+                );
+                for (k, words) in solved.iter().enumerate() {
+                    let slot = failed_slots[k];
+                    let mut out =
+                        delta::unpack_words(words, meta.f_lens[slot], meta.i_lens[slot]);
+                    let factor = meta.wire_factors[slot];
+                    if factor != 1.0 {
+                        out = out.scaled(factor);
+                    }
+                    store.put_remote(old_members[frs[k]], id, sv, out);
+                }
+            }
+        } else {
+            // Surviving member: stream local blobs to the leader.
+            if scheme::group_of(me_old, g) == grp {
+                let dst = comm
+                    .rank_of_world(old_members[leader])
+                    .expect("leader must be in the repaired comm");
+                for &id in objs {
+                    let blob = store
+                        .get_local_at_most(id, v)
+                        .unwrap_or_else(|| panic!("local checkpoint for obj {id} missing"))
+                        .1
+                        .clone();
+                    let blob = if cfg.compress { delta::compress_blob(&blob) } else { blob };
+                    comm.send(ctx, dst, recon_member_tag(id, grp), blob)?;
+                }
+            }
+            // Holder of a needed stripe: ship it to the leader.
+            for (holder, which, needed) in [(p_cr, 0usize, need_p), (q_cr, 1usize, need_q)] {
+                if !needed || me_old != holder {
+                    continue;
+                }
+                let dst = comm
+                    .rank_of_world(old_members[leader])
+                    .expect("leader must be in the repaired comm");
+                for &id in objs {
+                    let (sv, stripe) = store
+                        .get_parity_at_most(anchor, id, v)
+                        .unwrap_or_else(|| panic!("stripe for obj {id} missing on holder"));
+                    let wire = stripe_wire(sv, stripe);
+                    let wire =
+                        if cfg.compress { delta::compress_wire(&wire) } else { wire };
+                    comm.send(ctx, dst, recon_stripe_tag(id, grp, which), wire)?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Leader-side stripe acquisition: local when the leader is the holder,
+/// otherwise received from the holder over the repaired communicator.
+#[allow(clippy::too_many_arguments)]
+fn gather_stripe(
+    ctx: &mut Ctx,
+    comm: &Comm,
+    store: &CkptStore,
+    cfg: &CkptCfg,
+    old_members: &[WorldRank],
+    me_old: usize,
+    holder_cr: usize,
+    anchor: WorldRank,
+    id: ObjId,
+    v: Version,
+    grp: usize,
+    which: usize,
+) -> MpiResult<(Version, ParityStripe)> {
+    if holder_cr == me_old {
+        let (sv, s) = store
+            .get_parity_at_most(anchor, id, v)
+            .unwrap_or_else(|| panic!("stripe for obj {id} missing on leader-holder"));
+        return Ok((sv, s.clone()));
+    }
+    let src = comm
+        .rank_of_world(old_members[holder_cr])
+        .expect("stripe holder must be in the repaired comm");
+    let recvd = comm.recv(ctx, src, recon_stripe_tag(id, grp, which))?;
+    let wire = if cfg.compress { delta::decompress_wire(&recvd) } else { recvd };
+    ctx.advance((8 * wire.i.len()) as f64 / cfg.encode_bytes_per_sec);
+    let (start, len) = scheme::group_span(grp, cfg_group(cfg), old_members.len());
+    let members: Vec<WorldRank> = old_members[start..start + len].to_vec();
+    Ok(parse_stripe_wire(&wire, &members))
+}
+
+/// Group size of the configured parity scheme (callers guarantee a parity
+/// scheme is active).
+fn cfg_group(cfg: &CkptCfg) -> usize {
+    match cfg.scheme {
+        Scheme::Xor { g } | Scheme::Rs2 { g } => g,
+        Scheme::Mirror { .. } => unreachable!("parity group size on a mirror scheme"),
+    }
 }
 
 #[cfg(test)]
@@ -508,9 +1268,37 @@ mod tests {
         let cfg = CkptCfg::default();
         assert_eq!(cfg.scheme, Scheme::Mirror { k: 1 });
         assert!(!cfg.delta);
+        assert!(!cfg.compress);
         assert_eq!(cfg.chunk_words(), 512);
         let m2 = CkptCfg::mirror(2);
         assert_eq!(m2.scheme, Scheme::Mirror { k: 2 });
+    }
+
+    #[test]
+    fn rotation_advances_per_rebase_epoch() {
+        let cfg = CkptCfg {
+            scheme: Scheme::Rs2 { g: 4 },
+            delta: true,
+            rebase_every: 4,
+            ..CkptCfg::default()
+        };
+        assert_eq!(cfg.rot_index(0), 0);
+        assert_eq!(cfg.rot_index(3), 0);
+        assert_eq!(cfg.rot_index(4), 1);
+        assert_eq!(cfg.rot_index(11), 2);
+        // Delta commits never straddle a rotation boundary: any version with
+        // use_delta shares its epoch with version - 1.
+        for v in 1..64 {
+            if cfg.use_delta(v, false) {
+                assert_eq!(cfg.rot_index(v), cfg.rot_index(v - 1), "v={v}");
+            }
+        }
+        // Statics re-encode exactly at the epoch boundaries (rs2 only).
+        assert!(cfg.static_reencode_due(0));
+        assert!(cfg.static_reencode_due(8));
+        assert!(!cfg.static_reencode_due(5));
+        let xor = CkptCfg { scheme: Scheme::Xor { g: 4 }, ..CkptCfg::default() };
+        assert!(!xor.static_reencode_due(8));
     }
 
     #[test]
@@ -534,34 +1322,136 @@ mod tests {
         let dead_pair = |a: usize, b: usize| move |wr: usize| wr != a && wr != b;
         // Adjacent pair under mirror:1 loses rank 2's only copy (on 3).
         assert!(matches!(
-            assess_loss(&m1, &members, &dead_pair(2, 3), 1),
+            assess_loss(&m1, &members, &dead_pair(2, 3), 1, 0),
             LossCheck::Unrecoverable(_)
         ));
         // Non-adjacent pair is fine.
-        assert_eq!(assess_loss(&m1, &members, &dead_pair(2, 5), 1), LossCheck::Recoverable);
+        assert_eq!(assess_loss(&m1, &members, &dead_pair(2, 5), 1, 0), LossCheck::Recoverable);
         let x4 = CkptCfg { scheme: Scheme::Xor { g: 4 }, ..CkptCfg::default() };
         // Two losses in group 0: unrecoverable.
-        match assess_loss(&x4, &members, &dead_pair(1, 2), 1) {
+        match assess_loss(&x4, &members, &dead_pair(1, 2), 1, 0) {
             LossCheck::Unrecoverable(why) => assert!(why.contains("parity group 0"), "{why}"),
             other => panic!("expected unrecoverable, got {other:?}"),
         }
         // One loss per group: recoverable.
-        assert_eq!(assess_loss(&x4, &members, &dead_pair(1, 5), 1), LossCheck::Recoverable);
+        assert_eq!(assess_loss(&x4, &members, &dead_pair(1, 5), 1, 0), LossCheck::Recoverable);
         // Member + its group's holder (rank 4 holds group 0): unrecoverable.
         assert!(matches!(
-            assess_loss(&x4, &members, &dead_pair(1, 4), 1),
+            assess_loss(&x4, &members, &dead_pair(1, 4), 1, 0),
             LossCheck::Unrecoverable(_)
         ));
+        // Holder-loss is scheme-generic: a dead rank that merely holds
+        // ANOTHER group's stripe (rank 0 holds group 1's parity) is
+        // recoverable — its own data is covered by its own group, and the
+        // orphaned stripe is re-homed by the next re-encode.
+        let dead_one = |a: usize| move |wr: usize| wr != a;
+        assert_eq!(assess_loss(&x4, &members, &dead_one(0), 1, 0), LossCheck::Recoverable);
+        assert_eq!(assess_loss(&x4, &members, &dead_one(4), 1, 0), LossCheck::Recoverable);
+    }
+
+    #[test]
+    fn assess_loss_rs2_double_faults() {
+        let members: Vec<usize> = (0..8).collect();
+        let rs2 = CkptCfg { scheme: Scheme::Rs2 { g: 4 }, ..CkptCfg::default() };
+        let dead = |dead: Vec<usize>| move |wr: usize| !dead.contains(&wr);
+        // At rotation 0, group 0 = {0..3} has holders (4, 5).
+        // member + member: solvable while both holders live.
+        assert_eq!(
+            assess_loss(&rs2, &members, &dead(vec![1, 2]), 1, 0),
+            LossCheck::Recoverable
+        );
+        // member + one holder: the surviving stripe covers it.
+        assert_eq!(
+            assess_loss(&rs2, &members, &dead(vec![1, 4]), 1, 0),
+            LossCheck::Recoverable
+        );
+        // both holders only: no group data lost at all.
+        assert_eq!(
+            assess_loss(&rs2, &members, &dead(vec![4, 5]), 1, 0),
+            LossCheck::Recoverable
+        );
+        // two members + a holder: three erasures, escalate.
+        assert!(matches!(
+            assess_loss(&rs2, &members, &dead(vec![1, 2, 4]), 1, 0),
+            LossCheck::Unrecoverable(_)
+        ));
+        // three members of one group: escalate.
+        match assess_loss(&rs2, &members, &dead(vec![0, 1, 2]), 1, 0) {
+            LossCheck::Unrecoverable(why) => assert!(why.contains("parity group 0"), "{why}"),
+            other => panic!("expected unrecoverable, got {other:?}"),
+        }
+        // Rotation matters: at rotation 1 group 0's holders are (5, 6), so
+        // losing {1, 4} is member + unrelated rank — still recoverable —
+        // while losing {1, 5, 6} kills both stripes plus a member.
+        assert_eq!(
+            assess_loss(&rs2, &members, &dead(vec![1, 4]), 1, 1),
+            LossCheck::Recoverable
+        );
+        assert!(matches!(
+            assess_loss(&rs2, &members, &dead(vec![1, 5, 6]), 1, 1),
+            LossCheck::Unrecoverable(_)
+        ));
+        // A dead rank that merely *holds* another group's stripes is not an
+        // escalation for any scheme: {4} alone (group 1 member, group 0
+        // holder) is recoverable — group 1 solves it via its own stripes.
+        assert_eq!(assess_loss(&rs2, &members, &dead(vec![4]), 1, 0), LossCheck::Recoverable);
+        // Degraded below the activation bound: mirror:1 semantics.
+        let small: Vec<usize> = (0..5).collect();
+        assert!(matches!(
+            assess_loss(&rs2, &small, &dead(vec![2, 3]), 1, 0),
+            LossCheck::Unrecoverable(_)
+        ));
+        assert_eq!(assess_loss(&rs2, &small, &dead(vec![2]), 1, 0), LossCheck::Recoverable);
     }
 
     #[test]
     fn tag_namespaces_stay_in_their_windows() {
         // Mirror ship tags stay below the parity window.
         assert!(ship_tag(crate::checkpoint::obj::BASIS, 15) < parity_tag(0));
-        // Parity tags stay inside the checkpoint window.
-        assert!(parity_tag(crate::checkpoint::obj::BASIS) < tags::HALO_BASE);
+        // Parity tags stay inside the checkpoint window, below Q forwards.
+        assert!(parity_tag(crate::checkpoint::obj::BASIS) < qpar_tag(0, 0));
+        assert!(qpar_tag(crate::checkpoint::obj::BASIS, 255) < tags::HALO_BASE);
         // Reconstruction tags stay inside the recovery window.
-        assert!(recon_tag(crate::checkpoint::obj::BASIS, 4095) < tags::CKPT_BASE);
+        assert!(recon_tag(crate::checkpoint::obj::BASIS, 4095) < recon_member_tag(0, 0));
+        assert!(recon_member_tag(crate::checkpoint::obj::BASIS, 255) < recon_stripe_tag(0, 0, 0));
+        assert!(recon_stripe_tag(crate::checkpoint::obj::BASIS, 255, 1) < tags::CKPT_BASE);
         assert!(recon_tag(0, 0) >= tags::RECON_BASE);
+    }
+
+    #[test]
+    fn q_wire_roundtrips() {
+        let stripe = ParityStripe {
+            members: vec![10, 11, 12],
+            f_lens: vec![4, 5, 6],
+            i_lens: vec![1, 0, 2],
+            wire_factors: vec![1.0, 36.0, 1.0],
+            words: vec![0; 8],
+        };
+        let q_words: Vec<i64> = (0..8).map(|k| 100 + k).collect();
+        let (v2, full) = parse_qfull_wire(&qfull_wire(7, &stripe, &q_words), &stripe.members);
+        assert_eq!(v2, 7);
+        assert_eq!(full.words, q_words);
+        assert_eq!(full.f_lens, stripe.f_lens);
+        assert_eq!(full.i_lens, stripe.i_lens);
+        assert_eq!(full.wire_factors, stripe.wire_factors);
+        // Delta forward: chunks {0, 2} of a 3-word-chunk stream over 8 words.
+        let mut chunks = std::collections::BTreeSet::new();
+        chunks.insert(0usize);
+        chunks.insert(2usize);
+        let dq = qdelta_wire(6, 3, 8, &stripe, &chunks, &q_words);
+        let base = ParityStripe { words: vec![1; 8], ..stripe.clone() };
+        let out = apply_qdelta_wire(&dq, &base);
+        // Chunk 0 = words 0..3, chunk 2 = words 6..8 (clipped): XORed in.
+        assert_eq!(out.words[0], 1 ^ 100);
+        assert_eq!(out.words[2], 1 ^ 102);
+        assert_eq!(out.words[3], 1, "untouched chunk survives");
+        assert_eq!(out.words[6], 1 ^ 106);
+        assert_eq!(out.words[7], 1 ^ 107);
+        assert_eq!(out.f_lens, stripe.f_lens);
+        // Stripe transfer wire roundtrips too.
+        let (sv, back) = parse_stripe_wire(&stripe_wire(9, &stripe), &stripe.members);
+        assert_eq!(sv, 9);
+        assert_eq!(back.words, stripe.words);
+        assert_eq!(back.wire_factors, stripe.wire_factors);
     }
 }

@@ -1,6 +1,6 @@
-//! Redundancy schemes for the in-memory checkpoint store (DESIGN.md §8).
+//! Redundancy schemes for the in-memory checkpoint store (DESIGN.md §8–§9).
 //!
-//! Two pluggable schemes decide *where* the redundant bits of every
+//! Three pluggable schemes decide *where* the redundant bits of every
 //! checkpointed object live:
 //!
 //! * [`Scheme::Mirror`] — the paper's buddy replication: each rank ships a
@@ -15,15 +15,25 @@
 //!   two failures in one group (or a member plus its group's holder) are an
 //!   *unrecoverable* loss that escalates to global restart (see
 //!   [`crate::ckptstore::assess_loss`]).
+//! * [`Scheme::Rs2`] — RAID-6-style double parity (DESIGN.md §9): each
+//!   group keeps *two* independent stripes — the XOR stripe `P` plus a
+//!   GF(2^8)-weighted stripe `Q` ([`crate::ckptstore::gf256`]) — on two
+//!   distinct holders outside the group, chosen per rebase epoch by the
+//!   rotation schedule of [`rs2_holders`].  Any two in-group losses
+//!   (member+member, member+holder, or both holders) reconstruct in situ;
+//!   only a third concurrent loss in one group escalates.
 //!
-//! Group layout is a pure function of the communicator size, so every rank
-//! derives identical groups with no negotiation — the same construction the
-//! redistribution planner and the policy engine rely on.
+//! Group layout is a pure function of the communicator size (plus, for
+//! `rs2`, the rotation index derived from the restore version), so every
+//! rank derives identical groups and holders with no negotiation — the
+//! same construction the redistribution planner and the policy engine rely
+//! on.
 
 use crate::checkpoint::buddy_of_stride;
 
 /// Which redundancy scheme the checkpoint store uses (config key
-/// `ckpt_scheme`, CLI `--ckpt-scheme`; values `mirror:<k>` / `xor:<g>`).
+/// `ckpt_scheme`, CLI `--ckpt-scheme`; values `mirror:<k>` / `xor:<g>` /
+/// `rs2:<g>`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Scheme {
     /// Full buddy copies to `k` ring successors (the paper's layout).
@@ -36,6 +46,12 @@ pub enum Scheme {
         /// Parity-group size.
         g: usize,
     },
+    /// Two independent parity stripes (XOR + GF(2^8)-weighted) per group of
+    /// `g` consecutive comm ranks, with holder rotation per rebase epoch.
+    Rs2 {
+        /// Parity-group size.
+        g: usize,
+    },
 }
 
 impl Default for Scheme {
@@ -45,7 +61,16 @@ impl Default for Scheme {
 }
 
 impl Scheme {
-    /// Parse `mirror`, `mirror:<k>`, `xor`, `xor:<g>`.
+    /// Parse `mirror`, `mirror:<k>`, `xor`, `xor:<g>`, `rs2`, `rs2:<g>`.
+    ///
+    /// ```
+    /// use ulfm_ftgmres::ckptstore::Scheme;
+    /// assert_eq!(Scheme::parse("rs2:4"), Some(Scheme::Rs2 { g: 4 }));
+    /// assert_eq!(Scheme::parse("rs2"), Some(Scheme::Rs2 { g: 4 }));
+    /// assert_eq!(Scheme::parse("mirror:2"), Some(Scheme::Mirror { k: 2 }));
+    /// assert_eq!(Scheme::parse("rs2:1"), None);
+    /// assert_eq!(Scheme::parse("raid6"), None);
+    /// ```
     pub fn parse(s: &str) -> Option<Scheme> {
         let s = s.trim();
         if let Some(rest) = s.strip_prefix("mirror") {
@@ -70,6 +95,17 @@ impl Scheme {
             }
             return Some(Scheme::Xor { g });
         }
+        if let Some(rest) = s.strip_prefix("rs2") {
+            let g = match rest.strip_prefix(':') {
+                Some(n) => n.trim().parse().ok()?,
+                None if rest.is_empty() => 4,
+                None => return None,
+            };
+            if g < 2 {
+                return None;
+            }
+            return Some(Scheme::Rs2 { g });
+        }
         None
     }
 
@@ -77,23 +113,38 @@ impl Scheme {
         match self {
             Scheme::Mirror { k } => format!("mirror:{k}"),
             Scheme::Xor { g } => format!("xor:{g}"),
+            Scheme::Rs2 { g } => format!("rs2:{g}"),
         }
     }
 
-    /// Buddy count for mirror semantics (estimate inputs; 1 for xor, whose
-    /// re-encode ships one parity contribution instead of full copies).
+    /// Buddy count for mirror semantics (estimate inputs; 1 for the parity
+    /// schemes, whose re-encode ships parity contributions instead of full
+    /// copies).
     pub fn mirror_k(&self) -> usize {
         match self {
             Scheme::Mirror { k } => *k,
-            Scheme::Xor { .. } => 1,
+            Scheme::Xor { .. } | Scheme::Rs2 { .. } => 1,
         }
     }
 
-    /// Whether the xor encoding is actually usable at communicator size
-    /// `n`: a single group cannot place its parity outside itself, so runs
-    /// (or shrunken survivor sets) with `n <= g` degrade to `mirror:1`.
+    /// Whether the parity encoding is actually usable at communicator size
+    /// `n`.  `xor:<g>` needs one rank outside every group (`n > g`);
+    /// `rs2:<g>` needs two distinct holder slots outside every group
+    /// (`n >= g + 2`).  Runs (or shrunken survivor sets) below the bound
+    /// degrade to `mirror:1` deterministically on every rank.
+    pub fn parity_active(&self, n: usize) -> bool {
+        match self {
+            Scheme::Mirror { .. } => false,
+            Scheme::Xor { g } => n > *g,
+            Scheme::Rs2 { g } => n >= g + 2,
+        }
+    }
+
+    /// Whether the xor encoding is active at communicator size `n` (see
+    /// [`Scheme::parity_active`]; kept for the original xor-only call
+    /// sites and tests).
     pub fn xor_active(&self, n: usize) -> bool {
-        matches!(self, Scheme::Xor { g } if n > *g)
+        matches!(self, Scheme::Xor { .. }) && self.parity_active(n)
     }
 
     /// The comm rank that, if `owner_cr` fails, serves its checkpointed
@@ -104,7 +155,16 @@ impl Scheme {
     ///   full copy);
     /// * xor (active): the owner's parity holder, feasible only while the
     ///   holder *and* every other member of the owner's group are alive;
-    /// * xor at `n <= g`: the degraded `mirror:1` buddy.
+    /// * rs2 (active): the *reconstruction leader* — the first alive comm
+    ///   rank scanning the ring from the owner's group base (so both failed
+    ///   members of a double fault share one leader, and the leader is a
+    ///   surviving group member whenever one exists).  Note rs2 feasibility
+    ///   is *rotation-dependent* (which holders carry the stripes depends
+    ///   on the restore version) and is therefore judged by
+    ///   [`crate::ckptstore::assess_loss`], not here; this function only
+    ///   names the rank that serves once the loss was assessed recoverable.
+    /// * any parity scheme below its [`Scheme::parity_active`] bound: the
+    ///   degraded `mirror:1` buddy.
     ///
     /// Every rank (survivors and adopted spares alike) evaluates this from
     /// the shared liveness registry, so server choice needs no negotiation.
@@ -120,7 +180,7 @@ impl Scheme {
                 .map(|d| buddy_of_stride(owner_cr, d, n, stride))
                 .find(|&cr| alive_cr(cr)),
             Scheme::Xor { g } => {
-                if !self.xor_active(n) {
+                if !self.parity_active(n) {
                     return (1..n.min(2))
                         .map(|d| buddy_of_stride(owner_cr, d, n, stride))
                         .find(|&cr| alive_cr(cr));
@@ -137,6 +197,15 @@ impl Scheme {
                     }
                 }
                 Some(holder)
+            }
+            Scheme::Rs2 { g } => {
+                if !self.parity_active(n) {
+                    return (1..n.min(2))
+                        .map(|d| buddy_of_stride(owner_cr, d, n, stride))
+                        .find(|&cr| alive_cr(cr));
+                }
+                let (start, _) = group_span(group_of(owner_cr, *g), *g, n);
+                (0..n).map(|d| (start + d) % n).find(|&cr| alive_cr(cr))
             }
         }
     }
@@ -164,6 +233,48 @@ pub fn group_span(grp: usize, g: usize, n: usize) -> (usize, usize) {
 /// whole-group stripe never shares fate with the data it protects.
 pub fn holder_cr(grp: usize, g: usize, n: usize) -> usize {
     ((grp + 1) * g) % n
+}
+
+/// The two `rs2` stripe holders (`P` = XOR, `Q` = GF-weighted) of group
+/// `grp` at rotation index `rot` (DESIGN.md §9).
+///
+/// The ranks *outside* the group are enumerated in ring order starting
+/// just past the group's end; `P` sits at offset `rot mod s` into that
+/// list (`s` = outside-rank count) and `Q` at the next offset, so:
+///
+/// * both holders are provably outside the group they protect (the group
+///   is a contiguous ring arc, so everything from `start + len` around to
+///   `start` is outside);
+/// * `P != Q` always (`s >= 2` whenever the scheme is active,
+///   [`Scheme::parity_active`]);
+/// * consecutive rotation indices shift both stripes one rank around the
+///   outside ring, spreading stripe memory and reconstruction load across
+///   every non-member instead of pinning one holder — and at `rot = 0`
+///   with `g | n`, `P` coincides with the static xor holder
+///   ([`holder_cr`]).
+///
+/// The rotation index advances once per rebase epoch
+/// ([`crate::ckptstore::CkptCfg::rot_index`]): delta chains between
+/// rebases must fold into a stripe that stays put, so holders hand over at
+/// exactly the full re-encode commits.
+///
+/// ```
+/// use ulfm_ftgmres::ckptstore::scheme::rs2_holders;
+/// // 8 ranks, groups of 4: group 0 = {0..3}, outside ranks = [4,5,6,7].
+/// assert_eq!(rs2_holders(0, 4, 8, 0), (4, 5));
+/// assert_eq!(rs2_holders(0, 4, 8, 1), (5, 6));
+/// assert_eq!(rs2_holders(0, 4, 8, 3), (7, 4)); // wraps around the list
+/// // Group 1 = {4..7}: its outside list starts at rank 0.
+/// assert_eq!(rs2_holders(1, 4, 8, 0), (0, 1));
+/// ```
+pub fn rs2_holders(grp: usize, g: usize, n: usize, rot: u64) -> (usize, usize) {
+    let (start, len) = group_span(grp, g, n);
+    let s = n - len;
+    debug_assert!(s >= 2, "rs2 needs two holder slots outside every group (n={n}, g={g})");
+    let r = (rot % s as u64) as usize;
+    let p = (start + len + r) % n;
+    let q = (start + len + (r + 1) % s) % n;
+    (p, q)
 }
 
 #[cfg(test)]
@@ -268,5 +379,78 @@ mod tests {
         let alive = |cr: usize| cr != 2;
         // n=3 <= g: mirror:1 fallback, buddy 0 serves owner 2.
         assert_eq!(s.server_cr_for(2, 3, &alive, 1), Some(0));
+    }
+
+    #[test]
+    fn rs2_parse_and_activation() {
+        assert_eq!(Scheme::parse("rs2:4"), Some(Scheme::Rs2 { g: 4 }));
+        assert_eq!(Scheme::parse("rs2"), Some(Scheme::Rs2 { g: 4 }));
+        assert_eq!(Scheme::parse("rs2:1"), None);
+        assert_eq!(Scheme::Rs2 { g: 4 }.name(), "rs2:4");
+        assert_eq!(Scheme::Rs2 { g: 4 }.mirror_k(), 1);
+        let s = Scheme::Rs2 { g: 4 };
+        // Needs two holder slots outside every (full) group.
+        assert!(!s.parity_active(5));
+        assert!(s.parity_active(6));
+        assert!(s.parity_active(8));
+        assert!(!s.xor_active(8), "xor_active stays xor-specific");
+    }
+
+    #[test]
+    fn rs2_holders_are_outside_distinct_and_rotate_over_all_slots() {
+        for n in [6usize, 8, 10, 12, 48] {
+            for g in [2usize, 4] {
+                if n < g + 2 {
+                    continue;
+                }
+                for grp in 0..n_groups(n, g) {
+                    let (start, len) = group_span(grp, g, n);
+                    let s = n - len;
+                    let mut p_seen = std::collections::BTreeSet::new();
+                    for rot in 0..2 * s as u64 {
+                        let (p, q) = rs2_holders(grp, g, n, rot);
+                        assert_ne!(p, q, "n={n} g={g} grp={grp} rot={rot}");
+                        for h in [p, q] {
+                            assert!(
+                                h < start || h >= start + len,
+                                "holder {h} inside group {grp} (n={n}, g={g}, rot={rot})"
+                            );
+                        }
+                        p_seen.insert(p);
+                    }
+                    // A full rotation cycle spreads P over every outside rank.
+                    assert_eq!(p_seen.len(), s, "n={n} g={g} grp={grp}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rs2_rot0_p_holder_matches_the_xor_holder_when_g_divides_n() {
+        for (n, g) in [(8usize, 4usize), (12, 4), (8, 2), (48, 4)] {
+            for grp in 0..n_groups(n, g) {
+                assert_eq!(rs2_holders(grp, g, n, 0).0, holder_cr(grp, g, n), "n={n} g={g}");
+            }
+        }
+    }
+
+    #[test]
+    fn rs2_server_is_the_group_scan_leader() {
+        let s = Scheme::Rs2 { g: 4 };
+        // Owner 1 (group 0) dead, everyone else alive: leader = rank 0.
+        let alive = |cr: usize| cr != 1;
+        assert_eq!(s.server_cr_for(1, 8, &alive, 1), Some(0));
+        // Double fault 0+1: both served by the first alive member, rank 2.
+        let alive2 = |cr: usize| cr != 0 && cr != 1;
+        assert_eq!(s.server_cr_for(0, 8, &alive2, 1), Some(2));
+        assert_eq!(s.server_cr_for(1, 8, &alive2, 1), Some(2));
+        // Whole group of 2 dead (g=2): leader scans past the group.
+        let s2 = Scheme::Rs2 { g: 2 };
+        let alive3 = |cr: usize| cr != 2 && cr != 3;
+        assert_eq!(s2.server_cr_for(2, 8, &alive3, 1), Some(4));
+        assert_eq!(s2.server_cr_for(3, 8, &alive3, 1), Some(4));
+        // Degraded (n < g+2): mirror:1 fallback.
+        let alive4 = |cr: usize| cr != 2;
+        assert_eq!(s.server_cr_for(2, 5, &alive4, 1), Some(3));
     }
 }

@@ -203,12 +203,15 @@ impl RunConfig {
             }
             "ckpt_scheme" => {
                 self.solver.ckpt.scheme = Scheme::parse(v).ok_or_else(|| {
-                    anyhow::anyhow!("unknown ckpt_scheme {v} (expected mirror:<k> or xor:<g>)")
+                    anyhow::anyhow!(
+                        "unknown ckpt_scheme {v} (expected mirror:<k>, xor:<g> or rs2:<g>)"
+                    )
                 })?
             }
             "ckpt_delta" => self.solver.ckpt.delta = v.parse()?,
             "ckpt_chunk_kib" => self.solver.ckpt.chunk_kib = v.parse()?,
             "ckpt_rebase_every" => self.solver.ckpt.rebase_every = v.parse()?,
+            "ckpt_compress" => self.solver.ckpt.compress = v.parse()?,
             "inner_tol" => self.solver.inner_tol = v.parse()?,
             "backend" => {
                 self.backend = BackendKind::parse(v)
@@ -266,9 +269,10 @@ impl RunConfig {
         m.insert(
             "ckpt",
             format!(
-                "{}{}",
+                "{}{}{}",
                 self.solver.ckpt.scheme.name(),
-                if self.solver.ckpt.delta { "+delta" } else { "" }
+                if self.solver.ckpt.delta { "+delta" } else { "" },
+                if self.solver.ckpt.compress { "+comp" } else { "" }
             ),
         );
         m.insert("m_inner", self.solver.m_inner.to_string());
@@ -350,12 +354,17 @@ mod tests {
         assert_eq!(c.solver.ckpt.scheme, Scheme::Mirror { k: 1 });
         assert!(c.set("ckpt_scheme", "xor:4").unwrap());
         assert_eq!(c.solver.ckpt.scheme, Scheme::Xor { g: 4 });
+        assert!(c.set("ckpt_scheme", "rs2:4").unwrap());
+        assert_eq!(c.solver.ckpt.scheme, Scheme::Rs2 { g: 4 });
         assert!(c.set("ckpt_delta", "true").unwrap());
         assert!(c.set("ckpt_chunk_kib", "8").unwrap());
         assert!(c.set("ckpt_rebase_every", "16").unwrap());
+        assert!(c.set("ckpt_compress", "true").unwrap());
         assert!(c.solver.ckpt.delta);
+        assert!(c.solver.ckpt.compress);
         assert_eq!(c.solver.ckpt.chunk_kib, 8);
         assert_eq!(c.solver.ckpt.rebase_every, 16);
+        assert!(c.summary().get("ckpt").unwrap().contains("rs2:4+delta+comp"));
         // Legacy alias still maps onto the scheme, with the same validation.
         assert!(c.set("ckpt_buddies", "2").unwrap());
         assert_eq!(c.solver.ckpt.scheme, Scheme::Mirror { k: 2 });

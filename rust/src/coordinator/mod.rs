@@ -7,10 +7,10 @@
 use std::sync::Arc;
 use std::thread;
 
-use crate::backend::costs::RecoveryCostInputs;
+use crate::backend::costs::{ParityShape, RecoveryCostInputs};
 use crate::backend::native::NativeBackend;
 use crate::backend::Backend;
-use crate::checkpoint::{effective_stride, CkptStore};
+use crate::checkpoint::{agree_restore_version, effective_stride, CkptStore};
 use crate::ckptstore::{self, LossCheck, Scheme};
 use crate::config::{BackendKind, RunConfig};
 use crate::failure::Injector;
@@ -144,7 +144,7 @@ fn solve_loop(
                 }
                 ctx.recompute = false;
                 let mut shrunk = recovery::repair_membership(ctx, comm)?;
-                let decision = choose_recovery(ctx, &mut shrunk, comm, state, cfg)?;
+                let decision = choose_recovery(ctx, &mut shrunk, comm, state, store, cfg)?;
                 recovery::execute_decision(
                     ctx,
                     comm,
@@ -179,6 +179,7 @@ fn choose_recovery(
     shrunk: &mut Comm,
     old: &Comm,
     state: &SolverState,
+    store: &CkptStore,
     cfg: &RunConfig,
 ) -> MpiResult<Decision> {
     let failed: Vec<usize> = old
@@ -196,7 +197,22 @@ fn choose_recovery(
         let world = ctx.world.clone();
         let alive = move |wr: usize| world.is_alive(wr);
         let stride = effective_stride(&ctx.world.net.params, old.size());
-        match ckptstore::assess_loss(&cfg.solver.ckpt, &old.members, &alive, stride) {
+        // rs2 recoverability depends on which rotation's holders carry the
+        // restore version's stripes, so agree on that version first (one
+        // allreduce over the survivor communicator — every survivor runs
+        // the identical sequence).  Mirror/xor assessments are
+        // version-free and skip the collective.  The recovery stages that
+        // follow re-run the same agreement rather than threading this
+        // value through their APIs: the repeated allreduce is cheap and
+        // deterministic, and keeps the staged recovery entry points
+        // independently callable.
+        let restore_rot = if matches!(cfg.solver.ckpt.scheme, Scheme::Rs2 { .. }) {
+            cfg.solver.ckpt.rot_index(agree_restore_version(ctx, shrunk, store)?)
+        } else {
+            0
+        };
+        match ckptstore::assess_loss(&cfg.solver.ckpt, &old.members, &alive, stride, restore_rot)
+        {
             LossCheck::Unrecoverable(why) => (
                 Decision::GlobalRestart,
                 format!("unrecoverable in-memory loss: {why}; escalating to global restart"),
@@ -235,10 +251,7 @@ fn choose_recovery(
                         buddy_k: cfg.solver.ckpt.scheme.mirror_k(),
                         horizon_iters: horizon,
                         m_inner: cfg.solver.m_inner,
-                        xor_group: match cfg.solver.ckpt.scheme {
-                            Scheme::Xor { g } if old.size() > g => Some(g),
-                            _ => None,
-                        },
+                        parity: ParityShape::from_scheme(&cfg.solver.ckpt.scheme, old.size()),
                     },
                     failures_so_far: ctx.world.dead_set().len(),
                     event_seq: ctx.decisions.len(),

@@ -101,14 +101,17 @@ impl InjectionPlan {
         }
     }
 
-    /// Correlated same-group failure for the `xor:<g>` checkpoint scheme:
+    /// Correlated same-group failure for the parity checkpoint schemes:
     /// `victims` *consecutive* ranks inside parity group `group` die at the
     /// same inner iteration — the worst case erasure coding has to face
     /// (correlated loss inside one redundancy domain, e.g. a board or PSU
-    /// taking adjacent ranks down together).  With `victims >= 2` the loss
-    /// is unrecoverable in situ and must escalate to a global restart; with
-    /// `victims == 1` it degenerates to a single in-group failure the
-    /// parity stripe covers.
+    /// taking adjacent ranks down together).  Under `xor:<g>` any
+    /// `victims >= 2` is unrecoverable in situ and must escalate to a
+    /// global restart; under `rs2:<g>` the same double fault reconstructs
+    /// via the two-erasure solve, and only `victims >= 3` escalates —
+    /// which is exactly the contrast the double-fault campaign tests pin
+    /// down.  `victims == 1` degenerates to a single in-group failure any
+    /// stripe covers.
     pub fn same_group_burst(p: usize, g: usize, group: usize, victims: usize, at_inner_iter: u64) -> Self {
         let start = group * g;
         assert!(start < p, "group {group} out of range for p={p}");

@@ -270,9 +270,10 @@ pub fn decision_table(rep: &RunReport) -> Table {
 }
 
 /// Per-commit checkpoint-overhead table of one run: logical state bytes vs
-/// bytes actually shipped for redundancy (summed over ranks), the shipping
-/// ratio, and the modeled encode time — the `ckptstore` counterpart of the
-/// Figure 5 view (see DESIGN.md §8).
+/// bytes actually shipped for redundancy (summed over ranks; raw =
+/// pre-compression), the shipping ratio, the rs2 holder-rotation index
+/// (`-` for schemes without rotation), and the modeled encode time — the
+/// `ckptstore` counterpart of the Figure 5 view (see DESIGN.md §8–§9).
 pub fn ckpt_table(rep: &RunReport) -> Table {
     let mut t = Table::new(
         "Checkpoint commits (bytes shipped for redundancy, per commit)",
@@ -281,8 +282,10 @@ pub fn ckpt_table(rep: &RunReport) -> Table {
             "t_virtual".into(),
             "kind".into(),
             "state_MB".into(),
+            "raw_MB".into(),
             "shipped_MB".into(),
             "ship_ratio".into(),
+            "rot".into(),
             "encode_ms".into(),
         ],
     );
@@ -292,8 +295,10 @@ pub fn ckpt_table(rep: &RunReport) -> Table {
             format!("{:.4}", c.at),
             if c.delta { "delta" } else { "full" }.to_string(),
             format!("{:.3}", c.logical_bytes as f64 / 1e6),
+            format!("{:.3}", c.raw_bytes as f64 / 1e6),
             format!("{:.3}", c.shipped_bytes as f64 / 1e6),
             format!("{:.3}", c.shipped_bytes as f64 / (c.logical_bytes as f64).max(1.0)),
+            if c.rotation < 0 { "-".to_string() } else { c.rotation.to_string() },
             format!("{:.3}", 1e3 * c.encode_secs),
         ]);
     }

@@ -6,8 +6,9 @@
 //!
 //! * **L3 (this crate)** — a simulated-cluster message-passing runtime with
 //!   ULFM semantics ([`simmpi`]), an erasure-coded in-memory checkpoint
-//!   store with mirror/XOR-parity schemes and delta commits ([`ckptstore`]
-//!   over the per-rank store in [`checkpoint`]), the *shrink* and
+//!   store with mirror / XOR-parity / double-parity (`rs2`) schemes, delta
+//!   commits and RLE wire compression ([`ckptstore`] over the per-rank
+//!   store in [`checkpoint`]), the *shrink* and
 //!   *substitute* in-situ recovery
 //!   strategies plus the adaptive per-event policy engine and spare-pool
 //!   manager ([`recovery`], [`recovery::policy`], [`spares`]), and a

@@ -21,9 +21,12 @@
 //! the per-event decision log after the phase breakdown.
 //!
 //! `--ckpt-scheme VALUE` selects the checkpoint redundancy scheme
-//! (shorthand for `ckpt_scheme=VALUE`): `mirror:<k>` or `xor:<g>`;
+//! (shorthand for `ckpt_scheme=VALUE`): `mirror:<k>`, `xor:<g>` or
+//! `rs2:<g>` (double parity with rotating holders, DESIGN.md §9);
 //! `--ckpt-delta` turns on chunk-delta shipping (`ckpt_delta=true`, tune
-//! with `ckpt_chunk_kib=N` / `ckpt_rebase_every=N`).  See DESIGN.md §8.
+//! with `ckpt_chunk_kib=N` / `ckpt_rebase_every=N`), and
+//! `--ckpt-compress` the word-level RLE wire compression
+//! (`ckpt_compress=true`).  See DESIGN.md §8–§9.
 
 use std::path::{Path, PathBuf};
 
@@ -36,7 +39,7 @@ fn usage() -> ! {
     eprintln!(
         "usage: ftgmres <run|report|figure4|figure5|figure6|figures> \
          [--config FILE] [--policy POLICY] [--ckpt-scheme SCHEME] [--ckpt-delta] \
-         [--quick] [--out DIR] [key=value ...]"
+         [--ckpt-compress] [--quick] [--out DIR] [key=value ...]"
     );
     std::process::exit(2);
 }
@@ -85,6 +88,13 @@ fn parse_args() -> anyhow::Result<Args> {
             }
             "--ckpt-delta" => {
                 anyhow::ensure!(cfg.set("ckpt_delta", "true")?, "ckpt_delta key rejected");
+                rest.remove(i);
+            }
+            "--ckpt-compress" => {
+                anyhow::ensure!(
+                    cfg.set("ckpt_compress", "true")?,
+                    "ckpt_compress key rejected"
+                );
                 rest.remove(i);
             }
             "--out" => {
@@ -137,6 +147,15 @@ fn print_report(cfg: &RunConfig, rep: &RunReport) {
             shipped as f64 / 1e6,
             100.0 * shipped as f64 / (logical as f64).max(1.0),
         );
+        let raw = rep.ckpt_raw_bytes();
+        if raw > shipped {
+            println!(
+                "compression:   {:.2} MB raw -> {:.2} MB on the wire ({:.1}% saved)",
+                raw as f64 / 1e6,
+                shipped as f64 / 1e6,
+                100.0 * (1.0 - shipped as f64 / raw as f64),
+            );
+        }
     }
     if !rep.decisions.is_empty() {
         println!("\n{}", ulfm_ftgmres::figures::decision_table(rep).to_text());

@@ -138,10 +138,17 @@ pub struct CkptRecord {
     pub at: f64,
     /// Charged bytes of the full object set (the redundancy input).
     pub logical_bytes: usize,
-    /// Charged bytes this rank shipped for redundancy.
+    /// Charged bytes this rank shipped for redundancy (post-compression
+    /// when `ckpt_compress` is on).
     pub shipped_bytes: usize,
+    /// Charged bytes the same payloads would have cost uncompressed;
+    /// equals `shipped_bytes` when compression is off.
+    pub raw_bytes: usize,
     /// Whether this commit shipped chunk deltas (vs full payloads).
     pub delta: bool,
+    /// rs2 holder-rotation index of this commit (-1 for schemes without
+    /// rotation).
+    pub rotation: i64,
     /// Modeled encode/fold seconds spent by this rank.
     pub encode_secs: f64,
 }
@@ -223,9 +230,11 @@ impl RunReport {
                     .and_modify(|e| {
                         e.logical_bytes += c.logical_bytes;
                         e.shipped_bytes += c.shipped_bytes;
+                        e.raw_bytes += c.raw_bytes;
                         e.at = e.at.max(c.at);
                         e.encode_secs = e.encode_secs.max(c.encode_secs);
                         e.delta |= c.delta;
+                        e.rotation = e.rotation.max(c.rotation);
                     })
                     .or_insert_with(|| c.clone());
             }
@@ -266,6 +275,13 @@ impl RunReport {
         let shipped = self.ckpt.iter().map(|c| c.shipped_bytes).sum();
         let logical = self.ckpt.iter().map(|c| c.logical_bytes).sum();
         (shipped, logical, self.ckpt.len())
+    }
+
+    /// Total *uncompressed* redundancy bytes over all commits — equals the
+    /// shipped total when `ckpt_compress` is off; the gap is the
+    /// compression saving.
+    pub fn ckpt_raw_bytes(&self) -> usize {
+        self.ckpt.iter().map(|c| c.raw_bytes).sum()
     }
 }
 
@@ -408,12 +424,14 @@ mod tests {
 
     #[test]
     fn ckpt_records_merge_by_version() {
-        let rec = |version, shipped| CkptRecord {
+        let rec = |version, shipped: usize| CkptRecord {
             version,
             at: version as f64,
             logical_bytes: 100,
             shipped_bytes: shipped,
+            raw_bytes: shipped * 2,
             delta: version == 2,
+            rotation: version,
             encode_secs: 0.001 * version as f64,
         };
         let mk = |wr, ckpt| RankReport {
@@ -434,10 +452,13 @@ mod tests {
         assert_eq!(rep.ckpt.len(), 2);
         assert_eq!(rep.ckpt[0].version, 1);
         assert_eq!(rep.ckpt[0].shipped_bytes, 1600);
+        assert_eq!(rep.ckpt[0].raw_bytes, 3200);
         assert_eq!(rep.ckpt[0].logical_bytes, 200);
+        assert_eq!(rep.ckpt[0].rotation, 1);
         assert_eq!(rep.ckpt[1].shipped_bytes, 200);
         assert!(rep.ckpt[1].delta);
         let (shipped, logical, commits) = rep.ckpt_totals();
         assert_eq!((shipped, logical, commits), (1800, 400, 2));
+        assert_eq!(rep.ckpt_raw_bytes(), 3600);
     }
 }

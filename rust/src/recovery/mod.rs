@@ -18,11 +18,11 @@
 //!
 //! Failed state is read back through the checkpoint subsystem's recovery
 //! reader ([`crate::ckptstore::reconstruct_failed`]); when the loss is
-//! *unrecoverable* under the configured redundancy scheme (e.g. two
-//! failures in one `xor:<g>` parity group before a re-encode, see
-//! [`crate::ckptstore::assess_loss`]), the `GlobalRestart` branch rebuilds
-//! the problem from scratch on the survivors instead of wedging on a
-//! checkpoint that no longer exists.
+//! *unrecoverable* under the configured redundancy scheme (two failures in
+//! one `xor:<g>` parity group before a re-encode, or three in one
+//! `rs2:<g>` group — see [`crate::ckptstore::assess_loss`]), the
+//! `GlobalRestart` branch rebuilds the problem from scratch on the
+//! survivors instead of wedging on a checkpoint that no longer exists.
 
 pub mod global_restart;
 pub mod plan;
@@ -30,8 +30,8 @@ pub mod policy;
 pub mod shrink;
 pub mod substitute;
 
-use crate::checkpoint::{effective_stride, CkptStore};
-use crate::ckptstore::{self, CkptCfg, LossCheck};
+use crate::checkpoint::{agree_restore_version, effective_stride, CkptStore};
+use crate::ckptstore::{self, CkptCfg, LossCheck, Scheme};
 use crate::metrics::Phase;
 use crate::netsim::ComputeModel;
 use crate::simmpi::{ulfm, Comm, Ctx, MpiResult};
@@ -191,7 +191,15 @@ pub fn execute_decision(
             let alive = move |wr: usize| world.is_alive(wr);
             let stride = effective_stride(&ctx.world.net.params, old.size());
             let mut new_comm = shrunk;
-            match ckptstore::assess_loss(ckpt, &old.members, &alive, stride) {
+            // Same rotation-aware assessment the policy ran (rs2 holders
+            // depend on the restore version); the agreement is collective
+            // over the survivors, who all execute this same branch.
+            let restore_rot = if matches!(ckpt.scheme, Scheme::Rs2 { .. }) {
+                ckpt.rot_index(agree_restore_version(ctx, &mut new_comm, store)?)
+            } else {
+                0
+            };
+            match ckptstore::assess_loss(ckpt, &old.members, &alive, stride, restore_rot) {
                 LossCheck::Recoverable => {
                     shrink::recover(ctx, &old, &mut new_comm, state, store, ckpt, host)?;
                 }

@@ -326,7 +326,7 @@ mod tests {
                 buddy_k: 1,
                 horizon_iters: 50,
                 m_inner: 25,
-                xor_group: None,
+                parity: costs::ParityShape::Mirror,
             },
             failures_so_far: 1,
             event_seq: 0,

@@ -156,7 +156,10 @@ fn survivor_state_recovery(
                 .unwrap_or_else(|| panic!("serving copy of obj {id} missing"))
                 .1
                 .clone();
-            // Stored blobs already carry their scaled wire size.
+            // Stored blobs already carry their scaled wire size; the
+            // compression layer applies to this transfer too.
+            let blob =
+                if ckpt.compress { ckptstore::delta::compress_blob(&blob) } else { blob };
             stitched.send(ctx, spare_cr, spare_tag(id), blob)?;
         }
         // Control blob: restore version + recompute high-water mark
@@ -222,11 +225,15 @@ fn recover_spare_inner(
         .scheme
         .server_cr_for(me, n, &alive_cr, effective_stride(&ctx.world.net.params, n))
         .expect("unrecoverable loss must be escalated before substitution");
-    let mat_blob = comm.recv(ctx, server_cr, spare_tag(obj::MAT))?;
-    let rhs_blob = comm.recv(ctx, server_cr, spare_tag(obj::RHS))?;
-    let x_blob = comm.recv(ctx, server_cr, spare_tag(obj::X))?;
-    let basis_blob = comm.recv(ctx, server_cr, spare_tag(obj::BASIS))?;
-    let iter_blob = comm.recv(ctx, server_cr, spare_tag(obj::ITER))?;
+    let fetch = |ctx: &mut Ctx, id: u32| -> MpiResult<Blob> {
+        let blob = comm.recv(ctx, server_cr, spare_tag(id))?;
+        Ok(if ckpt.compress { ckptstore::delta::decompress_blob(&blob) } else { blob })
+    };
+    let mat_blob = fetch(ctx, obj::MAT)?;
+    let rhs_blob = fetch(ctx, obj::RHS)?;
+    let x_blob = fetch(ctx, obj::X)?;
+    let basis_blob = fetch(ctx, obj::BASIS)?;
+    let iter_blob = fetch(ctx, obj::ITER)?;
     let ctl = comm.recv(ctx, server_cr, spare_tag(99))?;
     let v = ctl.i[0];
     let hwm = ctl.i[1] as u64;

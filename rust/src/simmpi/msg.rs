@@ -24,12 +24,23 @@ pub mod tags {
     /// XOR parity contributions (member -> group holder), one tag per
     /// object id, inside the checkpoint window above the mirror tags.
     pub const CKPT_PARITY_BASE: Tag = CKPT_BASE + (1 << 12);
+    /// rs2 combined Q-stripe forwards (P holder -> Q holder):
+    /// CKPT_QPAR_BASE + object id * 1024 + parity group, inside the
+    /// checkpoint window above the parity-contribution tags.
+    pub const CKPT_QPAR_BASE: Tag = CKPT_BASE + (1 << 13);
     /// Recovery / redistribution transfers.
     pub const RECOVER_BASE: Tag = 1 << 20;
     /// Parity reconstruction (surviving group member -> holder):
     /// RECON_BASE + object id * 4096 + failed comm rank, inside the
     /// recovery window above the redistribution and spare-transfer tags.
     pub const RECON_BASE: Tag = RECOVER_BASE + (1 << 19);
+    /// rs2 reconstruction gathers (surviving member -> reconstruction
+    /// leader): RECON_MEMBER_BASE + object id * 1024 + parity group.
+    pub const RECON_MEMBER_BASE: Tag = RECON_BASE + (1 << 17);
+    /// rs2 stripe transfers (holder -> reconstruction leader):
+    /// RECON_STRIPE_BASE + object id * 2048 + group * 2 + which (0 = P,
+    /// 1 = Q).
+    pub const RECON_STRIPE_BASE: Tag = RECON_BASE + (1 << 18);
 }
 
 /// Typed payload container: every application message is some mix of f64 and
@@ -151,8 +162,11 @@ mod tests {
         assert!(RECOVER_BASE + 10_000 < CKPT_BASE);
         // Sub-windows nest inside their parents without touching siblings.
         assert!(CKPT_BASE + 6 * 16 < CKPT_PARITY_BASE); // mirror ship tags below parity
-        assert!(CKPT_PARITY_BASE + 1_000 < HALO_BASE);
+        assert!(CKPT_PARITY_BASE + 1_000 < CKPT_QPAR_BASE); // parity tags below Q forwards
+        assert!(CKPT_QPAR_BASE + 6 * 1024 < HALO_BASE);
         assert!(RECON_BASE > RECOVER_BASE + (1 << 18) + 10_000); // above spare tags
-        assert!(RECON_BASE + 6 * 4096 < CKPT_BASE);
+        assert!(RECON_BASE + 6 * 4096 < RECON_MEMBER_BASE);
+        assert!(RECON_MEMBER_BASE + 6 * 1024 < RECON_STRIPE_BASE);
+        assert!(RECON_STRIPE_BASE + 6 * 2048 < CKPT_BASE);
     }
 }

@@ -277,6 +277,12 @@ impl SolverState {
     /// Periodic dynamic-state checkpoint (x0 + basis + iteration state) —
     /// taken after each completed inner solve, per the paper.  Ships chunk
     /// deltas when the delta layer is on.
+    ///
+    /// Under `rs2`, commits at rotation/rebase boundaries
+    /// ([`CkptCfg::static_reencode_due`]) additionally re-encode the static
+    /// objects: the incoming holder pair starts with no stripes, so the
+    /// matrix and rhs stripes must move along with the rotation for the
+    /// whole restorable state to live on one holder pair.
     pub fn checkpoint_dynamic(
         &mut self,
         ctx: &mut Ctx,
@@ -286,11 +292,14 @@ impl SolverState {
     ) -> MpiResult<()> {
         let version = self.scalars.next_version;
         let ds = ctx.world.net.params.data_scale;
-        let objs = vec![
-            (obj::X, Blob::from_f64s(self.x.clone()).scaled(ds)),
-            (obj::BASIS, self.basis_blob().scaled(ds)),
-            (obj::ITER, self.iter_blob()),
-        ];
+        let mut objs = Vec::with_capacity(5);
+        if ckpt.static_reencode_due(version) {
+            objs.push((obj::MAT, self.mat.to_blob().scaled(ds)));
+            objs.push((obj::RHS, Blob::from_f64s(self.b.clone()).scaled(ds)));
+        }
+        objs.push((obj::X, Blob::from_f64s(self.x.clone()).scaled(ds)));
+        objs.push((obj::BASIS, self.basis_blob().scaled(ds)));
+        objs.push((obj::ITER, self.iter_blob()));
         crate::ckptstore::commit(ctx, comm, store, &objs, version, ckpt, false)?;
         self.scalars.next_version = version + 1;
         Ok(())

@@ -1,19 +1,24 @@
 //! End-to-end checkpoint-store scheme tests: xor parity recovery through
-//! both in-situ strategies, delta commits, and group-failure escalation to
-//! a global restart (DESIGN.md §8).
+//! both in-situ strategies, rs2 double-parity recovery of every
+//! two-in-group loss pattern, delta commits, wire compression, and
+//! group-failure escalation to a global restart (DESIGN.md §8–§9).
 
 mod common;
 
 use std::sync::Arc;
 
-use common::quick_config;
+use common::{quick_config, Rng};
 use ulfm_ftgmres::backend::native::NativeBackend;
+use ulfm_ftgmres::ckptstore::delta::{
+    compress_blob, decompress_blob, rle_compress, rle_decompress,
+};
 use ulfm_ftgmres::ckptstore::Scheme;
 use ulfm_ftgmres::config::RunConfig;
 use ulfm_ftgmres::coordinator;
 use ulfm_ftgmres::failure::InjectionPlan;
 use ulfm_ftgmres::metrics::RunReport;
 use ulfm_ftgmres::recovery::Strategy;
+use ulfm_ftgmres::simmpi::Blob;
 
 fn with_scheme(mut cfg: RunConfig, scheme: Scheme, delta: bool) -> RunConfig {
     cfg.solver.ckpt.scheme = scheme;
@@ -187,6 +192,263 @@ fn adjacent_pair_loss_under_mirror1_escalates() {
     assert!(rep.converged, "relres={}", rep.final_relres);
 }
 
+/// rs2 tentpole: a member+member double fault inside ONE parity group —
+/// exactly the pattern that forces a global restart under xor:4 — is
+/// solved in situ by the double-parity two-erasure solve: no
+/// `GlobalRestart` is ever recorded and the run converges to the right
+/// answer.
+#[test]
+fn rs2_same_group_double_fault_recovers_in_situ() {
+    let cfg = with_scheme(quick_config(8, Strategy::Shrink, 0), Scheme::Rs2 { g: 4 }, false);
+    let plan = InjectionPlan::same_group_burst(8, 4, 0, 2, 25);
+    let rep = run_with_plan(&cfg, plan);
+    assert_eq!(rep.failures, 2, "both kills fired");
+    assert!(!rep.decisions.is_empty());
+    assert!(
+        rep.decisions.iter().all(|d| d.decision != "global-restart"),
+        "double parity must solve the double fault: {:?}",
+        rep.decisions.iter().map(|d| d.decision).collect::<Vec<_>>()
+    );
+    assert!(rep.converged, "relres={}", rep.final_relres);
+    assert!(rep.final_relres < 1e-10);
+}
+
+/// Every member+holder / member+outside-rank pairing recovers under rs2:
+/// rank 1 (group 0) dies together with each rank of the outside ring
+/// {4..7} in turn — whichever pair of them holds group 0's stripes at the
+/// restore rotation, at least one stripe survives a single-holder loss, so
+/// all four pairings stay in situ (and the set provably covers the
+/// member+P-holder and member+Q-holder solves).
+#[test]
+fn rs2_member_plus_holder_double_faults_recover() {
+    for outside in 4..8 {
+        let cfg =
+            with_scheme(quick_config(8, Strategy::Shrink, 0), Scheme::Rs2 { g: 4 }, false);
+        let plan = InjectionPlan::burst(&[1, outside], 25);
+        let rep = run_with_plan(&cfg, plan);
+        assert_eq!(rep.failures, 2, "outside={outside}");
+        assert!(
+            rep.decisions.iter().all(|d| d.decision != "global-restart"),
+            "member 1 + rank {outside} must recover in situ"
+        );
+        assert!(rep.converged, "outside={outside}: relres={}", rep.final_relres);
+    }
+}
+
+/// Losing both of a group's stripe holders at once destroys no group data
+/// (it is simultaneously a two-member loss of the holders' own group,
+/// which the double parity of THAT group solves): recover in situ, and the
+/// next commits re-home the orphaned stripes.
+#[test]
+fn rs2_double_holder_loss_recovers_and_rehomes() {
+    let cfg = with_scheme(quick_config(8, Strategy::Shrink, 0), Scheme::Rs2 { g: 4 }, false);
+    // Ranks 4+5: two members of group 1, and (at rotation 0) group 0's
+    // (P, Q) holder pair.
+    let plan = InjectionPlan::burst(&[4, 5], 25);
+    let rep = run_with_plan(&cfg, plan);
+    assert_eq!(rep.failures, 2);
+    assert!(
+        rep.decisions.iter().all(|d| d.decision != "global-restart"),
+        "holder-only loss per group 0 + double member loss of group 1 both stay in situ"
+    );
+    assert!(rep.converged, "relres={}", rep.final_relres);
+    assert!(rep.final_relres < 1e-10);
+}
+
+/// Three concurrent losses in one rs2 group exceed the double parity and
+/// must deterministically escalate to a recorded global restart — which
+/// still produces the right answer.
+#[test]
+fn rs2_triple_fault_escalates_to_global_restart() {
+    let cfg = with_scheme(quick_config(8, Strategy::Shrink, 0), Scheme::Rs2 { g: 4 }, false);
+    let plan = InjectionPlan::same_group_burst(8, 4, 0, 3, 25);
+    let rep = run_with_plan(&cfg, plan);
+    assert_eq!(rep.failures, 3);
+    assert_eq!(rep.decisions[0].decision, "global-restart");
+    assert!(
+        rep.decisions[0].reason.contains("unrecoverable"),
+        "escalation reason recorded: {}",
+        rep.decisions[0].reason
+    );
+    assert!(rep.converged, "relres={}", rep.final_relres);
+}
+
+/// Substitute recovery under rs2: the reconstruction leader solves the
+/// double fault and serves both spares their slots' state.
+#[test]
+fn rs2_substitute_double_fault_uses_spares() {
+    let cfg =
+        with_scheme(quick_config(8, Strategy::Substitute, 2), Scheme::Rs2 { g: 4 }, false);
+    let plan = InjectionPlan::same_group_burst(8, 4, 0, 2, 25);
+    let rep = run_with_plan(&cfg, plan);
+    assert_eq!(rep.failures, 2);
+    assert!(
+        rep.decisions.iter().all(|d| d.decision == "substitute"),
+        "{:?}",
+        rep.decisions.iter().map(|d| d.decision).collect::<Vec<_>>()
+    );
+    assert!(rep.converged, "relres={}", rep.final_relres);
+    assert_eq!(
+        rep.ranks.iter().filter(|r| r.was_spare && r.iterations > 0).count(),
+        2,
+        "both spares adopted the failed slots"
+    );
+}
+
+/// rs2 reconstruction is bit-exact: a single failure restores the same
+/// committed state as mirror:1, so the post-recovery iteration history is
+/// identical — and rs2+delta composes the same way.
+#[test]
+fn rs2_restores_the_same_committed_state_as_mirror() {
+    let mirror = coordinator::run(&with_scheme(
+        quick_config(8, Strategy::Shrink, 1),
+        Scheme::Mirror { k: 1 },
+        false,
+    ))
+    .unwrap();
+    for delta in [false, true] {
+        let rs2 = coordinator::run(&with_scheme(
+            quick_config(8, Strategy::Shrink, 1),
+            Scheme::Rs2 { g: 4 },
+            delta,
+        ))
+        .unwrap();
+        assert_eq!(rs2.failures, 1);
+        assert!(rs2.converged, "delta={delta}: relres={}", rs2.final_relres);
+        assert_eq!(
+            mirror.iterations, rs2.iterations,
+            "delta={delta}: same restored state, same history"
+        );
+    }
+}
+
+/// Holder rotation actually happens: over a failure-free rs2+delta run the
+/// per-commit rotation index advances through at least three distinct
+/// epochs, and every commit records its rotation position.
+#[test]
+fn rs2_rotation_advances_across_commits() {
+    let mut cfg =
+        with_scheme(quick_config(8, Strategy::Shrink, 0), Scheme::Rs2 { g: 4 }, true);
+    cfg.solver.ckpt.rebase_every = 4;
+    let rep = coordinator::run(&cfg).unwrap();
+    assert!(rep.converged);
+    let rotations: std::collections::BTreeSet<i64> =
+        rep.ckpt.iter().map(|c| c.rotation).collect();
+    assert!(!rotations.contains(&-1), "every rs2 commit records its rotation");
+    assert!(
+        rotations.len() >= 3,
+        "rotation must sweep >= 3 epochs over the run, got {rotations:?}"
+    );
+    // Rotation follows version / rebase_every exactly.
+    for c in &rep.ckpt {
+        assert_eq!(c.rotation, c.version / 4, "version {}", c.version);
+    }
+    // Non-rotating schemes record -1.
+    let xor =
+        coordinator::run(&with_scheme(quick_config(8, Strategy::Shrink, 0), Scheme::Xor { g: 4 }, false))
+            .unwrap();
+    assert!(xor.ckpt.iter().all(|c| c.rotation == -1));
+}
+
+/// Compression round-trip property test on random sparse deltas: RLE
+/// encode/decode is the identity on word streams, never expands beyond the
+/// documented bound, and collapses sparse vectors.
+#[test]
+fn compression_roundtrips_random_sparse_deltas() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for case in 0..200 {
+        let n = rng.below(600);
+        let density_pct = rng.below(100);
+        let words: Vec<i64> = (0..n)
+            .map(|_| {
+                if rng.below(100) < density_pct {
+                    // Mix of arbitrary values and short repeats.
+                    if rng.below(4) == 0 {
+                        7
+                    } else {
+                        rng.next_u64() as i64
+                    }
+                } else {
+                    0
+                }
+            })
+            .collect();
+        let toks = rle_compress(&words);
+        assert!(toks.len() <= words.len() + 2, "case {case}: bound violated");
+        assert_eq!(rle_decompress(&toks), words, "case {case}: roundtrip broke");
+    }
+    // Blob envelope: bit-exact f64 lane, exact i lane, preserved factor.
+    for case in 0..50 {
+        let nf = rng.below(300);
+        let ni = rng.below(50);
+        let f: Vec<f64> = (0..nf)
+            .map(|_| if rng.below(3) == 0 { 0.0 } else { rng.f64() })
+            .collect();
+        let i: Vec<i64> = (0..ni).map(|_| rng.next_u64() as i64 % 9).collect();
+        let blob = Blob { f, i, wire: None }.scaled(1.0 + rng.below(40) as f64);
+        let out = decompress_blob(&compress_blob(&blob));
+        assert_eq!(out.i, blob.i, "case {case}");
+        assert_eq!(out.f.len(), blob.f.len());
+        for (x, y) in out.f.iter().zip(&blob.f) {
+            assert_eq!(x.to_bits(), y.to_bits(), "case {case}: f64 bits changed");
+        }
+        assert_eq!(out.bytes(), blob.bytes(), "case {case}: charged size changed");
+    }
+}
+
+/// Compression is transport-only: the solve (and its answer) is identical
+/// with and without `ckpt_compress`, recoveries still work, and the
+/// recorded raw bytes of the compressed run equal the shipped bytes of the
+/// uncompressed one.  On the parity schemes with coarse chunks the wire
+/// bill drops hard — zero-run elision recovers word-granular deltas from
+/// chunk-granular shipping (`old ^ new` zeroes every unchanged word inside
+/// a changed chunk); mirror deltas carry *new* words, so there compression
+/// is only asserted not to blow up the bill.
+#[test]
+fn compression_changes_transport_not_math() {
+    for scheme in [Scheme::Mirror { k: 1 }, Scheme::Xor { g: 4 }, Scheme::Rs2 { g: 4 }] {
+        let parity = scheme != Scheme::Mirror { k: 1 };
+        let mut base = with_scheme(quick_config(8, Strategy::Shrink, 1), scheme, true);
+        if parity {
+            // Coarse chunks: the uncompressed wire pays the chunk padding,
+            // compression elides it.
+            base.solver.ckpt.chunk_kib = 32;
+        }
+        let plain = coordinator::run(&base).unwrap();
+        let mut cfg = base.clone();
+        cfg.solver.ckpt.compress = true;
+        let comp = coordinator::run(&cfg).unwrap();
+        assert!(plain.converged && comp.converged, "{scheme:?}");
+        assert_eq!(
+            plain.iterations, comp.iterations,
+            "{scheme:?}: compression must not change the math"
+        );
+        let (plain_shipped, _, plain_commits) = plain.ckpt_totals();
+        let (comp_shipped, _, comp_commits) = comp.ckpt_totals();
+        assert_eq!(plain_commits, comp_commits);
+        assert_eq!(
+            comp.ckpt_raw_bytes(),
+            plain_shipped,
+            "{scheme:?}: raw accounting must match the uncompressed wire bill"
+        );
+        if parity {
+            assert!(
+                10 * comp_shipped < 9 * plain_shipped,
+                "{scheme:?}: compression must cut the parity wire bill by >10% \
+                 ({comp_shipped} vs {plain_shipped})"
+            );
+        } else {
+            assert!(
+                comp_shipped <= plain_shipped + plain_shipped / 10,
+                "{scheme:?}: compression overhead must stay marginal \
+                 ({comp_shipped} vs {plain_shipped})"
+            );
+        }
+        // Uncompressed runs report raw == shipped.
+        assert_eq!(plain.ckpt_raw_bytes(), plain_shipped, "{scheme:?}");
+    }
+}
+
 /// Checkpoint metrics land in the run report: commits are recorded with
 /// positive logical and shipped bytes under every scheme.
 #[test]
@@ -196,6 +458,8 @@ fn ckpt_records_populate_the_report() {
         (Scheme::Mirror { k: 2 }, false),
         (Scheme::Xor { g: 4 }, false),
         (Scheme::Xor { g: 4 }, true),
+        (Scheme::Rs2 { g: 4 }, false),
+        (Scheme::Rs2 { g: 4 }, true),
     ] {
         let rep =
             coordinator::run(&with_scheme(quick_config(8, Strategy::Shrink, 0), scheme, delta))
@@ -203,10 +467,17 @@ fn ckpt_records_populate_the_report() {
         let (shipped, logical, commits) = rep.ckpt_totals();
         assert!(commits > 1, "{scheme:?}: establishment + dynamic commits");
         assert!(logical > 0 && shipped > 0, "{scheme:?}");
-        // mirror:2 ships two copies of everything; everyone else at most
-        // one copy's worth.
+        // mirror:2 ships two copies of everything; rs2 one contribution
+        // plus the amortized group-level Q forward (~(1 + 1/g) x state);
+        // everyone else at most one copy's worth.
         if scheme == (Scheme::Mirror { k: 2 }) {
             assert!(shipped > logical, "{scheme:?}: k=2 ships 2x state");
+        } else if matches!(scheme, Scheme::Rs2 { .. }) {
+            assert!(
+                2 * shipped <= 3 * logical,
+                "{scheme:?}: double parity stays well under 1.5x state \
+                 ({shipped} vs {logical})"
+            );
         } else {
             assert!(shipped <= logical + logical / 8, "{scheme:?}: at most ~1x state");
         }
