@@ -1,0 +1,105 @@
+//! Failures *during* recovery (DESIGN.md §10): the epoch-fenced
+//! restartable recovery protocol survives a second rank dying in the
+//! middle of the first failure's recovery — mid-reconstruction on the
+//! shrink path, and mid-join on the substitute path (a spare lease that
+//! rolls back when the joiner dies before activation).  Both legs must
+//! complete **in situ**: zero executed global restarts, a converged solve,
+//! and the retries visible in the decision log's `attempt` column.
+//!
+//! ```sh
+//! cargo run --release --example nested_failure
+//! ```
+//!
+//! The same campaigns are reachable from the CLI via `--inject-phase`,
+//! e.g. `ftgmres run p=8 failures=1 ckpt_scheme=xor:4 --inject-phase
+//! 3:reconstruct`.
+
+use std::sync::Arc;
+
+use ulfm_ftgmres::backend::native::NativeBackend;
+use ulfm_ftgmres::ckptstore::Scheme;
+use ulfm_ftgmres::config::RunConfig;
+use ulfm_ftgmres::coordinator;
+use ulfm_ftgmres::failure::{InjectionPlan, ProtoPhase};
+use ulfm_ftgmres::figures::decision_table;
+use ulfm_ftgmres::problem::Grid3D;
+use ulfm_ftgmres::recovery::Strategy;
+
+fn base_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.grid = Grid3D::cube(12);
+    cfg.p = 8;
+    cfg.solver.tol = 1e-10;
+    cfg.solver.m_inner = 10;
+    cfg.solver.m_outer = 20;
+    cfg.solver.max_cycles = 20;
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    // --- Leg 1: shrink recovery poisoned at the reconstruction read ---
+    // Rank 7 (xor:4 parity group 1) dies at iteration 25; rank 3 (group 0)
+    // dies entering the reconstruction of that recovery.  The union is one
+    // loss per group — still recoverable — so the fence must retry and
+    // finish without a restart.
+    println!("# leg 1: shrink, second failure at Phase::Reconstruct");
+    let mut cfg = base_cfg();
+    cfg.strategy = Strategy::Shrink;
+    cfg.solver.ckpt.scheme = Scheme::Xor { g: 4 };
+    let backend = Arc::new(NativeBackend::new(cfg.compute.clone()));
+    let plan = InjectionPlan::nested(7, 25, 3, ProtoPhase::Reconstruct, 1);
+    let rep = coordinator::run_custom(&cfg, backend.clone(), plan)?;
+    println!(
+        "tts={:.4}s iters={} relres={:.2e} converged={} failures={} epoch_retries={}",
+        rep.time_to_solution,
+        rep.iterations,
+        rep.final_relres,
+        rep.converged,
+        rep.failures,
+        rep.recovery_retries,
+    );
+    println!("{}", decision_table(&rep).to_text());
+    assert!(rep.converged);
+    assert_eq!(rep.global_restarts(), 0, "recoverable nested pattern must not restart");
+    assert!(rep.recovery_retries >= 1, "the poisoned attempt was fenced and retried");
+
+    // --- Leg 2: substitute recovery poisoned at the spare join ---
+    // Rank 5 dies at iteration 25; the first warm spare (world rank 8)
+    // dies entering its join, before the lease activates.  The retry
+    // re-derives availability from the registry and stitches spare 9.
+    println!("# leg 2: substitute, second failure at Phase::SpareJoin");
+    let mut cfg = base_cfg();
+    cfg.strategy = Strategy::Substitute;
+    cfg.failures = 1;
+    cfg.warm_spares = Some(2);
+    let backend = Arc::new(NativeBackend::new(cfg.compute.clone()));
+    let plan = InjectionPlan::nested(5, 25, 8, ProtoPhase::SpareJoin, 1);
+    let rep = coordinator::run_custom(&cfg, backend, plan)?;
+    println!(
+        "tts={:.4}s iters={} relres={:.2e} converged={} failures={} epoch_retries={}",
+        rep.time_to_solution,
+        rep.iterations,
+        rep.final_relres,
+        rep.converged,
+        rep.failures,
+        rep.recovery_retries,
+    );
+    println!("{}", decision_table(&rep).to_text());
+    assert!(rep.converged);
+    assert_eq!(rep.global_restarts(), 0);
+    assert!(rep.recovery_retries >= 1, "the interrupted join was fenced and retried");
+    assert_eq!(rep.decisions.len(), 1);
+    assert_eq!(rep.decisions[0].decision, "substitute");
+    let adopted = rep
+        .ranks
+        .iter()
+        .find(|r| r.world_rank == 9)
+        .expect("second spare in the report");
+    assert!(
+        adopted.was_spare && !adopted.killed && adopted.iterations > 0,
+        "spare 9 took over after spare 8's lease rolled back"
+    );
+
+    println!("nested-failure legs complete: in-situ recovery survived failures during recovery");
+    Ok(())
+}

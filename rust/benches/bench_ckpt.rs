@@ -21,7 +21,7 @@ use ulfm_ftgmres::backend::native::NativeBackend;
 use ulfm_ftgmres::ckptstore::Scheme;
 use ulfm_ftgmres::config::RunConfig;
 use ulfm_ftgmres::coordinator;
-use ulfm_ftgmres::failure::InjectionPlan;
+use ulfm_ftgmres::failure::{InjectionPlan, ProtoPhase};
 use ulfm_ftgmres::metrics::RunReport;
 use ulfm_ftgmres::problem::Grid3D;
 use ulfm_ftgmres::recovery::Strategy;
@@ -41,6 +41,7 @@ struct LegResult {
     iterations: u64,
     converged: bool,
     global_restarts: usize,
+    epoch_retries: u64,
 }
 
 struct LegCfg {
@@ -52,18 +53,31 @@ struct LegCfg {
     /// Rebase/rotation period (None = default).
     rebase_every: Option<u32>,
     failures: usize,
+    strategy: Strategy,
+    /// Warm-spare override (None = derived from failures/strategy).
+    warm_spares: Option<usize>,
 }
 
 impl LegCfg {
     fn new(scheme: Scheme, delta: bool) -> LegCfg {
-        LegCfg { scheme, delta, compress: false, chunk_kib: None, rebase_every: None, failures: 0 }
+        LegCfg {
+            scheme,
+            delta,
+            compress: false,
+            chunk_kib: None,
+            rebase_every: None,
+            failures: 0,
+            strategy: Strategy::Shrink,
+            warm_spares: None,
+        }
     }
 
     fn build(&self) -> RunConfig {
         let mut cfg = RunConfig::default();
         cfg.grid = Grid3D::cube(16);
         cfg.p = 8;
-        cfg.strategy = Strategy::Shrink;
+        cfg.strategy = self.strategy;
+        cfg.warm_spares = self.warm_spares;
         cfg.failures = self.failures;
         cfg.solver.tol = 1e-10;
         cfg.solver.m_inner = 10;
@@ -100,7 +114,8 @@ fn leg_result(name: &'static str, leg: &LegCfg, rep: RunReport) -> LegResult {
         tts: rep.time_to_solution,
         iterations: rep.iterations,
         converged: rep.converged,
-        global_restarts: rep.decisions.iter().filter(|d| d.decision == "global-restart").count(),
+        global_restarts: rep.global_restarts(),
+        epoch_retries: rep.recovery_retries,
     }
 }
 
@@ -166,6 +181,26 @@ fn main() -> anyhow::Result<()> {
             "rs2_4_doublefault",
             LegCfg::new(Scheme::Rs2 { g: 4 }, false),
             InjectionPlan::same_group_burst(8, 4, 0, 2, 25),
+        ),
+        // Nested-failure legs (DESIGN.md §10): a second failure strikes
+        // *inside* the recovery of the first — at the reconstruction read
+        // (shrink path) and at the spare join (substitute path).  Both
+        // unions stay recoverable, so the epoch-fenced protocol must
+        // complete them in situ: converged, zero executed global restarts,
+        // and at least one recorded recovery-epoch retry.
+        run_leg_with_plan(
+            "nested_reconstruct",
+            LegCfg::new(Scheme::Xor { g: 4 }, false),
+            InjectionPlan::nested(7, 25, 3, ProtoPhase::Reconstruct, 1),
+        ),
+        run_leg_with_plan(
+            "nested_sparejoin",
+            LegCfg {
+                strategy: Strategy::Substitute,
+                warm_spares: Some(2),
+                ..LegCfg::new(Scheme::Mirror { k: 1 }, false)
+            },
+            InjectionPlan::nested(5, 25, 8, ProtoPhase::SpareJoin, 1),
         ),
     ];
 
@@ -254,6 +289,22 @@ fn main() -> anyhow::Result<()> {
         "rs2:4 must recover the two-in-group loss without a restart"
     );
 
+    // ...and the nested-failure legs complete in situ: a second failure at
+    // Phase::Reconstruct / Phase::SpareJoin during the first recovery is
+    // absorbed by the epoch fence — no executed global restart, with the
+    // poisoned attempts showing up as recovery-epoch retries.
+    for name in ["nested_reconstruct", "nested_sparejoin"] {
+        let l = by_name(name);
+        assert_eq!(
+            l.global_restarts, 0,
+            "{name}: recoverable nested pattern must not escalate to a restart"
+        );
+        assert!(
+            l.epoch_retries >= 1,
+            "{name}: the poisoned recovery attempt must be fenced and retried"
+        );
+    }
+
     // Emit BENCH_ckpt.json at the repository root.
     let mut json = String::new();
     json.push_str("{\n  \"bench\": \"ckpt\",\n  \"workload\": \"ftgmres p=8 cube16 m_inner=10\",\n");
@@ -269,7 +320,7 @@ fn main() -> anyhow::Result<()> {
              \"commits\": {}, \"shipped_bytes\": {}, \"raw_bytes\": {}, \"logical_bytes\": {}, \
              \"bytes_per_commit\": {:.1}, \"commit_latency_ms\": {:.4}, \
              \"tts_virtual_s\": {:.4}, \"iterations\": {}, \"converged\": {}, \
-             \"global_restarts\": {}}}{}",
+             \"global_restarts\": {}, \"epoch_retries\": {}}}{}",
             l.name,
             l.scheme,
             l.delta,
@@ -284,6 +335,7 @@ fn main() -> anyhow::Result<()> {
             l.iterations,
             l.converged,
             l.global_restarts,
+            l.epoch_retries,
             if i + 1 < legs.len() { "," } else { "" }
         );
     }

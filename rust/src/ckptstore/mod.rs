@@ -82,6 +82,7 @@ pub use scheme::Scheme;
 use crate::checkpoint::{
     buddy_of_stride, effective_stride, ward_of_stride, CkptStore, ObjId, ParityStripe, Version,
 };
+use crate::failure::ProtoPhase;
 use crate::metrics::{CkptRecord, Phase};
 use crate::simmpi::{tags, Blob, Comm, Ctx, MpiResult, Tag, WorldRank};
 
@@ -247,6 +248,12 @@ fn commit_inner(
     cfg: &CkptCfg,
     fresh: bool,
 ) -> MpiResult<()> {
+    // Fault point: a member (or stripe holder) dying as the commit starts.
+    // Atomicity-by-version holds regardless of where in the exchange the
+    // death lands: the version is committed only by the agreement below, so
+    // survivors of a torn commit keep the previous committed floor intact
+    // and the commit is re-runnable after recovery.
+    ctx.phase_point(ProtoPhase::CkptCommit)?;
     let n = comm.size();
     let use_delta = cfg.use_delta(version, fresh);
     let mut shipped = 0usize;
@@ -921,6 +928,11 @@ pub fn reconstruct_failed(
     v: Version,
     objs: &[ObjId],
 ) -> MpiResult<()> {
+    // Fault point: a survivor dying as reconstruction starts (nested
+    // failure inside recovery).  All writes below are idempotent puts at
+    // fixed versions, so an interrupted reconstruction is re-runnable by
+    // the next recovery attempt with the enlarged failure set.
+    ctx.phase_point(ProtoPhase::Reconstruct)?;
     let n_old = old_members.len();
     if !cfg.scheme.parity_active(n_old) {
         return Ok(());

@@ -7,7 +7,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::ckptstore::Scheme;
-use crate::failure::InjectionPlan;
+use crate::failure::{InjectionPlan, ProtoPhase};
 use crate::netsim::{ComputeModel, NetParams};
 use crate::problem::Grid3D;
 use crate::recovery::{Decision, PolicyKind, Strategy};
@@ -59,6 +59,13 @@ pub struct RunConfig {
     pub policy_horizon: Option<u64>,
     /// Failures to inject (0 = failure-free; ignored for NoProtection).
     pub failures: usize,
+    /// Protocol-phase kills appended to the campaign (key `inject_phase`,
+    /// CLI `--inject-phase`): `rank:phase[:occurrence]`, comma-separated —
+    /// e.g. `3:reconstruct` (rank 3 dies entering the first
+    /// reconstruction) or `8:spare-join:1,2:agree:2`.  This is how
+    /// nested-failure campaigns place a second death *inside* the recovery
+    /// of a first (see [`crate::failure::ProtoPhase`]).
+    pub inject_phase: Vec<(usize, ProtoPhase, u32)>,
     pub solver: FtGmresCfg,
     pub net: NetParams,
     pub compute: ComputeModel,
@@ -80,6 +87,7 @@ impl Default for RunConfig {
             cold_spares: None,
             policy_horizon: None,
             failures: 0,
+            inject_phase: Vec::new(),
             solver: FtGmresCfg::default(),
             net: NetParams::default(),
             compute: ComputeModel::default(),
@@ -137,9 +145,14 @@ impl RunConfig {
         SparePool::new(self.p, self.warm_spare_count(), self.cold_spare_count())
     }
 
-    /// The paper's reproducible injection campaign for this leg.
+    /// The paper's reproducible injection campaign for this leg, plus any
+    /// configured protocol-phase kills (`inject_phase`).  The no-protection
+    /// baseline never injects anything.
     pub fn injection_plan(&self) -> InjectionPlan {
-        if self.strategy == Strategy::NoProtection || self.failures == 0 {
+        if self.strategy == Strategy::NoProtection {
+            return InjectionPlan::none();
+        }
+        let base = if self.failures == 0 {
             InjectionPlan::none()
         } else {
             InjectionPlan::paper_campaign(
@@ -148,7 +161,33 @@ impl RunConfig {
                 self.solver.m_inner as u64,
                 self.strategy == Strategy::Shrink,
             )
+        };
+        base.with_phase_kills(&self.inject_phase)
+    }
+
+    /// Parse one `inject_phase` value: comma-separated
+    /// `rank:phase[:occurrence]` entries (occurrence defaults to 1).
+    fn parse_inject_phase(v: &str) -> anyhow::Result<Vec<(usize, ProtoPhase, u32)>> {
+        let mut out = Vec::new();
+        for entry in v.split(',') {
+            let parts: Vec<&str> = entry.trim().split(':').collect();
+            anyhow::ensure!(
+                parts.len() == 2 || parts.len() == 3,
+                "inject_phase entry '{entry}' must be rank:phase[:occurrence]"
+            );
+            let rank: usize = parts[0].trim().parse()?;
+            let phase = ProtoPhase::parse(parts[1]).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown phase '{}' (expected ckpt-commit, detect, agree, \
+                     reconstruct, spare-join or redistribute)",
+                    parts[1]
+                )
+            })?;
+            let occurrence: u32 = if parts.len() == 3 { parts[2].trim().parse()? } else { 1 };
+            anyhow::ensure!(occurrence >= 1, "occurrence is 1-based, got 0 in '{entry}'");
+            out.push((rank, phase, occurrence));
         }
+        Ok(out)
     }
 
     /// Whether checkpointing runs at all.
@@ -191,6 +230,7 @@ impl RunConfig {
             "cold_spares" => self.cold_spares = Some(v.parse()?),
             "policy_horizon" => self.policy_horizon = Some(v.parse()?),
             "failures" => self.failures = v.parse()?,
+            "inject_phase" => self.inject_phase = Self::parse_inject_phase(v)?,
             "m_inner" => self.solver.m_inner = v.parse()?,
             "m_outer" => self.solver.m_outer = v.parse()?,
             "tol" => self.solver.tol = v.parse()?,
@@ -266,6 +306,16 @@ impl RunConfig {
         m.insert("policy", self.policy().name());
         m.insert("spares", format!("{}w+{}c", self.warm_spare_count(), self.cold_spare_count()));
         m.insert("failures", self.failures.to_string());
+        if !self.inject_phase.is_empty() {
+            m.insert(
+                "inject_phase",
+                self.inject_phase
+                    .iter()
+                    .map(|(r, p, o)| format!("{r}:{}:{o}", p.name()))
+                    .collect::<Vec<_>>()
+                    .join(","),
+            );
+        }
         m.insert(
             "ckpt",
             format!(
@@ -378,9 +428,36 @@ mod tests {
         let mut c = RunConfig::default();
         c.strategy = Strategy::NoProtection;
         c.failures = 4;
+        c.inject_phase = vec![(1, ProtoPhase::Agree, 1)];
         assert_eq!(c.injection_plan().n_failures(), 0);
         assert!(!c.ckpt_enabled());
         assert_eq!(c.spares(), 0);
+    }
+
+    #[test]
+    fn inject_phase_parses_and_extends_the_plan() {
+        let mut c = RunConfig::default();
+        c.failures = 1;
+        assert!(c.set("inject_phase", "3:reconstruct").unwrap());
+        assert_eq!(c.inject_phase, vec![(3, ProtoPhase::Reconstruct, 1)]);
+        assert!(c.set("inject_phase", "8:spare-join:1, 2:agree:2").unwrap());
+        assert_eq!(
+            c.inject_phase,
+            vec![(8, ProtoPhase::SpareJoin, 1), (2, ProtoPhase::Agree, 2)]
+        );
+        // The campaign plan carries both the iteration kill and the phase
+        // kills; the summary names them.
+        let plan = c.injection_plan();
+        assert_eq!(plan.n_failures(), 3);
+        assert!(plan.kills.iter().any(|k| k.at_phase == Some((ProtoPhase::SpareJoin, 1))));
+        assert!(c.summary().get("inject_phase").unwrap().contains("8:spare-join:1"));
+        // Phase kills also work with no iteration campaign at all.
+        c.failures = 0;
+        assert_eq!(c.injection_plan().n_failures(), 2);
+        // Malformed entries are rejected.
+        assert!(c.set("inject_phase", "3").is_err());
+        assert!(c.set("inject_phase", "3:warp").is_err());
+        assert!(c.set("inject_phase", "3:agree:0").is_err());
     }
 
     #[test]

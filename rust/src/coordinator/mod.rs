@@ -59,6 +59,19 @@ pub fn run_custom(
     anyhow::ensure!(cfg.p >= 2, "need at least 2 ranks");
     anyhow::ensure!(cfg.grid.n() >= cfg.p * 4, "grid too small for p={} ranks", cfg.p);
     let n_spares = cfg.spares();
+    // Reject kills that can never fire: a target outside the world (e.g. a
+    // typo'd `--inject-phase` rank) would otherwise report a failure-free
+    // "success" for a campaign that never ran.
+    for k in &plan.kills {
+        anyhow::ensure!(
+            k.world_rank < cfg.p + n_spares,
+            "injection target rank {} out of range: world has {} application rank(s) + {} \
+             spare(s)",
+            k.world_rank,
+            cfg.p,
+            n_spares
+        );
+    }
     let (world, receivers) = World::new(cfg.p, n_spares, cfg.net.clone(), Injector::new(plan));
 
     let mut cfg = cfg.clone();
@@ -117,6 +130,14 @@ pub fn run_custom(
 }
 
 /// Solve-with-recovery loop shared by application ranks and adopted spares.
+///
+/// Failure handling runs through the epoch-fenced restartable driver
+/// ([`recovery::handle_failure_fenced`]): nested failures *during* a
+/// recovery abandon the poisoned attempt, pull every survivor back through
+/// the fence, and re-decide on the union failure set.  The per-event
+/// [`DecisionRecord`] is pushed only after the decision actually executed,
+/// so abandoned attempts never pollute the decision log (their cost shows
+/// up as `recovery_retries` instead).
 fn solve_loop(
     ctx: &mut Ctx,
     comm: &mut Comm,
@@ -142,19 +163,24 @@ fn solve_loop(
                 if !ctx.world.is_alive(ctx.rank) {
                     return Err(ctx.die());
                 }
-                ctx.recompute = false;
-                let mut shrunk = recovery::repair_membership(ctx, comm)?;
-                let decision = choose_recovery(ctx, &mut shrunk, comm, state, store, cfg)?;
-                recovery::execute_decision(
+                let mut pending: Option<DecisionRecord> = None;
+                recovery::handle_failure_fenced(
                     ctx,
                     comm,
-                    shrunk,
                     state,
                     store,
-                    decision,
                     &cfg.solver.ckpt,
                     &cfg.compute,
+                    |ctx, shrunk, old, st, sto, attempt| {
+                        let (decision, rec) =
+                            choose_recovery(ctx, shrunk, old, st, sto, cfg, attempt)?;
+                        pending = Some(rec);
+                        Ok(decision)
+                    },
                 )?;
+                if let Some(rec) = pending {
+                    ctx.decisions.push(rec);
+                }
                 ctx.set_phase(Phase::Compute);
             }
         }
@@ -162,10 +188,14 @@ fn solve_loop(
 }
 
 /// Evaluate the run's recovery policy for the failure event visible in the
-/// failed communicator `old` and record the decision on this rank's
-/// timeline.  Runs after the ULFM shrink produced the pristine survivor
-/// communicator `shrunk`, so adaptive policies may use one leader
-/// broadcast over it (the dynamic capacity horizon).
+/// failed communicator `old` and build (but do not yet record) the
+/// [`DecisionRecord`] for this attempt.  Runs after the fenced shrink
+/// produced the pristine survivor communicator `shrunk`, so adaptive
+/// policies may use one leader broadcast over it (the dynamic capacity
+/// horizon).  `attempt` is the epoch-fence attempt number: on a retry the
+/// registry already contains the nested deaths, so the policy re-decides
+/// on the *union* failure set (a spare grant whose joiner died rolls back
+/// here — pool status is re-derived from liveness).
 ///
 /// Every survivor calls this independently and must reach the same answer:
 /// the inputs are the liveness registry, the failed communicator's
@@ -181,7 +211,8 @@ fn choose_recovery(
     state: &SolverState,
     store: &CkptStore,
     cfg: &RunConfig,
-) -> MpiResult<Decision> {
+    attempt: u64,
+) -> MpiResult<(Decision, DecisionRecord)> {
     let failed: Vec<usize> = old
         .members
         .iter()
@@ -265,7 +296,7 @@ fn choose_recovery(
             }
         }
     };
-    ctx.decisions.push(DecisionRecord {
+    let record = DecisionRecord {
         seq: ctx.decisions.len(),
         at: ctx.clock,
         failed_ranks: failed,
@@ -273,8 +304,9 @@ fn choose_recovery(
         reason,
         warm_free: status.warm_free,
         cold_free: status.cold_free,
-    });
-    Ok(decision)
+        attempt: attempt as usize,
+    };
+    Ok((decision, record))
 }
 
 fn finish(ctx: Ctx, outcome: Option<Outcome>, killed: bool, was_spare: bool) -> RankResult {
@@ -288,6 +320,7 @@ fn finish(ctx: Ctx, outcome: Option<Outcome>, killed: bool, was_spare: bool) -> 
             was_spare,
             decisions: ctx.decisions.clone(),
             ckpt: ctx.ckpt_log.clone(),
+            recovery_retries: ctx.recovery_retries,
         },
         outcome,
     }
@@ -297,16 +330,39 @@ fn app_rank(mut ctx: Ctx, cfg: &RunConfig, backend: &dyn Backend) -> RankResult 
     let mut comm = Comm::world(cfg.p, ctx.rank);
     let mut store = CkptStore::new();
     let result = (|| -> MpiResult<Outcome> {
-        let mut state = SolverState::setup(
-            &mut ctx,
-            &mut comm,
-            &mut store,
-            cfg.grid,
-            &cfg.compute,
-            cfg.solver.m_outer,
-            &cfg.solver.ckpt,
-            cfg.ckpt_enabled(),
-        )?;
+        // Setup with failure handling: a rank dying during initial problem
+        // generation or the establishment commit (reachable via a
+        // `ProtoPhase::CkptCommit` kill at occurrence 1) must not wedge the
+        // job.  No committed state exists yet and setup is deterministic,
+        // so survivors simply shrink through the fence and re-run setup
+        // from scratch on the smaller communicator.
+        let mut state = loop {
+            match SolverState::setup(
+                &mut ctx,
+                &mut comm,
+                &mut store,
+                cfg.grid,
+                &cfg.compute,
+                cfg.solver.m_outer,
+                &cfg.solver.ckpt,
+                cfg.ckpt_enabled(),
+            ) {
+                Ok(s) => break s,
+                Err(MpiError::Killed) => return Err(MpiError::Killed),
+                Err(_) => {
+                    if !ctx.world.is_alive(ctx.rank) {
+                        return Err(ctx.die());
+                    }
+                    let prev = ctx.set_phase(Phase::Reconfig);
+                    ulfm::revoke(&mut ctx, &comm);
+                    let mut fence = ulfm::EpochFence::new(&comm);
+                    let shrunk = ulfm::shrink_fenced(&mut ctx, &comm, &mut fence);
+                    ctx.set_phase(prev);
+                    comm = shrunk?;
+                    store = CkptStore::new();
+                }
+            }
+        };
         solve_loop(&mut ctx, &mut comm, &mut state, &mut store, cfg, backend)
     })();
     match result {
@@ -317,40 +373,67 @@ fn app_rank(mut ctx: Ctx, cfg: &RunConfig, backend: &dyn Backend) -> RankResult 
 }
 
 fn spare_rank(mut ctx: Ctx, cfg: &RunConfig, backend: &dyn Backend) -> RankResult {
-    ctx.set_phase(Phase::Idle);
-    let (epoch, members, old_members, as_rank) = match ctx.wait_join() {
-        // Never used: allocated-but-idle (the paper's "non-utilization of
-        // resources in the failure-free case").
-        None => return finish(ctx, None, false, true),
-        Some(j) => j,
-    };
-    let result = (|| -> MpiResult<Outcome> {
-        if cfg.spare_pool().is_cold(ctx.rank) {
-            // A cold slot only starts now: job-launcher spawn, binary load,
-            // runtime init (paper: "spawning processes at runtime has more
-            // overhead").  Charged to reconfiguration.
-            ctx.set_phase(Phase::Reconfig);
-            ctx.advance(cfg.net.cold_spawn_latency);
+    loop {
+        ctx.set_phase(Phase::Idle);
+        let (epoch, members, old_members, as_rank) = match ctx.wait_join() {
+            // Never used: allocated-but-idle (the paper's "non-utilization
+            // of resources in the failure-free case").
+            None => return finish(ctx, None, false, true),
+            Some(j) => j,
+        };
+        // Stale invitation: the recovery attempt that granted this lease
+        // was already abandoned through the epoch fence.
+        if ctx.is_revoked(epoch) {
+            continue;
         }
-        let mut comm = ulfm::join_as_spare(&mut ctx, epoch, members, as_rank)?;
-        let mut store = CkptStore::new();
-        let mut state = recovery::substitute::recover_spare(
-            &mut ctx,
-            &mut comm,
-            &old_members,
-            cfg.grid,
-            cfg.solver.m_outer,
-            &mut store,
-            &cfg.solver.ckpt,
-            &cfg.compute,
-        )?;
+        // Adoption (join + state recovery) is separated from the post-
+        // adoption solve so the two failure modes keep their distinct
+        // semantics: an interrupted *join* releases the lease and returns
+        // to waiting, while an adopted member that hits an unrecoverable
+        // error must fail loudly like any application rank — silently
+        // abandoning an active communicator slot would leave the survivors
+        // waiting on a vote that never comes.
+        let adopted = (|| -> MpiResult<(Comm, CkptStore, SolverState)> {
+            if cfg.spare_pool().is_cold(ctx.rank) {
+                // A cold slot only starts now: job-launcher spawn, binary
+                // load, runtime init (paper: "spawning processes at runtime
+                // has more overhead").  Charged to reconfiguration.
+                ctx.set_phase(Phase::Reconfig);
+                ctx.advance(cfg.net.cold_spawn_latency);
+            }
+            let mut comm = ulfm::join_as_spare(&mut ctx, epoch, members, as_rank)?;
+            let mut store = CkptStore::new();
+            let state = recovery::substitute::recover_spare(
+                &mut ctx,
+                &mut comm,
+                &old_members,
+                cfg.grid,
+                cfg.solver.m_outer,
+                &mut store,
+                &cfg.solver.ckpt,
+                &cfg.compute,
+            )?;
+            Ok((comm, store, state))
+        })();
+        let (mut comm, mut store, mut state) = match adopted {
+            Ok(parts) => parts,
+            Err(MpiError::Killed) => return finish(ctx, None, true, true),
+            Err(_) => {
+                // The recovery attempt this lease belonged to was abandoned
+                // (a nested failure revoked the join epoch before
+                // activation completed): release the lease and go back to
+                // waiting — the survivors' retry re-derives spare grants
+                // from the registry and may invite this spare again at a
+                // fresh epoch.
+                continue;
+            }
+        };
         ctx.set_phase(Phase::Compute);
-        solve_loop(&mut ctx, &mut comm, &mut state, &mut store, cfg, backend)
-    })();
-    match result {
-        Ok(o) => finish(ctx, Some(o), false, true),
-        Err(MpiError::Killed) => finish(ctx, None, true, true),
-        Err(e) => panic!("spare {}: unrecoverable failure: {e}", ctx.rank),
+        return match solve_loop(&mut ctx, &mut comm, &mut state, &mut store, cfg, backend) {
+            Ok(o) => finish(ctx, Some(o), false, true),
+            Err(MpiError::Killed) => finish(ctx, None, true, true),
+            Err(e) => panic!("spare {}: unrecoverable failure: {e}", ctx.rank),
+        };
     }
 }
 

@@ -6,17 +6,113 @@
 //! substitute (worst-case placement).  Our injector triggers at inner-
 //! iteration boundaries — the simulation analogue of their fixed windows —
 //! and the rank "SIGKILLs" itself via [`crate::simmpi::Ctx::die`].
-
-
+//!
+//! Beyond the paper's one-failure-per-window campaigns, kills can also be
+//! scheduled at **protocol phases** ([`ProtoPhase`], config key
+//! `inject_phase`, CLI `--inject-phase`): the rank dies the n-th time it
+//! *enters* a given phase of the checkpoint/recovery protocol
+//! ([`crate::simmpi::Ctx::phase_point`]).  This is what makes failures
+//! *during* recovery reachable — a rank dying mid-commit, mid-agreement,
+//! mid-reconstruction or mid-spare-join — which the epoch-fenced
+//! restartable recovery driver (DESIGN.md §10) must survive.
 
 use crate::simmpi::WorldRank;
 
-/// One scheduled kill.
+/// Checkpoint/recovery protocol phases at which a [`Kill`] can trigger.
+///
+/// Each phase names one fault point in the protocol pipeline; the injector
+/// counts *entries* per rank ([`crate::simmpi::Ctx::phase_point`]), so a
+/// kill fires deterministically at the n-th entry:
+///
+/// * `CkptCommit` — entering a coordinated checkpoint commit
+///   ([`crate::ckptstore::commit`]); entry 1 is the establishment commit of
+///   initial setup, later entries are steady-state / re-establishment
+///   commits.
+/// * `Detect` — entering a recovery attempt (a survivor dying right as it
+///   starts handling someone else's failure).
+/// * `Agree` — inside the fenced shrink's membership agreement, *between
+///   contributing the vote and receiving the decision*
+///   ([`crate::simmpi::ulfm::shrink_at`]).
+/// * `Reconstruct` — entering the checkpoint recovery reader
+///   ([`crate::ckptstore::reconstruct_failed`]).
+/// * `SpareJoin` — spare side, accepting a Join invitation
+///   ([`crate::simmpi::ulfm::join_as_spare`]): the joiner dying before its
+///   lease activates.
+/// * `Redistribute` — inside shrink recovery, after the restore-version
+///   agreement and reconstruction, as row transfers begin.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ProtoPhase {
+    CkptCommit,
+    Detect,
+    Agree,
+    Reconstruct,
+    SpareJoin,
+    Redistribute,
+}
+
+impl ProtoPhase {
+    pub const ALL: [ProtoPhase; 6] = [
+        ProtoPhase::CkptCommit,
+        ProtoPhase::Detect,
+        ProtoPhase::Agree,
+        ProtoPhase::Reconstruct,
+        ProtoPhase::SpareJoin,
+        ProtoPhase::Redistribute,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProtoPhase::CkptCommit => "ckpt-commit",
+            ProtoPhase::Detect => "detect",
+            ProtoPhase::Agree => "agree",
+            ProtoPhase::Reconstruct => "reconstruct",
+            ProtoPhase::SpareJoin => "spare-join",
+            ProtoPhase::Redistribute => "redistribute",
+        }
+    }
+
+    /// Parse a phase name as used by `inject_phase` / `--inject-phase`.
+    pub fn parse(s: &str) -> Option<ProtoPhase> {
+        match s.trim() {
+            "ckpt-commit" | "commit" => Some(ProtoPhase::CkptCommit),
+            "detect" => Some(ProtoPhase::Detect),
+            "agree" => Some(ProtoPhase::Agree),
+            "reconstruct" => Some(ProtoPhase::Reconstruct),
+            "spare-join" | "join" => Some(ProtoPhase::SpareJoin),
+            "redistribute" => Some(ProtoPhase::Redistribute),
+            _ => None,
+        }
+    }
+}
+
+/// One scheduled kill: either at an inner-iteration boundary (the paper's
+/// fixed windows) or at the n-th entry into a protocol phase.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Kill {
     pub world_rank: WorldRank,
-    /// Global inner-iteration count at which the rank dies.
+    /// Global inner-iteration count at which the rank dies (`u64::MAX` for
+    /// phase-triggered kills, which never fire at iteration boundaries).
     pub at_inner_iter: u64,
+    /// Protocol-phase trigger: fire when the rank enters this phase for the
+    /// `occurrence`-th time (1-based).  `None` = iteration-triggered.
+    pub at_phase: Option<(ProtoPhase, u32)>,
+}
+
+impl Kill {
+    /// Iteration-boundary kill (the paper's campaign primitive).
+    pub fn at_iter(world_rank: WorldRank, at_inner_iter: u64) -> Kill {
+        Kill { world_rank, at_inner_iter, at_phase: None }
+    }
+
+    /// Protocol-phase kill: die at the `occurrence`-th (1-based) entry into
+    /// `phase`.
+    pub fn at_phase(world_rank: WorldRank, phase: ProtoPhase, occurrence: u32) -> Kill {
+        Kill {
+            world_rank,
+            at_inner_iter: u64::MAX,
+            at_phase: Some((phase, occurrence.max(1))),
+        }
+    }
 }
 
 /// A reproducible failure campaign.
@@ -43,17 +139,29 @@ impl InjectionPlan {
     /// Failure i fires at iteration `ckpt_interval * 5/2 + i * 3/2 *
     /// ckpt_interval`: after two completed checkpoints, 1.5 windows apart,
     /// half a window past the last checkpoint (bounded recomputation).
+    ///
+    /// Like [`InjectionPlan::exhaustion_campaign`], at most `p / 2`
+    /// failures are supported: the mid-machine layout walks `p/2 - i`
+    /// downward (which would underflow past `i = p/2`), and the high-rank
+    /// layout walks `p - 1 - i` downward into the mid-machine range — the
+    /// bound keeps every target distinct and in `1..p` for both layouts.
     pub fn paper_campaign(
         p: usize,
         n_failures: usize,
         ckpt_interval: u64,
         high_ranks: bool,
     ) -> Self {
+        assert!(
+            n_failures <= p / 2,
+            "paper campaign supports at most p/2 failures (got {n_failures} for p={p}: \
+             the fixed per-strategy positions must stay distinct and in range)"
+        );
         let kills = (0..n_failures)
-            .map(|i| Kill {
-                world_rank: if high_ranks { p - 1 - i } else { p / 2 - i },
-                at_inner_iter: ckpt_interval * 2 + ckpt_interval / 2
-                    + (i as u64 * 3 * ckpt_interval) / 2,
+            .map(|i| {
+                Kill::at_iter(
+                    if high_ranks { p - 1 - i } else { p / 2 - i },
+                    ckpt_interval * 2 + ckpt_interval / 2 + (i as u64 * 3 * ckpt_interval) / 2,
+                )
             })
             .collect();
         InjectionPlan { kills }
@@ -77,12 +185,13 @@ impl InjectionPlan {
              high/mid targets must stay distinct)"
         );
         let kills = (0..n_failures)
-            .map(|i| Kill {
+            .map(|i| {
                 // Alternate the paper's two worst-case layouts: high ranks
                 // (shrink, Fig. 3) and mid-machine ranks (substitute).
-                world_rank: if i % 2 == 0 { p - 1 - i / 2 } else { p / 2 - i / 2 },
-                at_inner_iter: ckpt_interval * 2 + ckpt_interval / 2
-                    + i as u64 * ckpt_interval,
+                Kill::at_iter(
+                    if i % 2 == 0 { p - 1 - i / 2 } else { p / 2 - i / 2 },
+                    ckpt_interval * 2 + ckpt_interval / 2 + i as u64 * ckpt_interval,
+                )
             })
             .collect();
         InjectionPlan { kills }
@@ -96,9 +205,40 @@ impl InjectionPlan {
         InjectionPlan {
             kills: ranks
                 .iter()
-                .map(|&world_rank| Kill { world_rank, at_inner_iter })
+                .map(|&world_rank| Kill::at_iter(world_rank, at_inner_iter))
                 .collect(),
         }
+    }
+
+    /// Nested-failure campaign: a first kill at an iteration boundary plus a
+    /// second rank dying at a protocol phase *of the resulting recovery* —
+    /// the overlapping-failure pattern the epoch-fenced recovery driver
+    /// (DESIGN.md §10) exists for.  `occurrence` counts the second rank's
+    /// entries into `phase` (1-based; note `ProtoPhase::CkptCommit` entry 1
+    /// is the setup-time establishment commit, so mid-run commit kills want
+    /// a higher occurrence).
+    pub fn nested(
+        first: WorldRank,
+        at_inner_iter: u64,
+        second: WorldRank,
+        phase: ProtoPhase,
+        occurrence: u32,
+    ) -> Self {
+        assert_ne!(first, second, "nested campaign needs two distinct victims");
+        InjectionPlan {
+            kills: vec![
+                Kill::at_iter(first, at_inner_iter),
+                Kill::at_phase(second, phase, occurrence),
+            ],
+        }
+    }
+
+    /// Append protocol-phase kills (from the `inject_phase` config key) to
+    /// this plan.
+    pub fn with_phase_kills(mut self, kills: &[(WorldRank, ProtoPhase, u32)]) -> Self {
+        self.kills
+            .extend(kills.iter().map(|&(wr, phase, occ)| Kill::at_phase(wr, phase, occ)));
+        self
     }
 
     /// Correlated same-group failure for the parity checkpoint schemes:
@@ -122,7 +262,7 @@ impl InjectionPlan {
         );
         InjectionPlan {
             kills: (start..start + victims)
-                .map(|world_rank| Kill { world_rank, at_inner_iter })
+                .map(|world_rank| Kill::at_iter(world_rank, at_inner_iter))
                 .collect(),
         }
     }
@@ -139,12 +279,13 @@ impl InjectionPlan {
         );
         InjectionPlan {
             kills: (0..failures)
-                .map(|i| Kill {
+                .map(|i| {
                     // The last member of group i: distinct groups, and never
                     // the group-base ranks that hold other groups' parity.
-                    world_rank: (i * g + g - 1).min(p - 1),
-                    at_inner_iter: ckpt_interval * 2 + ckpt_interval / 2
-                        + i as u64 * ckpt_interval,
+                    Kill::at_iter(
+                        (i * g + g - 1).min(p - 1),
+                        ckpt_interval * 2 + ckpt_interval / 2 + i as u64 * ckpt_interval,
+                    )
                 })
                 .collect(),
         }
@@ -169,24 +310,40 @@ impl Injector {
     /// Should `rank` die now, given it is about to execute inner iteration
     /// `next_iter`?  (Fires when the schedule's iteration is reached or
     /// passed — recovery rollback can never un-kill a rank because the
-    /// registry death is permanent.)
+    /// registry death is permanent.)  Phase-triggered kills never fire
+    /// here; they fire at [`Injector::should_die_at_phase`].
     pub fn should_die(&self, rank: WorldRank, next_iter: u64) -> bool {
         self.plan
             .kills
             .iter()
-            .any(|k| k.world_rank == rank && next_iter >= k.at_inner_iter)
+            .any(|k| k.at_phase.is_none() && k.world_rank == rank && next_iter >= k.at_inner_iter)
+    }
+
+    /// Should `rank` die now, given it is entering protocol phase `phase`
+    /// for the `hits`-th time (1-based)?  Fires at or after the scheduled
+    /// occurrence, mirroring [`Injector::should_die`]'s at-or-after
+    /// semantics.
+    pub fn should_die_at_phase(&self, rank: WorldRank, phase: ProtoPhase, hits: u32) -> bool {
+        self.plan.kills.iter().any(|k| {
+            k.world_rank == rank
+                && matches!(k.at_phase, Some((p, occ)) if p == phase && hits >= occ)
+        })
     }
 
     /// Ranks scheduled to die at the same instant as `rank`'s triggering
     /// kill.  Simultaneous deaths must appear atomically in the liveness
     /// registry, or survivors could build inconsistent shrink memberships
-    /// from snapshots taken between the two (see `Ctx::die`).
+    /// from snapshots taken between the two (see `Ctx::die`).  Phase kills
+    /// are never co-scheduled: the phase counter is per rank, so two phase
+    /// kills have no shared instant.
     pub fn co_scheduled(&self, rank: WorldRank, next_iter: u64) -> Vec<WorldRank> {
         let Some(kill) = self
             .plan
             .kills
             .iter()
-            .filter(|k| k.world_rank == rank && next_iter >= k.at_inner_iter)
+            .filter(|k| {
+                k.at_phase.is_none() && k.world_rank == rank && next_iter >= k.at_inner_iter
+            })
             .max_by_key(|k| k.at_inner_iter)
         else {
             return Vec::new();
@@ -194,7 +351,11 @@ impl Injector {
         self.plan
             .kills
             .iter()
-            .filter(|k| k.at_inner_iter == kill.at_inner_iter && k.world_rank != rank)
+            .filter(|k| {
+                k.at_phase.is_none()
+                    && k.at_inner_iter == kill.at_inner_iter
+                    && k.world_rank != rank
+            })
             .map(|k| k.world_rank)
             .collect()
     }
@@ -276,6 +437,69 @@ mod tests {
         assert_eq!(plan.kills[0].at_inner_iter, 25);
         assert_eq!(plan.kills[1].at_inner_iter, 35);
         assert_eq!(plan.kills[2].at_inner_iter, 45);
+    }
+
+    #[test]
+    fn paper_campaign_targets_stay_distinct_and_in_range() {
+        // The full p/2 budget stays distinct and in range for both layouts.
+        for p in [4usize, 8, 9, 32] {
+            for high in [true, false] {
+                let plan = InjectionPlan::paper_campaign(p, p / 2, 25, high);
+                let mut ranks: Vec<_> = plan.kills.iter().map(|k| k.world_rank).collect();
+                assert!(ranks.iter().all(|&r| r < p), "targets in range for p={p}");
+                ranks.sort_unstable();
+                ranks.dedup();
+                assert_eq!(ranks.len(), p / 2, "targets distinct for p={p} high={high}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "at most p/2 failures")]
+    fn paper_campaign_rejects_mid_machine_underflow() {
+        // p=8 mid-machine: failure 4 would target 4 - 4 = 0... and failure
+        // 5 would underflow p/2 - i.  Validated like exhaustion_campaign.
+        let _ = InjectionPlan::paper_campaign(8, 5, 25, false);
+    }
+
+    #[test]
+    fn phase_kills_fire_at_phase_entries_only() {
+        let plan = InjectionPlan::nested(7, 25, 3, ProtoPhase::Reconstruct, 1);
+        let inj = Injector::new(plan);
+        // The iteration kill behaves as before...
+        assert!(inj.should_die(7, 25));
+        assert!(!inj.should_die(7, 24));
+        // ...the phase kill never fires at iteration boundaries...
+        assert!(!inj.should_die(3, u64::MAX));
+        // ...and fires at (or after) its scheduled phase entry.
+        assert!(!inj.should_die_at_phase(3, ProtoPhase::Reconstruct, 0));
+        assert!(inj.should_die_at_phase(3, ProtoPhase::Reconstruct, 1));
+        assert!(inj.should_die_at_phase(3, ProtoPhase::Reconstruct, 2));
+        assert!(!inj.should_die_at_phase(3, ProtoPhase::Agree, 9));
+        assert!(!inj.should_die_at_phase(7, ProtoPhase::Reconstruct, 9));
+        // Phase kills are never co-scheduled with iteration kills.
+        assert!(inj.co_scheduled(3, u64::MAX).is_empty());
+        assert_eq!(inj.co_scheduled(7, 25), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn phase_names_roundtrip() {
+        for p in ProtoPhase::ALL {
+            assert_eq!(ProtoPhase::parse(p.name()), Some(p));
+        }
+        assert_eq!(ProtoPhase::parse("commit"), Some(ProtoPhase::CkptCommit));
+        assert_eq!(ProtoPhase::parse("join"), Some(ProtoPhase::SpareJoin));
+        assert_eq!(ProtoPhase::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn with_phase_kills_appends() {
+        let plan = InjectionPlan::paper_campaign(8, 1, 25, true)
+            .with_phase_kills(&[(2, ProtoPhase::SpareJoin, 1)]);
+        assert_eq!(plan.n_failures(), 2);
+        let inj = Injector::new(plan);
+        assert!(inj.should_die(7, 62));
+        assert!(inj.should_die_at_phase(2, ProtoPhase::SpareJoin, 1));
     }
 
     #[test]

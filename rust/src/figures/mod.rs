@@ -244,6 +244,7 @@ pub fn decision_table(rep: &RunReport) -> Table {
             "t_virtual".into(),
             "failed_ranks".into(),
             "decision".into(),
+            "attempt".into(),
             "warm_free".into(),
             "cold_free".into(),
             "reason".into(),
@@ -261,6 +262,7 @@ pub fn decision_table(rep: &RunReport) -> Table {
             format!("{:.4}", d.at),
             failed,
             d.decision.to_string(),
+            d.attempt.to_string(),
             d.warm_free.to_string(),
             d.cold_free.to_string(),
             d.reason.clone(),
@@ -403,6 +405,7 @@ mod tests {
             reason: format!("event {seq}"),
             warm_free: 1 - seq.min(1),
             cold_free: 0,
+            attempt: seq,
         };
         let rank = RankReport {
             world_rank: 0,
@@ -413,12 +416,16 @@ mod tests {
             was_spare: false,
             decisions: vec![dec(0, "substitute"), dec(1, "shrink")],
             ckpt: Vec::new(),
+            recovery_retries: 1,
         };
         let rep = RunReport::from_ranks(vec![rank], 1e-9, true, 2);
+        assert_eq!(rep.recovery_retries, 1);
+        assert_eq!(rep.global_restarts(), 0);
         let t = decision_table(&rep);
         assert_eq!(t.rows.len(), 2);
         assert_eq!(t.rows[0][3], "substitute");
         assert_eq!(t.rows[1][3], "shrink");
+        assert_eq!(t.rows[1][4], "1", "attempt column rides along");
         assert_eq!(t.rows[1][0], "1");
     }
 }

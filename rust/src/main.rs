@@ -20,6 +20,16 @@
 //! exhaustion (see DESIGN.md §3).  Runs that recovered from failures print
 //! the per-event decision log after the phase breakdown.
 //!
+//! `--inject-phase VALUE` appends protocol-phase kills to the campaign
+//! (shorthand for `inject_phase=VALUE`): comma-separated
+//! `rank:phase[:occurrence]` entries with phases `ckpt-commit`, `detect`,
+//! `agree`, `reconstruct`, `spare-join`, `redistribute` — e.g.
+//! `--inject-phase 3:reconstruct` makes rank 3 die entering the first
+//! checkpoint reconstruction, i.e. *inside* the recovery of an earlier
+//! failure.  Recoverable nested patterns complete without a global restart
+//! via the epoch-fenced restartable recovery protocol (DESIGN.md §10); the
+//! run summary prints the recovery-epoch retries consumed.
+//!
 //! `--ckpt-scheme VALUE` selects the checkpoint redundancy scheme
 //! (shorthand for `ckpt_scheme=VALUE`): `mirror:<k>`, `xor:<g>` or
 //! `rs2:<g>` (double parity with rotating holders, DESIGN.md §9);
@@ -39,7 +49,8 @@ fn usage() -> ! {
     eprintln!(
         "usage: ftgmres <run|report|figure4|figure5|figure6|figures> \
          [--config FILE] [--policy POLICY] [--ckpt-scheme SCHEME] [--ckpt-delta] \
-         [--ckpt-compress] [--quick] [--out DIR] [key=value ...]"
+         [--ckpt-compress] [--inject-phase RANK:PHASE[:N][,..]] [--quick] \
+         [--out DIR] [key=value ...]"
     );
     std::process::exit(2);
 }
@@ -86,6 +97,14 @@ fn parse_args() -> anyhow::Result<Args> {
                 );
                 rest.drain(i..=i + 1);
             }
+            "--inject-phase" => {
+                anyhow::ensure!(i + 1 < rest.len(), "--inject-phase needs a value");
+                anyhow::ensure!(
+                    cfg.set("inject_phase", &rest[i + 1])?,
+                    "inject_phase key rejected"
+                );
+                rest.drain(i..=i + 1);
+            }
             "--ckpt-delta" => {
                 anyhow::ensure!(cfg.set("ckpt_delta", "true")?, "ckpt_delta key rejected");
                 rest.remove(i);
@@ -126,6 +145,15 @@ fn print_report(cfg: &RunConfig, rep: &RunReport) {
          reconfig={:.6} recompute={:.4}",
         m.compute, m.comm, m.checkpoint, m.recovery, m.reconfig, m.recompute
     );
+    if rep.recovery_retries > 0 {
+        println!(
+            "recovery:      {} epoch-fence retr{} (nested failures poisoned in-flight \
+             recovery rounds), {} executed global restart(s)",
+            rep.recovery_retries,
+            if rep.recovery_retries == 1 { "y" } else { "ies" },
+            rep.global_restarts(),
+        );
+    }
     let pct = |v: f64| 100.0 * v / rep.time_to_solution;
     println!(
         "as % of tts:   compute={:.1}% comm={:.1}% checkpoint={:.2}% recovery={:.2}% \

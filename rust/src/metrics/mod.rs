@@ -123,6 +123,12 @@ pub struct DecisionRecord {
     pub warm_free: usize,
     /// Cold slots still free at decision time.
     pub cold_free: usize,
+    /// Epoch-fence attempt that *executed* this decision (0 = the first
+    /// attempt went through clean; n > 0 = n earlier attempts of this event
+    /// were abandoned because further failures poisoned them, and the
+    /// decision was re-made on the union failure set — see
+    /// [`crate::recovery::handle_failure_fenced`]).
+    pub attempt: usize,
 }
 
 /// One checkpoint commit as observed by one rank: how many bytes the full
@@ -170,6 +176,9 @@ pub struct RankReport {
     pub decisions: Vec<DecisionRecord>,
     /// Checkpoint commits this rank participated in, in version order.
     pub ckpt: Vec<CkptRecord>,
+    /// Recovery attempts this rank abandoned through the epoch fence
+    /// (nested failures poisoning in-flight recovery protocol).
+    pub recovery_retries: u64,
 }
 
 /// Aggregated result of one solver run (one configuration, one campaign leg).
@@ -202,6 +211,11 @@ pub struct RunReport {
     /// logs and grouped by version: byte counts are summed across ranks
     /// (total wire volume of the commit), times are maxima.
     pub ckpt: Vec<CkptRecord>,
+    /// Recovery-epoch retries: max over surviving ranks of abandoned
+    /// recovery attempts (retries are per event and near-identical across
+    /// survivors, so the max counts events-worth of retries, not the
+    /// rank-count multiple a sum would).
+    pub recovery_retries: u64,
 }
 
 impl RunReport {
@@ -213,9 +227,11 @@ impl RunReport {
         let mut mean_phases = PhaseTimers::default();
         let mut tts = 0.0f64;
         let mut iters = 0u64;
+        let mut retries = 0u64;
         let mut all_decisions: Vec<DecisionRecord> = Vec::new();
         let mut ckpt_by_version: BTreeMap<i64, CkptRecord> = BTreeMap::new();
         for r in &survivors {
+            retries = retries.max(r.recovery_retries);
             max_phases.max_with(&r.phases);
             for p in ALL_PHASES {
                 let cur = mean_phases.get(p);
@@ -265,7 +281,17 @@ impl RunReport {
             failures,
             decisions,
             ckpt: ckpt_by_version.into_values().collect(),
+            recovery_retries: retries,
         }
+    }
+
+    /// Executed global restarts in the merged decision log.  Decisions are
+    /// recorded only after they actually ran (abandoned fence attempts are
+    /// not logged), so this counts restarts that really happened — the
+    /// nested-failure acceptance metric (`global_restarts == 0` for
+    /// recoverable patterns).
+    pub fn global_restarts(&self) -> usize {
+        self.decisions.iter().filter(|d| d.decision == "global-restart").count()
     }
 
     /// Total redundancy bytes shipped and logical state bytes over all
@@ -327,6 +353,7 @@ mod tests {
             was_spare: spare,
             decisions: Vec::new(),
             ckpt: Vec::new(),
+            recovery_retries: 0,
         };
         let ranks = vec![
             mk(0, 10.0, false, false, 100),
@@ -352,6 +379,7 @@ mod tests {
             reason: String::new(),
             warm_free: 0,
             cold_free: 0,
+            attempt: 0,
         };
         let mk = |wr, killed, spare, decisions| RankReport {
             world_rank: wr,
@@ -362,6 +390,7 @@ mod tests {
             was_spare: spare,
             decisions,
             ckpt: Vec::new(),
+            recovery_retries: 0,
         };
         let ranks = vec![
             // Killed ranks are excluded from the merge entirely.
@@ -394,6 +423,7 @@ mod tests {
             reason: String::new(),
             warm_free: 0,
             cold_free: 0,
+            attempt: 0,
         };
         let mk = |wr, killed, spare, decisions| RankReport {
             world_rank: wr,
@@ -404,6 +434,7 @@ mod tests {
             was_spare: spare,
             decisions,
             ckpt: Vec::new(),
+            recovery_retries: 0,
         };
         let ranks = vec![
             mk(0, true, false, vec![dec(0, 1.0, 3, "substitute")]),
@@ -443,6 +474,7 @@ mod tests {
             was_spare: false,
             decisions: Vec::new(),
             ckpt,
+            recovery_retries: 0,
         };
         let ranks = vec![
             mk(0, vec![rec(1, 800), rec(2, 80)]),

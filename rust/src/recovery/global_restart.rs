@@ -82,6 +82,12 @@ impl GlobalCrModel {
 /// [`GlobalCrModel::waste_per_failure`].  Deterministic: every survivor
 /// computes the identical rebuild, and the re-established store starts a
 /// fresh version chain, so later failures recover normally.
+///
+/// Re-entrant under nested failures (DESIGN.md §10): the rebuild reads
+/// nothing from the store, so `clear_all` + a torn establishment is simply
+/// re-run by the next fence attempt — and because unrecoverability is
+/// monotone in the dead set, a retry of this event can never flip back to
+/// an in-situ branch that would need the cleared checkpoints.
 pub fn restart_on_survivors(
     ctx: &mut Ctx,
     new_comm: &mut Comm,

@@ -32,9 +32,11 @@ pub mod substitute;
 
 use crate::checkpoint::{agree_restore_version, effective_stride, CkptStore};
 use crate::ckptstore::{self, CkptCfg, LossCheck, Scheme};
+use crate::failure::ProtoPhase;
 use crate::metrics::Phase;
 use crate::netsim::ComputeModel;
-use crate::simmpi::{ulfm, Comm, Ctx, MpiResult};
+use crate::simmpi::ulfm::EpochFence;
+use crate::simmpi::{ulfm, Comm, Ctx, MpiError, MpiResult};
 use crate::solver::state::SolverState;
 
 pub use policy::{Decision, PolicyKind};
@@ -108,8 +110,8 @@ pub fn handle_failure(
 }
 
 /// Survivor-side failure handling for one pre-made per-event [`Decision`]:
-/// [`repair_membership`] followed by [`execute_decision`].  Every survivor
-/// of the same event must pass the same decision.
+/// the epoch-fenced driver with a constant decision.  Every survivor of the
+/// same event must pass the same decision.
 pub fn handle_failure_with(
     ctx: &mut Ctx,
     comm: &mut Comm,
@@ -119,7 +121,132 @@ pub fn handle_failure_with(
     ckpt: &CkptCfg,
     host: &ComputeModel,
 ) -> MpiResult<()> {
-    let shrunk = repair_membership(ctx, comm)?;
+    handle_failure_fenced(ctx, comm, state, store, ckpt, host, |_, _, _, _, _, _| Ok(decision))
+        .map(|_| ())
+}
+
+/// Epoch-fenced restartable recovery driver (DESIGN.md §10): turn one
+/// observed failure into a repaired communicator and restored state, and
+/// keep doing so under **nested failures** — a rank dying mid-agreement,
+/// mid-reconstruction, mid-commit or mid-spare-join while this event's
+/// recovery is running.
+///
+/// Each *attempt* runs the full pipeline in a fresh epoch window handed out
+/// by the [`EpochFence`]: fenced shrink ([`ulfm::shrink_fenced`]), the
+/// caller's `decide` callback (re-evaluated per attempt — the policy engine
+/// re-decides on the *union* failure set, so a spare grant whose joiner died
+/// rolls back to a different spare or to shrink), then
+/// [`execute_decision`].  Any error other than this rank's own death
+/// abandons the attempt: the driver revokes the attempt's whole epoch
+/// window at every world rank ([`ulfm::revoke_epoch_world`]) so *every*
+/// survivor and mid-join spare blocked in the poisoned protocol returns
+/// `Revoked` and re-enters a fresh agree, rolls the solver state back to
+/// the event-entry snapshot, and retries with the enlarged failure set.
+///
+/// Returns the number of abandoned attempts (0 = clean first try), which
+/// the caller records in the decision log / metrics.
+///
+/// `decide` receives `(ctx, shrunk, old_comm, state, store, attempt)` and
+/// must produce the same decision on every survivor of the attempt (same
+/// consistency contract as [`policy`]).
+#[allow(clippy::too_many_arguments)]
+pub fn handle_failure_fenced<F>(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    state: &mut SolverState,
+    store: &mut CkptStore,
+    ckpt: &CkptCfg,
+    host: &ComputeModel,
+    mut decide: F,
+) -> MpiResult<u64>
+where
+    F: FnMut(
+        &mut Ctx,
+        &mut Comm,
+        &Comm,
+        &SolverState,
+        &CkptStore,
+        u64,
+    ) -> MpiResult<Decision>,
+{
+    // Consecutive abandons without any *new* death in the registry.  A
+    // genuine nested failure always grows the shared dead set, and the
+    // post-death revoke cascade settles within a couple of fence windows,
+    // so a long no-new-death abandon streak means the failure is
+    // deterministic (e.g. a fixed-substitute run whose spare pool is
+    // exhausted — a configuration error, per the policy contract): give up
+    // and propagate, preserving the pre-fence fail-loudly semantics
+    // instead of livelocking on retries that cannot succeed.
+    const STALL_LIMIT: u32 = 16;
+    let mut fence = EpochFence::new(comm);
+    let snap = state.snapshot();
+    let mut stalls = 0u32;
+    let mut dead_seen = ctx.world.dead_set().len();
+    loop {
+        if !ctx.world.is_alive(ctx.rank) {
+            return Err(ctx.die());
+        }
+        let result = attempt_recovery(ctx, comm, state, store, ckpt, host, &mut fence, &mut decide);
+        match result {
+            Ok(()) => return Ok(fence.retries()),
+            Err(MpiError::Killed) => return Err(MpiError::Killed),
+            Err(e) => {
+                let dead_now = ctx.world.dead_set().len();
+                if dead_now > dead_seen {
+                    dead_seen = dead_now;
+                    stalls = 0;
+                } else {
+                    stalls += 1;
+                    if stalls > STALL_LIMIT {
+                        return Err(e);
+                    }
+                }
+                // A nested failure (or a peer's revocation) poisoned the
+                // attempt: fence off its epoch window machine-wide, roll
+                // the solver state back to the event-entry image, and
+                // re-enter with whatever the registry says has failed now.
+                let prev = ctx.set_phase(Phase::Reconfig);
+                ulfm::revoke_epoch_world(ctx, fence.shrink_epoch());
+                ulfm::revoke_epoch_world(ctx, fence.stitch_epoch());
+                ctx.set_phase(prev);
+                state.rollback(&snap);
+                fence.abandon();
+                ctx.recovery_retries += 1;
+            }
+        }
+    }
+}
+
+/// One recovery attempt inside [`handle_failure_fenced`]'s loop.
+#[allow(clippy::too_many_arguments)]
+fn attempt_recovery<F>(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    state: &mut SolverState,
+    store: &mut CkptStore,
+    ckpt: &CkptCfg,
+    host: &ComputeModel,
+    fence: &mut EpochFence,
+    decide: &mut F,
+) -> MpiResult<()>
+where
+    F: FnMut(
+        &mut Ctx,
+        &mut Comm,
+        &Comm,
+        &SolverState,
+        &CkptStore,
+        u64,
+    ) -> MpiResult<Decision>,
+{
+    ctx.phase_point(ProtoPhase::Detect)?;
+    ctx.recompute = false;
+    let prev = ctx.set_phase(Phase::Reconfig);
+    ulfm::revoke(ctx, comm);
+    let shrunk = ulfm::shrink_fenced(ctx, comm, fence);
+    ctx.set_phase(prev);
+    let mut shrunk = shrunk?;
+    let decision = decide(ctx, &mut shrunk, comm, state, store, fence.retries())?;
     execute_decision(ctx, comm, shrunk, state, store, decision, ckpt, host)
 }
 

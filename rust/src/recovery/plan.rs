@@ -37,6 +37,17 @@ pub struct Segment {
 /// objects on.  Unrecoverable losses must have been escalated *before*
 /// planning (see [`crate::ckptstore::assess_loss`]); hitting one here is a
 /// protocol bug, not a runtime condition.
+///
+/// The plan is a pure function of its inputs and is re-derived from
+/// scratch by every recovery attempt: when a nested failure aborts an
+/// attempt mid-transfer, the fenced driver rolls `old_part` back to the
+/// event-entry partition ([`crate::solver::state::StateSnapshot`]) and the
+/// retry plans against the *enlarged* dead set — half-executed plans are
+/// never resumed (DESIGN.md §10).  Survivors whose liveness snapshots
+/// straddle a nested death may transiently derive different server sets;
+/// the divergence always names a dead rank, so the stale plan's executor
+/// errors on its first dead send/recv and the attempt is abandoned for
+/// everyone.
 pub fn transfer_segments_scheme(
     old_part: &Partition,
     old_members: &[WorldRank],

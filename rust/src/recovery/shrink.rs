@@ -9,6 +9,7 @@
 
 use crate::checkpoint::{agree_restore_version, obj, CkptStore, ObjId, Version};
 use crate::ckptstore::{self, CkptCfg};
+use crate::failure::ProtoPhase;
 use crate::metrics::Phase;
 use crate::netsim::ComputeModel;
 use crate::problem::{MatrixRows, Partition, K};
@@ -139,6 +140,12 @@ fn recover_inner(
             .expect("owner must be an old member")
     };
 
+    // Fault point: a survivor dying as row transfers begin.  The transfers
+    // below only read the checkpoint store and write `state`, which the
+    // fenced driver rolls back on abandon, so an interrupted
+    // redistribution re-plans cleanly from the event-entry partition.
+    ctx.phase_point(ProtoPhase::Redistribute)?;
+
     // 4. Ship my outgoing segments (all objects), then receive incoming.
     for id in REDIST_OBJS {
         for seg in &mine.outgoing {
@@ -232,13 +239,13 @@ fn recover_inner(
     // Redistribution/localization CPU cost: touch every local slot once.
     ctx.advance(host.cost((state.rows() * K) as f64, (24 * state.rows() * K) as f64));
 
-    // 6. Forget the dead; re-establish every checkpoint under the new layout
-    //    (charged to Recovery — see the commit protocol).
-    for &wr in &old_comm.members {
-        if !ctx.world.is_alive(wr) {
-            store.drop_owner(wr);
-        }
-    }
+    // 6. Re-establish every checkpoint under the new layout (charged to
+    //    Recovery — see the commit protocol).  Copies held for the dead are
+    //    NOT dropped eagerly: if this establishment is torn by a nested
+    //    failure, the retry must still be able to serve the dead ranks'
+    //    blocks from them.  The committed-floor GC purges them one commit
+    //    after the establishment proves globally visible
+    //    ([`CkptStore::gc_committed`]).
     state.establish_checkpoints(ctx, new_comm, store, v + 1, ckpt)?;
     Ok(())
 }

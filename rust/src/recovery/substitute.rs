@@ -168,12 +168,14 @@ fn survivor_state_recovery(
         stitched.send(ctx, spare_cr, spare_tag(99), ctl)?;
     }
 
-    // 4. Forget the dead; re-establish checkpoints over the restored
-    //    configuration (spare included — its distant node makes this and all
-    //    future checkpoints costlier, the paper's Figure 2/5 effect).
-    for &(failed_cr, _) in assignment {
-        store.drop_owner(old_comm.members[failed_cr]);
-    }
+    // 4. Re-establish checkpoints over the restored configuration (spare
+    //    included — its distant node makes this and all future checkpoints
+    //    costlier, the paper's Figure 2/5 effect).  Copies held for the
+    //    dead are NOT dropped eagerly: a nested failure tearing this
+    //    establishment sends everyone back through the epoch fence, and
+    //    the retry must still be able to serve the dead slots' state.  The
+    //    committed-floor GC purges them one commit after the establishment
+    //    proves globally visible.
     state.establish_checkpoints(ctx, stitched, store, v + 1, ckpt)?;
     Ok(())
 }

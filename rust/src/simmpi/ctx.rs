@@ -1,10 +1,11 @@
 //! Per-rank execution context: virtual clock, phase accounting, mailbox
 //! matching, and ULFM-style failure surfacing.
 
-use std::collections::{BTreeSet, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::mpsc::{Receiver, TryRecvError};
 use std::sync::Arc;
 
+use crate::failure::ProtoPhase;
 use crate::metrics::{CkptRecord, DecisionRecord, Phase, PhaseTimers};
 use crate::simmpi::msg::{Ctl, Msg, Payload, Tag};
 use crate::simmpi::world::{World, WorldRank};
@@ -35,6 +36,13 @@ pub struct Ctx {
     /// Checkpoint commits this rank participated in (bytes shipped, encode
     /// time), recorded by [`crate::ckptstore::commit`].
     pub ckpt_log: Vec<CkptRecord>,
+    /// Recovery attempts this rank abandoned because a *further* failure
+    /// poisoned the round (epoch-fence retries; see
+    /// [`crate::recovery::handle_failure_fenced`]).
+    pub recovery_retries: u64,
+    /// Entries into each protocol phase, consulted by the phase-triggered
+    /// failure injector ([`Ctx::phase_point`]).
+    phase_hits: BTreeMap<ProtoPhase, u32>,
     rx: Receiver<Msg>,
     /// Out-of-order buffer (matched by (epoch, src, tag)).
     pending: VecDeque<Msg>,
@@ -63,6 +71,8 @@ impl Ctx {
             iterations: 0,
             decisions: Vec::new(),
             ckpt_log: Vec::new(),
+            recovery_retries: 0,
+            phase_hits: BTreeMap::new(),
             rx,
             pending: VecDeque::new(),
             known_dead: BTreeSet::new(),
@@ -105,6 +115,31 @@ impl Ctx {
 
     pub fn is_revoked(&self, epoch: u64) -> bool {
         self.revoked.contains(&epoch)
+    }
+
+    /// Poison `epoch` locally (the sender side of a revoke: peers learn via
+    /// [`Ctl::Revoke`], the revoker must not keep using the epoch either).
+    pub fn mark_revoked(&mut self, epoch: u64) {
+        self.revoked.insert(epoch);
+    }
+
+    /// Protocol-phase fault point: count this rank's entry into `phase` and
+    /// die if the injector scheduled a kill at this occurrence (or if a
+    /// co-scheduled kill already marked this rank dead in the registry).
+    ///
+    /// Placed at every phase of the checkpoint/recovery pipeline
+    /// ([`crate::failure::ProtoPhase`]), this is what makes failures
+    /// *during* recovery reachable by campaigns.
+    pub fn phase_point(&mut self, phase: ProtoPhase) -> MpiResult<()> {
+        let hits = self.phase_hits.entry(phase).or_insert(0);
+        *hits += 1;
+        let n = *hits;
+        if self.world.injector.should_die_at_phase(self.rank, phase, n)
+            || !self.world.is_alive(self.rank)
+        {
+            return Err(self.die());
+        }
+        Ok(())
     }
 
     pub fn shutdown_requested(&self) -> bool {

@@ -30,6 +30,12 @@ pub mod tags {
     pub const CKPT_QPAR_BASE: Tag = CKPT_BASE + (1 << 13);
     /// Recovery / redistribution transfers.
     pub const RECOVER_BASE: Tag = 1 << 20;
+    /// Epoch-fence shrink validation (DESIGN.md §10): FENCE_BASE carries the
+    /// membership vote (member -> round leader), FENCE_BASE + 1 the
+    /// decision (leader -> members).  Point-to-point on the *tentative*
+    /// epoch of one recovery attempt, above the spare-transfer ids and
+    /// below the reconstruction window.
+    pub const FENCE_BASE: Tag = RECOVER_BASE + (1 << 18) + (1 << 10);
     /// Parity reconstruction (surviving group member -> holder):
     /// RECON_BASE + object id * 4096 + failed comm rank, inside the
     /// recovery window above the redistribution and spare-transfer tags.
@@ -165,6 +171,9 @@ mod tests {
         assert!(CKPT_PARITY_BASE + 1_000 < CKPT_QPAR_BASE); // parity tags below Q forwards
         assert!(CKPT_QPAR_BASE + 6 * 1024 < HALO_BASE);
         assert!(RECON_BASE > RECOVER_BASE + (1 << 18) + 10_000); // above spare tags
+        // Fence window: above the spare-transfer ids, below reconstruction.
+        assert!(FENCE_BASE > RECOVER_BASE + (1 << 18) + 100);
+        assert!(FENCE_BASE + 1 < RECON_BASE);
         assert!(RECON_BASE + 6 * 4096 < RECON_MEMBER_BASE);
         assert!(RECON_MEMBER_BASE + 6 * 1024 < RECON_STRIPE_BASE);
         assert!(RECON_STRIPE_BASE + 6 * 2048 < CKPT_BASE);

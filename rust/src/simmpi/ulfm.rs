@@ -13,13 +13,18 @@
 //!
 //! On a real machine shrink runs a consensus protocol among survivors; here
 //! membership comes from the registry (the detector's eventual ground truth)
-//! and the consensus *cost* is charged as two fault-aware rounds over the new
-//! communicator plus a fixed per-round agreement overhead.  The paper
-//! measures reconfiguration at 0.01%-0.05% of total time; the calibration
-//! test in tests/ulfm_semantics.rs keeps us in that regime.
+//! and is *validated* by a two-round leader-based agreement on the tentative
+//! epoch ([`shrink_at`]: fingerprint vote, then decision broadcast, each
+//! charged a fixed agreement overhead plus its real messages) so that
+//! survivors with divergent liveness snapshots can never adopt the same
+//! communicator — the epoch-fence building block of the restartable
+//! recovery protocol (DESIGN.md §10, [`EpochFence`], [`shrink_fenced`]).
+//! The paper measures reconfiguration at 0.01%-0.05% of total time; the
+//! calibration test in tests/ulfm_semantics.rs keeps us in that regime.
 
-use crate::simmpi::msg::Ctl;
-use crate::simmpi::{Comm, Ctx, MpiResult, WorldRank};
+use crate::failure::ProtoPhase;
+use crate::simmpi::msg::{tags, Blob, Ctl, Payload};
+use crate::simmpi::{Comm, Ctx, MpiError, MpiResult, WorldRank};
 
 /// Per-round CPU overhead of the agreement protocol (consensus bookkeeping,
 /// in addition to the tree messages actually sent).
@@ -33,6 +38,93 @@ pub fn revoke(ctx: &mut Ctx, comm: &Comm) {
             ctx.send_ctl(wr, Ctl::Revoke { epoch: comm.epoch });
         }
     }
+    ctx.mark_revoked(comm.epoch);
+}
+
+/// Revoke a bare epoch at **every** world rank — the recovery-epoch fence
+/// (DESIGN.md §10).  When a survivor abandons a recovery attempt it cannot
+/// know who else is blocked inside the attempt's protocol (a survivor it
+/// never heard of, a spare mid-join), so the fence poisons the attempt's
+/// epoch window machine-wide: every rank blocked on an in-flight protocol
+/// message of that epoch returns `Revoked` and re-enters a fresh agree.
+/// Best-effort, idempotent, skips dead peers.
+pub fn revoke_epoch_world(ctx: &mut Ctx, epoch: u64) {
+    for dst in 0..ctx.world.size {
+        if dst != ctx.rank && ctx.world.is_alive(dst) {
+            ctx.send_ctl(dst, Ctl::Revoke { epoch });
+        }
+    }
+    ctx.mark_revoked(epoch);
+}
+
+/// Epoch fence of one recovery *event*: hands out a fresh, disjoint epoch
+/// window per attempt so that an abandoned attempt's in-flight protocol
+/// messages can never be matched by a later attempt (tag-epoch poisoning).
+///
+/// Every survivor derives the identical schedule from shared state: the
+/// base is the last *successful* communicator's epoch (only replaced on a
+/// globally-agreed recovery completion), and attempts advance in lockstep
+/// because an attempt can only complete globally (its final fault-aware
+/// agreement spans all survivors) or be abandoned by everyone — a rank
+/// lagging on an older, already-revoked attempt epoch fails fast and
+/// catches up (see `shrink_at`).
+#[derive(Debug, Clone)]
+pub struct EpochFence {
+    base: u64,
+    attempt: u64,
+}
+
+impl EpochFence {
+    /// Epochs one attempt may consume: the shrunk communicator and the
+    /// stitched (spare-extended) communicator.
+    const EPOCHS_PER_ATTEMPT: u64 = 2;
+
+    pub fn new(comm: &Comm) -> EpochFence {
+        EpochFence { base: comm.epoch, attempt: 0 }
+    }
+
+    /// Epoch of the current attempt's shrunk communicator.
+    pub fn shrink_epoch(&self) -> u64 {
+        self.base + 1 + self.attempt * Self::EPOCHS_PER_ATTEMPT
+    }
+
+    /// Epoch of the current attempt's stitched communicator (what
+    /// [`stitch_spares`] derives as `shrunk.epoch + 1`).
+    pub fn stitch_epoch(&self) -> u64 {
+        self.shrink_epoch() + 1
+    }
+
+    /// Abandon the current attempt: later protocol messages move to the
+    /// next epoch window.  The caller revokes the abandoned window
+    /// ([`revoke_epoch_world`]).
+    pub fn abandon(&mut self) {
+        self.attempt += 1;
+    }
+
+    /// Completed attempts that were abandoned so far (0 on first try).
+    pub fn retries(&self) -> u64 {
+        self.attempt
+    }
+}
+
+/// Order-sensitive fingerprint of a tentative membership, folded through
+/// the shrink validation round so that two survivors with different
+/// liveness snapshots can never both adopt the same communicator.
+fn membership_fingerprint(epoch: u64, members: &[WorldRank]) -> i64 {
+    // FNV-1a over the epoch and the member list.
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    eat(epoch);
+    eat(members.len() as u64);
+    for &m in members {
+        eat(m as u64);
+    }
+    h as i64
 }
 
 /// Survivor membership of `comm` according to the failure detector.
@@ -60,20 +152,136 @@ pub fn failed(ctx: &Ctx, comm: &Comm) -> Vec<WorldRank> {
 /// Must be called with the caller's phase set to `Reconfig` so the consensus
 /// cost lands in the right bucket.
 pub fn shrink(ctx: &mut Ctx, comm: &Comm) -> MpiResult<Comm> {
+    shrink_at(ctx, comm, comm.epoch + 1)
+}
+
+/// One *validated* shrink round at an explicit target epoch (the epoch-fence
+/// building block; [`shrink`] is the `epoch + 1` special case).
+///
+/// Survivor membership is taken from the registry, then sealed by a
+/// leader-based membership agreement on the tentative epoch: every member
+/// sends a fingerprint *vote* of (epoch, membership) to the round leader
+/// (the first member of the survivor snapshot), which checks all votes
+/// match and broadcasts the *decision*.  Two survivors with different
+/// liveness snapshots therefore can never both adopt the round — the
+/// divergent view necessarily names a dead rank, so its holder errors on a
+/// dead send/recv (or on a fingerprint mismatch), and the failing rank
+/// **revokes the round's epoch machine-wide** before returning the error,
+/// which pulls every peer blocked in the round back out with `Revoked`.
+/// The caller then re-enters at the next fence epoch
+/// ([`shrink_fenced`]) — ULFM's revoke-and-re-agree loop.
+///
+/// The [`ProtoPhase::Agree`] fault point sits between contributing the vote
+/// and the decision broadcast, so campaigns can kill a rank mid-agreement.
+pub fn shrink_at(ctx: &mut Ctx, comm: &Comm, epoch: u64) -> MpiResult<Comm> {
+    if ctx.is_revoked(epoch) {
+        // A peer already poisoned this round (it abandoned it before we
+        // even entered); fail fast so the caller advances the fence.
+        return Err(MpiError::Revoked);
+    }
     let members = survivors(ctx, comm);
     let my_new = members
         .iter()
         .position(|&wr| wr == ctx.rank)
         .expect("shrink caller must be a survivor");
-    let mut new_comm = Comm::new(comm.epoch + 1, members, my_new);
-    // Drop any stale traffic from the revoked epoch.
-    ctx.purge_epochs_below(new_comm.epoch);
-    // Consensus cost: two agreement rounds over the survivor set.
-    for _ in 0..2 {
+    let fp = membership_fingerprint(epoch, &members);
+    let leader = members[0];
+    let result = (|| -> MpiResult<()> {
+        // Vote round.
         ctx.advance(AGREEMENT_OVERHEAD);
-        new_comm.agree(ctx, u64::MAX)?;
+        if ctx.rank == leader {
+            for &m in &members {
+                if m == ctx.rank {
+                    continue;
+                }
+                let vote = ctx.recv_match(m, epoch, tags::FENCE_BASE)?;
+                if vote.data().i[0] != fp {
+                    // Divergent snapshot somewhere: abort the round rather
+                    // than broadcast a decision some member cannot honor.
+                    return Err(MpiError::Revoked);
+                }
+            }
+        } else {
+            ctx.send_raw(
+                leader,
+                epoch,
+                tags::FENCE_BASE,
+                Payload::Data(Blob::from_i64s(vec![fp])),
+            )?;
+        }
+        // A member dying between its vote and the decision broadcast must
+        // not leave survivors waiting: the leader's decision send errors on
+        // the registry death (or a survivor's decision recv does), the
+        // failing rank revokes the round, and everyone re-agrees.
+        ctx.phase_point(ProtoPhase::Agree)?;
+        // Decision round.
+        ctx.advance(AGREEMENT_OVERHEAD);
+        if ctx.rank == leader {
+            for &m in &members {
+                if m != ctx.rank {
+                    ctx.send_raw(
+                        m,
+                        epoch,
+                        tags::FENCE_BASE + 1,
+                        Payload::Data(Blob::from_i64s(vec![fp])),
+                    )?;
+                }
+            }
+        } else {
+            let decision = ctx.recv_match(leader, epoch, tags::FENCE_BASE + 1)?;
+            if decision.data().i[0] != fp {
+                return Err(MpiError::Revoked);
+            }
+        }
+        Ok(())
+    })();
+    match result {
+        Ok(()) => {
+            let new_comm = Comm::new(epoch, members, my_new);
+            // Drop any stale traffic from revoked epochs.
+            ctx.purge_epochs_below(epoch);
+            Ok(new_comm)
+        }
+        Err(MpiError::Killed) => Err(MpiError::Killed),
+        Err(e) => {
+            revoke_epoch_world(ctx, epoch);
+            Err(e)
+        }
     }
-    Ok(new_comm)
+}
+
+/// Fenced shrink: re-run [`shrink_at`] rounds along the fence's epoch
+/// schedule until one round both validates *and* still names only live
+/// members — any death observed during a round bumps the fence (recorded as
+/// a recovery retry), poisons the abandoned epoch machine-wide and sends
+/// every survivor back to a fresh agree.  Only `Killed` (this rank's own
+/// death) escapes.
+pub fn shrink_fenced(ctx: &mut Ctx, comm: &Comm, fence: &mut EpochFence) -> MpiResult<Comm> {
+    loop {
+        if !ctx.world.is_alive(ctx.rank) {
+            return Err(ctx.die());
+        }
+        match shrink_at(ctx, comm, fence.shrink_epoch()) {
+            Ok(c) => {
+                // A member may have died after voting but before the
+                // decision landed; adopting a communicator with a dead
+                // member only defers the error, so detect it here and
+                // re-run the round on the enlarged failure set.
+                if c.members.iter().all(|&m| ctx.world.is_alive(m)) {
+                    return Ok(c);
+                }
+                revoke_epoch_world(ctx, c.epoch);
+                fence.abandon();
+                ctx.recovery_retries += 1;
+            }
+            Err(MpiError::Killed) => return Err(MpiError::Killed),
+            // `shrink_at` already revoked the poisoned round.
+            Err(_) => {
+                fence.abandon();
+                ctx.recovery_retries += 1;
+            }
+        }
+    }
 }
 
 /// Substitute recovery, survivor side: extend `shrunk` with spare world
@@ -138,12 +346,21 @@ pub fn stitch_spares(
 
 /// Substitute recovery, spare side: accept a Join invitation and synchronize
 /// with the stitched communicator.
+///
+/// A spare grant is a *lease* until this synchronization completes: the
+/// [`ProtoPhase::SpareJoin`] fault point lets campaigns kill the joiner
+/// before activation, in which case the survivors' stitched agreement
+/// errors, the recovery attempt is abandoned through the epoch fence, and
+/// the re-decided attempt grants the slot to another spare (or shrinks) —
+/// the dead joiner's lease rolls back because spare availability is always
+/// re-derived from the liveness registry.
 pub fn join_as_spare(
     ctx: &mut Ctx,
     epoch: u64,
     members: Vec<WorldRank>,
     as_rank: usize,
 ) -> MpiResult<Comm> {
+    ctx.phase_point(ProtoPhase::SpareJoin)?;
     let mut comm = Comm::new(epoch, members, as_rank);
     ctx.purge_epochs_below(epoch);
     ctx.advance(AGREEMENT_OVERHEAD);

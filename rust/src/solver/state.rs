@@ -105,7 +105,66 @@ pub struct SolverState {
     pub hwm_iters: u64,
 }
 
+/// Rollback image of everything a recovery attempt mutates in
+/// [`SolverState`] (restore, redistribution, relocalization).
+///
+/// The epoch-fenced recovery driver
+/// ([`crate::recovery::handle_failure_fenced`]) snapshots the state once
+/// per failure event and rolls back before re-entering after a nested
+/// failure poisoned an attempt: a half-redistributed partition must never
+/// leak into the next attempt's transfer planning, which derives the
+/// segment list from `state.part` *as of the failed communicator*.  The
+/// checkpoint store needs no counterpart — commits are atomic-by-version
+/// (a torn commit never advances the committed floor) and reconstruction
+/// writes are idempotent at fixed versions.
+#[derive(Debug, Clone)]
+pub struct StateSnapshot {
+    part: Partition,
+    mat: MatrixRows,
+    blk: EllBlock,
+    x: Vec<f64>,
+    b: Vec<f64>,
+    v_out: DenseBasis,
+    z_out: DenseBasis,
+    cycle: Option<CycleCtl>,
+    scalars: IterScalars,
+    hwm_iters: u64,
+}
+
 impl SolverState {
+    /// Capture the rollback image for one recovery event (see
+    /// [`StateSnapshot`]).
+    pub fn snapshot(&self) -> StateSnapshot {
+        StateSnapshot {
+            part: self.part.clone(),
+            mat: self.mat.clone(),
+            blk: self.blk.clone(),
+            x: self.x.clone(),
+            b: self.b.clone(),
+            v_out: self.v_out.clone(),
+            z_out: self.z_out.clone(),
+            cycle: self.cycle.clone(),
+            scalars: self.scalars,
+            hwm_iters: self.hwm_iters,
+        }
+    }
+
+    /// Roll the solver state back to a [`StateSnapshot`] (abandoned
+    /// recovery attempt; grid never changes, so only the mutable pieces
+    /// move).
+    pub fn rollback(&mut self, snap: &StateSnapshot) {
+        self.part = snap.part.clone();
+        self.mat = snap.mat.clone();
+        self.blk = snap.blk.clone();
+        self.x = snap.x.clone();
+        self.b = snap.b.clone();
+        self.v_out = snap.v_out.clone();
+        self.z_out = snap.z_out.clone();
+        self.cycle = snap.cycle.clone();
+        self.scalars = snap.scalars;
+        self.hwm_iters = snap.hwm_iters;
+    }
+
     /// Initial setup at comm rank `me` of `comm`: generate my rows (the
     /// paper's initial data distribution), build the halo plan, compute the
     /// analytic RHS, agree on ||b||, and seed the checkpoint store with the
@@ -397,6 +456,28 @@ mod tests {
         let blob = s.basis_blob();
         assert_eq!(blob.i, vec![0, 0]);
         assert!(blob.f.is_empty());
+    }
+
+    #[test]
+    fn snapshot_rollback_restores_mutated_state() {
+        let mut s = mini_state();
+        let snap = s.snapshot();
+        // Mutate everything a recovery attempt touches.
+        s.x.iter_mut().for_each(|v| *v = -9.0);
+        s.b[0] = 123.0;
+        s.scalars.inner_iters_done = 999;
+        s.scalars.next_version = 77;
+        s.hwm_iters = 999;
+        s.v_out.row_mut(0)[0] = 5.0;
+        s.cycle = Some(CycleCtl { j_done: 2, ls: GivensLs::new(4, 1.0) });
+        s.rollback(&snap);
+        assert_eq!(s.x, vec![1.0; s.rows()]);
+        assert_eq!(s.b[0], 0.0);
+        assert_eq!(s.scalars.inner_iters_done, 42);
+        assert_eq!(s.scalars.next_version, 3);
+        assert_eq!(s.hwm_iters, 42);
+        assert_eq!(s.v_out.row(0)[0], 0.0);
+        assert!(s.cycle.is_none());
     }
 
     #[test]

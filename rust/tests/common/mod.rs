@@ -67,10 +67,21 @@ where
     T: Send + 'static,
     F: Fn(Ctx) -> T + Send + Sync + 'static,
 {
-    let (w, rxs) = tiny_world(n);
+    run_ranks_plan(n, InjectionPlan::none(), f)
+}
+
+/// Like [`run_ranks`], but with a failure-injection plan driving the world
+/// (protocol-phase kills, scheduled iteration kills).
+pub fn run_ranks_plan<T, F>(n: usize, plan: InjectionPlan, f: F) -> Vec<T>
+where
+    T: Send + 'static,
+    F: Fn(Ctx) -> T + Send + Sync + 'static,
+{
+    let (w, rxs) = World::new(n, 0, NetParams::default(), Injector::new(plan));
     let f = Arc::new(f);
     let handles: Vec<_> = rxs
         .into_iter()
+        .enumerate()
         .map(|(rank, rx)| {
             let w = w.clone();
             let f = f.clone();

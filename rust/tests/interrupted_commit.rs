@@ -1,0 +1,148 @@
+//! Committed-floor atomicity under interrupted commits: a member (or
+//! stripe holder) dies *mid-commit* and the previous committed version
+//! must remain fully reconstructable, bit-identically, under every
+//! redundancy scheme — including an rs2 rotation boundary, where the
+//! incoming holder dying mid-re-encode must not orphan the restore
+//! version's stripes (they live on the *previous* rotation's holders).
+
+mod common;
+
+use common::{run_ranks_plan, wait_dead};
+use ulfm_ftgmres::checkpoint::{agree_restore_version, obj, CkptStore};
+use ulfm_ftgmres::ckptstore::{self, scheme, CkptCfg, Scheme};
+use ulfm_ftgmres::failure::{InjectionPlan, Kill, ProtoPhase};
+use ulfm_ftgmres::simmpi::ulfm::{self, EpochFence};
+use ulfm_ftgmres::simmpi::{Blob, Comm, MpiError};
+
+const N: usize = 8;
+
+/// Deterministic, rank-distinct v1 payload (what must survive the torn v2).
+fn v1_blob(rank: usize) -> Blob {
+    Blob {
+        f: (0..33).map(|k| (rank * 100 + k) as f64 * 0.5 + 0.125).collect(),
+        i: vec![rank as i64, 7, -3],
+        wire: None,
+    }
+}
+
+/// Drive one interrupted-commit scenario: commit v1 cleanly, let `victim`
+/// die entering the v2 commit, then repair and assert the survivors can
+/// still reconstruct the victim's v1 object bit-identically.
+fn interrupted_commit_case(name: &str, cfg: CkptCfg, victim: usize) {
+    let plan = InjectionPlan { kills: vec![Kill::at_phase(victim, ProtoPhase::CkptCommit, 2)] };
+    let cfg2 = cfg.clone();
+    let results = run_ranks_plan(N, plan, move |mut ctx| {
+        let cfg = &cfg2;
+        let mut comm = Comm::world(N, ctx.rank);
+        let mut store = CkptStore::new();
+        // v1: clean establishment commit.
+        ckptstore::commit(
+            &mut ctx,
+            &mut comm,
+            &mut store,
+            &[(obj::X, v1_blob(ctx.rank))],
+            1,
+            cfg,
+            true,
+        )
+        .unwrap();
+        // v2: the victim dies entering the commit; survivors see a torn
+        // exchange (or a torn agreement) and must not advance the floor.
+        let v2 = Blob {
+            f: v1_blob(ctx.rank).f.iter().map(|x| x + 1000.0).collect(),
+            i: v1_blob(ctx.rank).i,
+            wire: None,
+        };
+        let r2 = ckptstore::commit(&mut ctx, &mut comm, &mut store, &[(obj::X, v2)], 2, cfg, false);
+        if ctx.rank == victim {
+            assert!(matches!(r2, Err(MpiError::Killed)), "victim dies inside the commit");
+            return None;
+        }
+        assert!(r2.is_err(), "the torn commit must error, not hang");
+        assert_eq!(store.committed(), 1, "v2 must not commit on any survivor");
+        // Repair like the recovery driver: revoke, fenced shrink, agree.
+        wait_dead(&ctx.world, victim);
+        ulfm::revoke(&mut ctx, &comm);
+        let mut fence = EpochFence::new(&comm);
+        let mut shrunk = ulfm::shrink_fenced(&mut ctx, &comm, &mut fence).unwrap();
+        let v = agree_restore_version(&mut ctx, &mut shrunk, &store).unwrap();
+        assert_eq!(v, 1, "survivors restore the pre-interruption floor");
+        // My own v1 payload is intact despite the uncommitted v2 residue.
+        let (lv, local) = store.get_local_at_most(obj::X, v).expect("own v1 retained");
+        assert_eq!((lv, local.f.clone()), (1, v1_blob(ctx.rank).f), "local floor bit-identical");
+        // Recovery reader: materialize the victim's objects on its server.
+        let old_members: Vec<usize> = (0..N).collect();
+        ckptstore::reconstruct_failed(
+            &mut ctx,
+            &shrunk,
+            &mut store,
+            cfg,
+            &old_members,
+            v,
+            &[obj::X],
+        )
+        .unwrap();
+        let world = ctx.world.clone();
+        let alive_cr = move |cr: usize| world.is_alive(cr);
+        let server = cfg
+            .scheme
+            .server_cr_for(victim, N, &alive_cr, 1)
+            .expect("single loss must be recoverable");
+        if ctx.rank == server {
+            let (gv, got) =
+                store.get_remote_at_most(victim, obj::X, v).expect("victim's v1 served");
+            let want = v1_blob(victim);
+            assert_eq!(gv, 1);
+            assert_eq!(got.f, want.f, "reconstructed f lane bit-identical");
+            assert_eq!(got.i, want.i, "reconstructed i lane bit-identical");
+        }
+        Some(ctx.rank)
+    });
+    assert!(results[victim].is_none(), "{name}: victim excluded");
+    for (r, res) in results.iter().enumerate() {
+        if r != victim {
+            assert_eq!(*res, Some(r), "{name}: survivor {r} completed");
+        }
+    }
+}
+
+#[test]
+fn interrupted_commit_mirror_member() {
+    interrupted_commit_case("mirror", CkptCfg::mirror(1), 3);
+}
+
+#[test]
+fn interrupted_commit_xor_member() {
+    // Victim 1 is a plain member of parity group 0 (holder: rank 4).
+    let cfg = CkptCfg { scheme: Scheme::Xor { g: 4 }, ..CkptCfg::default() };
+    interrupted_commit_case("xor-member", cfg, 1);
+}
+
+#[test]
+fn interrupted_commit_xor_holder() {
+    // Victim 4 holds group 0's stripe but is itself a member of group 1,
+    // so its own v1 data must come back through group 1's stripe.
+    let cfg = CkptCfg { scheme: Scheme::Xor { g: 4 }, ..CkptCfg::default() };
+    interrupted_commit_case("xor-holder", cfg, 4);
+}
+
+#[test]
+fn interrupted_commit_rs2_member() {
+    let cfg = CkptCfg { scheme: Scheme::Rs2 { g: 4 }, ..CkptCfg::default() };
+    interrupted_commit_case("rs2-member", cfg, 1);
+}
+
+#[test]
+fn interrupted_commit_rs2_rotation_boundary_holder() {
+    // rebase_every = 1 puts every version in its own rotation epoch: v1's
+    // stripes live on the rot-1 holder pair, v2's re-encode targets the
+    // rot-2 pair.  The victim is v2's *incoming* P holder for group 0
+    // (which happens to be v1's Q holder): its death mid-re-encode must
+    // not orphan the restore version's stripes — the v=1 solve runs off
+    // the rot-1 pair's surviving stripe.
+    let cfg =
+        CkptCfg { scheme: Scheme::Rs2 { g: 4 }, rebase_every: 1, ..CkptCfg::default() };
+    let (p2, _) = scheme::rs2_holders(0, 4, N, cfg.rot_index(2));
+    assert_eq!(p2, 6, "rotation schedule moved under the test's feet");
+    interrupted_commit_case("rs2-rotation", cfg, p2);
+}

@@ -1,0 +1,145 @@
+//! Failures *during* recovery (DESIGN.md §10): a second rank dies at a
+//! protocol phase of the first failure's recovery — mid-agreement,
+//! mid-reconstruction, mid-redistribution, mid-commit or mid-spare-join —
+//! and the epoch-fenced restartable recovery protocol must abandon the
+//! poisoned attempt, re-agree on the union failure set, and complete in
+//! situ: recoverable nested patterns finish with **zero** executed global
+//! restarts and a converged solve.
+
+mod common;
+
+use std::sync::Arc;
+
+use common::quick_config;
+use ulfm_ftgmres::backend::native::NativeBackend;
+use ulfm_ftgmres::ckptstore::Scheme;
+use ulfm_ftgmres::config::RunConfig;
+use ulfm_ftgmres::coordinator;
+use ulfm_ftgmres::failure::{InjectionPlan, Kill, ProtoPhase};
+use ulfm_ftgmres::metrics::RunReport;
+use ulfm_ftgmres::recovery::Strategy;
+
+fn run_plan(cfg: &RunConfig, plan: InjectionPlan) -> RunReport {
+    let backend = Arc::new(NativeBackend::new(cfg.compute.clone()));
+    coordinator::run_custom(cfg, backend, plan).expect("run completes")
+}
+
+#[test]
+fn second_failure_at_reconstruct_recovers_without_restart() {
+    // xor:4 over p=8: rank 7 (parity group 1) dies at iteration 25; rank 3
+    // (group 0) dies entering the reconstruction of that recovery.  The
+    // union is one loss per group — recoverable — so the fenced retry must
+    // complete in situ.
+    let mut cfg = quick_config(8, Strategy::Shrink, 0);
+    cfg.solver.ckpt.scheme = Scheme::Xor { g: 4 };
+    let rep = run_plan(&cfg, InjectionPlan::nested(7, 25, 3, ProtoPhase::Reconstruct, 1));
+    assert!(rep.converged, "relres={}", rep.final_relres);
+    assert_eq!(rep.failures, 2);
+    assert_eq!(rep.global_restarts(), 0, "recoverable nested pattern must not restart");
+    assert!(rep.recovery_retries >= 1, "the poisoned attempt must be fenced and retried");
+    // One executed decision, covering the union failure set, on a retried
+    // attempt (abandoned attempts are never logged).
+    assert_eq!(rep.decisions.len(), 1, "decisions: {:?}", rep.decisions);
+    let d = &rep.decisions[0];
+    assert_eq!(d.decision, "shrink");
+    assert!(d.attempt >= 1, "the executed decision came from a retry: {d:?}");
+    let mut failed = d.failed_ranks.clone();
+    failed.sort_unstable();
+    assert_eq!(failed, vec![3, 7]);
+}
+
+#[test]
+fn spare_dying_mid_join_rolls_back_the_lease() {
+    // Substitute with two warm spares: rank 5 dies at iteration 25; the
+    // first spare (world rank 8) dies entering its join — before its lease
+    // activated.  The retry must re-derive spare availability from the
+    // registry and stitch the second spare (world rank 9) instead.
+    let mut cfg = quick_config(8, Strategy::Substitute, 1);
+    cfg.warm_spares = Some(2);
+    let rep = run_plan(&cfg, InjectionPlan::nested(5, 25, 8, ProtoPhase::SpareJoin, 1));
+    assert!(rep.converged, "relres={}", rep.final_relres);
+    assert_eq!(rep.global_restarts(), 0);
+    assert!(rep.recovery_retries >= 1, "the interrupted join must be fenced and retried");
+    assert_eq!(rep.decisions.len(), 1);
+    assert_eq!(rep.decisions[0].decision, "substitute");
+    assert_eq!(
+        rep.decisions[0].failed_ranks,
+        vec![5],
+        "the dead joiner was never an application member"
+    );
+    // Spare 8's lease rolled back with its death; spare 9 did the work.
+    let r8 = rep.ranks.iter().find(|r| r.world_rank == 8).unwrap();
+    assert!(r8.killed, "spare 8 died mid-join");
+    let r9 = rep.ranks.iter().find(|r| r.world_rank == 9).unwrap();
+    assert!(r9.was_spare && !r9.killed && r9.iterations > 0, "spare 9 was adopted: {r9:?}");
+}
+
+#[test]
+fn nested_kills_across_protocol_phases_recover_in_situ() {
+    // Sweep the remaining recovery-side fault points under the default
+    // mirror scheme; ranks 3 and 7 are never ring-adjacent at p=8, so the
+    // union loss stays recoverable and no leg may escalate.
+    for phase in [ProtoPhase::Detect, ProtoPhase::Agree, ProtoPhase::Redistribute] {
+        let cfg = quick_config(8, Strategy::Shrink, 0);
+        let rep = run_plan(&cfg, InjectionPlan::nested(7, 25, 3, phase, 1));
+        assert!(rep.converged, "{phase:?}: relres={}", rep.final_relres);
+        assert_eq!(rep.failures, 2, "{phase:?}");
+        assert_eq!(rep.global_restarts(), 0, "{phase:?}");
+    }
+}
+
+#[test]
+fn member_dying_mid_steady_state_commit_recovers() {
+    // A death inside an ordinary checkpoint commit (occurrence 3 = third
+    // commit entry: setup establishment, then two dynamic commits): the
+    // torn version must not advance anywhere, recovery restores the
+    // previous committed floor, and the run converges.
+    let cfg = quick_config(8, Strategy::Shrink, 0);
+    let plan = InjectionPlan { kills: vec![Kill::at_phase(5, ProtoPhase::CkptCommit, 3)] };
+    let rep = run_plan(&cfg, plan);
+    assert!(rep.converged, "relres={}", rep.final_relres);
+    assert_eq!(rep.failures, 1);
+    assert_eq!(rep.global_restarts(), 0);
+    assert_eq!(rep.decisions.len(), 1);
+    assert_eq!(rep.decisions[0].failed_ranks, vec![5]);
+}
+
+#[test]
+fn death_during_setup_establishment_shrinks_and_reruns_setup() {
+    // Occurrence 1 of CkptCommit is the establishment commit of initial
+    // setup: no committed state exists anywhere yet, so survivors shrink
+    // through the fence and re-run setup from scratch.
+    let cfg = quick_config(8, Strategy::Shrink, 0);
+    let plan = InjectionPlan { kills: vec![Kill::at_phase(2, ProtoPhase::CkptCommit, 1)] };
+    let rep = run_plan(&cfg, plan);
+    assert!(rep.converged, "relres={}", rep.final_relres);
+    assert_eq!(rep.failures, 1);
+    // No recovery event: the death predates any solver state.
+    assert!(rep.decisions.is_empty(), "decisions: {:?}", rep.decisions);
+}
+
+#[test]
+fn out_of_range_injection_target_is_rejected() {
+    // A typo'd `--inject-phase` rank must error up front, not report a
+    // failure-free "success" for a campaign that never ran.
+    let cfg = quick_config(8, Strategy::Shrink, 0);
+    let plan = InjectionPlan { kills: vec![Kill::at_phase(99, ProtoPhase::Agree, 1)] };
+    let backend = Arc::new(NativeBackend::new(cfg.compute.clone()));
+    let err = coordinator::run_custom(&cfg, backend, plan).unwrap_err();
+    assert!(err.to_string().contains("out of range"), "{err}");
+}
+
+#[test]
+fn nested_failure_under_rs2_double_parity_stays_in_situ() {
+    // rs2:4 tolerates two in-group losses; kill two ranks of group 0 —
+    // one at an iteration boundary, one inside the resulting recovery's
+    // reconstruction — and the two-erasure solve must still carry the
+    // retry without escalation.
+    let mut cfg = quick_config(8, Strategy::Shrink, 0);
+    cfg.solver.ckpt.scheme = Scheme::Rs2 { g: 4 };
+    let rep = run_plan(&cfg, InjectionPlan::nested(1, 25, 2, ProtoPhase::Reconstruct, 1));
+    assert!(rep.converged, "relres={}", rep.final_relres);
+    assert_eq!(rep.failures, 2);
+    assert_eq!(rep.global_restarts(), 0, "rs2 solves the two-in-group union in situ");
+    assert!(rep.recovery_retries >= 1);
+}

@@ -129,8 +129,8 @@ fn simultaneous_failures_recovered_in_one_shrink() {
     let cfg = quick_config(8, Strategy::Shrink, 0);
     let plan = ulfm_ftgmres::failure::InjectionPlan {
         kills: vec![
-            ulfm_ftgmres::failure::Kill { world_rank: 2, at_inner_iter: 25 },
-            ulfm_ftgmres::failure::Kill { world_rank: 5, at_inner_iter: 25 },
+            ulfm_ftgmres::failure::Kill::at_iter(2, 25),
+            ulfm_ftgmres::failure::Kill::at_iter(5, 25),
         ],
     };
     let backend = coordinator::make_backend(&cfg).unwrap();
