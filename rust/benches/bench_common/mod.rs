@@ -40,7 +40,14 @@ pub fn timed<T>(label: &str, f: impl FnOnce() -> T) -> T {
 }
 
 /// Micro-bench: run `f` repeatedly ~`target_secs`, report ns/iter.
-pub fn micro(label: &str, target_secs: f64, mut f: impl FnMut()) {
+pub fn micro(label: &str, target_secs: f64, f: impl FnMut()) {
+    let (ns, iters) = micro_ns(target_secs, f);
+    println!("{label:<44} {ns:>14.0} ns/iter   ({iters} iters)");
+}
+
+/// Like [`micro`] but returns `(ns/iter, iters)` instead of printing, so
+/// callers can compute speedups and emit them into BENCH_*.json files.
+pub fn micro_ns(target_secs: f64, mut f: impl FnMut()) -> (f64, u64) {
     // Warmup.
     for _ in 0..3 {
         f();
@@ -51,6 +58,5 @@ pub fn micro(label: &str, target_secs: f64, mut f: impl FnMut()) {
         f();
         iters += 1;
     }
-    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
-    println!("{label:<44} {ns:>14.0} ns/iter   ({iters} iters)");
+    (t0.elapsed().as_nanos() as f64 / iters as f64, iters)
 }

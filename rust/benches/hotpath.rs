@@ -1,17 +1,99 @@
 //! Hot-path micro-benches (the §Perf working set): native kernel ops, PJRT
-//! artifact execution, message layer, and collectives.  These are the
-//! numbers the EXPERIMENTS.md §Perf before/after table tracks.
+//! artifact execution, the message layer, the GF(2^8)/delta codecs, and
+//! the end-to-end commit pipeline.  These are the numbers the
+//! EXPERIMENTS.md §Perf before/after table tracks.
 //!
-//! `cargo bench --bench hotpath`
+//! Emits `BENCH_hotpath.json` (DESIGN.md §11) with per-leg bytes-copied /
+//! allocation counts from an instrumented global allocator plus the
+//! shared-buffer copy counters, and asserts the PR's acceptance gates:
+//! the widened GF(2^8) kernel beats the bytewise reference by >= 4x, and
+//! the zero-copy data plane cuts deep-copied bytes per checkpoint commit
+//! by >= 2x on the xor:4+delta and rs2:4+delta legs (against the same
+//! code with `force_deep_clones`, i.e. the pre-refactor wire).
+//!
+//! `cargo bench --bench hotpath` (`BENCH_SMOKE=1` for the CI quick pass).
 
 mod bench_common;
 
-use bench_common::micro;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Arc;
+
+use bench_common::{micro, micro_ns};
 use ulfm_ftgmres::backend::native::NativeBackend;
 use ulfm_ftgmres::backend::{Backend, DenseBasis};
-use ulfm_ftgmres::netsim::ComputeModel;
+use ulfm_ftgmres::ckptstore::{delta, gf256, Scheme};
+use ulfm_ftgmres::config::RunConfig;
+use ulfm_ftgmres::coordinator;
+use ulfm_ftgmres::failure::{InjectionPlan, Injector};
+use ulfm_ftgmres::metrics::RunReport;
+use ulfm_ftgmres::netsim::{ComputeModel, NetParams};
 use ulfm_ftgmres::problem::{EllBlock, Grid3D, MatrixRows, Partition};
+use ulfm_ftgmres::recovery::Strategy;
 use ulfm_ftgmres::runtime::PjrtEngine;
+use ulfm_ftgmres::simmpi::{shared, Blob, Comm, Ctx, WordArena, World};
+
+// ---------------------------------------------------------------------
+// Instrumented allocator: counts every heap allocation the process makes
+// so the codec legs can assert the arena actually removed per-commit
+// allocations (not just moved them around).
+// ---------------------------------------------------------------------
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Relaxed)
+}
+
+// ---------------------------------------------------------------------
+// Leg bookkeeping for BENCH_hotpath.json
+// ---------------------------------------------------------------------
+
+struct Leg {
+    name: &'static str,
+    kind: &'static str,
+    ns_per_op: f64,
+    ns_per_op_baseline: f64,
+    bytes_copied: u64,
+    bytes_copied_baseline: u64,
+    allocs: u64,
+    allocs_baseline: u64,
+    /// Improvement over the leg's baseline: time ratio for kernel legs,
+    /// deep-copied-byte ratio for message/commit legs, allocation ratio
+    /// for the codec leg.
+    speedup: f64,
+}
+
+fn ratio(baseline: f64, new: f64) -> f64 {
+    baseline / new.max(1e-9)
+}
+
+fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
 
 fn block(rows_target: usize) -> EllBlock {
     // Slab grid sized to hit roughly rows_target local rows on rank 0 of 2.
@@ -23,7 +105,269 @@ fn block(rows_target: usize) -> EllBlock {
     EllBlock::build(&mat, &part, 0)
 }
 
-fn main() {
+/// Deterministic word soup (no zero bytes dodging the gmul zero-checks:
+/// random data keeps the bytewise baseline's branches realistic).
+fn random_words(n: usize, mut seed: u64) -> Vec<i64> {
+    (0..n)
+        .map(|_| {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            seed as i64
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Leg 1: widened GF(2^8) kernel vs the bytewise log/exp reference
+// ---------------------------------------------------------------------
+
+fn leg_gf256(target: f64) -> Leg {
+    let n = 1 << 17; // 1 MiB of payload words
+    let words = random_words(n, 0xfeed);
+    let mut acc = random_words(n, 0xbeef);
+    let c = 0x53u8;
+    let (ns_wide, _) = micro_ns(target, || {
+        gf256::mul_xor_into(&mut acc, &words, c);
+    });
+    let (ns_byte, _) = micro_ns(target, || {
+        gf256::mul_xor_into_bytewise(&mut acc, &words, c);
+    });
+    // Same fold either way: results must agree bit-for-bit.
+    let mut a = random_words(257, 1);
+    let mut b = a.clone();
+    gf256::mul_xor_into(&mut a, &words[..257], c);
+    gf256::mul_xor_into_bytewise(&mut b, &words[..257], c);
+    assert_eq!(a, b, "widened kernel diverged from the bytewise reference");
+    println!(
+        "gf256 mul_xor_into {n} words: wide {ns_wide:>12.0} ns, bytewise {ns_byte:>12.0} ns \
+         ({:.2}x)",
+        ratio(ns_byte, ns_wide)
+    );
+    Leg {
+        name: "gf256_mul_xor",
+        kind: "kernel",
+        ns_per_op: ns_wide,
+        ns_per_op_baseline: ns_byte,
+        bytes_copied: 0,
+        bytes_copied_baseline: 0,
+        allocs: 0,
+        allocs_baseline: 0,
+        speedup: ratio(ns_byte, ns_wide),
+    }
+}
+
+/// Two-erasure solve on the widened kernels vs the bytewise solver.
+fn leg_gf256_solve(target: f64) -> Leg {
+    let n = 1 << 15;
+    let pp = random_words(n, 7);
+    let qq = random_words(n, 8);
+    let (ci, cj) = (gf256::coef(1), gf256::coef(3));
+    let (ns_wide, _) = micro_ns(target, || {
+        let _ = gf256::solve_two_erasures(&pp, &qq, ci, cj);
+    });
+    let (ns_byte, _) = micro_ns(target, || {
+        let _ = gf256::solve_two_erasures_bytewise(&pp, &qq, ci, cj);
+    });
+    assert_eq!(
+        gf256::solve_two_erasures(&pp, &qq, ci, cj),
+        gf256::solve_two_erasures_bytewise(&pp, &qq, ci, cj),
+        "widened solve diverged"
+    );
+    println!(
+        "gf256 solve_two_erasures {n} words: wide {ns_wide:>9.0} ns, bytewise {ns_byte:>9.0} ns \
+         ({:.2}x)",
+        ratio(ns_byte, ns_wide)
+    );
+    Leg {
+        name: "gf256_two_erasure_solve",
+        kind: "kernel",
+        ns_per_op: ns_wide,
+        ns_per_op_baseline: ns_byte,
+        bytes_copied: 0,
+        bytes_copied_baseline: 0,
+        allocs: 0,
+        allocs_baseline: 0,
+        speedup: ratio(ns_byte, ns_wide),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Leg 2: message-layer fan-out — shared-buffer clones vs deep clones
+// ---------------------------------------------------------------------
+
+fn leg_msg_fanout(target: f64) -> Leg {
+    let blob = Blob::from_f64s((0..1 << 17).map(|i| i as f64).collect());
+    let fanout = 64usize;
+    let run = |deep: bool, target: f64| -> (f64, u64, u64) {
+        shared::force_deep_clones(deep);
+        let s0 = shared::stats();
+        let a0 = allocs();
+        let (ns, iters) = micro_ns(target, || {
+            let clones: Vec<Blob> = (0..fanout).map(|_| blob.clone()).collect();
+            std::hint::black_box(&clones);
+        });
+        let s1 = shared::stats();
+        let a1 = allocs();
+        shared::force_deep_clones(false);
+        // Warmup iterations included in the counter window; normalize per
+        // op via the measured iteration count (+3 warmups).
+        let ops = iters + 3;
+        (ns, (s1.deep_bytes - s0.deep_bytes) / ops, (a1 - a0) / ops)
+    };
+    let (ns_cow, bytes_cow, allocs_cow) = run(false, target);
+    let (ns_deep, bytes_deep, allocs_deep) = run(true, target);
+    println!(
+        "msg clone fan-out x{fanout} (1 MiB blob): shared {bytes_cow} B/op {ns_cow:.0} ns, \
+         deep {bytes_deep} B/op {ns_deep:.0} ns"
+    );
+    Leg {
+        name: "msg_clone_fanout",
+        kind: "message",
+        ns_per_op: ns_cow,
+        ns_per_op_baseline: ns_deep,
+        bytes_copied: bytes_cow,
+        bytes_copied_baseline: bytes_deep,
+        allocs: allocs_cow,
+        allocs_baseline: allocs_deep,
+        speedup: ratio(bytes_deep as f64, bytes_cow as f64),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Leg 3: delta codec — arena scratch vs per-encode allocation
+// ---------------------------------------------------------------------
+
+fn leg_delta_codec(target: f64) -> Leg {
+    let base = Blob::from_f64s((0..1 << 15).map(|i| (i as f64) * 0.5).collect());
+    let mut new = base.clone();
+    new.f[17] = -1.0;
+    new.f[20_000] = 2.5;
+    let mut arena = WordArena::default();
+    // Warm the pool so steady-state is measured.
+    let w = delta::xor_delta_wire_in(&mut arena, &base, &new, 3, 512);
+    let w2 = delta::xor_delta_wire(&base, &new, 3, 512);
+    assert_eq!(w.i, w2.i, "arena codec diverged from the allocating codec");
+
+    let a0 = allocs();
+    let (ns_arena, it_arena) = micro_ns(target, || {
+        let wire = delta::xor_delta_wire_in(&mut arena, &base, &new, 3, 512);
+        std::hint::black_box(&wire);
+    });
+    let allocs_arena = (allocs() - a0) / (it_arena + 3);
+
+    let a1 = allocs();
+    let (ns_fresh, it_fresh) = micro_ns(target, || {
+        let wire = delta::xor_delta_wire(&base, &new, 3, 512);
+        std::hint::black_box(&wire);
+    });
+    let allocs_fresh = (allocs() - a1) / (it_fresh + 3);
+    println!(
+        "delta xor encode 32Ki words: arena {allocs_arena} allocs/op {ns_arena:.0} ns, \
+         fresh {allocs_fresh} allocs/op {ns_fresh:.0} ns"
+    );
+    Leg {
+        name: "delta_codec_arena",
+        kind: "delta",
+        ns_per_op: ns_arena,
+        ns_per_op_baseline: ns_fresh,
+        bytes_copied: 0,
+        bytes_copied_baseline: 0,
+        allocs: allocs_arena,
+        allocs_baseline: allocs_fresh,
+        speedup: ratio(allocs_fresh as f64, allocs_arena as f64),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Legs 4+5: commit pipeline — deep-copied bytes per checkpoint commit,
+// zero-copy wire vs the forced-deep (pre-refactor) wire
+// ---------------------------------------------------------------------
+
+fn commit_cfg(scheme: Scheme) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.grid = Grid3D::cube(16);
+    cfg.p = 8;
+    cfg.strategy = Strategy::Shrink;
+    cfg.failures = 0;
+    cfg.solver.tol = 1e-10;
+    cfg.solver.m_inner = 10;
+    cfg.solver.m_outer = 20;
+    cfg.solver.max_cycles = 20;
+    cfg.solver.ckpt.scheme = scheme;
+    cfg.solver.ckpt.delta = true;
+    cfg
+}
+
+fn commit_digest(rep: &RunReport) -> (bool, u64, u64, (usize, usize, usize)) {
+    (rep.converged, rep.iterations, rep.final_relres.to_bits(), rep.ckpt_totals())
+}
+
+fn leg_commit(name: &'static str, scheme: Scheme) -> Leg {
+    let cfg = commit_cfg(scheme);
+    let run = |deep: bool| -> (RunReport, u64, f64) {
+        shared::force_deep_clones(deep);
+        let s0 = shared::stats();
+        let t0 = std::time::Instant::now();
+        let rep = coordinator::run(&cfg).expect("commit leg completes");
+        let wall = t0.elapsed().as_nanos() as f64;
+        let s1 = shared::stats();
+        shared::force_deep_clones(false);
+        (rep, s1.deep_bytes - s0.deep_bytes, wall)
+    };
+    let (rep_cow, bytes_cow, ns_cow) = run(false);
+    let (rep_deep, bytes_deep, ns_deep) = run(true);
+    assert_eq!(
+        commit_digest(&rep_cow),
+        commit_digest(&rep_deep),
+        "{name}: zero-copy wire diverged from the deep-copy wire"
+    );
+    let commits = rep_cow.ckpt_totals().2.max(1) as u64;
+    let per_cow = bytes_cow / commits;
+    let per_deep = bytes_deep / commits;
+    println!(
+        "{name}: {commits} commits, deep-copied bytes/commit {per_cow} (zero-copy) vs \
+         {per_deep} (forced deep) — {:.1}x fewer",
+        ratio(per_deep as f64, per_cow as f64)
+    );
+    Leg {
+        name,
+        kind: "commit",
+        ns_per_op: ns_cow / commits as f64,
+        ns_per_op_baseline: ns_deep / commits as f64,
+        bytes_copied: per_cow,
+        bytes_copied_baseline: per_deep,
+        allocs: 0,
+        allocs_baseline: 0,
+        speedup: ratio(per_deep as f64, per_cow as f64),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Message-layer wall cost (kept from the original §Perf working set)
+// ---------------------------------------------------------------------
+
+fn bench_rank_loop(n: usize, rounds: usize) -> f64 {
+    let (w, rxs) = World::new(n, 0, NetParams::default(), Injector::new(InjectionPlan::none()));
+    let handles: Vec<_> = rxs
+        .into_iter()
+        .enumerate()
+        .map(|(rank, rx)| {
+            let w: Arc<World> = w.clone();
+            std::thread::spawn(move || {
+                let mut ctx = Ctx::new(w, rank, rx);
+                let mut comm = Comm::world(n, rank);
+                let mut v = [rank as f64];
+                for _ in 0..rounds {
+                    comm.allreduce_sum(&mut ctx, &mut v).unwrap();
+                }
+                v[0]
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).sum()
+}
+
+fn main() -> anyhow::Result<()> {
+    let target = if smoke() { 0.05 } else { 0.3 };
     println!("# hotpath micro-benches (1 iteration of each op)");
     let native = NativeBackend::default();
 
@@ -32,7 +376,7 @@ fn main() {
         let r = blk.rows;
         let xh: Vec<f64> = (0..blk.x_halo_len()).map(|i| (i as f64 * 0.1).sin()).collect();
         let mut y = vec![0.0; r];
-        micro(&format!("native/spmv r={r}"), 0.3, || {
+        micro(&format!("native/spmv r={r}"), target, || {
             native.spmv(&blk, &xh, &mut y);
         });
 
@@ -44,21 +388,22 @@ fn main() {
         }
         let w: Vec<f64> = (0..r).map(|i| (i as f64 * 0.2).cos()).collect();
         let mut h = vec![0.0; 26];
-        micro(&format!("native/dot_partials m=13 r={r}"), 0.3, || {
+        micro(&format!("native/dot_partials m=13 r={r}"), target, || {
             native.dot_partials(&v, 13, &w, &mut h);
         });
         let mut w2 = w.clone();
-        micro(&format!("native/update_w m=13 r={r}"), 0.3, || {
+        micro(&format!("native/update_w m=13 r={r}"), target, || {
             let _ = native.update_w(&v, 13, &mut w2, &h);
         });
     }
 
-    // PJRT path (requires artifacts).
+    // PJRT path (requires artifacts; skipped in smoke mode).
     let art = ["../artifacts", "artifacts"]
         .iter()
         .map(std::path::Path::new)
         .find(|p| p.join("manifest.tsv").exists());
     match art {
+        _ if smoke() => println!("pjrt: skipped (smoke mode)"),
         None => println!("pjrt: skipped (run `make artifacts`)"),
         Some(dir) => {
             let eng = PjrtEngine::load(dir, ComputeModel::default(), true).expect("load");
@@ -87,40 +432,99 @@ fn main() {
         }
     }
 
-    // Message layer: p2p round trips and allreduce wall cost.
+    // Message layer: allreduce wall cost (the collectives now fan out
+    // shared references; see the msg_clone_fanout leg for the byte story).
     println!("\n# simmpi wall-cost micro-benches");
     for n in [8usize, 64] {
+        let rounds = if smoke() { 500 } else { 2000 };
         let t0 = std::time::Instant::now();
-        let rounds = 2000;
         let results = bench_rank_loop(n, rounds);
         let per = t0.elapsed().as_nanos() as f64 / (rounds as f64);
         println!(
             "allreduce n={n:<3} {per:>12.0} ns/op (wall, {rounds} rounds, sum={results})"
         );
     }
-}
 
-fn bench_rank_loop(n: usize, rounds: usize) -> f64 {
-    use std::sync::Arc;
-    use ulfm_ftgmres::failure::{InjectionPlan, Injector};
-    use ulfm_ftgmres::netsim::NetParams;
-    use ulfm_ftgmres::simmpi::{Comm, Ctx, World};
-    let (w, rxs) = World::new(n, 0, NetParams::default(), Injector::new(InjectionPlan::none()));
-    let handles: Vec<_> = rxs
-        .into_iter()
-        .enumerate()
-        .map(|(rank, rx)| {
-            let w: Arc<World> = w.clone();
-            std::thread::spawn(move || {
-                let mut ctx = Ctx::new(w, rank, rx);
-                let mut comm = Comm::world(n, rank);
-                let mut v = [rank as f64];
-                for _ in 0..rounds {
-                    comm.allreduce_sum(&mut ctx, &mut v).unwrap();
-                }
-                v[0]
-            })
-        })
-        .collect();
-    handles.into_iter().map(|h| h.join().unwrap()).sum()
+    // Structured legs: kernels, message layer, codecs, commit pipeline.
+    println!("\n# zero-copy / widened-kernel legs (DESIGN.md §11)");
+    let legs = vec![
+        leg_gf256(target),
+        leg_gf256_solve(target),
+        leg_msg_fanout(target),
+        leg_delta_codec(target),
+        leg_commit("commit_xor4_delta", Scheme::Xor { g: 4 }),
+        leg_commit("commit_rs2_4_delta", Scheme::Rs2 { g: 4 }),
+    ];
+
+    let by_name = |n: &str| legs.iter().find(|l| l.name == n).unwrap();
+    let gf_speedup = by_name("gf256_mul_xor").speedup;
+    let xor_reduction = by_name("commit_xor4_delta").speedup;
+    let rs2_reduction = by_name("commit_rs2_4_delta").speedup;
+
+    // Acceptance gates (ISSUE 5).  The >= 4x kernel gate is an AVX2-path
+    // expectation (this is what CI runs on); scalar-table-only hosts are
+    // held to a relaxed floor so the bench stays meaningful off x86-64.
+    let gf_gate = if gf256::wide_simd_active() { 4.0 } else { 2.0 };
+    assert!(
+        gf_speedup >= gf_gate,
+        "widened GF(2^8) kernel must beat the bytewise reference >= {gf_gate}x \
+         (simd={}), got {gf_speedup:.2}x",
+        gf256::wide_simd_active()
+    );
+    for name in ["commit_xor4_delta", "commit_rs2_4_delta"] {
+        let l = by_name(name);
+        assert!(
+            l.speedup >= 2.0,
+            "{name}: deep-copied bytes per commit must drop >= 2x, got {:.2}x \
+             ({} vs {} bytes/commit)",
+            l.speedup,
+            l.bytes_copied,
+            l.bytes_copied_baseline
+        );
+    }
+    assert!(
+        by_name("msg_clone_fanout").bytes_copied == 0,
+        "blob fan-out must not deep-copy payload bytes"
+    );
+    assert!(
+        by_name("delta_codec_arena").speedup >= 2.0,
+        "arena codec must at least halve per-encode allocations"
+    );
+
+    // Emit BENCH_hotpath.json at the repository root.
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"hotpath\",\n");
+    let _ = writeln!(
+        json,
+        "  \"smoke\": {},\n  \"simd\": {},\n  \"gf_wide_speedup\": {gf_speedup:.4},\n  \
+         \"commit_copy_reduction_xor4_delta\": {xor_reduction:.4},\n  \
+         \"commit_copy_reduction_rs2_4_delta\": {rs2_reduction:.4},\n  \"legs\": [",
+        smoke(),
+        gf256::wide_simd_active()
+    );
+    for (i, l) in legs.iter().enumerate() {
+        let _ = writeln!(
+            json,
+            "    {{\"name\": \"{}\", \"kind\": \"{}\", \"ns_per_op\": {:.1}, \
+             \"ns_per_op_baseline\": {:.1}, \"bytes_copied\": {}, \
+             \"bytes_copied_baseline\": {}, \"allocs\": {}, \"allocs_baseline\": {}, \
+             \"speedup\": {:.4}}}{}",
+            l.name,
+            l.kind,
+            l.ns_per_op,
+            l.ns_per_op_baseline,
+            l.bytes_copied,
+            l.bytes_copied_baseline,
+            l.allocs,
+            l.allocs_baseline,
+            l.speedup,
+            if i + 1 < legs.len() { "," } else { "" }
+        );
+    }
+    json.push_str("  ]\n}\n");
+    let path = std::path::Path::new("../BENCH_hotpath.json");
+    std::fs::write(path, &json)?;
+    eprintln!("wrote {}", path.display());
+    println!("hotpath checks passed");
+    Ok(())
 }

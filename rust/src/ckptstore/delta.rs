@@ -45,7 +45,7 @@
 //! charges them at exactly 8 bytes per word.
 
 use crate::checkpoint::Version;
-use crate::simmpi::Blob;
+use crate::simmpi::{Blob, WordArena};
 
 /// Mirror delta wire format tag.
 pub const FMT_MDELTA: i64 = 2;
@@ -67,9 +67,18 @@ pub const FMT_STRIPE: i64 = 9;
 /// Serialize a blob into 64-bit words: f64 bit patterns, then i64 values.
 pub fn pack_words(b: &Blob) -> Vec<i64> {
     let mut w = Vec::with_capacity(b.f.len() + b.i.len());
-    w.extend(b.f.iter().map(|v| v.to_bits() as i64));
-    w.extend_from_slice(&b.i);
+    pack_words_into(b, &mut w);
     w
+}
+
+/// [`pack_words`] into a caller-provided (arena) buffer, clearing it first
+/// — the commit path packs two full objects per delta encode and must not
+/// allocate fresh `Vec`s for them every commit (DESIGN.md §11).
+pub fn pack_words_into(b: &Blob, out: &mut Vec<i64>) {
+    out.clear();
+    out.reserve(b.f.len() + b.i.len());
+    out.extend(b.f.iter().map(|v| v.to_bits() as i64));
+    out.extend_from_slice(&b.i);
 }
 
 /// Inverse of [`pack_words`] given the original lane lengths.  `words` may
@@ -79,11 +88,10 @@ pub fn unpack_words(words: &[i64], f_len: usize, i_len: usize) -> Blob {
         words.len() >= f_len + i_len,
         "packed words shorter than recorded lengths"
     );
-    Blob {
-        f: words[..f_len].iter().map(|&w| f64::from_bits(w as u64)).collect(),
-        i: words[f_len..f_len + i_len].to_vec(),
-        wire: None,
-    }
+    Blob::new(
+        words[..f_len].iter().map(|&w| f64::from_bits(w as u64)).collect(),
+        words[f_len..f_len + i_len].to_vec(),
+    )
 }
 
 /// XOR `words` into `acc`, growing `acc` with zeros as needed.
@@ -123,24 +131,29 @@ fn word_at(words: &[i64], j: usize) -> i64 {
 }
 
 /// Chunk indices (over `total` zero-padded words, `cw` words per chunk)
-/// where `base` and `new_w` differ.
-fn changed_chunks(base: &[i64], new_w: &[i64], total: usize, cw: usize) -> Vec<usize> {
+/// where `base` and `new_w` differ, written into an arena scratch (as
+/// i64s — they ship verbatim in the wire header).
+fn changed_chunks_into(base: &[i64], new_w: &[i64], total: usize, cw: usize, out: &mut Vec<i64>) {
+    out.clear();
     let n_chunks = total.div_ceil(cw);
-    let mut changed = Vec::new();
     for c in 0..n_chunks {
         let lo = c * cw;
         let hi = total.min(lo + cw);
         if (lo..hi).any(|j| word_at(base, j) != word_at(new_w, j)) {
-            changed.push(c);
+            out.push(c as i64);
         }
     }
-    changed
 }
 
 /// Shared delta wire layout:
 /// `[fmt, base_version, f_len, i_len, chunk_words, total_words, n_chunks,
 ///   idx_0..idx_{n-1}, chunk words...]`.
+///
+/// Scratch comes from `arena`; the returned wire itself is the single
+/// fresh allocation (it outlives the call inside the shipped [`Blob`]).
+#[allow(clippy::too_many_arguments)]
 fn delta_wire(
+    arena: &mut WordArena,
     fmt: i64,
     base_w: &[i64],
     new_w: &[i64],
@@ -151,7 +164,8 @@ fn delta_wire(
     cw: usize,
     xor: bool,
 ) -> Blob {
-    let changed = changed_chunks(base_w, new_w, total, cw);
+    let mut changed = arena.take();
+    changed_chunks_into(base_w, new_w, total, cw, &mut changed);
     let mut i = Vec::with_capacity(7 + changed.len() * (cw + 1));
     i.push(fmt);
     i.push(base_version);
@@ -160,11 +174,9 @@ fn delta_wire(
     i.push(cw as i64);
     i.push(total as i64);
     i.push(changed.len() as i64);
+    i.extend_from_slice(&changed);
     for &c in &changed {
-        i.push(c as i64);
-    }
-    for &c in &changed {
-        let lo = c * cw;
+        let lo = c as usize * cw;
         let hi = total.min(lo + cw);
         for j in lo..hi {
             let v = if xor {
@@ -175,22 +187,27 @@ fn delta_wire(
             i.push(v);
         }
     }
-    Blob { f: Vec::new(), i, wire: None }
+    arena.put(changed);
+    Blob::from_i64s(i)
 }
 
 /// Encode a mirror delta of `new` against `base` (chunks carry new words;
 /// comparison runs over `new`'s length, zero-padding or truncating the
-/// base).
-pub fn mirror_delta_wire(
+/// base), with all scratch drawn from `arena`.
+pub fn mirror_delta_wire_in(
+    arena: &mut WordArena,
     base: &Blob,
     new: &Blob,
     base_version: Version,
     chunk_words: usize,
 ) -> Blob {
-    let base_w = pack_words(base);
-    let new_w = pack_words(new);
+    let mut base_w = arena.take();
+    pack_words_into(base, &mut base_w);
+    let mut new_w = arena.take();
+    pack_words_into(new, &mut new_w);
     let total = new_w.len();
-    delta_wire(
+    let wire = delta_wire(
+        arena,
         FMT_MDELTA,
         &base_w,
         &new_w,
@@ -200,21 +217,39 @@ pub fn mirror_delta_wire(
         base_version,
         chunk_words.max(1),
         false,
-    )
+    );
+    arena.put(base_w);
+    arena.put(new_w);
+    wire
 }
 
-/// Encode an xor delta contribution (`old ^ new` chunks over the padded
-/// union length, so stale tail bits are cleared out of the stripe too).
-pub fn xor_delta_wire(
+/// [`mirror_delta_wire_in`] with throwaway scratch (tests, cold paths).
+pub fn mirror_delta_wire(
     base: &Blob,
     new: &Blob,
     base_version: Version,
     chunk_words: usize,
 ) -> Blob {
-    let base_w = pack_words(base);
-    let new_w = pack_words(new);
+    mirror_delta_wire_in(&mut WordArena::default(), base, new, base_version, chunk_words)
+}
+
+/// Encode an xor delta contribution (`old ^ new` chunks over the padded
+/// union length, so stale tail bits are cleared out of the stripe too),
+/// with all scratch drawn from `arena`.
+pub fn xor_delta_wire_in(
+    arena: &mut WordArena,
+    base: &Blob,
+    new: &Blob,
+    base_version: Version,
+    chunk_words: usize,
+) -> Blob {
+    let mut base_w = arena.take();
+    pack_words_into(base, &mut base_w);
+    let mut new_w = arena.take();
+    pack_words_into(new, &mut new_w);
     let total = base_w.len().max(new_w.len());
-    delta_wire(
+    let wire = delta_wire(
+        arena,
         FMT_XDELTA,
         &base_w,
         &new_w,
@@ -224,18 +259,31 @@ pub fn xor_delta_wire(
         base_version,
         chunk_words.max(1),
         true,
-    )
+    );
+    arena.put(base_w);
+    arena.put(new_w);
+    wire
+}
+
+/// [`xor_delta_wire_in`] with throwaway scratch (tests, cold paths).
+pub fn xor_delta_wire(
+    base: &Blob,
+    new: &Blob,
+    base_version: Version,
+    chunk_words: usize,
+) -> Blob {
+    xor_delta_wire_in(&mut WordArena::default(), base, new, base_version, chunk_words)
 }
 
 /// Encode a full xor contribution: `[FMT_XFULL, f_len, i_len, words...]`.
 pub fn xor_full_wire(new: &Blob) -> Blob {
-    let words = pack_words(new);
-    let mut i = Vec::with_capacity(3 + words.len());
+    let mut i = Vec::with_capacity(3 + new.f.len() + new.i.len());
     i.push(FMT_XFULL);
     i.push(new.f.len() as i64);
     i.push(new.i.len() as i64);
-    i.extend_from_slice(&words);
-    Blob { f: Vec::new(), i, wire: None }
+    i.extend(new.f.iter().map(|v| v.to_bits() as i64));
+    i.extend_from_slice(&new.i);
+    Blob::from_i64s(i)
 }
 
 // ---------------------------------------------------------------------
@@ -264,8 +312,17 @@ const TOK_LIT: i64 = 2;
 /// assert_eq!(rle_decompress(&toks), words);
 /// ```
 pub fn rle_compress(words: &[i64]) -> Vec<i64> {
-    let n = words.len();
     let mut out = Vec::new();
+    rle_compress_into(words, &mut out);
+    out
+}
+
+/// [`rle_compress`] into a caller-provided (arena) buffer, clearing it
+/// first — the commit path compresses every wire and must not pay the
+/// token buffer's growth reallocations per commit (DESIGN.md §11).
+pub fn rle_compress_into(words: &[i64], out: &mut Vec<i64>) {
+    out.clear();
+    let n = words.len();
     let mut lit_start = 0usize;
     let mut i = 0usize;
     while i < n {
@@ -301,13 +358,11 @@ pub fn rle_compress(words: &[i64]) -> Vec<i64> {
     }
     if out.len() > n + 2 {
         // Pathological run/literal interleaving: ship one literal block.
-        let mut lit = Vec::with_capacity(n + 2);
-        lit.push(TOK_LIT);
-        lit.push(n as i64);
-        lit.extend_from_slice(words);
-        return lit;
+        out.clear();
+        out.push(TOK_LIT);
+        out.push(n as i64);
+        out.extend_from_slice(words);
     }
-    out
 }
 
 /// Inverse of [`rle_compress`].
@@ -343,13 +398,21 @@ pub fn rle_decompress(tokens: &[i64]) -> Vec<i64> {
 /// *after* compressing (the commit paths do), so [`wire_factor`] of the
 /// shipped envelope still reports the original campaign scale factor.
 pub fn compress_wire(wire: &Blob) -> Blob {
+    compress_wire_in(&mut WordArena::default(), wire)
+}
+
+/// [`compress_wire`] with token scratch drawn from `arena`; the returned
+/// envelope is the single fresh allocation.
+pub fn compress_wire_in(arena: &mut WordArena, wire: &Blob) -> Blob {
     debug_assert!(wire.f.is_empty(), "wire payloads ride the i lane only");
-    let toks = rle_compress(&wire.i);
+    let mut toks = arena.take();
+    rle_compress_into(&wire.i, &mut toks);
     let mut i = Vec::with_capacity(2 + toks.len());
     i.push(FMT_CWIRE);
     i.push(wire.i.len() as i64);
     i.extend_from_slice(&toks);
-    Blob { f: Vec::new(), i, wire: None }
+    arena.put(toks);
+    Blob::from_i64s(i)
 }
 
 /// Unwrap a [`compress_wire`] envelope back to the inner `i`-lane wire.
@@ -358,7 +421,7 @@ pub fn decompress_wire(wire: &Blob) -> Blob {
     let raw_len = wire.i[1] as usize;
     let out = rle_decompress(&wire.i[2..]);
     debug_assert_eq!(out.len(), raw_len, "compressed wire length mismatch");
-    Blob { f: Vec::new(), i: out, wire: None }
+    Blob::from_i64s(out)
 }
 
 /// Compress a whole blob (reconstruction gathers, spare state transfers,
@@ -366,16 +429,25 @@ pub fn decompress_wire(wire: &Blob) -> Blob {
 /// `i = [FMT_CBLOB, f_len, i_len, raw_words, tokens...]`, already scaled so
 /// the charged bytes are `compressed physical x original factor`.
 pub fn compress_blob(b: &Blob) -> Blob {
+    compress_blob_in(&mut WordArena::default(), b)
+}
+
+/// [`compress_blob`] with pack/token scratch drawn from `arena`.
+pub fn compress_blob_in(arena: &mut WordArena, b: &Blob) -> Blob {
     let factor = wire_factor(b);
-    let words = pack_words(b);
-    let toks = rle_compress(&words);
+    let mut words = arena.take();
+    pack_words_into(b, &mut words);
+    let mut toks = arena.take();
+    rle_compress_into(&words, &mut toks);
     let mut i = Vec::with_capacity(4 + toks.len());
     i.push(FMT_CBLOB);
     i.push(b.f.len() as i64);
     i.push(b.i.len() as i64);
     i.push(words.len() as i64);
     i.extend_from_slice(&toks);
-    Blob { f: vec![factor], i, wire: None }.scaled(factor)
+    arena.put(words);
+    arena.put(toks);
+    Blob { f: vec![factor].into(), i: i.into(), wire: None }.scaled(factor)
 }
 
 /// Inverse of [`compress_blob`]: restores the original blob including its
@@ -497,7 +569,7 @@ mod tests {
     use super::*;
 
     fn blob(f: Vec<f64>, i: Vec<i64>) -> Blob {
-        Blob { f, i, wire: None }
+        Blob::new(f, i)
     }
 
     #[test]
@@ -532,7 +604,7 @@ mod tests {
         // Growth: prefix intact, tail appended.
         let mut grown = base.clone();
         grown.f.extend((0..16).map(|i| -(i as f64)));
-        grown.i = vec![3, 2];
+        grown.i = vec![3, 2].into();
         let wire = mirror_delta_wire(&base, &grown, 1, 8);
         let (_, out) = apply_mirror_delta(&base, &wire);
         assert_eq!(out.f, grown.f);
@@ -679,6 +751,28 @@ mod tests {
         let mut from_fold: Vec<i64> = Vec::new();
         fold_xor_delta(&mut from_fold, &wire);
         assert_eq!(from_view, from_fold);
+    }
+
+    #[test]
+    fn arena_variants_match_allocating_paths() {
+        let mut arena = WordArena::default();
+        let base = blob((0..100).map(|i| i as f64).collect(), vec![1, 2]);
+        let mut new = base.clone();
+        new.f[3] = -3.0;
+        new.f[97] = 99.5;
+        assert_eq!(
+            mirror_delta_wire_in(&mut arena, &base, &new, 7, 8).i,
+            mirror_delta_wire(&base, &new, 7, 8).i
+        );
+        assert_eq!(
+            xor_delta_wire_in(&mut arena, &base, &new, 7, 8).i,
+            xor_delta_wire(&base, &new, 7, 8).i
+        );
+        let wire = xor_delta_wire(&base, &new, 7, 8);
+        assert_eq!(compress_wire_in(&mut arena, &wire).i, compress_wire(&wire).i);
+        let cb = compress_blob_in(&mut arena, &new);
+        assert_eq!(cb.i, compress_blob(&new).i);
+        assert_eq!(cb.bytes(), compress_blob(&new).bytes());
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! GF(2^8) arithmetic for the second parity stripe of the `rs2:<g>`
-//! checkpoint scheme (DESIGN.md §9).
+//! checkpoint scheme (DESIGN.md §9), with whole-word widened kernels for
+//! the hot encode/solve paths (DESIGN.md §11).
 //!
 //! The `rs2` scheme stores two *independent* stripes per parity group: the
 //! plain XOR stripe `P = ⊕ m_k` it shares with `xor:<g>`, and a
@@ -16,6 +17,25 @@
 //!   non-zero whenever `i != j` (powers of the generator are distinct below
 //!   order 255) — so every member+member double loss is solvable, see
 //!   [`solve_two_erasures`].
+//!
+//! # Kernel layers
+//!
+//! The scalar log/exp reference ([`gmul`], [`mul_word_bytewise`]) is kept
+//! as the semantic ground truth; the hot paths multiply whole 64-bit words
+//! (or slices of them) per step instead of one byte at a time:
+//!
+//! * [`WideMul`] — branch-free SWAR: the coefficient is decomposed into
+//!   its α-powers once, then each 8-byte word is folded with 8 masked
+//!   xtime steps (no table lookups, no per-byte branches);
+//! * per-coefficient 256-entry product table ([`WideMul::table`]) — for
+//!   mid-size slices, one L1 lookup per byte with no zero-checks;
+//! * AVX2 `pshufb` split-nibble kernel (x86-64, detected at runtime) —
+//!   32 payload bytes per shuffle pair, the classic RAID-6/ISA-L layout.
+//!
+//! All layers are bit-identical to the bytewise reference (property-tested
+//! over every coefficient in `tests/gf256_kernels.rs`); the `hotpath`
+//! bench asserts the widened slice kernel beats the bytewise reference by
+//! >= 4x.
 //!
 //! All operations act byte-wise on the packed 64-bit checkpoint words
 //! ([`crate::ckptstore::delta::pack_words`]); no floating-point arithmetic
@@ -93,8 +113,14 @@ pub fn coef(slot: usize) -> u8 {
     EXP[slot]
 }
 
-/// Multiply one packed 64-bit checkpoint word byte-wise by `c`.
-pub fn mul_word(w: i64, c: u8) -> i64 {
+// ---------------------------------------------------------------------
+// Bytewise reference kernels (the pre-§11 implementation, kept as the
+// ground truth for property tests and as the bench baseline leg)
+// ---------------------------------------------------------------------
+
+/// Multiply one packed 64-bit word byte-wise by `c` through the log/exp
+/// tables — the scalar reference the widened kernels are verified against.
+pub fn mul_word_bytewise(w: i64, c: u8) -> i64 {
     if c == 1 {
         return w;
     }
@@ -106,37 +132,23 @@ pub fn mul_word(w: i64, c: u8) -> i64 {
     i64::from_le_bytes(out)
 }
 
-/// XOR `c · words` into `acc`, growing `acc` with zeros as needed — the `Q`
-/// analogue of [`crate::ckptstore::delta::xor_into`].
-pub fn mul_xor_into(acc: &mut Vec<i64>, words: &[i64], c: u8) {
+/// Bytewise reference of [`mul_xor_into`] (bench baseline leg).
+pub fn mul_xor_into_bytewise(acc: &mut Vec<i64>, words: &[i64], c: u8) {
     if acc.len() < words.len() {
         acc.resize(words.len(), 0);
     }
     for (a, w) in acc.iter_mut().zip(words.iter()) {
-        *a ^= mul_word(*w, c);
+        *a ^= mul_word_bytewise(*w, c);
     }
 }
 
-/// Divide every word of `words` byte-wise by `c` in place (single-erasure
-/// solve against the `Q` stripe alone: `m_f = (Q ⊕ Σ c_k·m_k) / c_f`).
-pub fn div_words(words: &mut [i64], c: u8) {
-    if c == 1 {
-        return;
-    }
-    let inv = gdiv(1, c);
-    for w in words.iter_mut() {
-        *w = mul_word(*w, inv);
-    }
-}
-
-/// Solve the two-erasure system for member slots `i` and `j` (`c_i = coef(i)`,
-/// `c_j = coef(j)`, `i != j`) given the survivor-folded stripes
-/// `pp = m_i ⊕ m_j` and `qq = c_i·m_i ⊕ c_j·m_j`.  Returns `(m_i, m_j)`.
-///
-/// Derivation (all arithmetic in GF(2^8), per byte):
-/// `c_j·pp ⊕ qq = (c_i ⊕ c_j)·m_i`, hence `m_i = (c_j·pp ⊕ qq)/(c_i ⊕ c_j)`
-/// and `m_j = pp ⊕ m_i`.
-pub fn solve_two_erasures(pp: &[i64], qq: &[i64], ci: u8, cj: u8) -> (Vec<i64>, Vec<i64>) {
+/// Bytewise reference of [`solve_two_erasures`] (kernel property tests).
+pub fn solve_two_erasures_bytewise(
+    pp: &[i64],
+    qq: &[i64],
+    ci: u8,
+    cj: u8,
+) -> (Vec<i64>, Vec<i64>) {
     assert_ne!(ci, cj, "two-erasure solve needs distinct member weights");
     let denom = ci ^ cj;
     let n = pp.len().max(qq.len());
@@ -155,6 +167,295 @@ pub fn solve_two_erasures(pp: &[i64], qq: &[i64], ci: u8, cj: u8) -> (Vec<i64>, 
         }
         mi.push(i64::from_le_bytes(bi));
         mj.push(i64::from_le_bytes(bj));
+    }
+    (mi, mj)
+}
+
+// ---------------------------------------------------------------------
+// Widened kernels (DESIGN.md §11)
+// ---------------------------------------------------------------------
+
+/// SWAR doubling: multiply all 8 packed bytes of `w` by α at once.
+/// Per byte: `(b << 1) ^ (0x1d if the top bit was set)`; the mask-and-
+/// multiply spreads the conditional reduction across lanes without
+/// branches or cross-byte carries.
+#[inline]
+fn xtimes_wide(w: u64) -> u64 {
+    let hi = w & 0x8080_8080_8080_8080;
+    ((w ^ hi) << 1) ^ ((hi >> 7) * 0x1d)
+}
+
+/// A GF(2^8) coefficient prepared for whole-word multiplication: the
+/// constant is decomposed into per-bit lane masks once, then every word
+/// costs 8 branch-free masked xtime steps — no table lookups, no
+/// per-byte zero checks (DESIGN.md §11).
+#[derive(Debug, Clone, Copy)]
+pub struct WideMul {
+    masks: [u64; 8],
+    c: u8,
+}
+
+impl WideMul {
+    pub fn new(c: u8) -> Self {
+        let mut masks = [0u64; 8];
+        for (k, m) in masks.iter_mut().enumerate() {
+            if c >> k & 1 != 0 {
+                *m = u64::MAX;
+            }
+        }
+        WideMul { masks, c }
+    }
+
+    /// The coefficient this kernel multiplies by.
+    pub fn coef(&self) -> u8 {
+        self.c
+    }
+
+    /// Multiply all 8 bytes of `w` by the coefficient.
+    #[inline]
+    pub fn mul(&self, w: i64) -> i64 {
+        let mut t = w as u64;
+        let mut acc = 0u64;
+        for m in self.masks {
+            acc ^= t & m;
+            t = xtimes_wide(t);
+        }
+        acc as i64
+    }
+
+    /// Full 256-entry product table for this coefficient (one L1 lookup
+    /// per payload byte on the mid-size slice path; also the source of
+    /// the AVX2 kernel's split-nibble tables).
+    pub fn table(&self) -> [u8; 256] {
+        let mut tab = [0u8; 256];
+        for (x, e) in tab.iter_mut().enumerate() {
+            *e = (self.mul(x as i64) & 0xff) as u8;
+        }
+        tab
+    }
+}
+
+/// Multiply one packed 64-bit checkpoint word byte-wise by `c`.
+/// Thin wrapper over [`WideMul`]; prefer hoisting a `WideMul` out of
+/// loops when the coefficient is fixed.
+pub fn mul_word(w: i64, c: u8) -> i64 {
+    WideMul::new(c).mul(w)
+}
+
+#[inline]
+fn mul_word_table(tab: &[u8; 256], w: i64) -> i64 {
+    let b = w.to_le_bytes();
+    i64::from_le_bytes([
+        tab[b[0] as usize],
+        tab[b[1] as usize],
+        tab[b[2] as usize],
+        tab[b[3] as usize],
+        tab[b[4] as usize],
+        tab[b[5] as usize],
+        tab[b[6] as usize],
+        tab[b[7] as usize],
+    ])
+}
+
+/// Slices at or above this many words take the table (and, where
+/// available, AVX2) path; shorter ones stay on the pure-ALU SWAR kernel
+/// so the table build cost is never paid for tiny payloads.
+const TABLE_CUTOVER_WORDS: usize = 64;
+
+/// Whether the SIMD (AVX2 `pshufb`) slice path is active on this machine.
+/// The `hotpath` bench keys its speedup gate on this: the >= 4x
+/// widened-vs-bytewise expectation holds for the shuffle kernel, while
+/// scalar-table-only hosts (non-x86-64, or x86-64 without AVX2) are held
+/// to a relaxed floor.
+pub fn wide_simd_active() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        avx2::available()
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! Split-nibble `pshufb` kernels: the product byte of `b` is
+    //! `lo_tab[b & 0xf] ^ hi_tab[b >> 4]`, and `vpshufb` evaluates 32 such
+    //! lookups per instruction.  Indices are masked to 0..15, so the
+    //! shuffle's sign-bit zeroing rule is never triggered.
+
+    #[cfg(target_arch = "x86_64")]
+    use std::arch::x86_64::*;
+
+    /// Whether the AVX2 path is usable on this machine (cached by std).
+    pub fn available() -> bool {
+        is_x86_feature_detected!("avx2")
+    }
+
+    /// `acc[k] ^= c * words[k]` over the common prefix, 4 words per step.
+    /// Returns the number of words processed (the scalar tail follows).
+    ///
+    /// # Safety
+    /// Caller must have verified [`available`].
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mul_xor(acc: &mut [i64], words: &[i64], tab: &[u8; 256]) -> usize {
+        let n = acc.len().min(words.len());
+        let (lo_tab, hi_tab) = nibble_tables(tab);
+        let ltab = _mm256_broadcastsi128_si256(_mm_loadu_si128(lo_tab.as_ptr() as *const __m128i));
+        let htab = _mm256_broadcastsi128_si256(_mm_loadu_si128(hi_tab.as_ptr() as *const __m128i));
+        let mask = _mm256_set1_epi8(0x0f);
+        let mut k = 0usize;
+        while k + 4 <= n {
+            let src = _mm256_loadu_si256(words.as_ptr().add(k) as *const __m256i);
+            let lo = _mm256_and_si256(src, mask);
+            let hi = _mm256_and_si256(_mm256_srli_epi64::<4>(src), mask);
+            let prod = _mm256_xor_si256(
+                _mm256_shuffle_epi8(ltab, lo),
+                _mm256_shuffle_epi8(htab, hi),
+            );
+            let dst = acc.as_mut_ptr().add(k) as *mut __m256i;
+            _mm256_storeu_si256(dst, _mm256_xor_si256(_mm256_loadu_si256(dst), prod));
+            k += 4;
+        }
+        k
+    }
+
+    /// `words[k] = c * words[k]` in place, 4 words per step.  Returns the
+    /// number of words processed.
+    ///
+    /// # Safety
+    /// Caller must have verified [`available`].
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mul_in_place(words: &mut [i64], tab: &[u8; 256]) -> usize {
+        let n = words.len();
+        let (lo_tab, hi_tab) = nibble_tables(tab);
+        let ltab = _mm256_broadcastsi128_si256(_mm_loadu_si128(lo_tab.as_ptr() as *const __m128i));
+        let htab = _mm256_broadcastsi128_si256(_mm_loadu_si128(hi_tab.as_ptr() as *const __m128i));
+        let mask = _mm256_set1_epi8(0x0f);
+        let mut k = 0usize;
+        while k + 4 <= n {
+            let p = words.as_mut_ptr().add(k) as *mut __m256i;
+            let src = _mm256_loadu_si256(p);
+            let lo = _mm256_and_si256(src, mask);
+            let hi = _mm256_and_si256(_mm256_srli_epi64::<4>(src), mask);
+            let prod = _mm256_xor_si256(
+                _mm256_shuffle_epi8(ltab, lo),
+                _mm256_shuffle_epi8(htab, hi),
+            );
+            _mm256_storeu_si256(p, prod);
+            k += 4;
+        }
+        k
+    }
+
+    /// Low-/high-nibble product tables from the full byte table: products
+    /// are linear over XOR, so `tab[b] = tab[b & 0xf] ^ tab[(b >> 4) << 4]`.
+    fn nibble_tables(tab: &[u8; 256]) -> ([u8; 16], [u8; 16]) {
+        let mut lo = [0u8; 16];
+        let mut hi = [0u8; 16];
+        for (k, (l, h)) in lo.iter_mut().zip(hi.iter_mut()).enumerate() {
+            *l = tab[k];
+            *h = tab[k << 4];
+        }
+        (lo, hi)
+    }
+}
+
+/// Core widened slice kernel: `acc[k] ^= c * words[k]` over the common
+/// prefix (callers guarantee `acc` is at least as long where it matters).
+fn mul_xor_slices(acc: &mut [i64], words: &[i64], wm: &WideMul) {
+    let n = acc.len().min(words.len());
+    if n >= TABLE_CUTOVER_WORDS {
+        let tab = wm.table();
+        let mut done = 0usize;
+        #[cfg(target_arch = "x86_64")]
+        if avx2::available() {
+            // SAFETY: availability checked above.
+            done = unsafe { avx2::mul_xor(&mut acc[..n], &words[..n], &tab) };
+        }
+        for (a, w) in acc[done..n].iter_mut().zip(&words[done..n]) {
+            *a ^= mul_word_table(&tab, *w);
+        }
+    } else {
+        for (a, w) in acc[..n].iter_mut().zip(&words[..n]) {
+            *a ^= wm.mul(*w);
+        }
+    }
+}
+
+/// `words[k] = c * words[k]` in place across the whole slice.
+fn mul_slice_in_place(words: &mut [i64], wm: &WideMul) {
+    let n = words.len();
+    if n >= TABLE_CUTOVER_WORDS {
+        let tab = wm.table();
+        let mut done = 0usize;
+        #[cfg(target_arch = "x86_64")]
+        if avx2::available() {
+            // SAFETY: availability checked above.
+            done = unsafe { avx2::mul_in_place(words, &tab) };
+        }
+        for w in words[done..].iter_mut() {
+            *w = mul_word_table(&tab, *w);
+        }
+    } else {
+        for w in words.iter_mut() {
+            *w = wm.mul(*w);
+        }
+    }
+}
+
+/// XOR `c · words` into `acc`, growing `acc` with zeros as needed — the `Q`
+/// analogue of [`crate::ckptstore::delta::xor_into`], on the widened
+/// kernels (bit-identical to [`mul_xor_into_bytewise`]).
+pub fn mul_xor_into(acc: &mut Vec<i64>, words: &[i64], c: u8) {
+    if acc.len() < words.len() {
+        acc.resize(words.len(), 0);
+    }
+    match c {
+        0 => {}
+        1 => {
+            for (a, w) in acc.iter_mut().zip(words.iter()) {
+                *a ^= *w;
+            }
+        }
+        _ => mul_xor_slices(acc, words, &WideMul::new(c)),
+    }
+}
+
+/// Divide every word of `words` byte-wise by `c` in place (single-erasure
+/// solve against the `Q` stripe alone: `m_f = (Q ⊕ Σ c_k·m_k) / c_f`).
+pub fn div_words(words: &mut [i64], c: u8) {
+    if c == 1 {
+        return;
+    }
+    mul_slice_in_place(words, &WideMul::new(gdiv(1, c)));
+}
+
+/// Solve the two-erasure system for member slots `i` and `j` (`c_i = coef(i)`,
+/// `c_j = coef(j)`, `i != j`) given the survivor-folded stripes
+/// `pp = m_i ⊕ m_j` and `qq = c_i·m_i ⊕ c_j·m_j`.  Returns `(m_i, m_j)`.
+///
+/// Derivation (all arithmetic in GF(2^8), per byte):
+/// `c_j·pp ⊕ qq = (c_i ⊕ c_j)·m_i`, hence `m_i = (c_j·pp ⊕ qq)/(c_i ⊕ c_j)`
+/// and `m_j = pp ⊕ m_i`.  Runs entirely on the widened slice kernels:
+/// `mi = inv(c_i ⊕ c_j) · (c_j·pp ⊕ qq)`, then `mj = pp ⊕ mi`.
+pub fn solve_two_erasures(pp: &[i64], qq: &[i64], ci: u8, cj: u8) -> (Vec<i64>, Vec<i64>) {
+    assert_ne!(ci, cj, "two-erasure solve needs distinct member weights");
+    let n = pp.len().max(qq.len());
+    // mi <- cj * pp  (zero-padded to the union length).
+    let mut mi = vec![0i64; n];
+    mul_xor_slices(&mut mi, pp, &WideMul::new(cj));
+    // mi <- cj*pp ^ qq.
+    for (a, q) in mi.iter_mut().zip(qq.iter()) {
+        *a ^= *q;
+    }
+    // mi <- (cj*pp ^ qq) / (ci ^ cj).
+    mul_slice_in_place(&mut mi, &WideMul::new(gdiv(1, ci ^ cj)));
+    // mj <- pp ^ mi.
+    let mut mj = mi.clone();
+    for (b, p) in mj.iter_mut().zip(pp.iter()) {
+        *b ^= *p;
     }
     (mi, mj)
 }
@@ -205,6 +506,22 @@ mod tests {
     }
 
     #[test]
+    fn wide_mul_matches_bytewise_for_every_coefficient() {
+        let mut rng = Lcg(42);
+        let words: Vec<i64> = (0..32).map(|_| rng.next() as i64).collect();
+        for c in 0..=255u8 {
+            let wm = WideMul::new(c);
+            let tab = wm.table();
+            for &w in &words {
+                let want = mul_word_bytewise(w, c);
+                assert_eq!(wm.mul(w), want, "SWAR c={c} w={w:#x}");
+                assert_eq!(mul_word_table(&tab, w), want, "table c={c} w={w:#x}");
+                assert_eq!(mul_word(w, c), want, "mul_word c={c}");
+            }
+        }
+    }
+
+    #[test]
     fn mul_word_is_bytewise_linear() {
         let mut rng = Lcg(99);
         for _ in 0..50 {
@@ -214,6 +531,30 @@ mod tests {
             assert_eq!(mul_word(w ^ v, c), mul_word(w, c) ^ mul_word(v, c));
             assert_eq!(mul_word(w, 1), w);
             assert_eq!(mul_word(w, 0), 0);
+        }
+    }
+
+    #[test]
+    fn slice_kernels_match_bytewise_across_cutover() {
+        // Lengths straddle the SWAR/table/AVX2 cutover and vector tails.
+        let mut rng = Lcg(11);
+        for len in [0usize, 1, 3, 5, 63, 64, 65, 67, 130, 257] {
+            let words: Vec<i64> = (0..len).map(|_| rng.next() as i64).collect();
+            for c in [0u8, 1, 2, 0x1d, 0x53, 0xfe, 0xff] {
+                let mut wide: Vec<i64> = (0..len).map(|_| rng.next() as i64).collect();
+                let mut byte = wide.clone();
+                mul_xor_into(&mut wide, &words, c);
+                mul_xor_into_bytewise(&mut byte, &words, c);
+                assert_eq!(wide, byte, "len={len} c={c}");
+                // In-place multiply agrees too (div by the inverse).
+                if c > 1 {
+                    let mut a = words.clone();
+                    div_words(&mut a, gdiv(1, c));
+                    let b: Vec<i64> =
+                        words.iter().map(|&w| mul_word_bytewise(w, c)).collect();
+                    assert_eq!(a, b, "in-place len={len} c={c}");
+                }
+            }
         }
     }
 
@@ -240,6 +581,10 @@ mod tests {
         assert_eq!(&m3[..members[3].len()], &members[3][..]);
         // Padding beyond the true lengths is zero.
         assert!(m1[members[1].len()..].iter().all(|&w| w == 0));
+        // And the widened solve agrees with the bytewise reference.
+        let (b1, b3) = solve_two_erasures_bytewise(&pp, &qq, coef(1), coef(3));
+        assert_eq!(m1, b1);
+        assert_eq!(m3, b3);
     }
 
     #[test]

@@ -335,18 +335,25 @@ fn exchange_mirror(
             let (bv, base) = store
                 .get_local_at_most(*id, version - 1)
                 .unwrap_or_else(|| panic!("delta base for obj {id} missing"));
-            let wire = delta::mirror_delta_wire(base, blob, bv, cfg.chunk_words());
+            let base_words = base.f.len() + base.i.len();
+            let wire = delta::mirror_delta_wire_in(
+                &mut ctx.arena,
+                base,
+                blob,
+                bv,
+                cfg.chunk_words(),
+            );
             charge_encode(
                 ctx,
                 cfg,
-                blob.f.len() + blob.i.len() + base.f.len() + base.i.len(),
+                blob.f.len() + blob.i.len() + base_words,
                 encode_secs,
             );
             let factor = delta::wire_factor(blob);
             raw_per_obj.push(((8 * wire.i.len()) as f64 * factor) as usize);
             let wire = if cfg.compress {
                 charge_encode(ctx, cfg, wire.i.len(), encode_secs);
-                delta::compress_wire(&wire)
+                delta::compress_wire_in(&mut ctx.arena, &wire)
             } else {
                 wire
             };
@@ -359,8 +366,11 @@ fn exchange_mirror(
                 raw_per_obj.push(blob.bytes());
                 if cfg.compress {
                     charge_encode(ctx, cfg, blob.f.len() + blob.i.len(), encode_secs);
-                    delta::compress_blob(blob)
+                    delta::compress_blob_in(&mut ctx.arena, blob)
                 } else {
+                    // Shared-buffer clone: the store, the in-flight buddy
+                    // copies and the caller's object all reference one
+                    // payload (DESIGN.md §11).
                     blob.clone()
                 }
             })
@@ -430,7 +440,7 @@ fn parity_contribution(
             .get_local_at_most(id, version - 1)
             .unwrap_or_else(|| panic!("delta base for obj {id} missing"));
         charge_encode(ctx, cfg, words + base.f.len() + base.i.len(), encode_secs);
-        delta::xor_delta_wire(base, blob, bv, cfg.chunk_words())
+        delta::xor_delta_wire_in(&mut ctx.arena, base, blob, bv, cfg.chunk_words())
     } else {
         charge_encode(ctx, cfg, words, encode_secs);
         delta::xor_full_wire(blob)
@@ -466,7 +476,7 @@ fn exchange_xor(
         *raw += ((8 * wire.i.len()) as f64 * factor) as usize;
         let wire = if cfg.compress {
             charge_encode(ctx, cfg, wire.i.len(), encode_secs);
-            delta::compress_wire(&wire)
+            delta::compress_wire_in(&mut ctx.arena, &wire)
         } else {
             wire
         };
@@ -562,7 +572,7 @@ fn exchange_rs2(
         *raw += ((8 * wire.i.len()) as f64 * factor) as usize;
         let wire = if cfg.compress {
             charge_encode(ctx, cfg, wire.i.len(), encode_secs);
-            delta::compress_wire(&wire)
+            delta::compress_wire_in(&mut ctx.arena, &wire)
         } else {
             wire
         };
@@ -601,8 +611,10 @@ fn exchange_rs2(
                         words: Vec::new(),
                     }
                 };
-                // Combined Q update: weighted fold of the same payloads.
-                let mut q_words: Vec<i64> = Vec::new();
+                // Combined Q update: weighted fold of the same payloads,
+                // accumulated in an arena scratch through the widened
+                // GF(2^8) kernels (one `WideMul` per member slot).
+                let mut q_words = ctx.arena.take();
                 let mut q_chunks: std::collections::BTreeSet<usize> = Default::default();
                 let mut q_total = 0usize;
                 let mut q_cw = cfg.chunk_words();
@@ -624,11 +636,12 @@ fn exchange_rs2(
                         if q_words.len() < view.total {
                             q_words.resize(view.total, 0);
                         }
+                        let wm = gf256::WideMul::new(c);
                         for (ci, cwords) in &view.chunks {
                             q_chunks.insert(*ci);
                             let lo = ci * view.chunk_words;
                             for (off, w) in cwords.iter().enumerate() {
-                                q_words[lo + off] ^= gf256::mul_word(*w, c);
+                                q_words[lo + off] ^= wm.mul(*w);
                             }
                         }
                     } else {
@@ -646,12 +659,13 @@ fn exchange_rs2(
                 } else {
                     qfull_wire(version, &stripe, &q_words)
                 };
+                ctx.arena.put(q_words);
                 let q_factor =
                     stripe.wire_factors.iter().copied().fold(1.0f64, f64::max);
                 *raw += ((8 * q_wire.i.len()) as f64 * q_factor) as usize;
                 let q_wire = if cfg.compress {
                     charge_encode(ctx, cfg, q_wire.i.len(), encode_secs);
-                    delta::compress_wire(&q_wire)
+                    delta::compress_wire_in(&mut ctx.arena, &q_wire)
                 } else {
                     q_wire
                 };
@@ -708,7 +722,7 @@ fn encode_stripe(tag: i64, version: Version, stripe: &ParityStripe, words: &[i64
     i.extend(stripe.wire_factors.iter().map(|&v| v.to_bits() as i64));
     i.push(words.len() as i64);
     i.extend_from_slice(words);
-    Blob { f: Vec::new(), i, wire: None }
+    Blob::from_i64s(i)
 }
 
 /// Inverse of [`encode_stripe`]; `expect_tag` guards against window mix-ups.
@@ -772,7 +786,7 @@ fn qdelta_wire(
             i.push(if j < q_words.len() { q_words[j] } else { 0 });
         }
     }
-    Blob { f: Vec::new(), i, wire: None }
+    Blob::from_i64s(i)
 }
 
 /// Apply a [`delta::FMT_QDELTA`] forward to the Q holder's base stripe,
@@ -1016,7 +1030,11 @@ fn reconstruct_xor(
                     .unwrap_or_else(|| panic!("local checkpoint for obj {id} missing"))
                     .1
                     .clone();
-                let blob = if cfg.compress { delta::compress_blob(&blob) } else { blob };
+                let blob = if cfg.compress {
+                    delta::compress_blob_in(&mut ctx.arena, &blob)
+                } else {
+                    blob
+                };
                 comm.send(ctx, dst, recon_tag(id, fr), blob)?;
             }
         }
@@ -1201,7 +1219,11 @@ fn reconstruct_rs2(
                         .unwrap_or_else(|| panic!("local checkpoint for obj {id} missing"))
                         .1
                         .clone();
-                    let blob = if cfg.compress { delta::compress_blob(&blob) } else { blob };
+                    let blob = if cfg.compress {
+                        delta::compress_blob_in(&mut ctx.arena, &blob)
+                    } else {
+                        blob
+                    };
                     comm.send(ctx, dst, recon_member_tag(id, grp), blob)?;
                 }
             }
@@ -1214,12 +1236,17 @@ fn reconstruct_rs2(
                     .rank_of_world(old_members[leader])
                     .expect("leader must be in the repaired comm");
                 for &id in objs {
-                    let (sv, stripe) = store
-                        .get_parity_at_most(anchor, id, v)
-                        .unwrap_or_else(|| panic!("stripe for obj {id} missing on holder"));
-                    let wire = stripe_wire(sv, stripe);
-                    let wire =
-                        if cfg.compress { delta::compress_wire(&wire) } else { wire };
+                    let wire = {
+                        let (sv, stripe) = store
+                            .get_parity_at_most(anchor, id, v)
+                            .unwrap_or_else(|| panic!("stripe for obj {id} missing on holder"));
+                        stripe_wire(sv, stripe)
+                    };
+                    let wire = if cfg.compress {
+                        delta::compress_wire_in(&mut ctx.arena, &wire)
+                    } else {
+                        wire
+                    };
                     comm.send(ctx, dst, recon_stripe_tag(id, grp, which), wire)?;
                 }
             }

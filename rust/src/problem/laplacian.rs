@@ -140,14 +140,14 @@ impl MatrixRows {
         i.push(self.start as i64);
         i.push(self.rows as i64);
         i.extend_from_slice(&self.gcols);
-        Blob { f: self.vals.clone(), i, wire: None }
+        Blob::new(self.vals.clone(), i)
     }
 
     pub fn from_blob(b: &Blob) -> Self {
         let start = b.i[0] as usize;
         let rows = b.i[1] as usize;
         assert_eq!(b.f.len(), rows * K, "corrupt MatrixRows blob");
-        MatrixRows { start, rows, vals: b.f.clone(), gcols: b.i[2..].to_vec() }
+        MatrixRows { start, rows, vals: b.f.to_vec(), gcols: b.i[2..].to_vec() }
     }
 
     /// Concatenate adjacent blocks (must be contiguous, ascending).

@@ -54,9 +54,11 @@ fn slice_for(
             for j in 0..nvec {
                 f.extend_from_slice(&blob.f[j * or + a..j * or + b]);
             }
-            Blob { f, i: blob.i.clone(), wire: None }
+            Blob { f: f.into(), i: blob.i.clone(), wire: None }
         }
-        _ => Blob::from_f64s(blob.f[a..b].to_vec()),
+        // Contiguous single-vector objects ship as zero-copy views of the
+        // stored checkpoint (DESIGN.md §11) — no `to_vec` split.
+        _ => Blob { f: blob.f.slice(a..b), i: Default::default(), wire: None },
     }
 }
 
@@ -218,7 +220,7 @@ fn recover_inner(
             .map(|(_, s, b)| (*s, b))
             .collect();
         parts.sort_by_key(|(s, _)| *s);
-        let nv = parts.first().map(|(_, b)| b.i.clone()).unwrap_or(vec![0, 0]);
+        let nv = parts.first().map(|(_, b)| b.i.clone()).unwrap_or_else(|| vec![0, 0].into());
         let nvec = (nv[0] + nv[1]) as usize;
         let rnew = my_range.len();
         let mut f = vec![0.0; nvec * rnew];
@@ -233,7 +235,7 @@ fn recover_inner(
             col += seg_len;
         }
         debug_assert!(nvec == 0 || col == rnew, "basis coverage mismatch");
-        state.restore_basis(&Blob { f, i: nv, wire: None });
+        state.restore_basis(&Blob { f: f.into(), i: nv, wire: None });
     }
 
     // Redistribution/localization CPU cost: touch every local slot once.

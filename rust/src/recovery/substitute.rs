@@ -114,7 +114,7 @@ fn survivor_state_recovery(
         .clone();
     state.restore_iter(&iter_blob);
     let x_blob = store.get_local_at_most(obj::X, v).expect("X checkpoint missing").1.clone();
-    state.x = x_blob.f;
+    state.x = x_blob.f.to_vec();
     let basis_blob =
         store.get_local_at_most(obj::BASIS, v).expect("BASIS checkpoint missing").1.clone();
     state.restore_basis(&basis_blob);
@@ -253,8 +253,8 @@ fn recover_spare_inner(
         part,
         mat,
         blk,
-        x: x_blob.f.clone(),
-        b: rhs_blob.f.clone(),
+        x: x_blob.f.to_vec(),
+        b: rhs_blob.f.to_vec(),
         v_out: DenseBasis::zeros(m_outer + 1, rows),
         z_out: DenseBasis::zeros(m_outer, rows),
         cycle: None,

@@ -7,6 +7,8 @@
 //! slot in the collective tag window so that back-to-back collectives with
 //! equal shapes cannot mix messages.
 
+use std::collections::HashMap;
+
 use crate::simmpi::msg::{tags, Blob, Payload, Tag};
 use crate::simmpi::world::WorldRank;
 use crate::simmpi::Ctx;
@@ -18,18 +20,28 @@ pub struct Comm {
     /// Epoch: unique per communicator generation; bumped by shrink/stitch.
     pub epoch: u64,
     /// Comm rank -> world rank.
+    ///
+    /// **Invariant:** read-only after construction.  Membership changes go
+    /// through [`Comm::new`] (shrink/stitch build fresh communicators), so
+    /// the private `w2c` reverse map built there stays consistent — do not
+    /// mutate this vec in place.
     pub members: Vec<WorldRank>,
     /// This rank's comm rank.
     pub rank: usize,
     /// Rolling collective sequence (kept in lockstep by identical program
     /// order across members).
     coll_seq: u32,
+    /// World rank -> comm rank, precomputed at construction so the
+    /// recv/translate paths ([`Comm::rank_of_world`]) are O(1) instead of
+    /// a linear membership scan per message.
+    w2c: HashMap<WorldRank, usize>,
 }
 
 impl Comm {
     pub fn new(epoch: u64, members: Vec<WorldRank>, rank: usize) -> Self {
         debug_assert!(rank < members.len());
-        Comm { epoch, members, rank, coll_seq: 0 }
+        let w2c = members.iter().enumerate().map(|(cr, &wr)| (wr, cr)).collect();
+        Comm { epoch, members, rank, coll_seq: 0, w2c }
     }
 
     /// World communicator over ranks `0..n`.
@@ -46,7 +58,7 @@ impl Comm {
     }
 
     pub fn rank_of_world(&self, wr: WorldRank) -> Option<usize> {
-        self.members.iter().position(|&m| m == wr)
+        self.w2c.get(&wr).copied()
     }
 
     // ------------------------------------------------------------------
@@ -161,7 +173,12 @@ impl Comm {
             me - rem
         };
 
-        // Recursive doubling among the pow2 active ranks.
+        // Recursive doubling among the pow2 active ranks.  The per-round
+        // send ships a *shared reference* to the accumulator (Blob clones
+        // are O(1) refcount bumps over `SharedVec` storage); `combine`
+        // then updates the accumulator copy-on-write, so at most one
+        // materialization can happen per round — and none once the in-
+        // flight reference has been consumed by the partner.
         let unmap = |id: usize| if id < rem { 2 * id + 1 } else { id + rem };
         let mut round = 0u32;
         let mut dist = 1usize;
@@ -174,7 +191,9 @@ impl Comm {
             round += 1;
         }
 
-        // Post-phase: odds hand the result back to their dropped partner.
+        // Post-phase: odds hand the result back to their dropped partner —
+        // previously a second full deep copy of the accumulator per fold;
+        // now a shared reference (the partner only reads it).
         if me < 2 * rem {
             self.send(ctx, me - 1, base + 15, acc.clone())?;
         }
@@ -287,19 +306,23 @@ impl Comm {
 
 /// Pack variable-size blobs into one blob with a length prefix table.
 fn pack_blobs(blobs: &[Blob]) -> Blob {
-    let mut out = Blob::empty();
-    out.i.push(blobs.len() as i64);
+    let mut fl: Vec<f64> = Vec::new();
+    let mut il: Vec<i64> = Vec::with_capacity(1 + 2 * blobs.len());
+    il.push(blobs.len() as i64);
     for b in blobs {
-        out.i.push(b.f.len() as i64);
-        out.i.push(b.i.len() as i64);
+        il.push(b.f.len() as i64);
+        il.push(b.i.len() as i64);
     }
     for b in blobs {
-        out.f.extend_from_slice(&b.f);
-        out.i.extend_from_slice(&b.i);
+        fl.extend_from_slice(&b.f);
+        il.extend_from_slice(&b.i);
     }
-    out
+    Blob::new(fl, il)
 }
 
+/// Split a packed concatenation back into per-rank blobs as *zero-copy
+/// views* of the shared packed buffer (previously a `to_vec` per lane per
+/// rank — n deep copies of the whole gather on every rank).
 fn unpack_blobs(packed: &Blob) -> Vec<Blob> {
     let n = packed.i[0] as usize;
     let mut blobs = Vec::with_capacity(n);
@@ -309,8 +332,8 @@ fn unpack_blobs(packed: &Blob) -> Vec<Blob> {
         let nf = packed.i[1 + 2 * k] as usize;
         let ni = packed.i[2 + 2 * k] as usize;
         blobs.push(Blob {
-            f: packed.f[fo..fo + nf].to_vec(),
-            i: packed.i[io..io + ni].to_vec(),
+            f: packed.f.slice(fo..fo + nf),
+            i: packed.i.slice(io..io + ni),
             wire: None,
         });
         fo += nf;
@@ -326,12 +349,23 @@ mod tests {
     #[test]
     fn pack_unpack_roundtrip() {
         let blobs = vec![
-            Blob { f: vec![1.0, 2.0], i: vec![7], wire: None },
+            Blob::new(vec![1.0, 2.0], vec![7]),
             Blob::empty(),
-            Blob { f: vec![], i: vec![1, 2, 3], wire: None },
+            Blob::new(vec![], vec![1, 2, 3]),
         ];
         let packed = pack_blobs(&blobs);
         assert_eq!(unpack_blobs(&packed), blobs);
+    }
+
+    #[test]
+    fn world_rank_translation_is_total() {
+        let c = Comm::new(5, vec![9, 4, 7], 1);
+        assert_eq!(c.rank_of_world(9), Some(0));
+        assert_eq!(c.rank_of_world(4), Some(1));
+        assert_eq!(c.rank_of_world(7), Some(2));
+        assert_eq!(c.rank_of_world(8), None);
+        // The map survives cloning (recovery hands comms around by clone).
+        assert_eq!(c.clone().rank_of_world(7), Some(2));
     }
 
     // Multi-rank collective behaviour is exercised in tests/simmpi_collectives.rs

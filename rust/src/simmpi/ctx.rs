@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use crate::failure::ProtoPhase;
 use crate::metrics::{CkptRecord, DecisionRecord, Phase, PhaseTimers};
-use crate::simmpi::msg::{Ctl, Msg, Payload, Tag};
+use crate::simmpi::msg::{Ctl, Msg, Payload, Tag, WordArena};
 use crate::simmpi::world::{World, WorldRank};
 use crate::simmpi::{MpiError, MpiResult};
 
@@ -40,6 +40,10 @@ pub struct Ctx {
     /// poisoned the round (epoch-fence retries; see
     /// [`crate::recovery::handle_failure_fenced`]).
     pub recovery_retries: u64,
+    /// Reusable scratch buffers for the checkpoint codecs (DESIGN.md §11):
+    /// `pack_words` / RLE / changed-chunk scans on this rank's commit path
+    /// borrow from here instead of allocating per commit.
+    pub arena: WordArena,
     /// Entries into each protocol phase, consulted by the phase-triggered
     /// failure injector ([`Ctx::phase_point`]).
     phase_hits: BTreeMap<ProtoPhase, u32>,
@@ -72,6 +76,7 @@ impl Ctx {
             decisions: Vec::new(),
             ckpt_log: Vec::new(),
             recovery_retries: 0,
+            arena: WordArena::default(),
             phase_hits: BTreeMap::new(),
             rx,
             pending: VecDeque::new(),

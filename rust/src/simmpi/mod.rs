@@ -14,7 +14,7 @@ pub mod world;
 
 pub use comm::Comm;
 pub use ctx::Ctx;
-pub use msg::{tags, Blob, Ctl, Msg, Payload, Tag};
+pub use msg::{shared, tags, Blob, Ctl, Msg, Payload, SharedVec, Tag, WordArena};
 pub use world::{World, WorldRank};
 
 /// ULFM-visible error classes.

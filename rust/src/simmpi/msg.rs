@@ -1,4 +1,17 @@
-//! Message types for the simulated MPI runtime.
+//! Message types for the simulated MPI runtime, and the shared-buffer
+//! payload storage behind them (DESIGN.md §11).
+//!
+//! Payload lanes are [`SharedVec`]s: cheaply-clonable `Arc`-backed buffers
+//! with copy-on-write mutation and zero-copy sub-slicing.  Cloning a
+//! [`Blob`] to fan it out (broadcast trees, buddy shipping, parity
+//! contributions) bumps a reference count instead of deep-copying the
+//! payload; a deep copy happens only if someone later *mutates* a still-
+//! shared buffer, which the commit/recovery paths never do.  The
+//! [`shared`] module counts both kinds of copies so the `hotpath` bench
+//! can assert the data plane stays copy-free.
+
+use std::ops::{Deref, DerefMut, Range};
+use std::sync::Arc;
 
 use crate::simmpi::WorldRank;
 
@@ -49,13 +62,376 @@ pub mod tags {
     pub const RECON_STRIPE_BASE: Tag = RECON_BASE + (1 << 18);
 }
 
+/// Copy accounting for the shared-buffer layer, plus the forced-deep-clone
+/// switch the benches use to reproduce the pre-refactor (clone = memcpy)
+/// wire as an A/B baseline.  Forcing deep clones changes *nothing* about
+/// results — copy-on-write is semantically transparent — only about bytes
+/// moved, which is exactly what makes it a fair baseline.
+pub mod shared {
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+
+    static FORCE_DEEP: AtomicBool = AtomicBool::new(false);
+    static SHARED_CLONES: AtomicU64 = AtomicU64::new(0);
+    static DEEP_COPIES: AtomicU64 = AtomicU64::new(0);
+    static DEEP_BYTES: AtomicU64 = AtomicU64::new(0);
+
+    /// When on, [`super::SharedVec`] clones and slices deep-copy their
+    /// payload (the pre-refactor behaviour).  Results are bit-identical
+    /// either way; only the copy counters and wall time differ.
+    pub fn force_deep_clones(on: bool) {
+        FORCE_DEEP.store(on, Relaxed);
+    }
+
+    pub(super) fn force_deep() -> bool {
+        FORCE_DEEP.load(Relaxed)
+    }
+
+    pub(super) fn note_shared_clone() {
+        SHARED_CLONES.fetch_add(1, Relaxed);
+    }
+
+    pub(super) fn note_deep_copy(bytes: usize) {
+        DEEP_COPIES.fetch_add(1, Relaxed);
+        DEEP_BYTES.fetch_add(bytes as u64, Relaxed);
+    }
+
+    /// Process-wide copy counters since the last [`reset_stats`].
+    #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+    pub struct CopyStats {
+        /// O(1) reference-count clones (shared, no bytes moved).
+        pub shared_clones: u64,
+        /// Deep copies: forced clones plus copy-on-write materializations.
+        pub deep_copies: u64,
+        /// Total payload bytes moved by those deep copies.
+        pub deep_bytes: u64,
+    }
+
+    pub fn stats() -> CopyStats {
+        CopyStats {
+            shared_clones: SHARED_CLONES.load(Relaxed),
+            deep_copies: DEEP_COPIES.load(Relaxed),
+            deep_bytes: DEEP_BYTES.load(Relaxed),
+        }
+    }
+
+    pub fn reset_stats() {
+        SHARED_CLONES.store(0, Relaxed);
+        DEEP_COPIES.store(0, Relaxed);
+        DEEP_BYTES.store(0, Relaxed);
+    }
+}
+
+/// A cheaply-clonable, sliceable, copy-on-write vector.
+///
+/// *Reads* go through `Deref<Target = [T]>`, so indexing, iteration and
+/// sub-slicing work exactly as on a `Vec`.  *Clones* and [`SharedVec::slice`]
+/// views share the underlying buffer in O(1).  *Mutation* (`DerefMut`,
+/// [`SharedVec::push`], …) materializes a private copy first if — and only
+/// if — the buffer is shared or a partial view; uniquely-owned full-range
+/// buffers mutate in place with no copy at all.
+pub struct SharedVec<T> {
+    /// `None` encodes the empty vector without touching the allocator.
+    buf: Option<Arc<Vec<T>>>,
+    off: usize,
+    len: usize,
+}
+
+impl<T> SharedVec<T> {
+    pub fn new() -> Self {
+        SharedVec { buf: None, off: 0, len: 0 }
+    }
+
+    /// Take ownership of `v` without copying it.
+    pub fn from_vec(v: Vec<T>) -> Self {
+        let len = v.len();
+        if len == 0 {
+            return SharedVec::new();
+        }
+        SharedVec { buf: Some(Arc::new(v)), off: 0, len }
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        match &self.buf {
+            Some(b) => &b[self.off..self.off + self.len],
+            None => &[],
+        }
+    }
+
+    /// Zero-copy sub-view sharing this buffer (a deep copy under the
+    /// benches' forced-deep baseline, mirroring the old `to_vec` splits).
+    pub fn slice(&self, range: Range<usize>) -> SharedVec<T>
+    where
+        T: Clone,
+    {
+        assert!(
+            range.start <= range.end && range.end <= self.len,
+            "slice {range:?} out of bounds (len {})",
+            self.len
+        );
+        if range.start == range.end {
+            return SharedVec::new();
+        }
+        if shared::force_deep() {
+            shared::note_deep_copy(std::mem::size_of::<T>() * (range.end - range.start));
+            return SharedVec::from_vec(self.as_slice()[range].to_vec());
+        }
+        shared::note_shared_clone();
+        SharedVec {
+            buf: self.buf.clone(),
+            off: self.off + range.start,
+            len: range.end - range.start,
+        }
+    }
+
+    pub fn to_vec(&self) -> Vec<T>
+    where
+        T: Clone,
+    {
+        self.as_slice().to_vec()
+    }
+
+    /// Unwrap into a `Vec`, copy-free when uniquely owned and full-range.
+    pub fn into_vec(mut self) -> Vec<T>
+    where
+        T: Clone,
+    {
+        match self.buf.take() {
+            None => Vec::new(),
+            Some(b) if self.off == 0 && self.len == b.len() => {
+                Arc::try_unwrap(b).unwrap_or_else(|b| b[..].to_vec())
+            }
+            Some(b) => b[self.off..self.off + self.len].to_vec(),
+        }
+    }
+
+    /// Private full-range buffer for mutation: in place when uniquely owned
+    /// and unsliced, otherwise a (counted) copy-on-write materialization.
+    fn owned(&mut self) -> &mut Vec<T>
+    where
+        T: Clone,
+    {
+        let in_place = match &mut self.buf {
+            Some(b) => self.off == 0 && self.len == b.len() && Arc::get_mut(b).is_some(),
+            None => false,
+        };
+        if !in_place {
+            let v: Vec<T> = self.as_slice().to_vec();
+            if !v.is_empty() {
+                shared::note_deep_copy(std::mem::size_of::<T>() * v.len());
+            }
+            self.off = 0;
+            self.len = v.len();
+            self.buf = Some(Arc::new(v));
+        }
+        Arc::get_mut(self.buf.as_mut().expect("buffer just materialized"))
+            .expect("buffer just made unique")
+    }
+
+    pub fn push(&mut self, v: T)
+    where
+        T: Clone,
+    {
+        let b = self.owned();
+        b.push(v);
+        self.len = b.len();
+    }
+
+    pub fn extend_from_slice(&mut self, other: &[T])
+    where
+        T: Clone,
+    {
+        if other.is_empty() {
+            return;
+        }
+        let b = self.owned();
+        b.extend_from_slice(other);
+        self.len = b.len();
+    }
+
+    pub fn resize(&mut self, new_len: usize, value: T)
+    where
+        T: Clone,
+    {
+        if new_len == self.len {
+            return;
+        }
+        if new_len < self.len {
+            self.len = new_len; // zero-copy view truncation
+            return;
+        }
+        let b = self.owned();
+        b.resize(new_len, value);
+        self.len = new_len;
+    }
+
+    /// Zero-copy: shortens the view without touching the buffer.
+    pub fn truncate(&mut self, new_len: usize) {
+        if new_len < self.len {
+            self.len = new_len;
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.buf = None;
+        self.off = 0;
+        self.len = 0;
+    }
+}
+
+impl<T> Default for SharedVec<T> {
+    fn default() -> Self {
+        SharedVec::new()
+    }
+}
+
+impl<T: Clone> Clone for SharedVec<T> {
+    fn clone(&self) -> Self {
+        if self.len == 0 {
+            return SharedVec::new();
+        }
+        if shared::force_deep() {
+            shared::note_deep_copy(std::mem::size_of::<T>() * self.len);
+            return SharedVec::from_vec(self.as_slice().to_vec());
+        }
+        shared::note_shared_clone();
+        SharedVec { buf: self.buf.clone(), off: self.off, len: self.len }
+    }
+}
+
+impl<T> Deref for SharedVec<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Clone> DerefMut for SharedVec<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        let b = self.owned();
+        &mut b[..]
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for SharedVec<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(self.as_slice(), f)
+    }
+}
+
+impl<T: PartialEq> PartialEq for SharedVec<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: PartialEq> PartialEq<Vec<T>> for SharedVec<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: PartialEq> PartialEq<SharedVec<T>> for Vec<T> {
+    fn eq(&self, other: &SharedVec<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: PartialEq> PartialEq<[T]> for SharedVec<T> {
+    fn eq(&self, other: &[T]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl<T: PartialEq, const N: usize> PartialEq<[T; N]> for SharedVec<T> {
+    fn eq(&self, other: &[T; N]) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T> From<Vec<T>> for SharedVec<T> {
+    fn from(v: Vec<T>) -> Self {
+        SharedVec::from_vec(v)
+    }
+}
+
+impl<T: Clone> From<&[T]> for SharedVec<T> {
+    fn from(s: &[T]) -> Self {
+        SharedVec::from_vec(s.to_vec())
+    }
+}
+
+impl<T> FromIterator<T> for SharedVec<T> {
+    fn from_iter<I: IntoIterator<Item = T>>(iter: I) -> Self {
+        SharedVec::from_vec(iter.into_iter().collect())
+    }
+}
+
+impl<T: Clone> Extend<T> for SharedVec<T> {
+    fn extend<I: IntoIterator<Item = T>>(&mut self, iter: I) {
+        let b = self.owned();
+        b.extend(iter);
+        self.len = b.len();
+    }
+}
+
+impl<'a, T> IntoIterator for &'a SharedVec<T> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+impl<T: Clone> IntoIterator for SharedVec<T> {
+    type Item = T;
+    type IntoIter = std::vec::IntoIter<T>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.into_vec().into_iter()
+    }
+}
+
+/// Reusable pool of 64-bit-word scratch buffers for the commit-path
+/// codecs ([`crate::ckptstore::delta`]): `pack_words`, RLE and
+/// changed-chunk scans borrow a cleared buffer and hand it back instead
+/// of allocating fresh `Vec`s every commit.  One lives on every
+/// [`crate::simmpi::Ctx`].
+#[derive(Debug, Default)]
+pub struct WordArena {
+    pool: Vec<Vec<i64>>,
+}
+
+impl WordArena {
+    /// Keep at most this many parked buffers (the commit path needs ~3 at
+    /// a time; anything beyond that is churn from error paths).
+    const MAX_POOL: usize = 8;
+
+    /// Borrow a cleared buffer (capacity retained from earlier use).
+    pub fn take(&mut self) -> Vec<i64> {
+        match self.pool.pop() {
+            Some(mut v) => {
+                v.clear();
+                v
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Return a buffer to the pool.
+    pub fn put(&mut self, v: Vec<i64>) {
+        if v.capacity() > 0 && self.pool.len() < Self::MAX_POOL {
+            self.pool.push(v);
+        }
+    }
+}
+
 /// Typed payload container: every application message is some mix of f64 and
 /// i64 words (vector blocks, matrix rows, counters).  Byte size feeds the
-/// network cost model.
+/// network cost model.  Lanes are [`SharedVec`]s, so cloning a blob to fan
+/// it out shares the payload instead of copying it.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Blob {
-    pub f: Vec<f64>,
-    pub i: Vec<i64>,
+    pub f: SharedVec<f64>,
+    pub i: SharedVec<i64>,
     /// Wire-size override for workload scaling (see `NetParams::data_scale`):
     /// campaigns simulate the paper's full problem size by scaling the
     /// *charged* bytes of rows-proportional payloads while computing on the
@@ -68,12 +444,17 @@ impl Blob {
         Blob::default()
     }
 
+    /// Build from owned lanes without copying either.
+    pub fn new(f: Vec<f64>, i: Vec<i64>) -> Self {
+        Blob { f: f.into(), i: i.into(), wire: None }
+    }
+
     pub fn from_f64s(f: Vec<f64>) -> Self {
-        Blob { f, i: Vec::new(), wire: None }
+        Blob { f: f.into(), i: SharedVec::new(), wire: None }
     }
 
     pub fn from_i64s(i: Vec<i64>) -> Self {
-        Blob { f: Vec::new(), i, wire: None }
+        Blob { f: SharedVec::new(), i: i.into(), wire: None }
     }
 
     /// Scale the charged wire size (rows-proportional payloads only).
@@ -152,12 +533,106 @@ mod tests {
 
     #[test]
     fn blob_bytes() {
-        let b = Blob { f: vec![0.0; 10], i: vec![0; 3], wire: None };
+        let b = Blob::new(vec![0.0; 10], vec![0; 3]);
         assert_eq!(b.bytes(), 104);
         assert_eq!(Blob::empty().bytes(), 0);
         assert_eq!(Blob::scalar(1.0).bytes(), 8);
         assert_eq!(b.scaled(36.0).bytes(), 104 * 36);
         assert_eq!(Blob::scalar(1.0).scaled(1.0).bytes(), 8);
+    }
+
+    #[test]
+    fn shared_vec_reads_like_a_vec() {
+        let v: SharedVec<i64> = vec![1, 2, 3, 4].into();
+        assert_eq!(v.len(), 4);
+        assert_eq!(v[2], 3);
+        assert_eq!(&v[1..3], &[2, 3]);
+        assert_eq!(v.iter().sum::<i64>(), 10);
+        assert_eq!(v, vec![1, 2, 3, 4]);
+        assert_eq!(vec![1, 2, 3, 4], v);
+        assert!(SharedVec::<f64>::new().is_empty());
+    }
+
+    #[test]
+    fn clone_shares_and_cow_materializes() {
+        let a: SharedVec<i64> = vec![7; 100].into();
+        let mut b = a.clone(); // shared
+        assert_eq!(a, b);
+        b[0] = -1; // copy-on-write: a must not see the mutation
+        assert_eq!(a[0], 7);
+        assert_eq!(b[0], -1);
+        // Unique buffers mutate in place (no further materialization
+        // needed for repeated edits).
+        b[1] = -2;
+        assert_eq!(b[1], -2);
+        assert_eq!(a[1], 7);
+    }
+
+    #[test]
+    fn slice_views_share_then_cow() {
+        let a: SharedVec<i64> = (0..10).collect();
+        let s = a.slice(3..7);
+        assert_eq!(s, vec![3, 4, 5, 6]);
+        let mut s2 = s.clone();
+        s2.push(99); // materializes the 4-word window, then appends
+        assert_eq!(s2, vec![3, 4, 5, 6, 99]);
+        assert_eq!(s, vec![3, 4, 5, 6]);
+        assert_eq!(a.len(), 10);
+        // Empty slices and out-of-range are handled.
+        assert!(a.slice(4..4).is_empty());
+    }
+
+    #[test]
+    fn mutators_keep_view_length_in_sync() {
+        let mut v: SharedVec<i64> = vec![1, 2, 3].into();
+        v.truncate(2);
+        assert_eq!(v, vec![1, 2]);
+        v.push(9);
+        assert_eq!(v, vec![1, 2, 9]);
+        v.extend_from_slice(&[4, 5]);
+        v.extend([6]);
+        assert_eq!(v, vec![1, 2, 9, 4, 5, 6]);
+        v.resize(2, 0);
+        assert_eq!(v, vec![1, 2]);
+        v.resize(4, -1);
+        assert_eq!(v, vec![1, 2, -1, -1]);
+        v.clear();
+        assert!(v.is_empty());
+        assert_eq!(v.into_vec(), Vec::<i64>::new());
+    }
+
+    #[test]
+    fn into_vec_roundtrip() {
+        let v: SharedVec<f64> = vec![1.5, -2.5].into();
+        let w = v.clone();
+        assert_eq!(w.into_vec(), vec![1.5, -2.5]); // shared: copies
+        assert_eq!(v.into_vec(), vec![1.5, -2.5]); // unique: unwraps
+    }
+
+    #[test]
+    fn deep_copy_counters_move_on_cow() {
+        // Only >=-deltas: other tests run concurrently in this process and
+        // may even have forced-deep clones on (which counts the clone
+        // itself as the deep copy — either way >= 8000 bytes move here).
+        let before = shared::stats();
+        let a: SharedVec<i64> = vec![1; 1000].into();
+        let mut b = a.clone();
+        b[0] = 2; // CoW of 1000 words
+        let after = shared::stats();
+        assert!(after.deep_bytes >= before.deep_bytes + 8000);
+        assert!(after.deep_copies >= before.deep_copies + 1);
+    }
+
+    #[test]
+    fn arena_recycles_buffers() {
+        let mut a = WordArena::default();
+        let mut v = a.take();
+        v.extend_from_slice(&[1, 2, 3]);
+        let cap = v.capacity();
+        a.put(v);
+        let v2 = a.take();
+        assert!(v2.is_empty());
+        assert_eq!(v2.capacity(), cap, "capacity survives the round trip");
     }
 
     #[test]

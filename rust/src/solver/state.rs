@@ -247,7 +247,7 @@ impl SolverState {
                         f.extend_from_slice(self.z_out.row(t));
                     }
                 }
-                Blob { f, i: vec![nv as i64, nz as i64], wire: None }
+                Blob::new(f, vec![nv as i64, nz as i64])
             }
         }
     }
@@ -260,11 +260,10 @@ impl SolverState {
         };
         let mut f = vec![self.scalars.bnorm];
         f.extend_from_slice(&ls_flat);
-        Blob {
+        Blob::new(
             f,
-            i: vec![self.scalars.inner_iters_done as i64, self.scalars.next_version, j],
-            wire: None,
-        }
+            vec![self.scalars.inner_iters_done as i64, self.scalars.next_version, j],
+        )
     }
 
     /// Restore scalars + cycle control from an ITER blob.

@@ -385,7 +385,7 @@ fn compression_roundtrips_random_sparse_deltas() {
             .map(|_| if rng.below(3) == 0 { 0.0 } else { rng.f64() })
             .collect();
         let i: Vec<i64> = (0..ni).map(|_| rng.next_u64() as i64 % 9).collect();
-        let blob = Blob { f, i, wire: None }.scaled(1.0 + rng.below(40) as f64);
+        let blob = Blob::new(f, i).scaled(1.0 + rng.below(40) as f64);
         let out = decompress_blob(&compress_blob(&blob));
         assert_eq!(out.i, blob.i, "case {case}");
         assert_eq!(out.f.len(), blob.f.len());

@@ -1,0 +1,128 @@
+//! Property tests pinning the widened GF(2^8) kernels (DESIGN.md §11) to
+//! the bytewise log/exp reference: every coefficient, random words, slice
+//! lengths straddling the SWAR/table/SIMD cutover and vector tails, and
+//! two-erasure solve round-trips.  The widened kernels carry the `rs2`
+//! Q-stripe encode and the in-situ double-erasure recovery, so a single
+//! wrong byte here is silent checkpoint corruption.
+
+mod common;
+
+use common::Rng;
+use ulfm_ftgmres::ckptstore::delta::xor_into;
+use ulfm_ftgmres::ckptstore::gf256::{
+    coef, div_words, gdiv, gmul, mul_word, mul_word_bytewise, mul_xor_into,
+    mul_xor_into_bytewise, solve_two_erasures, solve_two_erasures_bytewise, WideMul,
+};
+
+#[test]
+fn every_coefficient_matches_bytewise_on_random_words() {
+    let mut rng = Rng::new(0xC0FFEE);
+    let words: Vec<i64> = (0..64).map(|_| rng.next_u64() as i64).collect();
+    for c in 0..=255u8 {
+        let wm = WideMul::new(c);
+        assert_eq!(wm.coef(), c);
+        let tab = wm.table();
+        for &w in &words {
+            let want = mul_word_bytewise(w, c);
+            assert_eq!(wm.mul(w), want, "SWAR kernel diverged at c={c}, w={w:#018x}");
+            assert_eq!(mul_word(w, c), want, "mul_word diverged at c={c}");
+            // The byte table is exactly gmul against this coefficient.
+            let b = (w & 0xff) as u8;
+            assert_eq!(tab[b as usize], gmul(b, c), "table entry c={c} b={b}");
+        }
+    }
+}
+
+#[test]
+fn slice_kernel_matches_bytewise_for_all_lengths_and_coefficients() {
+    let mut rng = Rng::new(7);
+    // Lengths cover: empty, below the table cutover, exactly at it, above
+    // it with every SIMD tail residue (the AVX2 path works 4 words at a
+    // time), and a large block.
+    for len in [0usize, 1, 2, 7, 31, 63, 64, 65, 66, 67, 68, 127, 500] {
+        let words: Vec<i64> = (0..len).map(|_| rng.next_u64() as i64).collect();
+        let seed: Vec<i64> = (0..len / 2).map(|_| rng.next_u64() as i64).collect();
+        for c in [0u8, 1, 2, 3, 0x1d, 0x35, 0x80, 0xfd, 0xff] {
+            let mut wide = seed.clone();
+            let mut byte = seed.clone();
+            mul_xor_into(&mut wide, &words, c);
+            mul_xor_into_bytewise(&mut byte, &words, c);
+            assert_eq!(wide, byte, "len={len} c={c}");
+        }
+    }
+}
+
+#[test]
+fn div_words_inverts_mul_for_every_nonzero_coefficient() {
+    let mut rng = Rng::new(99);
+    let original: Vec<i64> = (0..130).map(|_| rng.next_u64() as i64).collect();
+    for c in 1..=255u8 {
+        let mut scaled = vec![0i64; original.len()];
+        mul_xor_into(&mut scaled, &original, c);
+        div_words(&mut scaled, c);
+        assert_eq!(scaled, original, "div_words(mul(c)) != id at c={c}");
+    }
+}
+
+#[test]
+fn two_erasure_solve_round_trips_across_slot_pairs() {
+    let mut rng = Rng::new(2026);
+    // A parity group of 6 members with ragged lengths; every failed-slot
+    // pair must solve back to the original payloads through both the
+    // widened and the bytewise solver.
+    let members: Vec<Vec<i64>> = (0..6)
+        .map(|k| (0..80 + 13 * k).map(|_| rng.next_u64() as i64).collect())
+        .collect();
+    let mut pp: Vec<i64> = Vec::new();
+    let mut qq: Vec<i64> = Vec::new();
+    for (k, m) in members.iter().enumerate() {
+        xor_into(&mut pp, m);
+        mul_xor_into(&mut qq, m, coef(k));
+    }
+    for i in 0..members.len() {
+        for j in i + 1..members.len() {
+            // Fold every survivor back out of both stripes.
+            let mut p = pp.clone();
+            let mut q = qq.clone();
+            for (k, m) in members.iter().enumerate() {
+                if k != i && k != j {
+                    xor_into(&mut p, m);
+                    mul_xor_into(&mut q, m, coef(k));
+                }
+            }
+            let (mi, mj) = solve_two_erasures(&p, &q, coef(i), coef(j));
+            assert_eq!(&mi[..members[i].len()], &members[i][..], "pair ({i},{j})");
+            assert_eq!(&mj[..members[j].len()], &members[j][..], "pair ({i},{j})");
+            assert!(mi[members[i].len()..].iter().all(|&w| w == 0), "pad ({i},{j})");
+            let (bi, bj) = solve_two_erasures_bytewise(&p, &q, coef(i), coef(j));
+            assert_eq!(mi, bi, "widened vs bytewise solve, pair ({i},{j})");
+            assert_eq!(mj, bj, "widened vs bytewise solve, pair ({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn single_erasure_via_q_alone_matches_reference_division() {
+    let mut rng = Rng::new(4);
+    let members: Vec<Vec<i64>> =
+        (0..4).map(|_| (0..200).map(|_| rng.next_u64() as i64).collect()).collect();
+    for lost in 0..members.len() {
+        let mut q: Vec<i64> = Vec::new();
+        for (k, m) in members.iter().enumerate() {
+            mul_xor_into(&mut q, m, coef(k));
+        }
+        for (k, m) in members.iter().enumerate() {
+            if k != lost {
+                mul_xor_into(&mut q, m, coef(k));
+            }
+        }
+        // Widened in-place division...
+        let mut wide = q.clone();
+        div_words(&mut wide, coef(lost));
+        // ...against the bytewise inverse multiply.
+        let inv = gdiv(1, coef(lost));
+        let byte: Vec<i64> = q.iter().map(|&w| mul_word_bytewise(w, inv)).collect();
+        assert_eq!(wide, byte, "lost={lost}");
+        assert_eq!(wide, members[lost], "lost={lost}: wrong payload recovered");
+    }
+}

@@ -18,11 +18,10 @@ const N: usize = 8;
 
 /// Deterministic, rank-distinct v1 payload (what must survive the torn v2).
 fn v1_blob(rank: usize) -> Blob {
-    Blob {
-        f: (0..33).map(|k| (rank * 100 + k) as f64 * 0.5 + 0.125).collect(),
-        i: vec![rank as i64, 7, -3],
-        wire: None,
-    }
+    Blob::new(
+        (0..33).map(|k| (rank * 100 + k) as f64 * 0.5 + 0.125).collect(),
+        vec![rank as i64, 7, -3],
+    )
 }
 
 /// Drive one interrupted-commit scenario: commit v1 cleanly, let `victim`

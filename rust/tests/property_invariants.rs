@@ -171,7 +171,7 @@ fn prop_blob_scaled_wire_size() {
     for _ in 0..CASES {
         let nf = rng.below(100);
         let ni = rng.below(100);
-        let b = Blob { f: vec![0.0; nf], i: vec![0; ni], wire: None };
+        let b = Blob::new(vec![0.0; nf], vec![0; ni]);
         let base = 8 * (nf + ni);
         assert_eq!(b.bytes(), base);
         let s = 1.0 + rng.below(50) as f64;

@@ -5,8 +5,13 @@
 mod common;
 
 use common::quick_config;
+use ulfm_ftgmres::ckptstore::Scheme;
+use ulfm_ftgmres::config::RunConfig;
 use ulfm_ftgmres::coordinator;
+use ulfm_ftgmres::failure::{InjectionPlan, ProtoPhase};
+use ulfm_ftgmres::metrics::RunReport;
 use ulfm_ftgmres::recovery::Strategy;
+use ulfm_ftgmres::simmpi::shared;
 
 #[test]
 fn shrink_single_failure_converges_to_same_answer() {
@@ -138,6 +143,70 @@ fn simultaneous_failures_recovered_in_one_shrink() {
     assert!(rep.converged, "relres={}", rep.final_relres);
     assert_eq!(rep.failures, 2, "both kills fired in the same window");
     assert!(rep.final_relres < 1e-10);
+}
+
+/// Everything observable about a run that the wire influences: solver
+/// outcome bits, iteration history, failure/recovery bookkeeping, and the
+/// exact checkpoint byte accounting.
+#[allow(clippy::type_complexity)]
+fn wire_digest(
+    rep: &RunReport,
+) -> (bool, u64, usize, u64, (usize, usize, usize), usize, usize, u64, usize) {
+    (
+        rep.converged,
+        rep.iterations,
+        rep.failures,
+        rep.final_relres.to_bits(),
+        rep.ckpt_totals(),
+        rep.ckpt_raw_bytes(),
+        rep.global_restarts(),
+        rep.recovery_retries,
+        rep.decisions.len(),
+    )
+}
+
+fn run_with_clone_mode(cfg: &RunConfig, plan: &InjectionPlan, deep: bool) -> RunReport {
+    shared::force_deep_clones(deep);
+    let backend = coordinator::make_backend(cfg).unwrap();
+    let rep = coordinator::run_custom(cfg, backend, plan.clone());
+    shared::force_deep_clones(false);
+    rep.unwrap()
+}
+
+/// Transport equivalence of the zero-copy refactor (DESIGN.md §11): the
+/// shared-buffer data plane must be bit-identical to the pre-refactor
+/// deep-copy wire.  `force_deep_clones` re-enacts the old clone-is-memcpy
+/// semantics on the *same* code, so re-running a mirror/xor/rs2 + delta +
+/// compression + nested-failure campaign under both modes and comparing
+/// `RunReport` digests pins every solver result, recovery decision and
+/// checkpoint byte count of the new wire to the old one.
+#[test]
+fn transport_equivalence_zero_copy_vs_deep_wire() {
+    // (scheme, strategy, warm spares, nested second-failure phase+rank)
+    let legs: Vec<(Scheme, Strategy, Option<usize>, ProtoPhase, usize)> = vec![
+        (Scheme::Mirror { k: 1 }, Strategy::Shrink, None, ProtoPhase::Reconstruct, 3),
+        (Scheme::Xor { g: 4 }, Strategy::Shrink, None, ProtoPhase::Reconstruct, 3),
+        (Scheme::Rs2 { g: 4 }, Strategy::Substitute, Some(2), ProtoPhase::SpareJoin, 8),
+    ];
+    for (scheme, strategy, warm, phase, second) in legs {
+        let mut cfg = quick_config(8, strategy, 0);
+        cfg.warm_spares = warm;
+        cfg.solver.ckpt.scheme = scheme;
+        cfg.solver.ckpt.delta = true;
+        cfg.solver.ckpt.compress = true;
+        let first = if phase == ProtoPhase::SpareJoin { 5 } else { 7 };
+        let plan = InjectionPlan::nested(first, 25, second, phase, 1);
+        let cow = run_with_clone_mode(&cfg, &plan, false);
+        let deep = run_with_clone_mode(&cfg, &plan, true);
+        assert!(cow.converged, "{scheme:?}: zero-copy run must converge");
+        assert_eq!(cow.global_restarts(), 0, "{scheme:?}: recoverable nested pattern");
+        assert!(cow.recovery_retries >= 1, "{scheme:?}: the nested kill must fence");
+        assert_eq!(
+            wire_digest(&cow),
+            wire_digest(&deep),
+            "{scheme:?}: shared-buffer wire diverged from the deep-copy wire"
+        );
+    }
 }
 
 #[test]
