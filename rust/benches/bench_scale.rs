@@ -1,0 +1,167 @@
+//! Engine scaling bench (DESIGN.md §12): ranks-per-second and peak RSS for
+//! the thread-per-rank oracle vs the deterministic event loop.
+//!
+//! Legs (names stable across smoke/full so the CI gate can key on them):
+//!
+//! - `engine_threads_256` / `engine_events_256` — both engines on the same
+//!   256-rank campaign (also cross-checked for digest equality here);
+//! - `engine_events_4k` / `engine_events_16k` — event engine only, the
+//!   territory where thread-per-rank stacks alone would cost gigabytes.
+//!
+//! Emits `BENCH_scale.json` at the repository root; `BENCH_SMOKE=1` shrinks
+//! iteration budgets (not world sizes) for the CI quick pass.
+//!
+//! `cargo bench --bench bench_scale`
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use ulfm_ftgmres::config::RunConfig;
+use ulfm_ftgmres::coordinator;
+use ulfm_ftgmres::failure::InjectionPlan;
+use ulfm_ftgmres::metrics::RunReport;
+use ulfm_ftgmres::problem::Grid3D;
+use ulfm_ftgmres::recovery::Strategy;
+use ulfm_ftgmres::simmpi::Engine;
+
+fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Process peak resident set (VmHWM) in KiB — monotone high-water, so legs
+/// run smallest world first and each reading is "peak so far".
+fn peak_rss_kib() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else { return 0 };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            return rest.trim().trim_end_matches("kB").trim().parse().unwrap_or(0);
+        }
+    }
+    0
+}
+
+/// A bounded, failure-free, checkpointing campaign: `windows` outer windows
+/// of 10 inner iterations each, residual target unreachable by design so
+/// every leg does the identical amount of work.
+fn scale_cfg(p: usize, grid: Grid3D, windows: usize, engine: Engine) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.grid = grid;
+    cfg.p = p;
+    cfg.strategy = Strategy::Shrink;
+    cfg.failures = 0;
+    cfg.solver.tol = 1e-30;
+    cfg.solver.m_inner = 10;
+    cfg.solver.m_outer = windows;
+    cfg.solver.max_cycles = 1;
+    cfg.engine = engine;
+    cfg
+}
+
+struct Leg {
+    name: &'static str,
+    engine: Engine,
+    p: usize,
+    iterations: u64,
+    wall_secs: f64,
+    ranks_per_sec: f64,
+    peak_rss_kib: u64,
+}
+
+fn run_leg(name: &'static str, cfg: &RunConfig) -> (Leg, RunReport) {
+    let backend = coordinator::make_backend(cfg).expect("backend");
+    let t0 = Instant::now();
+    let rep =
+        coordinator::run_custom(cfg, backend, InjectionPlan::none()).expect("scale leg completes");
+    let wall = t0.elapsed().as_secs_f64();
+    // Throughput unit: rank-iterations per wall second (every rank steps
+    // every inner iteration, so this is p * iterations / wall).
+    let ranks_per_sec = cfg.p as f64 * rep.iterations as f64 / wall.max(1e-9);
+    println!(
+        "{name}: p={} engine={} iters={} wall={wall:.3}s rank-iters/s={ranks_per_sec:.0} \
+         rss_hwm={} KiB",
+        cfg.p,
+        cfg.engine.name(),
+        rep.iterations,
+        peak_rss_kib()
+    );
+    let leg = Leg {
+        name,
+        engine: cfg.engine,
+        p: cfg.p,
+        iterations: rep.iterations,
+        wall_secs: wall,
+        ranks_per_sec,
+        peak_rss_kib: peak_rss_kib(),
+    };
+    (leg, rep)
+}
+
+/// The digest fields both engines must agree on (mirrors the fuller digest
+/// in tests/engine_differential.rs).
+fn digest(rep: &RunReport) -> (u64, u64, u64, bool, (usize, usize, usize)) {
+    (
+        rep.time_to_solution.to_bits(),
+        rep.final_relres.to_bits(),
+        rep.iterations,
+        rep.converged,
+        rep.ckpt_totals(),
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let windows_256 = if smoke() { 3 } else { 6 };
+    let windows_4k = if smoke() { 2 } else { 6 };
+    let windows_16k = if smoke() { 1 } else { 3 };
+
+    // 256-rank head-to-head (smallest worlds first: VmHWM is monotone).
+    let grid_256 = Grid3D::cube(12); // 1728 rows >= 4*256
+    let (leg_t, rep_t) =
+        run_leg("engine_threads_256", &scale_cfg(256, grid_256, windows_256, Engine::Threads));
+    let (leg_e, rep_e) =
+        run_leg("engine_events_256", &scale_cfg(256, grid_256, windows_256, Engine::Events));
+    assert_eq!(
+        digest(&rep_t),
+        digest(&rep_e),
+        "engines diverged on the 256-rank scale campaign"
+    );
+
+    // Event engine only beyond thread-per-rank territory.
+    let (leg_4k, _) = run_leg(
+        "engine_events_4k",
+        &scale_cfg(4096, Grid3D::cube(26), windows_4k, Engine::Events), // 17576 >= 4*4096
+    );
+    let (leg_16k, _) = run_leg(
+        "engine_events_16k",
+        &scale_cfg(16384, Grid3D::cube(41), windows_16k, Engine::Events), // 68921 >= 4*16384
+    );
+
+    let legs = [leg_t, leg_e, leg_4k, leg_16k];
+    for l in &legs {
+        assert!(l.iterations > 0 && l.ranks_per_sec > 0.0, "{}: empty leg", l.name);
+    }
+
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"scale\",\n");
+    let _ = writeln!(json, "  \"smoke\": {},\n  \"legs\": [", smoke());
+    for (i, l) in legs.iter().enumerate() {
+        let _ = writeln!(
+            json,
+            "    {{\"name\": \"{}\", \"engine\": \"{}\", \"p\": {}, \"iterations\": {}, \
+             \"wall_secs\": {:.4}, \"ranks_per_sec\": {:.1}, \"peak_rss_kib\": {}}}{}",
+            l.name,
+            l.engine.name(),
+            l.p,
+            l.iterations,
+            l.wall_secs,
+            l.ranks_per_sec,
+            l.peak_rss_kib,
+            if i + 1 < legs.len() { "," } else { "" }
+        );
+    }
+    json.push_str("  ]\n}\n");
+    let path = std::path::Path::new("../BENCH_scale.json");
+    std::fs::write(path, &json)?;
+    eprintln!("wrote {}", path.display());
+    println!("scale checks passed");
+    Ok(())
+}

@@ -32,7 +32,7 @@ use ulfm_ftgmres::netsim::{ComputeModel, NetParams};
 use ulfm_ftgmres::problem::{EllBlock, Grid3D, MatrixRows, Partition};
 use ulfm_ftgmres::recovery::Strategy;
 use ulfm_ftgmres::runtime::PjrtEngine;
-use ulfm_ftgmres::simmpi::{shared, Blob, Comm, Ctx, WordArena, World};
+use ulfm_ftgmres::simmpi::{block_on, shared, Blob, Comm, Ctx, WordArena, World};
 
 // ---------------------------------------------------------------------
 // Instrumented allocator: counts every heap allocation the process makes
@@ -346,20 +346,20 @@ fn leg_commit(name: &'static str, scheme: Scheme) -> Leg {
 // ---------------------------------------------------------------------
 
 fn bench_rank_loop(n: usize, rounds: usize) -> f64 {
-    let (w, rxs) = World::new(n, 0, NetParams::default(), Injector::new(InjectionPlan::none()));
-    let handles: Vec<_> = rxs
-        .into_iter()
-        .enumerate()
-        .map(|(rank, rx)| {
+    let w = World::new(n, 0, NetParams::default(), Injector::new(InjectionPlan::none()));
+    let handles: Vec<_> = (0..n)
+        .map(|rank| {
             let w: Arc<World> = w.clone();
             std::thread::spawn(move || {
-                let mut ctx = Ctx::new(w, rank, rx);
+                let mut ctx = Ctx::new(w, rank);
                 let mut comm = Comm::world(n, rank);
                 let mut v = [rank as f64];
-                for _ in 0..rounds {
-                    comm.allreduce_sum(&mut ctx, &mut v).unwrap();
-                }
-                v[0]
+                block_on(async move {
+                    for _ in 0..rounds {
+                        comm.allreduce_sum(&mut ctx, &mut v).await.unwrap();
+                    }
+                    v[0]
+                })
             })
         })
         .collect();

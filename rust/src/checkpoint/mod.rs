@@ -284,7 +284,7 @@ pub fn ward_of_stride(r: usize, d: usize, n: usize, stride: usize) -> usize {
 /// buddies: the paper's original protocol, kept as a thin wrapper over
 /// [`crate::ckptstore::commit`] with a `mirror:<k>` scheme and the delta
 /// layer off.
-pub fn checkpoint(
+pub async fn checkpoint(
     ctx: &mut Ctx,
     comm: &mut Comm,
     store: &mut CkptStore,
@@ -293,18 +293,18 @@ pub fn checkpoint(
     k: usize,
 ) -> MpiResult<()> {
     let cfg = crate::ckptstore::CkptCfg::mirror(k);
-    crate::ckptstore::commit(ctx, comm, store, objs, version, &cfg, false)
+    crate::ckptstore::commit(ctx, comm, store, objs, version, &cfg, false).await
 }
 
 /// Agree on the restore version: the newest version every survivor has
 /// committed.  Called by all members of the (post-recovery) communicator.
-pub fn agree_restore_version(
+pub async fn agree_restore_version(
     ctx: &mut Ctx,
     comm: &mut Comm,
     store: &CkptStore,
 ) -> MpiResult<Version> {
     let mut v = [store.committed()];
-    comm.allreduce_min_i64(ctx, &mut v)?;
+    comm.allreduce_min_i64(ctx, &mut v).await?;
     Ok(v[0])
 }
 

@@ -217,7 +217,7 @@ fn charge_encode(ctx: &mut Ctx, cfg: &CkptCfg, words: usize, acc: &mut f64) {
 /// agreement, so a failure mid-commit leaves the previous committed version
 /// intact; afterwards versions below the committed floor are garbage-
 /// collected on both the local and the redundancy side.
-pub fn commit(
+pub async fn commit(
     ctx: &mut Ctx,
     comm: &mut Comm,
     store: &mut CkptStore,
@@ -234,12 +234,12 @@ pub fn commit(
     } else {
         ctx.set_phase(Phase::Checkpoint)
     };
-    let result = commit_inner(ctx, comm, store, objs, version, cfg, fresh);
+    let result = commit_inner(ctx, comm, store, objs, version, cfg, fresh).await;
     ctx.set_phase(prev);
     result
 }
 
-fn commit_inner(
+async fn commit_inner(
     ctx: &mut Ctx,
     comm: &mut Comm,
     store: &mut CkptStore,
@@ -262,26 +262,33 @@ fn commit_inner(
     let logical: usize = objs.iter().map(|(_, b)| b.bytes()).sum();
 
     let result = match cfg.scheme {
-        Scheme::Xor { g } if cfg.scheme.parity_active(n) => exchange_xor(
-            ctx, comm, store, objs, version, cfg, g, use_delta, &mut shipped, &mut raw,
-            &mut encode_secs,
-        ),
-        Scheme::Rs2 { g } if cfg.scheme.parity_active(n) => exchange_rs2(
-            ctx, comm, store, objs, version, cfg, g, use_delta, &mut shipped, &mut raw,
-            &mut encode_secs,
-        ),
+        Scheme::Xor { g } if cfg.scheme.parity_active(n) => {
+            exchange_xor(
+                ctx, comm, store, objs, version, cfg, g, use_delta, &mut shipped, &mut raw,
+                &mut encode_secs,
+            )
+            .await
+        }
+        Scheme::Rs2 { g } if cfg.scheme.parity_active(n) => {
+            exchange_rs2(
+                ctx, comm, store, objs, version, cfg, g, use_delta, &mut shipped, &mut raw,
+                &mut encode_secs,
+            )
+            .await
+        }
         _ => {
             let k = cfg.scheme.mirror_k().min(n.saturating_sub(1));
             exchange_mirror(
                 ctx, comm, store, objs, version, cfg, k, use_delta, &mut shipped, &mut raw,
                 &mut encode_secs,
             )
+            .await
         }
     };
     result?;
 
     // Global commit: everyone stored everything.
-    comm.agree(ctx, u64::MAX)?;
+    comm.agree(ctx, u64::MAX).await?;
     store.commit(version);
     if fresh {
         store.note_fresh(version);
@@ -309,7 +316,7 @@ fn commit_inner(
 /// compressed) copies to `k` ring buddies, materialize the copies received
 /// for this rank's wards.
 #[allow(clippy::too_many_arguments)]
-fn exchange_mirror(
+async fn exchange_mirror(
     ctx: &mut Ctx,
     comm: &mut Comm,
     store: &mut CkptStore,
@@ -393,7 +400,7 @@ fn exchange_mirror(
         let ward = ward_of_stride(me, d, n, stride);
         let owner_wr = comm.world_of(ward);
         for (id, _) in objs {
-            let recvd = comm.recv(ctx, ward, ship_tag(*id, d))?;
+            let recvd = comm.recv(ctx, ward, ship_tag(*id, d)).await?;
             if use_delta {
                 let factor = delta::wire_factor(&recvd);
                 let wire =
@@ -451,7 +458,7 @@ fn parity_contribution(
 /// compressed) parity contribution per object to the group's holder;
 /// holders fold the stripes for the groups they protect.
 #[allow(clippy::too_many_arguments)]
-fn exchange_xor(
+async fn exchange_xor(
     ctx: &mut Ctx,
     comm: &mut Comm,
     store: &mut CkptStore,
@@ -515,7 +522,7 @@ fn exchange_xor(
                 }
             };
             for slot in 0..len {
-                let recvd = comm.recv(ctx, start + slot, parity_tag(*id))?;
+                let recvd = comm.recv(ctx, start + slot, parity_tag(*id)).await?;
                 let factor = delta::wire_factor(&recvd);
                 let wire =
                     if cfg.compress { delta::decompress_wire(&recvd) } else { recvd };
@@ -545,7 +552,7 @@ fn exchange_xor(
 /// contribution once — double parity costs one extra group-level wire per
 /// object, not a second per-member contribution.
 #[allow(clippy::too_many_arguments)]
-fn exchange_rs2(
+async fn exchange_rs2(
     ctx: &mut Ctx,
     comm: &mut Comm,
     store: &mut CkptStore,
@@ -619,7 +626,7 @@ fn exchange_rs2(
                 let mut q_total = 0usize;
                 let mut q_cw = cfg.chunk_words();
                 for slot in 0..len {
-                    let recvd = comm.recv(ctx, start + slot, parity_tag(*id))?;
+                    let recvd = comm.recv(ctx, start + slot, parity_tag(*id)).await?;
                     let factor = delta::wire_factor(&recvd);
                     let wire =
                         if cfg.compress { delta::decompress_wire(&recvd) } else { recvd };
@@ -677,7 +684,7 @@ fn exchange_rs2(
         }
         if q_cr == me {
             for (id, _) in objs {
-                let recvd = comm.recv(ctx, p_cr, qpar_tag(*id, grp))?;
+                let recvd = comm.recv(ctx, p_cr, qpar_tag(*id, grp)).await?;
                 let wire =
                     if cfg.compress { delta::decompress_wire(&recvd) } else { recvd };
                 charge_encode(ctx, cfg, wire.i.len(), encode_secs);
@@ -933,7 +940,7 @@ pub fn assess_loss(
 /// [`LossCheck::Recoverable`] for the same liveness snapshot; afterwards
 /// the usual `get_remote_at_most` serving paths work unchanged for shrink,
 /// substitute and global-restart recovery.
-pub fn reconstruct_failed(
+pub async fn reconstruct_failed(
     ctx: &mut Ctx,
     comm: &Comm,
     store: &mut CkptStore,
@@ -953,15 +960,19 @@ pub fn reconstruct_failed(
     }
     match cfg.scheme {
         Scheme::Mirror { .. } => Ok(()),
-        Scheme::Xor { g } => reconstruct_xor(ctx, comm, store, cfg, old_members, v, objs, g),
-        Scheme::Rs2 { g } => reconstruct_rs2(ctx, comm, store, cfg, old_members, v, objs, g),
+        Scheme::Xor { g } => {
+            reconstruct_xor(ctx, comm, store, cfg, old_members, v, objs, g).await
+        }
+        Scheme::Rs2 { g } => {
+            reconstruct_rs2(ctx, comm, store, cfg, old_members, v, objs, g).await
+        }
     }
 }
 
 /// Single-erasure xor reconstruction: surviving group members stream their
 /// local blobs to the holder, which XORs them with the stripe.
 #[allow(clippy::too_many_arguments)]
-fn reconstruct_xor(
+async fn reconstruct_xor(
     ctx: &mut Ctx,
     comm: &Comm,
     store: &mut CkptStore,
@@ -1003,7 +1014,7 @@ fn reconstruct_xor(
                     let src = comm
                         .rank_of_world(old_members[cr])
                         .expect("surviving group member must be in the repaired comm");
-                    let recvd = comm.recv(ctx, src, recon_tag(id, fr))?;
+                    let recvd = comm.recv(ctx, src, recon_tag(id, fr)).await?;
                     let blob =
                         if cfg.compress { delta::decompress_blob(&recvd) } else { recvd };
                     delta::xor_into(&mut acc, &delta::pack_words(&blob));
@@ -1060,7 +1071,7 @@ fn parse_stripe_wire(wire: &Blob, members: &[WorldRank]) -> (Version, ParityStri
 /// failed member's objects in its own store for the ordinary serving
 /// paths.
 #[allow(clippy::too_many_arguments)]
-fn reconstruct_rs2(
+async fn reconstruct_rs2(
     ctx: &mut Ctx,
     comm: &Comm,
     store: &mut CkptStore,
@@ -1112,16 +1123,24 @@ fn reconstruct_rs2(
                 // Gather the needed stripes (local when the leader is a
                 // holder itself, e.g. when a whole group died).
                 let p_stripe = if need_p {
-                    Some(gather_stripe(
-                        ctx, comm, store, cfg, old_members, me_old, p_cr, anchor, id, v, grp, 0,
-                    )?)
+                    Some(
+                        gather_stripe(
+                            ctx, comm, store, cfg, old_members, me_old, p_cr, anchor, id, v,
+                            grp, 0,
+                        )
+                        .await?,
+                    )
                 } else {
                     None
                 };
                 let q_stripe = if need_q {
-                    Some(gather_stripe(
-                        ctx, comm, store, cfg, old_members, me_old, q_cr, anchor, id, v, grp, 1,
-                    )?)
+                    Some(
+                        gather_stripe(
+                            ctx, comm, store, cfg, old_members, me_old, q_cr, anchor, id, v,
+                            grp, 1,
+                        )
+                        .await?,
+                    )
                 } else {
                     None
                 };
@@ -1139,7 +1158,7 @@ fn reconstruct_rs2(
                         let src = comm
                             .rank_of_world(old_members[cr])
                             .expect("surviving member must be in the repaired comm");
-                        let recvd = comm.recv(ctx, src, recon_member_tag(id, grp))?;
+                        let recvd = comm.recv(ctx, src, recon_member_tag(id, grp)).await?;
                         let blob =
                             if cfg.compress { delta::decompress_blob(&recvd) } else { recvd };
                         delta::pack_words(&blob)
@@ -1258,7 +1277,7 @@ fn reconstruct_rs2(
 /// Leader-side stripe acquisition: local when the leader is the holder,
 /// otherwise received from the holder over the repaired communicator.
 #[allow(clippy::too_many_arguments)]
-fn gather_stripe(
+async fn gather_stripe(
     ctx: &mut Ctx,
     comm: &Comm,
     store: &CkptStore,
@@ -1281,7 +1300,7 @@ fn gather_stripe(
     let src = comm
         .rank_of_world(old_members[holder_cr])
         .expect("stripe holder must be in the repaired comm");
-    let recvd = comm.recv(ctx, src, recon_stripe_tag(id, grp, which))?;
+    let recvd = comm.recv(ctx, src, recon_stripe_tag(id, grp, which)).await?;
     let wire = if cfg.compress { delta::decompress_wire(&recvd) } else { recvd };
     ctx.advance((8 * wire.i.len()) as f64 / cfg.encode_bytes_per_sec);
     let (start, len) = scheme::group_span(grp, cfg_group(cfg), old_members.len());

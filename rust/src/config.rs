@@ -11,6 +11,7 @@ use crate::failure::{InjectionPlan, ProtoPhase};
 use crate::netsim::{ComputeModel, NetParams};
 use crate::problem::Grid3D;
 use crate::recovery::{Decision, PolicyKind, Strategy};
+use crate::simmpi::Engine;
 use crate::solver::FtGmresCfg;
 use crate::spares::SparePool;
 
@@ -70,6 +71,12 @@ pub struct RunConfig {
     pub net: NetParams,
     pub compute: ComputeModel,
     pub backend: BackendKind,
+    /// Execution engine for rank bodies (key `engine`, CLI `--engine`):
+    /// `threads` (one OS thread per rank, the differential-testing oracle)
+    /// or `events` (deterministic single-threaded event loop; required for
+    /// 10k+ rank worlds).  Both produce identical `RunReport` digests —
+    /// see DESIGN.md §12 and `tests/engine_differential.rs`.
+    pub engine: Engine,
     /// PJRT backend: charge measured wall time instead of modeled cost.
     pub pjrt_measured: bool,
     /// Directory with AOT artifacts (PJRT backend).
@@ -92,6 +99,7 @@ impl Default for RunConfig {
             net: NetParams::default(),
             compute: ComputeModel::default(),
             backend: BackendKind::Native,
+            engine: Engine::Threads,
             pjrt_measured: false,
             artifacts_dir: "artifacts".to_string(),
         }
@@ -257,6 +265,11 @@ impl RunConfig {
                 self.backend = BackendKind::parse(v)
                     .ok_or_else(|| anyhow::anyhow!("unknown backend {v}"))?
             }
+            "engine" => {
+                self.engine = Engine::parse(v).ok_or_else(|| {
+                    anyhow::anyhow!("unknown engine {v} (expected threads or events)")
+                })?
+            }
             "pjrt_measured" => self.pjrt_measured = v.parse()?,
             "artifacts_dir" => self.artifacts_dir = v.to_string(),
             "ranks_per_node" => self.net.ranks_per_node = v.parse()?,
@@ -334,6 +347,7 @@ impl RunConfig {
                 BackendKind::Pjrt => "pjrt".to_string(),
             },
         );
+        m.insert("engine", self.engine.name().to_string());
         m
     }
 }
@@ -355,6 +369,18 @@ mod tests {
         assert_eq!(c.strategy, Strategy::Substitute);
         assert_eq!(c.spares(), 3);
         assert!(!c.set("bogus", "1").unwrap());
+    }
+
+    #[test]
+    fn engine_key_parses() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.engine, Engine::Threads);
+        assert!(c.set("engine", "events").unwrap());
+        assert_eq!(c.engine, Engine::Events);
+        assert!(c.set("engine", "threads").unwrap());
+        assert_eq!(c.engine, Engine::Threads);
+        assert!(c.set("engine", "fibers").is_err());
+        assert_eq!(c.summary().get("engine").unwrap(), "threads");
     }
 
     #[test]

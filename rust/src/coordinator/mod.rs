@@ -1,33 +1,41 @@
-//! The leader: builds the simulated machine, launches one thread per world
-//! rank (application ranks + warm spares), runs the solve-with-recovery loop
-//! on each, and aggregates the per-rank timelines into a [`RunReport`].
+//! The leader: builds the simulated machine, runs one rank body per world
+//! rank (application ranks + warm spares) under the configured execution
+//! engine, runs the solve-with-recovery loop on each, and aggregates the
+//! per-rank timelines into a [`RunReport`].
+//!
+//! Rank bodies are engine-agnostic `async fn`s (DESIGN.md §12).  Under
+//! [`Engine::Threads`] each body gets its own OS thread and every blocking
+//! primitive parks on a condvar inside a single [`block_on`] poll — the
+//! original execution model, kept as the differential-testing oracle.
+//! Under [`Engine::Events`] all bodies run as cooperative tasks on one
+//! thread inside [`run_event_loop`], which scales to tens of thousands of
+//! ranks without tens of thousands of stacks.
 //!
 //! This is the L3 entrypoint both the CLI and the benches drive.
 
 use std::sync::Arc;
 use std::thread;
 
-use crate::backend::costs::{ParityShape, RecoveryCostInputs};
 use crate::backend::native::NativeBackend;
 use crate::backend::Backend;
-use crate::checkpoint::{agree_restore_version, effective_stride, CkptStore};
-use crate::ckptstore::{self, LossCheck, Scheme};
+use crate::checkpoint::CkptStore;
 use crate::config::{BackendKind, RunConfig};
 use crate::failure::Injector;
-use crate::metrics::{DecisionRecord, Phase, RankReport, RunReport};
-use crate::recovery::policy::{self, PolicyInputs};
-use crate::recovery::{self, Decision, Strategy};
-use crate::simmpi::{ulfm, Comm, Ctl, Ctx, Msg, MpiError, MpiResult, Payload, World};
+use crate::metrics::{Phase, RankReport, RunReport};
+use crate::recovery::{self, Strategy};
+use crate::simmpi::{
+    block_on, run_event_loop, ulfm, Comm, Ctx, Engine, MpiError, MpiResult, RankTask, World,
+};
 use crate::solver::{FtGmres, Outcome, SolverState};
 
-/// Per-rank thread result.
+/// Per-rank task result.
 struct RankResult {
     report: RankReport,
     outcome: Option<Outcome>,
 }
 
 /// Build the backend for a run.  PJRT backends are created once and shared
-/// by all rank threads (executions are internally serialized).
+/// by all rank bodies (executions are internally serialized).
 pub fn make_backend(cfg: &RunConfig) -> anyhow::Result<Arc<dyn Backend>> {
     Ok(match cfg.backend {
         BackendKind::Native => Arc::new(NativeBackend::new(cfg.compute.clone())),
@@ -72,15 +80,40 @@ pub fn run_custom(
             n_spares
         );
     }
-    let (world, receivers) = World::new(cfg.p, n_spares, cfg.net.clone(), Injector::new(plan));
+    let world =
+        World::new_with_engine(cfg.p, n_spares, cfg.net.clone(), Injector::new(plan), cfg.engine);
 
     let mut cfg = cfg.clone();
     // The no-protection baseline runs without any checkpointing.
     cfg.solver.ckpt_enabled &= cfg.ckpt_enabled();
     let cfg = Arc::new(cfg);
+
+    let results = match cfg.engine {
+        Engine::Threads => run_threads(&world, &cfg, &backend),
+        Engine::Events => run_events(&world, &cfg, &backend),
+    };
+
+    let outcome = results
+        .iter()
+        .filter(|r| !r.report.killed)
+        .find_map(|r| r.outcome.clone());
+    let failures = world.dead_set().len();
+    let (relres, converged) =
+        outcome.as_ref().map(|o| (o.relres, o.converged)).unwrap_or((f64::NAN, false));
+    let reports: Vec<RankReport> = results.into_iter().map(|r| r.report).collect();
+    Ok(RunReport::from_ranks(reports, relres, converged, failures))
+}
+
+/// Thread engine: one OS thread per world rank, each driving its rank body
+/// through [`block_on`] (blocking primitives park on mailbox condvars).
+fn run_threads(
+    world: &Arc<World>,
+    cfg: &Arc<RunConfig>,
+    backend: &Arc<dyn Backend>,
+) -> Vec<RankResult> {
     let mut app_handles = Vec::new();
     let mut spare_handles = Vec::new();
-    for (rank, rx) in receivers.into_iter().enumerate() {
+    for rank in 0..world.size {
         let world = world.clone();
         let tcfg = cfg.clone();
         let backend = backend.clone();
@@ -88,11 +121,11 @@ pub fn run_custom(
             .name(format!("rank-{rank}"))
             .stack_size(2 << 20)
             .spawn(move || {
-                let ctx = Ctx::new(world, rank, rx);
+                let ctx = Ctx::new(world, rank);
                 if rank < tcfg.p {
-                    app_rank(ctx, &tcfg, backend.as_ref())
+                    block_on(app_rank(ctx, &tcfg, backend.as_ref()))
                 } else {
-                    spare_rank(ctx, &tcfg, backend.as_ref())
+                    block_on(spare_rank(ctx, &tcfg, backend.as_ref()))
                 }
             })
             .expect("spawn rank thread");
@@ -108,25 +141,37 @@ pub fn run_custom(
     for h in app_handles {
         results.push(h.join().expect("rank thread panicked"));
     }
-    for s in cfg.p..world.size {
-        world.push(
-            s,
-            Msg { src: 0, epoch: 0, tag: 0, arrival: 0.0, payload: Payload::Ctl(Ctl::Shutdown) },
-        );
-    }
+    world.shutdown_spares();
     for h in spare_handles {
         results.push(h.join().expect("spare thread panicked"));
     }
+    results
+}
 
-    let outcome = results
-        .iter()
-        .filter(|r| !r.report.killed)
-        .find_map(|r| r.outcome.clone());
-    let failures = world.dead_set().len();
-    let (relres, converged) =
-        outcome.as_ref().map(|o| (o.relres, o.converged)).unwrap_or((f64::NAN, false));
-    let reports: Vec<RankReport> = results.into_iter().map(|r| r.report).collect();
-    Ok(RunReport::from_ranks(reports, relres, converged, failures))
+/// Event engine: every rank body becomes a cooperative task on this thread;
+/// [`run_event_loop`] schedules them deterministically and releases idle
+/// spares itself once the last application rank finishes.
+fn run_events(
+    world: &Arc<World>,
+    cfg: &Arc<RunConfig>,
+    backend: &Arc<dyn Backend>,
+) -> Vec<RankResult> {
+    let tasks: Vec<RankTask<'_, RankResult>> = (0..world.size)
+        .map(|rank| {
+            let world = world.clone();
+            let tcfg = cfg.clone();
+            let backend = backend.clone();
+            Box::pin(async move {
+                let ctx = Ctx::new(world, rank);
+                if rank < tcfg.p {
+                    app_rank(ctx, &tcfg, backend.as_ref()).await
+                } else {
+                    spare_rank(ctx, &tcfg, backend.as_ref()).await
+                }
+            }) as RankTask<'_, RankResult>
+        })
+        .collect();
+    run_event_loop(world, tasks)
 }
 
 /// Solve-with-recovery loop shared by application ranks and adopted spares.
@@ -135,10 +180,10 @@ pub fn run_custom(
 /// ([`recovery::handle_failure_fenced`]): nested failures *during* a
 /// recovery abandon the poisoned attempt, pull every survivor back through
 /// the fence, and re-decide on the union failure set.  The per-event
-/// [`DecisionRecord`] is pushed only after the decision actually executed,
-/// so abandoned attempts never pollute the decision log (their cost shows
-/// up as `recovery_retries` instead).
-fn solve_loop(
+/// [`crate::metrics::DecisionRecord`] is pushed only after the decision
+/// actually executed, so abandoned attempts never pollute the decision log
+/// (their cost shows up as `recovery_retries` instead).
+async fn solve_loop(
     ctx: &mut Ctx,
     comm: &mut Comm,
     state: &mut SolverState,
@@ -148,7 +193,7 @@ fn solve_loop(
 ) -> MpiResult<Outcome> {
     let solver = FtGmres::new(&cfg.solver, backend, cfg.compute.clone());
     loop {
-        match solver.solve(ctx, comm, state, store) {
+        match solver.solve(ctx, comm, state, store).await {
             Ok(outcome) => return Ok(outcome),
             Err(MpiError::Killed) => {
                 // Ensure the death is marked + broadcast even when it was
@@ -163,150 +208,23 @@ fn solve_loop(
                 if !ctx.world.is_alive(ctx.rank) {
                     return Err(ctx.die());
                 }
-                let mut pending: Option<DecisionRecord> = None;
-                recovery::handle_failure_fenced(
+                let (_retries, record) = recovery::handle_failure_fenced(
                     ctx,
                     comm,
                     state,
                     store,
                     &cfg.solver.ckpt,
                     &cfg.compute,
-                    |ctx, shrunk, old, st, sto, attempt| {
-                        let (decision, rec) =
-                            choose_recovery(ctx, shrunk, old, st, sto, cfg, attempt)?;
-                        pending = Some(rec);
-                        Ok(decision)
-                    },
-                )?;
-                if let Some(rec) = pending {
+                    recovery::DecideVia::Policy(cfg),
+                )
+                .await?;
+                if let Some(rec) = record {
                     ctx.decisions.push(rec);
                 }
                 ctx.set_phase(Phase::Compute);
             }
         }
     }
-}
-
-/// Evaluate the run's recovery policy for the failure event visible in the
-/// failed communicator `old` and build (but do not yet record) the
-/// [`DecisionRecord`] for this attempt.  Runs after the fenced shrink
-/// produced the pristine survivor communicator `shrunk`, so adaptive
-/// policies may use one leader broadcast over it (the dynamic capacity
-/// horizon).  `attempt` is the epoch-fence attempt number: on a retry the
-/// registry already contains the nested deaths, so the policy re-decides
-/// on the *union* failure set (a spare grant whose joiner died rolls back
-/// here — pool status is re-derived from liveness).
-///
-/// Every survivor calls this independently and must reach the same answer:
-/// the inputs are the liveness registry, the failed communicator's
-/// membership, static configuration, and leader-broadcast values (see the
-/// consistency notes in [`crate::recovery::policy`]).  Unrecoverable
-/// in-memory losses (e.g. two failures in one parity group,
-/// [`crate::ckptstore::assess_loss`]) preempt the policy and escalate to a
-/// global restart — the only remaining sound choice.
-fn choose_recovery(
-    ctx: &mut Ctx,
-    shrunk: &mut Comm,
-    old: &Comm,
-    state: &SolverState,
-    store: &CkptStore,
-    cfg: &RunConfig,
-    attempt: u64,
-) -> MpiResult<(Decision, DecisionRecord)> {
-    let failed: Vec<usize> = old
-        .members
-        .iter()
-        .copied()
-        .filter(|&wr| !ctx.world.is_alive(wr))
-        .collect();
-    let status = cfg.spare_pool().status(&ctx.world, &old.members);
-    let (decision, reason) = if failed.is_empty() {
-        // Spurious wake-up (e.g. a stale revoke): repair the communicator
-        // over the full membership without consuming any spares.
-        (Decision::Shrink, "no failed members visible (stale revoke)".to_string())
-    } else {
-        let world = ctx.world.clone();
-        let alive = move |wr: usize| world.is_alive(wr);
-        let stride = effective_stride(&ctx.world.net.params, old.size());
-        // rs2 recoverability depends on which rotation's holders carry the
-        // restore version's stripes, so agree on that version first (one
-        // allreduce over the survivor communicator — every survivor runs
-        // the identical sequence).  Mirror/xor assessments are
-        // version-free and skip the collective.  The recovery stages that
-        // follow re-run the same agreement rather than threading this
-        // value through their APIs: the repeated allreduce is cheap and
-        // deterministic, and keeps the staged recovery entry points
-        // independently callable.
-        let restore_rot = if matches!(cfg.solver.ckpt.scheme, Scheme::Rs2 { .. }) {
-            cfg.solver.ckpt.rot_index(agree_restore_version(ctx, shrunk, store)?)
-        } else {
-            0
-        };
-        match ckptstore::assess_loss(&cfg.solver.ckpt, &old.members, &alive, stride, restore_rot)
-        {
-            LossCheck::Unrecoverable(why) => (
-                Decision::GlobalRestart,
-                format!("unrecoverable in-memory loss: {why}; escalating to global restart"),
-            ),
-            LossCheck::Recoverable => {
-                let survivors = old.size() - failed.len();
-                // The cost-min capacity horizon tracks actual remaining
-                // work via a leader broadcast over the survivor
-                // communicator — unless the operator pinned a static prior
-                // with `policy_horizon`.  Other policies never pay the
-                // extra broadcast.
-                let cost_min = cfg.policy() == policy::PolicyKind::CostMin;
-                let (horizon, dynamic) = match (cost_min, cfg.policy_horizon) {
-                    (_, Some(prior)) => (prior, false),
-                    (false, None) => (policy::DEFAULT_HORIZON_PRIOR, false),
-                    (true, None) => (
-                        policy::agreed_capacity_horizon(
-                            ctx,
-                            shrunk,
-                            state,
-                            cfg.solver.tol,
-                            policy::DEFAULT_HORIZON_PRIOR,
-                        )?,
-                        true,
-                    ),
-                };
-                let inputs = PolicyInputs {
-                    n_failed: failed.len(),
-                    survivors,
-                    pool: status,
-                    cost: RecoveryCostInputs {
-                        rows_per_rank: (cfg.grid.n() / old.size().max(1)).max(1),
-                        basis_vecs: 2 * cfg.solver.m_outer + 1,
-                        n_failed: failed.len(),
-                        survivors,
-                        buddy_k: cfg.solver.ckpt.scheme.mirror_k(),
-                        horizon_iters: horizon,
-                        m_inner: cfg.solver.m_inner,
-                        parity: ParityShape::from_scheme(&cfg.solver.ckpt.scheme, old.size()),
-                    },
-                    failures_so_far: ctx.world.dead_set().len(),
-                    event_seq: ctx.decisions.len(),
-                };
-                let (d, mut why) = policy::decide(cfg.policy(), &inputs, &cfg.compute, &cfg.net);
-                if cost_min {
-                    let src = if dynamic { "leader-agreed" } else { "pinned prior" };
-                    why.push_str(&format!(" horizon={horizon} ({src})"));
-                }
-                (d, why)
-            }
-        }
-    };
-    let record = DecisionRecord {
-        seq: ctx.decisions.len(),
-        at: ctx.clock,
-        failed_ranks: failed,
-        decision: decision.name(),
-        reason,
-        warm_free: status.warm_free,
-        cold_free: status.cold_free,
-        attempt: attempt as usize,
-    };
-    Ok((decision, record))
 }
 
 fn finish(ctx: Ctx, outcome: Option<Outcome>, killed: bool, was_spare: bool) -> RankResult {
@@ -326,56 +244,102 @@ fn finish(ctx: Ctx, outcome: Option<Outcome>, killed: bool, was_spare: bool) -> 
     }
 }
 
-fn app_rank(mut ctx: Ctx, cfg: &RunConfig, backend: &dyn Backend) -> RankResult {
+/// Setup-then-solve body of an application rank, with failure handling
+/// around setup: a rank dying during initial problem generation or the
+/// establishment commit (reachable via a `ProtoPhase::CkptCommit` kill at
+/// occurrence 1) must not wedge the job.  No committed state exists yet and
+/// setup is deterministic, so survivors simply shrink through the fence and
+/// re-run setup from scratch on the smaller communicator.
+async fn app_body(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    store: &mut CkptStore,
+    cfg: &RunConfig,
+    backend: &dyn Backend,
+) -> MpiResult<Outcome> {
+    let mut state = loop {
+        match SolverState::setup(
+            ctx,
+            comm,
+            store,
+            cfg.grid,
+            &cfg.compute,
+            cfg.solver.m_outer,
+            &cfg.solver.ckpt,
+            cfg.ckpt_enabled(),
+        )
+        .await
+        {
+            Ok(s) => break s,
+            Err(MpiError::Killed) => return Err(MpiError::Killed),
+            Err(_) => {
+                if !ctx.world.is_alive(ctx.rank) {
+                    return Err(ctx.die());
+                }
+                let prev = ctx.set_phase(Phase::Reconfig);
+                ulfm::revoke(ctx, comm);
+                let mut fence = ulfm::EpochFence::new(comm);
+                let shrunk = ulfm::shrink_fenced(ctx, comm, &mut fence).await;
+                ctx.set_phase(prev);
+                *comm = shrunk?;
+                *store = CkptStore::new();
+            }
+        }
+    };
+    solve_loop(ctx, comm, &mut state, store, cfg, backend).await
+}
+
+async fn app_rank(mut ctx: Ctx, cfg: &RunConfig, backend: &dyn Backend) -> RankResult {
     let mut comm = Comm::world(cfg.p, ctx.rank);
     let mut store = CkptStore::new();
-    let result = (|| -> MpiResult<Outcome> {
-        // Setup with failure handling: a rank dying during initial problem
-        // generation or the establishment commit (reachable via a
-        // `ProtoPhase::CkptCommit` kill at occurrence 1) must not wedge the
-        // job.  No committed state exists yet and setup is deterministic,
-        // so survivors simply shrink through the fence and re-run setup
-        // from scratch on the smaller communicator.
-        let mut state = loop {
-            match SolverState::setup(
-                &mut ctx,
-                &mut comm,
-                &mut store,
-                cfg.grid,
-                &cfg.compute,
-                cfg.solver.m_outer,
-                &cfg.solver.ckpt,
-                cfg.ckpt_enabled(),
-            ) {
-                Ok(s) => break s,
-                Err(MpiError::Killed) => return Err(MpiError::Killed),
-                Err(_) => {
-                    if !ctx.world.is_alive(ctx.rank) {
-                        return Err(ctx.die());
-                    }
-                    let prev = ctx.set_phase(Phase::Reconfig);
-                    ulfm::revoke(&mut ctx, &comm);
-                    let mut fence = ulfm::EpochFence::new(&comm);
-                    let shrunk = ulfm::shrink_fenced(&mut ctx, &comm, &mut fence);
-                    ctx.set_phase(prev);
-                    comm = shrunk?;
-                    store = CkptStore::new();
-                }
-            }
-        };
-        solve_loop(&mut ctx, &mut comm, &mut state, &mut store, cfg, backend)
-    })();
-    match result {
+    match app_body(&mut ctx, &mut comm, &mut store, cfg, backend).await {
         Ok(o) => finish(ctx, Some(o), false, false),
         Err(MpiError::Killed) => finish(ctx, None, true, false),
         Err(e) => panic!("rank {}: unrecoverable failure: {e}", ctx.rank),
     }
 }
 
-fn spare_rank(mut ctx: Ctx, cfg: &RunConfig, backend: &dyn Backend) -> RankResult {
+/// Adoption (join + state recovery) for a spare, separated from the post-
+/// adoption solve so the two failure modes keep their distinct semantics:
+/// an interrupted *join* releases the lease and returns to waiting, while
+/// an adopted member that hits an unrecoverable error must fail loudly like
+/// any application rank — silently abandoning an active communicator slot
+/// would leave the survivors waiting on a vote that never comes.
+async fn adopt_spare(
+    ctx: &mut Ctx,
+    cfg: &RunConfig,
+    epoch: u64,
+    members: Vec<usize>,
+    old_members: &[usize],
+    as_rank: usize,
+) -> MpiResult<(Comm, CkptStore, SolverState)> {
+    if cfg.spare_pool().is_cold(ctx.rank) {
+        // A cold slot only starts now: job-launcher spawn, binary load,
+        // runtime init (paper: "spawning processes at runtime has more
+        // overhead").  Charged to reconfiguration.
+        ctx.set_phase(Phase::Reconfig);
+        ctx.advance(cfg.net.cold_spawn_latency);
+    }
+    let mut comm = ulfm::join_as_spare(ctx, epoch, members, as_rank).await?;
+    let mut store = CkptStore::new();
+    let state = recovery::substitute::recover_spare(
+        ctx,
+        &mut comm,
+        old_members,
+        cfg.grid,
+        cfg.solver.m_outer,
+        &mut store,
+        &cfg.solver.ckpt,
+        &cfg.compute,
+    )
+    .await?;
+    Ok((comm, store, state))
+}
+
+async fn spare_rank(mut ctx: Ctx, cfg: &RunConfig, backend: &dyn Backend) -> RankResult {
     loop {
         ctx.set_phase(Phase::Idle);
-        let (epoch, members, old_members, as_rank) = match ctx.wait_join() {
+        let (epoch, members, old_members, as_rank) = match ctx.wait_join().await {
             // Never used: allocated-but-idle (the paper's "non-utilization
             // of resources in the failure-free case").
             None => return finish(ctx, None, false, true),
@@ -386,35 +350,7 @@ fn spare_rank(mut ctx: Ctx, cfg: &RunConfig, backend: &dyn Backend) -> RankResul
         if ctx.is_revoked(epoch) {
             continue;
         }
-        // Adoption (join + state recovery) is separated from the post-
-        // adoption solve so the two failure modes keep their distinct
-        // semantics: an interrupted *join* releases the lease and returns
-        // to waiting, while an adopted member that hits an unrecoverable
-        // error must fail loudly like any application rank — silently
-        // abandoning an active communicator slot would leave the survivors
-        // waiting on a vote that never comes.
-        let adopted = (|| -> MpiResult<(Comm, CkptStore, SolverState)> {
-            if cfg.spare_pool().is_cold(ctx.rank) {
-                // A cold slot only starts now: job-launcher spawn, binary
-                // load, runtime init (paper: "spawning processes at runtime
-                // has more overhead").  Charged to reconfiguration.
-                ctx.set_phase(Phase::Reconfig);
-                ctx.advance(cfg.net.cold_spawn_latency);
-            }
-            let mut comm = ulfm::join_as_spare(&mut ctx, epoch, members, as_rank)?;
-            let mut store = CkptStore::new();
-            let state = recovery::substitute::recover_spare(
-                &mut ctx,
-                &mut comm,
-                &old_members,
-                cfg.grid,
-                cfg.solver.m_outer,
-                &mut store,
-                &cfg.solver.ckpt,
-                &cfg.compute,
-            )?;
-            Ok((comm, store, state))
-        })();
+        let adopted = adopt_spare(&mut ctx, cfg, epoch, members, &old_members, as_rank).await;
         let (mut comm, mut store, mut state) = match adopted {
             Ok(parts) => parts,
             Err(MpiError::Killed) => return finish(ctx, None, true, true),
@@ -429,7 +365,7 @@ fn spare_rank(mut ctx: Ctx, cfg: &RunConfig, backend: &dyn Backend) -> RankResul
             }
         };
         ctx.set_phase(Phase::Compute);
-        return match solve_loop(&mut ctx, &mut comm, &mut state, &mut store, cfg, backend) {
+        return match solve_loop(&mut ctx, &mut comm, &mut state, &mut store, cfg, backend).await {
             Ok(o) => finish(ctx, Some(o), false, true),
             Err(MpiError::Killed) => finish(ctx, None, true, true),
             Err(e) => panic!("spare {}: unrecoverable failure: {e}", ctx.rank),

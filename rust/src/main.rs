@@ -37,6 +37,12 @@
 //! with `ckpt_chunk_kib=N` / `ckpt_rebase_every=N`), and
 //! `--ckpt-compress` the word-level RLE wire compression
 //! (`ckpt_compress=true`).  See DESIGN.md §8–§9.
+//!
+//! `--engine VALUE` selects the rank execution engine (shorthand for
+//! `engine=VALUE`): `threads` (one OS thread per rank, the default and the
+//! differential-testing oracle) or `events` (deterministic single-threaded
+//! event loop; use it for large worlds, e.g. `p=4096` and beyond).  Both
+//! engines produce bit-identical reports — see DESIGN.md §12.
 
 use std::path::{Path, PathBuf};
 
@@ -48,7 +54,8 @@ use ulfm_ftgmres::metrics::RunReport;
 fn usage() -> ! {
     eprintln!(
         "usage: ftgmres <run|report|figure4|figure5|figure6|figures> \
-         [--config FILE] [--policy POLICY] [--ckpt-scheme SCHEME] [--ckpt-delta] \
+         [--config FILE] [--policy POLICY] [--engine threads|events] \
+         [--ckpt-scheme SCHEME] [--ckpt-delta] \
          [--ckpt-compress] [--inject-phase RANK:PHASE[:N][,..]] [--quick] \
          [--out DIR] [key=value ...]"
     );
@@ -87,6 +94,11 @@ fn parse_args() -> anyhow::Result<Args> {
                     cfg.set("policy", &rest[i + 1])?,
                     "policy key rejected"
                 );
+                rest.drain(i..=i + 1);
+            }
+            "--engine" => {
+                anyhow::ensure!(i + 1 < rest.len(), "--engine needs a value");
+                anyhow::ensure!(cfg.set("engine", &rest[i + 1])?, "engine key rejected");
                 rest.drain(i..=i + 1);
             }
             "--ckpt-scheme" => {

@@ -181,9 +181,9 @@ impl PartialEq for EllBlock {
 /// One halo exchange: fill `x_halo[rows..]` with ghost values from the
 /// neighbors.  `x_halo[..rows]` must already hold the owned values.
 ///
-/// All sends are posted before any receive (unbounded channels), matching
+/// All sends are posted before any receive (unbounded mailboxes), matching
 /// the nonblocking-exchange pattern of the reference implementation.
-pub fn exchange_halo(
+pub async fn exchange_halo(
     ctx: &mut Ctx,
     comm: &mut Comm,
     blk: &EllBlock,
@@ -202,7 +202,7 @@ pub fn exchange_halo(
         if nb.recv_count == 0 {
             continue;
         }
-        let blob = comm.recv(ctx, nb.cr, tags::HALO_BASE)?;
+        let blob = comm.recv(ctx, nb.cr, tags::HALO_BASE).await?;
         assert_eq!(blob.f.len(), nb.recv_count, "halo size mismatch from {}", nb.cr);
         let off = blk.rows + nb.recv_start;
         x_halo[off..off + nb.recv_count].copy_from_slice(&blob.f);

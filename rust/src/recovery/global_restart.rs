@@ -88,7 +88,7 @@ impl GlobalCrModel {
 /// re-run by the next fence attempt — and because unrecoverability is
 /// monotone in the dead set, a retry of this event can never flip back to
 /// an in-situ branch that would need the cleared checkpoints.
-pub fn restart_on_survivors(
+pub async fn restart_on_survivors(
     ctx: &mut Ctx,
     new_comm: &mut Comm,
     state: &mut SolverState,
@@ -97,12 +97,12 @@ pub fn restart_on_survivors(
     host: &ComputeModel,
 ) -> MpiResult<()> {
     let prev = ctx.set_phase(Phase::Recovery);
-    let result = restart_inner(ctx, new_comm, state, store, ckpt, host);
+    let result = restart_inner(ctx, new_comm, state, store, ckpt, host).await;
     ctx.set_phase(prev);
     result
 }
 
-fn restart_inner(
+async fn restart_inner(
     ctx: &mut Ctx,
     new_comm: &mut Comm,
     state: &mut SolverState,
@@ -116,7 +116,7 @@ fn restart_inner(
     let (mat, blk, b) = generate_local_problem(ctx, host, state.grid, &part, me);
 
     let mut nsq = [b.iter().map(|v| v * v).sum::<f64>()];
-    new_comm.allreduce_sum(ctx, &mut nsq)?;
+    new_comm.allreduce_sum(ctx, &mut nsq).await?;
     let bnorm = nsq[0].sqrt();
 
     let rows = mat.rows;
@@ -137,7 +137,7 @@ fn restart_inner(
     // Nothing in the old store is trustworthy (that is why we are here);
     // start a fresh redundancy chain at the next version.
     store.clear_all();
-    state.establish_checkpoints(ctx, new_comm, store, next_version, ckpt)?;
+    state.establish_checkpoints(ctx, new_comm, store, next_version, ckpt).await?;
     Ok(())
 }
 

@@ -30,11 +30,14 @@ pub mod policy;
 pub mod shrink;
 pub mod substitute;
 
+use crate::backend::costs::{ParityShape, RecoveryCostInputs};
 use crate::checkpoint::{agree_restore_version, effective_stride, CkptStore};
 use crate::ckptstore::{self, CkptCfg, LossCheck, Scheme};
+use crate::config::RunConfig;
 use crate::failure::ProtoPhase;
-use crate::metrics::Phase;
+use crate::metrics::{DecisionRecord, Phase};
 use crate::netsim::ComputeModel;
+use crate::recovery::policy::PolicyInputs;
 use crate::simmpi::ulfm::EpochFence;
 use crate::simmpi::{ulfm, Comm, Ctx, MpiError, MpiResult};
 use crate::solver::state::SolverState;
@@ -85,7 +88,7 @@ impl Strategy {
 /// original paper configuration, kept as a thin wrapper over
 /// [`handle_failure_with`] (a fixed strategy is just a constant
 /// [`Decision`]).
-pub fn handle_failure(
+pub async fn handle_failure(
     ctx: &mut Ctx,
     comm: &mut Comm,
     state: &mut SolverState,
@@ -107,12 +110,13 @@ pub fn handle_failure(
         ckpt,
         host,
     )
+    .await
 }
 
 /// Survivor-side failure handling for one pre-made per-event [`Decision`]:
 /// the epoch-fenced driver with a constant decision.  Every survivor of the
 /// same event must pass the same decision.
-pub fn handle_failure_with(
+pub async fn handle_failure_with(
     ctx: &mut Ctx,
     comm: &mut Comm,
     state: &mut SolverState,
@@ -121,8 +125,27 @@ pub fn handle_failure_with(
     ckpt: &CkptCfg,
     host: &ComputeModel,
 ) -> MpiResult<()> {
-    handle_failure_fenced(ctx, comm, state, store, ckpt, host, |_, _, _, _, _, _| Ok(decision))
+    handle_failure_fenced(ctx, comm, state, store, ckpt, host, DecideVia::Fixed(decision))
+        .await
         .map(|_| ())
+}
+
+/// How the epoch-fenced driver obtains each attempt's [`Decision`].
+///
+/// An async decide *callback* would have to lend `ctx`, the shrunken
+/// communicator and the solver state mutably across an await point — a
+/// lending closure today's Rust cannot express — so the two concrete
+/// deciders are enumerated instead: a constant decision (the
+/// fixed-strategy wrappers and the protocol tests) or the per-event policy
+/// evaluation over the run configuration (the coordinator's solve loop).
+#[derive(Clone, Copy)]
+pub enum DecideVia<'a> {
+    /// Always this decision; no [`DecisionRecord`] is produced.
+    Fixed(Decision),
+    /// Evaluate the run's recovery policy per attempt; the successful
+    /// attempt's [`DecisionRecord`] is returned for the caller to append
+    /// to the decision log.
+    Policy(&'a RunConfig),
 }
 
 /// Epoch-fenced restartable recovery driver (DESIGN.md §10): turn one
@@ -133,42 +156,31 @@ pub fn handle_failure_with(
 ///
 /// Each *attempt* runs the full pipeline in a fresh epoch window handed out
 /// by the [`EpochFence`]: fenced shrink ([`ulfm::shrink_fenced`]), the
-/// caller's `decide` callback (re-evaluated per attempt — the policy engine
-/// re-decides on the *union* failure set, so a spare grant whose joiner died
-/// rolls back to a different spare or to shrink), then
-/// [`execute_decision`].  Any error other than this rank's own death
-/// abandons the attempt: the driver revokes the attempt's whole epoch
-/// window at every world rank ([`ulfm::revoke_epoch_world`]) so *every*
-/// survivor and mid-join spare blocked in the poisoned protocol returns
-/// `Revoked` and re-enters a fresh agree, rolls the solver state back to
-/// the event-entry snapshot, and retries with the enlarged failure set.
+/// `decide` evaluation (re-run per attempt — the policy engine re-decides
+/// on the *union* failure set, so a spare grant whose joiner died rolls
+/// back to a different spare or to shrink), then [`execute_decision`].  Any
+/// error other than this rank's own death abandons the attempt: the driver
+/// revokes the attempt's whole epoch window at every world rank
+/// ([`ulfm::revoke_epoch_world`]) so *every* survivor and mid-join spare
+/// blocked in the poisoned protocol returns `Revoked` and re-enters a fresh
+/// agree, rolls the solver state back to the event-entry snapshot, and
+/// retries with the enlarged failure set.
 ///
-/// Returns the number of abandoned attempts (0 = clean first try), which
-/// the caller records in the decision log / metrics.
-///
-/// `decide` receives `(ctx, shrunk, old_comm, state, store, attempt)` and
-/// must produce the same decision on every survivor of the attempt (same
-/// consistency contract as [`policy`]).
+/// Returns the number of abandoned attempts (0 = clean first try) plus the
+/// successful attempt's [`DecisionRecord`] (present iff `decide` was
+/// [`DecideVia::Policy`]); abandoned attempts never produce records, their
+/// cost shows up as `recovery_retries`.  Decisions must be identical on
+/// every survivor of an attempt (same consistency contract as [`policy`]).
 #[allow(clippy::too_many_arguments)]
-pub fn handle_failure_fenced<F>(
+pub async fn handle_failure_fenced(
     ctx: &mut Ctx,
     comm: &mut Comm,
     state: &mut SolverState,
     store: &mut CkptStore,
     ckpt: &CkptCfg,
     host: &ComputeModel,
-    mut decide: F,
-) -> MpiResult<u64>
-where
-    F: FnMut(
-        &mut Ctx,
-        &mut Comm,
-        &Comm,
-        &SolverState,
-        &CkptStore,
-        u64,
-    ) -> MpiResult<Decision>,
-{
+    decide: DecideVia<'_>,
+) -> MpiResult<(u64, Option<DecisionRecord>)> {
     // Consecutive abandons without any *new* death in the registry.  A
     // genuine nested failure always grows the shared dead set, and the
     // post-death revoke cascade settles within a couple of fence windows,
@@ -186,9 +198,10 @@ where
         if !ctx.world.is_alive(ctx.rank) {
             return Err(ctx.die());
         }
-        let result = attempt_recovery(ctx, comm, state, store, ckpt, host, &mut fence, &mut decide);
+        let result =
+            attempt_recovery(ctx, comm, state, store, ckpt, host, &mut fence, decide).await;
         match result {
-            Ok(()) => return Ok(fence.retries()),
+            Ok(record) => return Ok((fence.retries(), record)),
             Err(MpiError::Killed) => return Err(MpiError::Killed),
             Err(e) => {
                 let dead_now = ctx.world.dead_set().len();
@@ -219,7 +232,7 @@ where
 
 /// One recovery attempt inside [`handle_failure_fenced`]'s loop.
 #[allow(clippy::too_many_arguments)]
-fn attempt_recovery<F>(
+async fn attempt_recovery(
     ctx: &mut Ctx,
     comm: &mut Comm,
     state: &mut SolverState,
@@ -227,27 +240,149 @@ fn attempt_recovery<F>(
     ckpt: &CkptCfg,
     host: &ComputeModel,
     fence: &mut EpochFence,
-    decide: &mut F,
-) -> MpiResult<()>
-where
-    F: FnMut(
-        &mut Ctx,
-        &mut Comm,
-        &Comm,
-        &SolverState,
-        &CkptStore,
-        u64,
-    ) -> MpiResult<Decision>,
-{
+    decide: DecideVia<'_>,
+) -> MpiResult<Option<DecisionRecord>> {
     ctx.phase_point(ProtoPhase::Detect)?;
     ctx.recompute = false;
     let prev = ctx.set_phase(Phase::Reconfig);
     ulfm::revoke(ctx, comm);
-    let shrunk = ulfm::shrink_fenced(ctx, comm, fence);
+    let shrunk = ulfm::shrink_fenced(ctx, comm, fence).await;
     ctx.set_phase(prev);
     let mut shrunk = shrunk?;
-    let decision = decide(ctx, &mut shrunk, comm, state, store, fence.retries())?;
-    execute_decision(ctx, comm, shrunk, state, store, decision, ckpt, host)
+    let (decision, record) = match decide {
+        DecideVia::Fixed(d) => (d, None),
+        DecideVia::Policy(cfg) => {
+            let (d, rec) =
+                choose_recovery(ctx, &mut shrunk, comm, state, store, cfg, fence.retries())
+                    .await?;
+            (d, Some(rec))
+        }
+    };
+    execute_decision(ctx, comm, shrunk, state, store, decision, ckpt, host).await?;
+    Ok(record)
+}
+
+/// Evaluate the run's recovery policy for the failure event visible in the
+/// failed communicator `old` and build (but do not yet record) the
+/// [`DecisionRecord`] for this attempt.  Runs after the fenced shrink
+/// produced the pristine survivor communicator `shrunk`, so adaptive
+/// policies may use one leader broadcast over it (the dynamic capacity
+/// horizon).  `attempt` is the epoch-fence attempt number: on a retry the
+/// registry already contains the nested deaths, so the policy re-decides
+/// on the *union* failure set (a spare grant whose joiner died rolls back
+/// here — pool status is re-derived from liveness).
+///
+/// Every survivor calls this independently and must reach the same answer:
+/// the inputs are the liveness registry, the failed communicator's
+/// membership, static configuration, and leader-broadcast values (see the
+/// consistency notes in [`policy`]).  Unrecoverable in-memory losses (e.g.
+/// two failures in one parity group, [`crate::ckptstore::assess_loss`])
+/// preempt the policy and escalate to a global restart — the only
+/// remaining sound choice.
+async fn choose_recovery(
+    ctx: &mut Ctx,
+    shrunk: &mut Comm,
+    old: &Comm,
+    state: &SolverState,
+    store: &CkptStore,
+    cfg: &RunConfig,
+    attempt: u64,
+) -> MpiResult<(Decision, DecisionRecord)> {
+    let failed: Vec<usize> = old
+        .members
+        .iter()
+        .copied()
+        .filter(|&wr| !ctx.world.is_alive(wr))
+        .collect();
+    let status = cfg.spare_pool().status(&ctx.world, &old.members);
+    let (decision, reason) = if failed.is_empty() {
+        // Spurious wake-up (e.g. a stale revoke): repair the communicator
+        // over the full membership without consuming any spares.
+        (Decision::Shrink, "no failed members visible (stale revoke)".to_string())
+    } else {
+        let world = ctx.world.clone();
+        let alive = move |wr: usize| world.is_alive(wr);
+        let stride = effective_stride(&ctx.world.net.params, old.size());
+        // rs2 recoverability depends on which rotation's holders carry the
+        // restore version's stripes, so agree on that version first (one
+        // allreduce over the survivor communicator — every survivor runs
+        // the identical sequence).  Mirror/xor assessments are
+        // version-free and skip the collective.  The recovery stages that
+        // follow re-run the same agreement rather than threading this
+        // value through their APIs: the repeated allreduce is cheap and
+        // deterministic, and keeps the staged recovery entry points
+        // independently callable.
+        let restore_rot = if matches!(cfg.solver.ckpt.scheme, Scheme::Rs2 { .. }) {
+            cfg.solver.ckpt.rot_index(agree_restore_version(ctx, shrunk, store).await?)
+        } else {
+            0
+        };
+        match ckptstore::assess_loss(&cfg.solver.ckpt, &old.members, &alive, stride, restore_rot)
+        {
+            LossCheck::Unrecoverable(why) => (
+                Decision::GlobalRestart,
+                format!("unrecoverable in-memory loss: {why}; escalating to global restart"),
+            ),
+            LossCheck::Recoverable => {
+                let survivors = old.size() - failed.len();
+                // The cost-min capacity horizon tracks actual remaining
+                // work via a leader broadcast over the survivor
+                // communicator — unless the operator pinned a static prior
+                // with `policy_horizon`.  Other policies never pay the
+                // extra broadcast.
+                let cost_min = cfg.policy() == policy::PolicyKind::CostMin;
+                let (horizon, dynamic) = match (cost_min, cfg.policy_horizon) {
+                    (_, Some(prior)) => (prior, false),
+                    (false, None) => (policy::DEFAULT_HORIZON_PRIOR, false),
+                    (true, None) => (
+                        policy::agreed_capacity_horizon(
+                            ctx,
+                            shrunk,
+                            state,
+                            cfg.solver.tol,
+                            policy::DEFAULT_HORIZON_PRIOR,
+                        )
+                        .await?,
+                        true,
+                    ),
+                };
+                let inputs = PolicyInputs {
+                    n_failed: failed.len(),
+                    survivors,
+                    pool: status,
+                    cost: RecoveryCostInputs {
+                        rows_per_rank: (cfg.grid.n() / old.size().max(1)).max(1),
+                        basis_vecs: 2 * cfg.solver.m_outer + 1,
+                        n_failed: failed.len(),
+                        survivors,
+                        buddy_k: cfg.solver.ckpt.scheme.mirror_k(),
+                        horizon_iters: horizon,
+                        m_inner: cfg.solver.m_inner,
+                        parity: ParityShape::from_scheme(&cfg.solver.ckpt.scheme, old.size()),
+                    },
+                    failures_so_far: ctx.world.dead_set().len(),
+                    event_seq: ctx.decisions.len(),
+                };
+                let (d, mut why) = policy::decide(cfg.policy(), &inputs, &cfg.compute, &cfg.net);
+                if cost_min {
+                    let src = if dynamic { "leader-agreed" } else { "pinned prior" };
+                    why.push_str(&format!(" horizon={horizon} ({src})"));
+                }
+                (d, why)
+            }
+        }
+    };
+    let record = DecisionRecord {
+        seq: ctx.decisions.len(),
+        at: ctx.clock,
+        failed_ranks: failed,
+        decision: decision.name(),
+        reason,
+        warm_free: status.warm_free,
+        cold_free: status.cold_free,
+        attempt: attempt as usize,
+    };
+    Ok((decision, record))
 }
 
 /// Stage 1 of survivor-side failure handling — the ULFM repair sequence
@@ -256,10 +391,10 @@ where
 /// evaluates its recovery policy between this and [`execute_decision`]
 /// (collectives over the returned communicator, like the leader horizon
 /// broadcast, are allowed there — every survivor runs the same sequence).
-pub fn repair_membership(ctx: &mut Ctx, comm: &Comm) -> MpiResult<Comm> {
+pub async fn repair_membership(ctx: &mut Ctx, comm: &Comm) -> MpiResult<Comm> {
     let prev = ctx.set_phase(Phase::Reconfig);
     ulfm::revoke(ctx, comm);
-    let shrunk = ulfm::shrink(ctx, comm);
+    let shrunk = ulfm::shrink(ctx, comm).await;
     ctx.set_phase(prev);
     shrunk
 }
@@ -270,7 +405,7 @@ pub fn repair_membership(ctx: &mut Ctx, comm: &Comm) -> MpiResult<Comm> {
 /// last committed checkpoint (or at a fresh restart for an
 /// unrecoverable-loss `GlobalRestart`).
 #[allow(clippy::too_many_arguments)]
-pub fn execute_decision(
+pub async fn execute_decision(
     ctx: &mut Ctx,
     comm: &mut Comm,
     shrunk: Comm,
@@ -284,12 +419,12 @@ pub fn execute_decision(
     match decision {
         Decision::Shrink => {
             let mut new_comm = shrunk;
-            shrink::recover(ctx, &old, &mut new_comm, state, store, ckpt, host)?;
+            shrink::recover(ctx, &old, &mut new_comm, state, store, ckpt, host).await?;
             *comm = new_comm;
         }
         Decision::Substitute | Decision::SubstituteCold => {
-            *comm =
-                substitute::recover_survivor(ctx, &old, shrunk, state, store, ckpt, host)?;
+            *comm = substitute::recover_survivor(ctx, &old, shrunk, state, store, ckpt, host)
+                .await?;
         }
         Decision::GlobalRestart => {
             // The §I strawman as the universal fallback: tear the job down
@@ -322,18 +457,19 @@ pub fn execute_decision(
             // depend on the restore version); the agreement is collective
             // over the survivors, who all execute this same branch.
             let restore_rot = if matches!(ckpt.scheme, Scheme::Rs2 { .. }) {
-                ckpt.rot_index(agree_restore_version(ctx, &mut new_comm, store)?)
+                ckpt.rot_index(agree_restore_version(ctx, &mut new_comm, store).await?)
             } else {
                 0
             };
             match ckptstore::assess_loss(ckpt, &old.members, &alive, stride, restore_rot) {
                 LossCheck::Recoverable => {
-                    shrink::recover(ctx, &old, &mut new_comm, state, store, ckpt, host)?;
+                    shrink::recover(ctx, &old, &mut new_comm, state, store, ckpt, host).await?;
                 }
                 LossCheck::Unrecoverable(_) => {
                     global_restart::restart_on_survivors(
                         ctx, &mut new_comm, state, store, ckpt, host,
-                    )?;
+                    )
+                    .await?;
                 }
             }
             *comm = new_comm;

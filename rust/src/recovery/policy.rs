@@ -271,7 +271,7 @@ pub fn estimate_remaining_iters(state: &SolverState, tol: f64, prior: u64) -> u6
 /// from its local progress and broadcasts it; every survivor prices the
 /// decision with the identical agreed value, keeping decisions
 /// deterministic across survivors.
-pub fn agreed_capacity_horizon(
+pub async fn agreed_capacity_horizon(
     ctx: &mut Ctx,
     shrunk: &mut Comm,
     state: &SolverState,
@@ -283,7 +283,7 @@ pub fn agreed_capacity_horizon(
     } else {
         0
     };
-    let out = shrunk.bcast(ctx, Blob::from_i64s(vec![mine]))?;
+    let out = shrunk.bcast(ctx, Blob::from_i64s(vec![mine])).await?;
     Ok(out.i[0] as u64)
 }
 

@@ -70,7 +70,7 @@ fn xfer_tag(id: ObjId, seg_idx: usize) -> u32 {
 /// happened in; `new_comm` the shrunken one.  On return, `state` is rolled
 /// back to the last globally-committed checkpoint, redistributed over the
 /// survivors, and all checkpoints are re-established.
-pub fn recover(
+pub async fn recover(
     ctx: &mut Ctx,
     old_comm: &Comm,
     new_comm: &mut Comm,
@@ -80,12 +80,12 @@ pub fn recover(
     host: &ComputeModel,
 ) -> MpiResult<()> {
     let prev = ctx.set_phase(Phase::Recovery);
-    let result = recover_inner(ctx, old_comm, new_comm, state, store, ckpt, host);
+    let result = recover_inner(ctx, old_comm, new_comm, state, store, ckpt, host).await;
     ctx.set_phase(prev);
     result
 }
 
-fn recover_inner(
+async fn recover_inner(
     ctx: &mut Ctx,
     old_comm: &Comm,
     new_comm: &mut Comm,
@@ -96,7 +96,7 @@ fn recover_inner(
 ) -> MpiResult<()> {
     let me = ctx.rank;
     // 1. Agree on the restore version (newest globally committed).
-    let v = agree_restore_version(ctx, new_comm, store)?;
+    let v = agree_restore_version(ctx, new_comm, store).await?;
 
     // 1b. Recovery reader: materialize the failed ranks' objects on their
     //     designated servers (parity reconstruction under xor; a no-op for
@@ -109,7 +109,8 @@ fn recover_inner(
         &old_comm.members,
         v,
         &REDIST_OBJS,
-    )?;
+    )
+    .await?;
 
     // 2. Roll back iteration + least-squares state from my own checkpoint.
     let iter_blob = store
@@ -175,7 +176,7 @@ fn recover_inner(
             let src_cr = new_comm
                 .rank_of_world(seg.server_wr)
                 .expect("server must be a survivor");
-            let blob = new_comm.recv(ctx, src_cr, xfer_tag(id, seg.idx))?;
+            let blob = new_comm.recv(ctx, src_cr, xfer_tag(id, seg.idx)).await?;
             pieces.push((id, seg.rows.start, blob));
         }
     }
@@ -248,6 +249,6 @@ fn recover_inner(
     //    blocks from them.  The committed-floor GC purges them one commit
     //    after the establishment proves globally visible
     //    ([`CkptStore::gc_committed`]).
-    state.establish_checkpoints(ctx, new_comm, store, v + 1, ckpt)?;
+    state.establish_checkpoints(ctx, new_comm, store, v + 1, ckpt).await?;
     Ok(())
 }

@@ -60,7 +60,7 @@ pub fn assign_spares(
 /// Survivor side.  `shrunk` is the post-shrink communicator; returns the
 /// stitched full-size communicator with `state` restored and all
 /// checkpoints re-established.
-pub fn recover_survivor(
+pub async fn recover_survivor(
     ctx: &mut Ctx,
     old_comm: &Comm,
     mut shrunk: Comm,
@@ -74,26 +74,28 @@ pub fn recover_survivor(
     // in" once pristine communicators exist).
     let v = {
         let prev = ctx.set_phase(Phase::Recovery);
-        let v = agree_restore_version(ctx, &mut shrunk, store)?;
+        let v = agree_restore_version(ctx, &mut shrunk, store).await;
         ctx.set_phase(prev);
-        v
+        v?
     };
     let assignment = assign_spares(ctx, old_comm)?;
     let prev = ctx.set_phase(Phase::Reconfig);
-    let mut stitched = ulfm::stitch_spares(ctx, old_comm, &shrunk, &assignment)?;
+    let stitched = ulfm::stitch_spares(ctx, old_comm, &shrunk, &assignment).await;
     ctx.set_phase(prev);
+    let mut stitched = stitched?;
 
     let prev = ctx.set_phase(Phase::Recovery);
     let result = survivor_state_recovery(
         ctx, old_comm, &mut stitched, &assignment, state, store, v, ckpt, host,
-    );
+    )
+    .await;
     ctx.set_phase(prev);
     result?;
     Ok(stitched)
 }
 
 #[allow(clippy::too_many_arguments)]
-fn survivor_state_recovery(
+async fn survivor_state_recovery(
     ctx: &mut Ctx,
     old_comm: &Comm,
     stitched: &mut Comm,
@@ -132,7 +134,8 @@ fn survivor_state_recovery(
         &old_comm.members,
         v,
         &SPARE_OBJS,
-    )?;
+    )
+    .await?;
 
     // 3. If I am the designated server of a failed rank, send its state to
     //    the spare (the paper's buddy-serves-the-spare transfer).
@@ -176,7 +179,7 @@ fn survivor_state_recovery(
     //    the retry must still be able to serve the dead slots' state.  The
     //    committed-floor GC purges them one commit after the establishment
     //    proves globally visible.
-    state.establish_checkpoints(ctx, stitched, store, v + 1, ckpt)?;
+    state.establish_checkpoints(ctx, stitched, store, v + 1, ckpt).await?;
     Ok(())
 }
 
@@ -185,7 +188,7 @@ fn survivor_state_recovery(
 /// state from the scheme-designated server's copies and joins checkpoint
 /// re-establishment.
 #[allow(clippy::too_many_arguments)]
-pub fn recover_spare(
+pub async fn recover_spare(
     ctx: &mut Ctx,
     comm: &mut Comm,
     old_members: &[WorldRank],
@@ -196,13 +199,14 @@ pub fn recover_spare(
     host: &ComputeModel,
 ) -> MpiResult<SolverState> {
     let prev = ctx.set_phase(Phase::Recovery);
-    let result = recover_spare_inner(ctx, comm, old_members, grid, m_outer, store, ckpt, host);
+    let result =
+        recover_spare_inner(ctx, comm, old_members, grid, m_outer, store, ckpt, host).await;
     ctx.set_phase(prev);
     result
 }
 
 #[allow(clippy::too_many_arguments)]
-fn recover_spare_inner(
+async fn recover_spare_inner(
     ctx: &mut Ctx,
     comm: &mut Comm,
     old_members: &[WorldRank],
@@ -227,16 +231,22 @@ fn recover_spare_inner(
         .scheme
         .server_cr_for(me, n, &alive_cr, effective_stride(&ctx.world.net.params, n))
         .expect("unrecoverable loss must be escalated before substitution");
-    let fetch = |ctx: &mut Ctx, id: u32| -> MpiResult<Blob> {
-        let blob = comm.recv(ctx, server_cr, spare_tag(id))?;
-        Ok(if ckpt.compress { ckptstore::delta::decompress_blob(&blob) } else { blob })
-    };
-    let mat_blob = fetch(ctx, obj::MAT)?;
-    let rhs_blob = fetch(ctx, obj::RHS)?;
-    let x_blob = fetch(ctx, obj::X)?;
-    let basis_blob = fetch(ctx, obj::BASIS)?;
-    let iter_blob = fetch(ctx, obj::ITER)?;
-    let ctl = comm.recv(ctx, server_cr, spare_tag(99))?;
+    async fn fetch(
+        ctx: &mut Ctx,
+        comm: &mut Comm,
+        server_cr: usize,
+        compress: bool,
+        id: u32,
+    ) -> MpiResult<Blob> {
+        let blob = comm.recv(ctx, server_cr, spare_tag(id)).await?;
+        Ok(if compress { ckptstore::delta::decompress_blob(&blob) } else { blob })
+    }
+    let mat_blob = fetch(ctx, comm, server_cr, ckpt.compress, obj::MAT).await?;
+    let rhs_blob = fetch(ctx, comm, server_cr, ckpt.compress, obj::RHS).await?;
+    let x_blob = fetch(ctx, comm, server_cr, ckpt.compress, obj::X).await?;
+    let basis_blob = fetch(ctx, comm, server_cr, ckpt.compress, obj::BASIS).await?;
+    let iter_blob = fetch(ctx, comm, server_cr, ckpt.compress, obj::ITER).await?;
+    let ctl = comm.recv(ctx, server_cr, spare_tag(99)).await?;
     let v = ctl.i[0];
     let hwm = ctl.i[1] as u64;
 
@@ -267,6 +277,6 @@ fn recover_spare_inner(
     ctx.advance(host.cost((state.rows() * K) as f64, (24 * state.rows() * K) as f64));
 
     // Join the collective checkpoint re-establishment at v + 1.
-    state.establish_checkpoints(ctx, comm, store, v + 1, ckpt)?;
+    state.establish_checkpoints(ctx, comm, store, v + 1, ckpt).await?;
     Ok(state)
 }

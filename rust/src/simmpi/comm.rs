@@ -69,13 +69,13 @@ impl Comm {
         ctx.send_raw(self.members[dst], self.epoch, tag, Payload::Data(blob))
     }
 
-    pub fn recv(&self, ctx: &mut Ctx, src: usize, tag: Tag) -> MpiResult<Blob> {
-        Ok(ctx.recv_match(self.members[src], self.epoch, tag)?.data())
+    pub async fn recv(&self, ctx: &mut Ctx, src: usize, tag: Tag) -> MpiResult<Blob> {
+        Ok(ctx.recv_match(self.members[src], self.epoch, tag).await?.data())
     }
 
-    /// Exchange with a peer: send then receive (channels are unbounded, so
+    /// Exchange with a peer: send then receive (mailboxes are unbounded, so
     /// symmetric send-first cannot deadlock).
-    pub fn sendrecv(
+    pub async fn sendrecv(
         &self,
         ctx: &mut Ctx,
         peer: usize,
@@ -83,7 +83,7 @@ impl Comm {
         blob: Blob,
     ) -> MpiResult<Blob> {
         self.send(ctx, peer, tag, blob)?;
-        self.recv(ctx, peer, tag)
+        self.recv(ctx, peer, tag).await
     }
 
     // ------------------------------------------------------------------
@@ -97,41 +97,45 @@ impl Comm {
     }
 
     /// Binomial-tree barrier (gather-to-0 then broadcast).
-    pub fn barrier(&mut self, ctx: &mut Ctx) -> MpiResult<()> {
+    pub async fn barrier(&mut self, ctx: &mut Ctx) -> MpiResult<()> {
         let base = self.next_coll_tags();
-        self.reduce_tree(ctx, base, Blob::empty(), |_, _| Blob::empty())?;
-        self.bcast_tree(ctx, base + 1, Blob::empty())?;
+        self.reduce_tree(ctx, base, Blob::empty(), |_, _| Blob::empty()).await?;
+        self.bcast_tree(ctx, base + 1, Blob::empty()).await?;
         Ok(())
     }
 
     /// Broadcast from comm rank 0.  `blob` is the payload at the root and
     /// ignored elsewhere; every rank returns the broadcast value.
-    pub fn bcast(&mut self, ctx: &mut Ctx, blob: Blob) -> MpiResult<Blob> {
+    pub async fn bcast(&mut self, ctx: &mut Ctx, blob: Blob) -> MpiResult<Blob> {
         let base = self.next_coll_tags();
-        self.bcast_tree(ctx, base, blob)
+        self.bcast_tree(ctx, base, blob).await
     }
 
     /// Allreduce(sum) over an f64 slice, in place.
-    pub fn allreduce_sum(&mut self, ctx: &mut Ctx, data: &mut [f64]) -> MpiResult<()> {
-        let out = self.allreduce_rd(ctx, Blob::from_f64s(data.to_vec()), |mut a, b| {
-            for (x, y) in a.f.iter_mut().zip(&b.f) {
-                *x += *y;
-            }
-            a
-        })?;
+    pub async fn allreduce_sum(&mut self, ctx: &mut Ctx, data: &mut [f64]) -> MpiResult<()> {
+        let out = self
+            .allreduce_rd(ctx, Blob::from_f64s(data.to_vec()), |mut a, b| {
+                for (x, y) in a.f.iter_mut().zip(&b.f) {
+                    *x += *y;
+                }
+                a
+            })
+            .await?;
         data.copy_from_slice(&out.f);
         Ok(())
     }
 
     /// Allreduce(min) over an i64 slice, in place (used to agree on the
     /// newest mutually-committed checkpoint version).
-    pub fn allreduce_min_i64(&mut self, ctx: &mut Ctx, data: &mut [i64]) -> MpiResult<()> {
-        let out = self.allreduce_rd(ctx, Blob::from_i64s(data.to_vec()), |mut a, b| {
-            for (x, y) in a.i.iter_mut().zip(&b.i) {
-                *x = (*x).min(*y);
-            }
-            a
-        })?;
+    pub async fn allreduce_min_i64(&mut self, ctx: &mut Ctx, data: &mut [i64]) -> MpiResult<()> {
+        let out = self
+            .allreduce_rd(ctx, Blob::from_i64s(data.to_vec()), |mut a, b| {
+                for (x, y) in a.i.iter_mut().zip(&b.i) {
+                    *x = (*x).min(*y);
+                }
+                a
+            })
+            .await?;
         data.copy_from_slice(&out.i);
         Ok(())
     }
@@ -145,7 +149,7 @@ impl Comm {
     ///
     /// `combine` must be commutative bit-for-bit (sum/min are), so every
     /// rank converges to an identical result.
-    fn allreduce_rd<F>(&mut self, ctx: &mut Ctx, mine: Blob, combine: F) -> MpiResult<Blob>
+    async fn allreduce_rd<F>(&mut self, ctx: &mut Ctx, mine: Blob, combine: F) -> MpiResult<Blob>
     where
         F: Fn(Blob, Blob) -> Blob,
     {
@@ -164,9 +168,9 @@ impl Comm {
             if me % 2 == 0 {
                 self.send(ctx, me + 1, base, acc)?;
                 // Wait for the final result from the partner (post-phase).
-                return self.recv(ctx, me + 1, base + 15);
+                return self.recv(ctx, me + 1, base + 15).await;
             }
-            let other = self.recv(ctx, me - 1, base)?;
+            let other = self.recv(ctx, me - 1, base).await?;
             acc = combine(acc, other);
             me / 2
         } else {
@@ -185,7 +189,7 @@ impl Comm {
         while dist < pow2 {
             let partner = unmap(active_id ^ dist);
             self.send(ctx, partner, base + 1 + round, acc.clone())?;
-            let other = self.recv(ctx, partner, base + 1 + round)?;
+            let other = self.recv(ctx, partner, base + 1 + round).await?;
             acc = combine(acc, other);
             dist <<= 1;
             round += 1;
@@ -202,7 +206,7 @@ impl Comm {
 
     /// Allgather of one blob per rank; returns blobs indexed by comm rank.
     /// (Gather to 0 + bcast of the concatenation; sizes may differ.)
-    pub fn allgather(&mut self, ctx: &mut Ctx, mine: Blob) -> MpiResult<Vec<Blob>> {
+    pub async fn allgather(&mut self, ctx: &mut Ctx, mine: Blob) -> MpiResult<Vec<Blob>> {
         let base = self.next_coll_tags();
         let n = self.size();
         let me = self.rank;
@@ -213,27 +217,28 @@ impl Comm {
             all = vec![Blob::empty(); n];
             all[0] = mine;
             for src in 1..n {
-                all[src] = self.recv(ctx, src, base + 2)?;
+                all[src] = self.recv(ctx, src, base + 2).await?;
             }
         } else {
             self.send(ctx, 0, base + 2, mine)?;
         }
         // Broadcast concatenation with a size prefix.
         let packed = if me == 0 { pack_blobs(&all) } else { Blob::empty() };
-        let packed = self.bcast_tree(ctx, base + 3, packed)?;
+        let packed = self.bcast_tree(ctx, base + 3, packed).await?;
         Ok(unpack_blobs(&packed))
     }
 
     /// ULFM-style agreement on a u64 (bitwise AND), also functioning as a
     /// fault-aware barrier.  Cost-equivalent to allreduce.
-    pub fn agree(&mut self, ctx: &mut Ctx, flag: u64) -> MpiResult<u64> {
+    pub async fn agree(&mut self, ctx: &mut Ctx, flag: u64) -> MpiResult<u64> {
         let base = self.next_coll_tags();
-        let reduced =
-            self.reduce_tree(ctx, base, Blob::from_i64s(vec![flag as i64]), |mut a, b| {
+        let reduced = self
+            .reduce_tree(ctx, base, Blob::from_i64s(vec![flag as i64]), |mut a, b| {
                 a.i[0] &= b.i[0];
                 a
-            })?;
-        let out = self.bcast_tree(ctx, base + 1, reduced)?;
+            })
+            .await?;
+        let out = self.bcast_tree(ctx, base + 1, reduced).await?;
         Ok(out.i[0] as u64)
     }
 
@@ -243,7 +248,7 @@ impl Comm {
 
     /// Binomial reduce to comm rank 0.  Returns the reduction at rank 0 and
     /// the local contribution elsewhere.
-    fn reduce_tree<F>(
+    async fn reduce_tree<F>(
         &self,
         ctx: &mut Ctx,
         tag: Tag,
@@ -261,7 +266,7 @@ impl Comm {
             if me % (2 * dist) == 0 {
                 let src = me + dist;
                 if src < n {
-                    let other = self.recv(ctx, src, tag)?;
+                    let other = self.recv(ctx, src, tag).await?;
                     acc = combine(acc, other);
                 }
             } else {
@@ -275,7 +280,7 @@ impl Comm {
     }
 
     /// Binomial broadcast from comm rank 0.
-    fn bcast_tree(&self, ctx: &mut Ctx, tag: Tag, mine: Blob) -> MpiResult<Blob> {
+    async fn bcast_tree(&self, ctx: &mut Ctx, tag: Tag, mine: Blob) -> MpiResult<Blob> {
         let n = self.size();
         let me = self.rank;
         // Highest power of two <= n.
@@ -288,7 +293,7 @@ impl Comm {
         } else {
             // Receive from parent: clear lowest set bit.
             let parent = me & (me - 1);
-            self.recv(ctx, parent, tag)?
+            self.recv(ctx, parent, tag).await?
         };
         // Forward to children at me + lowestbit(me)/2, me + lowestbit/4, ...
         // (rank 0 starts at `top`).

@@ -1,8 +1,13 @@
 //! Per-rank execution context: virtual clock, phase accounting, mailbox
 //! matching, and ULFM-style failure surfacing.
+//!
+//! The blocking primitives ([`Ctx::recv_match`], [`Ctx::wait_join`]) are
+//! `async`: under the thread engine they park the OS thread inside a single
+//! poll, under the event engine they suspend the rank's task until the next
+//! mailbox push (DESIGN.md §12).  Everything else — sends, clock advances,
+//! phase accounting — is synchronous and engine-agnostic.
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
-use std::sync::mpsc::{Receiver, TryRecvError};
 use std::sync::Arc;
 
 use crate::failure::ProtoPhase;
@@ -47,7 +52,8 @@ pub struct Ctx {
     /// Entries into each protocol phase, consulted by the phase-triggered
     /// failure injector ([`Ctx::phase_point`]).
     phase_hits: BTreeMap<ProtoPhase, u32>,
-    rx: Receiver<Msg>,
+    /// Reusable scratch for mailbox drains (avoids a per-receive alloc).
+    inbox: Vec<Msg>,
     /// Out-of-order buffer (matched by (epoch, src, tag)).
     pending: VecDeque<Msg>,
     /// Ranks this context has learned are dead.
@@ -64,7 +70,7 @@ pub struct Ctx {
 }
 
 impl Ctx {
-    pub fn new(world: Arc<World>, rank: WorldRank, rx: Receiver<Msg>) -> Self {
+    pub fn new(world: Arc<World>, rank: WorldRank) -> Self {
         Ctx {
             world,
             rank,
@@ -78,7 +84,7 @@ impl Ctx {
             recovery_retries: 0,
             arena: WordArena::default(),
             phase_hits: BTreeMap::new(),
-            rx,
+            inbox: Vec::new(),
             pending: VecDeque::new(),
             known_dead: BTreeSet::new(),
             detected: BTreeSet::new(),
@@ -175,10 +181,8 @@ impl Ctx {
             Payload::Ctl(_) => 16,
         };
         let t = self.world.transit(self.rank, dst, bytes, self.clock);
-        self.world.push(
-            dst,
-            Msg { src: self.rank, epoch, tag, arrival: t.arrival, payload },
-        );
+        self.world
+            .push(dst, Msg { src: self.rank, epoch, tag, arrival: t.arrival, payload });
         self.advance(t.sender_busy);
         Ok(())
     }
@@ -210,7 +214,7 @@ impl Ctx {
     /// message was buffered, or `Revoked` if `epoch` gets revoked while
     /// waiting (this is what unblocks ranks stuck in a collective when a
     /// peer dies elsewhere — the recovery driver revokes the communicator).
-    pub fn recv_match(&mut self, src: WorldRank, epoch: u64, tag: Tag) -> MpiResult<Msg> {
+    pub async fn recv_match(&mut self, src: WorldRank, epoch: u64, tag: Tag) -> MpiResult<Msg> {
         loop {
             // 0. Did a co-scheduled simultaneous kill claim THIS rank?  The
             //    survivors have already excluded it; it must stop
@@ -233,20 +237,8 @@ impl Ctx {
             if self.revoked.contains(&epoch) {
                 return Err(MpiError::Revoked);
             }
-            // 3. Drain without blocking.
-            let mut got_any = false;
-            loop {
-                match self.rx.try_recv() {
-                    Ok(m) => {
-                        got_any = true;
-                        self.absorb(m);
-                    }
-                    Err(TryRecvError::Empty) => break,
-                    Err(TryRecvError::Disconnected) => {
-                        unreachable!("world holds all senders");
-                    }
-                }
-            }
+            // 3. Drain the mailbox without blocking.
+            let (got_any, seen) = self.drain_absorb();
             if got_any {
                 continue;
             }
@@ -255,10 +247,25 @@ impl Ctx {
                 self.note_death(src);
                 return Err(MpiError::ProcFailed(vec![src]));
             }
-            // 5. Block. A Died/Revoke broadcast will wake us if needed.
-            let m = self.rx.recv().expect("world holds all senders");
+            // 5. Park (threads) / pend (events) until the next push; a
+            //    Died/Revoke broadcast will wake us if needed.  The `seen`
+            //    counter from step 3's drain closes the lost-wakeup window.
+            self.world.wait_push(self.rank, seen).await;
+        }
+    }
+
+    /// Drain every queued mailbox message through [`Ctx::absorb`], returning
+    /// whether anything arrived plus the push-counter snapshot to hand to
+    /// [`World::wait_push`] if nothing did.
+    fn drain_absorb(&mut self) -> (bool, u64) {
+        let mut batch = std::mem::take(&mut self.inbox);
+        let seen = self.world.drain_mail(self.rank, &mut batch);
+        let got_any = !batch.is_empty();
+        for m in batch.drain(..) {
             self.absorb(m);
         }
+        self.inbox = batch;
+        (got_any, seen)
     }
 
     /// Classify an incoming message: control messages mutate local knowledge,
@@ -303,10 +310,16 @@ impl Ctx {
     /// Kills co-scheduled at the same instant are marked atomically with
     /// this one so that no survivor can observe a half-dead group (they are
     /// *simultaneous* by definition; the co-scheduled ranks still exit at
-    /// their own tick, with idempotent registry marking).
+    /// their own tick, with idempotent registry marking).  Deaths of
+    /// co-scheduled ranks are broadcast too: under the event engine a
+    /// co-victim's own `die` only runs when its task is next scheduled, so
+    /// survivors must be able to learn the whole group from their mailboxes
+    /// rather than from registry-read timing (see
+    /// `die_broadcasts_co_scheduled_deaths`).
     pub fn die(&mut self) -> MpiError {
-        for co in self.world.injector.co_scheduled(self.rank, u64::MAX) {
-            self.world.mark_dead(co, self.clock);
+        let co = self.world.injector.co_scheduled(self.rank, u64::MAX);
+        for &c in &co {
+            self.world.mark_dead(c, self.clock);
         }
         self.world.mark_dead(self.rank, self.clock);
         // Broadcast to EVERY mailbox, including registry-dead ranks: a
@@ -314,8 +327,14 @@ impl Ctx {
         // be blocked in a receive and needs a wake-up to discover its own
         // death (see `recv_match`).
         for dst in 0..self.world.size {
-            if dst != self.rank {
-                self.send_ctl(dst, Ctl::Died { rank: self.rank, at: self.clock });
+            if dst == self.rank {
+                continue;
+            }
+            self.send_ctl(dst, Ctl::Died { rank: self.rank, at: self.clock });
+            for &c in &co {
+                if dst != c {
+                    self.send_ctl(dst, Ctl::Died { rank: c, at: self.clock });
+                }
             }
         }
         MpiError::Killed
@@ -324,7 +343,7 @@ impl Ctx {
     /// Spare-side: block until a Join invitation (or Shutdown) arrives.
     /// Returns `None` on shutdown, else
     /// `(epoch, members, old members, adopted comm rank)`.
-    pub fn wait_join(&mut self) -> Option<(u64, Vec<WorldRank>, Vec<WorldRank>, usize)> {
+    pub async fn wait_join(&mut self) -> Option<(u64, Vec<WorldRank>, Vec<WorldRank>, usize)> {
         loop {
             if let Some(j) = self.joins.pop_front() {
                 return Some(j);
@@ -332,8 +351,11 @@ impl Ctx {
             if self.shutdown {
                 return None;
             }
-            let m = self.rx.recv().expect("world holds all senders");
-            self.absorb(m);
+            let (got_any, seen) = self.drain_absorb();
+            if got_any {
+                continue;
+            }
+            self.world.wait_push(self.rank, seen).await;
         }
     }
 
@@ -347,24 +369,23 @@ impl Ctx {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::simmpi::Blob;
     use crate::failure::{InjectionPlan, Injector};
     use crate::netsim::NetParams;
+    use crate::simmpi::engine::block_on;
+    use crate::simmpi::Blob;
 
-    fn two_rank_world() -> (Arc<World>, Vec<Receiver<Msg>>) {
+    fn two_rank_world() -> Arc<World> {
         World::new(2, 0, NetParams::default(), Injector::new(InjectionPlan::none()))
     }
 
     #[test]
     fn send_recv_advances_clocks() {
-        let (w, mut rxs) = two_rank_world();
-        let rx1 = rxs.pop().unwrap();
-        let rx0 = rxs.pop().unwrap();
-        let mut c0 = Ctx::new(w.clone(), 0, rx0);
-        let mut c1 = Ctx::new(w, 1, rx1);
+        let w = two_rank_world();
+        let mut c0 = Ctx::new(w.clone(), 0);
+        let mut c1 = Ctx::new(w, 1);
         c0.send_raw(1, 1, 7, Payload::Data(Blob::scalar(42.0))).unwrap();
         assert!(c0.clock > 0.0, "sender charged");
-        let m = c1.recv_match(0, 1, 7).unwrap();
+        let m = block_on(c1.recv_match(0, 1, 7)).unwrap();
         assert_eq!(m.data().f, vec![42.0]);
         assert!(c1.clock >= c0.clock * 0.0, "receiver clock advanced to arrival");
         assert!(c1.clock > 0.0);
@@ -372,24 +393,20 @@ mod tests {
 
     #[test]
     fn recv_out_of_order_by_tag() {
-        let (w, mut rxs) = two_rank_world();
-        let rx1 = rxs.pop().unwrap();
-        let rx0 = rxs.pop().unwrap();
-        let mut c0 = Ctx::new(w.clone(), 0, rx0);
-        let mut c1 = Ctx::new(w, 1, rx1);
+        let w = two_rank_world();
+        let mut c0 = Ctx::new(w.clone(), 0);
+        let mut c1 = Ctx::new(w, 1);
         c0.send_raw(1, 1, 1, Payload::Data(Blob::scalar(1.0))).unwrap();
         c0.send_raw(1, 1, 2, Payload::Data(Blob::scalar(2.0))).unwrap();
         // Receive tag 2 first, then tag 1 (buffered).
-        assert_eq!(c1.recv_match(0, 1, 2).unwrap().data().f, vec![2.0]);
-        assert_eq!(c1.recv_match(0, 1, 1).unwrap().data().f, vec![1.0]);
+        assert_eq!(block_on(c1.recv_match(0, 1, 2)).unwrap().data().f, vec![2.0]);
+        assert_eq!(block_on(c1.recv_match(0, 1, 1)).unwrap().data().f, vec![1.0]);
     }
 
     #[test]
     fn send_to_dead_rank_fails() {
-        let (w, mut rxs) = two_rank_world();
-        let _rx1 = rxs.pop().unwrap();
-        let rx0 = rxs.pop().unwrap();
-        let mut c0 = Ctx::new(w.clone(), 0, rx0);
+        let w = two_rank_world();
+        let mut c0 = Ctx::new(w.clone(), 0);
         w.mark_dead(1, 0.5);
         match c0.send_raw(1, 1, 0, Payload::Data(Blob::empty())) {
             Err(MpiError::ProcFailed(v)) => assert_eq!(v, vec![1]),
@@ -401,18 +418,16 @@ mod tests {
 
     #[test]
     fn recv_from_dead_rank_fails_but_drains_buffered() {
-        let (w, mut rxs) = two_rank_world();
-        let rx1 = rxs.pop().unwrap();
-        let rx0 = rxs.pop().unwrap();
-        let mut c0 = Ctx::new(w.clone(), 0, rx0);
-        let mut c1 = Ctx::new(w.clone(), 1, rx1);
+        let w = two_rank_world();
+        let mut c0 = Ctx::new(w.clone(), 0);
+        let mut c1 = Ctx::new(w.clone(), 1);
         // Rank 0 sends one message, then dies.
         c0.send_raw(1, 1, 9, Payload::Data(Blob::scalar(3.0))).unwrap();
         let _ = c0.die();
         // The pre-death message is still delivered...
-        assert_eq!(c1.recv_match(0, 1, 9).unwrap().data().f, vec![3.0]);
+        assert_eq!(block_on(c1.recv_match(0, 1, 9)).unwrap().data().f, vec![3.0]);
         // ...the next receive errors.
-        match c1.recv_match(0, 1, 10) {
+        match block_on(c1.recv_match(0, 1, 10)) {
             Err(MpiError::ProcFailed(v)) => assert_eq!(v, vec![0]),
             other => panic!("expected ProcFailed, got {other:?}"),
         }
@@ -420,36 +435,57 @@ mod tests {
 
     #[test]
     fn revoke_unblocks_matching_epoch() {
-        let (w, mut rxs) = two_rank_world();
-        let rx1 = rxs.pop().unwrap();
-        let rx0 = rxs.pop().unwrap();
-        let mut c0 = Ctx::new(w.clone(), 0, rx0);
-        let mut c1 = Ctx::new(w, 1, rx1);
+        let w = two_rank_world();
+        let mut c0 = Ctx::new(w.clone(), 0);
+        let mut c1 = Ctx::new(w, 1);
         c0.send_ctl(1, Ctl::Revoke { epoch: 3 });
-        match c1.recv_match(0, 3, 0) {
+        match block_on(c1.recv_match(0, 3, 0)) {
             Err(MpiError::Revoked) => {}
             other => panic!("expected Revoked, got {other:?}"),
         }
         // Other epochs unaffected.
         c0.send_raw(1, 4, 0, Payload::Data(Blob::scalar(8.0))).unwrap();
-        assert_eq!(c1.recv_match(0, 4, 0).unwrap().data().f, vec![8.0]);
+        assert_eq!(block_on(c1.recv_match(0, 4, 0)).unwrap().data().f, vec![8.0]);
     }
 
     #[test]
     fn purge_drops_stale_epochs() {
-        let (w, mut rxs) = two_rank_world();
-        let rx1 = rxs.pop().unwrap();
-        let rx0 = rxs.pop().unwrap();
-        let mut c0 = Ctx::new(w.clone(), 0, rx0);
-        let mut c1 = Ctx::new(w, 1, rx1);
+        let w = two_rank_world();
+        let mut c0 = Ctx::new(w.clone(), 0);
+        let mut c1 = Ctx::new(w, 1);
         c0.send_raw(1, 1, 0, Payload::Data(Blob::scalar(1.0))).unwrap();
         c0.send_raw(1, 2, 0, Payload::Data(Blob::scalar(2.0))).unwrap();
         // Force both into pending.
-        assert_eq!(c1.recv_match(0, 2, 0).unwrap().data().f, vec![2.0]);
+        assert_eq!(block_on(c1.recv_match(0, 2, 0)).unwrap().data().f, vec![2.0]);
         c1.purge_epochs_below(2);
         // Epoch-1 message is gone; epoch-2 message with another tag arrives.
         c0.send_raw(1, 2, 5, Payload::Data(Blob::scalar(5.0))).unwrap();
-        assert_eq!(c1.recv_match(0, 2, 5).unwrap().data().f, vec![5.0]);
+        assert_eq!(block_on(c1.recv_match(0, 2, 5)).unwrap().data().f, vec![5.0]);
         assert!(c1.pending.is_empty());
+    }
+
+    /// Regression (ordering audit, DESIGN.md §12): a whole co-scheduled kill
+    /// group must be learnable from mailbox messages alone.  Under the event
+    /// engine a co-victim's own `die` runs only when its task is next
+    /// scheduled, so the first victim's broadcast has to carry the group.
+    #[test]
+    fn die_broadcasts_co_scheduled_deaths() {
+        let w = World::new(
+            3,
+            0,
+            NetParams::default(),
+            Injector::new(InjectionPlan::burst(&[0, 1], 5)),
+        );
+        let mut c0 = Ctx::new(w.clone(), 0);
+        let mut c2 = Ctx::new(w, 2);
+        let _ = c0.die();
+        // Rank 2 waits on rank 1 (which never ran its own `die`): the
+        // failure must surface from rank 0's broadcast.
+        match block_on(c2.recv_match(1, 1, 0)) {
+            Err(MpiError::ProcFailed(v)) => assert_eq!(v, vec![1]),
+            other => panic!("expected ProcFailed, got {other:?}"),
+        }
+        assert!(c2.known_dead.contains(&0), "own death broadcast absorbed");
+        assert!(c2.known_dead.contains(&1), "co-scheduled death broadcast absorbed");
     }
 }

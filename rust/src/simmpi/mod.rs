@@ -1,21 +1,24 @@
 //! Simulated MPI runtime with ULFM fault-tolerance semantics.
 //!
 //! Substitutes for the paper's Open MPI 1.7.1 + ULFM 1.1 stack (DESIGN.md
-//! §1): ranks are OS threads, links are channels, and every message is
+//! §1): ranks are cooperative tasks (or OS threads under the oracle engine,
+//! see [`engine`]), links are in-world mailboxes, and every message is
 //! priced by the virtual-clock network model in [`crate::netsim`].  The ULFM
 //! surface (`ProcFailed` errors, revoke, shrink, agree) matches what the
 //! paper's recovery strategies are built on.
 
 pub mod comm;
 pub mod ctx;
+pub mod engine;
 pub mod msg;
 pub mod ulfm;
 pub mod world;
 
 pub use comm::Comm;
 pub use ctx::Ctx;
+pub use engine::{block_on, run_event_loop, RankTask};
 pub use msg::{shared, tags, Blob, Ctl, Msg, Payload, SharedVec, Tag, WordArena};
-pub use world::{World, WorldRank};
+pub use world::{Engine, World, WorldRank};
 
 /// ULFM-visible error classes.
 #[derive(Debug, Clone, PartialEq, Eq)]

@@ -151,8 +151,8 @@ pub fn failed(ctx: &Ctx, comm: &Comm) -> Vec<WorldRank> {
 ///
 /// Must be called with the caller's phase set to `Reconfig` so the consensus
 /// cost lands in the right bucket.
-pub fn shrink(ctx: &mut Ctx, comm: &Comm) -> MpiResult<Comm> {
-    shrink_at(ctx, comm, comm.epoch + 1)
+pub async fn shrink(ctx: &mut Ctx, comm: &Comm) -> MpiResult<Comm> {
+    shrink_at(ctx, comm, comm.epoch + 1).await
 }
 
 /// One *validated* shrink round at an explicit target epoch (the epoch-fence
@@ -173,7 +173,7 @@ pub fn shrink(ctx: &mut Ctx, comm: &Comm) -> MpiResult<Comm> {
 ///
 /// The [`ProtoPhase::Agree`] fault point sits between contributing the vote
 /// and the decision broadcast, so campaigns can kill a rank mid-agreement.
-pub fn shrink_at(ctx: &mut Ctx, comm: &Comm, epoch: u64) -> MpiResult<Comm> {
+pub async fn shrink_at(ctx: &mut Ctx, comm: &Comm, epoch: u64) -> MpiResult<Comm> {
     if ctx.is_revoked(epoch) {
         // A peer already poisoned this round (it abandoned it before we
         // even entered); fail fast so the caller advances the fence.
@@ -186,55 +186,7 @@ pub fn shrink_at(ctx: &mut Ctx, comm: &Comm, epoch: u64) -> MpiResult<Comm> {
         .expect("shrink caller must be a survivor");
     let fp = membership_fingerprint(epoch, &members);
     let leader = members[0];
-    let result = (|| -> MpiResult<()> {
-        // Vote round.
-        ctx.advance(AGREEMENT_OVERHEAD);
-        if ctx.rank == leader {
-            for &m in &members {
-                if m == ctx.rank {
-                    continue;
-                }
-                let vote = ctx.recv_match(m, epoch, tags::FENCE_BASE)?;
-                if vote.data().i[0] != fp {
-                    // Divergent snapshot somewhere: abort the round rather
-                    // than broadcast a decision some member cannot honor.
-                    return Err(MpiError::Revoked);
-                }
-            }
-        } else {
-            ctx.send_raw(
-                leader,
-                epoch,
-                tags::FENCE_BASE,
-                Payload::Data(Blob::from_i64s(vec![fp])),
-            )?;
-        }
-        // A member dying between its vote and the decision broadcast must
-        // not leave survivors waiting: the leader's decision send errors on
-        // the registry death (or a survivor's decision recv does), the
-        // failing rank revokes the round, and everyone re-agrees.
-        ctx.phase_point(ProtoPhase::Agree)?;
-        // Decision round.
-        ctx.advance(AGREEMENT_OVERHEAD);
-        if ctx.rank == leader {
-            for &m in &members {
-                if m != ctx.rank {
-                    ctx.send_raw(
-                        m,
-                        epoch,
-                        tags::FENCE_BASE + 1,
-                        Payload::Data(Blob::from_i64s(vec![fp])),
-                    )?;
-                }
-            }
-        } else {
-            let decision = ctx.recv_match(leader, epoch, tags::FENCE_BASE + 1)?;
-            if decision.data().i[0] != fp {
-                return Err(MpiError::Revoked);
-            }
-        }
-        Ok(())
-    })();
+    let result = shrink_round(ctx, epoch, &members, fp, leader).await;
     match result {
         Ok(()) => {
             let new_comm = Comm::new(epoch, members, my_new);
@@ -250,18 +202,71 @@ pub fn shrink_at(ctx: &mut Ctx, comm: &Comm, epoch: u64) -> MpiResult<Comm> {
     }
 }
 
+/// The vote + decision rounds of [`shrink_at`] (split out so the `?`-heavy
+/// protocol body can early-return without committing the round).
+async fn shrink_round(
+    ctx: &mut Ctx,
+    epoch: u64,
+    members: &[WorldRank],
+    fp: i64,
+    leader: WorldRank,
+) -> MpiResult<()> {
+    // Vote round.
+    ctx.advance(AGREEMENT_OVERHEAD);
+    if ctx.rank == leader {
+        for &m in members {
+            if m == ctx.rank {
+                continue;
+            }
+            let vote = ctx.recv_match(m, epoch, tags::FENCE_BASE).await?;
+            if vote.data().i[0] != fp {
+                // Divergent snapshot somewhere: abort the round rather
+                // than broadcast a decision some member cannot honor.
+                return Err(MpiError::Revoked);
+            }
+        }
+    } else {
+        ctx.send_raw(leader, epoch, tags::FENCE_BASE, Payload::Data(Blob::from_i64s(vec![fp])))?;
+    }
+    // A member dying between its vote and the decision broadcast must
+    // not leave survivors waiting: the leader's decision send errors on
+    // the registry death (or a survivor's decision recv does), the
+    // failing rank revokes the round, and everyone re-agrees.
+    ctx.phase_point(ProtoPhase::Agree)?;
+    // Decision round.
+    ctx.advance(AGREEMENT_OVERHEAD);
+    if ctx.rank == leader {
+        for &m in members {
+            if m != ctx.rank {
+                ctx.send_raw(
+                    m,
+                    epoch,
+                    tags::FENCE_BASE + 1,
+                    Payload::Data(Blob::from_i64s(vec![fp])),
+                )?;
+            }
+        }
+    } else {
+        let decision = ctx.recv_match(leader, epoch, tags::FENCE_BASE + 1).await?;
+        if decision.data().i[0] != fp {
+            return Err(MpiError::Revoked);
+        }
+    }
+    Ok(())
+}
+
 /// Fenced shrink: re-run [`shrink_at`] rounds along the fence's epoch
 /// schedule until one round both validates *and* still names only live
 /// members — any death observed during a round bumps the fence (recorded as
 /// a recovery retry), poisons the abandoned epoch machine-wide and sends
 /// every survivor back to a fresh agree.  Only `Killed` (this rank's own
 /// death) escapes.
-pub fn shrink_fenced(ctx: &mut Ctx, comm: &Comm, fence: &mut EpochFence) -> MpiResult<Comm> {
+pub async fn shrink_fenced(ctx: &mut Ctx, comm: &Comm, fence: &mut EpochFence) -> MpiResult<Comm> {
     loop {
         if !ctx.world.is_alive(ctx.rank) {
             return Err(ctx.die());
         }
-        match shrink_at(ctx, comm, fence.shrink_epoch()) {
+        match shrink_at(ctx, comm, fence.shrink_epoch()).await {
             Ok(c) => {
                 // A member may have died after voting but before the
                 // decision landed; adopting a communicator with a dead
@@ -292,7 +297,7 @@ pub fn shrink_fenced(ctx: &mut Ctx, comm: &Comm, fence: &mut EpochFence) -> MpiR
 /// `spare_assignment` maps (failed old comm rank) -> (spare world rank) and
 /// must be identical at every caller (it is derived deterministically from
 /// the registry by the recovery driver).
-pub fn stitch_spares(
+pub async fn stitch_spares(
     ctx: &mut Ctx,
     old_comm: &Comm,
     shrunk: &Comm,
@@ -340,7 +345,7 @@ pub fn stitch_spares(
     // One agreement round over the stitched comm synchronizes everyone
     // (including the spares, which enter via `join_as_spare`).
     ctx.advance(AGREEMENT_OVERHEAD);
-    stitched.agree(ctx, u64::MAX)?;
+    stitched.agree(ctx, u64::MAX).await?;
     Ok(stitched)
 }
 
@@ -354,7 +359,7 @@ pub fn stitch_spares(
 /// the re-decided attempt grants the slot to another spare (or shrinks) —
 /// the dead joiner's lease rolls back because spare availability is always
 /// re-derived from the liveness registry.
-pub fn join_as_spare(
+pub async fn join_as_spare(
     ctx: &mut Ctx,
     epoch: u64,
     members: Vec<WorldRank>,
@@ -364,7 +369,7 @@ pub fn join_as_spare(
     let mut comm = Comm::new(epoch, members, as_rank);
     ctx.purge_epochs_below(epoch);
     ctx.advance(AGREEMENT_OVERHEAD);
-    comm.agree(ctx, u64::MAX)?;
+    comm.agree(ctx, u64::MAX).await?;
     Ok(comm)
 }
 
@@ -377,9 +382,8 @@ mod tests {
 
     #[test]
     fn survivors_and_failed_partition_members() {
-        let (w, mut rxs) = World::new(4, 0, NetParams::default(), Injector::new(InjectionPlan::none()));
-        let rx0 = rxs.remove(0);
-        let ctx = Ctx::new(w.clone(), 0, rx0);
+        let w = World::new(4, 0, NetParams::default(), Injector::new(InjectionPlan::none()));
+        let ctx = Ctx::new(w.clone(), 0);
         let comm = Comm::world(4, 0);
         w.mark_dead(2, 1.0);
         assert_eq!(survivors(&ctx, &comm), vec![0, 1, 3]);

@@ -1,22 +1,86 @@
 //! The simulated machine: one mailbox per rank, a liveness registry, the
-//! network model, and the failure injector.
+//! network model, the failure injector, and the execution-engine selector.
+//!
+//! Mailboxes live inside the `World` (not in per-rank `Receiver`s) so that
+//! the same rank bodies can run under either engine (DESIGN.md §12):
+//!
+//! * [`Engine::Threads`] — one OS thread per rank; a rank with nothing to
+//!   receive parks on its mailbox condvar and is woken by the next push.
+//! * [`Engine::Events`] — one cooperative task per rank on a single thread;
+//!   a rank with nothing to receive returns `Pending` and the push marks it
+//!   ready in the deterministic FIFO ready-queue drained by the event loop.
+//!
+//! Every mailbox keeps a monotone push counter: blocking primitives snapshot
+//! the counter while draining and only park/pend if it has not moved since,
+//! which closes the lost-wakeup window in both engines.
 
+use std::collections::VecDeque;
+use std::future::Future;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
+use std::task::Poll;
 
 use crate::failure::Injector;
 use crate::netsim::{NetParams, Network, NodeId};
-use crate::simmpi::msg::Msg;
+use crate::simmpi::msg::{Ctl, Msg, Payload};
 
 pub type WorldRank = usize;
+
+/// Execution engine for rank bodies (see `--engine` / DESIGN.md §12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Engine {
+    /// One OS thread per rank (the differential-testing oracle).
+    #[default]
+    Threads,
+    /// Deterministic single-threaded event loop (scales to 10k+ ranks).
+    Events,
+}
+
+impl Engine {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "threads" => Some(Engine::Threads),
+            "events" => Some(Engine::Events),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Engine::Threads => "threads",
+            Engine::Events => "events",
+        }
+    }
+}
+
+/// Per-rank mailbox: message queue plus a monotone push counter.  The
+/// counter lets receivers distinguish "no new pushes since my last drain"
+/// from "pushed while I was deciding to block".
+struct MailboxInner {
+    msgs: VecDeque<Msg>,
+    pushes: u64,
+}
+
+struct Mailbox {
+    inner: Mutex<MailboxInner>,
+    cv: Condvar,
+}
+
+/// Deterministic FIFO of ranks with undrained pushes (event engine only).
+/// `enqueued` dedupes so a rank appears at most once.
+struct ReadySet {
+    queue: VecDeque<WorldRank>,
+    enqueued: Vec<bool>,
+}
 
 /// Shared, thread-safe state of the simulated machine.
 pub struct World {
     pub size: usize,
     /// Application ranks; world ranks >= n_app are warm spares.
     pub n_app: usize,
-    senders: Vec<Sender<Msg>>,
+    pub engine: Engine,
+    mailboxes: Vec<Mailbox>,
+    ready: Mutex<ReadySet>,
     alive: Vec<AtomicBool>,
     death_time: Vec<Mutex<Option<f64>>>,
     /// Physical node of each world rank.  Application ranks are packed
@@ -29,21 +93,26 @@ pub struct World {
 
 impl World {
     /// Build a world with `n_app` application ranks plus `n_spares` warm
-    /// spares, returning per-rank receivers to hand to the rank threads.
-    pub fn new(
+    /// spares under the default (thread) engine.
+    pub fn new(n_app: usize, n_spares: usize, params: NetParams, injector: Injector) -> Arc<World> {
+        World::new_with_engine(n_app, n_spares, params, injector, Engine::Threads)
+    }
+
+    /// Build a world for a specific execution engine.
+    pub fn new_with_engine(
         n_app: usize,
         n_spares: usize,
         params: NetParams,
         injector: Injector,
-    ) -> (Arc<World>, Vec<Receiver<Msg>>) {
+        engine: Engine,
+    ) -> Arc<World> {
         let size = n_app + n_spares;
-        let mut senders = Vec::with_capacity(size);
-        let mut receivers = Vec::with_capacity(size);
-        for _ in 0..size {
-            let (tx, rx) = channel();
-            senders.push(tx);
-            receivers.push(rx);
-        }
+        let mailboxes = (0..size)
+            .map(|_| Mailbox {
+                inner: Mutex::new(MailboxInner { msgs: VecDeque::new(), pushes: 0 }),
+                cv: Condvar::new(),
+            })
+            .collect();
         let rpn = params.ranks_per_node;
         let app_nodes = n_app.div_ceil(rpn);
         let mut node_map: Vec<NodeId> = (0..n_app).map(|r| r / rpn).collect();
@@ -52,17 +121,18 @@ impl World {
         node_map.extend((0..n_spares).map(|s| app_nodes + s));
         // Network sized by node count: create with enough "world" for both.
         let net = Network::new(params, (app_nodes + n_spares.max(1)) * rpn);
-        let world = World {
+        Arc::new(World {
             size,
             n_app,
-            senders,
+            engine,
+            mailboxes,
+            ready: Mutex::new(ReadySet { queue: VecDeque::new(), enqueued: vec![false; size] }),
             alive: (0..size).map(|_| AtomicBool::new(true)).collect(),
             death_time: (0..size).map(|_| Mutex::new(None)).collect(),
             node_map,
             net,
             injector,
-        };
-        (Arc::new(world), receivers)
+        })
     }
 
     pub fn node_of(&self, r: WorldRank) -> NodeId {
@@ -99,15 +169,106 @@ impl World {
     }
 
     /// Raw mailbox push; does NOT check liveness (callers in `Ctx` do).
+    /// Messages to dead ranks just accumulate unread, which is equivalent
+    /// to the network dropping them.
     pub(crate) fn push(&self, dst: WorldRank, msg: Msg) {
-        // Receiver can only be dropped after its rank died; losing the
-        // message is then equivalent to the network dropping it.
-        let _ = self.senders[dst].send(msg);
+        {
+            let mut inner = self.mailboxes[dst].inner.lock().unwrap();
+            inner.msgs.push_back(msg);
+            inner.pushes += 1;
+        }
+        self.mailboxes[dst].cv.notify_all();
+        if self.engine == Engine::Events {
+            self.mark_ready(dst);
+        }
+    }
+
+    /// Release every idle spare with a `Shutdown` control message (sent by
+    /// the coordinator / event loop once the last application rank is done).
+    pub(crate) fn shutdown_spares(&self) {
+        for s in self.n_app..self.size {
+            self.push(
+                s,
+                Msg {
+                    src: 0,
+                    epoch: 0,
+                    tag: 0,
+                    arrival: 0.0,
+                    payload: Payload::Ctl(Ctl::Shutdown),
+                },
+            );
+        }
+    }
+
+    /// Drain all queued messages for `rank` into `into` (appending), and
+    /// return the mailbox's push-counter snapshot taken under the same lock.
+    pub(crate) fn drain_mail(&self, rank: WorldRank, into: &mut Vec<Msg>) -> u64 {
+        let mut inner = self.mailboxes[rank].inner.lock().unwrap();
+        into.extend(inner.msgs.drain(..));
+        inner.pushes
+    }
+
+    /// Resolve once `rank`'s mailbox push counter exceeds `seen` (the value
+    /// returned by the [`World::drain_mail`] that found nothing useful).
+    ///
+    /// Threads engine: parks on the mailbox condvar inside `poll` and always
+    /// returns `Ready` (a thread has nothing better to do than block).
+    /// Events engine: returns `Pending`; the next push to `rank` marks it
+    /// ready and the event loop re-polls the task.
+    pub(crate) fn wait_push(&self, rank: WorldRank, seen: u64) -> impl Future<Output = ()> + '_ {
+        std::future::poll_fn(move |_cx| {
+            let mb = &self.mailboxes[rank];
+            match self.engine {
+                Engine::Threads => {
+                    let mut inner = mb.inner.lock().unwrap();
+                    while inner.pushes == seen {
+                        inner = mb.cv.wait(inner).unwrap();
+                    }
+                    Poll::Ready(())
+                }
+                Engine::Events => {
+                    let inner = mb.inner.lock().unwrap();
+                    if inner.pushes > seen {
+                        Poll::Ready(())
+                    } else {
+                        Poll::Pending
+                    }
+                }
+            }
+        })
+    }
+
+    /// Mark `rank` runnable in the event loop's FIFO (idempotent).
+    pub(crate) fn mark_ready(&self, rank: WorldRank) {
+        let mut rs = self.ready.lock().unwrap();
+        if !rs.enqueued[rank] {
+            rs.enqueued[rank] = true;
+            rs.queue.push_back(rank);
+        }
+    }
+
+    /// Pop the next runnable rank (event engine), clearing its dedupe flag.
+    pub(crate) fn pop_ready(&self) -> Option<WorldRank> {
+        let mut rs = self.ready.lock().unwrap();
+        let r = rs.queue.pop_front()?;
+        rs.enqueued[r] = false;
+        Some(r)
+    }
+
+    /// Queued-message count for `rank` (deadlock diagnostics).
+    pub(crate) fn mail_len(&self, rank: WorldRank) -> usize {
+        self.mailboxes[rank].inner.lock().unwrap().msgs.len()
     }
 
     /// Transit through the network model using the world's node mapping
     /// (application ranks packed, spares on trailing nodes).
-    pub fn transit(&self, src: WorldRank, dst: WorldRank, bytes: usize, depart: f64) -> crate::netsim::Transit {
+    pub fn transit(
+        &self,
+        src: WorldRank,
+        dst: WorldRank,
+        bytes: usize,
+        depart: f64,
+    ) -> crate::netsim::Transit {
         self.net.transit_nodes(self.node_map[src], self.node_map[dst], bytes, depart)
     }
 }
@@ -116,8 +277,9 @@ impl World {
 mod tests {
     use super::*;
     use crate::failure::InjectionPlan;
+    use crate::simmpi::msg::{Ctl, Payload};
 
-    fn world(n_app: usize, n_spares: usize) -> (Arc<World>, Vec<Receiver<Msg>>) {
+    fn world(n_app: usize, n_spares: usize) -> Arc<World> {
         World::new(
             n_app,
             n_spares,
@@ -128,7 +290,7 @@ mod tests {
 
     #[test]
     fn spares_live_on_fresh_nodes() {
-        let (w, _rx) = world(10, 3);
+        let w = world(10, 3);
         // 10 app ranks on nodes 0..=2 (4 per node), spares on nodes 3,4,5.
         assert_eq!(w.node_of(0), 0);
         assert_eq!(w.node_of(9), 2);
@@ -144,7 +306,7 @@ mod tests {
 
     #[test]
     fn liveness_registry() {
-        let (w, _rx) = world(4, 0);
+        let w = world(4, 0);
         assert!(w.is_alive(2));
         assert!(w.dead_set().is_empty());
         w.mark_dead(2, 1.5);
@@ -155,10 +317,50 @@ mod tests {
 
     #[test]
     fn inter_node_transit_slower_than_intra() {
-        let (w, _rx) = world(10, 2);
+        let w = world(10, 2);
         let intra = w.transit(0, 1, 1 << 20, 0.0);
         w.net.reset();
         let inter = w.transit(0, 10, 1 << 20, 0.0); // app -> spare node
         assert!(inter.arrival > intra.arrival);
+    }
+
+    fn ctl_msg(src: WorldRank) -> Msg {
+        Msg { src, epoch: 0, tag: 0, arrival: 0.0, payload: Payload::Ctl(Ctl::Shutdown) }
+    }
+
+    #[test]
+    fn push_counter_closes_lost_wakeup_window() {
+        let w = world(2, 0);
+        let mut batch = Vec::new();
+        let seen = w.drain_mail(1, &mut batch);
+        assert!(batch.is_empty());
+        // A push lands *after* the drain snapshot but *before* the wait.
+        w.push(1, ctl_msg(0));
+        // Threads engine: wait_push must return immediately (counter moved),
+        // not park forever on the condvar.
+        crate::simmpi::engine::block_on(w.wait_push(1, seen));
+        let seen2 = w.drain_mail(1, &mut batch);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(seen2, seen + 1);
+    }
+
+    #[test]
+    fn event_engine_marks_pushed_ranks_ready_once() {
+        let w = World::new_with_engine(
+            3,
+            0,
+            NetParams::default(),
+            Injector::new(InjectionPlan::none()),
+            Engine::Events,
+        );
+        w.push(2, ctl_msg(0));
+        w.push(2, ctl_msg(1)); // deduped
+        w.push(0, ctl_msg(1));
+        assert_eq!(w.pop_ready(), Some(2));
+        assert_eq!(w.pop_ready(), Some(0));
+        assert_eq!(w.pop_ready(), None);
+        // After popping, a fresh push re-enqueues.
+        w.push(2, ctl_msg(0));
+        assert_eq!(w.pop_ready(), Some(2));
     }
 }

@@ -96,7 +96,7 @@ impl<'a> FtGmres<'a> {
     /// Run (or resume, after recovery) the solve.  On process failure the
     /// error propagates out with `state`/`store` in a recoverable condition:
     /// the last committed checkpoint plus consistent scalars.
-    pub fn solve(
+    pub async fn solve(
         &self,
         ctx: &mut Ctx,
         comm: &mut Comm,
@@ -124,12 +124,21 @@ impl<'a> FtGmres<'a> {
                 }
                 None => {
                     // Fresh cycle: r0 = b - A x0.
-                    matvec(ctx, comm, self.backend, &state.blk, &state.x, &mut resid, &mut ws.scratch)?;
+                    matvec(
+                        ctx,
+                        comm,
+                        self.backend,
+                        &state.blk,
+                        &state.x,
+                        &mut resid,
+                        &mut ws.scratch,
+                    )
+                    .await?;
                     for i in 0..r {
                         resid[i] = state.b[i] - resid[i];
                     }
                     charge_host(ctx, &self.host, r as f64, 24.0 * r as f64);
-                    let beta = norm2_sq(ctx, comm, &self.host, &resid)?.sqrt();
+                    let beta = norm2_sq(ctx, comm, &self.host, &resid).await?.sqrt();
                     if beta / state.scalars.bnorm < cfg.tol {
                         return Ok(Outcome {
                             converged: true,
@@ -150,16 +159,18 @@ impl<'a> FtGmres<'a> {
             for j in j_start..cfg.m_outer {
                 // Inner solve: z_j ~= A^{-1} v_j  (m_inner iterations).
                 let vj = state.v_out.row(j).to_vec();
-                let zj = self.inner_solve(ctx, comm, state, &mut ws, &vj)?;
+                let zj = self.inner_solve(ctx, comm, state, &mut ws, &vj).await?;
                 state.z_out.row_mut(j).copy_from_slice(&zj);
 
                 // w = A z_j.
                 let mut w = vec![0.0; r];
-                matvec(ctx, comm, self.backend, &state.blk, &zj, &mut w, &mut ws.scratch)?;
+                matvec(ctx, comm, self.backend, &state.blk, &zj, &mut w, &mut ws.scratch)
+                    .await?;
 
                 // Orthogonalize against V[0..=j].
-                let hnext =
-                    self.orthogonalize(ctx, comm, &state.v_out, j + 1, &mut w, &mut ws.h)?;
+                let hnext = self
+                    .orthogonalize(ctx, comm, &state.v_out, j + 1, &mut w, &mut ws.h)
+                    .await?;
 
                 let mut col = ws.h[..j + 1].to_vec();
                 col.push(hnext);
@@ -196,25 +207,26 @@ impl<'a> FtGmres<'a> {
 
                 state.cycle = Some(CycleCtl { j_done: j, ls: ls.clone() });
                 if cfg.ckpt_enabled {
-                    state.checkpoint_dynamic(ctx, comm, store, &cfg.ckpt)?;
+                    state.checkpoint_dynamic(ctx, comm, store, &cfg.ckpt).await?;
                 }
             }
             let _ = done; // true residual verified at the next loop top
         }
 
         // Out of cycles: report the true residual.
-        matvec(ctx, comm, self.backend, &state.blk, &state.x, &mut resid, &mut ws.scratch)?;
+        matvec(ctx, comm, self.backend, &state.blk, &state.x, &mut resid, &mut ws.scratch)
+            .await?;
         for i in 0..r {
             resid[i] = state.b[i] - resid[i];
         }
-        let beta = norm2_sq(ctx, comm, &self.host, &resid)?.sqrt();
+        let beta = norm2_sq(ctx, comm, &self.host, &resid).await?.sqrt();
         let relres = beta / state.scalars.bnorm;
         Ok(Outcome { converged: relres < cfg.tol, relres, cycles: cfg.max_cycles })
     }
 
     /// One inner solve: z ~= A^{-1} rhs via `m_inner` unrestarted GMRES
     /// iterations with zero initial guess.  Returns z.
-    fn inner_solve(
+    async fn inner_solve(
         &self,
         ctx: &mut Ctx,
         comm: &mut Comm,
@@ -224,7 +236,7 @@ impl<'a> FtGmres<'a> {
     ) -> MpiResult<Vec<f64>> {
         let cfg = self.cfg;
         let r = state.rows();
-        let beta = norm2_sq(ctx, comm, &self.host, rhs)?.sqrt();
+        let beta = norm2_sq(ctx, comm, &self.host, rhs).await?.sqrt();
         let mut z = vec![0.0; r];
         if beta == 0.0 {
             return Ok(z);
@@ -243,8 +255,10 @@ impl<'a> FtGmres<'a> {
 
             let vi = ws.v_in.row(i).to_vec();
             let mut w = vec![0.0; r];
-            matvec(ctx, comm, self.backend, &state.blk, &vi, &mut w, &mut ws.scratch)?;
-            let hnext = self.orthogonalize(ctx, comm, &ws.v_in, i + 1, &mut w, &mut ws.h)?;
+            matvec(ctx, comm, self.backend, &state.blk, &vi, &mut w, &mut ws.scratch).await?;
+            let hnext = self
+                .orthogonalize(ctx, comm, &ws.v_in, i + 1, &mut w, &mut ws.h)
+                .await?;
 
             let mut col = ws.h[..i + 1].to_vec();
             col.push(hnext);
@@ -280,7 +294,7 @@ impl<'a> FtGmres<'a> {
     /// CGS(2) orthogonalization of `w` against `v[0..m_used]`.
     /// On return `h_out[0..m_used]` holds the (accumulated) projection
     /// coefficients and the result is the *global* norm of the new w.
-    fn orthogonalize(
+    async fn orthogonalize(
         &self,
         ctx: &mut Ctx,
         comm: &mut Comm,
@@ -298,7 +312,7 @@ impl<'a> FtGmres<'a> {
             let secs = self.backend.dot_partials(v, m_used, w, &mut h);
             ctx.advance(secs);
             ctx.set_phase(prev);
-            allreduce(ctx, comm, &mut h[..m_used])?;
+            allreduce(ctx, comm, &mut h[..m_used]).await?;
             let prev = ctx.set_phase(Phase::Compute);
             let (nsq, secs) = self.backend.update_w(v, m_used, w, &h);
             ctx.advance(secs);
@@ -309,7 +323,7 @@ impl<'a> FtGmres<'a> {
             }
         }
         let mut buf = [nsq_local];
-        allreduce(ctx, comm, &mut buf)?;
+        allreduce(ctx, comm, &mut buf).await?;
         h_out[..m_used].copy_from_slice(&h_acc);
         Ok(buf[0].sqrt())
     }

@@ -22,7 +22,7 @@ impl Scratch {
 }
 
 /// y = A_local x  (halo exchange + local SpMV).
-pub fn matvec(
+pub async fn matvec(
     ctx: &mut Ctx,
     comm: &mut Comm,
     backend: &dyn Backend,
@@ -34,7 +34,7 @@ pub fn matvec(
     scratch.ensure(blk.x_halo_len());
     scratch.x_halo[..blk.rows].copy_from_slice(&x[..blk.rows]);
     let prev = ctx.set_phase(Phase::Comm);
-    let res = exchange_halo(ctx, comm, blk, &mut scratch.x_halo);
+    let res = exchange_halo(ctx, comm, blk, &mut scratch.x_halo).await;
     ctx.set_phase(prev);
     res?;
     let prev = ctx.set_phase(Phase::Compute);
@@ -45,22 +45,27 @@ pub fn matvec(
 }
 
 /// Global squared 2-norm of a distributed vector.
-pub fn norm2_sq(ctx: &mut Ctx, comm: &mut Comm, host: &ComputeModel, v: &[f64]) -> MpiResult<f64> {
+pub async fn norm2_sq(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    host: &ComputeModel,
+    v: &[f64],
+) -> MpiResult<f64> {
     let prev = ctx.set_phase(Phase::Compute);
     let local: f64 = v.iter().map(|x| x * x).sum();
     ctx.advance(host.cost(2.0 * v.len() as f64, 8.0 * v.len() as f64));
     ctx.set_phase(Phase::Comm);
     let mut buf = [local];
-    let res = comm.allreduce_sum(ctx, &mut buf);
+    let res = comm.allreduce_sum(ctx, &mut buf).await;
     ctx.set_phase(prev);
     res?;
     Ok(buf[0])
 }
 
 /// Allreduce a small coefficient slice (phase = Comm).
-pub fn allreduce(ctx: &mut Ctx, comm: &mut Comm, data: &mut [f64]) -> MpiResult<()> {
+pub async fn allreduce(ctx: &mut Ctx, comm: &mut Comm, data: &mut [f64]) -> MpiResult<()> {
     let prev = ctx.set_phase(Phase::Comm);
-    let res = comm.allreduce_sum(ctx, data);
+    let res = comm.allreduce_sum(ctx, data).await;
     ctx.set_phase(prev);
     res
 }

@@ -170,7 +170,7 @@ impl SolverState {
     /// analytic RHS, agree on ||b||, and seed the checkpoint store with the
     /// static objects and the initial dynamic state (version 0).
     #[allow(clippy::too_many_arguments)]
-    pub fn setup(
+    pub async fn setup(
         ctx: &mut Ctx,
         comm: &mut Comm,
         store: &mut CkptStore,
@@ -186,7 +186,7 @@ impl SolverState {
 
         let prev = ctx.set_phase(Phase::Comm);
         let mut nsq = [b.iter().map(|v| v * v).sum::<f64>()];
-        comm.allreduce_sum(ctx, &mut nsq)?;
+        comm.allreduce_sum(ctx, &mut nsq).await?;
         ctx.set_phase(prev);
         let bnorm = nsq[0].sqrt();
 
@@ -206,7 +206,7 @@ impl SolverState {
         };
         // Initial full checkpoint (static + dynamic) at version 0.
         if ckpt_enabled {
-            state.establish_checkpoints(ctx, comm, store, 0, ckpt)?;
+            state.establish_checkpoints(ctx, comm, store, 0, ckpt).await?;
         }
         Ok(state)
     }
@@ -311,7 +311,7 @@ impl SolverState {
     /// and for post-recovery re-establishment (the paper's "update all the
     /// in-memory checkpoints") — always a *fresh* full commit, because
     /// membership or layout just changed.
-    pub fn establish_checkpoints(
+    pub async fn establish_checkpoints(
         &mut self,
         ctx: &mut Ctx,
         comm: &mut Comm,
@@ -327,7 +327,7 @@ impl SolverState {
             (obj::BASIS, self.basis_blob().scaled(ds)),
             (obj::ITER, self.iter_blob()),
         ];
-        crate::ckptstore::commit(ctx, comm, store, &objs, version, ckpt, true)?;
+        crate::ckptstore::commit(ctx, comm, store, &objs, version, ckpt, true).await?;
         self.scalars.next_version = version + 1;
         Ok(())
     }
@@ -341,7 +341,7 @@ impl SolverState {
     /// objects: the incoming holder pair starts with no stripes, so the
     /// matrix and rhs stripes must move along with the rotation for the
     /// whole restorable state to live on one holder pair.
-    pub fn checkpoint_dynamic(
+    pub async fn checkpoint_dynamic(
         &mut self,
         ctx: &mut Ctx,
         comm: &mut Comm,
@@ -358,7 +358,7 @@ impl SolverState {
         objs.push((obj::X, Blob::from_f64s(self.x.clone()).scaled(ds)));
         objs.push((obj::BASIS, self.basis_blob().scaled(ds)));
         objs.push((obj::ITER, self.iter_blob()));
-        crate::ckptstore::commit(ctx, comm, store, &objs, version, ckpt, false)?;
+        crate::ckptstore::commit(ctx, comm, store, &objs, version, ckpt, false).await?;
         self.scalars.next_version = version + 1;
         Ok(())
     }

@@ -114,7 +114,7 @@ mod tests {
     #[test]
     fn status_excludes_dead_and_in_use() {
         let pool = SparePool::new(4, 2, 1);
-        let (w, _rxs) = crate::simmpi::World::new(
+        let w = crate::simmpi::World::new(
             4,
             3,
             NetParams::default(),

@@ -11,11 +11,11 @@ use ulfm_ftgmres::simmpi::{Blob, Comm};
 #[test]
 fn ring_exchange_stores_local_and_remote() {
     let n = 5;
-    let results = run_ranks(n, move |mut ctx| {
+    let results = run_ranks(n, move |mut ctx| async move {
         let mut comm = Comm::world(n, ctx.rank);
         let mut store = CkptStore::new();
         let objs = vec![(obj::X, Blob::scalar(ctx.rank as f64))];
-        checkpoint::checkpoint(&mut ctx, &mut comm, &mut store, &objs, 1, 1).unwrap();
+        checkpoint::checkpoint(&mut ctx, &mut comm, &mut store, &objs, 1, 1).await.unwrap();
         let ward = (ctx.rank + n - 1) % n;
         let local_ok = store.get_local(obj::X, 1).unwrap().f == vec![ctx.rank as f64];
         let remote_ok = store.get_remote(ward, obj::X, 1).unwrap().f == vec![ward as f64];
@@ -30,11 +30,11 @@ fn ring_exchange_stores_local_and_remote() {
 #[test]
 fn two_buddies_hold_two_copies() {
     let n = 5;
-    let results = run_ranks(n, move |mut ctx| {
+    let results = run_ranks(n, move |mut ctx| async move {
         let mut comm = Comm::world(n, ctx.rank);
         let mut store = CkptStore::new();
         let objs = vec![(obj::X, Blob::scalar(ctx.rank as f64))];
-        checkpoint::checkpoint(&mut ctx, &mut comm, &mut store, &objs, 1, 2).unwrap();
+        checkpoint::checkpoint(&mut ctx, &mut comm, &mut store, &objs, 1, 2).await.unwrap();
         let w1 = (ctx.rank + n - 1) % n;
         let w2 = (ctx.rank + n - 2) % n;
         store.get_remote(w1, obj::X, 1).is_some() && store.get_remote(w2, obj::X, 1).is_some()
@@ -45,12 +45,12 @@ fn two_buddies_hold_two_copies() {
 #[test]
 fn versions_accumulate_and_gc_keeps_two() {
     let n = 3;
-    let results = run_ranks(n, move |mut ctx| {
+    let results = run_ranks(n, move |mut ctx| async move {
         let mut comm = Comm::world(n, ctx.rank);
         let mut store = CkptStore::new();
         for v in 1..=4 {
             let objs = vec![(obj::X, Blob::scalar(v as f64))];
-            checkpoint::checkpoint(&mut ctx, &mut comm, &mut store, &objs, v, 1).unwrap();
+            checkpoint::checkpoint(&mut ctx, &mut comm, &mut store, &objs, v, 1).await.unwrap();
         }
         (
             store.get_local(obj::X, 4).is_some(),
@@ -68,19 +68,19 @@ fn versions_accumulate_and_gc_keeps_two() {
 #[test]
 fn restore_version_is_min_committed() {
     let n = 4;
-    let results = run_ranks(n, move |mut ctx| {
+    let results = run_ranks(n, move |mut ctx| async move {
         let mut comm = Comm::world(n, ctx.rank);
         let mut store = CkptStore::new();
         // Everyone commits v1; simulate a straggler that missed v2 by only
         // committing further on some ranks via direct put (no commit).
         let objs = vec![(obj::X, Blob::scalar(1.0))];
-        checkpoint::checkpoint(&mut ctx, &mut comm, &mut store, &objs, 1, 1).unwrap();
+        checkpoint::checkpoint(&mut ctx, &mut comm, &mut store, &objs, 1, 1).await.unwrap();
         if ctx.rank != 2 {
             // These ranks ALSO ran a v2 checkpoint in a hypothetical
             // timeline; rank 2 did not commit v2.
             store.put_local(obj::X, 2, Blob::scalar(2.0));
         }
-        agree_restore_version(&mut ctx, &mut comm, &store).unwrap()
+        agree_restore_version(&mut ctx, &mut comm, &store).await.unwrap()
     });
     for v in results {
         assert_eq!(v, 1, "restore version = min committed across ranks");
@@ -90,11 +90,11 @@ fn restore_version_is_min_committed() {
 #[test]
 fn dead_buddy_fails_checkpoint_but_previous_commit_survives() {
     let n = 4;
-    let results = run_ranks(n, move |mut ctx| {
+    let results = run_ranks(n, move |mut ctx| async move {
         let mut comm = Comm::world(n, ctx.rank);
         let mut store = CkptStore::new();
         let objs = vec![(obj::X, Blob::scalar(ctx.rank as f64))];
-        checkpoint::checkpoint(&mut ctx, &mut comm, &mut store, &objs, 1, 1).unwrap();
+        checkpoint::checkpoint(&mut ctx, &mut comm, &mut store, &objs, 1, 1).await.unwrap();
         if ctx.rank == 3 {
             let _ = ctx.die();
             return (true, 1);
@@ -104,7 +104,7 @@ fn dead_buddy_fails_checkpoint_but_previous_commit_survives() {
         // must stay at 1 on the failing ranks.  Revoke on error so blocked
         // peers unblock (what the recovery driver does).
         let objs2 = vec![(obj::X, Blob::scalar(10.0))];
-        let r = checkpoint::checkpoint(&mut ctx, &mut comm, &mut store, &objs2, 2, 1);
+        let r = checkpoint::checkpoint(&mut ctx, &mut comm, &mut store, &objs2, 2, 1).await;
         if r.is_err() {
             ulfm::revoke(&mut ctx, &comm);
         }
@@ -128,12 +128,12 @@ fn dead_buddy_fails_checkpoint_but_previous_commit_survives() {
 #[test]
 fn checkpoint_bytes_accounted_on_virtual_clock() {
     let n = 2;
-    let results = run_ranks(n, move |mut ctx| {
+    let results = run_ranks(n, move |mut ctx| async move {
         let mut comm = Comm::world(n, ctx.rank);
         let mut store = CkptStore::new();
         let t0 = ctx.clock;
         let objs = vec![(obj::X, Blob::from_f64s(vec![0.0; 100_000]))];
-        checkpoint::checkpoint(&mut ctx, &mut comm, &mut store, &objs, 1, 1).unwrap();
+        checkpoint::checkpoint(&mut ctx, &mut comm, &mut store, &objs, 1, 1).await.unwrap();
         ctx.clock - t0
     });
     // 800 kB through the intra-node path (two ranks, same node) at 6 GB/s

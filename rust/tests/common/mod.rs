@@ -3,15 +3,17 @@
 
 #![allow(dead_code)]
 
-use std::sync::mpsc::Receiver;
+use std::fmt::Write as _;
+use std::future::Future;
 use std::sync::Arc;
 
 use ulfm_ftgmres::config::RunConfig;
 use ulfm_ftgmres::failure::{InjectionPlan, Injector};
+use ulfm_ftgmres::metrics::RunReport;
 use ulfm_ftgmres::netsim::NetParams;
 use ulfm_ftgmres::problem::Grid3D;
 use ulfm_ftgmres::recovery::Strategy;
-use ulfm_ftgmres::simmpi::{Ctx, Msg, World};
+use ulfm_ftgmres::simmpi::{block_on, Ctx, World};
 
 /// SplitMix64 — deterministic, seedable, no dependencies.
 pub struct Rng(pub u64);
@@ -49,46 +51,105 @@ pub fn wait_dead(world: &World, rank: usize) {
     }
 }
 
-/// Build a world of `n` app ranks (no spares) with per-rank contexts.
-pub fn tiny_world(n: usize) -> (Arc<World>, Vec<(usize, Receiver<Msg>)>) {
-    let (w, rxs) = World::new(
-        n,
-        0,
-        NetParams::default(),
-        Injector::new(InjectionPlan::none()),
-    );
-    (w, rxs.into_iter().enumerate().collect())
+/// Build a world of `n` app ranks (no spares).
+pub fn tiny_world(n: usize) -> Arc<World> {
+    World::new(n, 0, NetParams::default(), Injector::new(InjectionPlan::none()))
 }
 
-/// Run `f` on `n` rank threads, each given its `Ctx`; returns per-rank
-/// results in rank order.
-pub fn run_ranks<T, F>(n: usize, f: F) -> Vec<T>
+/// Run async rank body `f` on `n` rank threads (thread engine), each given
+/// its `Ctx`; returns per-rank results in rank order.
+pub fn run_ranks<T, F, Fut>(n: usize, f: F) -> Vec<T>
 where
     T: Send + 'static,
-    F: Fn(Ctx) -> T + Send + Sync + 'static,
+    F: Fn(Ctx) -> Fut + Send + Sync + 'static,
+    Fut: Future<Output = T>,
 {
     run_ranks_plan(n, InjectionPlan::none(), f)
 }
 
 /// Like [`run_ranks`], but with a failure-injection plan driving the world
 /// (protocol-phase kills, scheduled iteration kills).
-pub fn run_ranks_plan<T, F>(n: usize, plan: InjectionPlan, f: F) -> Vec<T>
+pub fn run_ranks_plan<T, F, Fut>(n: usize, plan: InjectionPlan, f: F) -> Vec<T>
 where
     T: Send + 'static,
-    F: Fn(Ctx) -> T + Send + Sync + 'static,
+    F: Fn(Ctx) -> Fut + Send + Sync + 'static,
+    Fut: Future<Output = T>,
 {
-    let (w, rxs) = World::new(n, 0, NetParams::default(), Injector::new(plan));
+    let w = World::new(n, 0, NetParams::default(), Injector::new(plan));
     let f = Arc::new(f);
-    let handles: Vec<_> = rxs
-        .into_iter()
-        .enumerate()
-        .map(|(rank, rx)| {
+    let handles: Vec<_> = (0..n)
+        .map(|rank| {
             let w = w.clone();
             let f = f.clone();
-            std::thread::spawn(move || f(Ctx::new(w, rank, rx)))
+            std::thread::spawn(move || block_on(f(Ctx::new(w, rank))))
         })
         .collect();
     handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect()
+}
+
+/// Everything observable about a run, rendered deterministically: solver
+/// outcome bits, virtual-time bits, per-rank fates, the merged decision log
+/// and the exact per-version checkpoint byte accounting.  Two runs are "the
+/// same execution" iff these strings are equal (engine_differential.rs,
+/// scheduler_determinism.rs).
+pub fn digest(rep: &RunReport) -> String {
+    let mut s = String::new();
+    writeln!(
+        s,
+        "tts={:016x} relres={:016x} iters={} conv={} fails={} retries={} restarts={}",
+        rep.time_to_solution.to_bits(),
+        rep.final_relres.to_bits(),
+        rep.iterations,
+        rep.converged,
+        rep.failures,
+        rep.recovery_retries,
+        rep.global_restarts(),
+    )
+    .unwrap();
+    for r in &rep.ranks {
+        writeln!(
+            s,
+            "rank {} t={:016x} it={} killed={} spare={} retries={}",
+            r.world_rank,
+            r.finish_time.to_bits(),
+            r.iterations,
+            r.killed,
+            r.was_spare,
+            r.recovery_retries,
+        )
+        .unwrap();
+    }
+    for d in &rep.decisions {
+        writeln!(
+            s,
+            "decision {} at={:016x} failed={:?} {} attempt={} warm={} cold={} reason={}",
+            d.seq,
+            d.at.to_bits(),
+            d.failed_ranks,
+            d.decision,
+            d.attempt,
+            d.warm_free,
+            d.cold_free,
+            d.reason,
+        )
+        .unwrap();
+    }
+    for c in &rep.ckpt {
+        writeln!(
+            s,
+            "ckpt v={} at={:016x} log={} ship={} raw={} delta={} rot={} enc={:016x}",
+            c.version,
+            c.at.to_bits(),
+            c.logical_bytes,
+            c.shipped_bytes,
+            c.raw_bytes,
+            c.delta,
+            c.rotation,
+            c.encode_secs.to_bits(),
+        )
+        .unwrap();
+    }
+    s
 }
 
 /// A seconds-scale solver config for integration tests.

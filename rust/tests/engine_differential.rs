@@ -1,0 +1,136 @@
+//! Differential test of the two execution engines (DESIGN.md §12): the
+//! deterministic event loop (`--engine events`) must be observationally
+//! indistinguishable from the thread-per-rank oracle (`--engine threads`).
+//!
+//! Virtual time lives entirely in message timestamps and per-rank clocks,
+//! never in OS scheduling, so the event loop is just one valid
+//! serialization of the same distributed execution: every campaign shape —
+//! redundancy scheme × delta/compression × recovery strategy × nested
+//! protocol-phase kills — must produce a bit-identical `RunReport` digest
+//! under both engines.
+
+mod common;
+
+use common::{digest, quick_config};
+use ulfm_ftgmres::ckptstore::Scheme;
+use ulfm_ftgmres::config::RunConfig;
+use ulfm_ftgmres::coordinator;
+use ulfm_ftgmres::failure::{InjectionPlan, ProtoPhase};
+use ulfm_ftgmres::metrics::RunReport;
+use ulfm_ftgmres::recovery::Strategy;
+use ulfm_ftgmres::simmpi::Engine;
+
+fn run_engine(cfg: &RunConfig, plan: &InjectionPlan, engine: Engine) -> RunReport {
+    let mut cfg = cfg.clone();
+    cfg.engine = engine;
+    let backend = coordinator::make_backend(&cfg).unwrap();
+    coordinator::run_custom(&cfg, backend, plan.clone()).unwrap()
+}
+
+/// Run one campaign under both engines and assert digest equality.
+fn assert_engines_agree(name: &str, cfg: &RunConfig, plan: &InjectionPlan) -> RunReport {
+    let threads = run_engine(cfg, plan, Engine::Threads);
+    let events = run_engine(cfg, plan, Engine::Events);
+    assert_eq!(
+        digest(&threads),
+        digest(&events),
+        "{name}: event engine diverged from the thread oracle"
+    );
+    events
+}
+
+#[test]
+fn engines_agree_failure_free() {
+    let cfg = quick_config(4, Strategy::NoProtection, 0);
+    let rep = assert_engines_agree("failure-free", &cfg, &InjectionPlan::none());
+    assert!(rep.converged);
+}
+
+#[test]
+fn engines_agree_on_checkpointed_run_without_failures() {
+    let cfg = quick_config(4, Strategy::Shrink, 0);
+    let rep = assert_engines_agree("ckpt-only", &cfg, &InjectionPlan::none());
+    assert!(rep.converged && !rep.ckpt.is_empty());
+}
+
+#[test]
+fn engines_agree_shrink_multi_failure() {
+    let cfg = quick_config(8, Strategy::Shrink, 3);
+    let rep = assert_engines_agree("shrink-3f", &cfg, &cfg.injection_plan());
+    assert_eq!(rep.failures, 3);
+    assert!(rep.converged);
+}
+
+#[test]
+fn engines_agree_substitute_with_spares() {
+    let cfg = quick_config(8, Strategy::Substitute, 2);
+    let rep = assert_engines_agree("substitute-2f", &cfg, &cfg.injection_plan());
+    assert_eq!(rep.failures, 2);
+    assert!(rep.converged);
+    assert!(rep.ranks.iter().any(|r| r.was_spare && r.iterations > 0));
+}
+
+#[test]
+fn engines_agree_cold_spares() {
+    let cfg = quick_config(6, Strategy::SubstituteCold, 1);
+    let rep = assert_engines_agree("substitute-cold", &cfg, &cfg.injection_plan());
+    assert!(rep.converged);
+}
+
+/// The full campaign matrix from the transport-equivalence suite: every
+/// redundancy scheme, delta + compression on, and a *nested* second kill
+/// inside the first recovery (protocol-phase injection).  These are the
+/// hardest schedules the repo knows how to produce: if the event engine
+/// serializes anything differently, the fence retries, decision log or
+/// checkpoint accounting shift and the digests split.
+#[test]
+fn engines_agree_nested_failures_all_schemes() {
+    let legs: Vec<(Scheme, Strategy, Option<usize>, ProtoPhase, usize)> = vec![
+        (Scheme::Mirror { k: 1 }, Strategy::Shrink, None, ProtoPhase::Reconstruct, 3),
+        (Scheme::Xor { g: 4 }, Strategy::Shrink, None, ProtoPhase::Reconstruct, 3),
+        (Scheme::Rs2 { g: 4 }, Strategy::Substitute, Some(2), ProtoPhase::SpareJoin, 8),
+    ];
+    for (scheme, strategy, warm, phase, second) in legs {
+        let mut cfg = quick_config(8, strategy, 0);
+        cfg.warm_spares = warm;
+        cfg.solver.ckpt.scheme = scheme;
+        cfg.solver.ckpt.delta = true;
+        cfg.solver.ckpt.compress = true;
+        let first = if phase == ProtoPhase::SpareJoin { 5 } else { 7 };
+        let plan = InjectionPlan::nested(first, 25, second, phase, 1);
+        let rep = assert_engines_agree("nested", &cfg, &plan);
+        assert!(rep.converged, "{scheme:?}: nested campaign must converge");
+        assert_eq!(rep.global_restarts(), 0, "{scheme:?}: recoverable pattern");
+        assert!(rep.recovery_retries >= 1, "{scheme:?}: the nested kill must fence");
+    }
+}
+
+/// Delta shipping alone (no compression) exercises a different wire format
+/// per scheme; keep it differentially pinned too.
+#[test]
+fn engines_agree_delta_without_compression() {
+    for scheme in [Scheme::Mirror { k: 1 }, Scheme::Rs2 { g: 4 }] {
+        let mut cfg = quick_config(8, Strategy::Shrink, 2);
+        cfg.solver.ckpt.scheme = scheme;
+        cfg.solver.ckpt.delta = true;
+        let rep = assert_engines_agree("delta", &cfg, &cfg.injection_plan());
+        assert!(rep.converged, "{scheme:?}");
+        assert_eq!(rep.failures, 2, "{scheme:?}");
+    }
+}
+
+/// Simultaneous kills at the same iteration: one shrink absorbs both dead
+/// ranks; the event engine must discover and agree on the identical set.
+#[test]
+fn engines_agree_simultaneous_failures() {
+    let cfg = quick_config(8, Strategy::Shrink, 0);
+    let plan = InjectionPlan {
+        kills: vec![
+            ulfm_ftgmres::failure::Kill::at_iter(2, 25),
+            ulfm_ftgmres::failure::Kill::at_iter(5, 25),
+        ],
+    };
+    let rep = assert_engines_agree("simultaneous", &cfg, &plan);
+    assert!(rep.converged);
+    assert_eq!(rep.failures, 2);
+}

@@ -31,71 +31,84 @@ fn interrupted_commit_case(name: &str, cfg: CkptCfg, victim: usize) {
     let plan = InjectionPlan { kills: vec![Kill::at_phase(victim, ProtoPhase::CkptCommit, 2)] };
     let cfg2 = cfg.clone();
     let results = run_ranks_plan(N, plan, move |mut ctx| {
-        let cfg = &cfg2;
-        let mut comm = Comm::world(N, ctx.rank);
-        let mut store = CkptStore::new();
-        // v1: clean establishment commit.
-        ckptstore::commit(
-            &mut ctx,
-            &mut comm,
-            &mut store,
-            &[(obj::X, v1_blob(ctx.rank))],
-            1,
-            cfg,
-            true,
-        )
-        .unwrap();
-        // v2: the victim dies entering the commit; survivors see a torn
-        // exchange (or a torn agreement) and must not advance the floor.
-        let v2 = Blob {
-            f: v1_blob(ctx.rank).f.iter().map(|x| x + 1000.0).collect(),
-            i: v1_blob(ctx.rank).i,
-            wire: None,
-        };
-        let r2 = ckptstore::commit(&mut ctx, &mut comm, &mut store, &[(obj::X, v2)], 2, cfg, false);
-        if ctx.rank == victim {
-            assert!(matches!(r2, Err(MpiError::Killed)), "victim dies inside the commit");
-            return None;
+        let cfg = cfg2.clone();
+        async move {
+            let mut comm = Comm::world(N, ctx.rank);
+            let mut store = CkptStore::new();
+            // v1: clean establishment commit.
+            ckptstore::commit(
+                &mut ctx,
+                &mut comm,
+                &mut store,
+                &[(obj::X, v1_blob(ctx.rank))],
+                1,
+                &cfg,
+                true,
+            )
+            .await
+            .unwrap();
+            // v2: the victim dies entering the commit; survivors see a torn
+            // exchange (or a torn agreement) and must not advance the floor.
+            let v2 = Blob {
+                f: v1_blob(ctx.rank).f.iter().map(|x| x + 1000.0).collect(),
+                i: v1_blob(ctx.rank).i,
+                wire: None,
+            };
+            let r2 = ckptstore::commit(
+                &mut ctx,
+                &mut comm,
+                &mut store,
+                &[(obj::X, v2)],
+                2,
+                &cfg,
+                false,
+            )
+            .await;
+            if ctx.rank == victim {
+                assert!(matches!(r2, Err(MpiError::Killed)), "victim dies inside the commit");
+                return None;
+            }
+            assert!(r2.is_err(), "the torn commit must error, not hang");
+            assert_eq!(store.committed(), 1, "v2 must not commit on any survivor");
+            // Repair like the recovery driver: revoke, fenced shrink, agree.
+            wait_dead(&ctx.world, victim);
+            ulfm::revoke(&mut ctx, &comm);
+            let mut fence = EpochFence::new(&comm);
+            let mut shrunk = ulfm::shrink_fenced(&mut ctx, &comm, &mut fence).await.unwrap();
+            let v = agree_restore_version(&mut ctx, &mut shrunk, &store).await.unwrap();
+            assert_eq!(v, 1, "survivors restore the pre-interruption floor");
+            // My own v1 payload is intact despite the uncommitted v2 residue.
+            let (lv, local) = store.get_local_at_most(obj::X, v).expect("own v1 retained");
+            assert_eq!((lv, local.f.clone()), (1, v1_blob(ctx.rank).f), "local floor intact");
+            // Recovery reader: materialize the victim's objects on its server.
+            let old_members: Vec<usize> = (0..N).collect();
+            ckptstore::reconstruct_failed(
+                &mut ctx,
+                &shrunk,
+                &mut store,
+                &cfg,
+                &old_members,
+                v,
+                &[obj::X],
+            )
+            .await
+            .unwrap();
+            let world = ctx.world.clone();
+            let alive_cr = move |cr: usize| world.is_alive(cr);
+            let server = cfg
+                .scheme
+                .server_cr_for(victim, N, &alive_cr, 1)
+                .expect("single loss must be recoverable");
+            if ctx.rank == server {
+                let (gv, got) =
+                    store.get_remote_at_most(victim, obj::X, v).expect("victim's v1 served");
+                let want = v1_blob(victim);
+                assert_eq!(gv, 1);
+                assert_eq!(got.f, want.f, "reconstructed f lane bit-identical");
+                assert_eq!(got.i, want.i, "reconstructed i lane bit-identical");
+            }
+            Some(ctx.rank)
         }
-        assert!(r2.is_err(), "the torn commit must error, not hang");
-        assert_eq!(store.committed(), 1, "v2 must not commit on any survivor");
-        // Repair like the recovery driver: revoke, fenced shrink, agree.
-        wait_dead(&ctx.world, victim);
-        ulfm::revoke(&mut ctx, &comm);
-        let mut fence = EpochFence::new(&comm);
-        let mut shrunk = ulfm::shrink_fenced(&mut ctx, &comm, &mut fence).unwrap();
-        let v = agree_restore_version(&mut ctx, &mut shrunk, &store).unwrap();
-        assert_eq!(v, 1, "survivors restore the pre-interruption floor");
-        // My own v1 payload is intact despite the uncommitted v2 residue.
-        let (lv, local) = store.get_local_at_most(obj::X, v).expect("own v1 retained");
-        assert_eq!((lv, local.f.clone()), (1, v1_blob(ctx.rank).f), "local floor bit-identical");
-        // Recovery reader: materialize the victim's objects on its server.
-        let old_members: Vec<usize> = (0..N).collect();
-        ckptstore::reconstruct_failed(
-            &mut ctx,
-            &shrunk,
-            &mut store,
-            cfg,
-            &old_members,
-            v,
-            &[obj::X],
-        )
-        .unwrap();
-        let world = ctx.world.clone();
-        let alive_cr = move |cr: usize| world.is_alive(cr);
-        let server = cfg
-            .scheme
-            .server_cr_for(victim, N, &alive_cr, 1)
-            .expect("single loss must be recoverable");
-        if ctx.rank == server {
-            let (gv, got) =
-                store.get_remote_at_most(victim, obj::X, v).expect("victim's v1 served");
-            let want = v1_blob(victim);
-            assert_eq!(gv, 1);
-            assert_eq!(got.f, want.f, "reconstructed f lane bit-identical");
-            assert_eq!(got.i, want.i, "reconstructed i lane bit-identical");
-        }
-        Some(ctx.rank)
     });
     assert!(results[victim].is_none(), "{name}: victim excluded");
     for (r, res) in results.iter().enumerate() {

@@ -10,10 +10,10 @@ use ulfm_ftgmres::simmpi::{Blob, Comm};
 fn allreduce_sum_all_sizes() {
     // Cover pow2 and non-pow2 sizes (the recursive-doubling pre/post path).
     for n in [2usize, 3, 4, 5, 7, 8, 12, 16, 21] {
-        let results = run_ranks(n, move |mut ctx| {
+        let results = run_ranks(n, move |mut ctx| async move {
             let mut comm = Comm::world(n, ctx.rank);
             let mut data = [ctx.rank as f64 + 1.0, 1.0];
-            comm.allreduce_sum(&mut ctx, &mut data).unwrap();
+            comm.allreduce_sum(&mut ctx, &mut data).await.unwrap();
             data
         });
         let expect = (n * (n + 1) / 2) as f64;
@@ -27,11 +27,11 @@ fn allreduce_sum_all_sizes() {
 #[test]
 fn allreduce_results_bitwise_identical_across_ranks() {
     let n = 13;
-    let results = run_ranks(n, move |mut ctx| {
+    let results = run_ranks(n, move |mut ctx| async move {
         let mut comm = Comm::world(n, ctx.rank);
         // Values chosen so naive per-rank orderings would differ in rounding.
         let mut data = [0.1 * (ctx.rank as f64 + 1.0), 1e-17 + ctx.rank as f64];
-        comm.allreduce_sum(&mut ctx, &mut data).unwrap();
+        comm.allreduce_sum(&mut ctx, &mut data).await.unwrap();
         data
     });
     for d in &results[1..] {
@@ -43,10 +43,10 @@ fn allreduce_results_bitwise_identical_across_ranks() {
 #[test]
 fn allreduce_min_i64() {
     let n = 6;
-    let results = run_ranks(n, move |mut ctx| {
+    let results = run_ranks(n, move |mut ctx| async move {
         let mut comm = Comm::world(n, ctx.rank);
         let mut v = [ctx.rank as i64 + 10, -(ctx.rank as i64)];
-        comm.allreduce_min_i64(&mut ctx, &mut v).unwrap();
+        comm.allreduce_min_i64(&mut ctx, &mut v).await.unwrap();
         v
     });
     for v in results {
@@ -57,14 +57,14 @@ fn allreduce_min_i64() {
 #[test]
 fn bcast_from_root() {
     let n = 9;
-    let results = run_ranks(n, move |mut ctx| {
+    let results = run_ranks(n, move |mut ctx| async move {
         let mut comm = Comm::world(n, ctx.rank);
         let mine = if ctx.rank == 0 {
             Blob::from_f64s(vec![3.5, 4.5])
         } else {
             Blob::empty()
         };
-        comm.bcast(&mut ctx, mine).unwrap().f
+        comm.bcast(&mut ctx, mine).await.unwrap().f
     });
     for r in results {
         assert_eq!(r, vec![3.5, 4.5]);
@@ -74,11 +74,11 @@ fn bcast_from_root() {
 #[test]
 fn barrier_synchronizes_clocks() {
     let n = 8;
-    let clocks = run_ranks(n, move |mut ctx| {
+    let clocks = run_ranks(n, move |mut ctx| async move {
         let mut comm = Comm::world(n, ctx.rank);
         // Skew the clocks, then barrier.
         ctx.advance(ctx.rank as f64 * 1e-3);
-        comm.barrier(&mut ctx).unwrap();
+        comm.barrier(&mut ctx).await.unwrap();
         ctx.clock
     });
     let max = clocks.iter().cloned().fold(0.0, f64::max);
@@ -91,10 +91,10 @@ fn barrier_synchronizes_clocks() {
 #[test]
 fn allgather_variable_sizes() {
     let n = 5;
-    let results = run_ranks(n, move |mut ctx| {
+    let results = run_ranks(n, move |mut ctx| async move {
         let mut comm = Comm::world(n, ctx.rank);
         let mine = Blob::from_f64s(vec![ctx.rank as f64; ctx.rank + 1]);
-        comm.allgather(&mut ctx, mine).unwrap()
+        comm.allgather(&mut ctx, mine).await.unwrap()
     });
     for blobs in results {
         assert_eq!(blobs.len(), n);
@@ -107,10 +107,10 @@ fn allgather_variable_sizes() {
 #[test]
 fn agree_bitwise_and() {
     let n = 7;
-    let results = run_ranks(n, move |mut ctx| {
+    let results = run_ranks(n, move |mut ctx| async move {
         let mut comm = Comm::world(n, ctx.rank);
         let flag = if ctx.rank == 3 { 0b101 } else { 0b111 };
-        comm.agree(&mut ctx, flag).unwrap()
+        comm.agree(&mut ctx, flag).await.unwrap()
     });
     for r in results {
         assert_eq!(r, 0b101);
@@ -120,12 +120,12 @@ fn agree_bitwise_and() {
 #[test]
 fn back_to_back_collectives_do_not_mix() {
     let n = 4;
-    let results = run_ranks(n, move |mut ctx| {
+    let results = run_ranks(n, move |mut ctx| async move {
         let mut comm = Comm::world(n, ctx.rank);
         let mut out = Vec::new();
         for round in 0..20 {
             let mut v = [ctx.rank as f64 + round as f64];
-            comm.allreduce_sum(&mut ctx, &mut v).unwrap();
+            comm.allreduce_sum(&mut ctx, &mut v).await.unwrap();
             out.push(v[0]);
         }
         out
@@ -140,11 +140,11 @@ fn back_to_back_collectives_do_not_mix() {
 #[test]
 fn sendrecv_pairs() {
     let n = 6;
-    let results = run_ranks(n, move |mut ctx| {
+    let results = run_ranks(n, move |mut ctx| async move {
         let mut comm = Comm::world(n, ctx.rank);
         let peer = ctx.rank ^ 1;
         let payload = Blob::scalar(ctx.rank as f64);
-        let got = comm.sendrecv(&mut ctx, peer, 42, payload).unwrap();
+        let got = comm.sendrecv(&mut ctx, peer, 42, payload).await.unwrap();
         let _ = &mut comm;
         got.f[0]
     });
@@ -156,12 +156,12 @@ fn sendrecv_pairs() {
 #[test]
 fn clock_monotone_through_collectives() {
     let n = 5;
-    let ok = run_ranks(n, move |mut ctx| {
+    let ok = run_ranks(n, move |mut ctx| async move {
         let mut comm = Comm::world(n, ctx.rank);
         let mut prev = ctx.clock;
         for _ in 0..10 {
             let mut v = [1.0];
-            comm.allreduce_sum(&mut ctx, &mut v).unwrap();
+            comm.allreduce_sum(&mut ctx, &mut v).await.unwrap();
             if ctx.clock < prev {
                 return false;
             }

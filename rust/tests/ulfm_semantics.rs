@@ -13,14 +13,14 @@ fn collective_fails_or_revokes_when_rank_dies() {
     // Rank 2 dies before the collective; everyone else must get ProcFailed
     // or Revoked (after the first detector revokes) rather than hanging.
     let n = 6;
-    let results = run_ranks(n, move |mut ctx| {
+    let results = run_ranks(n, move |mut ctx| async move {
         let mut comm = Comm::world(n, ctx.rank);
         if ctx.rank == 2 {
             let _ = ctx.die();
             return "died".to_string();
         }
         let mut v = [1.0];
-        match comm.allreduce_sum(&mut ctx, &mut v) {
+        match comm.allreduce_sum(&mut ctx, &mut v).await {
             Err(e @ (MpiError::ProcFailed(_) | MpiError::Revoked)) => {
                 // Propagate so blocked peers unblock, like the recovery
                 // driver does.
@@ -44,7 +44,7 @@ fn collective_fails_or_revokes_when_rank_dies() {
 #[test]
 fn shrink_renumbers_survivors_densely() {
     let n = 7;
-    let results = run_ranks(n, move |mut ctx| {
+    let results = run_ranks(n, move |mut ctx| async move {
         let comm = Comm::world(n, ctx.rank);
         if ctx.rank == 3 {
             let _ = ctx.die();
@@ -54,7 +54,7 @@ fn shrink_renumbers_survivors_densely() {
         // after failure detection).
         wait_dead(&ctx.world, 3);
         ulfm::revoke(&mut ctx, &comm);
-        let new_comm = ulfm::shrink(&mut ctx, &comm).unwrap();
+        let new_comm = ulfm::shrink(&mut ctx, &comm).await.unwrap();
         Some((new_comm.epoch, new_comm.members.clone(), new_comm.rank))
     });
     let survivors: Vec<usize> = vec![0, 1, 2, 4, 5, 6];
@@ -73,7 +73,7 @@ fn shrink_renumbers_survivors_densely() {
 #[test]
 fn shrink_supports_collectives_afterwards() {
     let n = 5;
-    let results = run_ranks(n, move |mut ctx| {
+    let results = run_ranks(n, move |mut ctx| async move {
         let comm = Comm::world(n, ctx.rank);
         if ctx.rank == 4 {
             let _ = ctx.die();
@@ -81,9 +81,9 @@ fn shrink_supports_collectives_afterwards() {
         }
         wait_dead(&ctx.world, 4);
         ulfm::revoke(&mut ctx, &comm);
-        let mut new_comm = ulfm::shrink(&mut ctx, &comm).unwrap();
+        let mut new_comm = ulfm::shrink(&mut ctx, &comm).await.unwrap();
         let mut v = [comm.rank as f64];
-        new_comm.allreduce_sum(&mut ctx, &mut v).unwrap();
+        new_comm.allreduce_sum(&mut ctx, &mut v).await.unwrap();
         v[0]
     });
     for (r, v) in results.iter().enumerate() {
@@ -98,20 +98,20 @@ fn shrink_supports_collectives_afterwards() {
 /// recovery driver does (a round may transiently adopt a membership whose
 /// casualty registered late; the next collective then errors and the fence
 /// re-runs the agree), and return their final (members, allreduce, retries).
-fn fenced_repair_to_quiescence(
+async fn fenced_repair_to_quiescence(
     ctx: &mut ulfm_ftgmres::simmpi::Ctx,
     comm: &Comm,
 ) -> Option<(Vec<usize>, f64, u64)> {
     ulfm::revoke(ctx, comm);
     let mut fence = EpochFence::new(comm);
     loop {
-        let mut c = match ulfm::shrink_fenced(ctx, comm, &mut fence) {
+        let mut c = match ulfm::shrink_fenced(ctx, comm, &mut fence).await {
             Ok(c) => c,
             Err(MpiError::Killed) => return None,
             Err(e) => panic!("rank {}: {e}", ctx.rank),
         };
         let mut v = [comm.rank as f64];
-        match c.allreduce_sum(ctx, &mut v) {
+        match c.allreduce_sum(ctx, &mut v).await {
             Ok(()) => return Some((c.members.clone(), v[0], fence.retries())),
             Err(MpiError::Killed) => return None,
             Err(_) => {
@@ -132,7 +132,7 @@ fn fenced_repair_to_quiescence(
 #[test]
 fn death_after_the_decision_broadcast_reruns_the_round() {
     let n = 5;
-    let results = run_ranks(n, move |mut ctx| {
+    let results = run_ranks(n, move |mut ctx| async move {
         let comm = Comm::world(n, ctx.rank);
         if ctx.rank == 2 {
             // The first failure, whose repair rank 4 then poisons.
@@ -144,12 +144,13 @@ fn death_after_the_decision_broadcast_reruns_the_round() {
             // Full round-0 participant: vote contributed, decision
             // received... then death, with the agreed membership unusable.
             ulfm::revoke(&mut ctx, &comm);
-            let c = ulfm::shrink_at(&mut ctx, &comm, comm.epoch + 1).expect("round 0 agrees");
+            let c =
+                ulfm::shrink_at(&mut ctx, &comm, comm.epoch + 1).await.expect("round 0 agrees");
             assert_eq!(c.members, vec![0, 1, 3, 4]);
             let _ = ctx.die();
             return None;
         }
-        fenced_repair_to_quiescence(&mut ctx, &comm)
+        fenced_repair_to_quiescence(&mut ctx, &comm).await
     });
     assert!(results[2].is_none());
     assert!(results[4].is_none(), "rank 4 died after the decision broadcast");
@@ -172,14 +173,14 @@ fn death_after_the_decision_broadcast_reruns_the_round() {
 fn mid_vote_death_does_not_hang_survivors() {
     let n = 5;
     let plan = InjectionPlan { kills: vec![Kill::at_phase(4, ProtoPhase::Agree, 1)] };
-    let results = run_ranks_plan(n, plan, move |mut ctx| {
+    let results = run_ranks_plan(n, plan, move |mut ctx| async move {
         let comm = Comm::world(n, ctx.rank);
         if ctx.rank == 2 {
             let _ = ctx.die();
             return None;
         }
         wait_dead(&ctx.world, 2);
-        fenced_repair_to_quiescence(&mut ctx, &comm)
+        fenced_repair_to_quiescence(&mut ctx, &comm).await
     });
     assert!(results[2].is_none());
     assert!(results[4].is_none(), "rank 4 died mid-vote");
@@ -195,10 +196,10 @@ fn revoke_unblocks_pending_recv() {
     // Rank 1 blocks receiving from rank 0 (which never sends); rank 2
     // revokes the epoch; rank 1 must return Revoked.
     let n = 3;
-    let results = run_ranks(n, move |mut ctx| {
+    let results = run_ranks(n, move |mut ctx| async move {
         let comm = Comm::world(n, ctx.rank);
         match ctx.rank {
-            1 => match comm.recv(&mut ctx, 0, 7) {
+            1 => match comm.recv(&mut ctx, 0, 7).await {
                 Err(MpiError::Revoked) => "revoked".into(),
                 other => format!("{other:?}"),
             },
@@ -219,49 +220,52 @@ fn revoke_unblocks_pending_recv() {
 fn stitch_spare_restores_original_size() {
     // 4 app ranks + 1 spare; rank 2 dies; the spare (world 4) takes slot 2.
     let n_app = 4;
-    let (w, rxs) = ulfm_ftgmres::simmpi::World::new(
+    let w = ulfm_ftgmres::simmpi::World::new(
         n_app,
         1,
         ulfm_ftgmres::netsim::NetParams::default(),
         ulfm_ftgmres::failure::Injector::new(ulfm_ftgmres::failure::InjectionPlan::none()),
     );
-    let handles: Vec<_> = rxs
-        .into_iter()
-        .enumerate()
-        .map(|(rank, rx)| {
+    let handles: Vec<_> = (0..5)
+        .map(|rank| {
             let w = w.clone();
             std::thread::spawn(move || {
-                let mut ctx = ulfm_ftgmres::simmpi::Ctx::new(w, rank, rx);
-                if rank == 4 {
-                    // Spare: wait for the invitation, then join + allreduce.
-                    let (epoch, members, old_members, as_rank) =
-                        ctx.wait_join().expect("join");
-                    assert_eq!(as_rank, 2);
-                    // The invitation names the failed communicator's
-                    // membership so the spare can evaluate the survivors'
-                    // serving functions.
-                    assert_eq!(old_members, vec![0, 1, 2, 3]);
-                    let mut comm = ulfm::join_as_spare(&mut ctx, epoch, members, as_rank).unwrap();
-                    let mut v = [100.0];
-                    comm.allreduce_sum(&mut ctx, &mut v).unwrap();
-                    return v[0];
-                }
-                let comm = Comm::world(n_app, rank);
-                if rank == 2 {
-                    let _ = ctx.die();
-                    return -1.0;
-                }
-                common::wait_dead(&ctx.world, 2);
-                ulfm::revoke(&mut ctx, &comm);
-                let shrunk = ulfm::shrink(&mut ctx, &comm).unwrap();
-                let assignment = vec![(2usize, 4usize)];
-                let mut stitched =
-                    ulfm::stitch_spares(&mut ctx, &comm, &shrunk, &assignment).unwrap();
-                assert_eq!(stitched.size(), 4);
-                assert_eq!(stitched.members, vec![0, 1, 4, 3]);
-                let mut v = [comm.rank as f64];
-                stitched.allreduce_sum(&mut ctx, &mut v).unwrap();
-                v[0]
+                let mut ctx = ulfm_ftgmres::simmpi::Ctx::new(w, rank);
+                ulfm_ftgmres::simmpi::block_on(async move {
+                    if rank == 4 {
+                        // Spare: wait for the invitation, then join + allreduce.
+                        let (epoch, members, old_members, as_rank) =
+                            ctx.wait_join().await.expect("join");
+                        assert_eq!(as_rank, 2);
+                        // The invitation names the failed communicator's
+                        // membership so the spare can evaluate the survivors'
+                        // serving functions.
+                        assert_eq!(old_members, vec![0, 1, 2, 3]);
+                        let mut comm = ulfm::join_as_spare(&mut ctx, epoch, members, as_rank)
+                            .await
+                            .unwrap();
+                        let mut v = [100.0];
+                        comm.allreduce_sum(&mut ctx, &mut v).await.unwrap();
+                        return v[0];
+                    }
+                    let comm = Comm::world(n_app, rank);
+                    if rank == 2 {
+                        let _ = ctx.die();
+                        return -1.0;
+                    }
+                    common::wait_dead(&ctx.world, 2);
+                    ulfm::revoke(&mut ctx, &comm);
+                    let shrunk = ulfm::shrink(&mut ctx, &comm).await.unwrap();
+                    let assignment = vec![(2usize, 4usize)];
+                    let mut stitched = ulfm::stitch_spares(&mut ctx, &comm, &shrunk, &assignment)
+                        .await
+                        .unwrap();
+                    assert_eq!(stitched.size(), 4);
+                    assert_eq!(stitched.members, vec![0, 1, 4, 3]);
+                    let mut v = [comm.rank as f64];
+                    stitched.allreduce_sum(&mut ctx, &mut v).await.unwrap();
+                    v[0]
+                })
             })
         })
         .collect();
@@ -286,17 +290,17 @@ fn failure_during_commit_agreement_preserves_previous_commit() {
     use ulfm_ftgmres::ckptstore::ship_tag;
 
     let n = 4;
-    let results = run_ranks(n, move |mut ctx| {
+    let results = run_ranks(n, move |mut ctx| async move {
         let mut comm = Comm::world(n, ctx.rank);
         let mut store = CkptStore::new();
         let objs = vec![(obj::X, Blob::scalar(ctx.rank as f64))];
-        checkpoint::checkpoint(&mut ctx, &mut comm, &mut store, &objs, 1, 1).unwrap();
+        checkpoint::checkpoint(&mut ctx, &mut comm, &mut store, &objs, 1, 1).await.unwrap();
         if ctx.rank == 1 {
             // Re-play the v2 data exchange by hand (same wire protocol:
             // ship to buddy 2, receive ward 0's copy), then die *before*
             // the commit agreement — a failure mid-agreement.
             comm.send(&mut ctx, 2, ship_tag(obj::X, 1), Blob::scalar(10.0)).unwrap();
-            let _ = comm.recv(&mut ctx, 0, ship_tag(obj::X, 1)).unwrap();
+            let _ = comm.recv(&mut ctx, 0, ship_tag(obj::X, 1)).await.unwrap();
             let _ = ctx.die();
             return (true, 1, 1);
         }
@@ -304,14 +308,14 @@ fn failure_during_commit_agreement_preserves_previous_commit() {
         // completes (rank 1's copies were delivered), so the error can
         // only surface inside the agreement.
         let objs2 = vec![(obj::X, Blob::scalar(10.0 + ctx.rank as f64))];
-        let r = checkpoint::checkpoint(&mut ctx, &mut comm, &mut store, &objs2, 2, 1);
+        let r = checkpoint::checkpoint(&mut ctx, &mut comm, &mut store, &objs2, 2, 1).await;
         if r.is_err() {
             ulfm::revoke(&mut ctx, &comm);
         }
         // Repair and agree on the restore version like the recovery driver.
         wait_dead(&ctx.world, 1);
-        let mut shrunk = ulfm::shrink(&mut ctx, &comm).unwrap();
-        let v = agree_restore_version(&mut ctx, &mut shrunk, &store).unwrap();
+        let mut shrunk = ulfm::shrink(&mut ctx, &comm).await.unwrap();
+        let v = agree_restore_version(&mut ctx, &mut shrunk, &store).await.unwrap();
         // The restore version's payload must still exist locally (the
         // committed-floor GC may not have collected it).
         assert!(store.get_local_at_most(obj::X, v).is_some());
@@ -336,12 +340,12 @@ fn torn_commit_survivors_agree_on_min_and_retain_the_floor() {
     use ulfm_ftgmres::checkpoint::{self, agree_restore_version, obj, CkptStore};
 
     let n = 3;
-    let results = run_ranks(n, move |mut ctx| {
+    let results = run_ranks(n, move |mut ctx| async move {
         let mut comm = Comm::world(n, ctx.rank);
         let mut store = CkptStore::new();
         for v in 1..=2 {
             let objs = vec![(obj::X, Blob::scalar(v as f64))];
-            checkpoint::checkpoint(&mut ctx, &mut comm, &mut store, &objs, v, 1).unwrap();
+            checkpoint::checkpoint(&mut ctx, &mut comm, &mut store, &objs, v, 1).await.unwrap();
         }
         // Model a torn v3: ranks 0 and 1 stored + committed it, rank 2
         // never advanced (e.g. it errored first in the agreement).
@@ -350,7 +354,7 @@ fn torn_commit_survivors_agree_on_min_and_retain_the_floor() {
             store.force_committed(3);
             store.gc_committed();
         }
-        let v = agree_restore_version(&mut ctx, &mut comm, &store).unwrap();
+        let v = agree_restore_version(&mut ctx, &mut comm, &store).await.unwrap();
         // min(committed) = 2, and version 2 must have survived the GC on
         // the ranks whose own committed watermark is already 3.
         let have = store.get_local_at_most(obj::X, v).map(|(got, b)| (got, b.f[0]));
@@ -365,7 +369,7 @@ fn torn_commit_survivors_agree_on_min_and_retain_the_floor() {
 #[test]
 fn detection_latency_charged_once() {
     let n = 2;
-    let results = run_ranks(n, move |mut ctx| {
+    let results = run_ranks(n, move |mut ctx| async move {
         if ctx.rank == 1 {
             let _ = ctx.die();
             return 0.0;
@@ -388,21 +392,18 @@ fn detection_latency_charged_once() {
 
 #[test]
 fn shutdown_releases_idle_spare() {
-    let (w, rxs) = ulfm_ftgmres::simmpi::World::new(
+    let w = ulfm_ftgmres::simmpi::World::new(
         1,
         1,
         ulfm_ftgmres::netsim::NetParams::default(),
         ulfm_ftgmres::failure::Injector::new(ulfm_ftgmres::failure::InjectionPlan::none()),
     );
-    let mut it = rxs.into_iter();
-    let (_r0, rx0) = (0, it.next().unwrap());
-    let rx1 = it.next().unwrap();
     let w2 = w.clone();
     let spare = std::thread::spawn(move || {
-        let mut ctx = ulfm_ftgmres::simmpi::Ctx::new(w2, 1, rx1);
-        ctx.wait_join().is_none()
+        let mut ctx = ulfm_ftgmres::simmpi::Ctx::new(w2, 1);
+        ulfm_ftgmres::simmpi::block_on(async move { ctx.wait_join().await.is_none() })
     });
-    let mut ctx0 = ulfm_ftgmres::simmpi::Ctx::new(w, 0, rx0);
+    let mut ctx0 = ulfm_ftgmres::simmpi::Ctx::new(w, 0);
     ctx0.send_ctl(1, Ctl::Shutdown);
     assert!(spare.join().unwrap(), "spare exits on shutdown");
 }
