@@ -9,7 +9,10 @@
 //! the widened GF(2^8) kernel beats the bytewise reference by >= 4x, and
 //! the zero-copy data plane cuts deep-copied bytes per checkpoint commit
 //! by >= 2x on the xor:4+delta and rs2:4+delta legs (against the same
-//! code with `force_deep_clones`, i.e. the pre-refactor wire).
+//! code with `force_deep_clones`, i.e. the pre-refactor wire).  The
+//! `trace_off_commit` leg asserts tracing is zero-cost when disabled: the
+//! traced-off commit path deep-copies no more bytes (and allocates no
+//! more) than the PR-5 zero-copy baseline.
 //!
 //! `cargo bench --bench hotpath` (`BENCH_SMOKE=1` for the CI quick pass).
 
@@ -342,6 +345,57 @@ fn leg_commit(name: &'static str, scheme: Scheme) -> Leg {
 }
 
 // ---------------------------------------------------------------------
+// Leg 6: tracing off vs on — the observability layer must be zero-cost
+// when disabled (ISSUE 7).  `pr5_bytes_per_commit` is the zero-copy
+// bytes/commit measured by the commit_xor4_delta leg in this same
+// process, i.e. the PR-5 baseline the traced-off path may not exceed.
+// ---------------------------------------------------------------------
+
+fn leg_trace_off_commit(pr5_bytes_per_commit: u64) -> Leg {
+    let base = commit_cfg(Scheme::Xor { g: 4 });
+    let run = |trace: bool| -> (RunReport, u64, u64, f64) {
+        let mut cfg = base.clone();
+        cfg.trace = trace;
+        let s0 = shared::stats();
+        let a0 = allocs();
+        let t0 = std::time::Instant::now();
+        let rep = coordinator::run(&cfg).expect("trace leg completes");
+        let wall = t0.elapsed().as_nanos() as f64;
+        let bytes = shared::stats().deep_bytes - s0.deep_bytes;
+        (rep, bytes, allocs() - a0, wall)
+    };
+    let (rep_off, bytes_off, allocs_off, ns_off) = run(false);
+    let (rep_on, bytes_on, allocs_on, ns_on) = run(true);
+    assert_eq!(
+        commit_digest(&rep_off),
+        commit_digest(&rep_on),
+        "trace_off_commit: tracing must be observation-only (run digest changed)"
+    );
+    assert!(
+        !rep_on.ranks.iter().all(|r| r.trace.is_empty()),
+        "trace_off_commit: traced-on run recorded no events"
+    );
+    let commits = rep_off.ckpt_totals().2.max(1) as u64;
+    let per_off = bytes_off / commits;
+    let per_on = bytes_on / commits;
+    println!(
+        "trace_off_commit: {commits} commits, deep-copied bytes/commit {per_off} (traced off) \
+         vs {per_on} (traced on); PR-5 zero-copy baseline {pr5_bytes_per_commit}"
+    );
+    Leg {
+        name: "trace_off_commit",
+        kind: "commit",
+        ns_per_op: ns_off / commits as f64,
+        ns_per_op_baseline: ns_on / commits as f64,
+        bytes_copied: per_off,
+        bytes_copied_baseline: pr5_bytes_per_commit,
+        allocs: allocs_off / commits,
+        allocs_baseline: allocs_on / commits,
+        speedup: ratio(pr5_bytes_per_commit as f64, per_off as f64),
+    }
+}
+
+// ---------------------------------------------------------------------
 // Message-layer wall cost (kept from the original §Perf working set)
 // ---------------------------------------------------------------------
 
@@ -447,7 +501,7 @@ fn main() -> anyhow::Result<()> {
 
     // Structured legs: kernels, message layer, codecs, commit pipeline.
     println!("\n# zero-copy / widened-kernel legs (DESIGN.md §11)");
-    let legs = vec![
+    let mut legs = vec![
         leg_gf256(target),
         leg_gf256_solve(target),
         leg_msg_fanout(target),
@@ -455,6 +509,9 @@ fn main() -> anyhow::Result<()> {
         leg_commit("commit_xor4_delta", Scheme::Xor { g: 4 }),
         leg_commit("commit_rs2_4_delta", Scheme::Rs2 { g: 4 }),
     ];
+    let pr5_bytes = legs.iter().find(|l| l.name == "commit_xor4_delta").unwrap().bytes_copied;
+    legs.push(leg_trace_off_commit(pr5_bytes));
+    let legs = legs;
 
     let by_name = |n: &str| legs.iter().find(|l| l.name == n).unwrap();
     let gf_speedup = by_name("gf256_mul_xor").speedup;
@@ -490,6 +547,23 @@ fn main() -> anyhow::Result<()> {
         by_name("delta_codec_arena").speedup >= 2.0,
         "arena codec must at least halve per-encode allocations"
     );
+    {
+        let l = by_name("trace_off_commit");
+        assert!(
+            l.bytes_copied <= l.bytes_copied_baseline,
+            "trace_off_commit: the traced-off commit path must deep-copy no more bytes \
+             than the PR-5 zero-copy baseline, got {} vs {} bytes/commit",
+            l.bytes_copied,
+            l.bytes_copied_baseline
+        );
+        assert!(
+            l.allocs <= l.allocs_baseline,
+            "trace_off_commit: disabling tracing must not add allocations \
+             ({} allocs/commit off vs {} on)",
+            l.allocs,
+            l.allocs_baseline
+        );
+    }
 
     // Emit BENCH_hotpath.json at the repository root.
     let mut json = String::new();

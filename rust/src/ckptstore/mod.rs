@@ -286,9 +286,22 @@ async fn commit_inner(
         }
     };
     result?;
+    // Sub-phase boundary: redundancy exchange done, commit agreement next.
+    let at = ctx.clock;
+    ctx.trace_push(|| crate::trace::TraceEvent::Mark {
+        label: "ckpt-exchanged",
+        arg: version,
+        t: at,
+    });
 
     // Global commit: everyone stored everything.
     comm.agree(ctx, u64::MAX).await?;
+    let at = ctx.clock;
+    ctx.trace_push(|| crate::trace::TraceEvent::Mark {
+        label: "ckpt-committed",
+        arg: version,
+        t: at,
+    });
     store.commit(version);
     if fresh {
         store.note_fresh(version);

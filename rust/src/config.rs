@@ -77,6 +77,12 @@ pub struct RunConfig {
     /// 10k+ rank worlds).  Both produce identical `RunReport` digests —
     /// see DESIGN.md §12 and `tests/engine_differential.rs`.
     pub engine: Engine,
+    /// Record per-rank virtual-time traces (key `trace`, CLI `--trace
+    /// <path>`): phase spans, protocol-phase entries, solver iterations and
+    /// message edges, exported as Chrome/Perfetto JSON and analyzed into the
+    /// recovery critical-path report (see [`crate::trace`], DESIGN.md §13).
+    /// Off by default — tracing must cost nothing when disabled.
+    pub trace: bool,
     /// PJRT backend: charge measured wall time instead of modeled cost.
     pub pjrt_measured: bool,
     /// Directory with AOT artifacts (PJRT backend).
@@ -100,6 +106,7 @@ impl Default for RunConfig {
             compute: ComputeModel::default(),
             backend: BackendKind::Native,
             engine: Engine::Threads,
+            trace: false,
             pjrt_measured: false,
             artifacts_dir: "artifacts".to_string(),
         }
@@ -270,6 +277,7 @@ impl RunConfig {
                     anyhow::anyhow!("unknown engine {v} (expected threads or events)")
                 })?
             }
+            "trace" => self.trace = v.parse()?,
             "pjrt_measured" => self.pjrt_measured = v.parse()?,
             "artifacts_dir" => self.artifacts_dir = v.to_string(),
             "ranks_per_node" => self.net.ranks_per_node = v.parse()?,
@@ -368,6 +376,12 @@ mod tests {
         assert_eq!(c.grid, Grid3D { nx: 8, ny: 16, nz: 4 });
         assert_eq!(c.strategy, Strategy::Substitute);
         assert_eq!(c.spares(), 3);
+        assert!(!c.trace);
+        assert!(c.set("trace", "true").unwrap());
+        assert!(c.trace);
+        // The trace key must stay out of the summary/trace metadata along
+        // with `engine`: neither may perturb cross-engine byte identity.
+        assert!(c.summary().get("trace").is_none());
         assert!(!c.set("bogus", "1").unwrap());
     }
 

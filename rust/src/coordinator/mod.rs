@@ -121,7 +121,10 @@ fn run_threads(
             .name(format!("rank-{rank}"))
             .stack_size(2 << 20)
             .spawn(move || {
-                let ctx = Ctx::new(world, rank);
+                let mut ctx = Ctx::new(world, rank);
+                if tcfg.trace {
+                    ctx.enable_trace();
+                }
                 if rank < tcfg.p {
                     block_on(app_rank(ctx, &tcfg, backend.as_ref()))
                 } else {
@@ -162,7 +165,10 @@ fn run_events(
             let tcfg = cfg.clone();
             let backend = backend.clone();
             Box::pin(async move {
-                let ctx = Ctx::new(world, rank);
+                let mut ctx = Ctx::new(world, rank);
+                if tcfg.trace {
+                    ctx.enable_trace();
+                }
                 if rank < tcfg.p {
                     app_rank(ctx, &tcfg, backend.as_ref()).await
                 } else {
@@ -227,7 +233,10 @@ async fn solve_loop(
     }
 }
 
-fn finish(ctx: Ctx, outcome: Option<Outcome>, killed: bool, was_spare: bool) -> RankResult {
+fn finish(mut ctx: Ctx, outcome: Option<Outcome>, killed: bool, was_spare: bool) -> RankResult {
+    // Harvest the trace first: it closes the open phase span at the final
+    // clock, so span coverage equals the charged lifetime exactly.
+    let trace = ctx.take_trace();
     RankResult {
         report: RankReport {
             world_rank: ctx.rank,
@@ -239,6 +248,7 @@ fn finish(ctx: Ctx, outcome: Option<Outcome>, killed: bool, was_spare: bool) -> 
             decisions: ctx.decisions.clone(),
             ckpt: ctx.ckpt_log.clone(),
             recovery_retries: ctx.recovery_retries,
+            trace,
         },
         outcome,
     }

@@ -20,7 +20,7 @@ use std::path::Path;
 
 use crate::config::RunConfig;
 use crate::coordinator;
-use crate::metrics::RunReport;
+use crate::metrics::{Phase, RunReport};
 use crate::recovery::Strategy;
 
 /// Campaign grid: which legs to run.
@@ -307,6 +307,69 @@ pub fn ckpt_table(rep: &RunReport) -> Table {
     t
 }
 
+/// Per-recovery-event critical-path table of one traced run: for each
+/// clustered recovery window, the wall time, the serialized (unhideable)
+/// share attributed by the backward walk over message edges, and the
+/// overlap efficiency — the trace-derived counterpart of the Figure 6 view
+/// (see DESIGN.md §13).  Empty when the run was not traced.
+pub fn critical_path_table(rep: &RunReport) -> Table {
+    let mut t = Table::new(
+        "Recovery critical paths (per clustered recovery event)",
+        vec![
+            "event".into(),
+            "ranks".into(),
+            "wall_ms".into(),
+            "serial_ms".into(),
+            "hideable_ms".into(),
+            "overlap_eff".into(),
+            "hops".into(),
+            "fence_attempts".into(),
+        ],
+    );
+    let Some(cp) = &rep.critical_path else { return t };
+    for e in &cp.events {
+        let ranks = e
+            .ranks
+            .iter()
+            .map(|r| r.to_string())
+            .collect::<Vec<_>>()
+            .join("+");
+        t.row(vec![
+            e.event.to_string(),
+            ranks,
+            fmt3(1e3 * e.wall),
+            fmt3(1e3 * e.serial_secs),
+            fmt3(1e3 * e.hideable_secs),
+            fmt3(e.overlap_efficiency),
+            e.hops.to_string(),
+            e.attempts.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Cross-rank per-phase distribution (p50/p95/max over surviving ranks) of
+/// one run, from [`RunReport::phase_dist`].
+pub fn phase_dist_table(rep: &RunReport) -> Table {
+    let mut t = Table::new(
+        "Per-phase virtual time across ranks (survivors; seconds)",
+        vec!["phase".into(), "p50".into(), "p95".into(), "max".into()],
+    );
+    for p in [
+        Phase::Compute,
+        Phase::Comm,
+        Phase::Checkpoint,
+        Phase::Recovery,
+        Phase::Reconfig,
+        Phase::Recompute,
+        Phase::Idle,
+    ] {
+        let s = rep.phase_dist.get(p);
+        t.row(vec![p.name().into(), fmt4(s.p50), fmt4(s.p95), fmt4(s.max)]);
+    }
+    t
+}
+
 fn fmt2(v: f64) -> String {
     format!("{v:.2}")
 }
@@ -417,6 +480,7 @@ mod tests {
             decisions: vec![dec(0, "substitute"), dec(1, "shrink")],
             ckpt: Vec::new(),
             recovery_retries: 1,
+            trace: Vec::new(),
         };
         let rep = RunReport::from_ranks(vec![rank], 1e-9, true, 2);
         assert_eq!(rep.recovery_retries, 1);
@@ -427,5 +491,14 @@ mod tests {
         assert_eq!(t.rows[1][3], "shrink");
         assert_eq!(t.rows[1][4], "1", "attempt column rides along");
         assert_eq!(t.rows[1][0], "1");
+
+        // Untraced run: the critical-path table is empty (no trace data),
+        // while the phase-distribution table always lists every phase.
+        assert!(rep.critical_path.is_none());
+        assert_eq!(critical_path_table(&rep).rows.len(), 0);
+        let pd = phase_dist_table(&rep);
+        assert_eq!(pd.rows.len(), 7);
+        assert_eq!(pd.rows[0][0], "compute");
+        assert_eq!(pd.rows[6][0], "idle");
     }
 }

@@ -38,3 +38,4 @@ pub mod runtime;
 pub mod simmpi;
 pub mod solver;
 pub mod spares;
+pub mod trace;

@@ -43,13 +43,21 @@
 //! differential-testing oracle) or `events` (deterministic single-threaded
 //! event loop; use it for large worlds, e.g. `p=4096` and beyond).  Both
 //! engines produce bit-identical reports — see DESIGN.md §12.
+//!
+//! `--trace PATH` records a per-rank virtual-time trace (`trace=true`) and
+//! writes it to PATH as Chrome/Perfetto trace-event JSON (open in
+//! `ui.perfetto.dev`; one track per rank, flow arrows for message edges).
+//! The run summary then also prints the recovery critical-path breakdown
+//! and overlap-efficiency, and `tools/trace_report.py PATH` reproduces the
+//! phase table from the file.  Traces are byte-identical across engines —
+//! see DESIGN.md §13.  `run` and `report` only.
 
 use std::path::{Path, PathBuf};
 
 use ulfm_ftgmres::config::RunConfig;
 use ulfm_ftgmres::coordinator;
 use ulfm_ftgmres::figures::{Campaign, CampaignCfg};
-use ulfm_ftgmres::metrics::RunReport;
+use ulfm_ftgmres::metrics::{Phase, RunReport};
 
 fn usage() -> ! {
     eprintln!(
@@ -57,7 +65,7 @@ fn usage() -> ! {
          [--config FILE] [--policy POLICY] [--engine threads|events] \
          [--ckpt-scheme SCHEME] [--ckpt-delta] \
          [--ckpt-compress] [--inject-phase RANK:PHASE[:N][,..]] [--quick] \
-         [--out DIR] [key=value ...]"
+         [--trace PATH] [--out DIR] [key=value ...]"
     );
     std::process::exit(2);
 }
@@ -66,6 +74,9 @@ struct Args {
     cmd: String,
     quick: bool,
     out: PathBuf,
+    /// Where to write the Perfetto trace JSON (`--trace`); also turns on
+    /// `cfg.trace`.
+    trace: Option<PathBuf>,
     cfg: RunConfig,
 }
 
@@ -75,6 +86,7 @@ fn parse_args() -> anyhow::Result<Args> {
     let mut cfg = RunConfig::default();
     let mut quick = false;
     let mut out = PathBuf::from("out");
+    let mut trace: Option<PathBuf> = None;
     let mut rest: Vec<String> = argv.collect();
     let mut i = 0;
     while i < rest.len() {
@@ -128,6 +140,12 @@ fn parse_args() -> anyhow::Result<Args> {
                 );
                 rest.remove(i);
             }
+            "--trace" => {
+                anyhow::ensure!(i + 1 < rest.len(), "--trace needs a path");
+                trace = Some(PathBuf::from(&rest[i + 1]));
+                anyhow::ensure!(cfg.set("trace", "true")?, "trace key rejected");
+                rest.drain(i..=i + 1);
+            }
             "--out" => {
                 anyhow::ensure!(i + 1 < rest.len(), "--out needs a path");
                 out = PathBuf::from(&rest[i + 1]);
@@ -142,7 +160,7 @@ fn parse_args() -> anyhow::Result<Args> {
             .ok_or_else(|| anyhow::anyhow!("expected key=value, got '{kv}'"))?;
         anyhow::ensure!(cfg.set(k, v)?, "unknown config key '{k}'");
     }
-    Ok(Args { cmd, quick, out, cfg })
+    Ok(Args { cmd, quick, out, trace, cfg })
 }
 
 fn print_report(cfg: &RunConfig, rep: &RunReport) {
@@ -157,6 +175,23 @@ fn print_report(cfg: &RunConfig, rep: &RunReport) {
          reconfig={:.6} recompute={:.4}",
         m.compute, m.comm, m.checkpoint, m.recovery, m.reconfig, m.recompute
     );
+    let d = |p: Phase| rep.phase_dist.get(p);
+    println!(
+        "phase p50/p95/max [s]: compute={:.4}/{:.4}/{:.4} comm={:.4}/{:.4}/{:.4} \
+         checkpoint={:.4}/{:.4}/{:.4} recovery={:.4}/{:.4}/{:.4}",
+        d(Phase::Compute).p50,
+        d(Phase::Compute).p95,
+        d(Phase::Compute).max,
+        d(Phase::Comm).p50,
+        d(Phase::Comm).p95,
+        d(Phase::Comm).max,
+        d(Phase::Checkpoint).p50,
+        d(Phase::Checkpoint).p95,
+        d(Phase::Checkpoint).max,
+        d(Phase::Recovery).p50,
+        d(Phase::Recovery).p95,
+        d(Phase::Recovery).max,
+    );
     if rep.recovery_retries > 0 {
         println!(
             "recovery:      {} epoch-fence retr{} (nested failures poisoned in-flight \
@@ -165,6 +200,33 @@ fn print_report(cfg: &RunConfig, rep: &RunReport) {
             if rep.recovery_retries == 1 { "y" } else { "ies" },
             rep.global_restarts(),
         );
+    }
+    if let Some(cp) = &rep.critical_path {
+        for e in &cp.events {
+            println!(
+                "recovery path {}: ranks={:?} wall={:.6}s serial={:.6}s \
+                 (reconfig={:.6} recovery={:.6} on the path, wire={:.6}) \
+                 hops={} fence-attempts={}",
+                e.event,
+                e.ranks,
+                e.wall,
+                e.serial_secs,
+                e.by_phase.reconfig,
+                e.by_phase.recovery,
+                e.wire_secs,
+                e.hops,
+                e.attempts,
+            );
+        }
+        if !cp.events.is_empty() {
+            println!(
+                "overlap:       {:.6}s recovery wall, {:.6}s serialized on the critical \
+                 path -> {:.1}% hideable behind compute",
+                cp.total_wall,
+                cp.total_serial,
+                100.0 * cp.overlap_efficiency,
+            );
+        }
     }
     let pct = |v: f64| 100.0 * v / rep.time_to_solution;
     println!(
@@ -215,16 +277,34 @@ fn campaign(args: &Args) -> anyhow::Result<Campaign> {
     Campaign::run(ccfg, true)
 }
 
+/// Write the Perfetto trace JSON for a finished run (`--trace PATH`).
+fn write_trace(path: &Path, cfg: &RunConfig, rep: &RunReport) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, ulfm_ftgmres::trace::perfetto_json(rep, cfg))?;
+    eprintln!("wrote trace {}", path.display());
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args = parse_args()?;
     match args.cmd.as_str() {
         "run" => {
             let rep = coordinator::run(&args.cfg)?;
             print_report(&args.cfg, &rep);
+            if let Some(p) = &args.trace {
+                write_trace(p, &args.cfg, &rep)?;
+            }
         }
         "report" => {
             let rep = coordinator::run(&args.cfg)?;
             print_report(&args.cfg, &rep);
+            if let Some(p) = &args.trace {
+                write_trace(p, &args.cfg, &rep)?;
+            }
             if !rep.ckpt.is_empty() {
                 println!("\n{}", ulfm_ftgmres::figures::ckpt_table(&rep).to_text());
             }

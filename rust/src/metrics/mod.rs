@@ -39,6 +39,33 @@ pub const ALL_PHASES: [Phase; 7] = [
     Phase::Idle,
 ];
 
+impl Phase {
+    /// Stable lowercase name, used by trace exports and report tables.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Compute => "compute",
+            Phase::Comm => "comm",
+            Phase::Checkpoint => "checkpoint",
+            Phase::Recovery => "recovery",
+            Phase::Reconfig => "reconfig",
+            Phase::Recompute => "recompute",
+            Phase::Idle => "idle",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Phase::Compute => 0,
+            Phase::Comm => 1,
+            Phase::Checkpoint => 2,
+            Phase::Recovery => 3,
+            Phase::Reconfig => 4,
+            Phase::Recompute => 5,
+            Phase::Idle => 6,
+        }
+    }
+}
+
 /// Accumulated virtual seconds per phase for one rank.
 #[derive(Debug, Clone, Default)]
 pub struct PhaseTimers {
@@ -101,6 +128,53 @@ impl PhaseTimers {
             Phase::Idle => self.idle = v,
         }
     }
+}
+
+/// Order statistics of one phase's per-rank virtual seconds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseStat {
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+/// Cross-rank per-phase distributions (nearest-rank percentiles over the
+/// surviving ranks) — the spread behind the `max_phases` headline.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseDist {
+    stats: [PhaseStat; 7],
+}
+
+impl PhaseDist {
+    pub fn from_timers<'a, I>(timers: I) -> Self
+    where
+        I: Iterator<Item = &'a PhaseTimers> + Clone,
+    {
+        let mut out = PhaseDist::default();
+        for p in ALL_PHASES {
+            let mut vals: Vec<f64> = timers.clone().map(|t| t.get(p)).collect();
+            vals.sort_by(f64::total_cmp);
+            out.stats[p.index()] = PhaseStat {
+                p50: percentile(&vals, 0.50),
+                p95: percentile(&vals, 0.95),
+                max: vals.last().copied().unwrap_or(0.0),
+            };
+        }
+        out
+    }
+
+    pub fn get(&self, p: Phase) -> PhaseStat {
+        self.stats[p.index()]
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample (0.0 if empty).
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let k = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[k - 1]
 }
 
 /// One recovery-policy decision, recorded at the moment a survivor chose a
@@ -179,6 +253,9 @@ pub struct RankReport {
     /// Recovery attempts this rank abandoned through the epoch fence
     /// (nested failures poisoning in-flight recovery protocol).
     pub recovery_retries: u64,
+    /// Virtual-time trace stream (empty unless `RunConfig::trace` is on) —
+    /// see [`crate::trace`].
+    pub trace: Vec<crate::trace::TraceEvent>,
 }
 
 /// Aggregated result of one solver run (one configuration, one campaign leg).
@@ -216,6 +293,11 @@ pub struct RunReport {
     /// survivors, so the max counts events-worth of retries, not the
     /// rank-count multiple a sum would).
     pub recovery_retries: u64,
+    /// Cross-rank per-phase distributions over the surviving ranks.
+    pub phase_dist: PhaseDist,
+    /// Recovery critical-path analysis ([`crate::trace::critical_path`]);
+    /// `None` unless the run was traced.
+    pub critical_path: Option<crate::trace::CriticalPathReport>,
 }
 
 impl RunReport {
@@ -270,6 +352,16 @@ impl RunReport {
                 decisions.push(d);
             }
         }
+        // `max_phases.max_with` above cannot double-count overlapping
+        // recovery attempts: each rank's timers charge every virtual second
+        // to exactly one phase (the clock only moves through `advance`/
+        // `advance_to`, each of which charges its dt once), so per rank
+        // `phases.total() == finish_time`, retries included — and the
+        // element-wise max never adds across ranks.  Pinned by
+        // `max_with_takes_max_not_sum_over_overlapping_recoveries` below and
+        // by the `every_virtual_second_charged_once` integration test.
+        let phase_dist = PhaseDist::from_timers(survivors.iter().map(|r| &r.phases));
+        let critical_path = crate::trace::critical_path(&ranks);
         RunReport {
             time_to_solution: tts,
             max_phases,
@@ -282,6 +374,8 @@ impl RunReport {
             decisions,
             ckpt: ckpt_by_version.into_values().collect(),
             recovery_retries: retries,
+            phase_dist,
+            critical_path,
         }
     }
 
@@ -343,6 +437,31 @@ mod tests {
     }
 
     #[test]
+    fn max_with_takes_max_not_sum_over_overlapping_recoveries() {
+        // Two survivors recover over the same virtual window (every
+        // nested-failure run does this); the campaign maximum must be the
+        // slowest rank's time per phase, never a sum across ranks.
+        let mut a = PhaseTimers { recovery: 3.0, reconfig: 1.0, ..Default::default() };
+        let b = PhaseTimers { recovery: 2.5, reconfig: 1.5, ..Default::default() };
+        a.max_with(&b);
+        assert_eq!(a.recovery, 3.0);
+        assert_eq!(a.reconfig, 1.5);
+        assert!((a.total() - 4.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn phase_dist_percentiles_over_ranks() {
+        let t = |c: f64| PhaseTimers { compute: c, ..Default::default() };
+        let timers = [t(1.0), t(2.0), t(3.0), t(4.0)];
+        let d = PhaseDist::from_timers(timers.iter());
+        let s = d.get(Phase::Compute);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.p95, 4.0);
+        assert_eq!(s.max, 4.0);
+        assert_eq!(d.get(Phase::Idle), PhaseStat::default());
+    }
+
+    #[test]
     fn run_report_excludes_killed_and_unused_spares() {
         let mk = |wr, fin, killed, spare, iters| RankReport {
             world_rank: wr,
@@ -354,6 +473,7 @@ mod tests {
             decisions: Vec::new(),
             ckpt: Vec::new(),
             recovery_retries: 0,
+            trace: Vec::new(),
         };
         let ranks = vec![
             mk(0, 10.0, false, false, 100),
@@ -391,6 +511,7 @@ mod tests {
             decisions,
             ckpt: Vec::new(),
             recovery_retries: 0,
+            trace: Vec::new(),
         };
         let ranks = vec![
             // Killed ranks are excluded from the merge entirely.
@@ -435,6 +556,7 @@ mod tests {
             decisions,
             ckpt: Vec::new(),
             recovery_retries: 0,
+            trace: Vec::new(),
         };
         let ranks = vec![
             mk(0, true, false, vec![dec(0, 1.0, 3, "substitute")]),
@@ -475,6 +597,7 @@ mod tests {
             decisions: Vec::new(),
             ckpt,
             recovery_retries: 0,
+            trace: Vec::new(),
         };
         let ranks = vec![
             mk(0, vec![rec(1, 800), rec(2, 80)]),

@@ -103,6 +103,11 @@ impl NetParams {
 }
 
 /// Result of routing one message through the model.
+///
+/// `arrival` is the stamp the receiver's clock jumps to and — when tracing
+/// is on (DESIGN.md §13) — half of the `(send, recv)` edge key that pairs
+/// the sender's flow-start with the receiver's flow-end in the exported
+/// trace, so it must be a pure function of (route, bytes, depart).
 #[derive(Debug, Clone, Copy)]
 pub struct Transit {
     /// Virtual time at which the message is fully received.

@@ -190,6 +190,8 @@ pub async fn handle_failure_fenced(
     // and propagate, preserving the pre-fence fail-loudly semantics
     // instead of livelocking on retries that cannot succeed.
     const STALL_LIMIT: u32 = 16;
+    let entered_at = ctx.clock;
+    ctx.trace_push(|| crate::trace::TraceEvent::RecoveryBegin { t: entered_at });
     let mut fence = EpochFence::new(comm);
     let snap = state.snapshot();
     let mut stalls = 0u32;
@@ -201,7 +203,14 @@ pub async fn handle_failure_fenced(
         let result =
             attempt_recovery(ctx, comm, state, store, ckpt, host, &mut fence, decide).await;
         match result {
-            Ok(record) => return Ok((fence.retries(), record)),
+            Ok(record) => {
+                let (done_at, attempts) = (ctx.clock, fence.retries());
+                ctx.trace_push(|| crate::trace::TraceEvent::RecoveryEnd {
+                    t: done_at,
+                    attempts,
+                });
+                return Ok((fence.retries(), record));
+            }
             Err(MpiError::Killed) => return Err(MpiError::Killed),
             Err(e) => {
                 let dead_now = ctx.world.dead_set().len();

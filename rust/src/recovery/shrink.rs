@@ -148,6 +148,12 @@ async fn recover_inner(
     // fenced driver rolls back on abandon, so an interrupted
     // redistribution re-plans cleanly from the event-entry partition.
     ctx.phase_point(ProtoPhase::Redistribute)?;
+    let (n_out, at) = (mine.outgoing.len() as i64, ctx.clock);
+    ctx.trace_push(|| crate::trace::TraceEvent::Mark {
+        label: "redistribute-plan",
+        arg: n_out,
+        t: at,
+    });
 
     // 4. Ship my outgoing segments (all objects), then receive incoming.
     for id in REDIST_OBJS {

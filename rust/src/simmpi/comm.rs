@@ -239,6 +239,12 @@ impl Comm {
             })
             .await?;
         let out = self.bcast_tree(ctx, base + 1, reduced).await?;
+        let at = ctx.clock;
+        ctx.trace_push(|| crate::trace::TraceEvent::Mark {
+            label: "agree",
+            arg: out.i[0],
+            t: at,
+        });
         Ok(out.i[0] as u64)
     }
 

@@ -15,6 +15,7 @@ use crate::metrics::{CkptRecord, DecisionRecord, Phase, PhaseTimers};
 use crate::simmpi::msg::{Ctl, Msg, Payload, Tag, WordArena};
 use crate::simmpi::world::{World, WorldRank};
 use crate::simmpi::{MpiError, MpiResult};
+use crate::trace::{TraceBuf, TraceEvent};
 
 /// Epoch used by system (non-communicator) messages.
 pub const SYS_EPOCH: u64 = 0;
@@ -67,6 +68,10 @@ pub struct Ctx {
     joins: VecDeque<(u64, Vec<WorldRank>, Vec<WorldRank>, usize)>,
     /// Shutdown received.
     shutdown: bool,
+    /// Virtual-time trace accumulator ([`crate::trace`]); `None` unless the
+    /// run was started with tracing on, keeping the disabled hot path to a
+    /// single branch per hook (gated by the `trace_off_commit` bench leg).
+    pub trace: Option<Box<TraceBuf>>,
 }
 
 impl Ctx {
@@ -91,6 +96,34 @@ impl Ctx {
             revoked: BTreeSet::new(),
             joins: VecDeque::new(),
             shutdown: false,
+            trace: None,
+        }
+    }
+
+    /// Start recording a virtual-time trace (idempotent; normally called by
+    /// the coordinator right after construction when `RunConfig::trace` is
+    /// set, so the stream covers the whole rank lifetime).
+    pub fn enable_trace(&mut self) {
+        if self.trace.is_none() {
+            self.trace = Some(Box::default());
+        }
+    }
+
+    /// Harvest the trace stream, closing the open phase span at the current
+    /// clock.  Returns an empty vec when tracing was off.
+    pub fn take_trace(&mut self) -> Vec<TraceEvent> {
+        match self.trace.take() {
+            Some(buf) => buf.into_events(self.clock),
+            None => Vec::new(),
+        }
+    }
+
+    /// Record one trace event; the closure is only evaluated when tracing is
+    /// on, so callers pay nothing on the disabled path.
+    #[inline]
+    pub fn trace_push(&mut self, make: impl FnOnce() -> TraceEvent) {
+        if let Some(tr) = self.trace.as_deref_mut() {
+            tr.push(make());
         }
     }
 
@@ -106,16 +139,24 @@ impl Ctx {
     /// Advance the virtual clock by `dt`, charging the current phase.
     pub fn advance(&mut self, dt: f64) {
         debug_assert!(dt >= 0.0, "negative advance {dt}");
+        let eff = self.effective_phase();
+        if let Some(tr) = self.trace.as_deref_mut() {
+            tr.pre_charge(eff, self.clock);
+        }
         self.clock += dt;
-        self.timers.charge(self.effective_phase(), dt);
+        self.timers.charge(eff, dt);
     }
 
     /// Advance the clock to absolute virtual time `t` (no-op if in the past).
     pub fn advance_to(&mut self, t: f64) {
         if t > self.clock {
+            let eff = self.effective_phase();
+            if let Some(tr) = self.trace.as_deref_mut() {
+                tr.pre_charge(eff, self.clock);
+            }
             let dt = t - self.clock;
             self.clock = t;
-            self.timers.charge(self.effective_phase(), dt);
+            self.timers.charge(eff, dt);
         }
     }
 
@@ -145,6 +186,8 @@ impl Ctx {
         let hits = self.phase_hits.entry(phase).or_insert(0);
         *hits += 1;
         let n = *hits;
+        let at = self.clock;
+        self.trace_push(|| TraceEvent::Proto { phase, n, t: at });
         if self.world.injector.should_die_at_phase(self.rank, phase, n)
             || !self.world.is_alive(self.rank)
         {
@@ -181,6 +224,15 @@ impl Ctx {
             Payload::Ctl(_) => 16,
         };
         let t = self.world.transit(self.rank, dst, bytes, self.clock);
+        let (send_at, arrival) = (self.clock, t.arrival);
+        self.trace_push(|| TraceEvent::Send {
+            dst,
+            epoch,
+            tag,
+            bytes: bytes as u64,
+            t: send_at,
+            arrival,
+        });
         self.world
             .push(dst, Msg { src: self.rank, epoch, tag, arrival: t.arrival, payload });
         self.advance(t.sender_busy);
@@ -290,8 +342,11 @@ impl Ctx {
 
     /// Clock bookkeeping for a delivered message.
     fn deliver(&mut self, m: &Msg) {
+        let t_before = self.clock;
         self.advance_to(m.arrival);
         self.advance(self.world.net.params.recv_overhead);
+        let (src, epoch, tag, arrival, t) = (m.src, m.epoch, m.tag, m.arrival, self.clock);
+        self.trace_push(|| TraceEvent::Recv { src, epoch, tag, t_before, arrival, t });
     }
 
     /// Charge failure-detection latency once per dead peer.
@@ -300,6 +355,8 @@ impl Ctx {
         if self.detected.insert(r) {
             let base = self.world.death_time(r).unwrap_or(self.clock);
             self.advance_to(base + self.world.net.params.detect_latency);
+            let at = self.clock;
+            self.trace_push(|| TraceEvent::Mark { label: "detect-death", arg: r as i64, t: at });
         }
     }
 
@@ -317,6 +374,8 @@ impl Ctx {
     /// rather than from registry-read timing (see
     /// `die_broadcasts_co_scheduled_deaths`).
     pub fn die(&mut self) -> MpiError {
+        let (rank, at) = (self.rank, self.clock);
+        self.trace_push(|| TraceEvent::Mark { label: "died", arg: rank as i64, t: at });
         let co = self.world.injector.co_scheduled(self.rank, u64::MAX);
         for &c in &co {
             self.world.mark_dead(c, self.clock);
@@ -462,6 +521,52 @@ mod tests {
         c0.send_raw(1, 2, 5, Payload::Data(Blob::scalar(5.0))).unwrap();
         assert_eq!(block_on(c1.recv_match(0, 2, 5)).unwrap().data().f, vec![5.0]);
         assert!(c1.pending.is_empty());
+    }
+
+    #[test]
+    fn trace_hooks_record_send_recv_and_spans() {
+        let w = two_rank_world();
+        let mut c0 = Ctx::new(w.clone(), 0);
+        let mut c1 = Ctx::new(w, 1);
+        assert!(c0.take_trace().is_empty(), "untraced ctx yields no events");
+        c0.enable_trace();
+        c1.enable_trace();
+        c0.send_raw(1, 1, 7, Payload::Data(Blob::scalar(42.0))).unwrap();
+        block_on(c1.recv_match(0, 1, 7)).unwrap();
+        let t0 = c0.take_trace();
+        let t1 = c1.take_trace();
+        let send = t0
+            .iter()
+            .find_map(|e| match *e {
+                TraceEvent::Send { dst, epoch, tag, arrival, .. } => {
+                    Some((dst, epoch, tag, arrival))
+                }
+                _ => None,
+            })
+            .expect("sender recorded a Send edge");
+        let recv = t1
+            .iter()
+            .find_map(|e| match *e {
+                TraceEvent::Recv { src, epoch, tag, arrival, .. } => {
+                    Some((src, epoch, tag, arrival))
+                }
+                _ => None,
+            })
+            .expect("receiver recorded a Recv edge");
+        // Both endpoints can derive the same edge key independently.
+        assert_eq!(send, (1, 1, 7, recv.3));
+        assert_eq!(recv.0, 0);
+        // Spans cover the whole charged lifetime of each rank.
+        for (ctx_total, trace) in [(c0.timers.total(), &t0), (c1.timers.total(), &t1)] {
+            let spanned: f64 = trace
+                .iter()
+                .map(|e| match *e {
+                    TraceEvent::Span { t0, t1, .. } => t1 - t0,
+                    _ => 0.0,
+                })
+                .sum();
+            assert!((spanned - ctx_total).abs() < 1e-12, "{spanned} vs {ctx_total}");
+        }
     }
 
     /// Regression (ordering audit, DESIGN.md §12): a whole co-scheduled kill

@@ -11,6 +11,11 @@
 //!   tasks on one thread; a task that returns `Pending` is parked until a
 //!   mailbox push marks its rank ready again.  Scheduling is a deterministic
 //!   FIFO, so a given (campaign, seed) always replays the same interleaving.
+//!
+//! Neither driver needs trace-specific code: trace buffers (DESIGN.md §13)
+//! are per-rank state inside `Ctx` and record only virtual-time facts, so
+//! the exported trace is byte-identical across both engines — asserted for
+//! the whole campaign matrix by `tests/engine_differential.rs`.
 
 use std::future::Future;
 use std::pin::Pin;

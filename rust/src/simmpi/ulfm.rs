@@ -266,6 +266,12 @@ pub async fn shrink_fenced(ctx: &mut Ctx, comm: &Comm, fence: &mut EpochFence) -
         if !ctx.world.is_alive(ctx.rank) {
             return Err(ctx.die());
         }
+        let (attempt, at) = (fence.retries() as i64, ctx.clock);
+        ctx.trace_push(|| crate::trace::TraceEvent::Mark {
+            label: "fence-attempt",
+            arg: attempt,
+            t: at,
+        });
         match shrink_at(ctx, comm, fence.shrink_epoch()).await {
             Ok(c) => {
                 // A member may have died after voting but before the

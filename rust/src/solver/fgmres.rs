@@ -341,6 +341,8 @@ impl<'a> FtGmres<'a> {
         state.scalars.inner_iters_done = next;
         state.hwm_iters = state.hwm_iters.max(next);
         ctx.iterations += 1;
+        let (n, at) = (ctx.iterations, ctx.clock);
+        ctx.trace_push(|| crate::trace::TraceEvent::Iter { n, t: at });
         Ok(())
     }
 }

@@ -1,0 +1,361 @@
+//! Recovery critical-path analysis over virtual-time traces (DESIGN.md §13).
+//!
+//! For every recovery event (cross-rank cluster of overlapping
+//! [`TraceEvent::RecoveryBegin`]/[`TraceEvent::RecoveryEnd`] windows) we walk
+//! message edges *backward* from the completion: starting at the last rank to
+//! finish, find the latest **binding** receive (one where the message arrived
+//! after the receiver was ready, i.e. the receiver waited), attribute the
+//! local segment since that receive to phases via the rank's spans, then jump
+//! to the sender at its send time and repeat.  Every jump strictly decreases
+//! virtual time (netsim latency is positive), so the walk terminates at the
+//! window start.
+//!
+//! The result splits each recovery window's wall time into phase-attributed
+//! serial work (reconfiguration + recovery on the path), wire time, and the
+//! remainder — work that was *not* on the serial path and could in principle
+//! be hidden behind compute.  `overlap_efficiency = 1 - serial/wall` is the
+//! headline: the fraction of the recovery window hideable behind compute,
+//! the measurement the ROADMAP's non-blocking-recovery item needs.
+
+use std::collections::HashMap;
+
+use crate::metrics::{Phase, PhaseTimers, RankReport};
+use crate::trace::TraceEvent;
+
+/// One recovery event's critical-path breakdown.
+#[derive(Debug, Clone)]
+pub struct RecoveryPath {
+    /// Event index (time order).
+    pub event: usize,
+    /// World ranks whose recovery windows overlap into this event.
+    pub ranks: Vec<usize>,
+    /// Earliest `RecoveryBegin` in the cluster.
+    pub t_begin: f64,
+    /// Latest `RecoveryEnd` in the cluster.
+    pub t_end: f64,
+    /// `t_end - t_begin`.
+    pub wall: f64,
+    /// Virtual seconds of path segments attributed per phase.
+    pub by_phase: PhaseTimers,
+    /// Virtual seconds the path spent in flight (send → arrival).
+    pub wire_secs: f64,
+    /// Binding message edges traversed by the backward walk.
+    pub hops: usize,
+    /// Max abandoned fence attempts among the clustered completions.
+    pub attempts: u64,
+    /// Reconfig + recovery seconds on the path — serialized repair work.
+    pub serial_secs: f64,
+    /// `max(wall - serial, 0)` — hideable behind compute.
+    pub hideable_secs: f64,
+    /// `hideable / wall` (1.0 for an empty window).
+    pub overlap_efficiency: f64,
+}
+
+/// All recovery events of a run, plus run-level totals.
+#[derive(Debug, Clone)]
+pub struct CriticalPathReport {
+    pub events: Vec<RecoveryPath>,
+    /// Sum of event walls.
+    pub total_wall: f64,
+    /// Sum of event serial (reconfig + recovery on the path) seconds.
+    pub total_serial: f64,
+    /// `1 - total_serial / total_wall` (1.0 when no recovery happened).
+    pub overlap_efficiency: f64,
+}
+
+impl CriticalPathReport {
+    /// Path-attributed seconds summed over events, plus total wire seconds —
+    /// the per-phase "critical-path share" row of the trace report.
+    pub fn path_phase_totals(&self) -> (PhaseTimers, f64) {
+        let mut t = PhaseTimers::default();
+        let mut wire = 0.0;
+        for e in &self.events {
+            for p in crate::metrics::ALL_PHASES {
+                t.charge(p, e.by_phase.get(p));
+            }
+            wire += e.wire_secs;
+        }
+        (t, wire)
+    }
+}
+
+/// A delivered message edge as seen by the receiver.
+#[derive(Debug, Clone, Copy)]
+struct RecvEdge {
+    src: usize,
+    epoch: u64,
+    tag: u32,
+    t_before: f64,
+    arrival: f64,
+    t: f64,
+}
+
+/// Per-rank indexed view of a trace stream.  Spans and receives are each
+/// monotone in time by construction (spans close in clock order; receives
+/// are recorded at delivery).
+#[derive(Debug, Default)]
+struct View {
+    spans: Vec<(f64, f64, Phase)>,
+    recvs: Vec<RecvEdge>,
+}
+
+impl View {
+    /// Charge `timers` with the phase overlap of spans against `[a, b]`.
+    fn attribute(&self, a: f64, b: f64, timers: &mut PhaseTimers) {
+        for &(t0, t1, p) in &self.spans {
+            if t1 <= a {
+                continue;
+            }
+            if t0 >= b {
+                break;
+            }
+            timers.charge(p, t1.min(b) - t0.max(a));
+        }
+    }
+
+    /// Latest binding receive with `t_begin < recv.t <= t`, if any.
+    fn latest_binding_recv(&self, t: f64, t_begin: f64) -> Option<RecvEdge> {
+        let cut = self.recvs.partition_point(|r| r.t <= t);
+        self.recvs[..cut]
+            .iter()
+            .rev()
+            .take_while(|r| r.t > t_begin)
+            .find(|r| r.arrival > r.t_before)
+            .copied()
+    }
+}
+
+/// Compute the critical-path report from per-rank traces, or `None` when no
+/// rank recorded any events (tracing disabled).  Traced failure-free runs
+/// yield `Some` with an empty event list and overlap efficiency 1.0.
+pub fn critical_path(ranks: &[RankReport]) -> Option<CriticalPathReport> {
+    if ranks.iter().all(|r| r.trace.is_empty()) {
+        return None;
+    }
+    let max_rank = ranks.iter().map(|r| r.world_rank).max().unwrap_or(0);
+    let mut views: Vec<View> = (0..=max_rank).map(|_| View::default()).collect();
+    // (src, dst, epoch, tag, arrival bits) -> send time.  Arrival bits make
+    // the key unique: a sender's clock strictly increases between sends to
+    // the same (dst, epoch, tag), so the modeled arrivals differ.
+    let mut sends: HashMap<(usize, usize, u64, u32, u64), f64> = HashMap::new();
+    // (begin, end, rank, attempts) recovery windows, completed ones only.
+    let mut windows: Vec<(f64, f64, usize, u64)> = Vec::new();
+    for r in ranks {
+        let view = &mut views[r.world_rank];
+        let mut open: Option<f64> = None;
+        for e in &r.trace {
+            match *e {
+                TraceEvent::Span { phase, t0, t1 } => view.spans.push((t0, t1, phase)),
+                TraceEvent::Recv { src, epoch, tag, t_before, arrival, t } => {
+                    view.recvs.push(RecvEdge { src, epoch, tag, t_before, arrival, t });
+                }
+                TraceEvent::Send { dst, epoch, tag, t, arrival, .. } => {
+                    sends.insert((r.world_rank, dst, epoch, tag, arrival.to_bits()), t);
+                }
+                TraceEvent::RecoveryBegin { t } => open = Some(t),
+                TraceEvent::RecoveryEnd { t, attempts } => {
+                    if let Some(b) = open.take() {
+                        windows.push((b, t, r.world_rank, attempts));
+                    }
+                }
+                _ => {}
+            }
+        }
+        // An unmatched RecoveryBegin (rank killed mid-recovery) completes no
+        // window of its own; survivors' windows still cover the event.
+    }
+    windows.sort_by(|a, b| {
+        a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)).then(a.2.cmp(&b.2))
+    });
+    // Cluster overlapping windows into events.
+    let mut clusters: Vec<Vec<(f64, f64, usize, u64)>> = Vec::new();
+    let mut cluster_end = f64::NEG_INFINITY;
+    for w in windows {
+        match clusters.last_mut() {
+            Some(c) if w.0 <= cluster_end => {
+                cluster_end = cluster_end.max(w.1);
+                c.push(w);
+            }
+            _ => {
+                cluster_end = w.1;
+                clusters.push(vec![w]);
+            }
+        }
+    }
+    let mut events = Vec::new();
+    for (idx, c) in clusters.iter().enumerate() {
+        events.push(walk_cluster(idx, c, &views, &sends));
+    }
+    let total_wall: f64 = events.iter().map(|e| e.wall).sum();
+    let total_serial: f64 = events.iter().map(|e| e.serial_secs).sum();
+    let overlap_efficiency =
+        if total_wall > 0.0 { (1.0 - total_serial / total_wall).max(0.0) } else { 1.0 };
+    Some(CriticalPathReport { events, total_wall, total_serial, overlap_efficiency })
+}
+
+fn walk_cluster(
+    idx: usize,
+    cluster: &[(f64, f64, usize, u64)],
+    views: &[View],
+    sends: &HashMap<(usize, usize, u64, u32, u64), f64>,
+) -> RecoveryPath {
+    let t_begin = cluster.iter().map(|w| w.0).fold(f64::INFINITY, f64::min);
+    let t_end = cluster.iter().map(|w| w.1).fold(f64::NEG_INFINITY, f64::max);
+    let attempts = cluster.iter().map(|w| w.3).max().unwrap_or(0);
+    let mut ranks: Vec<usize> = cluster.iter().map(|w| w.2).collect();
+    ranks.sort_unstable();
+    ranks.dedup();
+    // Start at the last completion; ties go to the smallest rank.
+    let (mut r, mut t) = cluster
+        .iter()
+        .filter(|w| w.1 >= t_end)
+        .map(|w| (w.2, w.1))
+        .min_by(|a, b| a.0.cmp(&b.0))
+        .expect("non-empty cluster");
+    let mut by_phase = PhaseTimers::default();
+    let mut wire_secs = 0.0;
+    let mut hops = 0usize;
+    loop {
+        let Some(edge) = views[r].latest_binding_recv(t, t_begin) else {
+            views[r].attribute(t_begin, t, &mut by_phase);
+            break;
+        };
+        // Local segment since the message arrived; the blocked wait before
+        // `edge.arrival` overlaps the wire and is not local work.
+        views[r].attribute(edge.arrival.max(t_begin), t, &mut by_phase);
+        let key = (edge.src, r, edge.epoch, edge.tag, edge.arrival.to_bits());
+        let Some(&send_t) = sends.get(&key) else {
+            // Sender untraced (shouldn't happen: killed ranks are harvested
+            // too) — charge the remainder locally and stop.
+            views[r].attribute(t_begin, edge.arrival.max(t_begin), &mut by_phase);
+            break;
+        };
+        wire_secs += (edge.arrival - send_t.max(t_begin)).max(0.0);
+        hops += 1;
+        if send_t <= t_begin {
+            break;
+        }
+        r = edge.src;
+        t = send_t;
+    }
+    let wall = (t_end - t_begin).max(0.0);
+    let serial_secs = by_phase.get(Phase::Reconfig) + by_phase.get(Phase::Recovery);
+    let hideable_secs = (wall - serial_secs).max(0.0);
+    let overlap_efficiency = if wall > 0.0 { hideable_secs / wall } else { 1.0 };
+    RecoveryPath {
+        event: idx,
+        ranks,
+        t_begin,
+        t_end,
+        wall,
+        by_phase,
+        wire_secs,
+        hops,
+        attempts,
+        serial_secs,
+        hideable_secs,
+        overlap_efficiency,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rank(world_rank: usize, trace: Vec<TraceEvent>) -> RankReport {
+        RankReport {
+            world_rank,
+            finish_time: 10.0,
+            phases: PhaseTimers::default(),
+            iterations: 1,
+            killed: false,
+            was_spare: false,
+            decisions: Vec::new(),
+            ckpt: Vec::new(),
+            recovery_retries: 0,
+            trace,
+        }
+    }
+
+    #[test]
+    fn untraced_runs_have_no_report() {
+        assert!(critical_path(&[rank(0, Vec::new())]).is_none());
+    }
+
+    #[test]
+    fn traced_failure_free_run_is_fully_hideable() {
+        let r = rank(0, vec![TraceEvent::Span { phase: Phase::Compute, t0: 0.0, t1: 5.0 }]);
+        let rep = critical_path(&[r]).unwrap();
+        assert!(rep.events.is_empty());
+        assert_eq!(rep.overlap_efficiency, 1.0);
+    }
+
+    #[test]
+    fn backward_walk_jumps_through_a_binding_edge() {
+        // Rank 1 recovers over [1, 5]; it waits on a message sent by rank 0
+        // at t=2 arriving at t=3, then does 2s of recovery work.  Rank 0's
+        // pre-send segment [1, 2] is reconfig.
+        let r0 = rank(
+            0,
+            vec![
+                TraceEvent::RecoveryBegin { t: 1.0 },
+                TraceEvent::Send { dst: 1, epoch: 2, tag: 7, bytes: 64, t: 2.0, arrival: 3.0 },
+                TraceEvent::Span { phase: Phase::Reconfig, t0: 1.0, t1: 2.5 },
+                TraceEvent::RecoveryEnd { t: 2.5, attempts: 0 },
+            ],
+        );
+        let r1 = rank(
+            1,
+            vec![
+                TraceEvent::RecoveryBegin { t: 1.0 },
+                TraceEvent::Recv {
+                    src: 0,
+                    epoch: 2,
+                    tag: 7,
+                    t_before: 1.5,
+                    arrival: 3.0,
+                    t: 3.0,
+                },
+                TraceEvent::Span { phase: Phase::Reconfig, t0: 1.0, t1: 1.5 },
+                TraceEvent::Span { phase: Phase::Recovery, t0: 1.5, t1: 5.0 },
+                TraceEvent::RecoveryEnd { t: 5.0, attempts: 1 },
+            ],
+        );
+        let rep = critical_path(&[r0, r1]).unwrap();
+        assert_eq!(rep.events.len(), 1);
+        let e = &rep.events[0];
+        assert_eq!(e.ranks, vec![0, 1]);
+        assert_eq!(e.hops, 1);
+        assert_eq!(e.attempts, 1);
+        assert!((e.wall - 4.0).abs() < 1e-12);
+        // Path: rank 1 local [3, 5] (recovery) + wire [2, 3] + rank 0 [1, 2]
+        // (reconfig).
+        assert!((e.by_phase.get(Phase::Recovery) - 2.0).abs() < 1e-12);
+        assert!((e.by_phase.get(Phase::Reconfig) - 1.0).abs() < 1e-12);
+        assert!((e.wire_secs - 1.0).abs() < 1e-12);
+        assert!((e.serial_secs - 3.0).abs() < 1e-12);
+        assert!((e.overlap_efficiency - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_windows_form_separate_events() {
+        let mk = |b: f64, e: f64| {
+            rank(
+                0,
+                vec![
+                    TraceEvent::RecoveryBegin { t: b },
+                    TraceEvent::Span { phase: Phase::Recovery, t0: b, t1: e },
+                    TraceEvent::RecoveryEnd { t: e, attempts: 0 },
+                ],
+            )
+        };
+        let mut r = mk(1.0, 2.0);
+        let extra = mk(4.0, 6.0);
+        r.trace.extend(extra.trace);
+        let rep = critical_path(&[r]).unwrap();
+        assert_eq!(rep.events.len(), 2);
+        assert!((rep.total_wall - 3.0).abs() < 1e-12);
+        assert!((rep.total_serial - 3.0).abs() < 1e-12);
+        assert_eq!(rep.overlap_efficiency, 0.0);
+    }
+}

@@ -1,0 +1,139 @@
+//! Virtual-time tracing (DESIGN.md §13).
+//!
+//! When enabled (`--trace <path>` / config key `trace`), every rank records a
+//! structured event stream stamped with its **virtual clock**: contiguous
+//! phase spans (one per maximal run of same-phase charges), protocol-phase
+//! entry points (the PR-4 [`crate::failure::ProtoPhase`] hooks), solver
+//! iterations, and message send→recv edges carrying the netsim arrival
+//! timestamps.  Because virtual time is engine-invariant, the resulting trace
+//! is byte-identical across `--engine threads` and `--engine events`
+//! (asserted by `tests/engine_differential.rs`).
+//!
+//! Two consumers live in this module:
+//!
+//! * [`perfetto::perfetto_json`] — Chrome/Perfetto trace-event JSON, one
+//!   track per rank, flow events for message edges.
+//! * [`critical_path::critical_path`] — walks message edges backward from
+//!   each recovery completion to attribute recovery wall-time to phases and
+//!   compute overlap-efficiency (the fraction of a recovery window that is
+//!   *not* serialized reconfiguration/recovery work and could hide behind
+//!   compute).
+//!
+//! Tracing is a zero-cost abstraction when disabled: the only cost on the
+//! hot path is one `Option` test per hook, and no event is ever allocated
+//! (gated by the `trace_off_commit` leg of `benches/hotpath.rs`).
+
+use crate::failure::ProtoPhase;
+use crate::metrics::Phase;
+
+pub mod critical_path;
+pub mod perfetto;
+
+pub use critical_path::{critical_path, CriticalPathReport, RecoveryPath};
+pub use perfetto::perfetto_json;
+
+/// One per-rank trace record, stamped in virtual seconds.
+///
+/// Within a rank the stream is in program order; all timestamps are
+/// non-decreasing except that a [`TraceEvent::Span`] is emitted when the
+/// span *closes* (its `t0` precedes events recorded while it was open).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// A maximal run of virtual-time charges to one phase: `[t0, t1)`.
+    Span { phase: Phase, t0: f64, t1: f64 },
+    /// n-th entry (1-based) into a protocol phase on this rank.
+    Proto { phase: ProtoPhase, n: u32, t: f64 },
+    /// Inner-iteration completion (`n` = cumulative count on this rank).
+    Iter { n: u64, t: f64 },
+    /// A data-payload send: enqueued at `t`, modeled to arrive at `arrival`.
+    Send { dst: usize, epoch: u64, tag: u32, bytes: u64, t: f64, arrival: f64 },
+    /// A data-payload delivery.  `t_before` is the receiver's clock when it
+    /// committed to this message; `arrival > t_before` means the receiver
+    /// waited (a *binding* edge on the critical path); `t` is the clock
+    /// after the arrival jump plus receive overhead.
+    Recv { src: usize, epoch: u64, tag: u32, t_before: f64, arrival: f64, t: f64 },
+    /// A labelled instant (fence attempts, death detection, commit marks).
+    Mark { label: &'static str, arg: i64, t: f64 },
+    /// Entry into fenced failure recovery ([`crate::recovery::handle_failure_fenced`]).
+    RecoveryBegin { t: f64 },
+    /// Successful completion of fenced recovery after `attempts` abandoned
+    /// fence attempts.
+    RecoveryEnd { t: f64, attempts: u64 },
+}
+
+/// Per-rank trace accumulator, owned by [`crate::simmpi::Ctx`] behind an
+/// `Option<Box<_>>` so the disabled path stays pointer-sized and branch-only.
+#[derive(Debug, Default, Clone)]
+pub struct TraceBuf {
+    events: Vec<TraceEvent>,
+    cur_phase: Option<Phase>,
+    span_start: f64,
+}
+
+impl TraceBuf {
+    /// Called immediately before every virtual-time charge.  Coalesces
+    /// consecutive same-phase charges into one span; a phase switch closes
+    /// the open span at `now` (the clock *before* the new charge applies).
+    #[inline]
+    pub fn pre_charge(&mut self, phase: Phase, now: f64) {
+        match self.cur_phase {
+            Some(p) if p == phase => {}
+            Some(p) => {
+                if now > self.span_start {
+                    self.events.push(TraceEvent::Span { phase: p, t0: self.span_start, t1: now });
+                }
+                self.cur_phase = Some(phase);
+                self.span_start = now;
+            }
+            None => {
+                self.cur_phase = Some(phase);
+                self.span_start = now;
+            }
+        }
+    }
+
+    pub fn push(&mut self, e: TraceEvent) {
+        self.events.push(e);
+    }
+
+    /// Close the open span at the rank's final clock and return the stream.
+    pub fn into_events(mut self, end: f64) -> Vec<TraceEvent> {
+        if let Some(p) = self.cur_phase {
+            if end > self.span_start {
+                self.events.push(TraceEvent::Span { phase: p, t0: self.span_start, t1: end });
+            }
+        }
+        self.events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pre_charge_coalesces_same_phase_runs() {
+        let mut tb = TraceBuf::default();
+        tb.pre_charge(Phase::Compute, 0.0);
+        tb.pre_charge(Phase::Compute, 1.0);
+        tb.pre_charge(Phase::Comm, 3.0);
+        tb.pre_charge(Phase::Comm, 3.5);
+        let evs = tb.into_events(4.0);
+        assert_eq!(
+            evs,
+            vec![
+                TraceEvent::Span { phase: Phase::Compute, t0: 0.0, t1: 3.0 },
+                TraceEvent::Span { phase: Phase::Comm, t0: 3.0, t1: 4.0 },
+            ]
+        );
+    }
+
+    #[test]
+    fn zero_length_spans_are_dropped() {
+        let mut tb = TraceBuf::default();
+        tb.pre_charge(Phase::Compute, 2.0);
+        tb.pre_charge(Phase::Comm, 2.0); // switch with no elapsed time
+        let evs = tb.into_events(2.0); // and no tail time either
+        assert!(evs.is_empty(), "expected no spans, got {evs:?}");
+    }
+}

@@ -1,0 +1,193 @@
+//! Chrome/Perfetto trace-event JSON export (DESIGN.md §13).
+//!
+//! One process (`pid` 0), one track (`tid`) per world rank.  Phase spans
+//! become `"X"` duration events, protocol-phase entries and marks become
+//! `"i"` instants, solver iterations a `"C"` counter per rank, and message
+//! edges `"s"`/`"f"` flow pairs whose id is a 64-bit FNV-1a hash of
+//! `(src, dst, epoch, tag, arrival-bits)` — unique because a sender's clock
+//! strictly increases between sends, so modeled arrivals never repeat for
+//! one `(src, dst, epoch, tag)`.
+//!
+//! Timestamps are the per-rank **virtual clocks** in microseconds, printed
+//! with fixed 3-decimal formatting; everything about the byte stream is a
+//! pure function of the run's virtual-time history, so traces are
+//! byte-identical across `--engine threads` and `--engine events` (the
+//! `"engine"` config key is deliberately excluded from the metadata).
+
+use std::fmt::Write as _;
+
+use crate::config::RunConfig;
+use crate::metrics::{RunReport, ALL_PHASES};
+use crate::trace::TraceEvent;
+
+/// Microseconds with nanosecond resolution — the trace's canonical number
+/// format (fixed-width fractional part keeps the file deterministic).
+fn us(t: f64) -> String {
+    format!("{:.3}", t * 1e6)
+}
+
+/// Seconds with nanosecond resolution, for the metadata block.
+fn secs(t: f64) -> String {
+    format!("{t:.9}")
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Flow-event id for one message edge; both endpoints derive it
+/// independently from fields they each know.
+pub fn flow_id(src: usize, dst: usize, epoch: u64, tag: u32, arrival: f64) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    eat(&(src as u64).to_le_bytes());
+    eat(&(dst as u64).to_le_bytes());
+    eat(&epoch.to_le_bytes());
+    eat(&tag.to_le_bytes());
+    eat(&arrival.to_bits().to_le_bytes());
+    h
+}
+
+/// Render a run's traces as Chrome trace-event JSON (`--trace <path>`).
+pub fn perfetto_json(rep: &RunReport, cfg: &RunConfig) -> String {
+    let mut ev: Vec<String> = Vec::new();
+    for r in &rep.ranks {
+        let role = if r.was_spare { " (spare)" } else { "" };
+        ev.push(format!(
+            "{{\"ph\":\"M\",\"pid\":0,\"tid\":{},\"name\":\"thread_name\",\
+             \"args\":{{\"name\":\"rank {}{}\"}}}}",
+            r.world_rank, r.world_rank, role
+        ));
+        ev.push(format!(
+            "{{\"ph\":\"M\",\"pid\":0,\"tid\":{},\"name\":\"thread_sort_index\",\
+             \"args\":{{\"sort_index\":{}}}}}",
+            r.world_rank, r.world_rank
+        ));
+    }
+    for r in &rep.ranks {
+        let tid = r.world_rank;
+        for e in &r.trace {
+            match *e {
+                TraceEvent::Span { phase, t0, t1 } => ev.push(format!(
+                    "{{\"ph\":\"X\",\"pid\":0,\"tid\":{tid},\"cat\":\"phase\",\
+                     \"name\":\"{}\",\"ts\":{},\"dur\":{}}}",
+                    phase.name(),
+                    us(t0),
+                    us(t1 - t0)
+                )),
+                TraceEvent::Proto { phase, n, t } => ev.push(format!(
+                    "{{\"ph\":\"i\",\"s\":\"t\",\"pid\":0,\"tid\":{tid},\
+                     \"cat\":\"proto\",\"name\":\"{}\",\"ts\":{},\"args\":{{\"n\":{n}}}}}",
+                    phase.name(),
+                    us(t)
+                )),
+                TraceEvent::Iter { n, t } => ev.push(format!(
+                    "{{\"ph\":\"C\",\"pid\":0,\"tid\":{tid},\"name\":\"iters-r{tid}\",\
+                     \"ts\":{},\"args\":{{\"n\":{n}}}}}",
+                    us(t)
+                )),
+                TraceEvent::Send { dst, epoch, tag, bytes, t, arrival } => ev.push(format!(
+                    "{{\"ph\":\"s\",\"pid\":0,\"tid\":{tid},\"cat\":\"msg\",\
+                     \"name\":\"msg\",\"id\":\"0x{:016x}\",\"ts\":{},\
+                     \"args\":{{\"dst\":{dst},\"epoch\":{epoch},\"tag\":{tag},\"bytes\":{bytes}}}}}",
+                    flow_id(tid, dst, epoch, tag, arrival),
+                    us(t)
+                )),
+                TraceEvent::Recv { src, epoch, tag, t_before, arrival, t } => ev.push(format!(
+                    "{{\"ph\":\"f\",\"bp\":\"e\",\"pid\":0,\"tid\":{tid},\"cat\":\"msg\",\
+                     \"name\":\"msg\",\"id\":\"0x{:016x}\",\"ts\":{},\
+                     \"args\":{{\"src\":{src},\"wait_us\":{}}}}}",
+                    flow_id(src, tid, epoch, tag, arrival),
+                    us(t),
+                    us((arrival - t_before).max(0.0))
+                )),
+                TraceEvent::Mark { label, arg, t } => ev.push(format!(
+                    "{{\"ph\":\"i\",\"s\":\"t\",\"pid\":0,\"tid\":{tid},\"cat\":\"mark\",\
+                     \"name\":\"{}\",\"ts\":{},\"args\":{{\"arg\":{arg}}}}}",
+                    esc(label),
+                    us(t)
+                )),
+                TraceEvent::RecoveryBegin { t } => ev.push(format!(
+                    "{{\"ph\":\"i\",\"s\":\"t\",\"pid\":0,\"tid\":{tid},\
+                     \"cat\":\"recovery\",\"name\":\"recovery-begin\",\"ts\":{}}}",
+                    us(t)
+                )),
+                TraceEvent::RecoveryEnd { t, attempts } => ev.push(format!(
+                    "{{\"ph\":\"i\",\"s\":\"t\",\"pid\":0,\"tid\":{tid},\
+                     \"cat\":\"recovery\",\"name\":\"recovery-end\",\"ts\":{},\
+                     \"args\":{{\"attempts\":{attempts}}}}}",
+                    us(t)
+                )),
+            }
+        }
+    }
+    let mut s = String::new();
+    s.push_str("{\n\"displayTimeUnit\": \"ms\",\n\"otherData\": {\n");
+    // Run configuration, minus the execution engine: the engine changes the
+    // schedule, not the virtual-time history, and the trace must be
+    // byte-identical across engines.
+    for (k, v) in cfg.summary() {
+        if k == "engine" {
+            continue;
+        }
+        let _ = writeln!(s, "\"{}\": \"{}\",", esc(k), esc(&v));
+    }
+    let _ = writeln!(s, "\"time_to_solution_s\": {},", secs(rep.time_to_solution));
+    let _ = writeln!(s, "\"iterations\": {},", rep.iterations);
+    let _ = writeln!(s, "\"converged\": {},", rep.converged);
+    let _ = writeln!(s, "\"n_failures\": {},", rep.failures);
+    if let Some(cp) = &rep.critical_path {
+        let (path_phases, wire) = cp.path_phase_totals();
+        s.push_str("\"critical_path\": {\n");
+        let _ = writeln!(s, "\"events\": {},", cp.events.len());
+        let _ = writeln!(s, "\"total_wall_s\": {},", secs(cp.total_wall));
+        let _ = writeln!(s, "\"total_serial_s\": {},", secs(cp.total_serial));
+        let _ = writeln!(s, "\"overlap_efficiency\": {},", secs(cp.overlap_efficiency));
+        s.push_str("\"path_phases_s\": {");
+        for p in ALL_PHASES {
+            let _ = write!(s, "\"{}\": {}, ", p.name(), secs(path_phases.get(p)));
+        }
+        let _ = write!(s, "\"wire\": {}", secs(wire));
+        s.push_str("}\n},\n");
+    }
+    s.push_str("\"trace_format\": \"ulfm-ftgmres-1\"\n},\n\"traceEvents\": [\n");
+    s.push_str(&ev.join(",\n"));
+    s.push_str("\n]\n}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flow_ids_are_stable_and_distinguish_edges() {
+        let a = flow_id(0, 1, 2, 7, 1.5);
+        assert_eq!(a, flow_id(0, 1, 2, 7, 1.5));
+        assert_ne!(a, flow_id(1, 0, 2, 7, 1.5));
+        assert_ne!(a, flow_id(0, 1, 2, 7, 1.5000001));
+    }
+
+    #[test]
+    fn timestamps_format_deterministically() {
+        assert_eq!(us(1.0), "1000000.000");
+        assert_eq!(us(1.2345678e-6), "1.235");
+        assert_eq!(secs(0.5), "0.500000000");
+    }
+}

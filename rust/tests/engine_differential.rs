@@ -8,6 +8,11 @@
 //! redundancy scheme × delta/compression × recovery strategy × nested
 //! protocol-phase kills — must produce a bit-identical `RunReport` digest
 //! under both engines.
+//!
+//! Every leg also runs traced (DESIGN.md §13) and asserts the exported
+//! Perfetto trace JSON is **byte-identical** across engines: spans, message
+//! edges and flow ids are pure functions of virtual time, so the trace file
+//! is part of the observational-equivalence contract.
 
 mod common;
 
@@ -20,21 +25,29 @@ use ulfm_ftgmres::metrics::RunReport;
 use ulfm_ftgmres::recovery::Strategy;
 use ulfm_ftgmres::simmpi::Engine;
 
-fn run_engine(cfg: &RunConfig, plan: &InjectionPlan, engine: Engine) -> RunReport {
+fn run_engine(cfg: &RunConfig, plan: &InjectionPlan, engine: Engine) -> (RunReport, String) {
     let mut cfg = cfg.clone();
     cfg.engine = engine;
+    cfg.trace = true;
     let backend = coordinator::make_backend(&cfg).unwrap();
-    coordinator::run_custom(&cfg, backend, plan.clone()).unwrap()
+    let rep = coordinator::run_custom(&cfg, backend, plan.clone()).unwrap();
+    let trace = ulfm_ftgmres::trace::perfetto_json(&rep, &cfg);
+    (rep, trace)
 }
 
-/// Run one campaign under both engines and assert digest equality.
+/// Run one campaign under both engines and assert digest equality plus
+/// byte-identical trace exports.
 fn assert_engines_agree(name: &str, cfg: &RunConfig, plan: &InjectionPlan) -> RunReport {
-    let threads = run_engine(cfg, plan, Engine::Threads);
-    let events = run_engine(cfg, plan, Engine::Events);
+    let (threads, threads_trace) = run_engine(cfg, plan, Engine::Threads);
+    let (events, events_trace) = run_engine(cfg, plan, Engine::Events);
     assert_eq!(
         digest(&threads),
         digest(&events),
         "{name}: event engine diverged from the thread oracle"
+    );
+    assert_eq!(
+        threads_trace, events_trace,
+        "{name}: trace files diverged across engines"
     );
     events
 }

@@ -1,0 +1,144 @@
+//! Trace determinism and critical-path integration tests (DESIGN.md §13).
+//!
+//! The trace is part of a run's observable state: the same campaign must
+//! export a **byte-identical** Perfetto trace across repeated runs and
+//! across both execution engines; different campaigns must produce
+//! different traces; and enabling tracing must not perturb the run at all
+//! (observation only — the digest of `common::digest` is unchanged).
+//! The suite also pins the run-level virtual-time invariant the satellite
+//! fix to `RunReport::from_ranks` relies on: every virtual second is
+//! charged to exactly one phase, so per-rank `phases.total()` equals the
+//! rank's finish time and the element-wise `max_with` merge cannot
+//! double-count overlapping recovery attempts.
+
+mod common;
+
+use common::{digest, quick_config};
+use ulfm_ftgmres::ckptstore::Scheme;
+use ulfm_ftgmres::config::RunConfig;
+use ulfm_ftgmres::coordinator;
+use ulfm_ftgmres::failure::{InjectionPlan, ProtoPhase};
+use ulfm_ftgmres::metrics::RunReport;
+use ulfm_ftgmres::recovery::Strategy;
+use ulfm_ftgmres::simmpi::Engine;
+use ulfm_ftgmres::trace::{perfetto_json, TraceEvent};
+
+fn run_traced(cfg: &RunConfig, plan: &InjectionPlan, engine: Engine) -> (RunReport, String) {
+    let mut cfg = cfg.clone();
+    cfg.engine = engine;
+    cfg.trace = true;
+    let backend = coordinator::make_backend(&cfg).unwrap();
+    let rep = coordinator::run_custom(&cfg, backend, plan.clone()).unwrap();
+    let json = perfetto_json(&rep, &cfg);
+    (rep, json)
+}
+
+/// The hardest traced schedule the repo produces: a nested second kill
+/// inside the first recovery, xor parity + delta shipping.
+fn nested_campaign() -> (RunConfig, InjectionPlan) {
+    let mut cfg = quick_config(8, Strategy::Shrink, 0);
+    cfg.solver.ckpt.scheme = Scheme::Xor { g: 4 };
+    cfg.solver.ckpt.delta = true;
+    let plan = InjectionPlan::nested(7, 25, 3, ProtoPhase::Reconstruct, 1);
+    (cfg, plan)
+}
+
+#[test]
+fn same_campaign_produces_byte_identical_traces() {
+    let (cfg, plan) = nested_campaign();
+    let (_, t1) = run_traced(&cfg, &plan, Engine::Threads);
+    let (_, t2) = run_traced(&cfg, &plan, Engine::Threads);
+    let (_, t3) = run_traced(&cfg, &plan, Engine::Threads);
+    assert_eq!(t1, t2, "repeat run 2 diverged");
+    assert_eq!(t1, t3, "repeat run 3 diverged");
+    let (_, te) = run_traced(&cfg, &plan, Engine::Events);
+    assert_eq!(t1, te, "event-engine trace diverged from the thread oracle");
+}
+
+#[test]
+fn different_campaign_produces_a_different_trace() {
+    let one = quick_config(8, Strategy::Shrink, 1);
+    let two = quick_config(8, Strategy::Shrink, 2);
+    let (_, t1) = run_traced(&one, &one.injection_plan(), Engine::Events);
+    let (_, t2) = run_traced(&two, &two.injection_plan(), Engine::Events);
+    assert_ne!(t1, t2, "distinct campaigns must not share a trace");
+}
+
+#[test]
+fn tracing_is_observation_only() {
+    let (cfg, plan) = nested_campaign();
+    let (traced, _) = run_traced(&cfg, &plan, Engine::Events);
+    let mut off = cfg.clone();
+    off.engine = Engine::Events;
+    off.trace = false;
+    let backend = coordinator::make_backend(&off).unwrap();
+    let plain = coordinator::run_custom(&off, backend, plan.clone()).unwrap();
+    assert_eq!(
+        digest(&traced),
+        digest(&plain),
+        "enabling tracing changed the run"
+    );
+    assert!(plain.ranks.iter().all(|r| r.trace.is_empty()));
+    assert!(plain.critical_path.is_none(), "untraced runs have no critical path");
+    assert!(traced.critical_path.is_some(), "traced runs always report one");
+}
+
+#[test]
+fn critical_path_sanity_under_nested_failures() {
+    let (cfg, plan) = nested_campaign();
+    let (rep, _) = run_traced(&cfg, &plan, Engine::Events);
+    assert!(rep.converged);
+    assert!(rep.recovery_retries >= 1, "the nested kill must fence");
+    let cp = rep.critical_path.as_ref().expect("traced run");
+    assert!(!cp.events.is_empty(), "two kills must produce recovery events");
+    assert!(cp.events.iter().any(|e| e.attempts >= 1), "abandoned fence attempts recorded");
+    assert!((0.0..=1.0).contains(&cp.overlap_efficiency));
+    for e in &cp.events {
+        assert!(e.wall > 0.0, "event {} has an empty window", e.event);
+        assert!(e.serial_secs <= e.wall + 1e-9, "serial work cannot exceed the wall");
+        assert!((0.0..=1.0).contains(&e.overlap_efficiency));
+        // The backward walk partitions [t_begin, t_end] into receiver-local,
+        // wire, and sender-local time: attributed phases + wire == wall.
+        let covered = e.by_phase.total() + e.wire_secs;
+        assert!(
+            (covered - e.wall).abs() <= 1e-9 * e.wall.max(1.0),
+            "event {}: path covers {covered} of a {} s window",
+            e.event,
+            e.wall
+        );
+    }
+    let (by_phase, wire) = cp.path_phase_totals();
+    assert!((by_phase.total() + wire - cp.total_wall).abs() <= 1e-9 * cp.total_wall.max(1.0));
+}
+
+/// The virtual-time conservation law behind the satellite-1 verdict: every
+/// rank's clock moves only through `advance`/`advance_to`, each charging
+/// exactly one phase, so the phase timers sum to the finish time — and
+/// span coverage (which mirrors the charges) does too.
+#[test]
+fn every_virtual_second_charged_once() {
+    let (cfg, plan) = nested_campaign();
+    let (rep, _) = run_traced(&cfg, &plan, Engine::Events);
+    for r in &rep.ranks {
+        let total = r.phases.total();
+        assert!(
+            (total - r.finish_time).abs() <= 1e-9 * r.finish_time.max(1.0),
+            "rank {}: charged {total} s over a {} s lifetime",
+            r.world_rank,
+            r.finish_time
+        );
+        let spans: f64 = r
+            .trace
+            .iter()
+            .filter_map(|e| match *e {
+                TraceEvent::Span { t0, t1, .. } => Some(t1 - t0),
+                _ => None,
+            })
+            .sum();
+        assert!(
+            (spans - total).abs() <= 1e-9 * total.max(1.0),
+            "rank {}: span coverage {spans} != charged {total}",
+            r.world_rank
+        );
+    }
+}

@@ -1,0 +1,144 @@
+#!/usr/bin/env python3
+"""Summarize a ulfm_ftgmres trace (Chrome trace-event JSON, DESIGN.md §13).
+
+Usage:  python tools/trace_report.py out/trace.json
+
+Validates the file against the `ulfm-ftgmres-1` schema (phase span names,
+event categories, flow-edge pairing) and prints the per-phase table: span
+counts, virtual-time totals across ranks, the share of total traced time,
+and — when the run recorded recovery events — each phase's share of the
+recovery critical path.  Exits non-zero on malformed input, so CI uses it
+as the trace validator.
+"""
+
+import json
+import sys
+
+PHASES = ("compute", "comm", "checkpoint", "recovery", "reconfig", "recompute", "idle")
+INSTANT_CATS = ("proto", "mark", "recovery")
+
+
+def fail(msg):
+    print(f"trace_report: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"cannot load {path}: {e}")
+    if not isinstance(doc, dict):
+        fail("top level must be an object")
+    other = doc.get("otherData")
+    if not isinstance(other, dict):
+        fail("missing otherData")
+    if other.get("trace_format") != "ulfm-ftgmres-1":
+        fail(f"unknown trace_format {other.get('trace_format')!r}")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail("traceEvents must be a non-empty list")
+    return doc
+
+
+def validate(events):
+    """Schema checks over the event stream; returns (spans, instants, flows)."""
+    spans, instants = [], []
+    send_ids, recv_ids = set(), set()
+    ranks = set()
+    for i, e in enumerate(events):
+        if not isinstance(e, dict) or "ph" not in e:
+            fail(f"event {i}: not an object with 'ph'")
+        ph = e["ph"]
+        if ph == "M":
+            if e.get("name") not in ("thread_name", "thread_sort_index"):
+                fail(f"event {i}: unknown metadata {e.get('name')!r}")
+            continue
+        tid = e.get("tid")
+        if not isinstance(tid, int) or tid < 0:
+            fail(f"event {i}: bad tid {tid!r}")
+        ranks.add(tid)
+        ts = e.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            fail(f"event {i}: bad ts {ts!r}")
+        if ph == "X":
+            if e.get("cat") != "phase" or e.get("name") not in PHASES:
+                fail(f"event {i}: span must be a known phase, got {e.get('name')!r}")
+            # Sub-nanosecond spans round to 0.000 in the fixed µs format,
+            # so only negative durations are malformed.
+            if not isinstance(e.get("dur"), (int, float)) or e["dur"] < 0:
+                fail(f"event {i}: span dur must be non-negative")
+            spans.append(e)
+        elif ph == "i":
+            if e.get("cat") not in INSTANT_CATS:
+                fail(f"event {i}: unknown instant cat {e.get('cat')!r}")
+            instants.append(e)
+        elif ph == "C":
+            if not e.get("name", "").startswith("iters-r"):
+                fail(f"event {i}: unknown counter {e.get('name')!r}")
+        elif ph in ("s", "f"):
+            fid = e.get("id")
+            if not isinstance(fid, str) or not fid.startswith("0x"):
+                fail(f"event {i}: flow id must be a hex string, got {fid!r}")
+            (send_ids if ph == "s" else recv_ids).add(fid)
+        else:
+            fail(f"event {i}: unknown ph {ph!r}")
+    unmatched = recv_ids - send_ids
+    if unmatched:
+        fail(f"{len(unmatched)} flow ends without a matching start, e.g. {sorted(unmatched)[0]}")
+    return spans, instants, (send_ids, recv_ids), ranks
+
+
+def table(rows, header):
+    widths = [max(len(str(r[i])) for r in [header] + rows) for i in range(len(header))]
+    fmt = "  ".join(f"{{:>{w}}}" for w in widths)
+    print(fmt.format(*header))
+    for r in rows:
+        print(fmt.format(*r))
+
+
+def main():
+    if len(sys.argv) != 2:
+        fail("usage: trace_report.py <trace.json>")
+    doc = load(sys.argv[1])
+    spans, instants, (send_ids, recv_ids), ranks = validate(doc["traceEvents"])
+
+    by_phase = {p: [0, 0.0] for p in PHASES}  # name -> [count, total_us]
+    for s in spans:
+        by_phase[s["name"]][0] += 1
+        by_phase[s["name"]][1] += float(s["dur"])
+    total_us = sum(t for _, t in by_phase.values()) or 1.0
+
+    cp = doc["otherData"].get("critical_path")
+    path_s = cp.get("path_phases_s", {}) if isinstance(cp, dict) else {}
+
+    rows = []
+    for p in PHASES:
+        n, us = by_phase[p]
+        rows.append(
+            (
+                p,
+                n,
+                f"{us / 1e6:.6f}",
+                f"{100.0 * us / total_us:.2f}%",
+                f"{float(path_s.get(p, 0.0)):.6f}" if path_s else "-",
+            )
+        )
+    print(f"# trace: {len(ranks)} ranks, {len(spans)} spans, "
+          f"{len(instants)} instants, {len(recv_ids)} message edges")
+    table(rows, ("phase", "spans", "total_s", "share", "critical_path_s"))
+
+    if isinstance(cp, dict):
+        print(
+            f"recovery critical path: {cp.get('events', 0)} events, "
+            f"wall {float(cp.get('total_wall_s', 0.0)):.6f}s, "
+            f"serial {float(cp.get('total_serial_s', 0.0)):.6f}s, "
+            f"overlap efficiency {float(cp.get('overlap_efficiency', 0.0)):.3f} "
+            f"(wire {float(path_s.get('wire', 0.0)):.6f}s)"
+        )
+    print("trace OK")
+
+
+if __name__ == "__main__":
+    main()
