@@ -1,0 +1,236 @@
+//! Bench: the degraded-mode fault universe (DESIGN.md §14) — what the
+//! in-situ responses cost.  Three headline numbers, tracked in-repo:
+//!
+//! - **scrub repair rate**: fraction of detected silent-corruption events
+//!   the scrubber repairs bit-identically from the scheme's own redundancy
+//!   (must be 1.0 for a single flip under every scheme);
+//! - **straggler-shrink latency**: virtual time from the detector's
+//!   `degraded-shrink` decision to the executed shrink that removes the
+//!   slow rank;
+//! - **retry overhead**: virtual time a lossy link's timeout-and-retry
+//!   loop adds over the identical clean run.
+//!
+//! Emits `BENCH_faults.json` at the repository root.
+//!
+//! `cargo bench --bench bench_faults` (`BENCH_SMOKE=1` for the CI quick
+//! pass on the small grid).
+
+mod bench_common;
+
+use std::fmt::Write as _;
+
+use ulfm_ftgmres::ckptstore::Scheme;
+use ulfm_ftgmres::config::RunConfig;
+use ulfm_ftgmres::coordinator;
+use ulfm_ftgmres::failure::{BitFlip, InjectionPlan, LinkFault, Straggler};
+use ulfm_ftgmres::metrics::RunReport;
+use ulfm_ftgmres::problem::Grid3D;
+use ulfm_ftgmres::recovery::Strategy;
+
+fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+struct LegResult {
+    name: &'static str,
+    converged: bool,
+    tts: f64,
+    failures: usize,
+    link_retries: u64,
+    scrub_detected: u64,
+    scrub_repaired: u64,
+    degraded_shrinks: usize,
+    global_restarts: usize,
+    rep: RunReport,
+}
+
+fn base_cfg(scheme: Scheme) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.grid = if smoke() { Grid3D::cube(12) } else { Grid3D::cube(16) };
+    cfg.p = 8;
+    cfg.strategy = Strategy::Shrink;
+    cfg.solver.tol = 1e-10;
+    cfg.solver.m_inner = 10;
+    cfg.solver.m_outer = 20;
+    cfg.solver.max_cycles = 20;
+    cfg.solver.ckpt.scheme = scheme;
+    cfg
+}
+
+fn run_leg(name: &'static str, cfg: &RunConfig, plan: InjectionPlan) -> LegResult {
+    let backend = coordinator::make_backend(cfg).expect("backend");
+    let rep: RunReport = bench_common::timed(name, || {
+        coordinator::run_custom(cfg, backend.clone(), plan.clone())
+    })
+    .expect("leg completes");
+    assert!(rep.converged, "{name}: relres={}", rep.final_relres);
+    LegResult {
+        name,
+        converged: rep.converged,
+        tts: rep.time_to_solution,
+        failures: rep.failures,
+        link_retries: rep.faults.link_retries,
+        scrub_detected: rep.faults.scrub_detected,
+        scrub_repaired: rep.faults.scrub_repaired,
+        degraded_shrinks: rep
+            .decisions
+            .iter()
+            .filter(|d| d.decision == "degraded-shrink")
+            .count(),
+        global_restarts: rep.global_restarts(),
+        rep,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mirror = base_cfg(Scheme::Mirror { k: 1 });
+    let flip = |rank: usize| InjectionPlan {
+        bitflips: vec![BitFlip { world_rank: rank, at_version: 1, bits: 5 }],
+        ..Default::default()
+    };
+    let legs = vec![
+        run_leg("clean_baseline", &mirror, InjectionPlan::none()),
+        // Scrub legs: one 5-bit flip per scheme, repaired from the buddy
+        // copy / XOR stripe / GF(2^8) double-parity solve respectively.
+        run_leg("scrub_mirror1", &mirror, flip(2)),
+        run_leg("scrub_xor4", &base_cfg(Scheme::Xor { g: 4 }), flip(2)),
+        run_leg("scrub_rs2_4", &base_cfg(Scheme::Rs2 { g: 4 }), flip(2)),
+        // Straggler legs: 1.2x is priced tolerable, 3x is shrunk away.
+        run_leg(
+            "straggler_tolerate",
+            &mirror,
+            InjectionPlan {
+                stragglers: vec![Straggler { world_rank: 6, mult: 1.2 }],
+                ..Default::default()
+            },
+        ),
+        run_leg(
+            "straggler_shrink",
+            &mirror,
+            InjectionPlan {
+                stragglers: vec![Straggler { world_rank: 6, mult: 3.0 }],
+                ..Default::default()
+            },
+        ),
+        // Lossy-link leg: three scheduled drops on a live halo edge.
+        run_leg(
+            "lossy_link",
+            &mirror,
+            InjectionPlan {
+                links: vec![LinkFault { src: 1, dst: 2, drops: 3 }],
+                ..Default::default()
+            },
+        ),
+    ];
+
+    println!(
+        "{:<20} {:>9} {:>8} {:>10} {:>9} {:>9} {:>9} {:>9}",
+        "leg", "tts[s]", "fails", "linkretry", "scrubdet", "scrubfix", "dshrinks", "restarts"
+    );
+    for l in &legs {
+        println!(
+            "{:<20} {:>9.4} {:>8} {:>10} {:>9} {:>9} {:>9} {:>9}",
+            l.name,
+            l.tts,
+            l.failures,
+            l.link_retries,
+            l.scrub_detected,
+            l.scrub_repaired,
+            l.degraded_shrinks,
+            l.global_restarts
+        );
+    }
+
+    let by_name = |n: &str| legs.iter().find(|l| l.name == n).unwrap();
+    let clean = by_name("clean_baseline");
+
+    // Scrub repair rate: every detection repaired in situ, under every
+    // scheme, with zero global restarts and nobody killed.
+    let mut detected = 0u64;
+    let mut repaired = 0u64;
+    for name in ["scrub_mirror1", "scrub_xor4", "scrub_rs2_4"] {
+        let l = by_name(name);
+        assert!(l.scrub_detected >= 1, "{name}: the flip must be caught");
+        assert_eq!(l.scrub_detected, l.scrub_repaired, "{name}: repair must be in situ");
+        assert_eq!(l.failures, 0, "{name}: scrub repair must not kill anyone");
+        assert_eq!(l.global_restarts, 0, "{name}");
+        detected += l.scrub_detected;
+        repaired += l.scrub_repaired;
+    }
+    let repair_rate = repaired as f64 / detected as f64;
+
+    // Straggler-shrink latency: detector decision -> executed shrink.
+    let shrink = by_name("straggler_shrink");
+    assert_eq!(shrink.degraded_shrinks, 1, "exactly one detector decision");
+    assert_eq!(shrink.failures, 1, "the victim converts to one crash-stop loss");
+    assert_eq!(shrink.global_restarts, 0);
+    let decided = shrink
+        .rep
+        .decisions
+        .iter()
+        .find(|d| d.decision == "degraded-shrink")
+        .expect("detector decision recorded")
+        .at;
+    let executed = shrink
+        .rep
+        .decisions
+        .iter()
+        .find(|d| d.decision == "shrink" && d.failed_ranks == vec![6])
+        .expect("executed shrink recorded")
+        .at;
+    let shrink_latency = executed - decided;
+    assert!(shrink_latency >= 0.0, "shrink cannot precede detection: {shrink_latency}");
+    let tolerate = by_name("straggler_tolerate");
+    assert_eq!(tolerate.degraded_shrinks, 0, "1.2x must be priced tolerable");
+    assert_eq!(tolerate.failures, 0);
+
+    // Retry overhead: the lossy run pays its timeouts in virtual time.
+    let lossy = by_name("lossy_link");
+    assert_eq!(lossy.link_retries, 3, "one retry per scheduled drop");
+    assert_eq!(lossy.failures, 0, "a lossy link is not a death");
+    let retry_overhead = lossy.tts - clean.tts;
+    assert!(retry_overhead > 0.0, "retries must cost virtual time: {retry_overhead}");
+
+    println!("\nscrub repair rate (all schemes):   {repair_rate:.3}");
+    println!("straggler-shrink latency:          {shrink_latency:.4e} s");
+    println!("lossy-link retry overhead:         {retry_overhead:.4e} s");
+
+    // Emit BENCH_faults.json at the repository root.
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"faults\",\n");
+    let _ = writeln!(
+        json,
+        "  \"workload\": \"ftgmres p=8 {} m_inner=10\",",
+        if smoke() { "cube12" } else { "cube16" }
+    );
+    let _ = writeln!(
+        json,
+        "  \"scrub_repair_rate\": {repair_rate:.4},\n  \
+         \"straggler_shrink_latency_s\": {shrink_latency:.6e},\n  \
+         \"retry_overhead_s\": {retry_overhead:.6e},\n  \"legs\": ["
+    );
+    for (i, l) in legs.iter().enumerate() {
+        let _ = writeln!(
+            json,
+            "    {{\"name\": \"{}\", \"converged\": {}, \"tts_virtual_s\": {:.6}, \
+             \"failures\": {}, \"link_retries\": {}, \"scrub_detected\": {}, \
+             \"scrub_repaired\": {}, \"degraded_shrinks\": {}, \"global_restarts\": {}}}{}",
+            l.name,
+            l.converged,
+            l.tts,
+            l.failures,
+            l.link_retries,
+            l.scrub_detected,
+            l.scrub_repaired,
+            l.degraded_shrinks,
+            l.global_restarts,
+            if i + 1 < legs.len() { "," } else { "" }
+        );
+    }
+    json.push_str("  ]\n}\n");
+    let path = std::path::Path::new("../BENCH_faults.json");
+    std::fs::write(path, &json)?;
+    eprintln!("wrote {}", path.display());
+    println!("bench_faults checks passed");
+    Ok(())
+}

@@ -90,6 +90,11 @@ pub struct CkptStore {
     /// Parity stripes held for groups anchored at a world rank (the group's
     /// first member at encode time): (anchor, obj) -> version -> stripe.
     parity: HashMap<(WorldRank, ObjId), BTreeMap<Version, ParityStripe>>,
+    /// Integrity digests of this rank's own committed objects, one per
+    /// delta chunk ([`crate::ckptstore::chunk_sums`]); recorded at commit
+    /// when the integrity layer (`ckpt_integrity`) is on and verified by
+    /// the pre-commit scrubber (DESIGN.md §14).
+    sums: HashMap<(ObjId, Version), Vec<u64>>,
 }
 
 impl CkptStore {
@@ -158,6 +163,37 @@ impl CkptStore {
         self.remote.retain(|(o, _), _| *o != owner);
     }
 
+    /// Record the per-chunk integrity digests of a local object committed
+    /// at `version` (integrity layer, DESIGN.md §14).
+    pub fn record_sums(&mut self, id: ObjId, version: Version, sums: Vec<u64>) {
+        self.sums.insert((id, version), sums);
+    }
+
+    /// Recorded digests of `(id, version)`, if the integrity layer wrote
+    /// them at that commit.
+    pub fn sums_for(&self, id: ObjId, version: Version) -> Option<&[u64]> {
+        self.sums.get(&(id, version)).map(Vec::as_slice)
+    }
+
+    /// Every object with a recorded digest, at its newest summed version,
+    /// in ascending object order — the scrubber's deterministic verify
+    /// schedule (identical on both engines).
+    pub fn summed_objects(&self) -> Vec<(ObjId, Version)> {
+        let mut newest: BTreeMap<ObjId, Version> = BTreeMap::new();
+        for &(id, v) in self.sums.keys() {
+            let e = newest.entry(id).or_insert(v);
+            *e = (*e).max(v);
+        }
+        newest.into_iter().collect()
+    }
+
+    /// Injection seam: mutate a committed local blob in place (the
+    /// `--inject-bitflip` fault and corruption tests go through this).
+    #[doc(hidden)]
+    pub fn local_mut(&mut self, id: ObjId, version: Version) -> Option<&mut Blob> {
+        self.local.get_mut(&id)?.get_mut(&version)
+    }
+
     /// Record that `version` was a *fresh* (establishment) commit: the
     /// whole current layout was re-encoded at it.  Called by the commit
     /// protocol after the fault-aware agreement succeeds.
@@ -206,6 +242,10 @@ impl CkptStore {
             self.remote.retain(|_, m| live(m.keys().next_back().copied()));
             self.parity.retain(|_, m| live(m.keys().next_back().copied()));
         }
+        // Digests follow their blobs: keep exactly the (obj, version)
+        // pairs the local side still holds.
+        let local = &self.local;
+        self.sums.retain(|&(id, v), _| local.get(&id).is_some_and(|m| m.contains_key(&v)));
     }
 
     /// Forget everything (global restart from scratch: survivors rebuild
@@ -214,6 +254,7 @@ impl CkptStore {
         self.local.clear();
         self.remote.clear();
         self.parity.clear();
+        self.sums.clear();
     }
 
     pub(crate) fn commit(&mut self, version: Version) {
@@ -379,6 +420,30 @@ mod tests {
         // The static object's single version is pinned, not collected.
         assert!(s.get_local(obj::MAT, 0).is_some());
         assert!(s.get_remote(3, obj::MAT, 0).is_some());
+    }
+
+    #[test]
+    fn sums_follow_their_blobs_through_gc_and_clear() {
+        let mut s = CkptStore::new();
+        for v in 0..5 {
+            s.put_local(obj::X, v, Blob::scalar(v as f64));
+            s.record_sums(obj::X, v, vec![v as u64]);
+        }
+        s.put_local(obj::MAT, 0, Blob::scalar(9.0));
+        s.record_sums(obj::MAT, 0, vec![99]);
+        assert_eq!(s.sums_for(obj::X, 2), Some(&[2u64][..]));
+        s.force_committed(4);
+        s.gc_committed();
+        // Digests of collected versions are gone; survivors keep theirs,
+        // and summed_objects reports each object's newest summed version.
+        assert!(s.sums_for(obj::X, 2).is_none());
+        assert_eq!(s.sums_for(obj::X, 3), Some(&[3u64][..]));
+        assert_eq!(s.summed_objects(), vec![(obj::X, 4), (obj::MAT, 0)]);
+        // The injection seam reaches the committed blob.
+        assert!(s.local_mut(obj::X, 4).is_some());
+        assert!(s.local_mut(obj::X, 2).is_none());
+        s.clear_all();
+        assert!(s.summed_objects().is_empty());
     }
 
     #[test]

@@ -18,6 +18,13 @@
 //!   CLI `--ckpt-compress`) — word-level RLE with zero-run elision over
 //!   every buddy, parity and reconstruction payload; transport-only and
 //!   loss-less, with per-commit raw-vs-compressed byte metrics;
+//! * an **integrity layer** (`ckpt_integrity`, DESIGN.md §14) — per-chunk
+//!   digests ([`chunk_sums`]) recorded at every commit, plus a pre-commit
+//!   **scrubber** that detects silently corrupted committed blobs
+//!   (`--inject-bitflip`) and repairs them bit-identically from the
+//!   scheme's own redundancy (buddy copy, XOR stripe fold, or the rs2
+//!   one-/two-erasure solve), escalating to a crash-stop failure only
+//!   when the corruption exceeds what the parity covers;
 //! * a **recovery reader** ([`reconstruct_failed`]) — rebuilds a failed
 //!   rank's objects from surviving group members plus parity (or serves
 //!   mirror buddy copies), shared by shrink, substitute and the
@@ -104,6 +111,12 @@ pub struct CkptCfg {
     /// Compress every redundancy payload with word-level RLE
     /// ([`delta::rle_compress`]) before it goes on the wire.
     pub compress: bool,
+    /// Integrity layer (config key `ckpt_integrity`): record per-chunk
+    /// digests of every committed object and run the corruption scrubber
+    /// at the start of each steady-state commit.  Auto-enabled by the
+    /// coordinator when the injection plan carries `--inject-bitflip`
+    /// faults.
+    pub integrity: bool,
     /// Modeled encode/fold throughput (bytes/s) for XOR folding and delta
     /// scans — a deliberately simple memory-bandwidth-style knob so every
     /// rank charges identical, deterministic virtual time.
@@ -118,6 +131,7 @@ impl Default for CkptCfg {
             chunk_kib: 4,
             rebase_every: 8,
             compress: false,
+            integrity: false,
             encode_bytes_per_sec: 4e9,
         }
     }
@@ -209,6 +223,363 @@ fn charge_encode(ctx: &mut Ctx, cfg: &CkptCfg, words: usize, acc: &mut f64) {
     *acc += secs;
 }
 
+/// Scrub repair traffic (stripe or blob transfer to a corrupt rank):
+/// object `id` destined for comm rank `cr` (DESIGN.md §14).
+fn scrub_tag(id: ObjId, cr: usize) -> Tag {
+    tags::SCRUB_BASE + id * 65_536 + cr as u32
+}
+
+/// Per-chunk 64-bit FNV-1a digests over the packed words of `blob`
+/// ([`delta::pack_words`]), one digest per `chunk_words` window — the same
+/// chunking the delta layer diffs at, so a corrupt chunk names exactly the
+/// data a repair must replace.  Used by the integrity layer
+/// (`ckpt_integrity`) to detect silent checkpoint corruption.
+pub fn chunk_sums(blob: &Blob, chunk_words: usize) -> Vec<u64> {
+    let words = delta::pack_words(blob);
+    let cw = chunk_words.max(1);
+    words
+        .chunks(cw)
+        .map(|c| {
+            let mut h = 0xcbf2_9ce4_8422_2325u64;
+            for &w in c {
+                for b in (w as u64).to_le_bytes() {
+                    h ^= b as u64;
+                    h = h.wrapping_mul(0x0000_0100_0000_01b3);
+                }
+            }
+            h
+        })
+        .collect()
+}
+
+/// Silent-data-corruption injection (`--inject-bitflip`): flip `bits`
+/// deterministic bit positions in the freshly committed solution block
+/// ([`crate::checkpoint::obj::X`]).  Only the *local* copy is corrupted —
+/// the buddy copies and parity stripes this commit just shipped stay
+/// clean, which is exactly the redundancy the scrubber repairs from.
+fn inject_bitflip(ctx: &mut Ctx, store: &mut CkptStore, version: Version, bits: u32) {
+    use crate::checkpoint::obj;
+    let Some((v, blob)) = store.get_local_at_most(obj::X, version) else { return };
+    let factor = delta::wire_factor(blob);
+    let (f_len, i_len) = (blob.f.len(), blob.i.len());
+    let mut words = delta::pack_words(blob);
+    if words.is_empty() {
+        return;
+    }
+    let nbits = words.len() * 64;
+    let mut flipped = std::collections::BTreeSet::new();
+    for j in 0..(bits as usize).min(nbits) {
+        // Deterministic spread over the block; linear-probe duplicates.
+        let mut p = (j * 0x9e37 + 0x79b9) % nbits;
+        while !flipped.insert(p) {
+            p = (p + 1) % nbits;
+        }
+        words[p / 64] ^= 1i64 << (p % 64);
+    }
+    let mut out = delta::unpack_words(&words, f_len, i_len);
+    if factor != 1.0 {
+        out = out.scaled(factor);
+    }
+    store.put_local(obj::X, v, out);
+    let (at, n) = (ctx.clock, flipped.len() as i64);
+    ctx.trace_push(|| crate::trace::TraceEvent::Mark { label: "bitflip", arg: n, t: at });
+}
+
+/// Install a repaired blob if it verifies bit-identical against the
+/// recorded digest; returns whether it did.
+fn finish_repair(
+    ctx: &mut Ctx,
+    store: &mut CkptStore,
+    cfg: &CkptCfg,
+    id: ObjId,
+    v: Version,
+    blob: Blob,
+) -> bool {
+    let ok = store
+        .sums_for(id, v)
+        .is_some_and(|s| chunk_sums(&blob, cfg.chunk_words()) == s);
+    if ok {
+        store.put_local(id, v, blob);
+        ctx.faults.scrub_repaired += 1;
+        let at = ctx.clock;
+        ctx.trace_push(|| crate::trace::TraceEvent::Mark {
+            label: "scrub-repaired",
+            arg: id as i64,
+            t: at,
+        });
+    }
+    ok
+}
+
+/// Background corruption scrubber (DESIGN.md §14), run collectively at the
+/// start of every steady-state commit when the integrity layer is on.
+///
+/// Each rank verifies its committed objects against their recorded
+/// digests, the damage reports are allgathered so every rank derives the
+/// same deterministic repair schedule, and each corrupt blob is rebuilt
+/// bit-identically from the scheme's own redundancy: the first buddy's
+/// full copy under `mirror:<k>`, the group stripe XOR-folded with the
+/// clean members' blobs under `xor:<g>`, and the one- or two-erasure
+/// GF(2^8) solve under `rs2:<g>`.  Corruption the parity cannot cover
+/// (two corrupt members of an `xor` group, three of an `rs2` group) is
+/// escalated to the policy engine the same way any other unrecoverable
+/// state is: the corrupt rank converts to a crash-stop failure
+/// ([`Ctx::die`]) and the ordinary recovery path — which sees the clean
+/// redundancy, not the corrupt local copy — takes over.
+async fn scrub(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    store: &mut CkptStore,
+    cfg: &CkptCfg,
+) -> MpiResult<()> {
+    let n = comm.size();
+    let me = comm.rank;
+    // Verify my own committed objects against their recorded digests.
+    let mut bad: Vec<(ObjId, Version)> = Vec::new();
+    for (id, v) in store.summed_objects() {
+        let Some(blob) = store.get_local(id, v) else { continue };
+        let fine = store
+            .sums_for(id, v)
+            .is_some_and(|s| chunk_sums(blob, cfg.chunk_words()) == s);
+        if !fine {
+            bad.push((id, v));
+        }
+    }
+    ctx.faults.scrub_detected += bad.len() as u64;
+    // Share the damage reports — collective even when everyone is clean,
+    // so all ranks agree on the repair schedule (and on virtual time).
+    let mut wire: Vec<i64> = vec![bad.len() as i64];
+    for &(id, v) in &bad {
+        wire.push(id as i64);
+        wire.push(v);
+    }
+    let all = comm.allgather(ctx, Blob::from_i64s(wire)).await?;
+    let mut entries: Vec<(usize, ObjId, Version)> = Vec::new();
+    for (cr, b) in all.iter().enumerate() {
+        for j in 0..b.i[0] as usize {
+            entries.push((cr, b.i[1 + 2 * j] as ObjId, b.i[2 + 2 * j]));
+        }
+    }
+    if entries.is_empty() {
+        return Ok(());
+    }
+    // Ranks whose corruption the redundancy cannot cover: they escalate
+    // below, after serving whatever clean data other repairs need.
+    let mut doomed: std::collections::BTreeSet<usize> = Default::default();
+    let stride = effective_stride(&ctx.world.net.params, n);
+    match cfg.scheme {
+        Scheme::Xor { g } if cfg.scheme.parity_active(n) => {
+            for (grp, id, v, crs) in scrub_groups(&entries, g) {
+                if crs.len() > 1 {
+                    // Two corrupt members of one group: the single stripe
+                    // cannot separate them.
+                    doomed.extend(crs);
+                    continue;
+                }
+                let cr = crs[0];
+                let (start, len) = scheme::group_span(grp, g, n);
+                let holder = scheme::holder_cr(grp, g, n);
+                let anchor = comm.world_of(start);
+                if me == holder {
+                    let wire = {
+                        let (sv, s) = store
+                            .get_parity_at_most(anchor, id, v)
+                            .unwrap_or_else(|| panic!("scrub stripe for obj {id} missing"));
+                        stripe_wire(sv, s)
+                    };
+                    comm.send(ctx, cr, scrub_tag(id, cr), wire)?;
+                } else if me != cr && scheme::group_of(me, g) == grp {
+                    let blob = store
+                        .get_local_at_most(id, v)
+                        .unwrap_or_else(|| panic!("scrub contribution for obj {id} missing"))
+                        .1
+                        .clone();
+                    comm.send(ctx, cr, scrub_tag(id, cr), blob)?;
+                }
+                if me == cr {
+                    let members: Vec<WorldRank> =
+                        (start..start + len).map(|c| comm.world_of(c)).collect();
+                    let recvd = comm.recv(ctx, holder, scrub_tag(id, cr)).await?;
+                    let (_, stripe) = parse_stripe_wire(&recvd, &members);
+                    let mut acc = stripe.words.clone();
+                    for c in start..start + len {
+                        if c == cr {
+                            continue;
+                        }
+                        let b = comm.recv(ctx, c, scrub_tag(id, cr)).await?;
+                        delta::xor_into(&mut acc, &delta::pack_words(&b));
+                        ctx.advance(
+                            (8 * (b.f.len() + b.i.len())) as f64 / cfg.encode_bytes_per_sec,
+                        );
+                    }
+                    let slot = cr - start;
+                    let mut out =
+                        delta::unpack_words(&acc, stripe.f_lens[slot], stripe.i_lens[slot]);
+                    let factor = stripe.wire_factors[slot];
+                    if factor != 1.0 {
+                        out = out.scaled(factor);
+                    }
+                    if !finish_repair(ctx, store, cfg, id, v, out) {
+                        doomed.insert(me);
+                    }
+                }
+            }
+        }
+        Scheme::Rs2 { g } if cfg.scheme.parity_active(n) => {
+            for (grp, id, v, crs) in scrub_groups(&entries, g) {
+                if crs.len() > 2 {
+                    doomed.extend(crs);
+                    continue;
+                }
+                let (start, len) = scheme::group_span(grp, g, n);
+                let anchor = comm.world_of(start);
+                let (p_cr, q_cr) = scheme::rs2_holders(grp, g, n, cfg.rot_index(v));
+                let two = crs.len() == 2;
+                // Holders ship their stripes to every corrupt member; the
+                // corrupt members run the solve themselves (everyone is
+                // alive during a scrub, unlike reconstruction).
+                if me == p_cr || (two && me == q_cr) {
+                    let wire = {
+                        let (sv, s) = store
+                            .get_parity_at_most(anchor, id, v)
+                            .unwrap_or_else(|| panic!("scrub stripe for obj {id} missing"));
+                        stripe_wire(sv, s)
+                    };
+                    for &cr in &crs {
+                        comm.send(ctx, cr, scrub_tag(id, cr), wire.clone())?;
+                    }
+                }
+                if scheme::group_of(me, g) == grp && !crs.contains(&me) {
+                    let blob = store
+                        .get_local_at_most(id, v)
+                        .unwrap_or_else(|| panic!("scrub contribution for obj {id} missing"))
+                        .1
+                        .clone();
+                    for &cr in &crs {
+                        comm.send(ctx, cr, scrub_tag(id, cr), blob.clone())?;
+                    }
+                }
+                if crs.contains(&me) {
+                    let members: Vec<WorldRank> =
+                        (start..start + len).map(|c| comm.world_of(c)).collect();
+                    let recvd = comm.recv(ctx, p_cr, scrub_tag(id, me)).await?;
+                    let (_, p) = parse_stripe_wire(&recvd, &members);
+                    let mut pw = p.words.clone();
+                    let mut qw = if two {
+                        let recvd = comm.recv(ctx, q_cr, scrub_tag(id, me)).await?;
+                        Some(parse_stripe_wire(&recvd, &members).1.words)
+                    } else {
+                        None
+                    };
+                    for c in start..start + len {
+                        if crs.contains(&c) {
+                            continue;
+                        }
+                        let b = comm.recv(ctx, c, scrub_tag(id, me)).await?;
+                        let words = delta::pack_words(&b);
+                        delta::xor_into(&mut pw, &words);
+                        if let Some(qw) = qw.as_mut() {
+                            gf256::mul_xor_into(qw, &words, gf256::coef(c - start));
+                        }
+                        ctx.advance(
+                            (8 * (b.f.len() + b.i.len())) as f64 / cfg.encode_bytes_per_sec,
+                        );
+                    }
+                    let my_slot = me - start;
+                    let words = match qw.take() {
+                        Some(qw) => {
+                            let (s0, s1) = (crs[0] - start, crs[1] - start);
+                            let (wi, wj) = gf256::solve_two_erasures(
+                                &pw,
+                                &qw,
+                                gf256::coef(s0),
+                                gf256::coef(s1),
+                            );
+                            if my_slot == s0 {
+                                wi
+                            } else {
+                                wj
+                            }
+                        }
+                        None => pw,
+                    };
+                    let mut out =
+                        delta::unpack_words(&words, p.f_lens[my_slot], p.i_lens[my_slot]);
+                    let factor = p.wire_factors[my_slot];
+                    if factor != 1.0 {
+                        out = out.scaled(factor);
+                    }
+                    if !finish_repair(ctx, store, cfg, id, v, out) {
+                        doomed.insert(me);
+                    }
+                }
+            }
+        }
+        // Mirror, and parity schemes degraded below their activation
+        // bound: the first buddy holds a clean full copy.
+        _ => {
+            let k = cfg.scheme.mirror_k().min(n.saturating_sub(1));
+            for &(cr, id, v) in &entries {
+                if k == 0 {
+                    doomed.insert(cr);
+                    continue;
+                }
+                let buddy = buddy_of_stride(cr, 1, n, stride);
+                if me == buddy {
+                    let blob = store
+                        .get_remote_at_most(comm.world_of(cr), id, v)
+                        .unwrap_or_else(|| panic!("scrub buddy copy for obj {id} missing"))
+                        .1
+                        .clone();
+                    comm.send(ctx, cr, scrub_tag(id, cr), blob)?;
+                }
+                if me == cr {
+                    let blob = comm.recv(ctx, buddy, scrub_tag(id, cr)).await?;
+                    ctx.advance(
+                        (8 * (blob.f.len() + blob.i.len())) as f64 / cfg.encode_bytes_per_sec,
+                    );
+                    if !finish_repair(ctx, store, cfg, id, v, blob) {
+                        doomed.insert(me);
+                    }
+                }
+            }
+        }
+    }
+    if doomed.contains(&me) {
+        // Parity cannot cover this corruption in situ: escalate to the
+        // policy engine by converting the silent fault into a crash-stop
+        // failure.  Recovery then restores from the *clean* redundancy —
+        // or, when that too is insufficient (the same group pattern that
+        // doomed the scrub), assess_loss escalates to a global restart.
+        let at = ctx.clock;
+        ctx.trace_push(|| crate::trace::TraceEvent::Mark {
+            label: "scrub-unrepairable",
+            arg: me as i64,
+            t: at,
+        });
+        return Err(ctx.die());
+    }
+    Ok(())
+}
+
+/// Damage entries grouped per (parity group, object), corrupt comm ranks
+/// ascending — the shared deterministic repair schedule.
+fn scrub_groups(
+    entries: &[(usize, ObjId, Version)],
+    g: usize,
+) -> Vec<(usize, ObjId, Version, Vec<usize>)> {
+    let mut groups: Vec<(usize, ObjId, Version, Vec<usize>)> = Vec::new();
+    for &(cr, id, v) in entries {
+        let grp = scheme::group_of(cr, g);
+        match groups.iter_mut().find(|(gg, ii, _, _)| *gg == grp && *ii == id) {
+            Some((_, _, _, crs)) => crs.push(cr),
+            None => groups.push((grp, id, v, vec![cr])),
+        }
+    }
+    groups.sort_by_key(|&(gg, ii, _, _)| (gg, ii));
+    groups
+}
+
 /// Coordinated checkpoint commit of `objs` at `version` under `cfg`.
 ///
 /// Called at a quiescent point by every member of `comm`.  `fresh` marks
@@ -254,6 +625,14 @@ async fn commit_inner(
     // survivors of a torn commit keep the previous committed floor intact
     // and the commit is re-runnable after recovery.
     ctx.phase_point(ProtoPhase::CkptCommit)?;
+    // Integrity scrub: verify the committed blobs against their recorded
+    // digests and repair corrupt ones from redundancy *before* this
+    // commit's delta encoding reads them as bases (DESIGN.md §14).  Fresh
+    // commits skip it — membership just changed and every blob and stripe
+    // is about to be rewritten from live state anyway.
+    if cfg.integrity && !fresh {
+        scrub(ctx, comm, store, cfg).await?;
+    }
     let n = comm.size();
     let use_delta = cfg.use_delta(version, fresh);
     let mut shipped = 0usize;
@@ -307,6 +686,27 @@ async fn commit_inner(
         store.note_fresh(version);
     }
     store.gc_committed();
+    if cfg.integrity {
+        for (id, blob) in objs {
+            let sums = chunk_sums(blob, cfg.chunk_words());
+            charge_encode(ctx, cfg, blob.f.len() + blob.i.len(), &mut encode_secs);
+            store.record_sums(*id, version, sums);
+        }
+    }
+    // Fault injection: one silent corruption of the freshly committed
+    // solution block per flagged rank, caught by the next scrub pass.
+    if !ctx.bitflip_done {
+        let due = ctx
+            .world
+            .injector
+            .bitflip_for(ctx.rank)
+            .filter(|b| version >= b.at_version)
+            .map(|b| b.bits);
+        if let Some(bits) = due {
+            inject_bitflip(ctx, store, version, bits);
+            ctx.bitflip_done = true;
+        }
+    }
     let rotation = if matches!(cfg.scheme, Scheme::Rs2 { .. }) && cfg.scheme.parity_active(n) {
         cfg.rot_index(version) as i64
     } else {
@@ -1487,6 +1887,47 @@ mod tests {
         assert!(recon_member_tag(crate::checkpoint::obj::BASIS, 255) < recon_stripe_tag(0, 0, 0));
         assert!(recon_stripe_tag(crate::checkpoint::obj::BASIS, 255, 1) < tags::CKPT_BASE);
         assert!(recon_tag(0, 0) >= tags::RECON_BASE);
+        // Scrub repair traffic sits above the Q forwards, below the halo
+        // window.
+        assert!(qpar_tag(crate::checkpoint::obj::BASIS, 1023) < scrub_tag(0, 0));
+        assert!(scrub_tag(0, 0) >= tags::SCRUB_BASE);
+        assert!(scrub_tag(crate::checkpoint::obj::BASIS, 65_535) < tags::HALO_BASE);
+    }
+
+    #[test]
+    fn chunk_sums_flag_exactly_the_corrupt_chunk() {
+        let blob = Blob::new(
+            (0..1000).map(|k| k as f64).collect(),
+            (0..500).map(|k| k as i64).collect(),
+        );
+        let cw = CkptCfg::default().chunk_words();
+        let clean = chunk_sums(&blob, cw);
+        assert_eq!(clean.len(), 3, "1500 words over 512-word chunks");
+        for bit in [0usize, 7, 63, 512 * 64, 520 * 64 + 5, 1499 * 64 + 63] {
+            let mut words = delta::pack_words(&blob);
+            words[bit / 64] ^= 1i64 << (bit % 64);
+            let corrupt = delta::unpack_words(&words, 1000, 500);
+            let sums = chunk_sums(&corrupt, cw);
+            for (ci, (a, b)) in clean.iter().zip(&sums).enumerate() {
+                if ci == bit / 64 / cw {
+                    assert_ne!(a, b, "bit {bit} must flag chunk {ci}");
+                } else {
+                    assert_eq!(a, b, "bit {bit} must not flag chunk {ci}");
+                }
+            }
+        }
+        // The digest covers both lanes and is chunking-stable.
+        assert_eq!(chunk_sums(&blob, cw), clean);
+    }
+
+    #[test]
+    fn scrub_schedule_groups_damage_per_parity_group() {
+        let entries = vec![(5usize, 1u32, 7i64), (1, 1, 7), (2, 1, 7), (2, 4, 7)];
+        let groups = scrub_groups(&entries, 4);
+        assert_eq!(
+            groups,
+            vec![(0, 1, 7, vec![1, 2]), (0, 4, 7, vec![2]), (1, 1, 7, vec![5])]
+        );
     }
 
     #[test]

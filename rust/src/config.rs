@@ -7,7 +7,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::ckptstore::Scheme;
-use crate::failure::{InjectionPlan, ProtoPhase};
+use crate::failure::{BitFlip, InjectionPlan, LinkFault, ProtoPhase, Straggler};
 use crate::netsim::{ComputeModel, NetParams};
 use crate::problem::Grid3D;
 use crate::recovery::{Decision, PolicyKind, Strategy};
@@ -67,6 +67,24 @@ pub struct RunConfig {
     /// nested-failure campaigns place a second death *inside* the recovery
     /// of a first (see [`crate::failure::ProtoPhase`]).
     pub inject_phase: Vec<(usize, ProtoPhase, u32)>,
+    /// Performance-faulty ranks (key `faults.straggler`, CLI
+    /// `--inject-straggler`): comma-separated `<rank>x<mult>` entries —
+    /// e.g. `2x3.0` (rank 2 computes 3× slower) or `1x1.5,6x4.0`.  The
+    /// straggler detector + policy engine decide whether to shed such a
+    /// rank ([`crate::recovery::degraded`]).
+    pub inject_straggler: Vec<(usize, f64)>,
+    /// Lossy directed links (key `faults.link`, CLI `--inject-link`):
+    /// comma-separated `<src>><dst>:<drops>` entries — e.g. `0>1:3` (the
+    /// first 3 data messages from rank 0 to rank 1 are dropped).  Senders
+    /// retransmit on timeout ([`crate::netsim::NetParams::link_timeout`]);
+    /// see [`crate::failure::LinkFault`].
+    pub inject_link: Vec<(usize, usize, u32)>,
+    /// Checkpoint bitflips (key `faults.bitflip`, CLI `--inject-bitflip`):
+    /// comma-separated `<rank>:<version>[:<bits>]` entries — e.g. `3:2`
+    /// (flip one bit in rank 3's committed solution blob at version 2) or
+    /// `3:2:4`.  Detected and repaired by the checkpoint scrubber
+    /// ([`crate::failure::BitFlip`]).
+    pub inject_bitflip: Vec<(usize, i64, u32)>,
     pub solver: FtGmresCfg,
     pub net: NetParams,
     pub compute: ComputeModel,
@@ -101,6 +119,9 @@ impl Default for RunConfig {
             policy_horizon: None,
             failures: 0,
             inject_phase: Vec::new(),
+            inject_straggler: Vec::new(),
+            inject_link: Vec::new(),
+            inject_bitflip: Vec::new(),
             solver: FtGmresCfg::default(),
             net: NetParams::default(),
             compute: ComputeModel::default(),
@@ -161,8 +182,9 @@ impl RunConfig {
     }
 
     /// The paper's reproducible injection campaign for this leg, plus any
-    /// configured protocol-phase kills (`inject_phase`).  The no-protection
-    /// baseline never injects anything.
+    /// configured protocol-phase kills (`inject_phase`) and degraded-mode
+    /// faults (`faults.straggler`, `faults.link`, `faults.bitflip`).  The
+    /// no-protection baseline never injects anything.
     pub fn injection_plan(&self) -> InjectionPlan {
         if self.strategy == Strategy::NoProtection {
             return InjectionPlan::none();
@@ -177,7 +199,23 @@ impl RunConfig {
                 self.strategy == Strategy::Shrink,
             )
         };
-        base.with_phase_kills(&self.inject_phase)
+        let mut plan = base.with_phase_kills(&self.inject_phase);
+        plan.stragglers = self
+            .inject_straggler
+            .iter()
+            .map(|&(world_rank, mult)| Straggler { world_rank, mult })
+            .collect();
+        plan.links = self
+            .inject_link
+            .iter()
+            .map(|&(src, dst, drops)| LinkFault { src, dst, drops })
+            .collect();
+        plan.bitflips = self
+            .inject_bitflip
+            .iter()
+            .map(|&(world_rank, at_version, bits)| BitFlip { world_rank, at_version, bits })
+            .collect();
+        plan
     }
 
     /// Parse one `inject_phase` value: comma-separated
@@ -201,6 +239,70 @@ impl RunConfig {
             let occurrence: u32 = if parts.len() == 3 { parts[2].trim().parse()? } else { 1 };
             anyhow::ensure!(occurrence >= 1, "occurrence is 1-based, got 0 in '{entry}'");
             out.push((rank, phase, occurrence));
+        }
+        Ok(out)
+    }
+
+    /// Parse one `faults.straggler` value: comma-separated `<rank>x<mult>`
+    /// entries, e.g. `2x3.0` or `1x1.5,6x4.0`.
+    fn parse_inject_straggler(v: &str) -> anyhow::Result<Vec<(usize, f64)>> {
+        let mut out = Vec::new();
+        for entry in v.split(',') {
+            let e = entry.trim();
+            let (r, m) = e.split_once(['x', 'X']).ok_or_else(|| {
+                anyhow::anyhow!("faults.straggler entry '{e}' must be <rank>x<mult>")
+            })?;
+            let rank: usize = r.trim().parse()?;
+            let mult: f64 = m.trim().parse()?;
+            anyhow::ensure!(
+                mult.is_finite() && mult >= 1.0,
+                "straggler multiplier must be a finite value >= 1.0, got '{e}'"
+            );
+            out.push((rank, mult));
+        }
+        Ok(out)
+    }
+
+    /// Parse one `faults.link` value: comma-separated `<src>><dst>:<drops>`
+    /// entries, e.g. `0>1:3` or `0>1:3,4>2:1`.
+    fn parse_inject_link(v: &str) -> anyhow::Result<Vec<(usize, usize, u32)>> {
+        let mut out = Vec::new();
+        for entry in v.split(',') {
+            let e = entry.trim();
+            let (pair, drops) = e.rsplit_once(':').ok_or_else(|| {
+                anyhow::anyhow!("faults.link entry '{e}' must be <src>><dst>:<drops>")
+            })?;
+            let (s, d) = pair.split_once('>').ok_or_else(|| {
+                anyhow::anyhow!("faults.link entry '{e}' must be <src>><dst>:<drops>")
+            })?;
+            let src: usize = s.trim().parse()?;
+            let dst: usize = d.trim().parse()?;
+            let drops: u32 = drops.trim().parse()?;
+            anyhow::ensure!(drops >= 1, "faults.link entry '{e}' drops zero messages");
+            anyhow::ensure!(src != dst, "faults.link entry '{e}' is a self-loop");
+            out.push((src, dst, drops));
+        }
+        Ok(out)
+    }
+
+    /// Parse one `faults.bitflip` value: comma-separated
+    /// `<rank>:<version>[:<bits>]` entries (bits defaults to 1), e.g. `3:2`
+    /// or `3:2:4,1:1:2`.
+    fn parse_inject_bitflip(v: &str) -> anyhow::Result<Vec<(usize, i64, u32)>> {
+        let mut out = Vec::new();
+        for entry in v.split(',') {
+            let e = entry.trim();
+            let parts: Vec<&str> = e.split(':').collect();
+            anyhow::ensure!(
+                parts.len() == 2 || parts.len() == 3,
+                "faults.bitflip entry '{e}' must be <rank>:<version>[:<bits>]"
+            );
+            let rank: usize = parts[0].trim().parse()?;
+            let version: i64 = parts[1].trim().parse()?;
+            let bits: u32 = if parts.len() == 3 { parts[2].trim().parse()? } else { 1 };
+            anyhow::ensure!(bits >= 1, "faults.bitflip entry '{e}' flips zero bits");
+            anyhow::ensure!(version >= 0, "faults.bitflip entry '{e}' targets a negative version");
+            out.push((rank, version, bits));
         }
         Ok(out)
     }
@@ -246,6 +348,13 @@ impl RunConfig {
             "policy_horizon" => self.policy_horizon = Some(v.parse()?),
             "failures" => self.failures = v.parse()?,
             "inject_phase" => self.inject_phase = Self::parse_inject_phase(v)?,
+            "faults.straggler" | "inject_straggler" => {
+                self.inject_straggler = Self::parse_inject_straggler(v)?
+            }
+            "faults.link" | "inject_link" => self.inject_link = Self::parse_inject_link(v)?,
+            "faults.bitflip" | "inject_bitflip" => {
+                self.inject_bitflip = Self::parse_inject_bitflip(v)?
+            }
             "m_inner" => self.solver.m_inner = v.parse()?,
             "m_outer" => self.solver.m_outer = v.parse()?,
             "tol" => self.solver.tol = v.parse()?,
@@ -267,6 +376,7 @@ impl RunConfig {
             "ckpt_chunk_kib" => self.solver.ckpt.chunk_kib = v.parse()?,
             "ckpt_rebase_every" => self.solver.ckpt.rebase_every = v.parse()?,
             "ckpt_compress" => self.solver.ckpt.compress = v.parse()?,
+            "ckpt_integrity" => self.solver.ckpt.integrity = v.parse()?,
             "inner_tol" => self.solver.inner_tol = v.parse()?,
             "backend" => {
                 self.backend = BackendKind::parse(v)
@@ -286,6 +396,8 @@ impl RunConfig {
             "intra_bandwidth" => self.net.intra_bandwidth = v.parse()?,
             "intra_latency" => self.net.intra_latency = v.parse()?,
             "detect_latency" => self.net.detect_latency = v.parse()?,
+            "link_timeout" => self.net.link_timeout = v.parse()?,
+            "link_retry_budget" => self.net.link_retry_budget = v.parse()?,
             "nic_contention" => self.net.nic_contention = v.parse()?,
             "data_scale" => self.net.data_scale = v.parse()?,
             "ckpt_node_stride" => self.net.ckpt_node_stride = v.parse()?,
@@ -337,13 +449,44 @@ impl RunConfig {
                     .join(","),
             );
         }
+        if !self.inject_straggler.is_empty() {
+            m.insert(
+                "faults.straggler",
+                self.inject_straggler
+                    .iter()
+                    .map(|(r, mult)| format!("{r}x{mult}"))
+                    .collect::<Vec<_>>()
+                    .join(","),
+            );
+        }
+        if !self.inject_link.is_empty() {
+            m.insert(
+                "faults.link",
+                self.inject_link
+                    .iter()
+                    .map(|(s, d, n)| format!("{s}>{d}:{n}"))
+                    .collect::<Vec<_>>()
+                    .join(","),
+            );
+        }
+        if !self.inject_bitflip.is_empty() {
+            m.insert(
+                "faults.bitflip",
+                self.inject_bitflip
+                    .iter()
+                    .map(|(r, v, b)| format!("{r}:{v}:{b}"))
+                    .collect::<Vec<_>>()
+                    .join(","),
+            );
+        }
         m.insert(
             "ckpt",
             format!(
-                "{}{}{}",
+                "{}{}{}{}",
                 self.solver.ckpt.scheme.name(),
                 if self.solver.ckpt.delta { "+delta" } else { "" },
-                if self.solver.ckpt.compress { "+comp" } else { "" }
+                if self.solver.ckpt.compress { "+comp" } else { "" },
+                if self.solver.ckpt.integrity { "+sum" } else { "" }
             ),
         );
         m.insert("m_inner", self.solver.m_inner.to_string());
@@ -498,6 +641,58 @@ mod tests {
         assert!(c.set("inject_phase", "3").is_err());
         assert!(c.set("inject_phase", "3:warp").is_err());
         assert!(c.set("inject_phase", "3:agree:0").is_err());
+    }
+
+    #[test]
+    fn degraded_fault_keys_parse_and_attach_to_the_plan() {
+        let mut c = RunConfig::default();
+        c.failures = 1;
+        assert!(c.set("faults.straggler", "2x3.0, 1x1.5").unwrap());
+        assert_eq!(c.inject_straggler, vec![(2, 3.0), (1, 1.5)]);
+        assert!(c.set("faults.link", "0>1:3, 4>2:1").unwrap());
+        assert_eq!(c.inject_link, vec![(0, 1, 3), (4, 2, 1)]);
+        assert!(c.set("faults.bitflip", "3:2:4, 1:1").unwrap());
+        assert_eq!(c.inject_bitflip, vec![(3, 2, 4), (1, 1, 1)]);
+        // CLI-style aliases map onto the same keys.
+        assert!(c.set("inject_straggler", "6x2.0").unwrap());
+        assert_eq!(c.inject_straggler, vec![(6, 2.0)]);
+        // The plan carries the kill campaign plus all degraded faults.
+        let plan = c.injection_plan();
+        assert_eq!(plan.n_failures(), 1);
+        assert_eq!(plan.stragglers.len(), 1);
+        assert_eq!(plan.links.len(), 2);
+        assert_eq!(plan.bitflips.len(), 2);
+        assert_eq!(plan.stragglers[0].mult, 2.0);
+        assert_eq!(plan.bitflips[1].bits, 1, "bits defaults to 1");
+        // Summary names every configured fault.
+        let s = c.summary();
+        assert_eq!(s.get("faults.straggler").unwrap(), "6x2");
+        assert!(s.get("faults.link").unwrap().contains("0>1:3"));
+        assert!(s.get("faults.bitflip").unwrap().contains("3:2:4"));
+        // Malformed entries are rejected.
+        assert!(c.set("faults.straggler", "2").is_err());
+        assert!(c.set("faults.straggler", "2x0.5").is_err());
+        assert!(c.set("faults.link", "0>0:1").is_err());
+        assert!(c.set("faults.link", "0>1:0").is_err());
+        assert!(c.set("faults.link", "3:1").is_err());
+        assert!(c.set("faults.bitflip", "3:2:0").is_err());
+        assert!(c.set("faults.bitflip", "3:-1").is_err());
+        // NoProtection still never injects anything.
+        c.strategy = Strategy::NoProtection;
+        assert!(c.injection_plan().stragglers.is_empty());
+    }
+
+    #[test]
+    fn link_and_integrity_keys_parse() {
+        let mut c = RunConfig::default();
+        assert!(c.set("link_timeout", "0.002").unwrap());
+        assert!(c.set("link_retry_budget", "7").unwrap());
+        assert_eq!(c.net.link_timeout, 0.002);
+        assert_eq!(c.net.link_retry_budget, 7);
+        assert!(!c.solver.ckpt.integrity);
+        assert!(c.set("ckpt_integrity", "true").unwrap());
+        assert!(c.solver.ckpt.integrity);
+        assert!(c.summary().get("ckpt").unwrap().ends_with("+sum"));
     }
 
     #[test]

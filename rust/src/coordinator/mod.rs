@@ -67,25 +67,25 @@ pub fn run_custom(
     anyhow::ensure!(cfg.p >= 2, "need at least 2 ranks");
     anyhow::ensure!(cfg.grid.n() >= cfg.p * 4, "grid too small for p={} ranks", cfg.p);
     let n_spares = cfg.spares();
-    // Reject kills that can never fire: a target outside the world (e.g. a
-    // typo'd `--inject-phase` rank) would otherwise report a failure-free
-    // "success" for a campaign that never ran.
-    for k in &plan.kills {
-        anyhow::ensure!(
-            k.world_rank < cfg.p + n_spares,
-            "injection target rank {} out of range: world has {} application rank(s) + {} \
-             spare(s)",
-            k.world_rank,
-            cfg.p,
-            n_spares
-        );
-    }
+    // Reject plans that can never fire as written: a kill target outside
+    // the world (e.g. a typo'd `--inject-phase` rank), a rank named twice,
+    // or a degraded fault aimed at an idle spare would otherwise report a
+    // failure-free "success" for a campaign that never ran.
+    plan.validate(cfg.p, n_spares).map_err(|e| anyhow::anyhow!("invalid injection plan: {e}"))?;
     let world =
         World::new_with_engine(cfg.p, n_spares, cfg.net.clone(), Injector::new(plan), cfg.engine);
 
     let mut cfg = cfg.clone();
     // The no-protection baseline runs without any checkpointing.
     cfg.solver.ckpt_enabled &= cfg.ckpt_enabled();
+    // Degraded-mode wiring: a straggler plan arms the detector (so healthy
+    // campaigns never pay its per-cycle allgather), and a corruption plan
+    // arms the checkpoint integrity layer so every injected flip meets the
+    // pre-commit scrubber.
+    if world.injector.has_stragglers() {
+        cfg.solver.degraded = Some(recovery::degraded::DegradedCfg::new(cfg.spare_pool()));
+    }
+    cfg.solver.ckpt.integrity |= world.injector.has_bitflips();
     let cfg = Arc::new(cfg);
 
     let results = match cfg.engine {
@@ -248,6 +248,7 @@ fn finish(mut ctx: Ctx, outcome: Option<Outcome>, killed: bool, was_spare: bool)
             decisions: ctx.decisions.clone(),
             ckpt: ctx.ckpt_log.clone(),
             recovery_retries: ctx.recovery_retries,
+            faults: ctx.faults,
             trace,
         },
         outcome,

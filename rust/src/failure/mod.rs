@@ -115,10 +115,59 @@ impl Kill {
     }
 }
 
-/// A reproducible failure campaign.
+/// A performance-faulty ("straggler") rank: every compute phase on
+/// `world_rank` runs `mult` times slower than the modeled cost.  Unlike a
+/// [`Kill`] the rank stays correct and alive — only the straggler detector
+/// plus the policy engine can decide it is cheaper to shed it
+/// ([`crate::recovery::degraded`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Straggler {
+    pub world_rank: WorldRank,
+    /// Compute slowdown multiplier (>= 1.0; 1.0 = healthy).
+    pub mult: f64,
+}
+
+/// A lossy directed link: the first `drops` *data* messages sent from
+/// `src` to `dst` are dropped on the wire.  The sender detects each loss by
+/// retransmit timeout ([`crate::netsim::NetParams::link_timeout`]) and
+/// retries; only exhausting [`crate::netsim::NetParams::link_retry_budget`]
+/// consecutive retries on one message escalates (epoch revoke, no death).
+/// Control messages (death notices, revokes, join invitations) are never
+/// dropped: the fault models payload congestion/partition, not a failure of
+/// the out-of-band control plane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkFault {
+    pub src: WorldRank,
+    pub dst: WorldRank,
+    /// How many data messages on this link are dropped before it heals.
+    pub drops: u32,
+}
+
+/// Silent data corruption: flip `bits` pseudo-random bits in `world_rank`'s
+/// *committed* solution-vector checkpoint blob at the first commit whose
+/// version reaches `at_version`.  The corruption lands after the commit
+/// agreement — exactly the window a scrubber must cover, because the next
+/// delta commit would otherwise diff against a corrupt base.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BitFlip {
+    pub world_rank: WorldRank,
+    /// Committed version at (or after) which the corruption lands.
+    pub at_version: i64,
+    /// Number of distinct bits flipped (>= 1).
+    pub bits: u32,
+}
+
+/// A reproducible failure campaign: crash-stop kills plus the degraded-mode
+/// fault kinds (stragglers, lossy links, silent bitflips).
 #[derive(Debug, Clone, Default)]
 pub struct InjectionPlan {
     pub kills: Vec<Kill>,
+    /// Performance-faulty ranks (config `faults.straggler`).
+    pub stragglers: Vec<Straggler>,
+    /// Lossy directed links (config `faults.link`).
+    pub links: Vec<LinkFault>,
+    /// Checkpoint bitflip injections (config `faults.bitflip`).
+    pub bitflips: Vec<BitFlip>,
 }
 
 impl InjectionPlan {
@@ -164,7 +213,7 @@ impl InjectionPlan {
                 )
             })
             .collect();
-        InjectionPlan { kills }
+        InjectionPlan { kills, ..Default::default() }
     }
 
     pub fn n_failures(&self) -> usize {
@@ -194,7 +243,7 @@ impl InjectionPlan {
                 )
             })
             .collect();
-        InjectionPlan { kills }
+        InjectionPlan { kills, ..Default::default() }
     }
 
     /// Simultaneous multi-rank failure: `ranks` all die at the same inner
@@ -207,6 +256,7 @@ impl InjectionPlan {
                 .iter()
                 .map(|&world_rank| Kill::at_iter(world_rank, at_inner_iter))
                 .collect(),
+            ..Default::default()
         }
     }
 
@@ -230,6 +280,7 @@ impl InjectionPlan {
                 Kill::at_iter(first, at_inner_iter),
                 Kill::at_phase(second, phase, occurrence),
             ],
+            ..Default::default()
         }
     }
 
@@ -264,7 +315,107 @@ impl InjectionPlan {
             kills: (start..start + victims)
                 .map(|world_rank| Kill::at_iter(world_rank, at_inner_iter))
                 .collect(),
+            ..Default::default()
         }
+    }
+
+    /// Whole-plan validation against the world shape (`p` application ranks
+    /// plus `n_spares` trailing spare slots).  Historically only
+    /// `n_failures <= p/2` was checked by the campaign constructors; custom
+    /// plans could silently name a rank twice (the second entry never
+    /// fires) or aim a degraded fault at an idle spare (which runs no
+    /// compute, commits no checkpoints, and would make the campaign a
+    /// vacuous "success").  Called by the coordinator before any rank
+    /// starts.
+    pub fn validate(&self, p: usize, n_spares: usize) -> Result<(), String> {
+        let world = p + n_spares;
+        let mut seen = std::collections::BTreeSet::new();
+        for k in &self.kills {
+            if k.world_rank >= world {
+                return Err(format!(
+                    "kill targets rank {} but the world has only {world} rank(s)",
+                    k.world_rank
+                ));
+            }
+            if !seen.insert(k.world_rank) {
+                return Err(format!(
+                    "plan names rank {} twice in its kill schedule (a rank dies once)",
+                    k.world_rank
+                ));
+            }
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for s in &self.stragglers {
+            if !(s.mult >= 1.0) || !s.mult.is_finite() {
+                return Err(format!(
+                    "straggler multiplier for rank {} must be a finite value >= 1.0 (got {})",
+                    s.world_rank, s.mult
+                ));
+            }
+            if s.world_rank >= p {
+                return Err(format!(
+                    "straggler injection targets rank {}, which is not an application rank \
+                     (0..{p}): spares idle until adopted and have no compute to slow down",
+                    s.world_rank
+                ));
+            }
+            if !seen.insert(s.world_rank) {
+                return Err(format!(
+                    "plan names rank {} twice in its straggler schedule",
+                    s.world_rank
+                ));
+            }
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for b in &self.bitflips {
+            if b.bits == 0 {
+                return Err(format!(
+                    "bitflip injection for rank {} flips zero bits",
+                    b.world_rank
+                ));
+            }
+            if b.at_version < 0 {
+                return Err(format!(
+                    "bitflip injection for rank {} targets negative version {}",
+                    b.world_rank, b.at_version
+                ));
+            }
+            if b.world_rank >= p {
+                return Err(format!(
+                    "bitflip injection targets rank {}, which is not an application rank \
+                     (0..{p}): spares commit no checkpoints to corrupt",
+                    b.world_rank
+                ));
+            }
+            if !seen.insert(b.world_rank) {
+                return Err(format!(
+                    "plan names rank {} twice in its bitflip schedule",
+                    b.world_rank
+                ));
+            }
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for l in &self.links {
+            if l.src >= world || l.dst >= world {
+                return Err(format!(
+                    "link fault {}->{} leaves the {world}-rank world",
+                    l.src, l.dst
+                ));
+            }
+            if l.src == l.dst {
+                return Err(format!("link fault {}->{} is a self-loop", l.src, l.dst));
+            }
+            if l.drops == 0 {
+                return Err(format!("link fault {}->{} drops zero messages", l.src, l.dst));
+            }
+            if !seen.insert((l.src, l.dst)) {
+                return Err(format!(
+                    "plan names link {}->{} twice in its drop schedule",
+                    l.src, l.dst
+                ));
+            }
+        }
+        Ok(())
     }
 
     /// The recoverable contrast to [`InjectionPlan::same_group_burst`]: one
@@ -288,6 +439,7 @@ impl InjectionPlan {
                     )
                 })
                 .collect(),
+            ..Default::default()
         }
     }
 }
@@ -358,6 +510,47 @@ impl Injector {
             })
             .map(|k| k.world_rank)
             .collect()
+    }
+
+    /// Compute slowdown multiplier of `rank` (1.0 = healthy).
+    pub fn straggler_mult(&self, rank: WorldRank) -> f64 {
+        self.plan
+            .stragglers
+            .iter()
+            .find(|s| s.world_rank == rank)
+            .map_or(1.0, |s| s.mult)
+    }
+
+    /// Whether the plan injects any stragglers (gates the detector's
+    /// allgather so healthy campaigns pay nothing).
+    pub fn has_stragglers(&self) -> bool {
+        !self.plan.stragglers.is_empty()
+    }
+
+    /// Scheduled drop count of the directed link `src -> dst` (0 = clean).
+    pub fn link_drops(&self, src: WorldRank, dst: WorldRank) -> u32 {
+        self.plan
+            .links
+            .iter()
+            .find(|l| l.src == src && l.dst == dst)
+            .map_or(0, |l| l.drops)
+    }
+
+    /// Whether the plan injects any lossy links (gates the send-side drop
+    /// bookkeeping off the hot path).
+    pub fn has_link_faults(&self) -> bool {
+        !self.plan.links.is_empty()
+    }
+
+    /// The bitflip injection aimed at `rank`, if any.
+    pub fn bitflip_for(&self, rank: WorldRank) -> Option<&BitFlip> {
+        self.plan.bitflips.iter().find(|b| b.world_rank == rank)
+    }
+
+    /// Whether the plan injects any checkpoint corruption (turns the
+    /// scrubber's verify pass on).
+    pub fn has_bitflips(&self) -> bool {
+        !self.plan.bitflips.is_empty()
     }
 }
 
@@ -510,5 +703,135 @@ mod tests {
         assert!(inj.should_die(5, 40));
         assert_eq!(inj.co_scheduled(3, 40), vec![5]);
         assert_eq!(inj.co_scheduled(5, 40), vec![3]);
+    }
+
+    #[test]
+    fn validate_accepts_every_builtin_campaign() {
+        for plan in [
+            InjectionPlan::none(),
+            InjectionPlan::paper_campaign(8, 4, 25, true),
+            InjectionPlan::exhaustion_campaign(8, 3, 10),
+            InjectionPlan::burst(&[3, 5], 40),
+            InjectionPlan::nested(7, 25, 3, ProtoPhase::Reconstruct, 1),
+            InjectionPlan::same_group_burst(8, 4, 1, 2, 40),
+            InjectionPlan::cross_group_campaign(12, 4, 3, 10),
+        ] {
+            plan.validate(12, 2).unwrap();
+        }
+        // A degraded-mode plan over application ranks passes too.
+        let plan = InjectionPlan {
+            stragglers: vec![Straggler { world_rank: 2, mult: 3.0 }],
+            links: vec![LinkFault { src: 0, dst: 1, drops: 3 }],
+            bitflips: vec![BitFlip { world_rank: 4, at_version: 1, bits: 2 }],
+            ..Default::default()
+        };
+        plan.validate(8, 2).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_rank_named_twice_in_kills() {
+        let plan = InjectionPlan {
+            kills: vec![Kill::at_iter(3, 25), Kill::at_iter(3, 40)],
+            ..Default::default()
+        };
+        let err = plan.validate(8, 0).unwrap_err();
+        assert!(err.contains("rank 3 twice"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_straggler_named_twice() {
+        let plan = InjectionPlan {
+            stragglers: vec![
+                Straggler { world_rank: 2, mult: 2.0 },
+                Straggler { world_rank: 2, mult: 4.0 },
+            ],
+            ..Default::default()
+        };
+        let err = plan.validate(8, 0).unwrap_err();
+        assert!(err.contains("rank 2 twice"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_straggler_on_a_spare() {
+        // World = 8 app ranks + 2 spares; rank 8 is the first spare slot.
+        let plan = InjectionPlan {
+            stragglers: vec![Straggler { world_rank: 8, mult: 2.0 }],
+            ..Default::default()
+        };
+        let err = plan.validate(8, 2).unwrap_err();
+        assert!(err.contains("not an application rank"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_bitflip_on_a_spare() {
+        let plan = InjectionPlan {
+            bitflips: vec![BitFlip { world_rank: 9, at_version: 1, bits: 1 }],
+            ..Default::default()
+        };
+        let err = plan.validate(8, 2).unwrap_err();
+        assert!(err.contains("not an application rank"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_bitflip_named_twice() {
+        let plan = InjectionPlan {
+            bitflips: vec![
+                BitFlip { world_rank: 1, at_version: 1, bits: 1 },
+                BitFlip { world_rank: 1, at_version: 2, bits: 3 },
+            ],
+            ..Default::default()
+        };
+        let err = plan.validate(8, 0).unwrap_err();
+        assert!(err.contains("rank 1 twice"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_faults() {
+        // Sub-unity slowdown: a "straggler" that speeds up is a plan typo.
+        let m = InjectionPlan {
+            stragglers: vec![Straggler { world_rank: 1, mult: 0.5 }],
+            ..Default::default()
+        };
+        assert!(m.validate(8, 0).unwrap_err().contains(">= 1.0"));
+        // Self-loop, zero-drop and duplicate links.
+        let l = |src, dst, drops| InjectionPlan {
+            links: vec![LinkFault { src, dst, drops }],
+            ..Default::default()
+        };
+        assert!(l(2, 2, 1).validate(8, 0).unwrap_err().contains("self-loop"));
+        assert!(l(2, 3, 0).validate(8, 0).unwrap_err().contains("zero messages"));
+        let dup = InjectionPlan {
+            links: vec![
+                LinkFault { src: 0, dst: 1, drops: 1 },
+                LinkFault { src: 0, dst: 1, drops: 2 },
+            ],
+            ..Default::default()
+        };
+        assert!(dup.validate(8, 0).unwrap_err().contains("twice"));
+        // Zero-bit flips never corrupt anything.
+        let z = InjectionPlan {
+            bitflips: vec![BitFlip { world_rank: 1, at_version: 1, bits: 0 }],
+            ..Default::default()
+        };
+        assert!(z.validate(8, 0).unwrap_err().contains("zero bits"));
+    }
+
+    #[test]
+    fn degraded_fault_accessors() {
+        let inj = Injector::new(InjectionPlan {
+            stragglers: vec![Straggler { world_rank: 2, mult: 3.0 }],
+            links: vec![LinkFault { src: 0, dst: 1, drops: 4 }],
+            bitflips: vec![BitFlip { world_rank: 5, at_version: 2, bits: 3 }],
+            ..Default::default()
+        });
+        assert!(inj.has_stragglers() && inj.has_link_faults() && inj.has_bitflips());
+        assert_eq!(inj.straggler_mult(2), 3.0);
+        assert_eq!(inj.straggler_mult(3), 1.0);
+        assert_eq!(inj.link_drops(0, 1), 4);
+        assert_eq!(inj.link_drops(1, 0), 0, "links are directed");
+        assert_eq!(inj.bitflip_for(5).unwrap().bits, 3);
+        assert!(inj.bitflip_for(2).is_none());
+        let clean = Injector::new(InjectionPlan::none());
+        assert!(!clean.has_stragglers() && !clean.has_link_faults() && !clean.has_bitflips());
     }
 }

@@ -348,6 +348,33 @@ pub fn critical_path_table(rep: &RunReport) -> Table {
     t
 }
 
+/// Degraded-fault summary of one run (DESIGN.md §14): how often each
+/// degraded-mode mechanism fired — lossy-link retransmits, scrubber
+/// detections/repairs and the shortfall it escalated, proactive
+/// straggler shrink-aways, and global restarts.  Counters come from
+/// [`RunReport::faults`] (summed over surviving ranks); the decision rows
+/// come from the merged decision log.  All-zero for healthy crash-stop
+/// campaigns.
+pub fn fault_table(rep: &RunReport) -> Table {
+    let mut t = Table::new(
+        "Degraded faults (retries, scrubber verdicts, straggler decisions)",
+        vec!["metric".into(), "count".into()],
+    );
+    let f = &rep.faults;
+    let degraded_shrinks =
+        rep.decisions.iter().filter(|d| d.decision == "degraded-shrink").count();
+    t.row(vec!["link_retries".into(), f.link_retries.to_string()]);
+    t.row(vec!["scrub_detected".into(), f.scrub_detected.to_string()]);
+    t.row(vec!["scrub_repaired".into(), f.scrub_repaired.to_string()]);
+    t.row(vec![
+        "scrub_escalated".into(),
+        f.scrub_detected.saturating_sub(f.scrub_repaired).to_string(),
+    ]);
+    t.row(vec!["degraded_shrinks".into(), degraded_shrinks.to_string()]);
+    t.row(vec!["global_restarts".into(), rep.global_restarts().to_string()]);
+    t
+}
+
 /// Cross-rank per-phase distribution (p50/p95/max over surviving ranks) of
 /// one run, from [`RunReport::phase_dist`].
 pub fn phase_dist_table(rep: &RunReport) -> Table {
@@ -480,6 +507,7 @@ mod tests {
             decisions: vec![dec(0, "substitute"), dec(1, "shrink")],
             ckpt: Vec::new(),
             recovery_retries: 1,
+            faults: Default::default(),
             trace: Vec::new(),
         };
         let rep = RunReport::from_ranks(vec![rank], 1e-9, true, 2);
@@ -500,5 +528,50 @@ mod tests {
         assert_eq!(pd.rows.len(), 7);
         assert_eq!(pd.rows[0][0], "compute");
         assert_eq!(pd.rows[6][0], "idle");
+    }
+
+    #[test]
+    fn fault_table_summarizes_counters_and_degraded_decisions() {
+        use crate::metrics::{DecisionRecord, FaultCounters, PhaseTimers, RankReport};
+        let dec = |seq, at, name: &'static str| DecisionRecord {
+            seq,
+            at,
+            failed_ranks: vec![6],
+            decision: name,
+            reason: String::new(),
+            warm_free: 0,
+            cold_free: 0,
+            attempt: 0,
+        };
+        let rank = RankReport {
+            world_rank: 0,
+            finish_time: 2.0,
+            phases: PhaseTimers::default(),
+            iterations: 50,
+            killed: false,
+            was_spare: false,
+            // The proactive decision and the executed follow-up differ in
+            // the `decision` field, so the merge keeps both.
+            decisions: vec![dec(0, 1.0, "degraded-shrink"), dec(1, 1.2, "shrink")],
+            ckpt: Vec::new(),
+            recovery_retries: 0,
+            faults: FaultCounters { link_retries: 4, scrub_detected: 3, scrub_repaired: 2 },
+            trace: Vec::new(),
+        };
+        let rep = RunReport::from_ranks(vec![rank], 1e-9, true, 1);
+        let t = fault_table(&rep);
+        let get = |metric: &str| {
+            t.rows
+                .iter()
+                .find(|r| r[0] == metric)
+                .unwrap_or_else(|| panic!("missing metric {metric}"))[1]
+                .clone()
+        };
+        assert_eq!(get("link_retries"), "4");
+        assert_eq!(get("scrub_detected"), "3");
+        assert_eq!(get("scrub_repaired"), "2");
+        assert_eq!(get("scrub_escalated"), "1");
+        assert_eq!(get("degraded_shrinks"), "1");
+        assert_eq!(get("global_restarts"), "0");
     }
 }

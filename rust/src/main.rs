@@ -38,6 +38,25 @@
 //! `--ckpt-compress` the word-level RLE wire compression
 //! (`ckpt_compress=true`).  See DESIGN.md §8–§9.
 //!
+//! `--inject-straggler VALUE` marks ranks performance-faulty
+//! (`faults.straggler=VALUE`): comma-separated `<rank>x<mult>` entries,
+//! e.g. `--inject-straggler 2x3.0` makes rank 2 compute 3× slower.  The
+//! straggler detector prices shedding the slow rank against tolerating
+//! it under the cost model and can shrink it away (DESIGN.md §14).
+//!
+//! `--inject-link VALUE` makes directed links lossy
+//! (`faults.link=VALUE`): comma-separated `<src>><dst>:<drops>` entries,
+//! e.g. `--inject-link 0>1:3` drops the first three data messages from
+//! rank 0 to rank 1; the sender retransmits on timeout (`link_timeout`,
+//! `link_retry_budget`) without declaring anyone dead.
+//!
+//! `--inject-bitflip VALUE` corrupts committed checkpoints
+//! (`faults.bitflip=VALUE`): comma-separated `<rank>:<version>[:<bits>]`
+//! entries, e.g. `--inject-bitflip 3:2` flips one bit in rank 3's
+//! committed solution blob at version 2.  The checkpoint scrubber detects
+//! the damage by per-chunk checksum and repairs it from mirror/xor/rs2
+//! parity before the next delta commit (DESIGN.md §14).
+//!
 //! `--engine VALUE` selects the rank execution engine (shorthand for
 //! `engine=VALUE`): `threads` (one OS thread per rank, the default and the
 //! differential-testing oracle) or `events` (deterministic single-threaded
@@ -64,7 +83,9 @@ fn usage() -> ! {
         "usage: ftgmres <run|report|figure4|figure5|figure6|figures> \
          [--config FILE] [--policy POLICY] [--engine threads|events] \
          [--ckpt-scheme SCHEME] [--ckpt-delta] \
-         [--ckpt-compress] [--inject-phase RANK:PHASE[:N][,..]] [--quick] \
+         [--ckpt-compress] [--inject-phase RANK:PHASE[:N][,..]] \
+         [--inject-straggler RANKxMULT[,..]] [--inject-link SRC>DST:N[,..]] \
+         [--inject-bitflip RANK:VER[:BITS][,..]] [--quick] \
          [--trace PATH] [--out DIR] [key=value ...]"
     );
     std::process::exit(2);
@@ -126,6 +147,30 @@ fn parse_args() -> anyhow::Result<Args> {
                 anyhow::ensure!(
                     cfg.set("inject_phase", &rest[i + 1])?,
                     "inject_phase key rejected"
+                );
+                rest.drain(i..=i + 1);
+            }
+            "--inject-straggler" => {
+                anyhow::ensure!(i + 1 < rest.len(), "--inject-straggler needs a value");
+                anyhow::ensure!(
+                    cfg.set("faults.straggler", &rest[i + 1])?,
+                    "faults.straggler key rejected"
+                );
+                rest.drain(i..=i + 1);
+            }
+            "--inject-link" => {
+                anyhow::ensure!(i + 1 < rest.len(), "--inject-link needs a value");
+                anyhow::ensure!(
+                    cfg.set("faults.link", &rest[i + 1])?,
+                    "faults.link key rejected"
+                );
+                rest.drain(i..=i + 1);
+            }
+            "--inject-bitflip" => {
+                anyhow::ensure!(i + 1 < rest.len(), "--inject-bitflip needs a value");
+                anyhow::ensure!(
+                    cfg.set("faults.bitflip", &rest[i + 1])?,
+                    "faults.bitflip key rejected"
                 );
                 rest.drain(i..=i + 1);
             }
@@ -261,6 +306,11 @@ fn print_report(cfg: &RunConfig, rep: &RunReport) {
     }
     if !rep.decisions.is_empty() {
         println!("\n{}", ulfm_ftgmres::figures::decision_table(rep).to_text());
+    }
+    // Only worth printing when a degraded-mode mechanism actually fired.
+    let f = &rep.faults;
+    if f.link_retries + f.scrub_detected + f.scrub_repaired > 0 {
+        println!("\n{}", ulfm_ftgmres::figures::fault_table(rep).to_text());
     }
 }
 

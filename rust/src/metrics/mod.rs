@@ -233,6 +233,32 @@ pub struct CkptRecord {
     pub encode_secs: f64,
 }
 
+/// Degraded-fault observability counters (DESIGN.md §14): how often the
+/// lossy-link retransmit path fired and what the checkpoint scrubber found
+/// and fixed.  Zero across the board for pure crash-stop campaigns.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Data-message retransmits after an injected link drop
+    /// ([`crate::failure::LinkFault`]); counts retries, not failed sends —
+    /// a send that exhausts the retry budget also revokes the epoch.
+    pub link_retries: u64,
+    /// Committed checkpoint chunks whose stored checksum mismatched at a
+    /// scrub pass (injected silent data corruption, detected).
+    pub scrub_detected: u64,
+    /// Corrupt chunks repaired in place from mirror/xor/rs2 parity; a
+    /// shortfall vs `scrub_detected` escalated to the recovery policy.
+    pub scrub_repaired: u64,
+}
+
+impl FaultCounters {
+    /// Element-wise sum (campaign aggregation over ranks).
+    pub fn add(&mut self, other: &FaultCounters) {
+        self.link_retries += other.link_retries;
+        self.scrub_detected += other.scrub_detected;
+        self.scrub_repaired += other.scrub_repaired;
+    }
+}
+
 /// Final report for one rank of one run.
 #[derive(Debug, Clone)]
 pub struct RankReport {
@@ -253,6 +279,8 @@ pub struct RankReport {
     /// Recovery attempts this rank abandoned through the epoch fence
     /// (nested failures poisoning in-flight recovery protocol).
     pub recovery_retries: u64,
+    /// Degraded-fault counters (link retries, scrub detections/repairs).
+    pub faults: FaultCounters,
     /// Virtual-time trace stream (empty unless `RunConfig::trace` is on) —
     /// see [`crate::trace`].
     pub trace: Vec<crate::trace::TraceEvent>,
@@ -293,6 +321,10 @@ pub struct RunReport {
     /// survivors, so the max counts events-worth of retries, not the
     /// rank-count multiple a sum would).
     pub recovery_retries: u64,
+    /// Degraded-fault counters summed over the surviving ranks (retries
+    /// and scrub events are disjoint per rank, so the sum is the campaign
+    /// total — unlike recovery retries, which survivors witness jointly).
+    pub faults: FaultCounters,
     /// Cross-rank per-phase distributions over the surviving ranks.
     pub phase_dist: PhaseDist,
     /// Recovery critical-path analysis ([`crate::trace::critical_path`]);
@@ -312,8 +344,10 @@ impl RunReport {
         let mut retries = 0u64;
         let mut all_decisions: Vec<DecisionRecord> = Vec::new();
         let mut ckpt_by_version: BTreeMap<i64, CkptRecord> = BTreeMap::new();
+        let mut faults = FaultCounters::default();
         for r in &survivors {
             retries = retries.max(r.recovery_retries);
+            faults.add(&r.faults);
             max_phases.max_with(&r.phases);
             for p in ALL_PHASES {
                 let cur = mean_phases.get(p);
@@ -339,14 +373,23 @@ impl RunReport {
         }
         // Merge per-rank decision logs into one per-event log: order by
         // decision time, keep the first record of each event (identified by
-        // its failed-rank set), renumber.  Per-rank clocks at the same
-        // event differ by at most the failure-detection skew, which is far
-        // below the inter-event spacing, so time-ordering is event-ordering.
+        // its failed-rank set *and* the chosen strategy), renumber.
+        // Per-rank clocks at the same event differ by at most the
+        // failure-detection skew, which is far below the inter-event
+        // spacing, so time-ordering is event-ordering.  The strategy is
+        // part of the event key because a degraded-shrink decision on a
+        // straggler is followed by the crash-recovery decision for the same
+        // rank once it is shed ([`crate::recovery::degraded`]): same failed
+        // set, two distinct events.  Deaths are permanent, so the same
+        // (set, strategy) pair can never recur.
         all_decisions
             .sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap_or(std::cmp::Ordering::Equal));
         let mut decisions: Vec<DecisionRecord> = Vec::new();
         for d in all_decisions {
-            if !decisions.iter().any(|e| e.failed_ranks == d.failed_ranks) {
+            if !decisions
+                .iter()
+                .any(|e| e.failed_ranks == d.failed_ranks && e.decision == d.decision)
+            {
                 let mut d = d;
                 d.seq = decisions.len();
                 decisions.push(d);
@@ -374,6 +417,7 @@ impl RunReport {
             decisions,
             ckpt: ckpt_by_version.into_values().collect(),
             recovery_retries: retries,
+            faults,
             phase_dist,
             critical_path,
         }
@@ -473,6 +517,7 @@ mod tests {
             decisions: Vec::new(),
             ckpt: Vec::new(),
             recovery_retries: 0,
+            faults: FaultCounters::default(),
             trace: Vec::new(),
         };
         let ranks = vec![
@@ -511,6 +556,7 @@ mod tests {
             decisions,
             ckpt: Vec::new(),
             recovery_retries: 0,
+            faults: FaultCounters::default(),
             trace: Vec::new(),
         };
         let ranks = vec![
@@ -556,6 +602,7 @@ mod tests {
             decisions,
             ckpt: Vec::new(),
             recovery_retries: 0,
+            faults: FaultCounters::default(),
             trace: Vec::new(),
         };
         let ranks = vec![
@@ -573,6 +620,51 @@ mod tests {
         assert_eq!(rep.decisions.len(), 1);
         assert_eq!(rep.decisions[0].decision, "shrink");
         assert_eq!(rep.decisions[0].seq, 0);
+    }
+
+    #[test]
+    fn degraded_shrink_and_crash_records_for_the_same_rank_both_survive() {
+        // A straggler shed by the policy produces two records over the
+        // same failed set: the proactive "degraded-shrink" pricing event,
+        // then the crash-recovery "shrink" once the rank is gone.  The
+        // (failed set, strategy) dedup key must keep both while still
+        // collapsing duplicate witnesses of each.
+        let dec = |at, name: &'static str| DecisionRecord {
+            seq: 0,
+            at,
+            failed_ranks: vec![2],
+            decision: name,
+            reason: String::new(),
+            warm_free: 0,
+            cold_free: 0,
+            attempt: 0,
+        };
+        let mk = |wr, decisions| RankReport {
+            world_rank: wr,
+            finish_time: 1.0,
+            phases: PhaseTimers::default(),
+            iterations: 10,
+            killed: false,
+            was_spare: false,
+            decisions,
+            ckpt: Vec::new(),
+            recovery_retries: 0,
+            faults: FaultCounters { link_retries: 3, ..Default::default() },
+            trace: Vec::new(),
+        };
+        let ranks = vec![
+            mk(0, vec![dec(1.0, "degraded-shrink"), dec(1.5, "shrink")]),
+            mk(1, vec![dec(1.01, "degraded-shrink"), dec(1.51, "shrink")]),
+        ];
+        let rep = RunReport::from_ranks(ranks, 1e-9, true, 1);
+        assert_eq!(rep.decisions.len(), 2);
+        assert_eq!(rep.decisions[0].decision, "degraded-shrink");
+        assert_eq!(rep.decisions[0].seq, 0);
+        assert_eq!(rep.decisions[1].decision, "shrink");
+        assert_eq!(rep.decisions[1].seq, 1);
+        // Fault counters sum across survivors.
+        assert_eq!(rep.faults.link_retries, 6);
+        assert_eq!(rep.faults.scrub_detected, 0);
     }
 
     #[test]
@@ -597,6 +689,7 @@ mod tests {
             decisions: Vec::new(),
             ckpt,
             recovery_retries: 0,
+            faults: FaultCounters::default(),
             trace: Vec::new(),
         };
         let ranks = vec![

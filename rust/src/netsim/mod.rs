@@ -68,6 +68,17 @@ pub struct NetParams {
     /// badly with loosely-synchronized virtual clocks (head-of-line
     /// inversions); kept as an ablation knob.
     pub nic_contention: bool,
+    /// Sender-side retransmit timeout for lossy links (config
+    /// `link_timeout`): each dropped data message charges the sender this
+    /// long before the retry goes out.  GASPI-style timeout detection —
+    /// deliberately much larger than a round trip and much smaller than
+    /// `detect_latency`-scale death consensus.
+    pub link_timeout: f64,
+    /// Consecutive retransmits a sender tolerates on one message before it
+    /// escalates the link as failed (config `link_retry_budget`): the epoch
+    /// is revoked and recovery re-forms the communicator, but — unlike a
+    /// crash-stop death — no rank is marked dead.
+    pub link_retry_budget: u32,
 }
 
 impl Default for NetParams {
@@ -88,6 +99,8 @@ impl Default for NetParams {
             cold_spawn_latency: 2.0,
             ckpt_node_stride: false,
             nic_contention: false,
+            link_timeout: 5e-3,
+            link_retry_budget: 5,
         }
     }
 }
@@ -284,6 +297,20 @@ mod tests {
         flat.reset();
         let b = flat.transit(0, 24 * 7, 1 << 20, 0.0);
         assert!((a.arrival - b.arrival).abs() < 1e-12, "default network is flat");
+    }
+
+    #[test]
+    fn link_fault_defaults_sit_between_rtt_and_death_detection() {
+        let p = NetParams::default();
+        // The retransmit timeout must dwarf a round trip (otherwise healthy
+        // jitter would look like loss) yet stay well under the death
+        // detector, so a lossy link is observably distinct from a crash.
+        assert!(p.link_timeout > 20.0 * p.inter_latency, "timeout ~ RTT");
+        assert!(
+            p.link_retry_budget as f64 * p.link_timeout >= p.detect_latency,
+            "budget exhaustion must cost at least a death detection"
+        );
+        assert!(p.link_retry_budget >= 1);
     }
 
     #[test]

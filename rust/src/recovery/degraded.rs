@@ -1,0 +1,249 @@
+//! Degraded-rank (straggler) detection and the proactive shrink-away
+//! decision (DESIGN.md §14).
+//!
+//! A straggler does not fail: it keeps answering the failure detector while
+//! its *compute* runs `mult`× slower (the injector's
+//! [`crate::failure::Straggler`] schedule scales every virtual-time charge
+//! to [`Phase::Compute`]/[`Phase::Recompute`] on the afflicted rank).  ULFM
+//! never notices, but the BSP solver does: every dot-product allreduce and
+//! halo exchange now finishes at the straggler's pace, so one degraded rank
+//! taxes the whole communicator.
+//!
+//! The detector piggybacks on the solver's outer-cycle cadence.  Each
+//! member contributes its cumulative useful-work time (compute + recompute
+//! phase timers) to one scalar allgather; everyone derives the same p50 and
+//! per-rank slowdown estimate `m_est = t_rank / p50`, so the decision below
+//! is collectively identical without a leader broadcast.  When the worst
+//! estimate clears the noise floor, the cost model prices the two options
+//! the paper's runtime has:
+//!
+//! * **tolerate** — keep the straggler; every remaining iteration pays the
+//!   excess `(m_est − 1) × t_iter` because lockstep collectives wait for
+//!   the slowest member;
+//! * **shrink away** — treat the degraded rank like a failed one: it
+//!   self-excludes ([`Ctx::die`]) and the ordinary fenced recovery path
+//!   redistributes its block over the survivors (or substitutes a spare,
+//!   if the policy so decides).
+//!
+//! The comparison reuses the same [`recovery_estimates`] the failure-time
+//! policy engine runs, so the two decision points price recovery
+//! identically.  A shrink-away is recorded by *every* member as a
+//! `degraded-shrink` [`DecisionRecord`] before the victim dies; the
+//! follow-up failure event then produces the normal executed-decision
+//! record, and the decision-log merge keeps both (they differ in the
+//! `decision` field).
+
+use crate::backend::costs::{
+    inner_iter_secs, recovery_estimates, ParityShape, RecoveryCostInputs,
+};
+use crate::metrics::{DecisionRecord, Phase};
+use crate::netsim::ComputeModel;
+use crate::recovery::global_restart::GlobalCrModel;
+use crate::recovery::policy;
+use crate::simmpi::{Blob, Comm, Ctx, MpiResult};
+use crate::solver::{FtGmresCfg, SolverState};
+use crate::spares::SparePool;
+use crate::trace::TraceEvent;
+
+/// Knobs for the straggler detector.  Carried on
+/// [`FtGmresCfg::degraded`]; `None` there disables the detector (and its
+/// per-cycle allgather) entirely, which keeps failure-only campaigns
+/// bit-identical to runs that predate it.
+#[derive(Debug, Clone)]
+pub struct DegradedCfg {
+    /// Spare-pool shape, used to stamp pool occupancy into the
+    /// `degraded-shrink` decision record (the same fields the failure-time
+    /// records carry).
+    pub pool: SparePool,
+    /// Slowdown estimates at or below this multiplier are treated as timer
+    /// noise: no costing, no decision.
+    pub min_mult: f64,
+    /// Pinned capacity horizon (remaining inner iterations) for pricing
+    /// toleration; `None` uses the static prior
+    /// ([`policy::DEFAULT_HORIZON_PRIOR`]).  Kept static — not the dynamic
+    /// leader-agreed horizon — so every member prices from the allgather
+    /// alone.
+    pub horizon: Option<u64>,
+}
+
+impl DegradedCfg {
+    pub fn new(pool: SparePool) -> DegradedCfg {
+        DegradedCfg { pool, min_mult: 1.05, horizon: None }
+    }
+}
+
+/// One detector round: allgather useful-work timers, estimate per-rank
+/// slowdown, and — when tolerating the worst straggler prices above
+/// shrinking it away — record the `degraded-shrink` decision on every
+/// member and have the victim self-exclude.
+///
+/// Runs after the outer-cycle checkpoint hook in
+/// [`crate::solver::FtGmres::solve`]; no-ops unless `cfg.degraded` is set.
+/// At most one victim per round: the fenced recovery that follows
+/// re-partitions the world, and the next round re-measures against the new
+/// membership.
+pub async fn straggler_check(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    state: &SolverState,
+    cfg: &FtGmresCfg,
+    host: &ComputeModel,
+) -> MpiResult<()> {
+    let Some(dc) = &cfg.degraded else { return Ok(()) };
+    let n = comm.size();
+    if n < 2 {
+        return Ok(());
+    }
+    // Cumulative useful work: the only timers the straggler multiplier
+    // scales, so their ratio to the cohort's median estimates it directly.
+    let mine = ctx.timers.get(Phase::Compute) + ctx.timers.get(Phase::Recompute);
+    // The probe is solver communication, not application compute; charge it
+    // to Comm so the straggler's own multiplier cannot inflate the probe.
+    let prev = ctx.set_phase(Phase::Comm);
+    let gathered = comm.allgather(ctx, Blob::scalar(mine)).await;
+    ctx.set_phase(prev);
+    let all: Vec<f64> = gathered?.iter().map(|b| b.f[0]).collect();
+
+    let mut sorted = all.clone();
+    sorted.sort_by(f64::total_cmp);
+    // Lower median: deterministic for even n, robust to a minority of
+    // stragglers inflating the mean.
+    let p50 = sorted[(n - 1) / 2];
+    if !(p50 > 0.0) {
+        return Ok(());
+    }
+    // Worst member; ties break to the lowest comm rank so every member
+    // names the same victim.
+    let (victim_cr, worst) = all
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1).then(b.0.cmp(&a.0)))
+        .map(|(i, &t)| (i, t))
+        .expect("non-empty allgather");
+    let m_est = worst / p50;
+    if m_est <= dc.min_mult.max(1.0) {
+        return Ok(());
+    }
+
+    let victim_world = comm.world_of(victim_cr);
+    let horizon = dc.horizon.unwrap_or(policy::DEFAULT_HORIZON_PRIOR);
+    // Excess wall time the cohort pays per lockstep iteration, summed over
+    // the horizon, vs. the same shrink estimate the failure-time policy
+    // would produce for losing this one rank.
+    let tolerate =
+        (m_est - 1.0) * inner_iter_secs(host, state.rows(), cfg.m_inner) * horizon as f64;
+    let inp = RecoveryCostInputs {
+        rows_per_rank: state.rows(),
+        basis_vecs: 2 * cfg.m_outer + 1,
+        n_failed: 1,
+        survivors: n - 1,
+        buddy_k: cfg.ckpt.scheme.mirror_k(),
+        horizon_iters: horizon,
+        m_inner: cfg.m_inner,
+        parity: ParityShape::from_scheme(&cfg.ckpt.scheme, n),
+    };
+    let shrink =
+        recovery_estimates(host, &ctx.world.net.params, &GlobalCrModel::default(), &inp).shrink;
+    let at = ctx.clock;
+    if tolerate <= shrink {
+        ctx.trace_push(|| TraceEvent::Mark {
+            label: "degraded-tolerate",
+            arg: victim_world as i64,
+            t: at,
+        });
+        return Ok(());
+    }
+
+    // Shrink away.  Every member (victim included) records the identical
+    // proactive decision from the shared allgather, then the victim
+    // self-excludes; survivors discover the death at their next collective
+    // and run the ordinary fenced recovery.
+    let status = dc.pool.status(&ctx.world, &comm.members);
+    ctx.decisions.push(DecisionRecord {
+        seq: ctx.decisions.len(),
+        at,
+        failed_ranks: vec![victim_world],
+        decision: "degraded-shrink",
+        reason: format!(
+            "straggler w{victim_world} m_est={m_est:.2}: tolerate {tolerate:.3e}s > \
+             shrink {shrink:.3e}s (horizon={horizon})"
+        ),
+        warm_free: status.warm_free,
+        cold_free: status.cold_free,
+        attempt: 0,
+    });
+    ctx.trace_push(|| TraceEvent::Mark {
+        label: "degraded-shrink",
+        arg: victim_world as i64,
+        t: at,
+    });
+    if comm.rank == victim_cr {
+        return Err(ctx.die());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckptstore::Scheme;
+    use crate::netsim::NetParams;
+
+    fn cost_inputs(n: usize, rows: usize, m_inner: usize, horizon: u64) -> RecoveryCostInputs {
+        RecoveryCostInputs {
+            rows_per_rank: rows,
+            basis_vecs: 2 * 20 + 1,
+            n_failed: 1,
+            survivors: n - 1,
+            buddy_k: 1,
+            horizon_iters: horizon,
+            m_inner,
+            parity: ParityShape::from_scheme(&Scheme::Mirror { k: 1 }, n),
+        }
+    }
+
+    /// The cost-min crossover sits between the two multipliers the
+    /// degraded-mode acceptance tests inject (1.2 tolerates, 3.0 shrinks)
+    /// for the quick-campaign shape: 8 ranks, 1728-row cube, m_inner=10,
+    /// static prior horizon.
+    #[test]
+    fn quick_campaign_crossover_separates_the_test_multipliers() {
+        let host = ComputeModel::default();
+        let net = NetParams::default();
+        let (n, rows, m_inner) = (8usize, 1728 / 8, 10usize);
+        let horizon = policy::DEFAULT_HORIZON_PRIOR;
+        let iter = inner_iter_secs(&host, rows, m_inner);
+        let shrink = recovery_estimates(
+            &host,
+            &net,
+            &GlobalCrModel::default(),
+            &cost_inputs(n, rows, m_inner, horizon),
+        )
+        .shrink;
+        let tolerate = |m: f64| (m - 1.0) * iter * horizon as f64;
+        assert!(
+            tolerate(1.2) <= shrink,
+            "mult 1.2 must be tolerated: tolerate={:.3e} shrink={:.3e}",
+            tolerate(1.2),
+            shrink
+        );
+        assert!(
+            tolerate(3.0) > shrink,
+            "mult 3.0 must shrink away: tolerate={:.3e} shrink={:.3e}",
+            tolerate(3.0),
+            shrink
+        );
+    }
+
+    #[test]
+    fn lower_median_is_deterministic_and_straggler_resistant() {
+        // One straggler in eight: the lower median never lands on it.
+        let mut all = vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 3.0];
+        all.sort_by(f64::total_cmp);
+        assert_eq!(all[(all.len() - 1) / 2], 1.0);
+        // Even a straggler *pair* leaves the lower median clean.
+        let mut all = vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 3.0, 3.0];
+        all.sort_by(f64::total_cmp);
+        assert_eq!(all[(all.len() - 1) / 2], 1.0);
+    }
+}

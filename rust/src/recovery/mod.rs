@@ -24,6 +24,7 @@
 //! `GlobalRestart` branch rebuilds the problem from scratch on the
 //! survivors instead of wedging on a checkpoint that no longer exists.
 
+pub mod degraded;
 pub mod global_restart;
 pub mod plan;
 pub mod policy;

@@ -11,7 +11,7 @@ use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::Arc;
 
 use crate::failure::ProtoPhase;
-use crate::metrics::{CkptRecord, DecisionRecord, Phase, PhaseTimers};
+use crate::metrics::{CkptRecord, DecisionRecord, FaultCounters, Phase, PhaseTimers};
 use crate::simmpi::msg::{Ctl, Msg, Payload, Tag, WordArena};
 use crate::simmpi::world::{World, WorldRank};
 use crate::simmpi::{MpiError, MpiResult};
@@ -46,6 +46,21 @@ pub struct Ctx {
     /// poisoned the round (epoch-fence retries; see
     /// [`crate::recovery::handle_failure_fenced`]).
     pub recovery_retries: u64,
+    /// Degraded-fault counters (link retransmits, scrub detections and
+    /// repairs), copied into the [`crate::metrics::RankReport`].
+    pub faults: FaultCounters,
+    /// Whether this rank's scheduled checkpoint bitflip
+    /// ([`crate::failure::BitFlip`]) has already landed (one corruption per
+    /// plan entry, consumed at the first qualifying commit).
+    pub bitflip_done: bool,
+    /// Compute slowdown multiplier from the injector's straggler schedule
+    /// (1.0 = healthy); scales Compute/Recompute charges in
+    /// [`Ctx::advance`].
+    slowdown: f64,
+    /// Data messages already dropped per destination on this rank's faulty
+    /// outgoing links; consumed in program order, so both engines observe
+    /// the identical drop sequence.
+    link_drops_used: BTreeMap<WorldRank, u32>,
     /// Reusable scratch buffers for the checkpoint codecs (DESIGN.md §11):
     /// `pack_words` / RLE / changed-chunk scans on this rank's commit path
     /// borrow from here instead of allocating per commit.
@@ -76,6 +91,7 @@ pub struct Ctx {
 
 impl Ctx {
     pub fn new(world: Arc<World>, rank: WorldRank) -> Self {
+        let slowdown = world.injector.straggler_mult(rank);
         Ctx {
             world,
             rank,
@@ -87,6 +103,10 @@ impl Ctx {
             decisions: Vec::new(),
             ckpt_log: Vec::new(),
             recovery_retries: 0,
+            faults: FaultCounters::default(),
+            bitflip_done: false,
+            slowdown,
+            link_drops_used: BTreeMap::new(),
             arena: WordArena::default(),
             phase_hits: BTreeMap::new(),
             inbox: Vec::new(),
@@ -136,10 +156,18 @@ impl Ctx {
         }
     }
 
-    /// Advance the virtual clock by `dt`, charging the current phase.
+    /// Advance the virtual clock by `dt`, charging the current phase.  On a
+    /// straggler ([`crate::failure::Straggler`]) compute-bound charges run
+    /// `slowdown`× longer: the fault degrades local work, not the network,
+    /// so Comm/Checkpoint/Recovery advances stay unscaled.
     pub fn advance(&mut self, dt: f64) {
         debug_assert!(dt >= 0.0, "negative advance {dt}");
         let eff = self.effective_phase();
+        let dt = if self.slowdown > 1.0 && matches!(eff, Phase::Compute | Phase::Recompute) {
+            dt * self.slowdown
+        } else {
+            dt
+        };
         if let Some(tr) = self.trace.as_deref_mut() {
             tr.pre_charge(eff, self.clock);
         }
@@ -208,6 +236,16 @@ impl Ctx {
     ///
     /// Surfaces `ProcFailed` if the destination is already known dead (ULFM
     /// reports the error on the first operation that cannot complete).
+    ///
+    /// On a lossy link ([`crate::failure::LinkFault`]) each scheduled drop
+    /// costs the sender one retransmit timeout
+    /// ([`crate::netsim::NetParams::link_timeout`], GASPI-style detection:
+    /// a timeout, not a death notice); exhausting
+    /// [`crate::netsim::NetParams::link_retry_budget`] consecutive retries
+    /// on one message revokes the epoch instead of declaring anyone dead —
+    /// the observable difference between congestion and crash-stop.  Only
+    /// data payloads are droppable: the 16-byte control plane (death
+    /// notices, revokes, joins) models an out-of-band reliable channel.
     pub fn send_raw(
         &mut self,
         dst: WorldRank,
@@ -218,6 +256,25 @@ impl Ctx {
         if !self.world.is_alive(dst) {
             self.note_death(dst);
             return Err(MpiError::ProcFailed(vec![dst]));
+        }
+        if matches!(payload, Payload::Data(_)) && self.world.injector.has_link_faults() {
+            let scheduled = self.world.injector.link_drops(self.rank, dst);
+            let mut used = self.link_drops_used.get(&dst).copied().unwrap_or(0);
+            let mut consecutive = 0u32;
+            while used < scheduled {
+                used += 1;
+                self.link_drops_used.insert(dst, used);
+                consecutive += 1;
+                self.faults.link_retries += 1;
+                let timeout = self.world.net.params.link_timeout;
+                self.advance(timeout);
+                let (at, d) = (self.clock, dst);
+                self.trace_push(|| TraceEvent::Mark { label: "link-retry", arg: d as i64, t: at });
+                if consecutive >= self.world.net.params.link_retry_budget {
+                    self.mark_revoked(epoch);
+                    return Err(MpiError::Revoked);
+                }
+            }
         }
         let bytes = match &payload {
             Payload::Data(b) => b.bytes(),
@@ -428,7 +485,7 @@ impl Ctx {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::failure::{InjectionPlan, Injector};
+    use crate::failure::{InjectionPlan, Injector, LinkFault, Straggler};
     use crate::netsim::NetParams;
     use crate::simmpi::engine::block_on;
     use crate::simmpi::Blob;
@@ -566,6 +623,97 @@ mod tests {
                 })
                 .sum();
             assert!((spanned - ctx_total).abs() < 1e-12, "{spanned} vs {ctx_total}");
+        }
+    }
+
+    #[test]
+    fn straggler_scales_compute_and_recompute_charges_only() {
+        let w = World::new(
+            2,
+            0,
+            NetParams::default(),
+            Injector::new(InjectionPlan {
+                stragglers: vec![Straggler { world_rank: 1, mult: 3.0 }],
+                ..Default::default()
+            }),
+        );
+        let mut healthy = Ctx::new(w.clone(), 0);
+        let mut slow = Ctx::new(w, 1);
+        healthy.advance(1.0);
+        slow.advance(1.0);
+        assert_eq!(healthy.timers.compute, 1.0);
+        assert_eq!(slow.timers.compute, 3.0, "compute runs mult x slower");
+        // Communication is not degraded.
+        slow.set_phase(Phase::Comm);
+        slow.advance(1.0);
+        assert_eq!(slow.timers.comm, 1.0);
+        // Recomputation replays compute work, so it is slowed too.
+        slow.set_phase(Phase::Compute);
+        slow.recompute = true;
+        slow.advance(1.0);
+        assert_eq!(slow.timers.recompute, 3.0);
+        // advance_to is absolute (message arrival), never scaled.
+        let target = slow.clock + 1.0;
+        slow.advance_to(target);
+        assert_eq!(slow.clock, target);
+    }
+
+    #[test]
+    fn lossy_link_retries_then_delivers() {
+        let w = World::new(
+            2,
+            0,
+            NetParams::default(),
+            Injector::new(InjectionPlan {
+                links: vec![LinkFault { src: 0, dst: 1, drops: 3 }],
+                ..Default::default()
+            }),
+        );
+        let mut c0 = Ctx::new(w.clone(), 0);
+        let mut c1 = Ctx::new(w.clone(), 1);
+        // Three drops are under the default budget: the send succeeds after
+        // three timeout-and-retry rounds, charged to the sender.
+        c0.send_raw(1, 1, 7, Payload::Data(Blob::scalar(42.0))).unwrap();
+        assert_eq!(c0.faults.link_retries, 3);
+        assert!(c0.clock >= 3.0 * w.net.params.link_timeout);
+        assert_eq!(block_on(c1.recv_match(0, 1, 7)).unwrap().data().f, vec![42.0]);
+        // The schedule is consumed: the link has healed.
+        c0.send_raw(1, 1, 8, Payload::Data(Blob::scalar(1.0))).unwrap();
+        assert_eq!(c0.faults.link_retries, 3);
+        // The reverse direction was never faulty.
+        c1.send_raw(0, 1, 9, Payload::Data(Blob::scalar(2.0))).unwrap();
+        assert_eq!(c1.faults.link_retries, 0);
+    }
+
+    #[test]
+    fn link_budget_exhaustion_revokes_the_epoch_but_kills_nobody() {
+        let w = World::new(
+            2,
+            0,
+            NetParams::default(),
+            Injector::new(InjectionPlan {
+                links: vec![LinkFault { src: 0, dst: 1, drops: 99 }],
+                ..Default::default()
+            }),
+        );
+        let mut c0 = Ctx::new(w.clone(), 0);
+        match c0.send_raw(1, 7, 0, Payload::Data(Blob::scalar(1.0))) {
+            Err(MpiError::Revoked) => {}
+            other => panic!("expected Revoked, got {other:?}"),
+        }
+        // Observably distinct from ULFM death: the epoch is poisoned so the
+        // recovery driver rebuilds the communicator, but both endpoints are
+        // alive and no death was detected.
+        assert!(c0.is_revoked(7));
+        assert!(w.is_alive(0) && w.is_alive(1));
+        assert!(c0.known_dead.is_empty());
+        assert_eq!(c0.faults.link_retries, w.net.params.link_retry_budget as u64);
+        // Control messages never drop: the revoke still reaches the peer.
+        let mut c1 = Ctx::new(w, 1);
+        c0.send_ctl(1, Ctl::Revoke { epoch: 7 });
+        match block_on(c1.recv_match(0, 7, 0)) {
+            Err(MpiError::Revoked) => {}
+            other => panic!("expected Revoked at the peer, got {other:?}"),
         }
     }
 

@@ -41,6 +41,11 @@ pub mod tags {
     /// CKPT_QPAR_BASE + object id * 1024 + parity group, inside the
     /// checkpoint window above the parity-contribution tags.
     pub const CKPT_QPAR_BASE: Tag = CKPT_BASE + (1 << 13);
+    /// Checkpoint-scrubber repair traffic (DESIGN.md §14):
+    /// SCRUB_BASE + object id * 65536 + comm rank, inside the checkpoint
+    /// window above the Q-forward tags.  Carries parity/mirror material a
+    /// corrupt rank pulls from peers to repair a committed chunk in place.
+    pub const SCRUB_BASE: Tag = CKPT_BASE + (1 << 14);
     /// Recovery / redistribution transfers.
     pub const RECOVER_BASE: Tag = 1 << 20;
     /// Epoch-fence shrink validation (DESIGN.md §10): FENCE_BASE carries the
@@ -644,6 +649,8 @@ mod tests {
         // Sub-windows nest inside their parents without touching siblings.
         assert!(CKPT_BASE + 6 * 16 < CKPT_PARITY_BASE); // mirror ship tags below parity
         assert!(CKPT_PARITY_BASE + 1_000 < CKPT_QPAR_BASE); // parity tags below Q forwards
+        assert!(CKPT_QPAR_BASE + 6 * 1024 < SCRUB_BASE); // Q forwards below scrub repairs
+        assert!(SCRUB_BASE + 6 * 65_536 < HALO_BASE);
         assert!(CKPT_QPAR_BASE + 6 * 1024 < HALO_BASE);
         assert!(RECON_BASE > RECOVER_BASE + (1 << 18) + 10_000); // above spare tags
         // Fence window: above the spare-transfer ids, below reconstruction.

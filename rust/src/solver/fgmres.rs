@@ -48,6 +48,10 @@ pub struct FtGmresCfg {
     /// Early-exit tolerance for the inner solve (0 = fixed m_inner iters,
     /// the paper's configuration).
     pub inner_tol: f64,
+    /// Straggler detector configuration ([`crate::recovery::degraded`]);
+    /// `None` (the default) disables the per-cycle detector allgather so
+    /// failure-only campaigns keep their exact wire schedule.
+    pub degraded: Option<crate::recovery::degraded::DegradedCfg>,
 }
 
 impl Default for FtGmresCfg {
@@ -61,6 +65,7 @@ impl Default for FtGmresCfg {
             ckpt: CkptCfg::default(),
             ckpt_enabled: true,
             inner_tol: 0.0,
+            degraded: None,
         }
     }
 }
@@ -209,6 +214,12 @@ impl<'a> FtGmres<'a> {
                 if cfg.ckpt_enabled {
                     state.checkpoint_dynamic(ctx, comm, store, &cfg.ckpt).await?;
                 }
+                // Degraded-rank detection rides the same outer-cycle
+                // cadence: compare useful-work timers across the cohort
+                // and shrink away a straggler when tolerating it prices
+                // above losing its rank (no-op unless configured).
+                crate::recovery::degraded::straggler_check(ctx, comm, state, cfg, &self.host)
+                    .await?;
             }
             let _ = done; // true residual verified at the next loop top
         }

@@ -273,6 +273,7 @@ mod tests {
             decisions: Vec::new(),
             ckpt: Vec::new(),
             recovery_retries: 0,
+            faults: Default::default(),
             trace,
         }
     }

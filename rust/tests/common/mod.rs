@@ -96,7 +96,8 @@ pub fn digest(rep: &RunReport) -> String {
     let mut s = String::new();
     writeln!(
         s,
-        "tts={:016x} relres={:016x} iters={} conv={} fails={} retries={} restarts={}",
+        "tts={:016x} relres={:016x} iters={} conv={} fails={} retries={} restarts={} \
+         linkretry={} scrubdet={} scrubfix={}",
         rep.time_to_solution.to_bits(),
         rep.final_relres.to_bits(),
         rep.iterations,
@@ -104,18 +105,24 @@ pub fn digest(rep: &RunReport) -> String {
         rep.failures,
         rep.recovery_retries,
         rep.global_restarts(),
+        rep.faults.link_retries,
+        rep.faults.scrub_detected,
+        rep.faults.scrub_repaired,
     )
     .unwrap();
     for r in &rep.ranks {
         writeln!(
             s,
-            "rank {} t={:016x} it={} killed={} spare={} retries={}",
+            "rank {} t={:016x} it={} killed={} spare={} retries={} faults={}/{}/{}",
             r.world_rank,
             r.finish_time.to_bits(),
             r.iterations,
             r.killed,
             r.was_spare,
             r.recovery_retries,
+            r.faults.link_retries,
+            r.faults.scrub_detected,
+            r.faults.scrub_repaired,
         )
         .unwrap();
     }

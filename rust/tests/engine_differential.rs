@@ -20,7 +20,7 @@ use common::{digest, quick_config};
 use ulfm_ftgmres::ckptstore::Scheme;
 use ulfm_ftgmres::config::RunConfig;
 use ulfm_ftgmres::coordinator;
-use ulfm_ftgmres::failure::{InjectionPlan, ProtoPhase};
+use ulfm_ftgmres::failure::{BitFlip, InjectionPlan, Kill, LinkFault, ProtoPhase, Straggler};
 use ulfm_ftgmres::metrics::RunReport;
 use ulfm_ftgmres::recovery::Strategy;
 use ulfm_ftgmres::simmpi::Engine;
@@ -142,8 +142,95 @@ fn engines_agree_simultaneous_failures() {
             ulfm_ftgmres::failure::Kill::at_iter(2, 25),
             ulfm_ftgmres::failure::Kill::at_iter(5, 25),
         ],
+        ..Default::default()
     };
     let rep = assert_engines_agree("simultaneous", &cfg, &plan);
     assert!(rep.converged);
     assert_eq!(rep.failures, 2);
+}
+
+/// Degraded-mode leg 1 — straggler shrink-away (DESIGN.md §14): the
+/// detector's allgather, the cost-model decision and the victim's
+/// conversion to a crash-stop loss must serialize identically under both
+/// engines, down to the `degraded-shrink` decision record.
+#[test]
+fn engines_agree_straggler_shrink_away() {
+    let cfg = quick_config(8, Strategy::Shrink, 0);
+    let plan = InjectionPlan {
+        stragglers: vec![Straggler { world_rank: 6, mult: 3.0 }],
+        ..Default::default()
+    };
+    let rep = assert_engines_agree("straggler-shrink", &cfg, &plan);
+    assert!(rep.converged);
+    assert_eq!(rep.failures, 1);
+    assert!(
+        rep.decisions.iter().any(|d| d.decision == "degraded-shrink" && d.failed_ranks == vec![6]),
+        "straggler decision missing: {:?}",
+        rep.decisions
+    );
+}
+
+/// Degraded-mode leg 2 — lossy link below budget: the timeout-and-retry
+/// loop advances virtual time at the sender, so retry count *and* clocks
+/// must agree across engines.
+#[test]
+fn engines_agree_lossy_link_retries() {
+    let cfg = quick_config(8, Strategy::Shrink, 0);
+    let plan = InjectionPlan {
+        links: vec![LinkFault { src: 1, dst: 2, drops: 3 }],
+        ..Default::default()
+    };
+    let rep = assert_engines_agree("lossy-link", &cfg, &plan);
+    assert!(rep.converged);
+    assert_eq!(rep.failures, 0);
+    assert_eq!(rep.faults.link_retries, 3);
+}
+
+/// Degraded-mode leg 3 — silent corruption and the scrubber: injection,
+/// detection at the next commit, and the repair traffic all ride collective
+/// schedules, so the scrub counters and checkpoint accounting must be
+/// engine-invariant.
+#[test]
+fn engines_agree_bitflip_scrub() {
+    let cfg = quick_config(8, Strategy::Shrink, 0);
+    let plan = InjectionPlan {
+        bitflips: vec![BitFlip { world_rank: 4, at_version: 1, bits: 3 }],
+        ..Default::default()
+    };
+    let rep = assert_engines_agree("bitflip-scrub", &cfg, &plan);
+    assert!(rep.converged);
+    assert!(rep.faults.scrub_detected >= 1);
+    assert_eq!(rep.faults.scrub_detected, rep.faults.scrub_repaired);
+}
+
+/// The acceptance campaign: all three degraded fault kinds *plus* a real
+/// crash-stop kill in one run.  The straggler is shrunk away early, the
+/// lossy link retries without revoking, the corruption (injected after the
+/// straggler recovery's re-establishment commit) is scrubbed and repaired,
+/// and the late kill recovers in place — zero global restarts, and the
+/// whole composite schedule is digest- and trace-identical across engines.
+#[test]
+fn engines_agree_mixed_degraded_campaign() {
+    let cfg = quick_config(8, Strategy::Shrink, 0);
+    let plan = InjectionPlan {
+        kills: vec![Kill::at_iter(2, 70)],
+        stragglers: vec![Straggler { world_rank: 6, mult: 3.0 }],
+        links: vec![LinkFault { src: 1, dst: 2, drops: 3 }],
+        bitflips: vec![BitFlip { world_rank: 4, at_version: 3, bits: 3 }],
+    };
+    let rep = assert_engines_agree("mixed-degraded", &cfg, &plan);
+    assert!(rep.converged, "mixed degraded campaign must converge");
+    assert_eq!(rep.failures, 2, "the straggler victim and the scheduled kill");
+    assert_eq!(rep.global_restarts(), 0, "everything recovers in place");
+    assert!(
+        rep.decisions.iter().any(|d| d.decision == "degraded-shrink" && d.failed_ranks == vec![6]),
+        "the straggler must be priced out: {:?}",
+        rep.decisions
+    );
+    assert!(rep.faults.link_retries >= 3, "the drops must surface as retries");
+    assert!(rep.faults.scrub_detected >= 1, "the flip must be caught");
+    assert_eq!(
+        rep.faults.scrub_detected, rep.faults.scrub_repaired,
+        "every detection repaired in situ"
+    );
 }

@@ -28,7 +28,7 @@ fn v1_blob(rank: usize) -> Blob {
 /// die entering the v2 commit, then repair and assert the survivors can
 /// still reconstruct the victim's v1 object bit-identically.
 fn interrupted_commit_case(name: &str, cfg: CkptCfg, victim: usize) {
-    let plan = InjectionPlan { kills: vec![Kill::at_phase(victim, ProtoPhase::CkptCommit, 2)] };
+    let plan = InjectionPlan { kills: vec![Kill::at_phase(victim, ProtoPhase::CkptCommit, 2)], ..Default::default() };
     let cfg2 = cfg.clone();
     let results = run_ranks_plan(N, plan, move |mut ctx| {
         let cfg = cfg2.clone();

@@ -95,7 +95,7 @@ fn member_dying_mid_steady_state_commit_recovers() {
     // torn version must not advance anywhere, recovery restores the
     // previous committed floor, and the run converges.
     let cfg = quick_config(8, Strategy::Shrink, 0);
-    let plan = InjectionPlan { kills: vec![Kill::at_phase(5, ProtoPhase::CkptCommit, 3)] };
+    let plan = InjectionPlan { kills: vec![Kill::at_phase(5, ProtoPhase::CkptCommit, 3)], ..Default::default() };
     let rep = run_plan(&cfg, plan);
     assert!(rep.converged, "relres={}", rep.final_relres);
     assert_eq!(rep.failures, 1);
@@ -110,7 +110,7 @@ fn death_during_setup_establishment_shrinks_and_reruns_setup() {
     // setup: no committed state exists anywhere yet, so survivors shrink
     // through the fence and re-run setup from scratch.
     let cfg = quick_config(8, Strategy::Shrink, 0);
-    let plan = InjectionPlan { kills: vec![Kill::at_phase(2, ProtoPhase::CkptCommit, 1)] };
+    let plan = InjectionPlan { kills: vec![Kill::at_phase(2, ProtoPhase::CkptCommit, 1)], ..Default::default() };
     let rep = run_plan(&cfg, plan);
     assert!(rep.converged, "relres={}", rep.final_relres);
     assert_eq!(rep.failures, 1);
@@ -123,7 +123,7 @@ fn out_of_range_injection_target_is_rejected() {
     // A typo'd `--inject-phase` rank must error up front, not report a
     // failure-free "success" for a campaign that never ran.
     let cfg = quick_config(8, Strategy::Shrink, 0);
-    let plan = InjectionPlan { kills: vec![Kill::at_phase(99, ProtoPhase::Agree, 1)] };
+    let plan = InjectionPlan { kills: vec![Kill::at_phase(99, ProtoPhase::Agree, 1)], ..Default::default() };
     let backend = Arc::new(NativeBackend::new(cfg.compute.clone()));
     let err = coordinator::run_custom(&cfg, backend, plan).unwrap_err();
     assert!(err.to_string().contains("out of range"), "{err}");

@@ -5,12 +5,15 @@
 
 mod common;
 
-use common::Rng;
+use common::{quick_config, Rng};
 use ulfm_ftgmres::backend::native::NativeBackend;
 use ulfm_ftgmres::backend::{Backend, DenseBasis};
+use ulfm_ftgmres::ckptstore::{chunk_sums, delta, Scheme};
+use ulfm_ftgmres::coordinator;
+use ulfm_ftgmres::failure::{BitFlip, InjectionPlan};
 use ulfm_ftgmres::problem::{sources, EllBlock, Grid3D, MatrixRows, Partition};
-use ulfm_ftgmres::ckptstore::Scheme;
 use ulfm_ftgmres::recovery::plan::{my_transfers, transfer_segments_scheme};
+use ulfm_ftgmres::recovery::Strategy;
 use ulfm_ftgmres::simmpi::Blob;
 use ulfm_ftgmres::solver::givens::GivensLs;
 
@@ -219,6 +222,122 @@ fn prop_givens_matches_normal_equations() {
         // Roundtrip through the checkpoint flattening.
         let ls2 = GivensLs::from_flat(&ls.to_flat());
         assert_eq!(ls2.solve_y(), y);
+    }
+}
+
+/// The integrity layer's chunk digests (DESIGN.md §14) must catch *every*
+/// 1..4-bit flip in a committed blob, and must localize the damage: the
+/// mismatching chunk set is exactly the set of chunks whose words were
+/// touched, for chunk sizes from one word to past the blob length.
+#[test]
+fn prop_chunk_sums_detect_every_small_flip() {
+    let mut rng = Rng::new(9);
+    for case in 0..CASES {
+        let nf = 1 + rng.below(300);
+        let ni = rng.below(100);
+        let f: Vec<f64> = (0..nf).map(|_| rng.f64()).collect();
+        let i: Vec<i64> = (0..ni).map(|_| rng.next_u64() as i64).collect();
+        let blob = Blob::new(f, i);
+        let cw = [1usize, 7, 64, 512][case % 4];
+        let clean = chunk_sums(&blob, cw);
+        let (f_len, i_len) = (blob.f.len(), blob.i.len());
+        let mut words = delta::pack_words(&blob);
+        let nbits = words.len() * 64;
+        let k = 1 + rng.below(4);
+        let mut flipped = std::collections::BTreeSet::new();
+        while flipped.len() < k.min(nbits) {
+            flipped.insert(rng.below(nbits));
+        }
+        for &p in &flipped {
+            words[p / 64] ^= 1i64 << (p % 64);
+        }
+        let corrupt = delta::unpack_words(&words, f_len, i_len);
+        let dirty = chunk_sums(&corrupt, cw);
+        assert_eq!(clean.len(), dirty.len());
+        let mismatched: Vec<usize> =
+            (0..clean.len()).filter(|&c| clean[c] != dirty[c]).collect();
+        let expected: Vec<usize> = {
+            let set: std::collections::BTreeSet<usize> =
+                flipped.iter().map(|&p| (p / 64) / cw).collect();
+            set.into_iter().collect()
+        };
+        assert_eq!(
+            mismatched, expected,
+            "cw={cw} flips={flipped:?}: digests must flag exactly the touched chunks"
+        );
+    }
+}
+
+/// End-to-end scrub property: for every redundancy scheme × delta ×
+/// compression combination, a random small bit-flip in the committed
+/// solution block is detected at the next commit and repaired — and the
+/// repair is bit-identical, which the scrubber itself enforces by only
+/// installing blobs whose chunk digests match the recorded ones (a
+/// mismatching rebuild escalates instead of counting as repaired, so
+/// `detected == repaired` is the bit-identicality assertion).
+#[test]
+fn prop_scrub_repair_bit_identical_all_schemes() {
+    let mut rng = Rng::new(10);
+    for scheme in [Scheme::Mirror { k: 1 }, Scheme::Xor { g: 4 }, Scheme::Rs2 { g: 4 }] {
+        for combo in 0..4u32 {
+            let mut cfg = quick_config(8, Strategy::Shrink, 0);
+            cfg.solver.ckpt.scheme = scheme;
+            cfg.solver.ckpt.delta = combo & 1 != 0;
+            cfg.solver.ckpt.compress = combo & 2 != 0;
+            let plan = InjectionPlan {
+                bitflips: vec![BitFlip {
+                    world_rank: 1 + rng.below(7),
+                    at_version: 1,
+                    bits: 1 + rng.below(16) as u32,
+                }],
+                ..Default::default()
+            };
+            let backend = coordinator::make_backend(&cfg).unwrap();
+            let rep = coordinator::run_custom(&cfg, backend, plan.clone()).unwrap();
+            let tag = format!(
+                "{scheme:?} delta={} compress={}",
+                cfg.solver.ckpt.delta, cfg.solver.ckpt.compress
+            );
+            assert!(rep.converged, "{tag}: corrupted-then-repaired run must converge");
+            assert_eq!(rep.failures, 0, "{tag}: scrub repair must not kill anyone");
+            assert!(rep.faults.scrub_detected >= 1, "{tag}: flip {plan:?} went undetected");
+            assert_eq!(
+                rep.faults.scrub_detected, rep.faults.scrub_repaired,
+                "{tag}: every detection must be repaired bit-identically in situ"
+            );
+            assert_eq!(rep.global_restarts(), 0, "{tag}");
+        }
+    }
+}
+
+/// Wire-level corruption repair composes with RLE: XOR-ing a corrupted word
+/// stream against parity (clean ^ bad) restores the exact clean words, and
+/// the repaired stream round-trips through `rle_compress`/`rle_decompress`
+/// to the same tokens and words as the original — corruption leaves no
+/// residue in the compression layer.
+#[test]
+fn prop_rle_roundtrips_corrupted_then_repaired_wires() {
+    let mut rng = Rng::new(11);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(200);
+        // Sparse stream (mostly zero runs) so RLE actually compresses.
+        let words: Vec<i64> = (0..n)
+            .map(|_| if rng.below(4) == 0 { rng.next_u64() as i64 } else { 0 })
+            .collect();
+        let mut bad = words.clone();
+        let nbits = n * 64;
+        for _ in 0..1 + rng.below(8) {
+            let p = rng.below(nbits);
+            bad[p / 64] ^= 1i64 << (p % 64);
+        }
+        // Parity captures exactly the damage; repair is one XOR fold.
+        let mut parity = words.clone();
+        delta::xor_into(&mut parity, &bad);
+        let mut repaired = bad;
+        delta::xor_into(&mut repaired, &parity);
+        assert_eq!(repaired, words, "xor repair must be exact");
+        assert_eq!(delta::rle_decompress(&delta::rle_compress(&repaired)), words);
+        assert_eq!(delta::rle_compress(&repaired), delta::rle_compress(&words));
     }
 }
 

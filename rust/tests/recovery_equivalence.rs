@@ -137,6 +137,7 @@ fn simultaneous_failures_recovered_in_one_shrink() {
             ulfm_ftgmres::failure::Kill::at_iter(2, 25),
             ulfm_ftgmres::failure::Kill::at_iter(5, 25),
         ],
+        ..Default::default()
     };
     let backend = coordinator::make_backend(&cfg).unwrap();
     let rep = coordinator::run_custom(&cfg, backend, plan).unwrap();

@@ -13,7 +13,7 @@ use std::time::Instant;
 use common::{digest, quick_config, Rng};
 use ulfm_ftgmres::config::RunConfig;
 use ulfm_ftgmres::coordinator;
-use ulfm_ftgmres::failure::{InjectionPlan, Kill};
+use ulfm_ftgmres::failure::{BitFlip, InjectionPlan, Kill, LinkFault, Straggler};
 use ulfm_ftgmres::metrics::RunReport;
 use ulfm_ftgmres::problem::Grid3D;
 use ulfm_ftgmres::recovery::Strategy;
@@ -37,6 +37,7 @@ fn seeded_plan(p: usize, failures: usize, seed: u64) -> InjectionPlan {
             .enumerate()
             .map(|(i, &v)| Kill::at_iter(v, 25 + 15 * i as u64))
             .collect(),
+        ..Default::default()
     }
 }
 
@@ -81,6 +82,31 @@ fn different_seeds_change_the_decision_table() {
     assert_ne!(digest(&a), digest(&b));
 }
 
+/// The full degraded-mode universe — straggler shrink-away, lossy-link
+/// retries, a scrubbed bit-flip *and* a crash-stop kill in one campaign —
+/// is rerun-stable under the event engine: timeout loops, detector
+/// allgathers and scrub repair traffic introduce no scheduling freedom.
+#[test]
+fn same_seed_degraded_campaign_is_rerun_stable() {
+    let cfg = quick_config(8, Strategy::Shrink, 0);
+    let plan = || InjectionPlan {
+        kills: vec![Kill::at_iter(2, 70)],
+        stragglers: vec![Straggler { world_rank: 6, mult: 3.0 }],
+        links: vec![LinkFault { src: 1, dst: 2, drops: 3 }],
+        bitflips: vec![BitFlip { world_rank: 4, at_version: 3, bits: 4 }],
+    };
+    let first = run_events(&cfg, plan());
+    assert!(first.converged);
+    assert_eq!(first.failures, 2);
+    assert_eq!(first.global_restarts(), 0);
+    assert!(first.faults.link_retries >= 3 && first.faults.scrub_detected >= 1);
+    let first = digest(&first);
+    for rerun in 0..2 {
+        let again = digest(&run_events(&cfg, plan()));
+        assert_eq!(first, again, "degraded rerun {rerun} diverged");
+    }
+}
+
 /// The thread oracle is itself rerun-stable (a prerequisite for using it as
 /// the differential baseline in engine_differential.rs).
 #[test]
@@ -116,6 +142,7 @@ fn four_thousand_ranks_eight_failures_no_global_restart() {
             .enumerate()
             .map(|(i, &v)| Kill::at_iter(v, 15 + 10 * i as u64))
             .collect(),
+        ..Default::default()
     };
     let started = Instant::now();
     let rep = run_events(&cfg, plan);

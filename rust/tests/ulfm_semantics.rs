@@ -172,7 +172,7 @@ fn death_after_the_decision_broadcast_reruns_the_round() {
 #[test]
 fn mid_vote_death_does_not_hang_survivors() {
     let n = 5;
-    let plan = InjectionPlan { kills: vec![Kill::at_phase(4, ProtoPhase::Agree, 1)] };
+    let plan = InjectionPlan { kills: vec![Kill::at_phase(4, ProtoPhase::Agree, 1)], ..Default::default() };
     let results = run_ranks_plan(n, plan, move |mut ctx| async move {
         let comm = Comm::world(n, ctx.rank);
         if ctx.rank == 2 {
