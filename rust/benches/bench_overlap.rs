@@ -1,0 +1,206 @@
+//! Bench: commit/compute overlap of non-blocking checkpoints (DESIGN.md
+//! §15) — how much of the commit plane's receive wait `--ckpt-async on`
+//! actually hides behind solver compute.
+//!
+//! Method: run the same single-failure campaign sync and async at xor:4
+//! and rs2:4, traced, and sum the **checkpoint data-plane receive wait**
+//! per run: for every `Recv` trace event inside a `Checkpoint` phase span
+//! whose tag is in the checkpoint shipping window, the wait is
+//! `max(0, arrival - t_before)` — the virtual time the receiver spent
+//! parked for the wire.  In async mode the drain runs one checkpoint
+//! window after the matching publish, so the arrivals are long past and
+//! the wait collapses to ~zero; what remains is the establishment commit
+//! (deliberately synchronous, it creates the protection recovery relies
+//! on) plus any fresh sends inside the drain itself (rs2 Q-forwards).
+//!
+//!   overlap_efficiency = 1 - wait_async / wait_sync
+//!
+//! Gate (also enforced by CI on the emitted JSON): overlap_efficiency
+//! >= 0.5 for every scheme pair, with zero global restarts everywhere.
+//!
+//! Emits `BENCH_overlap.json` at the repository root.
+//!
+//! `cargo bench --bench bench_overlap` (`BENCH_SMOKE=1` for the CI quick
+//! pass on the small grid).
+
+mod bench_common;
+
+use std::fmt::Write as _;
+
+use ulfm_ftgmres::ckptstore::Scheme;
+use ulfm_ftgmres::config::RunConfig;
+use ulfm_ftgmres::coordinator;
+use ulfm_ftgmres::failure::{InjectionPlan, Kill};
+use ulfm_ftgmres::metrics::{Phase, RunReport};
+use ulfm_ftgmres::problem::Grid3D;
+use ulfm_ftgmres::recovery::Strategy;
+use ulfm_ftgmres::simmpi::tags;
+use ulfm_ftgmres::trace::TraceEvent;
+
+fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+fn base_cfg(scheme: Scheme, async_commit: bool) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.grid = if smoke() { Grid3D::cube(12) } else { Grid3D::cube(16) };
+    cfg.p = 8;
+    cfg.strategy = Strategy::Shrink;
+    cfg.solver.tol = 1e-10;
+    cfg.solver.m_inner = 10;
+    cfg.solver.m_outer = 20;
+    cfg.solver.max_cycles = 20;
+    cfg.solver.ckpt.scheme = scheme;
+    cfg.solver.ckpt.async_commit = async_commit;
+    cfg.trace = true;
+    cfg
+}
+
+/// Total checkpoint data-plane receive wait (s) across all ranks: the
+/// virtual time receivers spent waiting for checkpoint shipping traffic
+/// (mirror copies, parity contributions, Q-forwards) inside `Checkpoint`
+/// phase spans.  Re-establishment commits run inside `Recovery` spans and
+/// are deliberately out of scope — both modes pay them synchronously.
+fn ckpt_recv_wait(rep: &RunReport) -> f64 {
+    let mut total = 0.0;
+    for r in &rep.ranks {
+        let spans: Vec<(f64, f64)> = r
+            .trace
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::Span { phase: Phase::Checkpoint, t0, t1 } => Some((*t0, *t1)),
+                _ => None,
+            })
+            .collect();
+        for e in &r.trace {
+            if let TraceEvent::Recv { tag, t_before, arrival, .. } = e {
+                let is_ckpt_tag = (tags::CKPT_BASE..tags::HALO_BASE).contains(tag);
+                let in_span = spans.iter().any(|&(a, b)| *t_before >= a && *t_before <= b);
+                if is_ckpt_tag && in_span {
+                    total += (arrival - t_before).max(0.0);
+                }
+            }
+        }
+    }
+    total
+}
+
+struct Leg {
+    tts: f64,
+    ckpt_phase: f64,
+    recovery_phase: f64,
+    wait: f64,
+    commits: usize,
+    global_restarts: usize,
+}
+
+fn run_leg(name: &'static str, cfg: &RunConfig) -> Leg {
+    // One kill mid-window after two commits: both modes recover in situ;
+    // async additionally cancels its in-flight version and rolls back to
+    // an older floor (the staleness cost of deferring the seal).
+    let plan = InjectionPlan { kills: vec![Kill::at_iter(7, 25)], ..Default::default() };
+    let backend = coordinator::make_backend(cfg).expect("backend");
+    let rep: RunReport = bench_common::timed(name, || {
+        coordinator::run_custom(cfg, backend.clone(), plan.clone())
+    })
+    .expect("leg completes");
+    assert!(rep.converged, "{name}: relres={}", rep.final_relres);
+    assert_eq!(rep.failures, 1, "{name}");
+    assert_eq!(rep.global_restarts(), 0, "{name}: must recover in situ");
+    Leg {
+        tts: rep.time_to_solution,
+        ckpt_phase: rep.max_phases.checkpoint,
+        recovery_phase: rep.max_phases.recovery,
+        wait: ckpt_recv_wait(&rep),
+        commits: rep.ckpt.len(),
+        global_restarts: rep.global_restarts(),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let pairs = [
+        ("xor4", Scheme::Xor { g: 4 }),
+        ("rs2_4", Scheme::Rs2 { g: 4 }),
+    ];
+    let mut legs: Vec<(&'static str, Leg, Leg)> = Vec::new();
+    for (label, scheme) in pairs {
+        let sync = run_leg(
+            if label == "xor4" { "xor4_sync" } else { "rs2_4_sync" },
+            &base_cfg(scheme, false),
+        );
+        let async_ = run_leg(
+            if label == "xor4" { "xor4_async" } else { "rs2_4_async" },
+            &base_cfg(scheme, true),
+        );
+        legs.push((label, sync, async_));
+    }
+
+    println!(
+        "{:<12} {:>10} {:>10} {:>12} {:>12} {:>8}",
+        "pair", "wait_sync", "wait_async", "hidden[s]", "efficiency", "commits"
+    );
+    let mut min_eff = f64::INFINITY;
+    let mut rows = Vec::new();
+    for (label, sync, async_) in &legs {
+        assert!(
+            sync.wait > 0.0,
+            "{label}: the sync run must pay a measurable commit receive wait"
+        );
+        let hidden = (sync.wait - async_.wait).max(0.0);
+        let eff = 1.0 - async_.wait / sync.wait;
+        println!(
+            "{:<12} {:>10.3e} {:>10.3e} {:>12.3e} {:>12.3} {:>8}",
+            label, sync.wait, async_.wait, hidden, eff, async_.commits
+        );
+        assert!(
+            eff >= 0.5,
+            "{label}: async mode must hide at least half of the commit receive wait \
+             (got {eff:.3}: sync {:.3e}s vs async {:.3e}s)",
+            sync.wait,
+            async_.wait
+        );
+        min_eff = min_eff.min(eff);
+        rows.push((*label, sync, async_, hidden, eff));
+    }
+
+    // Emit BENCH_overlap.json at the repository root.
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"overlap\",\n");
+    let _ = writeln!(
+        json,
+        "  \"workload\": \"ftgmres p=8 {} m_inner=10, 1 failure\",",
+        if smoke() { "cube12" } else { "cube16" }
+    );
+    let _ = writeln!(json, "  \"min_overlap_efficiency\": {min_eff:.4},\n  \"pairs\": [");
+    for (i, (label, sync, async_, hidden, eff)) in rows.iter().enumerate() {
+        let _ = writeln!(
+            json,
+            "    {{\"scheme\": \"{label}\", \"overlap_efficiency\": {eff:.4}, \
+             \"hidden_wait_s\": {hidden:.6e}, \
+             \"wait_sync_s\": {:.6e}, \"wait_async_s\": {:.6e}, \
+             \"tts_sync_s\": {:.6}, \"tts_async_s\": {:.6}, \
+             \"ckpt_phase_sync_s\": {:.6e}, \"ckpt_phase_async_s\": {:.6e}, \
+             \"recovery_phase_sync_s\": {:.6e}, \"recovery_phase_async_s\": {:.6e}, \
+             \"commits_sync\": {}, \"commits_async\": {}, \
+             \"global_restarts\": {}}}{}",
+            sync.wait,
+            async_.wait,
+            sync.tts,
+            async_.tts,
+            sync.ckpt_phase,
+            async_.ckpt_phase,
+            sync.recovery_phase,
+            async_.recovery_phase,
+            sync.commits,
+            async_.commits,
+            sync.global_restarts + async_.global_restarts,
+            if i + 1 < rows.len() { "," } else { "" }
+        );
+    }
+    json.push_str("  ]\n}\n");
+    let path = std::path::Path::new("../BENCH_overlap.json");
+    std::fs::write(path, &json)?;
+    eprintln!("wrote {}", path.display());
+    println!("bench_overlap checks passed (min overlap_efficiency {min_eff:.3})");
+    Ok(())
+}

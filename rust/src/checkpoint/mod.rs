@@ -95,6 +95,10 @@ pub struct CkptStore {
     /// when the integrity layer (`ckpt_integrity`) is on and verified by
     /// the pre-commit scrubber (DESIGN.md §14).
     sums: HashMap<(ObjId, Version), Vec<u64>>,
+    /// The published-but-unsealed async commit, if one is in flight
+    /// (`--ckpt-async`, DESIGN.md §15).  At most one: the commit pipeline
+    /// is one deep, and the next commit entry (or solve end) drains it.
+    in_flight: Option<crate::ckptstore::InFlightCommit>,
 }
 
 impl CkptStore {
@@ -255,6 +259,26 @@ impl CkptStore {
         self.remote.clear();
         self.parity.clear();
         self.sums.clear();
+        self.in_flight = None;
+    }
+
+    /// Whether an async commit is published but not yet sealed (see
+    /// [`crate::ckptstore::drain_in_flight`]).  Public so tests can pin the
+    /// pipeline depth and the drain/cancel transitions.
+    pub fn has_in_flight(&self) -> bool {
+        self.in_flight.is_some()
+    }
+
+    pub(crate) fn set_in_flight(&mut self, fl: crate::ckptstore::InFlightCommit) {
+        debug_assert!(
+            self.in_flight.is_none(),
+            "commit pipeline is one deep: drain before publishing the next version"
+        );
+        self.in_flight = Some(fl);
+    }
+
+    pub(crate) fn take_in_flight(&mut self) -> Option<crate::ckptstore::InFlightCommit> {
+        self.in_flight.take()
     }
 
     pub(crate) fn commit(&mut self, version: Version) {

@@ -94,8 +94,8 @@ use crate::metrics::{CkptRecord, Phase};
 use crate::simmpi::{tags, Blob, Comm, Ctx, MpiResult, Tag, WorldRank};
 
 /// Checkpoint-store configuration (config keys `ckpt_scheme`, `ckpt_delta`,
-/// `ckpt_chunk_kib`, `ckpt_rebase_every`, `ckpt_compress`; CLI
-/// `--ckpt-scheme` / `--ckpt-delta` / `--ckpt-compress`).
+/// `ckpt_chunk_kib`, `ckpt_rebase_every`, `ckpt_compress`, `ckpt_async`; CLI
+/// `--ckpt-scheme` / `--ckpt-delta` / `--ckpt-compress` / `--ckpt-async`).
 #[derive(Debug, Clone)]
 pub struct CkptCfg {
     /// Redundancy scheme.
@@ -121,6 +121,14 @@ pub struct CkptCfg {
     /// scans — a deliberately simple memory-bandwidth-style knob so every
     /// rank charges identical, deterministic virtual time.
     pub encode_bytes_per_sec: f64,
+    /// Non-blocking commits (config key `ckpt_async`; CLI `--ckpt-async`).
+    /// When on, a steady-state commit returns after the cheap publish half
+    /// (encode + sends + local puts) and leaves the receive/fold/agree half
+    /// *in flight*; the solver overlaps the next outer cycle's compute
+    /// against it, and the commit seals at the next commit entry (or at
+    /// solve end) via [`drain_in_flight`].  Named `async_commit` because
+    /// `async` is a reserved word.  See DESIGN.md §15.
+    pub async_commit: bool,
 }
 
 impl Default for CkptCfg {
@@ -133,6 +141,7 @@ impl Default for CkptCfg {
             compress: false,
             integrity: false,
             encode_bytes_per_sec: 4e9,
+            async_commit: false,
         }
     }
 }
@@ -610,6 +619,78 @@ pub async fn commit(
     result
 }
 
+/// A published-but-unsealed commit (DESIGN.md §15): the cheap synchronous
+/// half ran — wires encoded against the pre-commit store, local versions
+/// stored, every redundancy payload sent — and the receive/fold/agree half
+/// is still owed.  Everything the drain needs is re-derivable from this
+/// record plus the communicator: the receive schedule is a pure function of
+/// `(scheme, version, obj_ids, comm)`, so no blob payloads are retained.
+///
+/// Safety is the committed-floor story: nothing here is reachable by a
+/// restore until [`seal_commit`] runs the fault-aware agreement and
+/// advances the floor, and every store write is idempotent-by-version, so
+/// cancelling an in-flight commit (recovery entry does) just strands
+/// above-floor versions that the next commit overwrites or GC drops.
+#[derive(Debug, Clone)]
+pub struct InFlightCommit {
+    pub(crate) version: Version,
+    pub(crate) use_delta: bool,
+    pub(crate) obj_ids: Vec<ObjId>,
+    pub(crate) logical_bytes: usize,
+    pub(crate) shipped: usize,
+    pub(crate) raw: usize,
+    pub(crate) encode_secs: f64,
+    pub(crate) cfg: CkptCfg,
+}
+
+/// Seal the in-flight async commit, if any: run its receive/fold half, the
+/// commit agreement and the bookkeeping tail.  A fast no-op (no clock, no
+/// trace, no messages) when nothing is in flight, so sync-mode call sites
+/// cost nothing.  Collective when a commit *is* in flight — every member of
+/// `comm` published the same version, so every member has the same drain
+/// owed and the agreement schedule stays in lockstep.
+pub async fn drain_in_flight(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    store: &mut CkptStore,
+) -> MpiResult<()> {
+    if !store.has_in_flight() {
+        return Ok(());
+    }
+    let prev = if ctx.phase == Phase::Recovery {
+        Phase::Recovery
+    } else {
+        ctx.set_phase(Phase::Checkpoint)
+    };
+    let result = drain_inner(ctx, comm, store).await;
+    ctx.set_phase(prev);
+    result
+}
+
+/// Drop the in-flight async commit without sealing it; returns whether one
+/// was actually cancelled.  Called by every survivor at fenced-recovery
+/// entry: survivors must never *drain* there — a drain's agreement crosses
+/// the dead rank and the attempt would just re-enter the fence — and a
+/// uniform cancel keeps them collectively consistent.  The stranded
+/// above-floor puts are harmless (idempotent-by-version, invisible to
+/// `*_at_most(floor)` readers) and the post-recovery establishment commit
+/// rewrites them wholesale.
+pub fn cancel_in_flight(store: &mut CkptStore) -> bool {
+    store.take_in_flight().is_some()
+}
+
+/// Take-then-drain: ownership of the in-flight record moves out of the
+/// store *before* the receive half runs, so an error mid-drain (a peer died
+/// under the agreement) leaves nothing behind — the failed drain degrades
+/// into a cancel and fenced recovery finds a clean store.
+async fn drain_inner(ctx: &mut Ctx, comm: &mut Comm, store: &mut CkptStore) -> MpiResult<()> {
+    let Some(mut fl) = store.take_in_flight() else {
+        return Ok(());
+    };
+    drain_commit(ctx, comm, store, &mut fl).await?;
+    seal_commit(ctx, comm, store, &mut fl, false).await
+}
+
 async fn commit_inner(
     ctx: &mut Ctx,
     comm: &mut Comm,
@@ -619,11 +700,16 @@ async fn commit_inner(
     cfg: &CkptCfg,
     fresh: bool,
 ) -> MpiResult<()> {
+    // One-deep commit pipeline: a previous commit still in flight seals
+    // before this one publishes, so delta bases and parity-stripe chains
+    // always step version by version.  Zero-op when nothing is in flight
+    // (the sync path never is), keeping sync digests byte-identical.
+    drain_inner(ctx, comm, store).await?;
     // Fault point: a member (or stripe holder) dying as the commit starts.
     // Atomicity-by-version holds regardless of where in the exchange the
-    // death lands: the version is committed only by the agreement below, so
-    // survivors of a torn commit keep the previous committed floor intact
-    // and the commit is re-runnable after recovery.
+    // death lands: the version is committed only by the agreement in
+    // `seal_commit`, so survivors of a torn commit keep the previous
+    // committed floor intact and the commit is re-runnable after recovery.
     ctx.phase_point(ProtoPhase::CkptCommit)?;
     // Integrity scrub: verify the committed blobs against their recorded
     // digests and repair corrupt ones from redundancy *before* this
@@ -633,38 +719,103 @@ async fn commit_inner(
     if cfg.integrity && !fresh {
         scrub(ctx, comm, store, cfg).await?;
     }
-    let n = comm.size();
-    let use_delta = cfg.use_delta(version, fresh);
-    let mut shipped = 0usize;
-    let mut raw = 0usize;
-    let mut encode_secs = 0.0f64;
-    let logical: usize = objs.iter().map(|(_, b)| b.bytes()).sum();
+    let mut fl = InFlightCommit {
+        version,
+        use_delta: cfg.use_delta(version, fresh),
+        obj_ids: objs.iter().map(|(id, _)| *id).collect(),
+        logical_bytes: objs.iter().map(|(_, b)| b.bytes()).sum(),
+        shipped: 0,
+        raw: 0,
+        encode_secs: 0.0,
+        cfg: cfg.clone(),
+    };
+    publish_commit(ctx, comm, store, objs, &mut fl)?;
+    if cfg.async_commit && !fresh {
+        // Fault point: the published-but-unsealed window (`--inject-phase
+        // <rank>:ckpt-ship`).  A death here strands the publish on every
+        // survivor; recovery entry cancels it and restores from the floor.
+        ctx.phase_point(ProtoPhase::CkptShip)?;
+        store.set_in_flight(fl);
+        return Ok(());
+    }
+    drain_commit(ctx, comm, store, &mut fl).await?;
+    seal_commit(ctx, comm, store, &mut fl, fresh).await
+}
 
-    let result = match cfg.scheme {
-        Scheme::Xor { g } if cfg.scheme.parity_active(n) => {
-            exchange_xor(
-                ctx, comm, store, objs, version, cfg, g, use_delta, &mut shipped, &mut raw,
-                &mut encode_secs,
-            )
-            .await
-        }
-        Scheme::Rs2 { g } if cfg.scheme.parity_active(n) => {
-            exchange_rs2(
-                ctx, comm, store, objs, version, cfg, g, use_delta, &mut shipped, &mut raw,
-                &mut encode_secs,
-            )
-            .await
-        }
+/// Publish half of the commit state machine: encode redundancy wires
+/// against the pre-commit store, store the new local versions, and send
+/// every payload.  Entirely synchronous — sends never block in simmpi
+/// (unbounded mailboxes) — which is what makes the async return cheap.
+fn publish_commit(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    store: &mut CkptStore,
+    objs: &[(ObjId, Blob)],
+    fl: &mut InFlightCommit,
+) -> MpiResult<()> {
+    let n = comm.size();
+    let version = fl.version;
+    let use_delta = fl.use_delta;
+    let cfg = fl.cfg.clone();
+    match cfg.scheme {
+        Scheme::Xor { g } if cfg.scheme.parity_active(n) => publish_xor(
+            ctx, comm, store, objs, version, &cfg, g, use_delta, &mut fl.shipped, &mut fl.raw,
+            &mut fl.encode_secs,
+        ),
+        Scheme::Rs2 { g } if cfg.scheme.parity_active(n) => publish_rs2(
+            ctx, comm, store, objs, version, &cfg, g, use_delta, &mut fl.shipped, &mut fl.raw,
+            &mut fl.encode_secs,
+        ),
         _ => {
             let k = cfg.scheme.mirror_k().min(n.saturating_sub(1));
-            exchange_mirror(
-                ctx, comm, store, objs, version, cfg, k, use_delta, &mut shipped, &mut raw,
-                &mut encode_secs,
+            publish_mirror(
+                ctx, comm, store, objs, version, &cfg, k, use_delta, &mut fl.shipped,
+                &mut fl.raw, &mut fl.encode_secs,
             )
-            .await
         }
-    };
-    result?;
+    }
+}
+
+/// Drain half of the commit state machine: the receive/fold side of the
+/// exchange.  In sync mode it runs back-to-back with the publish (the op
+/// sequence is exactly the pre-refactor blocking exchange); in async mode
+/// it runs at the *next* commit entry, by which point the receiver's clock
+/// has advanced through an outer cycle of compute and the modeled arrivals
+/// are already in the past — that no-op wait is the hidden commit time.
+async fn drain_commit(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    store: &mut CkptStore,
+    fl: &mut InFlightCommit,
+) -> MpiResult<()> {
+    let n = comm.size();
+    match fl.cfg.scheme {
+        Scheme::Xor { g } if fl.cfg.scheme.parity_active(n) => {
+            drain_xor(ctx, comm, store, fl, g).await
+        }
+        Scheme::Rs2 { g } if fl.cfg.scheme.parity_active(n) => {
+            drain_rs2(ctx, comm, store, fl, g).await
+        }
+        _ => {
+            let k = fl.cfg.scheme.mirror_k().min(n.saturating_sub(1));
+            drain_mirror(ctx, comm, store, fl, k).await
+        }
+    }
+}
+
+/// Seal: the commit agreement plus all post-agreement bookkeeping (floor
+/// advance, GC, integrity digests, fault injection, the `CkptRecord`).
+/// Runs with the exchange fully drained on this rank.
+async fn seal_commit(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    store: &mut CkptStore,
+    fl: &mut InFlightCommit,
+    fresh: bool,
+) -> MpiResult<()> {
+    let version = fl.version;
+    let cfg = fl.cfg.clone();
+    let n = comm.size();
     // Sub-phase boundary: redundancy exchange done, commit agreement next.
     let at = ctx.clock;
     ctx.trace_push(|| crate::trace::TraceEvent::Mark {
@@ -687,10 +838,22 @@ async fn commit_inner(
     }
     store.gc_committed();
     if cfg.integrity {
-        for (id, blob) in objs {
-            let sums = chunk_sums(blob, cfg.chunk_words());
-            charge_encode(ctx, cfg, blob.f.len() + blob.i.len(), &mut encode_secs);
-            store.record_sums(*id, version, sums);
+        // Digest the committed blobs out of the store (the publish half put
+        // them there; shared buffers make this the caller's payload too).
+        let pending: Vec<_> = fl
+            .obj_ids
+            .iter()
+            .map(|&id| {
+                let (v, blob) = store
+                    .get_local_at_most(id, version)
+                    .unwrap_or_else(|| panic!("committed blob for obj {id} missing"));
+                debug_assert_eq!(v, version, "sealing a version that was never published");
+                (id, chunk_sums(blob, cfg.chunk_words()), blob.f.len() + blob.i.len())
+            })
+            .collect();
+        for (id, sums, words) in pending {
+            charge_encode(ctx, &cfg, words, &mut fl.encode_secs);
+            store.record_sums(id, version, sums);
         }
     }
     // Fault injection: one silent corruption of the freshly committed
@@ -715,21 +878,21 @@ async fn commit_inner(
     ctx.ckpt_log.push(CkptRecord {
         version,
         at: ctx.clock,
-        logical_bytes: logical,
-        shipped_bytes: shipped,
-        raw_bytes: raw,
-        delta: use_delta,
+        logical_bytes: fl.logical_bytes,
+        shipped_bytes: fl.shipped,
+        raw_bytes: fl.raw,
+        delta: fl.use_delta,
         rotation,
-        encode_secs,
+        encode_secs: fl.encode_secs,
     });
     Ok(())
 }
 
-/// Mirror exchange: store locally, ship (full or delta, optionally
-/// compressed) copies to `k` ring buddies, materialize the copies received
-/// for this rank's wards.
+/// Mirror publish: store locally, ship (full or delta, optionally
+/// compressed) copies to `k` ring buddies.  The matching [`drain_mirror`]
+/// materializes the copies received for this rank's wards.
 #[allow(clippy::too_many_arguments)]
-async fn exchange_mirror(
+fn publish_mirror(
     ctx: &mut Ctx,
     comm: &mut Comm,
     store: &mut CkptStore,
@@ -799,8 +962,8 @@ async fn exchange_mirror(
     for (id, blob) in objs {
         store.put_local(*id, version, blob.clone());
     }
-    // Ship to all buddies first (unbounded channels: no deadlock), then
-    // receive the copies this rank holds for its wards.
+    // Ship to all buddies (unbounded channels: no deadlock); the drain half
+    // receives the copies this rank holds for its wards.
     for d in 1..=k {
         let buddy = buddy_of_stride(me, d, n, stride);
         for (i, (id, _)) in objs.iter().enumerate() {
@@ -809,10 +972,29 @@ async fn exchange_mirror(
             comm.send(ctx, buddy, ship_tag(*id, d), wires[i].clone())?;
         }
     }
+    Ok(())
+}
+
+/// Mirror drain: receive and materialize the buddy copies this rank holds
+/// for its wards.
+async fn drain_mirror(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    store: &mut CkptStore,
+    fl: &mut InFlightCommit,
+    k: usize,
+) -> MpiResult<()> {
+    let n = comm.size();
+    let me = comm.rank;
+    let stride = effective_stride(&ctx.world.net.params, n);
+    let version = fl.version;
+    let use_delta = fl.use_delta;
+    let cfg = fl.cfg.clone();
+    let ids = fl.obj_ids.clone();
     for d in 1..=k {
         let ward = ward_of_stride(me, d, n, stride);
         let owner_wr = comm.world_of(ward);
-        for (id, _) in objs {
+        for id in &ids {
             let recvd = comm.recv(ctx, ward, ship_tag(*id, d)).await?;
             if use_delta {
                 let factor = delta::wire_factor(&recvd);
@@ -827,11 +1009,11 @@ async fn exchange_mirror(
                     .clone();
                 let (bv2, out) = delta::apply_mirror_delta(&base, &wire);
                 debug_assert_eq!(bv2, bv);
-                charge_encode(ctx, cfg, out.f.len() + out.i.len(), encode_secs);
+                charge_encode(ctx, &cfg, out.f.len() + out.i.len(), &mut fl.encode_secs);
                 store.put_remote(owner_wr, *id, version, out.scaled(factor));
             } else if cfg.compress {
                 let out = delta::decompress_blob(&recvd);
-                charge_encode(ctx, cfg, out.f.len() + out.i.len(), encode_secs);
+                charge_encode(ctx, &cfg, out.f.len() + out.i.len(), &mut fl.encode_secs);
                 store.put_remote(owner_wr, *id, version, out);
             } else {
                 store.put_remote(owner_wr, *id, version, recvd);
@@ -867,11 +1049,11 @@ fn parity_contribution(
     }
 }
 
-/// Xor exchange: store locally, ship one (full or delta, optionally
-/// compressed) parity contribution per object to the group's holder;
-/// holders fold the stripes for the groups they protect.
+/// Xor publish: store locally, ship one (full or delta, optionally
+/// compressed) parity contribution per object to the group's holder.  The
+/// matching [`drain_xor`] folds the stripes on the holders.
 #[allow(clippy::too_many_arguments)]
-async fn exchange_xor(
+fn publish_xor(
     ctx: &mut Ctx,
     comm: &mut Comm,
     store: &mut CkptStore,
@@ -909,7 +1091,23 @@ async fn exchange_xor(
         *shipped += wire.bytes();
         comm.send(ctx, my_holder, parity_tag(*id), wire.clone())?;
     }
-    // Fold stripes for every group this rank holds parity for.
+    Ok(())
+}
+
+/// Xor drain: fold stripes for every group this rank holds parity for.
+async fn drain_xor(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    store: &mut CkptStore,
+    fl: &mut InFlightCommit,
+    g: usize,
+) -> MpiResult<()> {
+    let n = comm.size();
+    let me = comm.rank;
+    let version = fl.version;
+    let use_delta = fl.use_delta;
+    let cfg = fl.cfg.clone();
+    let ids = fl.obj_ids.clone();
     for grp in 0..scheme::n_groups(n, g) {
         if scheme::holder_cr(grp, g, n) != me {
             continue;
@@ -917,7 +1115,7 @@ async fn exchange_xor(
         let (start, len) = scheme::group_span(grp, g, n);
         let anchor = comm.world_of(start);
         let members: Vec<WorldRank> = (start..start + len).map(|cr| comm.world_of(cr)).collect();
-        for (id, _) in objs {
+        for id in &ids {
             let mut stripe = if use_delta {
                 let (sv, base) = store
                     .get_parity_at_most(anchor, *id, version - 1)
@@ -950,7 +1148,7 @@ async fn exchange_xor(
                     stripe.i_lens[slot] = i_len;
                 }
                 stripe.wire_factors[slot] = factor;
-                charge_encode(ctx, cfg, wire.i.len(), encode_secs);
+                charge_encode(ctx, &cfg, wire.i.len(), &mut fl.encode_secs);
             }
             store.put_parity(anchor, *id, version, stripe);
         }
@@ -958,14 +1156,14 @@ async fn exchange_xor(
     Ok(())
 }
 
-/// rs2 exchange (DESIGN.md §9): store locally, ship one contribution per
-/// object to the epoch's `P` holder; `P` holders fold the XOR stripe,
-/// build the combined GF-weighted `Q` update from the same payloads and
-/// forward it; `Q` holders apply the forward.  Members therefore ship each
-/// contribution once — double parity costs one extra group-level wire per
-/// object, not a second per-member contribution.
+/// rs2 publish (DESIGN.md §9): store locally, ship one contribution per
+/// object to the epoch's `P` holder.  In the matching [`drain_rs2`], `P`
+/// holders fold the XOR stripe, build the combined GF-weighted `Q` update
+/// from the same payloads and forward it; `Q` holders apply the forward.
+/// Members therefore ship each contribution once — double parity costs one
+/// extra group-level wire per object, not a second per-member contribution.
 #[allow(clippy::too_many_arguments)]
-async fn exchange_rs2(
+fn publish_rs2(
     ctx: &mut Ctx,
     comm: &mut Comm,
     store: &mut CkptStore,
@@ -1005,6 +1203,27 @@ async fn exchange_rs2(
         *shipped += wire.bytes();
         comm.send(ctx, my_p, parity_tag(*id), wire.clone())?;
     }
+    Ok(())
+}
+
+/// rs2 drain: the stripe work — P-holder folds, the Q forward, and the
+/// Q-holder apply.  The Q forward is the one redundancy *send* that lives
+/// in the drain half (it is derived from the received payloads), so its
+/// bytes accrue to the in-flight counters here.
+async fn drain_rs2(
+    ctx: &mut Ctx,
+    comm: &mut Comm,
+    store: &mut CkptStore,
+    fl: &mut InFlightCommit,
+    g: usize,
+) -> MpiResult<()> {
+    let n = comm.size();
+    let me = comm.rank;
+    let version = fl.version;
+    let use_delta = fl.use_delta;
+    let cfg = fl.cfg.clone();
+    let ids = fl.obj_ids.clone();
+    let rot = cfg.rot_index(version);
     // Stripe work, in group order.  P-fold work for a group depends only
     // on the upfront member sends, and Q holders wait only on P holders,
     // so processing groups in ascending order cannot deadlock.
@@ -1014,7 +1233,7 @@ async fn exchange_rs2(
         let anchor = comm.world_of(start);
         let members: Vec<WorldRank> = (start..start + len).map(|cr| comm.world_of(cr)).collect();
         if p_cr == me {
-            for (id, _) in objs {
+            for id in &ids {
                 let mut stripe = if use_delta {
                     let (sv, base) = store
                         .get_parity_at_most(anchor, *id, version - 1)
@@ -1071,7 +1290,7 @@ async fn exchange_rs2(
                         gf256::mul_xor_into(&mut q_words, &wire.i[3..], c);
                     }
                     stripe.wire_factors[slot] = factor;
-                    charge_encode(ctx, cfg, 2 * wire.i.len(), encode_secs);
+                    charge_encode(ctx, &cfg, 2 * wire.i.len(), &mut fl.encode_secs);
                 }
                 // Forward the combined Q update to the Q holder.
                 let q_wire = if use_delta {
@@ -1082,25 +1301,25 @@ async fn exchange_rs2(
                 ctx.arena.put(q_words);
                 let q_factor =
                     stripe.wire_factors.iter().copied().fold(1.0f64, f64::max);
-                *raw += ((8 * q_wire.i.len()) as f64 * q_factor) as usize;
+                fl.raw += ((8 * q_wire.i.len()) as f64 * q_factor) as usize;
                 let q_wire = if cfg.compress {
-                    charge_encode(ctx, cfg, q_wire.i.len(), encode_secs);
+                    charge_encode(ctx, &cfg, q_wire.i.len(), &mut fl.encode_secs);
                     delta::compress_wire_in(&mut ctx.arena, &q_wire)
                 } else {
                     q_wire
                 };
                 let q_wire = q_wire.scaled(q_factor);
-                *shipped += q_wire.bytes();
+                fl.shipped += q_wire.bytes();
                 comm.send(ctx, q_cr, qpar_tag(*id, grp), q_wire)?;
                 store.put_parity(anchor, *id, version, stripe);
             }
         }
         if q_cr == me {
-            for (id, _) in objs {
+            for id in &ids {
                 let recvd = comm.recv(ctx, p_cr, qpar_tag(*id, grp)).await?;
                 let wire =
                     if cfg.compress { delta::decompress_wire(&recvd) } else { recvd };
-                charge_encode(ctx, cfg, wire.i.len(), encode_secs);
+                charge_encode(ctx, &cfg, wire.i.len(), &mut fl.encode_secs);
                 let stripe = match delta::wire_fmt(&wire) {
                     delta::FMT_QFULL => {
                         let (v2, stripe) = parse_qfull_wire(&wire, &members);
@@ -1371,6 +1590,16 @@ pub async fn reconstruct_failed(
     if !cfg.scheme.parity_active(n_old) {
         return Ok(());
     }
+    if cfg.async_commit {
+        // Fault point: the pipelined-reconstruction window (`--inject-phase
+        // <rank>:recon-pipeline`).  Async mode gathers reconstruction
+        // inputs through the split-phase `recv_all` below, folding blocks
+        // in virtual-arrival order as they land instead of in a fixed
+        // member order — a death here lands between posting the receives
+        // and the folds.  Sync mode never emits this phase point (it would
+        // perturb the traced event stream).
+        ctx.phase_point(ProtoPhase::ReconPipeline)?;
+    }
     match cfg.scheme {
         Scheme::Mirror { .. } => Ok(()),
         Scheme::Xor { g } => {
@@ -1420,20 +1649,47 @@ async fn reconstruct_xor(
                     (sv, s.clone())
                 };
                 let mut acc = stripe.words.clone();
-                for cr in start..start + len {
-                    if cr == fr {
-                        continue;
+                if cfg.async_commit {
+                    // Pipelined gather: post every surviving member's
+                    // receive at once and fold blocks in virtual-arrival
+                    // order.  XOR is commutative and associative, so the
+                    // accumulated words are bit-identical to the fixed
+                    // member-order fold of the sync path.
+                    let posts: Vec<(usize, Tag)> = (start..start + len)
+                        .filter(|&cr| cr != fr)
+                        .map(|cr| {
+                            let src = comm
+                                .rank_of_world(old_members[cr])
+                                .expect("surviving group member must be in the repaired comm");
+                            (src, recon_tag(id, fr))
+                        })
+                        .collect();
+                    for (_, _, recvd) in comm.recv_all(ctx, &posts).await? {
+                        let blob =
+                            if cfg.compress { delta::decompress_blob(&recvd) } else { recvd };
+                        delta::xor_into(&mut acc, &delta::pack_words(&blob));
+                        ctx.advance(
+                            (8 * (blob.f.len() + blob.i.len())) as f64
+                                / cfg.encode_bytes_per_sec,
+                        );
                     }
-                    let src = comm
-                        .rank_of_world(old_members[cr])
-                        .expect("surviving group member must be in the repaired comm");
-                    let recvd = comm.recv(ctx, src, recon_tag(id, fr)).await?;
-                    let blob =
-                        if cfg.compress { delta::decompress_blob(&recvd) } else { recvd };
-                    delta::xor_into(&mut acc, &delta::pack_words(&blob));
-                    ctx.advance(
-                        (8 * (blob.f.len() + blob.i.len())) as f64 / cfg.encode_bytes_per_sec,
-                    );
+                } else {
+                    for cr in start..start + len {
+                        if cr == fr {
+                            continue;
+                        }
+                        let src = comm
+                            .rank_of_world(old_members[cr])
+                            .expect("surviving group member must be in the repaired comm");
+                        let recvd = comm.recv(ctx, src, recon_tag(id, fr)).await?;
+                        let blob =
+                            if cfg.compress { delta::decompress_blob(&recvd) } else { recvd };
+                        delta::xor_into(&mut acc, &delta::pack_words(&blob));
+                        ctx.advance(
+                            (8 * (blob.f.len() + blob.i.len())) as f64
+                                / cfg.encode_bytes_per_sec,
+                        );
+                    }
                 }
                 let slot = fr - start;
                 let mut out =
@@ -1560,24 +1816,69 @@ async fn reconstruct_rs2(
                 // Gather surviving members' blobs (slot, packed words).
                 let mut contributions: Vec<(usize, Vec<i64>)> =
                     Vec::with_capacity(survivors.len());
-                for &cr in &survivors {
-                    let words = if cr == me_old {
+                if cfg.async_commit {
+                    // Pipelined gather: the leader's own (locally
+                    // available) contribution folds first while the remote
+                    // blobs are still in flight, then the rest land in
+                    // virtual-arrival order.  The downstream XOR/GF(2^8)
+                    // folds carry the slot with each contribution and are
+                    // commutative, so the solve is order-invariant.
+                    if let Some(&cr) = survivors.iter().find(|&&cr| cr == me_old) {
                         let blob = store
                             .get_local_at_most(id, v)
                             .unwrap_or_else(|| panic!("local checkpoint for obj {id} missing"))
                             .1;
-                        delta::pack_words(blob)
-                    } else {
-                        let src = comm
-                            .rank_of_world(old_members[cr])
-                            .expect("surviving member must be in the repaired comm");
-                        let recvd = comm.recv(ctx, src, recon_member_tag(id, grp)).await?;
+                        let words = delta::pack_words(blob);
+                        ctx.advance((8 * words.len()) as f64 / cfg.encode_bytes_per_sec);
+                        contributions.push((cr - start, words));
+                    }
+                    let remote: Vec<usize> =
+                        survivors.iter().copied().filter(|&cr| cr != me_old).collect();
+                    let posts: Vec<(usize, Tag)> = remote
+                        .iter()
+                        .map(|&cr| {
+                            let src = comm
+                                .rank_of_world(old_members[cr])
+                                .expect("surviving member must be in the repaired comm");
+                            (src, recon_member_tag(id, grp))
+                        })
+                        .collect();
+                    for (src, _, recvd) in comm.recv_all(ctx, &posts).await? {
+                        let cr = *remote
+                            .iter()
+                            .find(|&&cr| comm.rank_of_world(old_members[cr]) == Some(src))
+                            .expect("recv_all returns only posted sources");
                         let blob =
                             if cfg.compress { delta::decompress_blob(&recvd) } else { recvd };
-                        delta::pack_words(&blob)
-                    };
-                    ctx.advance((8 * words.len()) as f64 / cfg.encode_bytes_per_sec);
-                    contributions.push((cr - start, words));
+                        let words = delta::pack_words(&blob);
+                        ctx.advance((8 * words.len()) as f64 / cfg.encode_bytes_per_sec);
+                        contributions.push((cr - start, words));
+                    }
+                } else {
+                    for &cr in &survivors {
+                        let words = if cr == me_old {
+                            let blob = store
+                                .get_local_at_most(id, v)
+                                .unwrap_or_else(|| {
+                                    panic!("local checkpoint for obj {id} missing")
+                                })
+                                .1;
+                            delta::pack_words(blob)
+                        } else {
+                            let src = comm
+                                .rank_of_world(old_members[cr])
+                                .expect("surviving member must be in the repaired comm");
+                            let recvd = comm.recv(ctx, src, recon_member_tag(id, grp)).await?;
+                            let blob = if cfg.compress {
+                                delta::decompress_blob(&recvd)
+                            } else {
+                                recvd
+                            };
+                            delta::pack_words(&blob)
+                        };
+                        ctx.advance((8 * words.len()) as f64 / cfg.encode_bytes_per_sec);
+                        contributions.push((cr - start, words));
+                    }
                 }
                 // Solve and materialize each failed member.
                 let (sv, meta) = p_stripe

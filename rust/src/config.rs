@@ -232,7 +232,8 @@ impl RunConfig {
             let phase = ProtoPhase::parse(parts[1]).ok_or_else(|| {
                 anyhow::anyhow!(
                     "unknown phase '{}' (expected ckpt-commit, detect, agree, \
-                     reconstruct, spare-join or redistribute)",
+                     reconstruct, spare-join, redistribute, ckpt-ship or \
+                     recon-pipeline)",
                     parts[1]
                 )
             })?;
@@ -377,6 +378,14 @@ impl RunConfig {
             "ckpt_rebase_every" => self.solver.ckpt.rebase_every = v.parse()?,
             "ckpt_compress" => self.solver.ckpt.compress = v.parse()?,
             "ckpt_integrity" => self.solver.ckpt.integrity = v.parse()?,
+            // `--ckpt-async on|off` style values map onto the bool too.
+            "ckpt_async" => {
+                self.solver.ckpt.async_commit = match v {
+                    "on" => true,
+                    "off" => false,
+                    _ => v.parse()?,
+                }
+            }
             "inner_tol" => self.solver.inner_tol = v.parse()?,
             "backend" => {
                 self.backend = BackendKind::parse(v)
@@ -482,11 +491,12 @@ impl RunConfig {
         m.insert(
             "ckpt",
             format!(
-                "{}{}{}{}",
+                "{}{}{}{}{}",
                 self.solver.ckpt.scheme.name(),
                 if self.solver.ckpt.delta { "+delta" } else { "" },
                 if self.solver.ckpt.compress { "+comp" } else { "" },
-                if self.solver.ckpt.integrity { "+sum" } else { "" }
+                if self.solver.ckpt.integrity { "+sum" } else { "" },
+                if self.solver.ckpt.async_commit { "+async" } else { "" }
             ),
         );
         m.insert("m_inner", self.solver.m_inner.to_string());
@@ -693,6 +703,35 @@ mod tests {
         assert!(c.set("ckpt_integrity", "true").unwrap());
         assert!(c.solver.ckpt.integrity);
         assert!(c.summary().get("ckpt").unwrap().ends_with("+sum"));
+    }
+
+    #[test]
+    fn ckpt_async_key_parses() {
+        let mut c = RunConfig::default();
+        assert!(!c.solver.ckpt.async_commit, "sync commits are the default");
+        assert!(c.set("ckpt_async", "on").unwrap());
+        assert!(c.solver.ckpt.async_commit);
+        assert!(c.summary().get("ckpt").unwrap().ends_with("+async"));
+        assert!(c.set("ckpt_async", "off").unwrap());
+        assert!(!c.solver.ckpt.async_commit);
+        assert!(!c.summary().get("ckpt").unwrap().contains("+async"));
+        assert!(c.set("ckpt_async", "true").unwrap());
+        assert!(c.solver.ckpt.async_commit);
+        // `+async` composes after the other layer markers.
+        assert!(c.set("ckpt_integrity", "true").unwrap());
+        assert!(c.summary().get("ckpt").unwrap().ends_with("+sum+async"));
+        assert!(c.set("ckpt_async", "maybe").is_err());
+    }
+
+    #[test]
+    fn inject_phase_accepts_async_window_phases() {
+        let mut c = RunConfig::default();
+        assert!(c.set("inject_phase", "3:ckpt-ship, 5:recon-pipeline:2").unwrap());
+        assert_eq!(
+            c.inject_phase,
+            vec![(3, ProtoPhase::CkptShip, 1), (5, ProtoPhase::ReconPipeline, 2)]
+        );
+        assert!(c.summary().get("inject_phase").unwrap().contains("3:ckpt-ship:1"));
     }
 
     #[test]

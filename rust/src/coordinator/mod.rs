@@ -200,7 +200,24 @@ async fn solve_loop(
     let solver = FtGmres::new(&cfg.solver, backend, cfg.compute.clone());
     loop {
         match solver.solve(ctx, comm, state, store).await {
-            Ok(outcome) => return Ok(outcome),
+            Ok(outcome) => {
+                // Async mode may leave the last commit's receive half
+                // in flight; finish it so the final report reflects a
+                // fully committed store.  The drain is collective across
+                // members, so every rank reaches it (solver convergence
+                // is itself collective).
+                match crate::ckptstore::drain_in_flight(ctx, comm, store).await {
+                    Ok(()) => {}
+                    Err(MpiError::Killed) => return Err(ctx.die()),
+                    Err(_) => {
+                        // A failure during the final drain cannot undo the
+                        // converged solve: cancel the torn version (the
+                        // committed floor is intact) and report success.
+                        crate::ckptstore::cancel_in_flight(store);
+                    }
+                }
+                return Ok(outcome);
+            }
             Err(MpiError::Killed) => {
                 // Ensure the death is marked + broadcast even when it was
                 // discovered in the receive path (idempotent).

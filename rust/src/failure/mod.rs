@@ -40,6 +40,14 @@ use crate::simmpi::WorldRank;
 ///   lease activates.
 /// * `Redistribute` — inside shrink recovery, after the restore-version
 ///   agreement and reconstruction, as row transfers begin.
+/// * `CkptShip` — **async commits only** (`ckpt_async=true`): right after
+///   the publish half of a non-blocking commit queued its redundancy sends,
+///   while the ship is still in flight (the solver is about to resume
+///   compute).  A kill here lands *inside* the in-flight commit window the
+///   drain/cancel machinery of DESIGN.md §15 exists for.
+/// * `ReconPipeline` — **async mode only**: entering the pipelined
+///   reconstruction drain, where a holder interleaves fold work with
+///   arriving contribution blocks instead of receiving them one by one.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum ProtoPhase {
     CkptCommit,
@@ -48,16 +56,20 @@ pub enum ProtoPhase {
     Reconstruct,
     SpareJoin,
     Redistribute,
+    CkptShip,
+    ReconPipeline,
 }
 
 impl ProtoPhase {
-    pub const ALL: [ProtoPhase; 6] = [
+    pub const ALL: [ProtoPhase; 8] = [
         ProtoPhase::CkptCommit,
         ProtoPhase::Detect,
         ProtoPhase::Agree,
         ProtoPhase::Reconstruct,
         ProtoPhase::SpareJoin,
         ProtoPhase::Redistribute,
+        ProtoPhase::CkptShip,
+        ProtoPhase::ReconPipeline,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -68,6 +80,8 @@ impl ProtoPhase {
             ProtoPhase::Reconstruct => "reconstruct",
             ProtoPhase::SpareJoin => "spare-join",
             ProtoPhase::Redistribute => "redistribute",
+            ProtoPhase::CkptShip => "ckpt-ship",
+            ProtoPhase::ReconPipeline => "recon-pipeline",
         }
     }
 
@@ -80,6 +94,8 @@ impl ProtoPhase {
             "reconstruct" => Some(ProtoPhase::Reconstruct),
             "spare-join" | "join" => Some(ProtoPhase::SpareJoin),
             "redistribute" => Some(ProtoPhase::Redistribute),
+            "ckpt-ship" | "ship" => Some(ProtoPhase::CkptShip),
+            "recon-pipeline" => Some(ProtoPhase::ReconPipeline),
             _ => None,
         }
     }

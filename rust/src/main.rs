@@ -23,7 +23,8 @@
 //! `--inject-phase VALUE` appends protocol-phase kills to the campaign
 //! (shorthand for `inject_phase=VALUE`): comma-separated
 //! `rank:phase[:occurrence]` entries with phases `ckpt-commit`, `detect`,
-//! `agree`, `reconstruct`, `spare-join`, `redistribute` — e.g.
+//! `agree`, `reconstruct`, `spare-join`, `redistribute`, plus the async-mode
+//! windows `ckpt-ship` and `recon-pipeline` — e.g.
 //! `--inject-phase 3:reconstruct` makes rank 3 die entering the first
 //! checkpoint reconstruction, i.e. *inside* the recovery of an earlier
 //! failure.  Recoverable nested patterns complete without a global restart
@@ -37,6 +38,14 @@
 //! with `ckpt_chunk_kib=N` / `ckpt_rebase_every=N`), and
 //! `--ckpt-compress` the word-level RLE wire compression
 //! (`ckpt_compress=true`).  See DESIGN.md §8–§9.
+//!
+//! `--ckpt-async on|off` selects the commit execution mode
+//! (`ckpt_async=on|off`): `off` (default) is the stop-the-world fenced
+//! commit; `on` makes steady-state commits non-blocking — the publish half
+//! queues the delta/parity/Q-forward ship and the solver resumes compute
+//! while the receive/fold/agree half stays in flight, drained at the next
+//! commit (or cancelled by fenced recovery on a mid-flight failure).  See
+//! DESIGN.md §15.
 //!
 //! `--inject-straggler VALUE` marks ranks performance-faulty
 //! (`faults.straggler=VALUE`): comma-separated `<rank>x<mult>` entries,
@@ -83,7 +92,8 @@ fn usage() -> ! {
         "usage: ftgmres <run|report|figure4|figure5|figure6|figures> \
          [--config FILE] [--policy POLICY] [--engine threads|events] \
          [--ckpt-scheme SCHEME] [--ckpt-delta] \
-         [--ckpt-compress] [--inject-phase RANK:PHASE[:N][,..]] \
+         [--ckpt-compress] [--ckpt-async on|off] \
+         [--inject-phase RANK:PHASE[:N][,..]] \
          [--inject-straggler RANKxMULT[,..]] [--inject-link SRC>DST:N[,..]] \
          [--inject-bitflip RANK:VER[:BITS][,..]] [--quick] \
          [--trace PATH] [--out DIR] [key=value ...]"
@@ -171,6 +181,14 @@ fn parse_args() -> anyhow::Result<Args> {
                 anyhow::ensure!(
                     cfg.set("faults.bitflip", &rest[i + 1])?,
                     "faults.bitflip key rejected"
+                );
+                rest.drain(i..=i + 1);
+            }
+            "--ckpt-async" => {
+                anyhow::ensure!(i + 1 < rest.len(), "--ckpt-async needs on|off");
+                anyhow::ensure!(
+                    cfg.set("ckpt_async", &rest[i + 1])?,
+                    "ckpt_async key rejected"
                 );
                 rest.drain(i..=i + 1);
             }

@@ -193,6 +193,14 @@ pub async fn handle_failure_fenced(
     const STALL_LIMIT: u32 = 16;
     let entered_at = ctx.clock;
     ctx.trace_push(|| crate::trace::TraceEvent::RecoveryBegin { t: entered_at });
+    // Survivors CANCEL (never drain) a torn async commit at recovery entry:
+    // draining would block on receives from peers that are dead or already
+    // cancelled themselves, and the fenced protocol below assumes nobody is
+    // sitting in commit-plane collectives.  Cancellation is safe because the
+    // committed floor only advances in seal_commit — stranded above-floor
+    // puts are invisible to `*_at_most(floor)` readers and idempotent by
+    // version if the commit is re-run later.
+    crate::ckptstore::cancel_in_flight(store);
     let mut fence = EpochFence::new(comm);
     let snap = state.snapshot();
     let mut stalls = 0u32;

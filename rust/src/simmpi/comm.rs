@@ -86,6 +86,34 @@ impl Comm {
         self.recv(ctx, peer, tag).await
     }
 
+    /// Batch receive over the split-phase layer ([`Ctx::wait_all`],
+    /// DESIGN.md §15): post one receive per `(comm src rank, tag)` entry and
+    /// deliver the matches in virtual-arrival order.  Returns
+    /// `(comm src rank, tag, blob)` triples in that delivery order — the
+    /// deterministic "fold blocks as they land" primitive the pipelined
+    /// commit drain and reconstruction gathers are built on.  Posts must be
+    /// pairwise distinct.
+    pub async fn recv_all(
+        &self,
+        ctx: &mut Ctx,
+        posts: &[(usize, Tag)],
+    ) -> MpiResult<Vec<(usize, Tag, Blob)>> {
+        let handles: Vec<crate::simmpi::RecvHandle> = posts
+            .iter()
+            .map(|&(src, tag)| ctx.irecv_match(self.members[src], self.epoch, tag))
+            .collect();
+        let msgs = ctx.wait_all(&handles).await?;
+        Ok(msgs
+            .into_iter()
+            .map(|m| {
+                let src = self
+                    .rank_of_world(m.src)
+                    .expect("wait_all delivers only posted members");
+                (src, m.tag, m.data())
+            })
+            .collect())
+    }
+
     // ------------------------------------------------------------------
     // Collectives
     // ------------------------------------------------------------------

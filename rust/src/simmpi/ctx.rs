@@ -22,6 +22,19 @@ pub const SYS_EPOCH: u64 = 0;
 /// First epoch usable by communicators.
 pub const FIRST_EPOCH: u64 = 1;
 
+/// A posted split-phase receive (DESIGN.md §15): the match criteria of a
+/// message this rank is owed but has not yet delivered.  Handles are plain
+/// values — nothing is reserved in the mailbox when one is created — so
+/// posting via [`Ctx::irecv_match`] is free and dropping a handle leaks
+/// nothing.  Complete one with [`Ctx::test`], [`Ctx::wait`] or (in a batch,
+/// with deterministic arrival-order delivery) [`Ctx::wait_all`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecvHandle {
+    pub src: WorldRank,
+    pub epoch: u64,
+    pub tag: Tag,
+}
+
 pub struct Ctx {
     pub world: Arc<World>,
     pub rank: WorldRank,
@@ -361,6 +374,149 @@ impl Ctx {
             //    counter from step 3's drain closes the lost-wakeup window.
             self.world.wait_push(self.rank, seen).await;
         }
+    }
+
+    // ------------------------------------------------------------------
+    // Split-phase primitives (DESIGN.md §15)
+    // ------------------------------------------------------------------
+    //
+    // The progress-hook contract shared by both engines: `progress` (and
+    // the blocking loops built on it) drains the rank's mailbox and then,
+    // if a caller must wait, blocks through `World::wait_push(rank, seen)`
+    // — where `seen` is the push-counter snapshot taken *by the drain*.
+    // Under the thread engine `wait_push` parks the OS thread on the
+    // mailbox condvar; under the event engine it pends the rank's task on
+    // the deterministic ready-queue; in both, a push with a counter above
+    // `seen` wakes the rank, so the drain→snapshot→wait sequence can never
+    // lose a wakeup.  Everything observable (delivery order, clock jumps)
+    // is derived from virtual arrival timestamps, never from which engine
+    // (or OS schedule) physically moved the bytes — this is what keeps
+    // split-phase completions digest-identical across engines.
+
+    /// Post a non-blocking receive for `(src, epoch, tag)`.
+    pub fn irecv_match(&self, src: WorldRank, epoch: u64, tag: Tag) -> RecvHandle {
+        RecvHandle { src, epoch, tag }
+    }
+
+    /// Non-blocking send.  Sends in simmpi complete locally — mailboxes are
+    /// unbounded and wire latency is modeled at the receiver — so `isend`
+    /// *is* [`Ctx::send_raw`]; it exists so split-phase call sites can
+    /// spell their intent and stay source-compatible if buffering ever
+    /// becomes bounded.
+    pub fn isend(&mut self, dst: WorldRank, epoch: u64, tag: Tag, payload: Payload) -> MpiResult<()> {
+        self.send_raw(dst, epoch, tag, payload)
+    }
+
+    /// Drive message progress without blocking: drain the mailbox,
+    /// absorbing control traffic and buffering data payloads.  Returns
+    /// whether anything new arrived.
+    pub fn progress(&mut self) -> bool {
+        self.drain_absorb().0
+    }
+
+    /// Non-blocking completion test for a posted receive: delivers and
+    /// returns the message if it is (or just) arrived, `Ok(None)` if it is
+    /// still in flight, and the usual failure surfacing otherwise.
+    ///
+    /// Note `test`-based completion *order* across multiple handles is an
+    /// OS-schedule artifact under the thread engine; deterministic code
+    /// that completes a batch must use [`Ctx::wait_all`], which orders by
+    /// virtual arrival.
+    pub fn test(&mut self, h: &RecvHandle) -> MpiResult<Option<Msg>> {
+        if !self.world.is_alive(self.rank) {
+            return Err(MpiError::Killed);
+        }
+        self.progress();
+        if let Some(pos) = self
+            .pending
+            .iter()
+            .position(|m| m.src == h.src && m.epoch == h.epoch && m.tag == h.tag)
+        {
+            let msg = self.pending.remove(pos).unwrap();
+            self.deliver(&msg);
+            return Ok(Some(msg));
+        }
+        if self.revoked.contains(&h.epoch) {
+            return Err(MpiError::Revoked);
+        }
+        if self.known_dead.contains(&h.src) || !self.world.is_alive(h.src) {
+            self.note_death(h.src);
+            return Err(MpiError::ProcFailed(vec![h.src]));
+        }
+        Ok(None)
+    }
+
+    /// Blocking completion of one posted receive — identical to
+    /// [`Ctx::recv_match`] on the handle's criteria.
+    pub async fn wait(&mut self, h: RecvHandle) -> MpiResult<Msg> {
+        self.recv_match(h.src, h.epoch, h.tag).await
+    }
+
+    /// Complete a batch of posted receives, delivering in **virtual-arrival
+    /// order** (ties broken by source rank, then tag).
+    ///
+    /// Blocks until *every* handle has a physically-buffered match, then
+    /// sorts the matches by modeled arrival and delivers them in that
+    /// order.  Arrival timestamps are pure functions of virtual time, so
+    /// the delivery sequence — and with it every clock jump and trace
+    /// event — is identical across engines, even though the messages may
+    /// have been pushed in any physical order.  Handles must be pairwise
+    /// distinct in `(src, epoch, tag)`.
+    ///
+    /// Errors like [`Ctx::recv_match`]: `ProcFailed` once a handle's source
+    /// is known dead with no buffered match, `Revoked` if any handle's
+    /// epoch is revoked while waiting, `Killed` if this rank was claimed by
+    /// a co-scheduled kill.
+    pub async fn wait_all(&mut self, handles: &[RecvHandle]) -> MpiResult<Vec<Msg>> {
+        debug_assert!(
+            (1..handles.len()).all(|i| !handles[..i].contains(&handles[i])),
+            "wait_all handles must be pairwise distinct"
+        );
+        let matched = |pending: &VecDeque<Msg>, h: &RecvHandle| {
+            pending.iter().any(|m| m.src == h.src && m.epoch == h.epoch && m.tag == h.tag)
+        };
+        loop {
+            if !self.world.is_alive(self.rank) {
+                return Err(MpiError::Killed);
+            }
+            if handles.iter().all(|h| matched(&self.pending, h)) {
+                break;
+            }
+            for h in handles {
+                if self.revoked.contains(&h.epoch) {
+                    return Err(MpiError::Revoked);
+                }
+            }
+            let (got_any, seen) = self.drain_absorb();
+            if got_any {
+                continue;
+            }
+            for h in handles {
+                if !matched(&self.pending, h)
+                    && (self.known_dead.contains(&h.src) || !self.world.is_alive(h.src))
+                {
+                    self.note_death(h.src);
+                    return Err(MpiError::ProcFailed(vec![h.src]));
+                }
+            }
+            self.world.wait_push(self.rank, seen).await;
+        }
+        let mut msgs: Vec<Msg> = Vec::with_capacity(handles.len());
+        for h in handles {
+            let pos = self
+                .pending
+                .iter()
+                .position(|m| m.src == h.src && m.epoch == h.epoch && m.tag == h.tag)
+                .expect("all-present loop exited with every handle matched");
+            msgs.push(self.pending.remove(pos).unwrap());
+        }
+        msgs.sort_by(|a, b| {
+            a.arrival.total_cmp(&b.arrival).then(a.src.cmp(&b.src)).then(a.tag.cmp(&b.tag))
+        });
+        for m in &msgs {
+            self.deliver(m);
+        }
+        Ok(msgs)
     }
 
     /// Drain every queued mailbox message through [`Ctx::absorb`], returning

@@ -15,7 +15,7 @@ pub mod ulfm;
 pub mod world;
 
 pub use comm::Comm;
-pub use ctx::Ctx;
+pub use ctx::{Ctx, RecvHandle};
 pub use engine::{block_on, run_event_loop, RankTask};
 pub use msg::{shared, tags, Blob, Ctl, Msg, Payload, SharedVec, Tag, WordArena};
 pub use world::{Engine, World, WorldRank};

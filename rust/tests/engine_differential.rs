@@ -149,6 +149,60 @@ fn engines_agree_simultaneous_failures() {
     assert_eq!(rep.failures, 2);
 }
 
+/// Non-blocking commits (`--ckpt-async on`, DESIGN.md §15), failure-free:
+/// the publish/drain split moves every redundancy receive one checkpoint
+/// window later, so the whole commit-plane schedule shifts — and must
+/// shift identically under both engines, down to the trace bytes.
+#[test]
+fn engines_agree_async_commit_failure_free() {
+    let mut cfg = quick_config(4, Strategy::Shrink, 0);
+    cfg.solver.ckpt.async_commit = true;
+    let rep = assert_engines_agree("async-ckpt-only", &cfg, &InjectionPlan::none());
+    assert!(rep.converged && !rep.ckpt.is_empty());
+    assert_eq!(rep.global_restarts(), 0);
+}
+
+/// Async commits under the paper campaign, per scheme: kills land inside
+/// the in-flight window (the window now spans the whole inter-commit
+/// interval), so every leg exercises the survivors' cancel-at-recovery
+/// path plus the pipelined reconstruction gathers.
+#[test]
+fn engines_agree_async_commit_all_schemes_under_failures() {
+    for scheme in [Scheme::Mirror { k: 1 }, Scheme::Xor { g: 4 }, Scheme::Rs2 { g: 4 }] {
+        let mut cfg = quick_config(8, Strategy::Shrink, 2);
+        cfg.solver.ckpt.scheme = scheme;
+        cfg.solver.ckpt.async_commit = true;
+        let rep = assert_engines_agree("async", &cfg, &cfg.injection_plan());
+        assert!(rep.converged, "{scheme:?}");
+        assert_eq!(rep.failures, 2, "{scheme:?}");
+        assert_eq!(rep.global_restarts(), 0, "{scheme:?}: async mode must stay in situ");
+    }
+}
+
+/// Kills at the two async-only protocol phases: a member dying inside its
+/// ship window (`ckpt-ship`), and a nested kill entering the pipelined
+/// reconstruction drain (`recon-pipeline`).  Both must serialize
+/// identically under both engines.
+#[test]
+fn engines_agree_async_phase_kills() {
+    let mut cfg = quick_config(8, Strategy::Shrink, 0);
+    cfg.solver.ckpt.scheme = Scheme::Xor { g: 4 };
+    cfg.solver.ckpt.async_commit = true;
+    let ship = InjectionPlan {
+        kills: vec![Kill::at_phase(5, ProtoPhase::CkptShip, 2)],
+        ..Default::default()
+    };
+    let rep = assert_engines_agree("async-ship-kill", &cfg, &ship);
+    assert!(rep.converged);
+    assert_eq!(rep.failures, 1);
+    assert_eq!(rep.global_restarts(), 0);
+    let recon = InjectionPlan::nested(7, 25, 3, ProtoPhase::ReconPipeline, 1);
+    let rep = assert_engines_agree("async-recon-pipeline-kill", &cfg, &recon);
+    assert!(rep.converged);
+    assert_eq!(rep.failures, 2);
+    assert_eq!(rep.global_restarts(), 0);
+}
+
 /// Degraded-mode leg 1 — straggler shrink-away (DESIGN.md §14): the
 /// detector's allgather, the cost-model decision and the victim's
 /// conversion to a crash-stop loss must serialize identically under both

@@ -144,6 +144,207 @@ fn interrupted_commit_rs2_member() {
     interrupted_commit_case("rs2-member", cfg, 1);
 }
 
+/// Async variant of [`interrupted_commit_case`]: with `ckpt_async` on, the
+/// v2 commit *publishes* and returns immediately — the victim dies at the
+/// `CkptShip` phase point, inside the in-flight window between publish and
+/// drain (the window that only exists in async mode).  Survivors must
+/// CANCEL (never drain) the torn in-flight commit at recovery entry and
+/// still reconstruct the committed floor bit-identically.
+fn interrupted_async_ship_case(name: &str, cfg: CkptCfg, victim: usize) {
+    let cfg = CkptCfg { async_commit: true, ..cfg };
+    // CkptShip entry 1 is the v2 commit: the establishment commit (fresh)
+    // takes the synchronous seal path even in async mode and never emits
+    // the ship phase point.
+    let plan = InjectionPlan {
+        kills: vec![Kill::at_phase(victim, ProtoPhase::CkptShip, 1)],
+        ..Default::default()
+    };
+    let cfg2 = cfg.clone();
+    let results = run_ranks_plan(N, plan, move |mut ctx| {
+        let cfg = cfg2.clone();
+        async move {
+            let mut comm = Comm::world(N, ctx.rank);
+            let mut store = CkptStore::new();
+            ckptstore::commit(
+                &mut ctx,
+                &mut comm,
+                &mut store,
+                &[(obj::X, v1_blob(ctx.rank))],
+                1,
+                &cfg,
+                true,
+            )
+            .await
+            .unwrap();
+            assert!(!store.has_in_flight(), "fresh commits seal synchronously");
+            assert_eq!(store.committed(), 1);
+            let v2 = Blob {
+                f: v1_blob(ctx.rank).f.iter().map(|x| x + 1000.0).collect(),
+                i: v1_blob(ctx.rank).i,
+                wire: None,
+            };
+            let r2 = ckptstore::commit(
+                &mut ctx,
+                &mut comm,
+                &mut store,
+                &[(obj::X, v2)],
+                2,
+                &cfg,
+                false,
+            )
+            .await;
+            if ctx.rank == victim {
+                assert!(matches!(r2, Err(MpiError::Killed)), "victim dies in the ship window");
+                return None;
+            }
+            match r2 {
+                // Common case: the publish half saw no failure, the commit
+                // went non-blocking and this rank "resumed compute" with
+                // the ship in flight.
+                Ok(()) => assert!(
+                    store.has_in_flight(),
+                    "non-blocking commit must return with the ship in flight"
+                ),
+                // A publish send aimed at the victim may observe the death
+                // first (threads engine: the registry is real time); either
+                // way the floor must not have moved.
+                Err(e) => assert!(!matches!(e, MpiError::Killed), "survivor must not die: {e}"),
+            }
+            assert_eq!(store.committed(), 1, "the floor advances only when the drain seals");
+            // The in-flight residue must be invisible to floor readers.
+            let (lv, local) = store.get_local_at_most(obj::X, 1).expect("own v1 retained");
+            assert_eq!((lv, local.f.clone()), (1, v1_blob(ctx.rank).f));
+            wait_dead(&ctx.world, victim);
+            // Recovery entry: survivors cancel, exactly like
+            // `handle_failure_fenced` does before building its fence.
+            ckptstore::cancel_in_flight(&mut store);
+            assert!(!store.has_in_flight(), "cancel clears the in-flight slot");
+            ulfm::revoke(&mut ctx, &comm);
+            let mut fence = EpochFence::new(&comm);
+            let mut shrunk = ulfm::shrink_fenced(&mut ctx, &comm, &mut fence).await.unwrap();
+            let v = agree_restore_version(&mut ctx, &mut shrunk, &store).await.unwrap();
+            assert_eq!(v, 1, "survivors restore the pre-interruption floor");
+            let old_members: Vec<usize> = (0..N).collect();
+            ckptstore::reconstruct_failed(
+                &mut ctx,
+                &shrunk,
+                &mut store,
+                &cfg,
+                &old_members,
+                v,
+                &[obj::X],
+            )
+            .await
+            .unwrap();
+            let world = ctx.world.clone();
+            let alive_cr = move |cr: usize| world.is_alive(cr);
+            let server = cfg
+                .scheme
+                .server_cr_for(victim, N, &alive_cr, 1)
+                .expect("single loss must be recoverable");
+            if ctx.rank == server {
+                let (gv, got) =
+                    store.get_remote_at_most(victim, obj::X, v).expect("victim's v1 served");
+                let want = v1_blob(victim);
+                assert_eq!(gv, 1);
+                assert_eq!(got.f, want.f, "reconstructed f lane bit-identical");
+                assert_eq!(got.i, want.i, "reconstructed i lane bit-identical");
+            }
+            Some(ctx.rank)
+        }
+    });
+    assert!(results[victim].is_none(), "{name}: victim excluded");
+    for (r, res) in results.iter().enumerate() {
+        if r != victim {
+            assert_eq!(*res, Some(r), "{name}: survivor {r} completed");
+        }
+    }
+}
+
+#[test]
+fn async_ship_kill_xor_member() {
+    let cfg = CkptCfg { scheme: Scheme::Xor { g: 4 }, ..CkptCfg::default() };
+    interrupted_async_ship_case("async-xor-member", cfg, 1);
+}
+
+#[test]
+fn async_ship_kill_xor_holder() {
+    // Victim 4 holds group 0's stripe: its death strands the in-flight
+    // contributions group 0 shipped to it; the cancel must leave them as
+    // invisible above-floor residue.
+    let cfg = CkptCfg { scheme: Scheme::Xor { g: 4 }, ..CkptCfg::default() };
+    interrupted_async_ship_case("async-xor-holder", cfg, 4);
+}
+
+#[test]
+fn async_ship_kill_rs2_rotation_boundary_holder() {
+    // Same rotation-boundary shape as the sync test, but the incoming P
+    // holder dies inside the ship window: v2's re-encode to the rot-2 pair
+    // never drains, and the v=1 solve must run off the rot-1 stripes.
+    let cfg =
+        CkptCfg { scheme: Scheme::Rs2 { g: 4 }, rebase_every: 1, ..CkptCfg::default() };
+    let (p2, _) = scheme::rs2_holders(0, 4, N, cfg.rot_index(2));
+    assert_eq!(p2, 6, "rotation schedule moved under the test's feet");
+    interrupted_async_ship_case("async-rs2-rotation", cfg, p2);
+}
+
+/// Failure-free async pipeline: commit N+1 drains commit N before
+/// publishing (the pipeline is one deep), and an explicit final drain
+/// seals the last in-flight version — the coordinator does exactly this at
+/// solver convergence.
+#[test]
+fn async_commit_drains_at_next_commit() {
+    let cfg = CkptCfg {
+        scheme: Scheme::Xor { g: 4 },
+        async_commit: true,
+        ..CkptCfg::default()
+    };
+    let cfg2 = cfg.clone();
+    let results = run_ranks_plan(N, InjectionPlan::none(), move |mut ctx| {
+        let cfg = cfg2.clone();
+        async move {
+            let mut comm = Comm::world(N, ctx.rank);
+            let mut store = CkptStore::new();
+            let blob = |v: i64| Blob {
+                f: v1_blob(ctx.rank).f.iter().map(|x| x + 1000.0 * v as f64).collect(),
+                i: v1_blob(ctx.rank).i,
+                wire: None,
+            };
+            ckptstore::commit(&mut ctx, &mut comm, &mut store, &[(obj::X, blob(0))], 1, &cfg, true)
+                .await
+                .unwrap();
+            assert_eq!(store.committed(), 1, "fresh establishment seals in line");
+            assert!(!store.has_in_flight());
+            // v2 publishes and returns: still floor 1, ship in flight.
+            ckptstore::commit(&mut ctx, &mut comm, &mut store, &[(obj::X, blob(1))], 2, &cfg, false)
+                .await
+                .unwrap();
+            assert!(store.has_in_flight());
+            assert_eq!(store.committed(), 1);
+            // v3 drains v2 first (sealing it), then publishes itself.
+            ckptstore::commit(&mut ctx, &mut comm, &mut store, &[(obj::X, blob(2))], 3, &cfg, false)
+                .await
+                .unwrap();
+            assert!(store.has_in_flight());
+            assert_eq!(store.committed(), 2, "entering commit v3 sealed v2");
+            // Final drain (what the coordinator runs at convergence).
+            ckptstore::drain_in_flight(&mut ctx, &mut comm, &mut store).await.unwrap();
+            assert!(!store.has_in_flight());
+            assert_eq!(store.committed(), 3);
+            // Draining with nothing in flight is a no-op.
+            ckptstore::drain_in_flight(&mut ctx, &mut comm, &mut store).await.unwrap();
+            assert_eq!(store.committed(), 3);
+            let (lv, local) = store.get_local_at_most(obj::X, 3).expect("v3 local");
+            assert_eq!(lv, 3);
+            assert_eq!(local.f, blob(2).f, "sealed payload bit-identical");
+            Some(ctx.rank)
+        }
+    });
+    for (r, res) in results.iter().enumerate() {
+        assert_eq!(*res, Some(r), "rank {r} completed");
+    }
+}
+
 #[test]
 fn interrupted_commit_rs2_rotation_boundary_holder() {
     // rebase_every = 1 puts every version in its own rotation epoch: v1's

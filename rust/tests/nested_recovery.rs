@@ -119,6 +119,45 @@ fn death_during_setup_establishment_shrinks_and_reruns_setup() {
 }
 
 #[test]
+fn async_ship_window_kill_recovers_without_restart() {
+    // `--ckpt-async on` (DESIGN.md §15): the commit publishes and returns
+    // non-blocking; rank 5 (a plain xor member) dies at its second ship
+    // window (`ckpt-ship` occurrence 2 = second dynamic commit), i.e.
+    // *between* publish and drain, while the torn version is in flight
+    // everywhere.  Survivors must cancel the in-flight commit at recovery
+    // entry, restore the committed floor, and finish in situ.
+    let mut cfg = quick_config(8, Strategy::Shrink, 0);
+    cfg.solver.ckpt.scheme = Scheme::Xor { g: 4 };
+    cfg.solver.ckpt.async_commit = true;
+    let plan = InjectionPlan {
+        kills: vec![Kill::at_phase(5, ProtoPhase::CkptShip, 2)],
+        ..Default::default()
+    };
+    let rep = run_plan(&cfg, plan);
+    assert!(rep.converged, "relres={}", rep.final_relres);
+    assert_eq!(rep.failures, 1);
+    assert_eq!(rep.global_restarts(), 0, "cancel + floor restore, no escalation");
+    assert_eq!(rep.decisions.len(), 1);
+    assert_eq!(rep.decisions[0].failed_ranks, vec![5]);
+}
+
+#[test]
+fn nested_kill_inside_pipelined_reconstruction_recovers() {
+    // Async reconstruction folds contribution blocks in arrival order; rank
+    // 3 dies entering that pipelined drain (`recon-pipeline`) of rank 7's
+    // recovery.  Same contract as the sync `Reconstruct` leg: the fence
+    // retries on the union failure set with zero executed restarts.
+    let mut cfg = quick_config(8, Strategy::Shrink, 0);
+    cfg.solver.ckpt.scheme = Scheme::Xor { g: 4 };
+    cfg.solver.ckpt.async_commit = true;
+    let rep = run_plan(&cfg, InjectionPlan::nested(7, 25, 3, ProtoPhase::ReconPipeline, 1));
+    assert!(rep.converged, "relres={}", rep.final_relres);
+    assert_eq!(rep.failures, 2);
+    assert_eq!(rep.global_restarts(), 0);
+    assert!(rep.recovery_retries >= 1, "the poisoned attempt must be fenced and retried");
+}
+
+#[test]
 fn out_of_range_injection_target_is_rejected() {
     // A typo'd `--inject-phase` rank must error up front, not report a
     // failure-free "success" for a campaign that never ran.

@@ -1,17 +1,8 @@
 #!/usr/bin/env bash
 # Degraded-mode fault bench: stragglers, lossy links and the checkpoint
-# corruption scrubber (DESIGN.md §14).  Emits BENCH_faults.json at the
-# repository root with the three headline numbers — scrub repair rate
-# (must be 1.0 across mirror/xor/rs2 for a single flip), straggler-shrink
-# latency (detector decision -> executed shrink), and lossy-link retry
-# overhead vs the identical clean run — and fails if a flip goes
-# undetected, a repair escalates, or the 1.2x/3x straggler pricing
-# inverts.
+# corruption scrubber (DESIGN.md §14).  Emits BENCH_faults.json; gates
+# documented in the bench itself.  Shim onto tools/bench.sh.
 #
 # Usage: tools/bench_faults.sh              # full grid (cube16)
 #        BENCH_SMOKE=1 tools/bench_faults.sh   # CI quick pass (cube12)
-set -euo pipefail
-cd "$(dirname "$0")/.."
-cargo bench --bench bench_faults "$@"
-echo "BENCH_faults.json:"
-cat BENCH_faults.json
+exec "$(dirname "$0")/bench.sh" faults "$@"

@@ -1,16 +1,9 @@
 #!/usr/bin/env bash
 # Hot-path bench: widened GF(2^8) kernels, shared-buffer message layer,
 # arena-backed delta codecs and the end-to-end commit pipeline (DESIGN.md
-# §11).  Emits BENCH_hotpath.json at the repository root and fails unless
-# the widened GF kernel beats the bytewise reference >= 4x and the
-# zero-copy wire cuts deep-copied bytes per commit >= 2x on the
-# xor:4+delta and rs2:4+delta legs (vs the forced-deep-clone baseline,
-# i.e. the pre-refactor wire), with bit-identical run digests.
+# §11).  Emits BENCH_hotpath.json; gates documented in the bench itself.
+# Shim onto tools/bench.sh.
 #
 # Usage: tools/bench_hotpath.sh [extra cargo bench args]
 #        BENCH_SMOKE=1 tools/bench_hotpath.sh   # CI quick pass
-set -euo pipefail
-cd "$(dirname "$0")/.."
-cargo bench --bench hotpath "$@"
-echo "BENCH_hotpath.json:"
-cat BENCH_hotpath.json
+exec "$(dirname "$0")/bench.sh" hotpath "$@"

@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Commit/compute overlap bench for non-blocking checkpoints (DESIGN.md
+# §15): sync vs async at xor:4 and rs2:4, emits BENCH_overlap.json and
+# fails unless async mode hides >= 50% of the commit-plane receive wait
+# with zero global restarts.  Shim onto tools/bench.sh.
+exec "$(dirname "$0")/bench.sh" overlap "$@"

@@ -2,12 +2,9 @@
 # Engine scaling bench: ranks-per-second and peak RSS for the thread-backed
 # oracle vs the deterministic event engine (DESIGN.md §12) — both engines
 # head-to-head at 256 ranks (with a digest cross-check), event engine only
-# at 4096 and 16384 ranks.  Emits BENCH_scale.json at the repository root.
+# at 4096 and 16384 ranks.  Emits BENCH_scale.json.  Shim onto
+# tools/bench.sh.
 #
 # Usage: tools/bench_scale.sh [extra cargo bench args]
 #        BENCH_SMOKE=1 tools/bench_scale.sh   # CI quick pass
-set -euo pipefail
-cd "$(dirname "$0")/.."
-cargo bench --bench bench_scale "$@"
-echo "BENCH_scale.json:"
-cat BENCH_scale.json
+exec "$(dirname "$0")/bench.sh" scale "$@"

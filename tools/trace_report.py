@@ -4,11 +4,18 @@
 Usage:  python tools/trace_report.py out/trace.json
 
 Validates the file against the `ulfm-ftgmres-1` schema (phase span names,
-event categories, flow-edge pairing) and prints the per-phase table: span
-counts, virtual-time totals across ranks, the share of total traced time,
-and — when the run recorded recovery events — each phase's share of the
-recovery critical path.  Exits non-zero on malformed input, so CI uses it
-as the trace validator.
+event categories, protocol-phase instant names, flow-edge pairing) and
+prints the per-phase table: span counts, virtual-time totals across ranks,
+the share of total traced time, and — when the run recorded recovery
+events — each phase's share of the recovery critical path.  Exits non-zero
+on malformed input, so CI uses it as the trace validator.
+
+For runs recorded with `--ckpt-async on` (detected from the `+async`
+marker in otherData's ckpt summary) it additionally reports how much of
+the commit plane overlapped solver compute, and exits non-zero if every
+steady-state checkpoint span fully serialized against compute on all
+other ranks — the regression the non-blocking commit pipeline
+(DESIGN.md §15) exists to prevent.
 """
 
 import json
@@ -16,6 +23,22 @@ import sys
 
 PHASES = ("compute", "comm", "checkpoint", "recovery", "reconfig", "recompute", "idle")
 INSTANT_CATS = ("proto", "mark", "recovery")
+# ProtoPhase names, including the async-only windows (ckpt-ship fires on
+# the publish half of a non-blocking commit, recon-pipeline inside the
+# arrival-order reconstruction folds).
+PROTO_PHASES = (
+    "ckpt-commit",
+    "detect",
+    "agree",
+    "reconstruct",
+    "spare-join",
+    "redistribute",
+    "ckpt-ship",
+    "recon-pipeline",
+)
+# Checkpoint spans shorter than this are phase-bookkeeping noise, not a
+# commit window worth judging for overlap.
+CKPT_SPAN_EPS_US = 0.5
 
 
 def fail(msg):
@@ -73,6 +96,8 @@ def validate(events):
         elif ph == "i":
             if e.get("cat") not in INSTANT_CATS:
                 fail(f"event {i}: unknown instant cat {e.get('cat')!r}")
+            if e.get("cat") == "proto" and e.get("name") not in PROTO_PHASES:
+                fail(f"event {i}: unknown protocol phase {e.get('name')!r}")
             instants.append(e)
         elif ph == "C":
             if not e.get("name", "").startswith("iters-r"):
@@ -88,6 +113,50 @@ def validate(events):
     if unmatched:
         fail(f"{len(unmatched)} flow ends without a matching start, e.g. {sorted(unmatched)[0]}")
     return spans, instants, (send_ids, recv_ids), ranks
+
+
+def ckpt_overlap(spans, asynchronous):
+    """Report commit-plane/compute overlap; enforce it for async runs.
+
+    For every steady-state checkpoint span (each rank's earliest one is
+    the establishment commit — deliberately synchronous, it creates the
+    protection recovery relies on — and is skipped), sum its temporal
+    intersection with compute spans on *other* ranks.  A span with zero
+    such intersection fully serialized the machine.  With `--ckpt-async
+    on` at least one steady-state commit window must overlap someone
+    else's compute, or the non-blocking pipeline has regressed into a
+    fence and we exit non-zero.
+    """
+    ckpt, compute = {}, {}
+    for s in spans:
+        bucket = {"checkpoint": ckpt, "compute": compute}.get(s["name"])
+        if bucket is not None:
+            bucket.setdefault(s["tid"], []).append((s["ts"], s["ts"] + s["dur"]))
+    steady = []
+    for tid, windows in ckpt.items():
+        windows.sort()
+        steady += [(tid, a, b) for a, b in windows[1:] if b - a > CKPT_SPAN_EPS_US]
+    overlapping, hidden_us = 0, 0.0
+    for tid, a, b in steady:
+        got = 0.0
+        for other, windows in compute.items():
+            if other == tid:
+                continue
+            got += sum(max(0.0, min(b, d) - max(a, c)) for c, d in windows)
+        if got > 0.0:
+            overlapping += 1
+            hidden_us += got
+    mode = "async (non-blocking)" if asynchronous else "sync (fenced)"
+    print(
+        f"commit plane [{mode}]: {overlapping}/{len(steady)} steady-state "
+        f"checkpoint spans overlap compute on another rank "
+        f"({hidden_us / 1e6:.6f}s of cross-rank ckpt||compute time)"
+    )
+    if asynchronous and steady and overlapping == 0:
+        fail(
+            "async commit plane fully serialized: no steady-state checkpoint "
+            "span overlaps compute on any other rank"
+        )
 
 
 def table(rows, header):
@@ -137,6 +206,7 @@ def main():
             f"overlap efficiency {float(cp.get('overlap_efficiency', 0.0)):.3f} "
             f"(wire {float(path_s.get('wire', 0.0)):.6f}s)"
         )
+    ckpt_overlap(spans, "+async" in doc["otherData"].get("ckpt", ""))
     print("trace OK")
 
 
