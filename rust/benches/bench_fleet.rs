@@ -1,0 +1,208 @@
+//! Bench: the multi-tenant fleet (DESIGN.md §16) — what sharing one spare
+//! pool costs as the failure rate climbs.  Three headline numbers, tracked
+//! in-repo:
+//!
+//! - **fleet throughput vs failure rate**: converged jobs per virtual
+//!   second of makespan, across a sweep from a clean fleet to a
+//!   failure-concentrated one;
+//! - **spare-pool contention ratio**: arbitrations that could not grant
+//!   the requested action outright (preempted or deferred), at the peak of
+//!   the sweep;
+//! - **breaker trip count**: circuit-breaker quarantines fired by the
+//!   concentrated leg (must be exactly one, on the victim, with zero
+//!   unintended global restarts anywhere else).
+//!
+//! Emits `BENCH_fleet.json` at the repository root.
+//!
+//! `cargo bench --bench bench_fleet` (`BENCH_SMOKE=1` for the CI quick
+//! pass on the small grid).
+
+mod bench_common;
+
+use std::fmt::Write as _;
+
+use ulfm_ftgmres::config::RunConfig;
+use ulfm_ftgmres::coordinator::fleet::{run_fleet_custom, FleetReport, FleetSpec};
+use ulfm_ftgmres::failure::{InjectionPlan, Kill};
+use ulfm_ftgmres::problem::Grid3D;
+
+fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Three 8-rank jobs, one warm spare (contended), breaker at 3 recoveries
+/// per window — the acceptance-campaign shape.
+fn base_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.grid = if smoke() { Grid3D::cube(12) } else { Grid3D::cube(16) };
+    cfg.p = 8;
+    cfg.solver.tol = 1e-10;
+    cfg.solver.m_inner = 10;
+    cfg.solver.m_outer = 20;
+    cfg.solver.max_cycles = 20;
+    cfg.fleet = Some(
+        FleetSpec::parse(
+            "jobs=steady,prio=4+victim,prio=2+calm,prio=3;warm=1;breaker_k=3;breaker_w=1000",
+        )
+        .expect("fleet spec"),
+    );
+    cfg
+}
+
+/// One kill at inner iteration `at`, job-local rank `r`.
+fn kill(r: usize, at: u64) -> Kill {
+    Kill::at_iter(r, at)
+}
+
+struct LegResult {
+    name: &'static str,
+    failures: usize,
+    frep: FleetReport,
+}
+
+fn run_leg(name: &'static str, cfg: &RunConfig, plans: &[InjectionPlan]) -> LegResult {
+    let frep = bench_common::timed(name, || run_fleet_custom(cfg, plans)).expect("leg completes");
+    for j in &frep.jobs {
+        assert!(j.rep.converged, "{name}: job {} must converge", j.name);
+    }
+    let failures = frep.jobs.iter().map(|j| j.rep.failures).sum();
+    LegResult { name, failures, frep }
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = base_cfg();
+    let none = InjectionPlan::none;
+    let one = |kills: Vec<Kill>| InjectionPlan { kills, ..Default::default() };
+
+    // Sweep the fleet-wide failure count: clean -> one failure -> two jobs
+    // contending for the one warm spare -> failures concentrated on the
+    // victim until its breaker trips.
+    let legs = vec![
+        run_leg("fleet_clean", &cfg, &[]),
+        run_leg("fleet_1_failure", &cfg, &[one(vec![kill(7, 25)]), none(), none()]),
+        run_leg(
+            "fleet_contended",
+            &cfg,
+            &[one(vec![kill(7, 25)]), one(vec![kill(7, 25)]), none()],
+        ),
+        run_leg(
+            "fleet_concentrated",
+            &cfg,
+            &[
+                one(vec![kill(7, 25)]),
+                one(vec![kill(7, 25), kill(6, 35), kill(5, 45)]),
+                none(),
+            ],
+        ),
+    ];
+
+    println!(
+        "{:<20} {:>6} {:>10} {:>12} {:>10} {:>7} {:>7} {:>6}",
+        "leg", "fails", "makespan", "throughput", "contention", "preempt", "defer", "trips"
+    );
+    for l in &legs {
+        println!(
+            "{:<20} {:>6} {:>10.4} {:>12.6} {:>10.3} {:>7} {:>7} {:>6}",
+            l.name,
+            l.failures,
+            l.frep.makespan,
+            l.frep.throughput(),
+            l.frep.contention_ratio(),
+            l.frep.preemptions,
+            l.frep.deferrals,
+            l.frep.total_trips()
+        );
+    }
+
+    let by_name = |n: &str| legs.iter().find(|l| l.name == n).unwrap();
+    let clean = by_name("fleet_clean");
+    let contended = by_name("fleet_contended");
+    let concentrated = by_name("fleet_concentrated");
+
+    // Gate 1: the clean fleet neither arbitrates nor restarts.
+    assert_eq!(clean.frep.arbitrations.len(), 0, "clean fleet must not arbitrate");
+    assert_eq!(clean.frep.total_trips(), 0);
+
+    // Gate 2: contention for the last warm spare records a preemption.
+    assert!(contended.frep.preemptions >= 1, "contended leg must preempt");
+    assert!(contended.frep.contention_ratio() > 0.0);
+
+    // Gate 3: the concentrated leg trips the victim's breaker exactly once
+    // (one recorded global restart on the victim), and nobody else ever
+    // globally restarts in any leg.
+    assert_eq!(concentrated.frep.total_trips(), 1, "exactly one breaker trip");
+    assert_eq!(concentrated.frep.quarantines, 1);
+    for l in &legs {
+        for j in &l.frep.jobs {
+            let allowed = if l.name == "fleet_concentrated" && j.name == "victim" { 1 } else { 0 };
+            assert_eq!(
+                j.rep.global_restarts(),
+                allowed,
+                "{}: job {} unintended global restart",
+                l.name,
+                j.name
+            );
+        }
+    }
+
+    // Gate 4: failures cost throughput — the concentrated fleet cannot beat
+    // the clean one.
+    assert!(
+        concentrated.frep.throughput() <= clean.frep.throughput(),
+        "throughput must not rise with failures: {} vs {}",
+        concentrated.frep.throughput(),
+        clean.frep.throughput()
+    );
+
+    let throughput_drop = 1.0 - concentrated.frep.throughput() / clean.frep.throughput();
+    println!("\nclean fleet throughput:            {:.6} jobs/s", clean.frep.throughput());
+    println!("concentrated throughput drop:      {:.1}%", 100.0 * throughput_drop);
+    println!("peak contention ratio:             {:.3}", concentrated.frep.contention_ratio());
+    println!("breaker trips (concentrated leg):  {}", concentrated.frep.total_trips());
+
+    // Emit BENCH_fleet.json at the repository root.
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"fleet\",\n");
+    let _ = writeln!(
+        json,
+        "  \"workload\": \"3x ftgmres p=8 {} warm=1 breaker_k=3\",",
+        if smoke() { "cube12" } else { "cube16" }
+    );
+    let _ = writeln!(
+        json,
+        "  \"clean_throughput_jobs_per_s\": {:.6e},\n  \
+         \"concentrated_throughput_drop\": {:.4},\n  \
+         \"peak_contention_ratio\": {:.4},\n  \
+         \"breaker_trips\": {},\n  \"legs\": [",
+        clean.frep.throughput(),
+        throughput_drop,
+        concentrated.frep.contention_ratio(),
+        concentrated.frep.total_trips()
+    );
+    for (i, l) in legs.iter().enumerate() {
+        let _ = writeln!(
+            json,
+            "    {{\"name\": \"{}\", \"failures\": {}, \"makespan_virtual_s\": {:.6}, \
+             \"throughput_jobs_per_s\": {:.6e}, \"contention_ratio\": {:.4}, \
+             \"preemptions\": {}, \"deferrals\": {}, \"quarantines\": {}, \
+             \"breaker_trips\": {}, \"converged_jobs\": {}}}{}",
+            l.name,
+            l.failures,
+            l.frep.makespan,
+            l.frep.throughput(),
+            l.frep.contention_ratio(),
+            l.frep.preemptions,
+            l.frep.deferrals,
+            l.frep.quarantines,
+            l.frep.total_trips(),
+            l.frep.jobs.iter().filter(|j| j.rep.converged).count(),
+            if i + 1 < legs.len() { "," } else { "" }
+        );
+    }
+    json.push_str("  ]\n}\n");
+    let path = std::path::Path::new("../BENCH_fleet.json");
+    std::fs::write(path, &json)?;
+    eprintln!("wrote {}", path.display());
+    println!("bench_fleet checks passed");
+    Ok(())
+}

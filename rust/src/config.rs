@@ -105,6 +105,16 @@ pub struct RunConfig {
     pub pjrt_measured: bool,
     /// Directory with AOT artifacts (PJRT backend).
     pub artifacts_dir: String,
+    /// Multi-tenant fleet specification (key `fleet`, CLI `--fleet`): run
+    /// several jobs over one shared spare pool with arbitration, a per-job
+    /// circuit breaker and quarantine escalation — see
+    /// [`crate::coordinator::fleet::FleetSpec`] and DESIGN.md §16.  `None`
+    /// (the default) runs a single job exactly as before.
+    pub fleet: Option<crate::coordinator::fleet::FleetSpec>,
+    /// This run's seat at the shared fleet arbiter.  Set internally by the
+    /// fleet driver on the per-job configs it derives — never from a config
+    /// file or the CLI.
+    pub fleet_seat: Option<crate::recovery::fleet::FleetSeat>,
 }
 
 impl Default for RunConfig {
@@ -130,6 +140,8 @@ impl Default for RunConfig {
             trace: false,
             pjrt_measured: false,
             artifacts_dir: "artifacts".to_string(),
+            fleet: None,
+            fleet_seat: None,
         }
     }
 }
@@ -397,6 +409,7 @@ impl RunConfig {
                 })?
             }
             "trace" => self.trace = v.parse()?,
+            "fleet" => self.fleet = Some(crate::coordinator::fleet::FleetSpec::parse(v)?),
             "pjrt_measured" => self.pjrt_measured = v.parse()?,
             "artifacts_dir" => self.artifacts_dir = v.to_string(),
             "ranks_per_node" => self.net.ranks_per_node = v.parse()?,
@@ -509,6 +522,9 @@ impl RunConfig {
             },
         );
         m.insert("engine", self.engine.name().to_string());
+        if let Some(fleet) = &self.fleet {
+            m.insert("fleet", fleet.summary());
+        }
         m
     }
 }
@@ -732,6 +748,24 @@ mod tests {
             vec![(3, ProtoPhase::CkptShip, 1), (5, ProtoPhase::ReconPipeline, 2)]
         );
         assert!(c.summary().get("inject_phase").unwrap().contains("3:ckpt-ship:1"));
+    }
+
+    #[test]
+    fn fleet_key_parses_into_a_spec() {
+        let mut c = RunConfig::default();
+        assert!(c.fleet.is_none() && c.fleet_seat.is_none());
+        assert!(c
+            .set("fleet", "jobs=alpha,prio=5+beta,prio=1,failures=3;warm=1;breaker_k=2")
+            .unwrap());
+        let spec = c.fleet.as_ref().unwrap();
+        assert_eq!(spec.jobs.len(), 2);
+        assert_eq!(spec.warm, 1);
+        assert_eq!(spec.breaker_k, 2);
+        assert_eq!(c.summary().get("fleet").unwrap(), &spec.summary());
+        // The seat is driver-internal: no config key may ever set it.
+        assert!(!c.set("fleet_seat", "0").unwrap());
+        // Malformed specs are rejected at parse time.
+        assert!(c.set("fleet", "warm=2").is_err());
     }
 
     #[test]

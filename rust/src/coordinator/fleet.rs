@@ -1,0 +1,591 @@
+//! Multi-tenant fleet driver (DESIGN.md §16): run M solver jobs —
+//! different sizes, priorities, deadlines and checkpoint schemes — on one
+//! simulated machine whose warm/cold spare pool and recovery bandwidth are
+//! **shared**, arbitrated by [`crate::recovery::fleet`].
+//!
+//! Jobs are processed in the deterministic *arbiter order* (priority
+//! descending, job id ascending — or plain spec order under `order=fcfs`,
+//! which is how priority inversions become visible).  Each job runs to
+//! completion as its own simulated world under the ordinary engine
+//! ([`super::run_custom`]); what couples the jobs is the shared
+//! [`FleetState`]: every failure event consults the lease ledger (earlier-
+//! arbitrated jobs' substitutions preempt later ones), the recovery
+//! bandwidth gate, and the job's circuit breaker.  Virtual time is the
+//! common axis — job worlds all start at t = 0 on the machine clock, so a
+//! lease an earlier-arbitrated job holds over `[t0, t1)` is exactly the
+//! capacity a later job cannot have during that window.
+//!
+//! Everything here is deterministic: the arbiter order is a pure sort, each
+//! job run is engine-deterministic, and the shared state only ever advances
+//! through arbitrations made in that fixed order — so the whole
+//! [`FleetReport::digest`] is bit-identical across `--engine
+//! threads|events` and across reruns (`tests/engine_differential.rs`,
+//! `tests/scheduler_determinism.rs`).
+
+use std::ops::Range;
+use std::sync::{Arc, Mutex};
+
+use crate::config::RunConfig;
+use crate::failure::InjectionPlan;
+use crate::metrics::RunReport;
+use crate::recovery::fleet::{ArbitrationRecord, FleetSeat, FleetState, RecoveryPlan};
+use crate::recovery::PolicyKind;
+
+/// How the arbiter ranks jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FleetOrder {
+    /// Priority descending, job id ascending on ties (the default).
+    #[default]
+    Priority,
+    /// Spec order regardless of priority — the configuration that makes
+    /// priority inversions observable in the inversion table.
+    Fcfs,
+}
+
+impl FleetOrder {
+    pub fn parse(s: &str) -> Option<FleetOrder> {
+        match s {
+            "priority" | "prio" => Some(FleetOrder::Priority),
+            "fcfs" | "spec" => Some(FleetOrder::Fcfs),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FleetOrder::Priority => "priority",
+            FleetOrder::Fcfs => "fcfs",
+        }
+    }
+}
+
+/// One job in the fleet: a name, a priority, an optional deadline, and raw
+/// `key=value` overrides applied on top of the base [`RunConfig`] — any
+/// ordinary config key works (`p`, `failures`, `ckpt_scheme`, `grid`,
+/// `strategy`, ...), so a fleet can mix sizes and checkpoint schemes
+/// freely.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub name: String,
+    /// 1 (lowest) ..= 5 (highest); default 3.
+    pub priority: u8,
+    /// Virtual-seconds deadline; reported as met/missed, never enforced.
+    pub deadline: Option<f64>,
+    /// Config-key overrides, applied via [`RunConfig::set`] in order.
+    pub overrides: Vec<(String, String)>,
+}
+
+impl JobSpec {
+    /// Parse one `name[,key=value]*` job entry.
+    fn parse(s: &str) -> anyhow::Result<JobSpec> {
+        let mut fields = s.split(',');
+        let name = fields.next().unwrap_or("").trim().to_string();
+        anyhow::ensure!(
+            !name.is_empty() && !name.contains('='),
+            "fleet job entry '{s}' must start with a job name"
+        );
+        let mut job = JobSpec { name, priority: 3, deadline: None, overrides: Vec::new() };
+        for f in fields {
+            let (k, v) = f
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fleet job field '{f}' must be key=value"))?;
+            let (k, v) = (k.trim(), v.trim());
+            match k {
+                "prio" | "priority" => {
+                    job.priority = v.parse()?;
+                    anyhow::ensure!(
+                        (1..=5).contains(&job.priority),
+                        "job '{}': priority must be 1..=5, got {}",
+                        job.name,
+                        job.priority
+                    );
+                }
+                "deadline" => {
+                    let d: f64 = v.parse()?;
+                    anyhow::ensure!(
+                        d.is_finite() && d > 0.0,
+                        "job '{}': deadline must be a positive number of virtual seconds",
+                        job.name
+                    );
+                    job.deadline = Some(d);
+                }
+                _ => job.overrides.push((k.to_string(), v.to_string())),
+            }
+        }
+        Ok(job)
+    }
+}
+
+/// Parsed `--fleet` specification (config key `fleet`).
+///
+/// Grammar — `;`-separated fleet keys, jobs `+`-separated inside `jobs=`:
+///
+/// ```text
+/// jobs=alpha,prio=5,failures=0+beta,prio=3,failures=4;warm=2;cold=1;breaker_k=3;breaker_w=5
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    pub jobs: Vec<JobSpec>,
+    /// Machine-wide warm spare capacity shared by every job.
+    pub warm: usize,
+    /// Machine-wide cold slot capacity.
+    pub cold: usize,
+    /// Max concurrent machine-wide recoveries before deferral.
+    pub bandwidth: usize,
+    /// Breaker threshold: recoveries inside one window that trip it.
+    pub breaker_k: usize,
+    /// Breaker sliding window, virtual seconds.
+    pub breaker_window: f64,
+    pub order: FleetOrder,
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        FleetSpec {
+            jobs: Vec::new(),
+            warm: 2,
+            cold: 0,
+            bandwidth: 2,
+            breaker_k: 3,
+            breaker_window: 5.0,
+            order: FleetOrder::Priority,
+        }
+    }
+}
+
+impl FleetSpec {
+    pub fn parse(spec: &str) -> anyhow::Result<FleetSpec> {
+        let mut out = FleetSpec::default();
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fleet field '{part}' must be key=value"))?;
+            let v = v.trim();
+            match k.trim() {
+                "jobs" => {
+                    for jspec in v.split('+') {
+                        out.jobs.push(JobSpec::parse(jspec)?);
+                    }
+                }
+                "warm" => out.warm = v.parse()?,
+                "cold" => out.cold = v.parse()?,
+                "bandwidth" | "bw" => out.bandwidth = v.parse()?,
+                "breaker_k" => out.breaker_k = v.parse()?,
+                "breaker_w" | "breaker_window" => out.breaker_window = v.parse()?,
+                "order" => {
+                    out.order = FleetOrder::parse(v).ok_or_else(|| {
+                        anyhow::anyhow!("unknown fleet order '{v}' (expected priority or fcfs)")
+                    })?
+                }
+                other => anyhow::bail!(
+                    "unknown fleet key '{other}' (expected jobs, warm, cold, bandwidth, \
+                     breaker_k, breaker_w or order)"
+                ),
+            }
+        }
+        anyhow::ensure!(!out.jobs.is_empty(), "fleet spec needs jobs=<name>[,key=value...]+...");
+        anyhow::ensure!(out.bandwidth >= 1, "fleet bandwidth must be >= 1");
+        anyhow::ensure!(out.breaker_k >= 1, "breaker_k must be >= 1");
+        anyhow::ensure!(
+            out.breaker_window.is_finite() && out.breaker_window > 0.0,
+            "breaker_w must be a positive number of virtual seconds"
+        );
+        for (i, a) in out.jobs.iter().enumerate() {
+            for b in &out.jobs[i + 1..] {
+                anyhow::ensure!(a.name != b.name, "duplicate fleet job name '{}'", a.name);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Compact one-line description for report headers.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} jobs, pool {}w+{}c, bandwidth {}, breaker {}x{}s, order {}",
+            self.jobs.len(),
+            self.warm,
+            self.cold,
+            self.bandwidth,
+            self.breaker_k,
+            self.breaker_window,
+            self.order.name()
+        )
+    }
+
+    /// Job indices in arbiter order (DESIGN.md §16 ordering rules).
+    pub fn arbiter_order(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.jobs.len()).collect();
+        if self.order == FleetOrder::Priority {
+            idx.sort_by_key(|&j| (std::cmp::Reverse(self.jobs[j].priority), j));
+        }
+        idx
+    }
+}
+
+/// One job's result inside a [`FleetReport`].
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    pub name: String,
+    pub priority: u8,
+    pub deadline: Option<f64>,
+    /// Whether the breaker quarantined this job at least once.
+    pub quarantined: bool,
+    /// Breaker trips charged to this job.
+    pub trips: usize,
+    pub rep: RunReport,
+}
+
+impl JobReport {
+    /// `Some(met?)` when a deadline was configured.
+    pub fn deadline_met(&self) -> Option<bool> {
+        self.deadline.map(|d| self.rep.converged && self.rep.time_to_solution <= d)
+    }
+}
+
+/// Aggregated result of one fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    /// Per-job reports, in spec order.
+    pub jobs: Vec<JobReport>,
+    /// Every recovery plan submitted to the arbiter, in ruling order.
+    pub plans: Vec<RecoveryPlan>,
+    /// Every arbiter ruling, in ruling order.
+    pub arbitrations: Vec<ArbitrationRecord>,
+    pub warm_total: usize,
+    pub cold_total: usize,
+    pub bandwidth: usize,
+    pub order: &'static str,
+    /// Max time-to-solution over the jobs (virtual seconds).
+    pub makespan: f64,
+    pub preemptions: usize,
+    pub deferrals: usize,
+    pub quarantines: usize,
+}
+
+impl FleetReport {
+    /// Converged jobs per virtual second of makespan.
+    pub fn throughput(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.jobs.iter().filter(|j| j.rep.converged).count() as f64 / self.makespan
+    }
+
+    /// Arbitrations that could not grant the requested action outright
+    /// (preempted or deferred), over all arbitrations.
+    pub fn contention_ratio(&self) -> f64 {
+        if self.arbitrations.is_empty() {
+            return 0.0;
+        }
+        (self.preemptions + self.deferrals) as f64 / self.arbitrations.len() as f64
+    }
+
+    pub fn total_trips(&self) -> usize {
+        self.jobs.iter().map(|j| j.trips).sum()
+    }
+
+    /// Deterministic digest of the whole fleet run: every f64 as exact
+    /// bits, every job's decision log, every arbiter ruling.  Must be
+    /// bit-identical across engines and across reruns.
+    pub fn digest(&self) -> String {
+        use std::fmt::Write as _;
+        let bits = |x: f64| format!("{:016x}", x.to_bits());
+        let mut s = String::new();
+        writeln!(
+            s,
+            "fleet jobs={} warm={} cold={} bw={} order={} makespan={}",
+            self.jobs.len(),
+            self.warm_total,
+            self.cold_total,
+            self.bandwidth,
+            self.order,
+            bits(self.makespan)
+        )
+        .unwrap();
+        for (j, job) in self.jobs.iter().enumerate() {
+            writeln!(
+                s,
+                "job {j} name={} prio={} tts={} relres={} converged={} iters={} failures={} \
+                 restarts={} retries={} quarantined={} trips={}",
+                job.name,
+                job.priority,
+                bits(job.rep.time_to_solution),
+                bits(job.rep.final_relres),
+                job.rep.converged,
+                job.rep.iterations,
+                job.rep.failures,
+                job.rep.global_restarts(),
+                job.rep.recovery_retries,
+                job.quarantined,
+                job.trips
+            )
+            .unwrap();
+            for d in &job.rep.decisions {
+                writeln!(
+                    s,
+                    "  dec {} at={} failed={:?} decision={} warm={} cold={} attempt={} \
+                     reason={}",
+                    d.seq,
+                    bits(d.at),
+                    d.failed_ranks,
+                    d.decision,
+                    d.warm_free,
+                    d.cold_free,
+                    d.attempt,
+                    d.reason
+                )
+                .unwrap();
+            }
+        }
+        for a in &self.arbitrations {
+            writeln!(
+                s,
+                "arb {} job={} prio={} at={} failed={:?} req={} granted={} verdict={} by={} \
+                 warm={} cold={} defer={} deps={:?} breaker={} est={}",
+                a.seq,
+                a.job_name,
+                a.priority,
+                bits(a.at),
+                a.failed,
+                a.requested,
+                a.granted,
+                a.verdict,
+                a.preempted_by.as_deref().unwrap_or("-"),
+                a.warm_free,
+                a.cold_free,
+                bits(a.defer_secs),
+                a.deps,
+                a.breaker,
+                bits(a.est_cost)
+            )
+            .unwrap();
+        }
+        s
+    }
+}
+
+/// Build job `j`'s effective config: base config, job overrides, the shared
+/// pool dimensions, and an adaptive default policy (a fleet whose jobs run
+/// `fixed:<strategy>` would never consult the pool, so the arbiter clamp
+/// would be invisible; an explicit per-job `policy=` override still wins).
+fn job_config(base: &RunConfig, spec: &FleetSpec, j: usize) -> anyhow::Result<RunConfig> {
+    let js = &spec.jobs[j];
+    let mut c = base.clone();
+    c.fleet = None;
+    for (k, v) in &js.overrides {
+        anyhow::ensure!(
+            k != "engine" && k != "fleet",
+            "fleet job '{}' may not override '{k}' (fleet-level setting)",
+            js.name
+        );
+        anyhow::ensure!(
+            c.set(k, v).map_err(|e| anyhow::anyhow!("fleet job '{}': {e}", js.name))?,
+            "fleet job '{}': unknown config key '{k}'",
+            js.name
+        );
+    }
+    if c.policy.is_none() {
+        c.policy = Some(PolicyKind::SparesFirst);
+    }
+    // Every job sees the full machine pool locally; the arbiter's ledger
+    // clamp is what makes the capacity shared.
+    c.warm_spares = Some(spec.warm);
+    c.cold_spares = Some(spec.cold);
+    Ok(c)
+}
+
+/// Fleet-wide world-rank layout: job `j` owns the contiguous block of
+/// application ranks `[start_j, start_j + p_j)` on the simulated machine.
+/// This is the address space fleet campaign plans
+/// ([`crate::failure::InjectionPlan::validate_fleet`]) are written in.
+pub fn fleet_layout(cfg: &RunConfig) -> anyhow::Result<Vec<(String, Range<usize>)>> {
+    let spec = cfg.fleet.as_ref().ok_or_else(|| anyhow::anyhow!("no fleet configured"))?;
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    for j in 0..spec.jobs.len() {
+        let cj = job_config(cfg, spec, j)?;
+        out.push((spec.jobs[j].name.clone(), start..start + cj.p));
+        start += cj.p;
+    }
+    Ok(out)
+}
+
+/// Run the configured fleet with each job's own derived injection campaign.
+pub fn run_fleet(cfg: &RunConfig) -> anyhow::Result<FleetReport> {
+    run_fleet_custom(cfg, &[])
+}
+
+/// Run the configured fleet with one fleet-wide campaign plan addressed in
+/// the [`fleet_layout`] world-rank space: the plan is validated against the
+/// layout and split into per-job local plans.
+pub fn run_fleet_campaign(cfg: &RunConfig, plan: &InjectionPlan) -> anyhow::Result<FleetReport> {
+    let layout = fleet_layout(cfg)?;
+    plan.validate_fleet(&layout)
+        .map_err(|e| anyhow::anyhow!("invalid fleet injection plan: {e}"))?;
+    let plans = plan
+        .split_fleet(&layout)
+        .map_err(|e| anyhow::anyhow!("invalid fleet injection plan: {e}"))?;
+    run_fleet_custom(cfg, &plans)
+}
+
+/// Run the configured fleet; `plans[j]`, when present, replaces job `j`'s
+/// derived injection plan (tests and the bench use this to place failures
+/// exactly).
+pub fn run_fleet_custom(cfg: &RunConfig, plans: &[InjectionPlan]) -> anyhow::Result<FleetReport> {
+    let spec = cfg
+        .fleet
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("run_fleet requires a fleet spec (--fleet)"))?;
+    let roster: Vec<(String, u8)> =
+        spec.jobs.iter().map(|j| (j.name.clone(), j.priority)).collect();
+    let state = Arc::new(Mutex::new(FleetState::new(
+        spec.warm,
+        spec.cold,
+        spec.bandwidth,
+        spec.breaker_k,
+        spec.breaker_window,
+        &roster,
+    )));
+    let mut reports: Vec<Option<JobReport>> = spec.jobs.iter().map(|_| None).collect();
+    for &j in &spec.arbiter_order() {
+        let mut cj = job_config(cfg, spec, j)?;
+        cj.fleet_seat = Some(FleetSeat {
+            job: j,
+            name: spec.jobs[j].name.clone(),
+            priority: spec.jobs[j].priority,
+            state: state.clone(),
+        });
+        let plan = plans.get(j).cloned().unwrap_or_else(|| cj.injection_plan());
+        let backend = super::make_backend(&cj)?;
+        let rep = super::run_custom(&cj, backend, plan)?;
+        let mut st = state.lock().unwrap();
+        st.close_job(j, rep.time_to_solution);
+        let trips = st.trips(j);
+        drop(st);
+        reports[j] = Some(JobReport {
+            name: spec.jobs[j].name.clone(),
+            priority: spec.jobs[j].priority,
+            deadline: spec.jobs[j].deadline,
+            quarantined: trips > 0,
+            trips,
+            rep,
+        });
+    }
+    let jobs: Vec<JobReport> = reports.into_iter().map(|r| r.expect("every job ran")).collect();
+    let st = state.lock().unwrap();
+    let makespan = jobs.iter().map(|j| j.rep.time_to_solution).fold(0.0f64, f64::max);
+    Ok(FleetReport {
+        makespan,
+        plans: st.plans().to_vec(),
+        arbitrations: st.records().to_vec(),
+        warm_total: spec.warm,
+        cold_total: spec.cold,
+        bandwidth: spec.bandwidth,
+        order: spec.order.name(),
+        preemptions: st.preemptions(),
+        deferrals: st.deferrals(),
+        quarantines: st.quarantines(),
+        jobs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_jobs_pool_and_breaker() {
+        let s = FleetSpec::parse(
+            "jobs=alpha,prio=5,failures=0+beta,prio=3,failures=4,ckpt_scheme=xor:4;\
+             warm=2;cold=1;bandwidth=3;breaker_k=4;breaker_w=7.5;order=fcfs",
+        )
+        .unwrap();
+        assert_eq!(s.jobs.len(), 2);
+        assert_eq!(s.jobs[0].name, "alpha");
+        assert_eq!(s.jobs[0].priority, 5);
+        assert_eq!(s.jobs[0].overrides, vec![("failures".into(), "0".into())]);
+        assert_eq!(s.jobs[1].priority, 3);
+        assert_eq!(
+            s.jobs[1].overrides,
+            vec![("failures".into(), "4".into()), ("ckpt_scheme".into(), "xor:4".into())]
+        );
+        assert_eq!((s.warm, s.cold, s.bandwidth), (2, 1, 3));
+        assert_eq!(s.breaker_k, 4);
+        assert_eq!(s.breaker_window, 7.5);
+        assert_eq!(s.order, FleetOrder::Fcfs);
+        assert!(s.summary().contains("2 jobs"));
+    }
+
+    #[test]
+    fn spec_defaults_and_deadline() {
+        let s = FleetSpec::parse("jobs=a,deadline=30+b").unwrap();
+        assert_eq!(s.jobs[0].deadline, Some(30.0));
+        assert_eq!(s.jobs[0].priority, 3, "default priority");
+        assert_eq!(s.jobs[1].deadline, None);
+        assert_eq!((s.warm, s.cold, s.bandwidth), (2, 0, 2));
+        assert_eq!(s.breaker_k, 3);
+        assert_eq!(s.order, FleetOrder::Priority);
+    }
+
+    #[test]
+    fn spec_rejects_malformed_entries() {
+        assert!(FleetSpec::parse("warm=2").is_err(), "no jobs");
+        assert!(FleetSpec::parse("jobs=a+a").is_err(), "duplicate name");
+        assert!(FleetSpec::parse("jobs=prio=5").is_err(), "missing name");
+        assert!(FleetSpec::parse("jobs=a,prio=9").is_err(), "priority out of range");
+        assert!(FleetSpec::parse("jobs=a,deadline=-1").is_err());
+        assert!(FleetSpec::parse("jobs=a;order=random").is_err());
+        assert!(FleetSpec::parse("jobs=a;volume=11").is_err(), "unknown fleet key");
+        assert!(FleetSpec::parse("jobs=a;breaker_k=0").is_err());
+        assert!(FleetSpec::parse("jobs=a;breaker_w=0").is_err());
+        assert!(FleetSpec::parse("jobs=a;bandwidth=0").is_err());
+    }
+
+    #[test]
+    fn arbiter_order_is_priority_then_job_id() {
+        let s = FleetSpec::parse("jobs=low,prio=1+high,prio=5+mid,prio=3+high2,prio=5").unwrap();
+        assert_eq!(s.arbiter_order(), vec![1, 3, 2, 0]);
+        let mut s = s;
+        s.order = FleetOrder::Fcfs;
+        assert_eq!(s.arbiter_order(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn job_config_applies_overrides_and_shares_the_pool() {
+        let mut base = RunConfig::default();
+        base.fleet = Some(
+            FleetSpec::parse("jobs=a,p=4,failures=2+b,policy=cost-min;warm=3;cold=1").unwrap(),
+        );
+        let spec = base.fleet.clone().unwrap();
+        let ca = job_config(&base, &spec, 0).unwrap();
+        assert_eq!(ca.p, 4);
+        assert_eq!(ca.failures, 2);
+        assert_eq!(ca.policy(), PolicyKind::SparesFirst, "adaptive default");
+        assert_eq!(ca.warm_spare_count(), 3);
+        assert_eq!(ca.cold_spare_count(), 1);
+        assert!(ca.fleet.is_none(), "job configs never recurse");
+        let cb = job_config(&base, &spec, 1).unwrap();
+        assert_eq!(cb.policy(), PolicyKind::CostMin, "explicit override wins");
+        // Fleet-level keys cannot be overridden per job.
+        let bad = FleetSpec::parse("jobs=a,engine=events").unwrap();
+        let mut b2 = base.clone();
+        b2.fleet = Some(bad.clone());
+        assert!(job_config(&b2, &bad, 0).is_err());
+    }
+
+    #[test]
+    fn layout_assigns_contiguous_blocks() {
+        let mut base = RunConfig::default();
+        base.p = 8;
+        base.fleet = Some(FleetSpec::parse("jobs=a,p=4+b+c,p=2").unwrap());
+        let layout = fleet_layout(&base).unwrap();
+        assert_eq!(
+            layout,
+            vec![("a".to_string(), 0..4), ("b".to_string(), 4..12), ("c".to_string(), 12..14)]
+        );
+    }
+}

@@ -13,6 +13,8 @@
 //!
 //! This is the L3 entrypoint both the CLI and the benches drive.
 
+pub mod fleet;
+
 use std::sync::Arc;
 use std::thread;
 

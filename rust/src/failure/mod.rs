@@ -434,6 +434,161 @@ impl InjectionPlan {
         Ok(())
     }
 
+    /// Fleet-level validation (DESIGN.md §16): `jobs` is the fleet layout —
+    /// `(name, world-rank block)` per job, as produced by
+    /// [`crate::coordinator::fleet::fleet_layout`] — and this plan is
+    /// addressed in that fleet-wide rank space.  Rejects layouts in which
+    /// two jobs claim the same world rank (overlapping blocks would make
+    /// fault attribution ambiguous) and faults aimed at a rank outside
+    /// every job's block (they could never fire, so the campaign would
+    /// silently under-inject).  Per-job shape checks (duplicates, spare
+    /// targeting) still run via [`InjectionPlan::validate`] once the plan
+    /// is split.
+    pub fn validate_fleet(&self, jobs: &[(String, std::ops::Range<usize>)]) -> Result<(), String> {
+        for (i, (a, ra)) in jobs.iter().enumerate() {
+            for (b, rb) in &jobs[i + 1..] {
+                if ra.start < rb.end && rb.start < ra.end {
+                    let r = ra.start.max(rb.start);
+                    return Err(format!("jobs '{a}' and '{b}' both claim world rank {r}"));
+                }
+            }
+        }
+        let owner = |r: usize| jobs.iter().position(|(_, range)| range.contains(&r));
+        for k in &self.kills {
+            if owner(k.world_rank).is_none() {
+                return Err(format!(
+                    "kill targets rank {}, which is outside every fleet job's rank block",
+                    k.world_rank
+                ));
+            }
+        }
+        for s in &self.stragglers {
+            if owner(s.world_rank).is_none() {
+                return Err(format!(
+                    "straggler injection targets rank {}, which is outside every fleet \
+                     job's rank block",
+                    s.world_rank
+                ));
+            }
+        }
+        for b in &self.bitflips {
+            if owner(b.world_rank).is_none() {
+                return Err(format!(
+                    "bitflip injection targets rank {}, which is outside every fleet \
+                     job's rank block",
+                    b.world_rank
+                ));
+            }
+        }
+        for l in &self.links {
+            match (owner(l.src), owner(l.dst)) {
+                (Some(a), Some(b)) if a == b => {}
+                (Some(_), Some(_)) => {
+                    return Err(format!(
+                        "link fault {}->{} crosses two fleet jobs (jobs exchange no \
+                         solver messages)",
+                        l.src, l.dst
+                    ));
+                }
+                _ => {
+                    return Err(format!(
+                        "link fault {}->{} leaves every fleet job's rank block",
+                        l.src, l.dst
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Split a fleet-wide plan into per-job plans with job-local rank
+    /// numbering (`local = world - block.start`), in job order.  Runs
+    /// [`InjectionPlan::validate_fleet`] first, so splitting an invalid
+    /// plan is an error, never a silent drop.
+    pub fn split_fleet(
+        &self,
+        jobs: &[(String, std::ops::Range<usize>)],
+    ) -> Result<Vec<InjectionPlan>, String> {
+        self.validate_fleet(jobs)?;
+        let mut out: Vec<InjectionPlan> = jobs.iter().map(|_| InjectionPlan::none()).collect();
+        let owner = |r: usize| {
+            jobs.iter()
+                .position(|(_, range)| range.contains(&r))
+                .expect("validate_fleet covered every target")
+        };
+        for k in &self.kills {
+            let j = owner(k.world_rank);
+            let mut k = *k;
+            k.world_rank -= jobs[j].1.start;
+            out[j].kills.push(k);
+        }
+        for s in &self.stragglers {
+            let j = owner(s.world_rank);
+            let mut s = *s;
+            s.world_rank -= jobs[j].1.start;
+            out[j].stragglers.push(s);
+        }
+        for b in &self.bitflips {
+            let j = owner(b.world_rank);
+            let mut b = *b;
+            b.world_rank -= jobs[j].1.start;
+            out[j].bitflips.push(b);
+        }
+        for l in &self.links {
+            let j = owner(l.src);
+            let mut l = *l;
+            l.src -= jobs[j].1.start;
+            l.dst -= jobs[j].1.start;
+            out[j].links.push(l);
+        }
+        Ok(out)
+    }
+
+    /// Fleet campaign: `n_kills` failures **concentrated on one job** (the
+    /// breaker-escalation scenario — a failing node set keeps taking the
+    /// same job's ranks down).  Kills walk the victim job's block from its
+    /// highest rank downward, spaced one checkpoint window apart starting
+    /// mid-window after two commits, exactly like
+    /// [`InjectionPlan::exhaustion_campaign`]'s density.
+    pub fn fleet_concentrated(
+        jobs: &[(String, std::ops::Range<usize>)],
+        victim: usize,
+        n_kills: usize,
+        ckpt_interval: u64,
+    ) -> Self {
+        let block = &jobs[victim].1;
+        assert!(
+            n_kills <= block.len() / 2,
+            "concentrated fleet campaign supports at most p/2 kills in the victim job"
+        );
+        let kills = (0..n_kills)
+            .map(|i| {
+                Kill::at_iter(
+                    block.end - 1 - i,
+                    ckpt_interval * 2 + ckpt_interval / 2 + i as u64 * ckpt_interval,
+                )
+            })
+            .collect();
+        InjectionPlan { kills, ..Default::default() }
+    }
+
+    /// Fleet campaign: one failure in **every** job (uniform background
+    /// failure rate), each hitting the job's highest rank at the same
+    /// mid-window instant — the contended-pool scenario where all jobs race
+    /// for spares at once.
+    pub fn fleet_spread(
+        jobs: &[(String, std::ops::Range<usize>)],
+        ckpt_interval: u64,
+    ) -> Self {
+        let kills = jobs
+            .iter()
+            .map(|(_, block)| {
+                Kill::at_iter(block.end - 1, ckpt_interval * 2 + ckpt_interval / 2)
+            })
+            .collect();
+        InjectionPlan { kills, ..Default::default() }
+    }
+
     /// The recoverable contrast to [`InjectionPlan::same_group_burst`]: one
     /// failure in each of the first `failures` parity groups, spaced one
     /// checkpoint window apart, so every loss is covered by its group's
@@ -830,6 +985,96 @@ mod tests {
             ..Default::default()
         };
         assert!(z.validate(8, 0).unwrap_err().contains("zero bits"));
+    }
+
+    fn layout() -> Vec<(String, std::ops::Range<usize>)> {
+        vec![("alpha".to_string(), 0..8), ("beta".to_string(), 8..16)]
+    }
+
+    #[test]
+    fn validate_fleet_rejects_overlapping_job_blocks() {
+        let overlapping = vec![("alpha".to_string(), 0..8), ("beta".to_string(), 6..14)];
+        let err = InjectionPlan::none().validate_fleet(&overlapping).unwrap_err();
+        assert!(err.contains("'alpha' and 'beta' both claim world rank 6"), "{err}");
+    }
+
+    #[test]
+    fn validate_fleet_rejects_kill_outside_every_job() {
+        let plan = InjectionPlan { kills: vec![Kill::at_iter(16, 25)], ..Default::default() };
+        let err = plan.validate_fleet(&layout()).unwrap_err();
+        assert!(err.contains("rank 16"), "{err}");
+        assert!(err.contains("outside every fleet job"), "{err}");
+    }
+
+    #[test]
+    fn validate_fleet_rejects_degraded_faults_outside_every_job() {
+        let s = InjectionPlan {
+            stragglers: vec![Straggler { world_rank: 20, mult: 2.0 }],
+            ..Default::default()
+        };
+        assert!(s.validate_fleet(&layout()).unwrap_err().contains("straggler"));
+        let b = InjectionPlan {
+            bitflips: vec![BitFlip { world_rank: 20, at_version: 1, bits: 1 }],
+            ..Default::default()
+        };
+        assert!(b.validate_fleet(&layout()).unwrap_err().contains("bitflip"));
+        let l = InjectionPlan {
+            links: vec![LinkFault { src: 1, dst: 20, drops: 1 }],
+            ..Default::default()
+        };
+        assert!(l.validate_fleet(&layout()).unwrap_err().contains("leaves every fleet job"));
+    }
+
+    #[test]
+    fn validate_fleet_rejects_cross_job_links() {
+        let plan = InjectionPlan {
+            links: vec![LinkFault { src: 1, dst: 9, drops: 1 }],
+            ..Default::default()
+        };
+        let err = plan.validate_fleet(&layout()).unwrap_err();
+        assert!(err.contains("crosses two fleet jobs"), "{err}");
+    }
+
+    #[test]
+    fn split_fleet_renumbers_into_job_local_ranks() {
+        let plan = InjectionPlan {
+            kills: vec![Kill::at_iter(7, 25), Kill::at_iter(15, 40)],
+            stragglers: vec![Straggler { world_rank: 9, mult: 2.0 }],
+            links: vec![LinkFault { src: 8, dst: 10, drops: 2 }],
+            bitflips: vec![BitFlip { world_rank: 3, at_version: 1, bits: 1 }],
+        };
+        let split = plan.split_fleet(&layout()).unwrap();
+        assert_eq!(split.len(), 2);
+        assert_eq!(split[0].kills, vec![Kill::at_iter(7, 25)]);
+        assert_eq!(split[0].bitflips[0].world_rank, 3);
+        assert!(split[0].stragglers.is_empty());
+        assert_eq!(split[1].kills, vec![Kill::at_iter(7, 40)], "15 - 8 = local 7");
+        assert_eq!(split[1].stragglers[0].world_rank, 1);
+        assert_eq!((split[1].links[0].src, split[1].links[0].dst), (0, 2));
+        // Splitting an invalid plan errors instead of dropping faults.
+        let bad = InjectionPlan { kills: vec![Kill::at_iter(99, 25)], ..Default::default() };
+        assert!(bad.split_fleet(&layout()).is_err());
+    }
+
+    #[test]
+    fn fleet_concentrated_walks_the_victim_block() {
+        let plan = InjectionPlan::fleet_concentrated(&layout(), 1, 3, 10);
+        assert_eq!(plan.n_failures(), 3);
+        let ranks: Vec<_> = plan.kills.iter().map(|k| k.world_rank).collect();
+        assert_eq!(ranks, vec![15, 14, 13], "highest beta ranks downward");
+        let iters: Vec<_> = plan.kills.iter().map(|k| k.at_inner_iter).collect();
+        assert_eq!(iters, vec![25, 35, 45], "one window apart");
+        plan.validate_fleet(&layout()).unwrap();
+    }
+
+    #[test]
+    fn fleet_spread_hits_every_job_once() {
+        let plan = InjectionPlan::fleet_spread(&layout(), 10);
+        assert_eq!(plan.n_failures(), 2);
+        let ranks: Vec<_> = plan.kills.iter().map(|k| k.world_rank).collect();
+        assert_eq!(ranks, vec![7, 15]);
+        assert!(plan.kills.iter().all(|k| k.at_inner_iter == 25));
+        plan.validate_fleet(&layout()).unwrap();
     }
 
     #[test]

@@ -20,6 +20,7 @@ use std::path::Path;
 
 use crate::config::RunConfig;
 use crate::coordinator;
+use crate::coordinator::fleet::FleetReport;
 use crate::metrics::{Phase, RunReport};
 use crate::recovery::Strategy;
 
@@ -375,6 +376,181 @@ pub fn fault_table(rep: &RunReport) -> Table {
     t
 }
 
+/// Per-job outcome table of one fleet run (DESIGN.md §16): priority,
+/// deadline verdict, convergence, failure/restart counts, and the breaker
+/// trip count with the quarantine flag.  Jobs appear in spec order.
+pub fn fleet_job_table(frep: &FleetReport) -> Table {
+    let mut t = Table::new(
+        "Fleet jobs (spec order)",
+        vec![
+            "job".into(),
+            "prio".into(),
+            "tts".into(),
+            "converged".into(),
+            "iters".into(),
+            "failures".into(),
+            "global_restarts".into(),
+            "trips".into(),
+            "quarantined".into(),
+            "deadline".into(),
+            "deadline_met".into(),
+        ],
+    );
+    for j in &frep.jobs {
+        t.row(vec![
+            j.name.clone(),
+            j.priority.to_string(),
+            fmt4(j.rep.time_to_solution),
+            j.rep.converged.to_string(),
+            j.rep.iterations.to_string(),
+            j.rep.failures.to_string(),
+            j.rep.global_restarts().to_string(),
+            j.trips.to_string(),
+            j.quarantined.to_string(),
+            j.deadline.map_or_else(|| "-".into(), fmt3),
+            j.deadline_met().map_or_else(|| "-".into(), |m| m.to_string()),
+        ]);
+    }
+    t
+}
+
+/// The arbiter's full ruling ledger of one fleet run: every failure event's
+/// requested vs granted action, the verdict (granted / preempted /
+/// deferred / quarantine), the blamed holder on preemptions, the shared
+/// pool seen by the arbiter, and bandwidth-gate dependencies.
+pub fn fleet_arbitration_table(frep: &FleetReport) -> Table {
+    let mut t = Table::new(
+        "Fleet arbitrations (every ruling, arbitration order)",
+        vec![
+            "seq".into(),
+            "t_virtual".into(),
+            "job".into(),
+            "prio".into(),
+            "failed".into(),
+            "requested".into(),
+            "granted".into(),
+            "verdict".into(),
+            "preempted_by".into(),
+            "warm_free".into(),
+            "cold_free".into(),
+            "defer_s".into(),
+            "deps".into(),
+            "breaker".into(),
+            "est_cost".into(),
+        ],
+    );
+    let join = |v: &[usize]| {
+        if v.is_empty() {
+            "-".to_string()
+        } else {
+            v.iter().map(|r| r.to_string()).collect::<Vec<_>>().join("+")
+        }
+    };
+    for a in &frep.arbitrations {
+        t.row(vec![
+            a.seq.to_string(),
+            format!("{:.4}", a.at),
+            a.job_name.clone(),
+            a.priority.to_string(),
+            join(&a.failed),
+            a.requested.to_string(),
+            a.granted.to_string(),
+            a.verdict.to_string(),
+            a.preempted_by.clone().unwrap_or_else(|| "-".into()),
+            a.warm_free.to_string(),
+            a.cold_free.to_string(),
+            fmt4(a.defer_secs),
+            join(&a.deps),
+            a.breaker.to_string(),
+            fmt3(a.est_cost),
+        ]);
+    }
+    t
+}
+
+/// Shared-pool timeline of one fleet run: the [`crate::spares::PoolStatus`]
+/// the arbiter saw at each decision point, plus the post-grant view derived
+/// from the granted action (substitute leases one warm spare per failed
+/// rank, substitute-cold one cold spare; shrink and global-restart lease
+/// nothing).  A quarantine releases the victim's leases *at* the event
+/// time, so the freed capacity shows up in the next row's `warm_before`.
+pub fn pool_timeline_table(frep: &FleetReport) -> Table {
+    let mut t = Table::new(
+        "Spare-pool timeline (PoolStatus at each fleet decision point)",
+        vec![
+            "seq".into(),
+            "t_virtual".into(),
+            "job".into(),
+            "granted".into(),
+            "warm_before".into(),
+            "cold_before".into(),
+            "warm_after".into(),
+            "cold_after".into(),
+        ],
+    );
+    for a in &frep.arbitrations {
+        let (dw, dc) = match a.granted {
+            "substitute" => (a.failed.len(), 0),
+            "substitute-cold" => (0, a.failed.len()),
+            _ => (0, 0),
+        };
+        t.row(vec![
+            a.seq.to_string(),
+            format!("{:.4}", a.at),
+            a.job_name.clone(),
+            a.granted.to_string(),
+            a.warm_free.to_string(),
+            a.cold_free.to_string(),
+            a.warm_free.saturating_sub(dw).to_string(),
+            a.cold_free.saturating_sub(dc).to_string(),
+        ]);
+    }
+    t
+}
+
+/// Priority inversions of one fleet run: preemptions where the blamed
+/// lease holder has *lower* priority than the preempted requester — i.e.
+/// a low-priority job grabbed the pool first (possible under `order=fcfs`,
+/// impossible under the default priority arbitration order) and a
+/// high-priority job was demoted because of it.
+pub fn fleet_inversion_table(frep: &FleetReport) -> Table {
+    let mut t = Table::new(
+        "Priority inversions (higher-priority job demoted by a lower-priority holder)",
+        vec![
+            "seq".into(),
+            "t_virtual".into(),
+            "victim".into(),
+            "victim_prio".into(),
+            "holder".into(),
+            "holder_prio".into(),
+            "requested".into(),
+            "fell_back_to".into(),
+        ],
+    );
+    let prio_of = |name: &str| frep.jobs.iter().find(|j| j.name == name).map(|j| j.priority);
+    for a in &frep.arbitrations {
+        if a.verdict != "preempted" {
+            continue;
+        }
+        let Some(holder) = &a.preempted_by else { continue };
+        let Some(hp) = prio_of(holder) else { continue };
+        if hp >= a.priority {
+            continue;
+        }
+        t.row(vec![
+            a.seq.to_string(),
+            format!("{:.4}", a.at),
+            a.job_name.clone(),
+            a.priority.to_string(),
+            holder.clone(),
+            hp.to_string(),
+            a.requested.to_string(),
+            a.granted.to_string(),
+        ]);
+    }
+    t
+}
+
 /// Cross-rank per-phase distribution (p50/p95/max over surviving ranks) of
 /// one run, from [`RunReport::phase_dist`].
 pub fn phase_dist_table(rep: &RunReport) -> Table {
@@ -528,6 +704,111 @@ mod tests {
         assert_eq!(pd.rows.len(), 7);
         assert_eq!(pd.rows[0][0], "compute");
         assert_eq!(pd.rows[6][0], "idle");
+    }
+
+    #[test]
+    fn fleet_tables_project_jobs_pool_and_inversions() {
+        use crate::coordinator::fleet::JobReport;
+        use crate::metrics::{PhaseTimers, RankReport};
+        use crate::recovery::fleet::ArbitrationRecord;
+        let rep = |tts: f64| {
+            RunReport::from_ranks(
+                vec![RankReport {
+                    world_rank: 0,
+                    finish_time: tts,
+                    phases: PhaseTimers::default(),
+                    iterations: 40,
+                    killed: false,
+                    was_spare: false,
+                    decisions: Vec::new(),
+                    ckpt: Vec::new(),
+                    recovery_retries: 0,
+                    faults: Default::default(),
+                    trace: Vec::new(),
+                }],
+                1e-9,
+                true,
+                1,
+            )
+        };
+        let jobs = vec![
+            JobReport {
+                name: "alpha".into(),
+                priority: 5,
+                deadline: Some(10.0),
+                quarantined: false,
+                trips: 0,
+                rep: rep(2.0),
+            },
+            JobReport {
+                name: "beta".into(),
+                priority: 1,
+                deadline: None,
+                quarantined: false,
+                trips: 0,
+                rep: rep(3.0),
+            },
+        ];
+        let arb = |seq, job: usize, verdict: &'static str| ArbitrationRecord {
+            seq,
+            job,
+            job_name: jobs[job].name.clone(),
+            priority: jobs[job].priority,
+            at: 1.0 + seq as f64,
+            failed: vec![3],
+            requested: "substitute",
+            granted: if verdict == "preempted" { "shrink" } else { "substitute" },
+            verdict,
+            preempted_by: (verdict == "preempted").then(|| "beta".to_string()),
+            warm_free: 1 - seq.min(1),
+            cold_free: 0,
+            defer_secs: 0.0,
+            deps: Vec::new(),
+            breaker: "closed",
+            est_cost: 0.5,
+        };
+        let arbitrations = vec![arb(0, 1, "granted"), arb(1, 0, "preempted")];
+        let frep = FleetReport {
+            jobs,
+            plans: Vec::new(),
+            arbitrations,
+            warm_total: 1,
+            cold_total: 0,
+            bandwidth: 2,
+            order: "fcfs",
+            makespan: 3.0,
+            preemptions: 1,
+            deferrals: 0,
+            quarantines: 0,
+        };
+
+        let jt = fleet_job_table(&frep);
+        assert_eq!(jt.rows.len(), 2);
+        assert_eq!(jt.rows[0][0], "alpha");
+        assert_eq!(jt.rows[0][10], "true", "tts 2.0 beats the 10.0 deadline");
+        assert_eq!(jt.rows[1][10], "-", "no deadline -> no verdict");
+
+        let at = fleet_arbitration_table(&frep);
+        assert_eq!(at.rows.len(), 2);
+        assert_eq!(at.rows[1][7], "preempted");
+        assert_eq!(at.rows[1][8], "beta");
+        assert_eq!(at.rows[0][8], "-");
+
+        // Pool timeline: the granted substitute consumes the last warm
+        // spare; the preempted shrink consumes nothing.
+        let pt = pool_timeline_table(&frep);
+        assert_eq!(pt.rows[0][4], "1");
+        assert_eq!(pt.rows[0][6], "0");
+        assert_eq!(pt.rows[1][4], "0");
+        assert_eq!(pt.rows[1][6], "0");
+
+        // Inversion: alpha (prio 5) was demoted because beta (prio 1)
+        // held the pool — exactly one row.
+        let it = fleet_inversion_table(&frep);
+        assert_eq!(it.rows.len(), 1);
+        assert_eq!(it.rows[0][2], "alpha");
+        assert_eq!(it.rows[0][4], "beta");
+        assert_eq!(it.rows[0][7], "shrink");
     }
 
     #[test]

@@ -79,11 +79,26 @@
 //! and overlap-efficiency, and `tools/trace_report.py PATH` reproduces the
 //! phase table from the file.  Traces are byte-identical across engines —
 //! see DESIGN.md §13.  `run` and `report` only.
+//!
+//! `--fleet SPEC` runs a multi-tenant job fleet over one shared spare pool
+//! instead of a single solver (shorthand for `fleet=SPEC`), e.g.
+//! `--fleet 'jobs=urgent,prio=5,p=16+batch,prio=1,p=8;warm=2;bandwidth=1'`.
+//! Jobs are `+`-separated `name[,key=value...]` entries (`prio`, `deadline`,
+//! plus any config key such as `p`, `failures` or `ckpt_scheme`); fleet-level
+//! keys are `warm`, `cold`, `bandwidth`, `breaker_k`, `breaker_w` and
+//! `order=priority|fcfs`.  Every failure is arbitrated against the shared
+//! lease-ledger pool with a per-job recovery circuit breaker (K trips in
+//! a sliding virtual-time window → quarantine + one recorded global
+//! restart); the fleet summary prints the per-job outcomes, the arbitration
+//! ledger, the spare-pool timeline and any priority inversions.  With
+//! `--trace PATH` the Perfetto JSON gets one process (pid) per job.  See
+//! DESIGN.md §16.  `run` and `report` only.
 
 use std::path::{Path, PathBuf};
 
 use ulfm_ftgmres::config::RunConfig;
 use ulfm_ftgmres::coordinator;
+use ulfm_ftgmres::coordinator::fleet::FleetReport;
 use ulfm_ftgmres::figures::{Campaign, CampaignCfg};
 use ulfm_ftgmres::metrics::{Phase, RunReport};
 
@@ -91,7 +106,7 @@ fn usage() -> ! {
     eprintln!(
         "usage: ftgmres <run|report|figure4|figure5|figure6|figures> \
          [--config FILE] [--policy POLICY] [--engine threads|events] \
-         [--ckpt-scheme SCHEME] [--ckpt-delta] \
+         [--fleet SPEC] [--ckpt-scheme SCHEME] [--ckpt-delta] \
          [--ckpt-compress] [--ckpt-async on|off] \
          [--inject-phase RANK:PHASE[:N][,..]] \
          [--inject-straggler RANKxMULT[,..]] [--inject-link SRC>DST:N[,..]] \
@@ -142,6 +157,11 @@ fn parse_args() -> anyhow::Result<Args> {
             "--engine" => {
                 anyhow::ensure!(i + 1 < rest.len(), "--engine needs a value");
                 anyhow::ensure!(cfg.set("engine", &rest[i + 1])?, "engine key rejected");
+                rest.drain(i..=i + 1);
+            }
+            "--fleet" => {
+                anyhow::ensure!(i + 1 < rest.len(), "--fleet needs a spec");
+                anyhow::ensure!(cfg.set("fleet", &rest[i + 1])?, "fleet key rejected");
                 rest.drain(i..=i + 1);
             }
             "--ckpt-scheme" => {
@@ -332,7 +352,45 @@ fn print_report(cfg: &RunConfig, rep: &RunReport) {
     }
 }
 
+/// Print the fleet-run summary: headline throughput/contention counters,
+/// the per-job outcome table, the arbitration ledger, the spare-pool
+/// timeline (`PoolStatus` at each decision point), and — only when any
+/// occurred — the priority-inversion table.
+fn print_fleet_report(cfg: &RunConfig, frep: &FleetReport) {
+    println!("== fleet: {:?}", cfg.summary());
+    println!(
+        "makespan = {:.4}s  throughput = {:.4} jobs/s  pool = {}w+{}c  \
+         bandwidth = {}  order = {}",
+        frep.makespan,
+        frep.throughput(),
+        frep.warm_total,
+        frep.cold_total,
+        frep.bandwidth,
+        frep.order,
+    );
+    println!(
+        "arbitrations = {}  preemptions = {}  deferrals = {}  quarantines = {}  \
+         breaker trips = {}  contention = {:.3}",
+        frep.arbitrations.len(),
+        frep.preemptions,
+        frep.deferrals,
+        frep.quarantines,
+        frep.total_trips(),
+        frep.contention_ratio(),
+    );
+    println!("\n{}", ulfm_ftgmres::figures::fleet_job_table(frep).to_text());
+    if !frep.arbitrations.is_empty() {
+        println!("{}", ulfm_ftgmres::figures::fleet_arbitration_table(frep).to_text());
+        println!("{}", ulfm_ftgmres::figures::pool_timeline_table(frep).to_text());
+        let inv = ulfm_ftgmres::figures::fleet_inversion_table(frep);
+        if !inv.rows.is_empty() {
+            println!("{}", inv.to_text());
+        }
+    }
+}
+
 fn campaign(args: &Args) -> anyhow::Result<Campaign> {
+    anyhow::ensure!(args.cfg.fleet.is_none(), "--fleet is for `run` and `report` only");
     let ccfg = if args.quick {
         CampaignCfg::quick(args.cfg.clone())
     } else {
@@ -357,9 +415,43 @@ fn write_trace(path: &Path, cfg: &RunConfig, rep: &RunReport) -> anyhow::Result<
     Ok(())
 }
 
+/// Write the Perfetto trace JSON for a finished fleet run: one process
+/// (pid) per job, one thread track per rank inside it.
+fn write_fleet_trace(path: &Path, cfg: &RunConfig, frep: &FleetReport) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, ulfm_ftgmres::trace::perfetto_json_fleet(frep, cfg))?;
+    eprintln!("wrote fleet trace {}", path.display());
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args = parse_args()?;
     match args.cmd.as_str() {
+        "run" | "report" if args.cfg.fleet.is_some() => {
+            let frep = coordinator::fleet::run_fleet(&args.cfg)?;
+            print_fleet_report(&args.cfg, &frep);
+            if let Some(p) = &args.trace {
+                write_fleet_trace(p, &args.cfg, &frep)?;
+            }
+            if args.cmd == "report" {
+                for j in &frep.jobs {
+                    println!("\nper-rank phases for job {}:", j.name);
+                    for r in &j.rep.ranks {
+                        let p = &r.phases;
+                        println!(
+                            "  rank {:4}  t={:9.4}s  iters={:5}  cmp={:.4} com={:.4} ckp={:.4} rec={:.4} cfg={:.4} rcp={:.4}  killed={} spare={}",
+                            r.world_rank, r.finish_time, r.iterations,
+                            p.compute, p.comm, p.checkpoint, p.recovery, p.reconfig, p.recompute,
+                            r.killed, r.was_spare
+                        );
+                    }
+                }
+            }
+        }
         "run" => {
             let rep = coordinator::run(&args.cfg)?;
             print_report(&args.cfg, &rep);

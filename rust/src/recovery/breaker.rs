@@ -1,0 +1,181 @@
+//! Per-job recovery circuit breaker (DESIGN.md §16).
+//!
+//! A job whose node set keeps failing burns a spare (or a redistribution)
+//! per event and can drain the whole fleet's pool.  The breaker watches the
+//! job's recovery cadence in **virtual time** and evicts repeat offenders:
+//!
+//! * `CLOSED` — recoveries are admitted normally.  When `k` recoveries land
+//!   inside one sliding `window` (seconds of virtual time, measured over
+//!   canonical event times — the max registry death time of the failed set,
+//!   never a caller's clock), the breaker **trips**.
+//! * `OPEN` — the trip itself: the job is quarantined.  Its leases are
+//!   released back to the shared pool and the event is escalated to one
+//!   recorded global restart on a fresh node set.  The trip immediately
+//!   arms the probe, so the observable resting state after a trip is
+//!   `HALF_OPEN` (OPEN is instantaneous in a simulation where the restart
+//!   executes synchronously with the decision).
+//! * `HALF_OPEN` — probation.  The next recovery event is the probe: if it
+//!   arrives within `window` of the trip, the node set is still failing and
+//!   the breaker re-trips; if a clean window has elapsed, the breaker
+//!   closes and the event is admitted as the first of a fresh count.
+//!
+//! Every transition is a pure function of `(k, window, event times)`, so
+//! breaker behavior is bit-identical across engines and reruns.
+
+/// Breaker state (the classic three-state machine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BreakerState {
+    #[default]
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+impl BreakerState {
+    pub fn name(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
+/// What the breaker says about one recovery event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerVerdict {
+    /// Proceed with ordinary arbitration.
+    Admit,
+    /// Quarantine: release the job's leases and take one recorded global
+    /// restart instead of another in-situ recovery.
+    Trip,
+}
+
+/// Sliding-window circuit breaker over one job's recovery events.
+#[derive(Debug, Clone)]
+pub struct Breaker {
+    /// Recoveries inside one window that trip the breaker.
+    pub k: usize,
+    /// Sliding window length in virtual seconds.
+    pub window: f64,
+    state: BreakerState,
+    /// Canonical event times admitted while `CLOSED` (pruned to the window).
+    events: Vec<f64>,
+    /// Trip instant of the most recent quarantine (probe reference).
+    tripped_at: Option<f64>,
+    trips: usize,
+}
+
+impl Breaker {
+    pub fn new(k: usize, window: f64) -> Breaker {
+        assert!(k >= 1, "breaker threshold must be >= 1");
+        assert!(window > 0.0, "breaker window must be positive");
+        Breaker { k, window, state: BreakerState::Closed, events: Vec::new(), tripped_at: None, trips: 0 }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// Quarantine trips so far.
+    pub fn trips(&self) -> usize {
+        self.trips
+    }
+
+    fn trip(&mut self, t: f64) -> BreakerVerdict {
+        self.trips += 1;
+        self.events.clear();
+        self.tripped_at = Some(t);
+        // OPEN is instantaneous (the quarantine restart executes with the
+        // decision); probation starts immediately.
+        self.state = BreakerState::HalfOpen;
+        BreakerVerdict::Trip
+    }
+
+    /// Feed one recovery event at canonical virtual time `t` (counted once
+    /// per failure event — fence retries of the same event must not be
+    /// re-fed).  Returns whether the event is admitted or quarantined.
+    pub fn on_recovery(&mut self, t: f64) -> BreakerVerdict {
+        match self.state {
+            BreakerState::Closed => {
+                self.events.retain(|&e| e > t - self.window);
+                self.events.push(t);
+                if self.events.len() >= self.k {
+                    self.state = BreakerState::Open;
+                    self.trip(t)
+                } else {
+                    BreakerVerdict::Admit
+                }
+            }
+            BreakerState::Open | BreakerState::HalfOpen => {
+                let since = t - self.tripped_at.unwrap_or(f64::NEG_INFINITY);
+                if since <= self.window {
+                    // Probe failed: the node set is still dying.
+                    self.state = BreakerState::Open;
+                    self.trip(t)
+                } else {
+                    // A clean window elapsed: close and admit this event as
+                    // the first of a fresh count.
+                    self.state = BreakerState::Closed;
+                    self.tripped_at = None;
+                    self.events.clear();
+                    self.events.push(t);
+                    BreakerVerdict::Admit
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trips_after_k_events_inside_the_window() {
+        let mut b = Breaker::new(3, 10.0);
+        assert_eq!(b.on_recovery(1.0), BreakerVerdict::Admit);
+        assert_eq!(b.on_recovery(2.0), BreakerVerdict::Admit);
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.on_recovery(3.0), BreakerVerdict::Trip);
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert_eq!(b.trips(), 1);
+    }
+
+    #[test]
+    fn window_slides_so_spaced_events_never_trip() {
+        let mut b = Breaker::new(2, 1.0);
+        assert_eq!(b.on_recovery(0.0), BreakerVerdict::Admit);
+        assert_eq!(b.on_recovery(5.0), BreakerVerdict::Admit);
+        assert_eq!(b.on_recovery(10.0), BreakerVerdict::Admit);
+        assert_eq!(b.trips(), 0);
+        // Two inside one window do trip.
+        assert_eq!(b.on_recovery(10.5), BreakerVerdict::Trip);
+    }
+
+    #[test]
+    fn half_open_probe_retrips_inside_the_window_and_closes_after_it() {
+        let mut b = Breaker::new(2, 5.0);
+        b.on_recovery(1.0);
+        assert_eq!(b.on_recovery(2.0), BreakerVerdict::Trip);
+        // Probe within the window of the trip: re-quarantine.
+        assert_eq!(b.on_recovery(4.0), BreakerVerdict::Trip);
+        assert_eq!(b.trips(), 2);
+        // Next probe a clean window after the second trip: closed again.
+        assert_eq!(b.on_recovery(20.0), BreakerVerdict::Admit);
+        assert_eq!(b.state(), BreakerState::Closed);
+        // The re-closed count starts fresh at the probe event.
+        assert_eq!(b.on_recovery(21.0), BreakerVerdict::Trip);
+        assert_eq!(b.trips(), 3);
+    }
+
+    #[test]
+    fn identical_event_sequences_replay_identically() {
+        let seq = [1.0, 1.5, 2.0, 9.0, 30.0, 30.1, 30.2];
+        let run = |seq: &[f64]| {
+            let mut b = Breaker::new(3, 5.0);
+            seq.iter().map(|&t| b.on_recovery(t)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(&seq), run(&seq));
+    }
+}

@@ -1,0 +1,558 @@
+//! Fleet-level recovery arbitration (DESIGN.md §16).
+//!
+//! When a run belongs to a multi-tenant fleet ([`crate::coordinator::fleet`]),
+//! every failure event stops being a private policy evaluation and becomes a
+//! **[`RecoveryPlan`]** submitted to the shared arbiter: the action the
+//! job's own policy would take with its local view, a cost estimate from the
+//! same model the `cost-min` policy prices with, the job's priority, and
+//! dependencies on other jobs' in-flight recoveries.  The arbiter ranks
+//! plans deterministically and answers with the action the *fleet* can
+//! afford:
+//!
+//! * a substitution is granted only if the shared [`LeaseLedger`] has a free
+//!   slot at the event's canonical time — capacity already leased to
+//!   earlier-arbitrated (higher-ranked) jobs **preempts** the request and
+//!   forces the loser into degraded shrink, recorded as a `fleet-preempt`
+//!   [`crate::metrics::DecisionRecord`] reason plus an
+//!   [`ArbitrationRecord`];
+//! * recoveries beyond the machine's recovery `bandwidth` are **deferred**:
+//!   the event waits (in virtual time, charged to the Recovery phase) until
+//!   enough earlier windows drain, and the plan records those windows as
+//!   its dependencies;
+//! * a job tripping its [`Breaker`] is **quarantined**: its leases are
+//!   released back to the pool and the event escalates to one recorded
+//!   global restart instead of burning more shared capacity.
+//!
+//! Consistency contract (the fleet extension of [`super::policy`]'s rules):
+//! every input is either static fleet configuration, the liveness registry
+//! (canonical event time = max death time over the failed set — never a
+//! caller's clock, which is skewed by detection latency), or ledger state
+//! produced by earlier deterministic arbitrations.  Answers are cached per
+//! `(job, failed-set)` so every survivor — and every fence retry — of one
+//! event observes the identical verdict, and the whole fleet digest is
+//! bit-identical across `--engine threads|events` and across reruns.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::backend::costs;
+use crate::netsim::{ComputeModel, NetParams};
+use crate::recovery::breaker::{Breaker, BreakerState, BreakerVerdict};
+use crate::recovery::global_restart::GlobalCrModel;
+use crate::recovery::policy::{self, Decision, PolicyInputs, PolicyKind};
+use crate::spares::{LeaseLedger, PoolStatus};
+
+/// One job's requested recovery for one failure event, as submitted to the
+/// arbiter (the ClusterSentry-shaped plan: action, cost, priority,
+/// dependencies).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveryPlan {
+    /// Arbiter-assigned id (submission order).
+    pub id: usize,
+    /// Index of the submitting job in the fleet spec.
+    pub job: usize,
+    /// Canonical event time (max registry death time over `failed`).
+    pub at: f64,
+    /// Failed world ranks of the event (job-local numbering).
+    pub failed: Vec<usize>,
+    /// What the job's own policy wanted with its local pool view.
+    pub requested: Decision,
+    /// What the arbiter granted with the fleet pool view.
+    pub granted: Decision,
+    /// Modeled seconds the granted recovery will take.
+    pub est_cost: f64,
+    /// Submitting job's priority (1 lowest .. 5 highest).
+    pub priority: u8,
+    /// Ids of other jobs' in-flight recovery plans this one waited on.
+    pub dependencies: Vec<usize>,
+}
+
+/// The arbiter's ruling on one plan, for the fleet report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArbitrationRecord {
+    /// Ruling order (== plan id).
+    pub seq: usize,
+    pub job: usize,
+    pub job_name: String,
+    pub priority: u8,
+    /// Canonical event time.
+    pub at: f64,
+    pub failed: Vec<usize>,
+    /// Requested / granted action names.
+    pub requested: &'static str,
+    pub granted: &'static str,
+    /// `granted`, `preempted`, `deferred` or `quarantine`.
+    pub verdict: &'static str,
+    /// Name of the lease-holding job blamed for a preemption.
+    pub preempted_by: Option<String>,
+    /// Fleet pool snapshot at the event time, before any new grant.
+    pub warm_free: usize,
+    pub cold_free: usize,
+    /// Virtual seconds the recovery waited on the bandwidth gate.
+    pub defer_secs: f64,
+    /// Plan ids of the in-flight recoveries waited on.
+    pub deps: Vec<usize>,
+    /// Breaker state after the event.
+    pub breaker: &'static str,
+    /// Modeled cost of the granted action.
+    pub est_cost: f64,
+}
+
+/// The answer handed back into the job's recovery path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetVerdict {
+    pub decision: Decision,
+    pub reason: String,
+    /// Extra Recovery-phase virtual time every survivor charges before the
+    /// recovery proceeds (the bandwidth gate).
+    pub defer_secs: f64,
+}
+
+/// An in-flight recovery window (for the bandwidth gate and dependencies).
+#[derive(Debug, Clone)]
+struct RecoveryWindow {
+    plan: usize,
+    job: usize,
+    failed: Vec<usize>,
+    t0: f64,
+    t1: f64,
+}
+
+/// Shared fleet arbitration state: the lease ledger, per-job breakers, the
+/// plan/ruling logs, and the per-event verdict cache.
+#[derive(Debug)]
+pub struct FleetState {
+    pub ledger: LeaseLedger,
+    /// Max concurrent machine-wide recoveries before deferral.
+    pub bandwidth: usize,
+    names: Vec<String>,
+    prios: Vec<u8>,
+    breakers: Vec<Breaker>,
+    plans: Vec<RecoveryPlan>,
+    records: Vec<ArbitrationRecord>,
+    verdicts: BTreeMap<(usize, Vec<usize>), FleetVerdict>,
+    /// Open leases per event, for rollback when a nested failure grows the
+    /// failed set and the event re-arbitrates on the union.
+    event_leases: Vec<(usize, Vec<usize>, usize)>,
+    windows: Vec<RecoveryWindow>,
+}
+
+impl FleetState {
+    /// `jobs` is `(name, priority)` per job, in fleet-spec order.
+    pub fn new(
+        warm: usize,
+        cold: usize,
+        bandwidth: usize,
+        breaker_k: usize,
+        breaker_window: f64,
+        jobs: &[(String, u8)],
+    ) -> FleetState {
+        FleetState {
+            ledger: LeaseLedger::new(warm, cold),
+            bandwidth: bandwidth.max(1),
+            names: jobs.iter().map(|(n, _)| n.clone()).collect(),
+            prios: jobs.iter().map(|&(_, p)| p).collect(),
+            breakers: jobs.iter().map(|_| Breaker::new(breaker_k, breaker_window)).collect(),
+            plans: Vec::new(),
+            records: Vec::new(),
+            verdicts: BTreeMap::new(),
+            event_leases: Vec::new(),
+            windows: Vec::new(),
+        }
+    }
+
+    /// Close `job`'s open leases (finish or quarantine) at `t_end`.
+    pub fn close_job(&mut self, job: usize, t_end: f64) {
+        self.ledger.close_job(job, t_end);
+    }
+
+    pub fn plans(&self) -> &[RecoveryPlan] {
+        &self.plans
+    }
+
+    pub fn records(&self) -> &[ArbitrationRecord] {
+        &self.records
+    }
+
+    /// Breaker trip count for one job.
+    pub fn trips(&self, job: usize) -> usize {
+        self.breakers[job].trips()
+    }
+
+    pub fn breaker_state(&self, job: usize) -> BreakerState {
+        self.breakers[job].state()
+    }
+
+    /// Rulings that denied a substitution because another job held the
+    /// capacity.
+    pub fn preemptions(&self) -> usize {
+        self.records.iter().filter(|r| r.verdict == "preempted").count()
+    }
+
+    /// Rulings that waited on the recovery-bandwidth gate.
+    pub fn deferrals(&self) -> usize {
+        self.records.iter().filter(|r| r.defer_secs > 0.0).count()
+    }
+
+    pub fn quarantines(&self) -> usize {
+        self.records.iter().filter(|r| r.verdict == "quarantine").count()
+    }
+
+    /// Drop grants belonging to abandoned attempts of the same event: a
+    /// nested failure grew the failed set, so any lease opened for a strict
+    /// subset of it (same job) never materialized.
+    fn rollback_subsumed(&mut self, job: usize, failed: &[usize]) {
+        let subsumed = |old: &[usize]| {
+            old.len() < failed.len() && old.iter().all(|r| failed.contains(r))
+        };
+        let mut dropped: Vec<usize> = Vec::new();
+        self.event_leases.retain(|(j, old, lease)| {
+            if *j == job && subsumed(old) {
+                dropped.push(*lease);
+                false
+            } else {
+                true
+            }
+        });
+        for id in dropped {
+            self.ledger.rescind(id);
+        }
+        self.windows.retain(|w| !(w.job == job && subsumed(&w.failed)));
+    }
+}
+
+/// One job's handle on the shared arbiter, carried inside its
+/// [`crate::config::RunConfig`] by the fleet driver.
+#[derive(Debug, Clone)]
+pub struct FleetSeat {
+    /// Index of this job in the fleet spec.
+    pub job: usize,
+    /// Job name (fleet-unique).
+    pub name: String,
+    /// Priority, 1 (lowest) ..= 5 (highest).
+    pub priority: u8,
+    pub state: Arc<Mutex<FleetState>>,
+}
+
+/// Arbitrate one failure event for the seated job.  Called by
+/// [`super::choose_recovery`] in place of the private policy evaluation;
+/// idempotent per `(job, failed-set)` so every survivor and every fence
+/// retry of the event observes the identical verdict.
+pub fn arbitrate(
+    seat: &FleetSeat,
+    kind: PolicyKind,
+    failed: &[usize],
+    inputs: &PolicyInputs,
+    host: &ComputeModel,
+    net: &NetParams,
+    t_event: f64,
+) -> FleetVerdict {
+    let mut failed_sorted = failed.to_vec();
+    failed_sorted.sort_unstable();
+    let key = (seat.job, failed_sorted.clone());
+    let mut st = seat.state.lock().unwrap();
+    if let Some(v) = st.verdicts.get(&key) {
+        return v.clone();
+    }
+    st.rollback_subsumed(seat.job, &failed_sorted);
+    let pool_before = st.ledger.status_at(t_event);
+    let seq = st.plans.len();
+
+    // Breaker first: a quarantined event never competes for shared capacity.
+    if st.breakers[seat.job].on_recovery(t_event) == BreakerVerdict::Trip {
+        let (k, w) = (st.breakers[seat.job].k, st.breakers[seat.job].window);
+        st.ledger.close_job(seat.job, t_event);
+        let reason = format!(
+            "breaker-open: job {} hit {k} recoveries inside a {w:.3}s window; \
+             quarantined — leases released, one global restart on a fresh node set",
+            seat.name
+        );
+        let breaker = st.breakers[seat.job].state().name();
+        st.plans.push(RecoveryPlan {
+            id: seq,
+            job: seat.job,
+            at: t_event,
+            failed: failed_sorted.clone(),
+            requested: Decision::GlobalRestart,
+            granted: Decision::GlobalRestart,
+            est_cost: 0.0,
+            priority: seat.priority,
+            dependencies: Vec::new(),
+        });
+        st.records.push(ArbitrationRecord {
+            seq,
+            job: seat.job,
+            job_name: seat.name.clone(),
+            priority: seat.priority,
+            at: t_event,
+            failed: failed_sorted,
+            requested: Decision::GlobalRestart.name(),
+            granted: Decision::GlobalRestart.name(),
+            verdict: "quarantine",
+            preempted_by: None,
+            warm_free: pool_before.warm_free,
+            cold_free: pool_before.cold_free,
+            defer_secs: 0.0,
+            deps: Vec::new(),
+            breaker,
+            est_cost: 0.0,
+        });
+        let v = FleetVerdict { decision: Decision::GlobalRestart, reason, defer_secs: 0.0 };
+        st.verdicts.insert(key, v.clone());
+        return v;
+    }
+
+    // What the job's own policy wants with its local pool view...
+    let (requested, _) = policy::decide(kind, inputs, host, net);
+    // ...versus what the fleet can afford: clamp the pool to the shared
+    // ledger's free capacity at the event instant.
+    let mut fleet_inputs = *inputs;
+    fleet_inputs.pool = PoolStatus {
+        warm_free: inputs.pool.warm_free.min(pool_before.warm_free),
+        cold_free: inputs.pool.cold_free.min(pool_before.cold_free),
+    };
+    let (granted, why) = policy::decide(kind, &fleet_inputs, host, net);
+
+    let est = costs::recovery_estimates(host, net, &GlobalCrModel::default(), &inputs.cost);
+    let est_cost = match granted {
+        Decision::Substitute => est.substitute,
+        Decision::SubstituteCold => est.substitute_cold,
+        Decision::Shrink => est.shrink,
+        Decision::GlobalRestart => est.global_restart,
+    };
+
+    // Bandwidth gate: recoveries of *other* jobs still in flight at the
+    // event instant.  Beyond the budget, this one waits for the earliest
+    // windows to drain; all overlapping windows become dependencies.
+    let mut overlapping: Vec<(usize, f64)> = st
+        .windows
+        .iter()
+        .filter(|wnd| wnd.job != seat.job && wnd.t0 <= t_event && t_event < wnd.t1)
+        .map(|wnd| (wnd.plan, wnd.t1))
+        .collect();
+    overlapping.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+    let deps: Vec<usize> = overlapping.iter().map(|&(p, _)| p).collect();
+    let defer_secs = if overlapping.len() >= st.bandwidth {
+        let gate = overlapping[overlapping.len() - st.bandwidth].1;
+        (gate - t_event).max(0.0)
+    } else {
+        0.0
+    };
+
+    // Classify the ruling and assemble the reason every survivor records.
+    let demoted_sub = matches!(requested, Decision::Substitute | Decision::SubstituteCold)
+        && granted != requested;
+    let (verdict, preempted_by, reason) = if demoted_sub {
+        let holders = st.ledger.warm_holders_at(t_event);
+        let blame = holders
+            .iter()
+            .filter(|&&(j, _)| j != seat.job)
+            .max_by_key(|&&(j, _)| (st.prios[j], std::cmp::Reverse(j)))
+            .map(|&(j, _)| (st.names[j].clone(), st.prios[j]));
+        let who = match &blame {
+            Some((name, prio)) => format!("job {name} (prio {prio})"),
+            None => "the shared pool".to_string(),
+        };
+        let reason = format!(
+            "fleet-preempt: {} denied (warm {}/{} cold {}/{} leased to {who}); {why}",
+            requested.name(),
+            pool_before.warm_free,
+            st.ledger.warm_total,
+            pool_before.cold_free,
+            st.ledger.cold_total,
+        );
+        ("preempted", blame.map(|(n, _)| n), reason)
+    } else if defer_secs > 0.0 {
+        (
+            "deferred",
+            None,
+            format!(
+                "fleet-defer: {} in-flight recoveries >= bandwidth {}; waited {defer_secs:.6}s; {why}",
+                overlapping.len(),
+                st.bandwidth
+            ),
+        )
+    } else {
+        ("granted", None, format!("fleet: {why}"))
+    };
+
+    // Grant the lease for a substitution out of the shared pool.
+    match granted {
+        Decision::Substitute => {
+            let id = st.ledger.grant(seat.job, true, inputs.n_failed, t_event);
+            st.event_leases.push((seat.job, failed_sorted.clone(), id));
+        }
+        Decision::SubstituteCold => {
+            let id = st.ledger.grant(seat.job, false, inputs.n_failed, t_event);
+            st.event_leases.push((seat.job, failed_sorted.clone(), id));
+        }
+        Decision::Shrink | Decision::GlobalRestart => {}
+    }
+
+    let t0 = t_event + defer_secs;
+    st.windows.push(RecoveryWindow {
+        plan: seq,
+        job: seat.job,
+        failed: failed_sorted.clone(),
+        t0,
+        t1: t0 + est_cost,
+    });
+    let breaker = st.breakers[seat.job].state().name();
+    st.plans.push(RecoveryPlan {
+        id: seq,
+        job: seat.job,
+        at: t_event,
+        failed: failed_sorted.clone(),
+        requested,
+        granted,
+        est_cost,
+        priority: seat.priority,
+        dependencies: deps.clone(),
+    });
+    st.records.push(ArbitrationRecord {
+        seq,
+        job: seat.job,
+        job_name: seat.name.clone(),
+        priority: seat.priority,
+        at: t_event,
+        failed: failed_sorted,
+        requested: requested.name(),
+        granted: granted.name(),
+        verdict,
+        preempted_by,
+        warm_free: pool_before.warm_free,
+        cold_free: pool_before.cold_free,
+        defer_secs,
+        deps,
+        breaker,
+        est_cost,
+    });
+    let v = FleetVerdict { decision: granted, reason, defer_secs };
+    st.verdicts.insert(key, v.clone());
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::costs::{ParityShape, RecoveryCostInputs};
+
+    fn state(warm: usize, bandwidth: usize, k: usize, w: f64) -> Arc<Mutex<FleetState>> {
+        Arc::new(Mutex::new(FleetState::new(
+            warm,
+            0,
+            bandwidth,
+            k,
+            w,
+            &[("alpha".to_string(), 5), ("beta".to_string(), 1)],
+        )))
+    }
+
+    fn seat(state: &Arc<Mutex<FleetState>>, job: usize, name: &str, prio: u8) -> FleetSeat {
+        FleetSeat { job, name: name.to_string(), priority: prio, state: state.clone() }
+    }
+
+    fn inputs(warm_local: usize) -> PolicyInputs {
+        PolicyInputs {
+            n_failed: 1,
+            survivors: 7,
+            pool: PoolStatus { warm_free: warm_local, cold_free: 0 },
+            cost: RecoveryCostInputs {
+                rows_per_rank: 256,
+                basis_vecs: 41,
+                n_failed: 1,
+                survivors: 7,
+                buddy_k: 1,
+                horizon_iters: 50,
+                m_inner: 10,
+                parity: ParityShape::Mirror,
+            },
+            failures_so_far: 1,
+            event_seq: 0,
+        }
+    }
+
+    #[test]
+    fn last_warm_slot_preempts_the_later_arbitrated_job() {
+        let st = state(1, 4, 10, 100.0);
+        let host = ComputeModel::default();
+        let net = NetParams::default();
+        let a = seat(&st, 0, "alpha", 5);
+        let b = seat(&st, 1, "beta", 1);
+        let va = arbitrate(&a, PolicyKind::SparesFirst, &[3], &inputs(1), &host, &net, 1.0);
+        assert_eq!(va.decision, Decision::Substitute);
+        // Beta's event overlaps alpha's open lease: denied, degraded shrink.
+        let vb = arbitrate(&b, PolicyKind::SparesFirst, &[2], &inputs(1), &host, &net, 1.5);
+        assert_eq!(vb.decision, Decision::Shrink);
+        assert!(vb.reason.contains("fleet-preempt"), "{}", vb.reason);
+        assert!(vb.reason.contains("alpha"), "{}", vb.reason);
+        let st = st.lock().unwrap();
+        assert_eq!(st.preemptions(), 1);
+        assert_eq!(st.records()[1].verdict, "preempted");
+        assert_eq!(st.records()[1].preempted_by.as_deref(), Some("alpha"));
+    }
+
+    #[test]
+    fn verdicts_are_cached_per_event_and_rescinded_on_union_retry() {
+        let st = state(2, 4, 10, 100.0);
+        let host = ComputeModel::default();
+        let net = NetParams::default();
+        let a = seat(&st, 0, "alpha", 5);
+        let v1 = arbitrate(&a, PolicyKind::SparesFirst, &[3], &inputs(2), &host, &net, 1.0);
+        let v2 = arbitrate(&a, PolicyKind::SparesFirst, &[3], &inputs(2), &host, &net, 1.0);
+        assert_eq!(v1, v2, "survivors and retries observe one verdict");
+        assert_eq!(st.lock().unwrap().records().len(), 1);
+        // Nested failure grows the set: the subset grant is rolled back and
+        // the union re-arbitrated as a fresh plan.
+        let mut inp = inputs(2);
+        inp.n_failed = 2;
+        inp.cost.n_failed = 2;
+        let v3 = arbitrate(&a, PolicyKind::SparesFirst, &[3, 5], &inp, &host, &net, 2.0);
+        assert_eq!(v3.decision, Decision::Substitute);
+        let st = st.lock().unwrap();
+        assert_eq!(st.records().len(), 2);
+        // Only the union lease survives: 2 slots of 2 leased.
+        assert_eq!(st.ledger.warm_free_at(2.0), 0);
+        assert_eq!(st.ledger.leases().len(), 1);
+    }
+
+    #[test]
+    fn breaker_trip_quarantines_and_releases_leases() {
+        let st = state(2, 4, 2, 1000.0);
+        let host = ComputeModel::default();
+        let net = NetParams::default();
+        let a = seat(&st, 0, "alpha", 5);
+        let v1 = arbitrate(&a, PolicyKind::SparesFirst, &[3], &inputs(2), &host, &net, 1.0);
+        assert_eq!(v1.decision, Decision::Substitute);
+        let v2 = arbitrate(&a, PolicyKind::SparesFirst, &[5], &inputs(2), &host, &net, 2.0);
+        assert_eq!(v2.decision, Decision::GlobalRestart);
+        assert!(v2.reason.contains("breaker-open"), "{}", v2.reason);
+        let st = st.lock().unwrap();
+        assert_eq!(st.trips(0), 1);
+        assert_eq!(st.quarantines(), 1);
+        assert_eq!(st.breaker_state(0), BreakerState::HalfOpen);
+        // The lease from the first event was released at the trip instant.
+        assert_eq!(st.ledger.warm_free_at(2.0), 2);
+    }
+
+    #[test]
+    fn bandwidth_gate_defers_and_records_dependencies() {
+        let st = state(8, 1, 10, 1000.0);
+        let host = ComputeModel::default();
+        let net = NetParams::default();
+        let a = seat(&st, 0, "alpha", 5);
+        let b = seat(&st, 1, "beta", 1);
+        let mut inp = inputs(8);
+        inp.pool.warm_free = 8;
+        let _ = arbitrate(&a, PolicyKind::SparesFirst, &[3], &inp, &host, &net, 1.0);
+        let est = st.lock().unwrap().plans()[0].est_cost;
+        assert!(est > 0.0);
+        // Beta's event lands inside alpha's recovery window.
+        let vb = arbitrate(&b, PolicyKind::SparesFirst, &[2], &inp, &host, &net, 1.0 + est / 2.0);
+        assert!(vb.defer_secs > 0.0, "bandwidth 1 must defer the overlap");
+        assert!(vb.reason.contains("fleet-defer"), "{}", vb.reason);
+        let st = st.lock().unwrap();
+        assert_eq!(st.deferrals(), 1);
+        assert_eq!(st.plans()[1].dependencies, vec![0]);
+    }
+}

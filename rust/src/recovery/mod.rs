@@ -24,7 +24,9 @@
 //! `GlobalRestart` branch rebuilds the problem from scratch on the
 //! survivors instead of wedging on a checkpoint that no longer exists.
 
+pub mod breaker;
 pub mod degraded;
+pub mod fleet;
 pub mod global_restart;
 pub mod plan;
 pub mod policy;
@@ -381,7 +383,38 @@ async fn choose_recovery(
                     failures_so_far: ctx.world.dead_set().len(),
                     event_seq: ctx.decisions.len(),
                 };
-                let (d, mut why) = policy::decide(cfg.policy(), &inputs, &cfg.compute, &cfg.net);
+                let (d, mut why) = match &cfg.fleet_seat {
+                    Some(seat) => {
+                        // Fleet runs route the event through the shared
+                        // arbiter (DESIGN.md §16) instead of the private
+                        // policy evaluation.  The canonical event time is
+                        // the max registry death time over the failed set —
+                        // engine-invariant, unlike this survivor's clock,
+                        // which is skewed by its own detection latency.
+                        let t_event = failed
+                            .iter()
+                            .filter_map(|&wr| ctx.world.death_time(wr))
+                            .fold(0.0f64, f64::max);
+                        let v = fleet::arbitrate(
+                            seat,
+                            cfg.policy(),
+                            &failed,
+                            &inputs,
+                            &cfg.compute,
+                            &cfg.net,
+                            t_event,
+                        );
+                        if v.defer_secs > 0.0 {
+                            // Bandwidth gate: wait out the deferral in
+                            // virtual time before the recovery proceeds.
+                            let prev = ctx.set_phase(Phase::Recovery);
+                            ctx.advance(v.defer_secs);
+                            ctx.set_phase(prev);
+                        }
+                        (v.decision, v.reason)
+                    }
+                    None => policy::decide(cfg.policy(), &inputs, &cfg.compute, &cfg.net),
+                };
                 if cost_min {
                     let src = if dynamic { "leader-agreed" } else { "pinned prior" };
                     why.push_str(&format!(" horizon={horizon} ({src})"));

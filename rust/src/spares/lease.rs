@@ -1,0 +1,187 @@
+//! Multi-tenant spare-pool lease ledger (DESIGN.md §16).
+//!
+//! A fleet of jobs shares one machine-wide spare pool.  Each substitution a
+//! job is granted becomes a **lease**: an interval in virtual time during
+//! which that many warm (or cold) slots are charged against the shared
+//! capacity.  A lease opens at the failure event's canonical time and stays
+//! open (`t1 = ∞`) until the fleet driver closes it — at the job's finish
+//! time, or at its quarantine trip time when the circuit breaker evicts the
+//! job and its slots return to the pool early.
+//!
+//! Availability is a pure function of the ledger and the query instant:
+//! `warm_free_at(t)` is the total capacity minus every warm lease whose
+//! interval covers `t`.  Because fleet jobs are arbitrated in a fixed
+//! deterministic order and every lease timestamp is virtual, the ledger's
+//! answers are identical across `--engine threads|events` and across reruns
+//! — the same consistency contract as [`super::SparePool::status`], lifted
+//! from one job's registry to the whole fleet's timeline.
+
+use crate::spares::PoolStatus;
+
+/// One granted spare reservation in fleet virtual time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Lease {
+    /// Ledger-assigned id (position in grant order).
+    pub id: usize,
+    /// Index of the holding job in the fleet spec.
+    pub job: usize,
+    /// Warm lease (`true`) or cold-slot lease (`false`).
+    pub warm: bool,
+    /// Slots reserved (one per substituted rank).
+    pub n: usize,
+    /// Grant instant — the failure event's canonical virtual time.
+    pub t0: f64,
+    /// Release instant; `f64::INFINITY` while the lease is open.
+    pub t1: f64,
+}
+
+impl Lease {
+    /// Does this lease charge capacity at instant `t`?
+    pub fn covers(&self, t: f64) -> bool {
+        self.t0 <= t && t < self.t1
+    }
+}
+
+/// The fleet-wide ledger: shared capacity plus every lease ever granted.
+#[derive(Debug, Clone, Default)]
+pub struct LeaseLedger {
+    /// Machine-wide warm spare capacity.
+    pub warm_total: usize,
+    /// Machine-wide cold slot capacity.
+    pub cold_total: usize,
+    leases: Vec<Lease>,
+}
+
+impl LeaseLedger {
+    pub fn new(warm_total: usize, cold_total: usize) -> LeaseLedger {
+        LeaseLedger { warm_total, cold_total, leases: Vec::new() }
+    }
+
+    /// Warm slots charged against the pool at instant `t`.
+    fn warm_held_at(&self, t: f64) -> usize {
+        self.leases.iter().filter(|l| l.warm && l.covers(t)).map(|l| l.n).sum()
+    }
+
+    fn cold_held_at(&self, t: f64) -> usize {
+        self.leases.iter().filter(|l| !l.warm && l.covers(t)).map(|l| l.n).sum()
+    }
+
+    /// Free warm slots at instant `t`.
+    pub fn warm_free_at(&self, t: f64) -> usize {
+        self.warm_total.saturating_sub(self.warm_held_at(t))
+    }
+
+    /// Free cold slots at instant `t`.
+    pub fn cold_free_at(&self, t: f64) -> usize {
+        self.cold_total.saturating_sub(self.cold_held_at(t))
+    }
+
+    /// Fleet-level pool snapshot at instant `t` (the multi-tenant analogue
+    /// of [`super::SparePool::status`]).
+    pub fn status_at(&self, t: f64) -> PoolStatus {
+        PoolStatus { warm_free: self.warm_free_at(t), cold_free: self.cold_free_at(t) }
+    }
+
+    /// Open a lease of `n` slots for `job` at instant `t`.  The caller must
+    /// have checked availability; granting beyond capacity is a logic error.
+    pub fn grant(&mut self, job: usize, warm: bool, n: usize, t: f64) -> usize {
+        debug_assert!(
+            n <= if warm { self.warm_free_at(t) } else { self.cold_free_at(t) },
+            "lease over-grant: {n} slots requested, pool exhausted at t={t}"
+        );
+        let id = self.leases.len();
+        self.leases.push(Lease { id, job, warm, n, t0: t, t1: f64::INFINITY });
+        id
+    }
+
+    /// Drop an open lease entirely (an abandoned recovery attempt whose
+    /// grant never materialized — e.g. the failure set grew and the event
+    /// re-arbitrated on the union).
+    pub fn rescind(&mut self, id: usize) {
+        self.leases.retain(|l| l.id != id);
+    }
+
+    /// Close every open lease held by `job` at instant `t_end` (job finish
+    /// or quarantine trip): its slots return to the shared pool for any
+    /// event arbitrated at a later instant.
+    pub fn close_job(&mut self, job: usize, t_end: f64) {
+        for l in &mut self.leases {
+            if l.job == job && l.t1.is_infinite() {
+                l.t1 = t_end.max(l.t0);
+            }
+        }
+    }
+
+    /// Jobs holding at least one warm lease covering instant `t`, with slot
+    /// counts — the preemption-blame view the arbiter reports when a
+    /// request is denied.
+    pub fn warm_holders_at(&self, t: f64) -> Vec<(usize, usize)> {
+        let mut out: Vec<(usize, usize)> = Vec::new();
+        for l in self.leases.iter().filter(|l| l.warm && l.covers(t)) {
+            match out.iter_mut().find(|(j, _)| *j == l.job) {
+                Some((_, n)) => *n += l.n,
+                None => out.push((l.job, l.n)),
+            }
+        }
+        out
+    }
+
+    /// All leases, in grant order.
+    pub fn leases(&self) -> &[Lease] {
+        &self.leases
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overlapping_leases_deplete_capacity_only_inside_their_window() {
+        let mut led = LeaseLedger::new(2, 1);
+        assert_eq!(led.warm_free_at(0.0), 2);
+        let a = led.grant(0, true, 1, 1.0);
+        assert_eq!(led.warm_free_at(0.5), 2, "before the grant instant");
+        assert_eq!(led.warm_free_at(1.0), 1, "grant instant is inclusive");
+        led.grant(1, true, 1, 2.0);
+        assert_eq!(led.warm_free_at(2.5), 0);
+        assert_eq!(led.cold_free_at(2.5), 1, "cold capacity untouched");
+        // Closing job 0 at t=3 frees its slot for later instants only.
+        led.close_job(0, 3.0);
+        assert_eq!(led.warm_free_at(2.5), 0);
+        assert_eq!(led.warm_free_at(3.0), 1, "release instant is exclusive");
+        assert_eq!(led.leases()[0].id, a);
+    }
+
+    #[test]
+    fn rescind_drops_an_abandoned_grant() {
+        let mut led = LeaseLedger::new(1, 0);
+        let id = led.grant(0, true, 1, 1.0);
+        assert_eq!(led.warm_free_at(1.0), 0);
+        led.rescind(id);
+        assert_eq!(led.warm_free_at(1.0), 1);
+        assert!(led.leases().is_empty());
+    }
+
+    #[test]
+    fn holders_aggregate_by_job_for_preemption_blame() {
+        let mut led = LeaseLedger::new(4, 0);
+        led.grant(2, true, 1, 1.0);
+        led.grant(2, true, 1, 1.5);
+        led.grant(0, true, 2, 2.0);
+        assert_eq!(led.warm_holders_at(2.0), vec![(2, 2), (0, 2)]);
+        assert_eq!(led.warm_holders_at(1.2), vec![(2, 1)]);
+        led.close_job(2, 3.0);
+        assert_eq!(led.warm_holders_at(3.5), vec![(0, 2)]);
+    }
+
+    #[test]
+    fn status_at_mirrors_the_free_counts() {
+        let mut led = LeaseLedger::new(2, 2);
+        led.grant(0, true, 1, 0.0);
+        led.grant(1, false, 2, 0.0);
+        let s = led.status_at(0.0);
+        assert_eq!(s, PoolStatus { warm_free: 1, cold_free: 0 });
+        assert_eq!(s.total_free(), 1);
+    }
+}

@@ -16,6 +16,10 @@
 //! registry is the only state they all observe consistently (the same
 //! construction [`crate::recovery::substitute::assign_spares`] relies on).
 
+pub mod lease;
+
+pub use lease::{Lease, LeaseLedger};
+
 use crate::simmpi::{World, WorldRank};
 
 /// Static layout of the spare pool for one run.

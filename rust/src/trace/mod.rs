@@ -30,7 +30,7 @@ pub mod critical_path;
 pub mod perfetto;
 
 pub use critical_path::{critical_path, CriticalPathReport, RecoveryPath};
-pub use perfetto::perfetto_json;
+pub use perfetto::{perfetto_json, perfetto_json_fleet};
 
 /// One per-rank trace record, stamped in virtual seconds.
 ///

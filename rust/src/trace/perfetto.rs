@@ -17,6 +17,7 @@
 use std::fmt::Write as _;
 
 use crate::config::RunConfig;
+use crate::coordinator::fleet::FleetReport;
 use crate::metrics::{RunReport, ALL_PHASES};
 use crate::trace::TraceEvent;
 
@@ -64,18 +65,22 @@ pub fn flow_id(src: usize, dst: usize, epoch: u64, tag: u32, arrival: f64) -> u6
     h
 }
 
-/// Render a run's traces as Chrome trace-event JSON (`--trace <path>`).
-pub fn perfetto_json(rep: &RunReport, cfg: &RunConfig) -> String {
-    let mut ev: Vec<String> = Vec::new();
+/// Append one run's rank tracks to `ev` under process `pid`: the
+/// thread-name/sort metadata plus every trace event.  `flow_salt` is XORed
+/// into every flow id so message edges never pair across jobs of a fleet
+/// trace (two symmetric jobs can produce bitwise-identical virtual-time
+/// histories); single-run traces pass `pid = 0`, `flow_salt = 0`, which
+/// leaves the emitted bytes exactly as before.
+fn push_rank_events(ev: &mut Vec<String>, pid: usize, flow_salt: u64, rep: &RunReport) {
     for r in &rep.ranks {
         let role = if r.was_spare { " (spare)" } else { "" };
         ev.push(format!(
-            "{{\"ph\":\"M\",\"pid\":0,\"tid\":{},\"name\":\"thread_name\",\
+            "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":{},\"name\":\"thread_name\",\
              \"args\":{{\"name\":\"rank {}{}\"}}}}",
             r.world_rank, r.world_rank, role
         ));
         ev.push(format!(
-            "{{\"ph\":\"M\",\"pid\":0,\"tid\":{},\"name\":\"thread_sort_index\",\
+            "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":{},\"name\":\"thread_sort_index\",\
              \"args\":{{\"sort_index\":{}}}}}",
             r.world_rank, r.world_rank
         ));
@@ -85,51 +90,51 @@ pub fn perfetto_json(rep: &RunReport, cfg: &RunConfig) -> String {
         for e in &r.trace {
             match *e {
                 TraceEvent::Span { phase, t0, t1 } => ev.push(format!(
-                    "{{\"ph\":\"X\",\"pid\":0,\"tid\":{tid},\"cat\":\"phase\",\
+                    "{{\"ph\":\"X\",\"pid\":{pid},\"tid\":{tid},\"cat\":\"phase\",\
                      \"name\":\"{}\",\"ts\":{},\"dur\":{}}}",
                     phase.name(),
                     us(t0),
                     us(t1 - t0)
                 )),
                 TraceEvent::Proto { phase, n, t } => ev.push(format!(
-                    "{{\"ph\":\"i\",\"s\":\"t\",\"pid\":0,\"tid\":{tid},\
+                    "{{\"ph\":\"i\",\"s\":\"t\",\"pid\":{pid},\"tid\":{tid},\
                      \"cat\":\"proto\",\"name\":\"{}\",\"ts\":{},\"args\":{{\"n\":{n}}}}}",
                     phase.name(),
                     us(t)
                 )),
                 TraceEvent::Iter { n, t } => ev.push(format!(
-                    "{{\"ph\":\"C\",\"pid\":0,\"tid\":{tid},\"name\":\"iters-r{tid}\",\
+                    "{{\"ph\":\"C\",\"pid\":{pid},\"tid\":{tid},\"name\":\"iters-r{tid}\",\
                      \"ts\":{},\"args\":{{\"n\":{n}}}}}",
                     us(t)
                 )),
                 TraceEvent::Send { dst, epoch, tag, bytes, t, arrival } => ev.push(format!(
-                    "{{\"ph\":\"s\",\"pid\":0,\"tid\":{tid},\"cat\":\"msg\",\
+                    "{{\"ph\":\"s\",\"pid\":{pid},\"tid\":{tid},\"cat\":\"msg\",\
                      \"name\":\"msg\",\"id\":\"0x{:016x}\",\"ts\":{},\
                      \"args\":{{\"dst\":{dst},\"epoch\":{epoch},\"tag\":{tag},\"bytes\":{bytes}}}}}",
-                    flow_id(tid, dst, epoch, tag, arrival),
+                    flow_id(tid, dst, epoch, tag, arrival) ^ flow_salt,
                     us(t)
                 )),
                 TraceEvent::Recv { src, epoch, tag, t_before, arrival, t } => ev.push(format!(
-                    "{{\"ph\":\"f\",\"bp\":\"e\",\"pid\":0,\"tid\":{tid},\"cat\":\"msg\",\
+                    "{{\"ph\":\"f\",\"bp\":\"e\",\"pid\":{pid},\"tid\":{tid},\"cat\":\"msg\",\
                      \"name\":\"msg\",\"id\":\"0x{:016x}\",\"ts\":{},\
                      \"args\":{{\"src\":{src},\"wait_us\":{}}}}}",
-                    flow_id(src, tid, epoch, tag, arrival),
+                    flow_id(src, tid, epoch, tag, arrival) ^ flow_salt,
                     us(t),
                     us((arrival - t_before).max(0.0))
                 )),
                 TraceEvent::Mark { label, arg, t } => ev.push(format!(
-                    "{{\"ph\":\"i\",\"s\":\"t\",\"pid\":0,\"tid\":{tid},\"cat\":\"mark\",\
+                    "{{\"ph\":\"i\",\"s\":\"t\",\"pid\":{pid},\"tid\":{tid},\"cat\":\"mark\",\
                      \"name\":\"{}\",\"ts\":{},\"args\":{{\"arg\":{arg}}}}}",
                     esc(label),
                     us(t)
                 )),
                 TraceEvent::RecoveryBegin { t } => ev.push(format!(
-                    "{{\"ph\":\"i\",\"s\":\"t\",\"pid\":0,\"tid\":{tid},\
+                    "{{\"ph\":\"i\",\"s\":\"t\",\"pid\":{pid},\"tid\":{tid},\
                      \"cat\":\"recovery\",\"name\":\"recovery-begin\",\"ts\":{}}}",
                     us(t)
                 )),
                 TraceEvent::RecoveryEnd { t, attempts } => ev.push(format!(
-                    "{{\"ph\":\"i\",\"s\":\"t\",\"pid\":0,\"tid\":{tid},\
+                    "{{\"ph\":\"i\",\"s\":\"t\",\"pid\":{pid},\"tid\":{tid},\
                      \"cat\":\"recovery\",\"name\":\"recovery-end\",\"ts\":{},\
                      \"args\":{{\"attempts\":{attempts}}}}}",
                     us(t)
@@ -137,6 +142,12 @@ pub fn perfetto_json(rep: &RunReport, cfg: &RunConfig) -> String {
             }
         }
     }
+}
+
+/// Render a run's traces as Chrome trace-event JSON (`--trace <path>`).
+pub fn perfetto_json(rep: &RunReport, cfg: &RunConfig) -> String {
+    let mut ev: Vec<String> = Vec::new();
+    push_rank_events(&mut ev, 0, 0, rep);
     let mut s = String::new();
     s.push_str("{\n\"displayTimeUnit\": \"ms\",\n\"otherData\": {\n");
     // Run configuration, minus the execution engine: the engine changes the
@@ -167,6 +178,54 @@ pub fn perfetto_json(rep: &RunReport, cfg: &RunConfig) -> String {
         s.push_str("}\n},\n");
     }
     s.push_str("\"trace_format\": \"ulfm-ftgmres-1\"\n},\n\"traceEvents\": [\n");
+    s.push_str(&ev.join(",\n"));
+    s.push_str("\n]\n}\n");
+    s
+}
+
+/// Render a fleet run as Chrome trace-event JSON: one process (`pid`) per
+/// job — named `"job <name> (prio <p>)"` and sorted in spec order — with
+/// the usual per-rank thread tracks inside it.  Flow ids are salted per
+/// job so message edges never pair across jobs.  Like the single-run
+/// export, the bytes are a pure function of virtual-time history and are
+/// identical across `--engine threads` and `--engine events`.
+pub fn perfetto_json_fleet(frep: &FleetReport, cfg: &RunConfig) -> String {
+    let mut ev: Vec<String> = Vec::new();
+    for (j, job) in frep.jobs.iter().enumerate() {
+        ev.push(format!(
+            "{{\"ph\":\"M\",\"pid\":{j},\"name\":\"process_name\",\
+             \"args\":{{\"name\":\"job {} (prio {})\"}}}}",
+            esc(&job.name),
+            job.priority
+        ));
+        ev.push(format!(
+            "{{\"ph\":\"M\",\"pid\":{j},\"name\":\"process_sort_index\",\
+             \"args\":{{\"sort_index\":{j}}}}}"
+        ));
+    }
+    for (j, job) in frep.jobs.iter().enumerate() {
+        // Salt by job index (odd multiplier keeps the map bijective), so
+        // symmetric jobs with bitwise-identical histories still get
+        // disjoint flow-id spaces.
+        let salt = (j as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        push_rank_events(&mut ev, j, salt, &job.rep);
+    }
+    let mut s = String::new();
+    s.push_str("{\n\"displayTimeUnit\": \"ms\",\n\"otherData\": {\n");
+    for (k, v) in cfg.summary() {
+        if k == "engine" {
+            continue;
+        }
+        let _ = writeln!(s, "\"{}\": \"{}\",", esc(k), esc(&v));
+    }
+    let _ = writeln!(s, "\"fleet_makespan_s\": {},", secs(frep.makespan));
+    let _ = writeln!(s, "\"fleet_jobs\": {},", frep.jobs.len());
+    let _ = writeln!(s, "\"fleet_arbitrations\": {},", frep.arbitrations.len());
+    let _ = writeln!(s, "\"fleet_preemptions\": {},", frep.preemptions);
+    let _ = writeln!(s, "\"fleet_deferrals\": {},", frep.deferrals);
+    let _ = writeln!(s, "\"fleet_quarantines\": {},", frep.quarantines);
+    let _ = writeln!(s, "\"fleet_breaker_trips\": {},", frep.total_trips());
+    s.push_str("\"trace_format\": \"ulfm-ftgmres-fleet-1\"\n},\n\"traceEvents\": [\n");
     s.push_str(&ev.join(",\n"));
     s.push_str("\n]\n}\n");
     s

@@ -203,6 +203,42 @@ fn engines_agree_async_phase_kills() {
     assert_eq!(rep.global_restarts(), 0);
 }
 
+/// Fleet leg (DESIGN.md §16): a two-job fleet contending for one warm
+/// spare must produce a bit-identical [`FleetReport::digest`] — per-job
+/// decision logs, the arbitration ledger, every virtual clock — and
+/// byte-identical per-job Perfetto trace exports under both engines.
+#[test]
+fn engines_agree_on_fleet_campaign() {
+    use ulfm_ftgmres::coordinator::fleet::{run_fleet_custom, FleetSpec};
+    let mut base = quick_config(8, Strategy::Shrink, 0);
+    base.trace = true;
+    base.fleet = Some(
+        FleetSpec::parse("jobs=urgent,prio=5+batch,prio=1;warm=1;breaker_k=10;breaker_w=1000")
+            .unwrap(),
+    );
+    let kill = |r: usize| InjectionPlan {
+        kills: vec![Kill::at_iter(r, 25)],
+        ..Default::default()
+    };
+    let run = |engine: Engine| {
+        let mut cfg = base.clone();
+        cfg.engine = engine;
+        let frep = run_fleet_custom(&cfg, &[kill(2), kill(2)]).unwrap();
+        let trace = ulfm_ftgmres::trace::perfetto_json_fleet(&frep, &cfg);
+        (frep, trace)
+    };
+    let (threads, threads_trace) = run(Engine::Threads);
+    let (events, events_trace) = run(Engine::Events);
+    assert_eq!(
+        threads.digest(),
+        events.digest(),
+        "fleet: event engine diverged from the thread oracle"
+    );
+    assert_eq!(threads_trace, events_trace, "fleet trace files diverged across engines");
+    assert_eq!(events.preemptions, 1, "the contention actually happened");
+    assert!(events.jobs.iter().all(|j| j.rep.converged));
+}
+
 /// Degraded-mode leg 1 — straggler shrink-away (DESIGN.md §14): the
 /// detector's allgather, the cost-model decision and the victim's
 /// conversion to a crash-stop loss must serialize identically under both

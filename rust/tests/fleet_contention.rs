@@ -1,0 +1,180 @@
+//! Fleet contention semantics (DESIGN.md §16): two jobs racing for the
+//! last warm spare resolve deterministically (priority first, job id on
+//! ties), the loser degrades to shrink with a recorded `fleet-preempt`
+//! reason, and a failure-concentrated victim job is quarantined by its
+//! circuit breaker — one recorded global restart, zero unintended global
+//! restarts anywhere else in the fleet.
+
+mod common;
+
+use common::quick_config;
+use ulfm_ftgmres::config::RunConfig;
+use ulfm_ftgmres::coordinator::fleet::{
+    fleet_layout, run_fleet_campaign, run_fleet_custom, FleetReport, FleetSpec,
+};
+use ulfm_ftgmres::failure::{InjectionPlan, Kill};
+use ulfm_ftgmres::recovery::Strategy;
+
+/// Base config for a fleet of 8-rank jobs; the per-job pool dimensions are
+/// injected by the fleet driver from the spec, so only the solver shape
+/// matters here.
+fn fleet_config(spec: &str) -> RunConfig {
+    let mut cfg = quick_config(8, Strategy::Shrink, 0);
+    cfg.fleet = Some(FleetSpec::parse(spec).unwrap());
+    cfg
+}
+
+/// One kill at inner iteration 25, job-local rank `r`.
+fn kill_plan(r: usize) -> InjectionPlan {
+    InjectionPlan { kills: vec![Kill::at_iter(r, 25)], ..Default::default() }
+}
+
+fn assert_no_unintended_restarts(frep: &FleetReport, allowed: &[&str]) {
+    for j in &frep.jobs {
+        if allowed.contains(&j.name.as_str()) {
+            continue;
+        }
+        assert_eq!(
+            j.rep.global_restarts(),
+            0,
+            "job {} must not globally restart: {:?}",
+            j.name,
+            j.rep.decisions
+        );
+    }
+}
+
+/// Two same-shaped jobs, one warm spare, one failure each at the same
+/// inner iteration: the high-priority job wins the spare (substitute), the
+/// low-priority job is preempted into a degraded shrink with the blame
+/// recorded, and nobody globally restarts.
+#[test]
+fn last_warm_spare_goes_to_higher_priority_job() {
+    let cfg = fleet_config("jobs=urgent,prio=5+batch,prio=1;warm=1;breaker_k=10;breaker_w=1000");
+    let frep = run_fleet_custom(&cfg, &[kill_plan(2), kill_plan(2)]).unwrap();
+
+    assert!(frep.jobs.iter().all(|j| j.rep.converged), "both jobs converge");
+    assert_eq!(frep.preemptions, 1);
+    assert_eq!(frep.quarantines, 0);
+    assert_no_unintended_restarts(&frep, &[]);
+
+    // The arbiter saw urgent first (priority order) and granted the spare.
+    assert_eq!(frep.arbitrations[0].job_name, "urgent");
+    assert_eq!(frep.arbitrations[0].verdict, "granted");
+    assert_eq!(frep.arbitrations[0].granted, "substitute");
+    // Batch arbitrated into the leased-out pool: preempted, blamed.
+    assert_eq!(frep.arbitrations[1].job_name, "batch");
+    assert_eq!(frep.arbitrations[1].verdict, "preempted");
+    assert_eq!(frep.arbitrations[1].preempted_by.as_deref(), Some("urgent"));
+    assert_eq!(frep.arbitrations[1].granted, "shrink");
+    assert_eq!(frep.arbitrations[1].warm_free, 0, "pool empty at batch's event");
+
+    // The loser's own decision log records the degraded shrink with the
+    // fleet-preempt reason every survivor observed.
+    let batch = &frep.jobs[1];
+    assert_eq!(batch.name, "batch");
+    assert!(
+        batch.rep.decisions.iter().any(|d| d.decision == "shrink"
+            && d.reason.contains("fleet-preempt")
+            && d.reason.contains("urgent")),
+        "missing fleet-preempt decision: {:?}",
+        batch.rep.decisions
+    );
+    let urgent = &frep.jobs[0];
+    assert!(
+        urgent.rep.decisions.iter().any(|d| d.decision == "substitute"),
+        "winner substitutes: {:?}",
+        urgent.rep.decisions
+    );
+}
+
+/// Equal priorities: the tie breaks by job id (spec order), so the first
+/// job wins the spare and the second is preempted — deterministically.
+#[test]
+fn tie_priority_breaks_by_job_id() {
+    let cfg = fleet_config("jobs=a+b;warm=1;breaker_k=10;breaker_w=1000");
+    let frep = run_fleet_custom(&cfg, &[kill_plan(2), kill_plan(2)]).unwrap();
+    assert_eq!(frep.arbitrations[0].job_name, "a");
+    assert_eq!(frep.arbitrations[0].verdict, "granted");
+    assert_eq!(frep.arbitrations[1].job_name, "b");
+    assert_eq!(frep.arbitrations[1].verdict, "preempted");
+    assert_eq!(frep.arbitrations[1].preempted_by.as_deref(), Some("a"));
+    assert_no_unintended_restarts(&frep, &[]);
+}
+
+/// The acceptance campaign: three jobs, contended spares (warm=1), repeated
+/// failures concentrated on one job.  The victim burns its first two
+/// recoveries against the leased-out pool (degraded shrinks), trips the
+/// breaker on the third window-local recovery, and is quarantined — one
+/// recorded global restart with the breaker-open reason — while every other
+/// job converges with zero global restarts.
+#[test]
+fn breaker_quarantines_repeat_offender() {
+    let cfg = fleet_config(
+        "jobs=steady,prio=4+victim,prio=2+calm,prio=3;warm=1;breaker_k=3;breaker_w=1000",
+    );
+    let layout = fleet_layout(&cfg).unwrap();
+    assert_eq!(layout[1].0, "victim");
+    assert_eq!(layout[1].1, 8..16);
+
+    // Three kills walking the victim's block one checkpoint window apart,
+    // plus one failure in steady that takes the only warm spare first.
+    let mut plan = InjectionPlan::fleet_concentrated(&layout, 1, 3, 10);
+    plan.kills.push(Kill::at_iter(7, 25));
+    let frep = run_fleet_campaign(&cfg, &plan).unwrap();
+
+    let victim = frep.jobs.iter().find(|j| j.name == "victim").unwrap();
+    assert!(victim.quarantined, "breaker must quarantine the victim");
+    assert_eq!(victim.trips, 1);
+    assert_eq!(victim.rep.global_restarts(), 1, "exactly one recorded global restart");
+    assert!(victim.rep.converged, "the victim still converges after the restart");
+    assert!(
+        victim
+            .rep
+            .decisions
+            .iter()
+            .any(|d| d.decision == "global-restart" && d.reason.contains("breaker-open")),
+        "missing breaker-open escalation: {:?}",
+        victim.rep.decisions
+    );
+
+    assert_eq!(frep.quarantines, 1);
+    assert_eq!(frep.total_trips(), 1);
+    assert_no_unintended_restarts(&frep, &["victim"]);
+    for name in ["steady", "calm"] {
+        let j = frep.jobs.iter().find(|j| j.name == name).unwrap();
+        assert!(j.rep.converged, "job {name} converges");
+        assert_eq!(j.trips, 0, "job {name} never trips");
+    }
+
+    // The quarantine is the victim's last ruling, made against a pool still
+    // leased out to steady — contention all the way to the escalation.
+    let q = frep.arbitrations.iter().find(|a| a.verdict == "quarantine").unwrap();
+    assert_eq!(q.job_name, "victim");
+    assert_eq!(q.granted, "global-restart");
+    assert_eq!(q.warm_free, 0, "the pool was still contended at the trip");
+    // The two pre-trip recoveries were preempted into degraded shrinks.
+    let victim_preempts = frep
+        .arbitrations
+        .iter()
+        .filter(|a| a.job_name == "victim" && a.verdict == "preempted")
+        .count();
+    assert_eq!(victim_preempts, 2);
+}
+
+/// Reruns of the same fleet campaign are bit-identical down to the full
+/// fleet digest (arbitration ledger, per-job decision logs, virtual
+/// clocks): the shared arbiter introduces no scheduling freedom.
+#[test]
+fn fleet_campaign_is_rerun_stable() {
+    let cfg = fleet_config("jobs=urgent,prio=5+batch,prio=1;warm=1;breaker_k=10;breaker_w=1000");
+    let digest = || {
+        let frep = run_fleet_custom(&cfg, &[kill_plan(2), kill_plan(2)]).unwrap();
+        frep.digest()
+    };
+    let first = digest();
+    assert!(first.contains("verdict=preempted"), "contention present:\n{first}");
+    for rerun in 0..2 {
+        assert_eq!(first, digest(), "fleet rerun {rerun} diverged");
+    }
+}

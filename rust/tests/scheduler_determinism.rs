@@ -107,6 +107,32 @@ fn same_seed_degraded_campaign_is_rerun_stable() {
     }
 }
 
+/// Same seed, three fleet runs under the event engine: the shared arbiter
+/// (lease ledger, bandwidth gate, breakers) only ever advances through
+/// arbitrations made in the fixed arbiter order, so the whole fleet digest
+/// — per-job decision logs, arbitration ledger, virtual clocks — must be
+/// bit-identical across reruns.
+#[test]
+fn same_seed_fleet_campaign_is_rerun_stable() {
+    use ulfm_ftgmres::coordinator::fleet::{run_fleet_custom, FleetSpec};
+    let mut cfg = quick_config(8, Strategy::Shrink, 0);
+    cfg.engine = Engine::Events;
+    cfg.fleet = Some(
+        FleetSpec::parse("jobs=urgent,prio=5+batch,prio=1;warm=1;breaker_k=10;breaker_w=1000")
+            .unwrap(),
+    );
+    let kill = |r: usize| InjectionPlan {
+        kills: vec![Kill::at_iter(r, 25)],
+        ..Default::default()
+    };
+    let digest = || run_fleet_custom(&cfg, &[kill(2), kill(2)]).unwrap().digest();
+    let first = digest();
+    assert!(first.contains("verdict=preempted"), "contention present:\n{first}");
+    for rerun in 0..2 {
+        assert_eq!(first, digest(), "fleet rerun {rerun} diverged under the event engine");
+    }
+}
+
 /// The thread oracle is itself rerun-stable (a prerequisite for using it as
 /// the differential baseline in engine_differential.rs).
 #[test]

@@ -4,11 +4,11 @@
 # the repository root), so the per-bench scripts are one-line shims onto
 # this one.
 #
-# Usage: tools/bench.sh <hotpath|ckpt|scale|faults|overlap> [cargo bench args]
+# Usage: tools/bench.sh <hotpath|ckpt|scale|faults|overlap|fleet> [cargo bench args]
 #        BENCH_SMOKE=1 tools/bench.sh <name>   # CI quick pass
 #        BENCH_FULL=1  tools/bench.sh <name>   # full paper grid
 set -euo pipefail
-name="${1:?usage: tools/bench.sh <hotpath|ckpt|scale|faults|overlap> [cargo bench args]}"
+name="${1:?usage: tools/bench.sh <hotpath|ckpt|scale|faults|overlap|fleet> [cargo bench args]}"
 shift
 case "$name" in
   hotpath) bench=hotpath;       json=BENCH_hotpath.json ;;
@@ -16,7 +16,8 @@ case "$name" in
   scale)   bench=bench_scale;   json=BENCH_scale.json ;;
   faults)  bench=bench_faults;  json=BENCH_faults.json ;;
   overlap) bench=bench_overlap; json=BENCH_overlap.json ;;
-  *) echo "unknown bench '$name' (hotpath|ckpt|scale|faults|overlap)" >&2; exit 2 ;;
+  fleet)   bench=bench_fleet;   json=BENCH_fleet.json ;;
+  *) echo "unknown bench '$name' (hotpath|ckpt|scale|faults|overlap|fleet)" >&2; exit 2 ;;
 esac
 cd "$(dirname "$0")/.."
 cargo bench --bench "$bench" "$@"

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Multi-tenant fleet bench: throughput vs failure rate over one shared
+# spare pool, contention ratio, and circuit-breaker quarantines
+# (DESIGN.md §16).  Emits BENCH_fleet.json; gates documented in the bench
+# itself.  Shim onto tools/bench.sh.
+#
+# Usage: tools/bench_fleet.sh              # full grid (cube16)
+#        BENCH_SMOKE=1 tools/bench_fleet.sh   # CI quick pass (cube12)
+exec "$(dirname "$0")/bench.sh" fleet "$@"
