@@ -189,9 +189,12 @@ impl FleetState {
         self.records.iter().filter(|r| r.verdict == "preempted").count()
     }
 
-    /// Rulings that waited on the recovery-bandwidth gate.
+    /// Rulings whose verdict was a deferral on the recovery-bandwidth gate.
+    /// A `preempted` ruling may also have waited (`defer_secs > 0`), but it
+    /// is counted once, under `preemptions()` — the two categories are
+    /// disjoint so `contention_ratio` stays a true fraction of rulings.
     pub fn deferrals(&self) -> usize {
-        self.records.iter().filter(|r| r.defer_secs > 0.0).count()
+        self.records.iter().filter(|r| r.verdict == "deferred").count()
     }
 
     pub fn quarantines(&self) -> usize {
@@ -200,7 +203,9 @@ impl FleetState {
 
     /// Drop grants belonging to abandoned attempts of the same event: a
     /// nested failure grew the failed set, so any lease opened for a strict
-    /// subset of it (same job) never materialized.
+    /// subset of it (same job) never materialized.  Leases already closed
+    /// (job finish, quarantine) are history and survive the rollback — the
+    /// ledger's `rescind` only removes open leases.
     fn rollback_subsumed(&mut self, job: usize, failed: &[usize]) {
         let subsumed = |old: &[usize]| {
             old.len() < failed.len() && old.iter().all(|r| failed.contains(r))
@@ -321,13 +326,17 @@ pub fn arbitrate(
         Decision::GlobalRestart => est.global_restart,
     };
 
-    // Bandwidth gate: recoveries of *other* jobs still in flight at the
-    // event instant.  Beyond the budget, this one waits for the earliest
-    // windows to drain; all overlapping windows become dependencies.
+    // Bandwidth gate: recoveries of *other* jobs pending or still in flight
+    // at the event instant (`t1 > t_event`).  A window already deferred past
+    // the event (`t0 > t_event`) still occupies a future bandwidth slot, so
+    // it must gate this event too — otherwise two deferred recoveries could
+    // be scheduled into the same interval and exceed the budget.  Beyond the
+    // budget, this one waits for the earliest windows to drain; all gating
+    // windows become dependencies.
     let mut overlapping: Vec<(usize, f64)> = st
         .windows
         .iter()
-        .filter(|wnd| wnd.job != seat.job && wnd.t0 <= t_event && t_event < wnd.t1)
+        .filter(|wnd| wnd.job != seat.job && wnd.t1 > t_event)
         .map(|wnd| (wnd.plan, wnd.t1))
         .collect();
     overlapping.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
@@ -554,5 +563,66 @@ mod tests {
         let st = st.lock().unwrap();
         assert_eq!(st.deferrals(), 1);
         assert_eq!(st.plans()[1].dependencies, vec![0]);
+    }
+
+    #[test]
+    fn pending_deferred_windows_gate_later_events_too() {
+        // Three jobs, bandwidth 1: gamma's event lands inside alpha's active
+        // window while beta's recovery is already deferred behind it.  The
+        // gate must see beta's *pending* window (t0 in the future) and push
+        // gamma behind it, not double-book beta's interval.
+        let st = Arc::new(Mutex::new(FleetState::new(
+            8,
+            0,
+            1,
+            10,
+            1000.0,
+            &[
+                ("alpha".to_string(), 5),
+                ("beta".to_string(), 3),
+                ("gamma".to_string(), 1),
+            ],
+        )));
+        let host = ComputeModel::default();
+        let net = NetParams::default();
+        let a = seat(&st, 0, "alpha", 5);
+        let b = seat(&st, 1, "beta", 3);
+        let g = seat(&st, 2, "gamma", 1);
+        let mut inp = inputs(8);
+        inp.pool.warm_free = 8;
+        let _ = arbitrate(&a, PolicyKind::SparesFirst, &[3], &inp, &host, &net, 1.0);
+        let est = st.lock().unwrap().plans()[0].est_cost;
+        let vb = arbitrate(&b, PolicyKind::SparesFirst, &[2], &inp, &host, &net, 1.0 + est * 0.25);
+        assert!(vb.defer_secs > 0.0);
+        let vg = arbitrate(&g, PolicyKind::SparesFirst, &[4], &inp, &host, &net, 1.0 + est * 0.5);
+        let st = st.lock().unwrap();
+        let beta_end = st.windows[1].t1;
+        let gamma_start = 1.0 + est * 0.5 + vg.defer_secs;
+        assert!(
+            gamma_start >= beta_end - 1e-9,
+            "gamma starts at {gamma_start} inside beta's pending window ending {beta_end}"
+        );
+        assert_eq!(st.plans()[2].dependencies, vec![0, 1], "both windows are dependencies");
+    }
+
+    #[test]
+    fn preempted_rulings_do_not_double_count_as_deferrals() {
+        // Warm pool of 1, bandwidth 1: beta's substitute request is both
+        // preempted (alpha holds the last slot) and gated behind alpha's
+        // in-flight window.  It must be counted once, as a preemption.
+        let st = state(1, 1, 10, 1000.0);
+        let host = ComputeModel::default();
+        let net = NetParams::default();
+        let a = seat(&st, 0, "alpha", 5);
+        let b = seat(&st, 1, "beta", 1);
+        let _ = arbitrate(&a, PolicyKind::SparesFirst, &[3], &inputs(1), &host, &net, 1.0);
+        let est = st.lock().unwrap().plans()[0].est_cost;
+        let vb = arbitrate(&b, PolicyKind::SparesFirst, &[2], &inputs(1), &host, &net, 1.0 + est / 2.0);
+        assert_eq!(vb.decision, Decision::Shrink);
+        assert!(vb.defer_secs > 0.0, "the shrink still waits on the bandwidth gate");
+        let st = st.lock().unwrap();
+        assert_eq!(st.preemptions(), 1);
+        assert_eq!(st.deferrals(), 0, "one ruling, one category");
+        assert_eq!(st.records()[1].verdict, "preempted");
     }
 }

@@ -21,7 +21,8 @@ use crate::spares::PoolStatus;
 /// One granted spare reservation in fleet virtual time.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Lease {
-    /// Ledger-assigned id (position in grant order).
+    /// Ledger-assigned id, monotonic in grant order.  Ids are never reused,
+    /// even after a [`LeaseLedger::rescind`] removes an entry.
     pub id: usize,
     /// Index of the holding job in the fleet spec.
     pub job: usize,
@@ -50,11 +51,12 @@ pub struct LeaseLedger {
     /// Machine-wide cold slot capacity.
     pub cold_total: usize,
     leases: Vec<Lease>,
+    next_id: usize,
 }
 
 impl LeaseLedger {
     pub fn new(warm_total: usize, cold_total: usize) -> LeaseLedger {
-        LeaseLedger { warm_total, cold_total, leases: Vec::new() }
+        LeaseLedger { warm_total, cold_total, leases: Vec::new(), next_id: 0 }
     }
 
     /// Warm slots charged against the pool at instant `t`.
@@ -89,16 +91,19 @@ impl LeaseLedger {
             n <= if warm { self.warm_free_at(t) } else { self.cold_free_at(t) },
             "lease over-grant: {n} slots requested, pool exhausted at t={t}"
         );
-        let id = self.leases.len();
+        let id = self.next_id;
+        self.next_id += 1;
         self.leases.push(Lease { id, job, warm, n, t0: t, t1: f64::INFINITY });
         id
     }
 
     /// Drop an open lease entirely (an abandoned recovery attempt whose
     /// grant never materialized — e.g. the failure set grew and the event
-    /// re-arbitrated on the union).
+    /// re-arbitrated on the union).  A lease that was already closed is
+    /// history — it held real capacity over its interval — so it stays in
+    /// the ledger and this call is a no-op for it.
     pub fn rescind(&mut self, id: usize) {
-        self.leases.retain(|l| l.id != id);
+        self.leases.retain(|l| l.id != id || !l.t1.is_infinite());
     }
 
     /// Close every open lease held by `job` at instant `t_end` (job finish
@@ -161,6 +166,32 @@ mod tests {
         led.rescind(id);
         assert_eq!(led.warm_free_at(1.0), 1);
         assert!(led.leases().is_empty());
+    }
+
+    #[test]
+    fn rescind_never_recycles_ids_onto_live_leases() {
+        let mut led = LeaseLedger::new(4, 0);
+        let a = led.grant(0, true, 1, 1.0);
+        let b = led.grant(1, true, 1, 1.0);
+        led.rescind(a);
+        let c = led.grant(0, true, 2, 2.0);
+        assert_ne!(c, b, "a rescinded slot must not re-issue a live lease's id");
+        // Rescinding c must drop exactly c, not b.
+        led.rescind(c);
+        assert_eq!(led.leases().len(), 1);
+        assert_eq!(led.leases()[0].id, b);
+        assert_eq!(led.warm_free_at(2.5), 3);
+    }
+
+    #[test]
+    fn rescind_leaves_closed_leases_as_history() {
+        let mut led = LeaseLedger::new(2, 0);
+        let id = led.grant(0, true, 1, 1.0);
+        led.close_job(0, 3.0);
+        led.rescind(id);
+        assert_eq!(led.leases().len(), 1, "closed lease is history, not rescindable");
+        assert_eq!(led.warm_free_at(2.0), 1, "its interval still charges capacity");
+        assert_eq!(led.warm_free_at(3.0), 2);
     }
 
     #[test]
